@@ -1,0 +1,96 @@
+//! End-to-end driver (the repo's headline validation): replay the paper's
+//! full evaluation load — 12 small + 4 medium + 2 large + 2 huge VMs, 256
+//! vCPUs on the 288-CPU disaggregated testbed — under all three algorithms
+//! (vanilla Linux scheduler, SM-IPC, SM-MPI), with the candidate scorer
+//! running as AOT-compiled JAX/Pallas artifacts on PJRT.
+//!
+//! Prints the per-app relative performance (paper Figs. 14–16), the
+//! huge-VM core-map shape (Figs. 12–13), and within-run variability; the
+//! output is recorded in EXPERIMENTS.md.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example cluster_e2e [seed]
+//! ```
+
+use dvrm::experiments::{run_all, Algorithm, HarnessConfig, ScorerChoice};
+use dvrm::util::rng::Rng;
+use dvrm::util::stats;
+use dvrm::util::table::Table;
+use dvrm::workload::{trace, App};
+
+fn main() -> anyhow::Result<()> {
+    let seed: u64 = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(42);
+    let mut rng = Rng::new(seed);
+    let arrivals = trace::paper_mix(&mut rng);
+    let vcpus: usize = arrivals.iter().map(|a| a.vm_type.spec().vcpus).sum();
+    println!("cluster: {} VMs / {vcpus} vCPUs on 288 CPUs, seed {seed}", arrivals.len());
+
+    let mut cfg = HarnessConfig::new(seed);
+    cfg.scorer = ScorerChoice::Auto;
+    let t0 = std::time::Instant::now();
+    let results = run_all(&arrivals, &cfg)?;
+    println!("3 algorithms done in {:.1}s\n", t0.elapsed().as_secs_f64());
+
+    // Figs. 14–16: per-app relative performance.
+    let mut t = Table::new("Per-app mean relative performance (Figs 14-16)")
+        .header(&["app", "vanilla", "SM-IPC", "SM-MPI", "SM-IPC x", "SM-MPI x"]);
+    for app in App::ALL {
+        let rel: Vec<Option<f64>> = results
+            .iter()
+            .map(|r| r.collector.mean_by_app(app, |s| s.mean_rel_perf))
+            .collect();
+        if let (Some(v), Some(i), Some(m)) = (rel[0], rel[1], rel[2]) {
+            t.row_f(app.name(), &[v, i, m, i / v.max(1e-9), m / v.max(1e-9)], 3);
+        }
+    }
+    println!("{}", t.render());
+
+    // Aggregate view + mapper telemetry.
+    for res in &results {
+        let rels: Vec<f64> = res.summaries.iter().map(|s| s.mean_rel_perf).collect();
+        print!(
+            "{:<8} overall rel perf: mean {:.3}  min {:.3}",
+            res.algorithm.name(),
+            stats::mean(&rels),
+            rels.iter().cloned().fold(f64::INFINITY, f64::min)
+        );
+        if let Some(st) = &res.mapper_stats {
+            print!(
+                "  (remaps {} reshuffles {} scorer-batches {})",
+                st.remaps, st.reshuffles, st.scorer_batches
+            );
+        }
+        println!();
+    }
+
+    // Figs. 12–13: huge-VM core occupancy shape.
+    println!();
+    for res in
+        results.iter().filter(|r| matches!(r.algorithm, Algorithm::Vanilla | Algorithm::SmIpc))
+    {
+        let huge = res
+            .summaries
+            .iter()
+            .find(|s| s.vm_type == dvrm::vm::VmType::Huge && s.app == App::Neo4j)
+            .map(|s| s.id);
+        if let Some(huge) = huge {
+            let cores: usize = res.core_map.iter().filter(|vms| vms.contains(&huge)).count();
+            let overbooked = res.core_map.iter().filter(|vms| vms.len() > 2).count();
+            println!(
+                "{:<8} huge VM occupies {cores} cores; {overbooked} cores overbooked machine-wide",
+                res.algorithm.name()
+            );
+        }
+    }
+
+    // Variability within the run (the paper's §5.3.2 point in miniature).
+    let mut t = Table::new("Within-run throughput variability (std/mean)")
+        .header(&["algorithm", "median across VMs"]);
+    for res in &results {
+        let mut covs: Vec<f64> = res.summaries.iter().map(|s| s.perf_cov).collect();
+        covs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        t.row(vec![res.algorithm.name().into(), format!("{:.3}", covs[covs.len() / 2])]);
+    }
+    println!("\n{}", t.render());
+    Ok(())
+}

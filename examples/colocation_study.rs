@@ -1,0 +1,42 @@
+//! The paper's §3.2 motivating study (Figs. 4–10): measure each
+//! application solo, then co-located with every other application on the
+//! same NUMA node (shared LLC + memory controller), and report IPC / MPI /
+//! throughput relative to solo.
+//!
+//! ```bash
+//! cargo run --release --example colocation_study [seed]
+//! ```
+
+use dvrm::experiments::studies::colocation_study;
+use dvrm::util::table::{bar_chart, Table};
+use dvrm::workload::App;
+
+fn main() -> anyhow::Result<()> {
+    let seed: u64 = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(42);
+    let apps = [App::Neo4j, App::Sockshop, App::Derby, App::Fft, App::Sor, App::Mpegaudio,
+                App::Sunflow];
+    for (i, app) in apps.iter().enumerate() {
+        let rows = colocation_study(*app, seed, 30, 3)?;
+        let mut t = Table::new(format!(
+            "Fig {}: {} ({:?}) co-located, relative to solo",
+            i + 4,
+            app,
+            app.profile().class
+        ))
+        .header(&["co-runner", "class", "rel IPC", "rel MPI", "rel perf"]);
+        let mut chart = Vec::new();
+        for r in &rows {
+            t.row(vec![
+                r.co_runner.name().into(),
+                r.co_runner.profile().class.name().into(),
+                format!("{:.3}", r.rel_ipc),
+                format!("{:.3}", r.rel_mpi),
+                format!("{:.3}", r.rel_perf),
+            ]);
+            chart.push((r.co_runner.name().to_string(), r.rel_perf));
+        }
+        println!("{}", t.render());
+        println!("{}", bar_chart("relative performance", &chart, 40));
+    }
+    Ok(())
+}

@@ -1,0 +1,75 @@
+//! Quickstart: build the paper's 6-server disaggregated testbed, start a
+//! coordinator, place a few VMs, and watch the counters.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use dvrm::coordinator::{MapperConfig, Metric, SmMapper};
+use dvrm::runtime::Scorer;
+use dvrm::sim::{SimConfig, Simulator};
+use dvrm::topology::Topology;
+use dvrm::util::table::Table;
+use dvrm::vm::VmType;
+use dvrm::workload::App;
+
+fn main() -> anyhow::Result<()> {
+    // 1. The machine: 6 servers x 48 cpus, 36 NUMA nodes, 2-D torus.
+    let topo = Topology::paper();
+    println!("== topology ==");
+    for (k, v) in topo.summary() {
+        println!("{k:<22} {v}");
+    }
+
+    // 2. A host simulator in coordinator-controlled (pinned) mode and the
+    //    SM-IPC mapper.  Scorer::auto() uses the AOT-compiled JAX/Pallas
+    //    artifacts through PJRT when `make artifacts` has been run.
+    let mut sim = Simulator::new(topo, SimConfig::pinned(42));
+    let scorer = Scorer::auto();
+    println!("\nscorer backend: {}", scorer.name());
+    let mut mapper = SmMapper::new(MapperConfig::new(Metric::Ipc), scorer);
+
+    // 3. Define + place + boot a few VMs.
+    let workloads =
+        [(VmType::Huge, App::Neo4j), (VmType::Medium, App::Stream), (VmType::Small, App::Mpegaudio)];
+    let mut ids = Vec::new();
+    for (vm_type, app) in workloads {
+        let id = sim.create(vm_type, app);
+        let placed = mapper.place_arrival(&mut sim, id)?;
+        sim.start(id)?;
+        println!(
+            "placed {id} ({vm_type} {app}): {} vcpus over {} server(s), anchor node {}",
+            placed.cpus.len(),
+            placed.servers,
+            placed.anchor.0
+        );
+        ids.push((id, app));
+    }
+
+    // 4. Run for a minute of simulated time with monitoring.
+    for t in 0..60 {
+        sim.step();
+        if t % mapper.cfg.interval == 0 {
+            let report = mapper.interval(&mut sim)?;
+            if !report.remapped.is_empty() {
+                println!("tick {t}: remapped {:?}", report.remapped);
+            }
+        }
+    }
+
+    // 5. Read the counters.
+    let mut table = Table::new("per-VM counters (last 10 ticks)")
+        .header(&["vm", "app", "IPC", "MPI", "rel perf"]);
+    for (id, app) in &ids {
+        let h = &sim.get(*id).unwrap().history;
+        table.row(vec![
+            id.to_string(),
+            app.to_string(),
+            format!("{:.3}", h.mean_ipc(10)),
+            format!("{:.4}", h.mean_mpi(10)),
+            format!("{:.3}", h.mean_rel_perf(10)),
+        ]);
+    }
+    println!("\n{}", table.render());
+    Ok(())
+}

@@ -1,0 +1,85 @@
+"""AOT-lower the L2 model to HLO text artifacts for the Rust runtime.
+
+Interchange format is HLO **text**, not a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which the published
+``xla`` crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``);
+the text parser reassigns ids and round-trips cleanly
+(see /opt/xla-example/README.md).
+
+Artifacts (written to ``--out-dir``, default ``../artifacts``):
+
+* ``scorer.hlo.txt``        — batched scorer at BATCH candidates
+* ``scorer_small.hlo.txt``  — low-latency scorer at BATCH_SMALL candidates
+* ``optimizer.hlo.txt``     — relaxed whole-system placement optimizer
+* ``meta.txt``              — the fixed shapes, asserted by the Rust loader
+
+Run via ``make artifacts`` (no-op when inputs are unchanged).
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+import jax
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from compile import model, shapes  # noqa: E402
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    from jax._src.lib import xla_client as xc
+
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_all() -> dict[str, str]:
+    """Lower every artifact; returns {filename: hlo_text}."""
+    arts = {}
+
+    lowered = jax.jit(model.scorer).lower(*model.scorer_example_args(shapes.BATCH))
+    arts["scorer.hlo.txt"] = to_hlo_text(lowered)
+
+    lowered = jax.jit(model.scorer).lower(
+        *model.scorer_example_args(shapes.BATCH_SMALL)
+    )
+    arts["scorer_small.hlo.txt"] = to_hlo_text(lowered)
+
+    lowered = jax.jit(model.optimizer).lower(*model.optimizer_example_args())
+    arts["optimizer.hlo.txt"] = to_hlo_text(lowered)
+
+    return arts
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    parser.add_argument(
+        "--out", default=None,
+        help="compat: path of the primary artifact; its dirname is out-dir",
+    )
+    args = parser.parse_args()
+    out_dir = os.path.dirname(args.out) if args.out else args.out_dir
+    os.makedirs(out_dir, exist_ok=True)
+
+    for name, text in lower_all().items():
+        path = os.path.join(out_dir, name)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {len(text):>9} chars to {path}")
+
+    meta_path = os.path.join(out_dir, "meta.txt")
+    with open(meta_path, "w") as f:
+        f.write(shapes.meta_lines())
+    print(f"wrote shapes meta to {meta_path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,139 @@
+"""Pallas placement-scoring kernel — the compute hot-spot of the coordinator.
+
+The coordinator's remap search (Algorithm 1, line 23: "compute new
+configuration ... that has least reshuffle") scores batches of candidate
+vCPU-to-NUMA-node placements.  This kernel evaluates one batch in a single
+fused pass.
+
+TPU design (validated in interpret mode on CPU, see DESIGN.md
+§Hardware-Adaptation):
+
+* Grid over the candidate batch: each grid step scores ``BLOCK_B``
+  candidates.  ``BlockSpec`` streams the ``[BLOCK_B, V, N]`` placement tile
+  HBM->VMEM while the shared operands (``D [N, N]``, ``M [V, N]``,
+  ``C [V, V]``, vectors) are resident in VMEM across steps.
+* The two contractions — ``P @ D`` (locality) and ``P @ P^T`` (overlap) —
+  are MXU work; everything else is VPU elementwise/reduction.
+* VMEM footprint at (BLOCK_B=8, V=32, N=36) is ~0.1 MB; at TPU-padded
+  (V=128, N=128) it is ~1.3 MB — far inside the 16 MB budget, so BLOCK_B
+  can grow to 64+ for MXU efficiency on real hardware.
+
+``interpret=True`` is mandatory here: real TPU lowering emits a Mosaic
+custom-call that the CPU PJRT plugin (which the Rust runtime uses) cannot
+execute.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _score_kernel(p_ref, d_ref, m_ref, c_ref, s_ref, cores_ref, cap_ref, w_ref,
+                  bw_ref, bwcap_ref,
+                  total_ref, loc_ref, cont_ref, over_ref, bwover_ref):
+    """Score BLOCK_B candidates held in VMEM.
+
+    Refs:
+      p_ref: [BLOCK_B, V, N] candidate placements (blocked over batch).
+      d_ref: [N, N], m_ref: [V, N], c_ref: [V, V] shared matrices.
+      s_ref, cores_ref, bw_ref: [V]; cap_ref, bwcap_ref: [N]; w_ref: [4].
+      total_ref, over_ref, bwover_ref: [BLOCK_B]; loc_ref, cont_ref:
+      [BLOCK_B, V] outputs.
+    """
+    p = p_ref[...]
+    d = d_ref[...]
+    m = m_ref[...]
+    c = c_ref[...]
+    s = s_ref[...]
+    cores = cores_ref[...]
+    cap = cap_ref[...]
+    w = w_ref[...]
+    bw = bw_ref[...]
+    bwcap = bwcap_ref[...]
+
+    # Locality: contraction over the node axis -> MXU (dot_general).
+    pd = jax.lax.dot_general(
+        p, d, dimension_numbers=(((2,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # [Bblk, V, N]
+    locality = jnp.sum(pd * m[None, :, :], axis=-1) * s[None, :]
+
+    # Overlap: batched P @ P^T -> MXU.
+    overlap = jax.lax.dot_general(
+        p, p, dimension_numbers=(((2,), (2,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    )  # [Bblk, V, V]
+    contention = jnp.sum(overlap * c[None, :, :], axis=-1)
+
+    # Overload: node load minus capacity, rectified and squared (VPU).
+    load = jnp.sum(p * cores[None, :, None], axis=1)  # [Bblk, N]
+    over_amt = jnp.maximum(load - cap[None, :], 0.0)
+    overload = jnp.sum(over_amt * over_amt, axis=-1)
+
+    # Bandwidth overload: controller demand minus capacity (VPU).
+    bw_load = jnp.sum(p * bw[None, :, None], axis=1)  # [Bblk, N]
+    bw_amt = jnp.maximum(bw_load - bwcap[None, :], 0.0)
+    bw_over = jnp.sum(bw_amt * bw_amt, axis=-1)
+
+    total = (
+        w[0] * jnp.sum(locality, axis=-1)
+        + w[1] * jnp.sum(contention, axis=-1)
+        + w[2] * overload
+        + w[3] * bw_over
+    )
+
+    total_ref[...] = total
+    loc_ref[...] = locality
+    cont_ref[...] = contention
+    over_ref[...] = overload
+    bwover_ref[...] = bw_over
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def score_batch(p, d, m, c, s, cores, cap, w, bw, bwcap, *, block_b: int = 8):
+    """Pallas-backed batch scorer; same contract as ``ref.score_batch_ref``.
+
+    ``block_b`` must divide the batch dimension of ``p``.
+    """
+    bsz, v, n = p.shape
+    if bsz % block_b != 0:
+        raise ValueError(f"batch {bsz} not divisible by block_b {block_b}")
+    grid = (bsz // block_b,)
+
+    shared = lambda shape: pl.BlockSpec(shape, lambda i: tuple(0 for _ in shape))
+    out_shapes = (
+        jax.ShapeDtypeStruct((bsz,), jnp.float32),       # total
+        jax.ShapeDtypeStruct((bsz, v), jnp.float32),     # locality
+        jax.ShapeDtypeStruct((bsz, v), jnp.float32),     # contention
+        jax.ShapeDtypeStruct((bsz,), jnp.float32),       # overload
+        jax.ShapeDtypeStruct((bsz,), jnp.float32),       # bw_over
+    )
+    return pl.pallas_call(
+        _score_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, v, n), lambda i: (i, 0, 0)),  # p: batched
+            shared((n, n)),    # d
+            shared((v, n)),    # m
+            shared((v, v)),    # c
+            shared((v,)),      # s
+            shared((v,)),      # cores
+            shared((n,)),      # cap
+            shared((4,)),      # w
+            shared((v,)),      # bw
+            shared((n,)),      # bwcap
+        ],
+        out_specs=[
+            pl.BlockSpec((block_b,), lambda i: (i,)),
+            pl.BlockSpec((block_b, v), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, v), lambda i: (i, 0)),
+            pl.BlockSpec((block_b,), lambda i: (i,)),
+            pl.BlockSpec((block_b,), lambda i: (i,)),
+        ],
+        out_shape=out_shapes,
+        interpret=True,  # CPU-PJRT execution path; see module docstring
+    )(p.astype(jnp.float32), d, m, c, s, cores, cap, w, bw, bwcap)

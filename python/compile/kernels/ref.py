@@ -1,0 +1,87 @@
+"""Pure-jnp oracle for the placement-scoring computation.
+
+This is the ground-truth definition of the cost model the coordinator
+optimizes.  The Pallas kernel in ``placement_score.py`` must agree with this
+to float tolerance (checked by ``python/tests/test_kernel.py``), and the
+differentiable optimizer in ``model.py`` is built on this version because
+interpret-mode Pallas calls do not carry a VJP.
+
+Cost model (per candidate placement ``P[b] in [B, V, N]``):
+
+* ``locality[b, v]`` — distance-weighted traffic between the vCPUs of VM
+  ``v`` (rows of ``P``: fraction of the VM's vCPUs per NUMA node) and its
+  memory distribution ``M[v]``, scaled by the VM's remote-memory
+  sensitivity ``s[v]``.  This is the paper's "resource composition
+  distance" term (§3.3, Fig. 11).
+* ``contention[b, v]`` — animal-class interference: for every pair of VMs
+  co-resident on a NUMA node (sharing the LLC / memory controller), the
+  class-pair penalty from the paper's Table 3 compatibility matrix,
+  weighted by how much they overlap.
+* ``overload[b]`` — quadratic penalty for mapping more vCPU-cores onto a
+  node than it physically has (the paper's no-overbooking rule, §4.1).
+* ``bw_over[b]`` — quadratic penalty for demanding more memory bandwidth
+  from a node's controller than it can deliver (drives the spread of
+  STREAM-like VMs over enough NUMA nodes).
+
+``total = w0·Σ locality + w1·Σ contention + w2·overload + w3·bw_over``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def score_batch_ref(p, d, m, c, s, cores, cap, w, bw, bwcap):
+    """Score a batch of candidate placements.
+
+    Args:
+      p: ``[B, V, N]`` candidate placements; ``p[b, v, i]`` is the fraction
+        of VM ``v``'s vCPUs placed on NUMA node ``i`` (rows sum to 1 for
+        live VMs, all-zero rows are padding).
+      d: ``[N, N]`` NUMA distance matrix (SLIT units, e.g. 10/16/22/160/200).
+      m: ``[V, N]`` memory-page distribution of each VM across nodes.
+      c: ``[V, V]`` pairwise class-interference penalties (zero diagonal).
+      s: ``[V]`` remote-memory sensitivity per VM.
+      cores: ``[V]`` number of vCPUs per VM.
+      cap: ``[N]`` physical cores per node.
+      w: ``[4]`` weights ``(w_loc, w_cont, w_over, w_bw)``.
+      bw: ``[V]`` total memory-bandwidth demand per VM, GB/s.
+      bwcap: ``[N]`` per-node memory controller bandwidth, GB/s.
+
+    Returns:
+      ``(total[B], locality[B, V], contention[B, V], overload[B],
+      bw_over[B])``.
+    """
+    # locality: (P @ D) elementwise M, row-reduced -> [B, V]
+    pd = jnp.einsum("bvi,ij->bvj", p, d)
+    locality = jnp.sum(pd * m[None, :, :], axis=-1) * s[None, :]
+
+    # contention: node-sharing overlap O = P @ P^T weighted by class matrix
+    overlap = jnp.einsum("bvi,bwi->bvw", p, p)
+    contention = jnp.sum(overlap * c[None, :, :], axis=-1)
+
+    # overload: relu(cores^T P - cap)^2 summed over nodes
+    load = jnp.einsum("v,bvi->bi", cores, p)
+    over_amt = jnp.maximum(load - cap[None, :], 0.0)
+    overload = jnp.sum(over_amt * over_amt, axis=-1)
+
+    # bandwidth overload: relu(bw^T P - bwcap)^2 summed over nodes
+    bw_load = jnp.einsum("v,bvi->bi", bw, p)
+    bw_amt = jnp.maximum(bw_load - bwcap[None, :], 0.0)
+    bw_over = jnp.sum(bw_amt * bw_amt, axis=-1)
+
+    total = (
+        w[0] * jnp.sum(locality, axis=-1)
+        + w[1] * jnp.sum(contention, axis=-1)
+        + w[2] * overload
+        + w[3] * bw_over
+    )
+    return total, locality, contention, overload, bw_over
+
+
+def score_single_ref(p, d, m, c, s, cores, cap, w, bw, bwcap):
+    """Convenience wrapper scoring one ``[V, N]`` placement (no batch dim)."""
+    total, locality, contention, overload, bw_over = score_batch_ref(
+        p[None, :, :], d, m, c, s, cores, cap, w, bw, bwcap
+    )
+    return total[0], locality[0], contention[0], overload[0], bw_over[0]

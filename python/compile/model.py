@@ -1,0 +1,120 @@
+"""L2 — the JAX scoring/optimization model the Rust coordinator calls.
+
+Two entry points, both AOT-lowered by ``aot.py`` to HLO text and executed by
+the Rust runtime through PJRT (Python never runs on the decision path):
+
+* ``scorer`` — batched candidate-placement scoring; forwards to the Pallas
+  kernel (L1).  The coordinator's remap search enumerates candidate
+  mappings and picks the argmin here.
+* ``optimizer`` — the "Optimising" in the paper's title: a relaxed
+  (softmax-parameterized) placement optimized with ``OPT_STEPS`` steps of
+  gradient descent over the same cost model, used when the system nears
+  capacity and Algorithm 1 considers "adjusting the placements on the whole
+  system" (§4.1).  The Rust side rounds the relaxed placement back to an
+  integral core assignment (``coordinator/remap.rs``).
+
+The optimizer differentiates the *reference* cost (interpret-mode Pallas has
+no VJP); equality of the two is enforced by ``python/tests/test_kernel.py``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile import shapes
+from compile.kernels.placement_score import score_batch
+from compile.kernels.ref import score_batch_ref
+
+
+def scorer(p, d, m, c, s, cores, cap, w, bw, bwcap):
+    """Batched scorer (Pallas-backed).  Returns the 5-tuple of ref.py."""
+    return score_batch(p, d, m, c, s, cores, cap, w, bw, bwcap,
+                       block_b=shapes.BLOCK_B)
+
+
+def _relaxed_cost(logits, d, m, c, s, cores, cap, w, bw, bwcap, live):
+    """Scalar cost of a softmax-relaxed placement.
+
+    ``live [V]`` masks padding rows so dead VMs exert no gradient pressure.
+    """
+    p = jax.nn.softmax(logits, axis=-1) * live[:, None]
+    total = score_batch_ref(p[None, :, :], d, m, c, s, cores, cap, w, bw, bwcap)[0]
+    return total[0]
+
+
+def optimizer(logits0, d, m, c, s, cores, cap, w, bw, bwcap, live):
+    """Projected-gradient placement optimization (fixed-step, AOT-friendly).
+
+    Runs ``shapes.OPT_STEPS`` steps of gradient descent with momentum on the
+    relaxed cost, entirely inside one ``lax.scan`` so the lowered HLO is a
+    single fused loop.
+
+    Returns ``(p_opt [V, N], cost_trace [OPT_STEPS])``.
+    """
+    grad_fn = jax.grad(_relaxed_cost)
+
+    def step(carry, lr):
+        logits, vel, best_logits, best_cost = carry
+        g = grad_fn(logits, d, m, c, s, cores, cap, w, bw, bwcap, live)
+        # Normalized (infinity-norm) gradient: step size is in logit units
+        # regardless of the cost weights, so strongly-weighted problems
+        # (e.g. overload weight 400) cannot diverge.
+        g = g / (jnp.max(jnp.abs(g)) + 1e-6)
+        vel = 0.8 * vel - lr * g
+        logits = logits + vel
+        cost = _relaxed_cost(logits, d, m, c, s, cores, cap, w, bw, bwcap, live)
+        improved = cost < best_cost
+        best_logits = jnp.where(improved, logits, best_logits)
+        best_cost = jnp.where(improved, cost, best_cost)
+        return (logits, vel, best_logits, best_cost), cost
+
+    # Cosine-decayed step sizes: explore early, settle late (fixed-norm
+    # steps never settle on their own).
+    ts = jnp.arange(shapes.OPT_STEPS, dtype=jnp.float32) / max(shapes.OPT_STEPS - 1, 1)
+    lrs = shapes.OPT_LR * (0.02 + 0.98 * 0.5 * (1.0 + jnp.cos(jnp.pi * ts)))
+    cost0 = _relaxed_cost(logits0, d, m, c, s, cores, cap, w, bw, bwcap, live)
+    # Return the BEST iterate seen, not the last — fixed-norm steps can end
+    # on an uphill wiggle.
+    (_, _, best_logits, _), trace = jax.lax.scan(
+        step, (logits0, jnp.zeros_like(logits0), logits0, cost0), lrs
+    )
+    p_opt = jax.nn.softmax(best_logits, axis=-1) * live[:, None]
+    return p_opt, trace
+
+
+def scorer_example_args(batch: int):
+    """ShapeDtypeStructs for AOT-lowering the scorer at a given batch size."""
+    f32 = jnp.float32
+    v, n = shapes.MAX_VMS, shapes.NUM_NODES
+    return (
+        jax.ShapeDtypeStruct((batch, v, n), f32),
+        jax.ShapeDtypeStruct((n, n), f32),
+        jax.ShapeDtypeStruct((v, n), f32),
+        jax.ShapeDtypeStruct((v, v), f32),
+        jax.ShapeDtypeStruct((v,), f32),
+        jax.ShapeDtypeStruct((v,), f32),
+        jax.ShapeDtypeStruct((n,), f32),
+        jax.ShapeDtypeStruct((4,), f32),
+        jax.ShapeDtypeStruct((v,), f32),   # bw demand
+        jax.ShapeDtypeStruct((n,), f32),   # bw capacity
+    )
+
+
+def optimizer_example_args():
+    """ShapeDtypeStructs for AOT-lowering the optimizer."""
+    f32 = jnp.float32
+    v, n = shapes.MAX_VMS, shapes.NUM_NODES
+    return (
+        jax.ShapeDtypeStruct((v, n), f32),   # logits0
+        jax.ShapeDtypeStruct((n, n), f32),
+        jax.ShapeDtypeStruct((v, n), f32),
+        jax.ShapeDtypeStruct((v, v), f32),
+        jax.ShapeDtypeStruct((v,), f32),
+        jax.ShapeDtypeStruct((v,), f32),
+        jax.ShapeDtypeStruct((n,), f32),
+        jax.ShapeDtypeStruct((4,), f32),
+        jax.ShapeDtypeStruct((v,), f32),     # bw demand
+        jax.ShapeDtypeStruct((n,), f32),     # bw capacity
+        jax.ShapeDtypeStruct((v,), f32),     # live mask
+    )

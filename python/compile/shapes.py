@@ -1,0 +1,42 @@
+"""Fixed AOT shapes shared between the JAX compile path and the Rust runtime.
+
+The Rust coordinator loads HLO artifacts compiled for these exact shapes and
+pads/truncates its live state to fit.  `aot.py` writes the values to
+``artifacts/meta.txt`` so the Rust side can assert agreement at load time
+(see ``rust/src/runtime/shapes.rs``).
+
+Sizing rationale (paper testbed, Table 1): the evaluated system has 36 NUMA
+nodes and the evaluation load is 20 VMs (12 small + 4 medium + 2 large +
+2 huge).  We pad VMs to 32 and keep N at 36; the candidate batch B trades
+search width against decision latency (ablated in EXP-ABL).
+"""
+
+# Number of candidate placements scored per scorer invocation (large batch).
+BATCH = 64
+# Low-latency scorer variant used inside the arrival fast-path.
+BATCH_SMALL = 8
+# Maximum number of concurrently-placed VMs (padded with zero rows).
+MAX_VMS = 32
+# Number of NUMA nodes in the disaggregated system (6 servers x 6 nodes).
+NUM_NODES = 36
+# Optimizer: projected-gradient steps and learning rate, fixed at AOT time.
+OPT_STEPS = 60
+OPT_LR = 0.5
+# Pallas kernel: candidates per grid step (must divide BATCH and BATCH_SMALL).
+BLOCK_B = 8
+
+DTYPE = "float32"
+
+
+def meta_lines() -> str:
+    """Render shapes as the key=value text consumed by the Rust runtime."""
+    kv = {
+        "batch": BATCH,
+        "batch_small": BATCH_SMALL,
+        "max_vms": MAX_VMS,
+        "num_nodes": NUM_NODES,
+        "opt_steps": OPT_STEPS,
+        "block_b": BLOCK_B,
+        "dtype": DTYPE,
+    }
+    return "".join(f"{k}={v}\n" for k, v in kv.items())

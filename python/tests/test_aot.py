@@ -1,0 +1,81 @@
+"""AOT pipeline tests: HLO text emission is well-formed and shape-stable."""
+
+import os
+
+import pytest
+
+from compile import aot, shapes
+
+
+@pytest.fixture(scope="module")
+def artifacts():
+    """Lower everything once per test session (it's the slow part)."""
+    return aot.lower_all()
+
+
+class TestLowering:
+    def test_all_artifacts_emitted(self, artifacts):
+        assert set(artifacts) == {
+            "scorer.hlo.txt", "scorer_small.hlo.txt", "optimizer.hlo.txt",
+        }
+
+    def test_hlo_text_is_parseable_header(self, artifacts):
+        for name, text in artifacts.items():
+            assert text.startswith("HloModule"), f"{name} lacks HloModule header"
+            assert "ENTRY" in text, f"{name} lacks ENTRY computation"
+
+    @staticmethod
+    def entry_layout(text):
+        """The entry_computation_layout=... header carries the signature."""
+        header = text.splitlines()[0]
+        assert "entry_computation_layout=" in header, header
+        return header.split("entry_computation_layout=", 1)[1]
+
+    def test_scorer_entry_signature(self, artifacts):
+        """Entry must take 8 params with the documented shapes and return a
+        4-tuple — the Rust runtime hard-codes this contract."""
+        layout = self.entry_layout(artifacts["scorer.hlo.txt"])
+        b, v, n = shapes.BATCH, shapes.MAX_VMS, shapes.NUM_NODES
+        assert f"f32[{b},{v},{n}]" in layout, layout
+        assert f"f32[{n},{n}]" in layout
+        assert f"f32[{v},{v}]" in layout
+        # returns (total[B], loc[B,V], cont[B,V], over[B], bw_over[B])
+        assert f"->(f32[{b}]{{0}}, f32[{b},{v}]{{1,0}}, " \
+               f"f32[{b},{v}]{{1,0}}, f32[{b}]{{0}}, f32[{b}]{{0}})" in layout
+
+    def test_scorer_small_batch_dim(self, artifacts):
+        layout = self.entry_layout(artifacts["scorer_small.hlo.txt"])
+        b, v, n = shapes.BATCH_SMALL, shapes.MAX_VMS, shapes.NUM_NODES
+        assert f"f32[{b},{v},{n}]" in layout
+
+    def test_optimizer_entry_signature(self, artifacts):
+        layout = self.entry_layout(artifacts["optimizer.hlo.txt"])
+        v, n = shapes.MAX_VMS, shapes.NUM_NODES
+        assert f"f32[{v},{n}]" in layout
+        assert f"f32[{shapes.OPT_STEPS}]" in layout  # cost trace output
+
+    def test_no_custom_calls(self, artifacts):
+        """interpret=True must lower Pallas to plain HLO — a Mosaic
+        custom-call would be unloadable by the CPU PJRT client."""
+        for name, text in artifacts.items():
+            assert "custom-call" not in text, f"{name} contains custom-call"
+
+
+class TestMeta:
+    def test_meta_lines_roundtrip(self):
+        lines = shapes.meta_lines().strip().splitlines()
+        kv = dict(l.split("=", 1) for l in lines)
+        assert int(kv["batch"]) == shapes.BATCH
+        assert int(kv["max_vms"]) == shapes.MAX_VMS
+        assert int(kv["num_nodes"]) == shapes.NUM_NODES
+        assert kv["dtype"] == "float32"
+
+    def test_main_writes_files(self, tmp_path, monkeypatch, artifacts):
+        # Patch lower_all to reuse the session's artifacts (speed).
+        monkeypatch.setattr(aot, "lower_all", lambda: artifacts)
+        monkeypatch.setattr(
+            "sys.argv", ["aot.py", "--out-dir", str(tmp_path)]
+        )
+        aot.main()
+        for name in list(artifacts) + ["meta.txt"]:
+            assert os.path.exists(tmp_path / name), name

@@ -1,0 +1,186 @@
+"""Pallas kernel vs pure-jnp oracle — the core L1 correctness signal.
+
+Hypothesis sweeps shapes and value regimes; every case asserts allclose
+between ``placement_score.score_batch`` and ``ref.score_batch_ref`` on all
+four outputs.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.placement_score import score_batch
+from compile.kernels.ref import score_batch_ref, score_single_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def make_inputs(rng, bsz, v, n, *, scale=1.0, overload=False):
+    p = rng.dirichlet(np.ones(n), size=(bsz, v)).astype(np.float32)
+    d = (rng.uniform(10, 200, size=(n, n)) * scale).astype(np.float32)
+    np.fill_diagonal(d, 10.0 * scale)
+    d = ((d + d.T) / 2).astype(np.float32)
+    m = rng.dirichlet(np.ones(n), size=(v,)).astype(np.float32)
+    c = rng.uniform(0, 9, size=(v, v)).astype(np.float32)
+    np.fill_diagonal(c, 0.0)
+    s = rng.uniform(0, 1, size=(v,)).astype(np.float32)
+    cores = rng.integers(1, 72 if overload else 8, size=(v,)).astype(np.float32)
+    cap = np.full((n,), 8.0, dtype=np.float32)
+    w = np.array([1.0, 1.0, 10.0, 2.0], dtype=np.float32)
+    bw = (cores * rng.uniform(0.3, 6.0, size=(v,))).astype(np.float32)
+    bwcap = np.full((n,), 12.8, dtype=np.float32)
+    return p, d, m, c, s, cores, cap, w, bw, bwcap
+
+
+def assert_kernel_matches_ref(args, block_b):
+    got = score_batch(*[jnp.asarray(a) for a in args], block_b=block_b)
+    want = score_batch_ref(*[jnp.asarray(a) for a in args])
+    names = ["total", "locality", "contention", "overload", "bw_over"]
+    for name, g, wnt in zip(names, got, want):
+        np.testing.assert_allclose(
+            np.asarray(g), np.asarray(wnt), rtol=1e-5, atol=1e-4,
+            err_msg=f"output {name} mismatch",
+        )
+
+
+class TestKernelVsRef:
+    def test_paper_shapes(self):
+        """The exact AOT shapes used by the Rust runtime."""
+        rng = np.random.default_rng(0)
+        args = make_inputs(rng, 64, 32, 36)
+        assert_kernel_matches_ref(args, block_b=8)
+
+    def test_small_batch_variant(self):
+        rng = np.random.default_rng(1)
+        args = make_inputs(rng, 8, 32, 36)
+        assert_kernel_matches_ref(args, block_b=8)
+
+    def test_block_equals_batch(self):
+        rng = np.random.default_rng(2)
+        args = make_inputs(rng, 4, 5, 7)
+        assert_kernel_matches_ref(args, block_b=4)
+
+    def test_single_candidate_blocks(self):
+        rng = np.random.default_rng(3)
+        args = make_inputs(rng, 6, 3, 4)
+        assert_kernel_matches_ref(args, block_b=1)
+
+    def test_overloaded_nodes_nonzero_penalty(self):
+        """Huge VMs force node overload; penalty must be strictly positive."""
+        rng = np.random.default_rng(4)
+        args = make_inputs(rng, 8, 16, 6, overload=True)
+        total, _, _, over, _ = score_batch(*[jnp.asarray(a) for a in args], block_b=4)
+        assert float(jnp.max(over)) > 0.0
+        assert_kernel_matches_ref(args, block_b=4)
+
+    def test_zero_placement_rows_are_free(self):
+        """Padding VMs (all-zero placement rows) contribute zero cost."""
+        rng = np.random.default_rng(5)
+        p, d, m, c, s, cores, cap, w, bw, bwcap = make_inputs(rng, 4, 8, 6)
+        p[:, 4:, :] = 0.0
+        m[4:, :] = 0.0
+        total, loc, cont, _, _ = score_batch(
+            *[jnp.asarray(a) for a in (p, d, m, c, s, cores, cap, w, bw, bwcap)],
+            block_b=2,
+        )
+        np.testing.assert_allclose(np.asarray(loc)[:, 4:], 0.0, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(cont)[:, 4:], 0.0, atol=1e-6)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        bsz_blocks=st.integers(1, 4),
+        block_b=st.sampled_from([1, 2, 4]),
+        v=st.integers(1, 12),
+        n=st.integers(1, 16),
+        seed=st.integers(0, 2**31 - 1),
+        scale=st.sampled_from([0.01, 1.0, 100.0]),
+    )
+    def test_hypothesis_shape_sweep(self, bsz_blocks, block_b, v, n, seed, scale):
+        rng = np.random.default_rng(seed)
+        args = make_inputs(rng, bsz_blocks * block_b, v, n, scale=scale)
+        assert_kernel_matches_ref(args, block_b=block_b)
+
+    def test_indivisible_batch_rejected(self):
+        rng = np.random.default_rng(6)
+        args = make_inputs(rng, 6, 3, 4)
+        with pytest.raises(ValueError, match="not divisible"):
+            score_batch(*[jnp.asarray(a) for a in args], block_b=4)
+
+
+class TestCostModelProperties:
+    """Semantic invariants of the oracle itself."""
+
+    def test_local_placement_beats_remote(self):
+        """Placing vCPUs on the VM's memory node must score lower locality."""
+        n, v = 4, 1
+        d = np.full((n, n), 200.0, dtype=np.float32)
+        np.fill_diagonal(d, 10.0)
+        m = np.zeros((v, n), dtype=np.float32)
+        m[0, 0] = 1.0
+        base = dict(
+            d=jnp.asarray(d), m=jnp.asarray(m),
+            c=jnp.zeros((v, v), dtype=jnp.float32),
+            s=jnp.ones((v,), dtype=jnp.float32),
+            cores=jnp.ones((v,), dtype=jnp.float32),
+            cap=jnp.full((n,), 8.0, dtype=jnp.float32),
+            w=jnp.asarray([1.0, 1.0, 10.0, 2.0], dtype=jnp.float32),
+            bw=jnp.zeros((v,), dtype=jnp.float32),
+            bwcap=jnp.full((n,), 12.8, dtype=jnp.float32),
+        )
+        local = np.zeros((v, n), dtype=np.float32); local[0, 0] = 1.0
+        remote = np.zeros((v, n), dtype=np.float32); remote[0, 3] = 1.0
+        t_local, *_ = score_single_ref(jnp.asarray(local), **base)
+        t_remote, *_ = score_single_ref(jnp.asarray(remote), **base)
+        assert float(t_local) < float(t_remote)
+
+    def test_devil_pair_costs_more_than_sheep_pair(self):
+        """Two Devils sharing a node must out-cost two Sheep (Table 3)."""
+        n, v = 2, 2
+        p = np.zeros((v, n), dtype=np.float32)
+        p[:, 0] = 1.0  # both VMs fully on node 0
+        shared = dict(
+            d=jnp.full((n, n), 10.0, dtype=jnp.float32),
+            m=jnp.asarray(p),
+            s=jnp.zeros((v,), dtype=jnp.float32),
+            cores=jnp.ones((v,), dtype=jnp.float32),
+            cap=jnp.full((n,), 8.0, dtype=jnp.float32),
+            w=jnp.asarray([1.0, 1.0, 10.0, 2.0], dtype=jnp.float32),
+            bw=jnp.zeros((v,), dtype=jnp.float32),
+            bwcap=jnp.full((n,), 12.8, dtype=jnp.float32),
+        )
+        c_sheep = jnp.zeros((v, v), dtype=jnp.float32)
+        c_devil = jnp.asarray([[0.0, 8.0], [8.0, 0.0]], dtype=jnp.float32)
+        t_sheep, *_ = score_single_ref(jnp.asarray(p), c=c_sheep, **shared)
+        t_devil, *_ = score_single_ref(jnp.asarray(p), c=c_devil, **shared)
+        assert float(t_devil) > float(t_sheep)
+
+    def test_overload_scales_quadratically(self):
+        n, v = 1, 1
+        base = dict(
+            d=jnp.full((n, n), 10.0, dtype=jnp.float32),
+            m=jnp.ones((v, n), dtype=jnp.float32),
+            c=jnp.zeros((v, v), dtype=jnp.float32),
+            s=jnp.zeros((v,), dtype=jnp.float32),
+            cap=jnp.full((n,), 8.0, dtype=jnp.float32),
+            w=jnp.asarray([0.0, 0.0, 1.0, 0.0], dtype=jnp.float32),
+            bw=jnp.zeros((v,), dtype=jnp.float32),
+            bwcap=jnp.full((n,), 12.8, dtype=jnp.float32),
+        )
+        p = jnp.ones((v, n), dtype=jnp.float32)
+        t1, *_ = score_single_ref(p, cores=jnp.asarray([10.0]), **base)  # over by 2
+        t2, *_ = score_single_ref(p, cores=jnp.asarray([12.0]), **base)  # over by 4
+        assert float(t2) == pytest.approx(4.0 * float(t1), rel=1e-5)
+
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_total_is_weighted_sum_of_components(self, seed):
+        rng = np.random.default_rng(seed)
+        args = make_inputs(rng, 4, 6, 8)
+        total, loc, cont, over, bwo = score_batch_ref(*[jnp.asarray(a) for a in args])
+        w = args[7]
+        want = w[0] * np.sum(np.asarray(loc), -1) + w[1] * np.sum(
+            np.asarray(cont), -1
+        ) + w[2] * np.asarray(over) + w[3] * np.asarray(bwo)
+        np.testing.assert_allclose(np.asarray(total), want, rtol=1e-5)

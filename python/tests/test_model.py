@@ -1,0 +1,105 @@
+"""L2 model tests: optimizer convergence, masking, and AOT shape contracts."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model, shapes
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def small_problem(v=4, n=4, seed=0):
+    """A problem where the optimum is obvious: each VM's memory lives on a
+    distinct node, distances are strongly non-uniform, no interference."""
+    rng = np.random.default_rng(seed)
+    d = np.full((n, n), 200.0, dtype=np.float32)
+    np.fill_diagonal(d, 10.0)
+    m = np.eye(v, n, dtype=np.float32)
+    c = np.zeros((v, v), dtype=np.float32)
+    s = np.ones((v,), dtype=np.float32)
+    cores = np.full((v,), 2.0, dtype=np.float32)
+    cap = np.full((n,), 8.0, dtype=np.float32)
+    w = np.array([1.0, 1.0, 10.0, 2.0], dtype=np.float32)
+    bw = np.zeros((v,), dtype=np.float32)
+    bwcap = np.full((n,), 12.8, dtype=np.float32)
+    live = np.ones((v,), dtype=np.float32)
+    logits0 = rng.normal(0, 0.01, size=(v, n)).astype(np.float32)
+    return tuple(
+        jnp.asarray(x)
+        for x in (logits0, d, m, c, s, cores, cap, w, bw, bwcap, live)
+    )
+
+
+class TestOptimizer:
+    def test_cost_decreases_from_initial(self):
+        from compile.kernels.ref import score_batch_ref
+
+        args = small_problem()
+        logits0, d, m, c, s, cores, cap, w, bw, bwcap, live = args
+        p0 = jax.nn.softmax(logits0, axis=-1) * live[:, None]
+        cost0 = float(
+            score_batch_ref(p0[None], d, m, c, s, cores, cap, w, bw, bwcap)[0][0]
+        )
+        _, trace = model.optimizer(*args)
+        trace = np.asarray(trace)
+        assert trace[-1] < cost0 * 0.5, f"no convergence: {cost0} -> {trace[-1]}"
+        assert trace[-1] <= trace[0] + 1e-4  # never ends worse than it starts
+
+    def test_converges_to_local_placement(self):
+        """Each VM should end up (mostly) on its own memory node."""
+        args = small_problem()
+        p_opt, _ = model.optimizer(*args)
+        p_opt = np.asarray(p_opt)
+        for vm in range(4):
+            assert p_opt[vm, vm] > 0.8, f"VM {vm} not local: {p_opt[vm]}"
+
+    def test_rows_are_distributions(self):
+        args = small_problem(seed=3)
+        p_opt, _ = model.optimizer(*args)
+        sums = np.asarray(p_opt).sum(axis=-1)
+        np.testing.assert_allclose(sums, 1.0, rtol=1e-5)
+
+    def test_dead_vms_masked_out(self):
+        logits0, d, m, c, s, cores, cap, w, bw, bwcap, _ = small_problem()
+        live = jnp.asarray([1.0, 1.0, 0.0, 0.0], dtype=jnp.float32)
+        p_opt, _ = model.optimizer(
+            logits0, d, m, c, s, cores, cap, w, bw, bwcap, live
+        )
+        p_opt = np.asarray(p_opt)
+        np.testing.assert_allclose(p_opt[2:], 0.0, atol=1e-7)
+
+    def test_trace_length_matches_opt_steps(self):
+        args = small_problem()
+        _, trace = model.optimizer(*args)
+        assert trace.shape == (shapes.OPT_STEPS,)
+
+
+class TestScorerEntry:
+    def test_scorer_matches_ref_at_aot_shapes(self):
+        from compile.kernels.ref import score_batch_ref
+
+        rng = np.random.default_rng(7)
+        b, v, n = shapes.BATCH, shapes.MAX_VMS, shapes.NUM_NODES
+        p = jnp.asarray(rng.dirichlet(np.ones(n), size=(b, v)), dtype=jnp.float32)
+        d = jnp.asarray(rng.uniform(10, 200, (n, n)), dtype=jnp.float32)
+        m = jnp.asarray(rng.dirichlet(np.ones(n), size=(v,)), dtype=jnp.float32)
+        c = jnp.asarray(rng.uniform(0, 9, (v, v)), dtype=jnp.float32)
+        s = jnp.asarray(rng.uniform(0, 1, (v,)), dtype=jnp.float32)
+        cores = jnp.asarray(rng.integers(1, 8, (v,)), dtype=jnp.float32)
+        cap = jnp.full((n,), 8.0, dtype=jnp.float32)
+        w = jnp.asarray([1.0, 1.0, 10.0, 2.0], dtype=jnp.float32)
+        bw = cores * 1.5
+        bwcap = jnp.full((n,), 12.8, dtype=jnp.float32)
+        got = model.scorer(p, d, m, c, s, cores, cap, w, bw, bwcap)
+        want = score_batch_ref(p, d, m, c, s, cores, cap, w, bw, bwcap)
+        for g, wnt in zip(got, want):
+            np.testing.assert_allclose(np.asarray(g), np.asarray(wnt), rtol=1e-5,
+                                       atol=1e-4)
+
+    def test_example_args_shapes(self):
+        args = model.scorer_example_args(shapes.BATCH)
+        assert args[0].shape == (shapes.BATCH, shapes.MAX_VMS, shapes.NUM_NODES)
+        args = model.optimizer_example_args()
+        assert args[0].shape == (shapes.MAX_VMS, shapes.NUM_NODES)
+        assert args[-1].shape == (shapes.MAX_VMS,)

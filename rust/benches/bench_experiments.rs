@@ -1,0 +1,42 @@
+//! End-to-end benchmarks: one per paper table/figure (harness = false; the
+//! offline registry has no criterion, so `util::benchkit` provides the
+//! measurement loop).  Each bench times regenerating the artifact and the
+//! run also prints the artifact's headline numbers, so `cargo bench` doubles
+//! as a full reproduction pass.
+
+use dvrm::experiments::{self, ExpOptions};
+use dvrm::util::benchkit::Bench;
+
+fn main() {
+    println!("== dvrm bench_experiments: one bench per paper table/figure ==");
+    let quick = Bench::new(1, 5);
+    let slow = Bench::new(0, 3);
+
+    // Static tables are ~free; figure studies dominate.
+    let fast_opts = ExpOptions { ticks: 15, repeats: 2, ..ExpOptions::fast() };
+
+    for id in ["t1", "t2", "t3", "t5", "f2", "f3"] {
+        quick.run(&format!("experiment/{id}"), || {
+            experiments::run(id, &fast_opts).expect(id);
+        });
+    }
+    for id in ["t4", "f4_10", "f11", "f12", "f13", "f14_16", "f17_19", "var", "abl"] {
+        slow.run(&format!("experiment/{id}"), || {
+            experiments::run(id, &fast_opts).expect(id);
+        });
+    }
+
+    // Print headline artifacts once at full fidelity (recorded in
+    // EXPERIMENTS.md).
+    let full = ExpOptions { repeats: 3, ..ExpOptions::default() };
+    for id in ["f14_16", "f17_19", "var"] {
+        let t0 = std::time::Instant::now();
+        match experiments::run(id, &full) {
+            Ok(out) => {
+                println!("\n--- {id} (full fidelity, {:.1}s) ---", t0.elapsed().as_secs_f64());
+                println!("{}", out.text);
+            }
+            Err(e) => println!("{id} failed: {e:#}"),
+        }
+    }
+}

@@ -1,0 +1,128 @@
+//! Hot-path microbenchmarks (harness = false): the decision-loop pieces
+//! whose latency bounds the coordinator's control interval.
+//!
+//! * scorer: PJRT (AOT JAX/Pallas artifacts) vs native Rust, both batch
+//!   sizes — the L1/L2 compute path.
+//! * optimizer: the whole-system relaxed reshuffle artifact.
+//! * sim tick: the discrete-time host model under full cluster load.
+//! * mapper interval: a complete monitor+remap pass.
+
+use dvrm::coordinator::{MapperConfig, Metric, SmMapper};
+use dvrm::runtime::{CandidateBatch, Engine, Meta, ScoreProblem, Scorer, VmEntry, Weights};
+use dvrm::sim::{SimConfig, Simulator};
+use dvrm::topology::Topology;
+use dvrm::util::benchkit::Bench;
+use dvrm::util::rng::Rng;
+use dvrm::workload::{trace, App};
+
+fn problem(topo: &Topology, vms: usize) -> ScoreProblem {
+    let n = topo.num_nodes();
+    let apps = [App::Neo4j, App::Stream, App::Fft, App::Mpegaudio, App::Derby];
+    let entries: Vec<VmEntry> = (0..vms)
+        .map(|i| {
+            let mut mem = vec![0.0; n];
+            mem[(i * 5) % n] = 1.0;
+            VmEntry { profile: apps[i % apps.len()].profile(), vcpus: 8, mem_fractions: mem }
+        })
+        .collect();
+    ScoreProblem::build(topo, &entries, Weights::default(), Meta::expected()).unwrap()
+}
+
+fn batch(meta: Meta, len: usize, vms: usize, seed: u64) -> CandidateBatch {
+    let cap = if len <= meta.batch_small { meta.batch_small } else { meta.batch };
+    let mut b = CandidateBatch::zeroed(meta, cap);
+    let mut rng = Rng::new(seed);
+    for _ in 0..len {
+        let mut p = vec![vec![0.0; meta.num_nodes]; vms];
+        for row in p.iter_mut() {
+            for f in rng.simplex(3) {
+                row[rng.below(meta.num_nodes)] += f;
+            }
+            let s: f64 = row.iter().sum();
+            row.iter_mut().for_each(|x| *x /= s);
+        }
+        b.push(&p);
+    }
+    b
+}
+
+fn main() {
+    println!("== dvrm bench_hotpath ==");
+    let bench = Bench::new(3, 30);
+    let topo = Topology::paper();
+    let prob = problem(&topo, 20);
+
+    // Native scorer.
+    for len in [8usize, 64] {
+        let b = batch(prob.meta, len, prob.vms, 1);
+        bench.run(&format!("scorer/native/batch{len}"), || {
+            std::hint::black_box(dvrm::runtime::native::score_batch(&prob, &b));
+        });
+    }
+
+    // PJRT scorer (AOT JAX/Pallas artifacts).
+    match Engine::load_default() {
+        Some(engine) => {
+            for len in [8usize, 64] {
+                let b = batch(prob.meta, len, prob.vms, 1);
+                bench.run(&format!("scorer/pjrt/batch{len}"), || {
+                    std::hint::black_box(engine.score(&prob, &b).unwrap());
+                });
+            }
+            let logits: Vec<f32> = vec![0.0; prob.meta.max_vms * prob.meta.num_nodes];
+            Bench::new(1, 10).run("optimizer/pjrt/60steps", || {
+                std::hint::black_box(engine.optimize(&prob, &logits).unwrap());
+            });
+        }
+        None => println!("(artifacts not built; skipping PJRT benches — run `make artifacts`)"),
+    }
+
+    // Simulator tick under the full paper mix.
+    let mut rng = Rng::new(7);
+    let arrivals = trace::paper_mix(&mut rng);
+    let mut sim = Simulator::new(topo.clone(), SimConfig::pinned(7));
+    let mut mapper = SmMapper::new(MapperConfig::new(Metric::Ipc), Scorer::Native);
+    for a in &arrivals {
+        let id = sim.create(a.vm_type, a.app);
+        mapper.place_arrival(&mut sim, id).unwrap();
+        sim.start(id).unwrap();
+    }
+    bench.run("sim/tick/20vms", || {
+        std::hint::black_box(sim.step());
+    });
+
+    // Full monitoring pass (native scorer).
+    bench.run("mapper/interval/native/20vms", || {
+        sim.step();
+        std::hint::black_box(mapper.interval(&mut sim).unwrap());
+    });
+
+    // Full monitoring pass (PJRT scorer) — the paper-relevant config.
+    if let Some(engine) = Engine::load_default() {
+        let mut sim2 = Simulator::new(topo, SimConfig::pinned(8));
+        let mut mapper2 =
+            SmMapper::new(MapperConfig::new(Metric::Ipc), Scorer::Pjrt(std::rc::Rc::new(engine)));
+        for a in &arrivals {
+            let id = sim2.create(a.vm_type, a.app);
+            mapper2.place_arrival(&mut sim2, id).unwrap();
+            sim2.start(id).unwrap();
+        }
+        bench.run("mapper/interval/pjrt/20vms", || {
+            sim2.step();
+            std::hint::black_box(mapper2.interval(&mut sim2).unwrap());
+        });
+    }
+
+    // Candidate generation alone.
+    let slots = dvrm::coordinator::SlotMap::from_sim(&sim, None);
+    bench.run("candidates/generate/24", || {
+        std::hint::black_box(dvrm::coordinator::candidates::generate(
+            &sim.topo,
+            &slots,
+            8,
+            dvrm::workload::AnimalClass::Devil,
+            None,
+            24,
+        ));
+    });
+}

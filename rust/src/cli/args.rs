@@ -1,0 +1,96 @@
+//! Tiny argv parser: `command positional... --flag --key value`.
+
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Parsed {
+    pub command: Option<String>,
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Parsed {
+    /// Parse argv (without the program name).
+    pub fn parse(argv: &[String]) -> Result<Parsed> {
+        let mut p = Parsed::default();
+        let mut it = argv.iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(name) = arg.strip_prefix("--") {
+                if name.is_empty() {
+                    bail!("bare `--` not supported");
+                }
+                // `--key=value` or `--key value` or boolean flag.
+                if let Some((k, v)) = name.split_once('=') {
+                    p.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().is_some_and(|n| !n.starts_with("--")) {
+                    p.options.insert(name.to_string(), it.next().unwrap().clone());
+                } else {
+                    p.flags.push(name.to_string());
+                }
+            } else if p.command.is_none() {
+                p.command = Some(arg.clone());
+            } else {
+                p.positional.push(arg.clone());
+            }
+        }
+        Ok(p)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn value(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(String::as_str)
+    }
+
+    pub fn value_u64(&self, name: &str) -> Option<u64> {
+        self.value(name).and_then(|v| v.parse().ok())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str]) -> Parsed {
+        Parsed::parse(&args.iter().map(|s| s.to_string()).collect::<Vec<_>>()).unwrap()
+    }
+
+    #[test]
+    fn parses_command_and_positional() {
+        let p = parse(&["experiment", "f11"]);
+        assert_eq!(p.command.as_deref(), Some("experiment"));
+        assert_eq!(p.positional, vec!["f11"]);
+    }
+
+    #[test]
+    fn parses_options_both_styles() {
+        let p = parse(&["run", "--seed", "7", "--ticks=99", "--fast"]);
+        assert_eq!(p.value_u64("seed"), Some(7));
+        assert_eq!(p.value_u64("ticks"), Some(99));
+        assert!(p.flag("fast"));
+        assert!(!p.flag("slow"));
+    }
+
+    #[test]
+    fn trailing_flag_is_boolean() {
+        let p = parse(&["run", "--fast"]);
+        assert!(p.flag("fast"));
+        assert_eq!(p.value("fast"), None);
+    }
+
+    #[test]
+    fn empty_argv_ok() {
+        let p = parse(&[]);
+        assert!(p.command.is_none());
+    }
+
+    #[test]
+    fn bare_dashes_rejected() {
+        assert!(Parsed::parse(&["--".to_string()]).is_err());
+    }
+}

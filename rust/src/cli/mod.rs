@@ -1,0 +1,155 @@
+//! Command-line interface (the offline registry has no clap; this is a
+//! small hand-rolled parser).
+//!
+//! ```text
+//! dvrm topo                         # Table 1 + latency hierarchy
+//! dvrm experiment <id>|all [opts]   # regenerate paper tables/figures
+//! dvrm run [opts]                   # end-to-end cluster demo (3 algorithms)
+//! dvrm list                         # known experiment ids
+//! options: --seed N --ticks N --repeats N --fast --scorer auto|native
+//!          --csv DIR
+//! ```
+
+pub mod args;
+
+use anyhow::{bail, Result};
+
+use crate::experiments::{self, ExpOptions, ScorerChoice};
+use args::Parsed;
+
+/// Entry point for the `dvrm` binary.
+pub fn main_with(argv: &[String]) -> Result<i32> {
+    let parsed = Parsed::parse(argv)?;
+    match parsed.command.as_deref() {
+        Some("topo") => cmd_topo(),
+        Some("experiment") => cmd_experiment(&parsed),
+        Some("run") => cmd_run(&parsed),
+        Some("list") => {
+            println!("experiments: {}", experiments::ALL_IDS.join(" "));
+            Ok(0)
+        }
+        Some("help") | None => {
+            println!("{}", usage());
+            Ok(0)
+        }
+        Some(other) => bail!("unknown command {other:?}\n{}", usage()),
+    }
+}
+
+pub fn usage() -> &'static str {
+    "dvrm — NUMA-aware virtual resource mapping for disaggregated systems\n\
+     \n\
+     usage: dvrm <command> [options]\n\
+     \n\
+     commands:\n\
+       topo              print the paper testbed topology (Table 1, Fig 2, Fig 3)\n\
+       experiment <id>   regenerate a paper table/figure (see `dvrm list`)\n\
+       experiment all    regenerate everything\n\
+       run               end-to-end cluster demo under all three algorithms\n\
+       list              list experiment ids\n\
+     \n\
+     options:\n\
+       --seed N          base RNG seed (default 42)\n\
+       --ticks N         micro-study measurement ticks (default 30)\n\
+       --repeats N       run repeats to average (default 3)\n\
+       --fast            small windows + native scorer\n\
+       --scorer S        auto|native (default auto: PJRT artifacts if built)\n\
+       --csv DIR         also write result tables as CSV into DIR"
+}
+
+fn opts_from(parsed: &Parsed) -> ExpOptions {
+    let mut o = if parsed.flag("fast") { ExpOptions::fast() } else { ExpOptions::default() };
+    if let Some(seed) = parsed.value_u64("seed") {
+        o.seed = seed;
+    }
+    if let Some(t) = parsed.value_u64("ticks") {
+        o.ticks = t;
+    }
+    if let Some(r) = parsed.value_u64("repeats") {
+        o.repeats = r;
+    }
+    if let Some(s) = parsed.value("scorer") {
+        o.scorer = match s {
+            "auto" => ScorerChoice::Auto,
+            "native" => ScorerChoice::Native,
+            _ => ScorerChoice::Auto,
+        };
+    }
+    o
+}
+
+fn cmd_topo() -> Result<i32> {
+    let o = ExpOptions::fast();
+    for id in ["t1", "f2", "f3"] {
+        println!("{}", experiments::run(id, &o)?.text);
+    }
+    Ok(0)
+}
+
+fn cmd_experiment(parsed: &Parsed) -> Result<i32> {
+    let Some(id) = parsed.positional.first() else {
+        bail!("experiment id required; see `dvrm list`");
+    };
+    let opts = opts_from(parsed);
+    let ids: Vec<&str> = if id == "all" {
+        experiments::ALL_IDS.to_vec()
+    } else {
+        vec![id.as_str()]
+    };
+    for id in ids {
+        let t0 = std::time::Instant::now();
+        let out = experiments::run(id, &opts)?;
+        println!("=== experiment {id} ({:.2}s) ===", t0.elapsed().as_secs_f64());
+        println!("{}", out.text);
+        if let Some(dir) = parsed.value("csv") {
+            std::fs::create_dir_all(dir)?;
+            for (name, table) in &out.tables {
+                let path = format!("{dir}/{name}.csv");
+                std::fs::write(&path, table.to_csv())?;
+                println!("wrote {path}");
+            }
+        }
+    }
+    Ok(0)
+}
+
+fn cmd_run(parsed: &Parsed) -> Result<i32> {
+    use crate::experiments::{run_all, Algorithm};
+    use crate::util::rng::Rng;
+    use crate::workload::trace;
+
+    let opts = opts_from(parsed);
+    let mut rng = Rng::new(opts.seed);
+    let arrivals = trace::paper_mix(&mut rng);
+    println!(
+        "cluster run: {} VMs on the paper testbed (seed {})",
+        arrivals.len(),
+        opts.seed
+    );
+    let results = run_all(&arrivals, &opts.harness())?;
+    let vanilla_rel: f64 = {
+        let xs: Vec<f64> =
+            results[0].summaries.iter().map(|s| s.mean_rel_perf).collect();
+        crate::util::stats::mean(&xs)
+    };
+    for res in &results {
+        let rel: Vec<f64> = res.summaries.iter().map(|s| s.mean_rel_perf).collect();
+        let mean = crate::util::stats::mean(&rel);
+        let extra = match res.algorithm {
+            Algorithm::Vanilla => String::new(),
+            _ => {
+                let st = res.mapper_stats.as_ref().unwrap();
+                format!(
+                    "  [arrivals={} remaps={} reshuffles={} scorer-batches={} vs-vanilla={:.1}x]",
+                    st.arrivals,
+                    st.remaps,
+                    st.reshuffles,
+                    st.scorer_batches,
+                    mean / vanilla_rel.max(1e-9)
+                )
+            }
+        };
+        println!("{:<8} mean rel perf = {mean:.4}{extra}", res.algorithm.name());
+    }
+    Ok(0)
+}

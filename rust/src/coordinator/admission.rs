@@ -1,0 +1,213 @@
+//! Admission control and eviction — the "higher level of control" the
+//! paper assumes above Algorithm 1 (§4.1: "If the system is at maximum
+//! capacity, we assume that a higher level of control will stop new
+//! arrivals to the system and possibly evict applications if needed").
+//!
+//! Policy: admit while the post-placement slot utilization stays under a
+//! headroom bound; under pressure, evict by lowest priority then youngest
+//! age until the incoming VM fits.
+
+use crate::sim::Simulator;
+use crate::vm::{VmId, VmState, VmType};
+
+/// Admission decision for an arriving VM.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Decision {
+    Admit,
+    /// Reject: admitting would exceed the slot headroom.
+    Reject { need: usize, free: usize },
+    /// Admit after evicting these victims (lowest priority first).
+    AdmitAfterEvicting(Vec<VmId>),
+}
+
+/// Relative priority of a workload (higher survives eviction longer).
+pub fn priority(vm_type: VmType) -> u32 {
+    // Bigger VMs are costlier to restart elsewhere; favour keeping them.
+    match vm_type {
+        VmType::Huge => 3,
+        VmType::Large => 2,
+        VmType::Medium => 1,
+        VmType::Small => 0,
+    }
+}
+
+/// Admission controller configuration.
+#[derive(Debug, Clone)]
+pub struct AdmissionConfig {
+    /// Fraction of total slots that may be committed (1.0 = fill the box).
+    pub max_utilization: f64,
+    /// Allow eviction of lower-priority VMs to admit higher-priority ones.
+    pub allow_eviction: bool,
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> Self {
+        Self { max_utilization: 1.0, allow_eviction: false }
+    }
+}
+
+/// Stateless controller over the simulator's current commitments.
+#[derive(Debug, Clone, Default)]
+pub struct AdmissionController {
+    pub cfg: AdmissionConfig,
+    /// Telemetry.
+    pub admitted: u64,
+    pub rejected: u64,
+    pub evictions: u64,
+}
+
+impl AdmissionController {
+    pub fn new(cfg: AdmissionConfig) -> Self {
+        Self { cfg, ..Default::default() }
+    }
+
+    /// Slots currently committed to running VMs.
+    pub fn committed(&self, sim: &Simulator) -> usize {
+        sim.vms()
+            .filter(|(_, m)| m.vm.state == VmState::Running)
+            .map(|(_, m)| m.vm.vcpus())
+            .sum()
+    }
+
+    /// Decide on an arrival of `vm_type`.
+    pub fn decide(&mut self, sim: &Simulator, vm_type: VmType) -> Decision {
+        let total = sim.topo.num_cpus();
+        let budget = (total as f64 * self.cfg.max_utilization).floor() as usize;
+        let committed = self.committed(sim);
+        let need = vm_type.spec().vcpus;
+        if committed + need <= budget {
+            self.admitted += 1;
+            return Decision::Admit;
+        }
+        if !self.cfg.allow_eviction {
+            self.rejected += 1;
+            return Decision::Reject { need, free: budget.saturating_sub(committed) };
+        }
+        // Evict lowest-priority, then youngest, strictly-lower-priority VMs.
+        let mut victims: Vec<(u32, u64, VmId, usize)> = sim
+            .vms()
+            .filter(|(_, m)| m.vm.state == VmState::Running)
+            .filter(|(_, m)| priority(m.vm.vm_type) < priority(vm_type))
+            .map(|(id, m)| (priority(m.vm.vm_type), m.vm.arrived_at, *id, m.vm.vcpus()))
+            .collect();
+        victims.sort_by_key(|(prio, arrived, ..)| (*prio, std::cmp::Reverse(*arrived)));
+        let mut freed = 0usize;
+        let mut chosen = Vec::new();
+        for (_, _, id, vcpus) in victims {
+            if committed + need - freed <= budget {
+                break;
+            }
+            freed += vcpus;
+            chosen.push(id);
+        }
+        if committed + need - freed <= budget {
+            self.admitted += 1;
+            self.evictions += chosen.len() as u64;
+            Decision::AdmitAfterEvicting(chosen)
+        } else {
+            self.rejected += 1;
+            Decision::Reject { need, free: budget.saturating_sub(committed) }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::SimConfig;
+    use crate::topology::Topology;
+    use crate::workload::App;
+
+    fn sim_with(vms: &[(VmType, App)]) -> Simulator {
+        let mut sim = Simulator::new(Topology::paper(), SimConfig::vanilla(1));
+        for (t, a) in vms {
+            let id = sim.create(*t, *a);
+            sim.start(id).unwrap();
+        }
+        sim
+    }
+
+    #[test]
+    fn admits_when_capacity_available() {
+        let sim = sim_with(&[(VmType::Huge, App::Neo4j)]); // 72/288
+        let mut ac = AdmissionController::default();
+        assert_eq!(ac.decide(&sim, VmType::Huge), Decision::Admit);
+        assert_eq!(ac.admitted, 1);
+    }
+
+    #[test]
+    fn rejects_past_headroom() {
+        let sim = sim_with(&[(VmType::Huge, App::Neo4j); 4].as_ref()); // 288/288
+        let mut ac = AdmissionController::default();
+        match ac.decide(&sim, VmType::Small) {
+            Decision::Reject { need, free } => {
+                assert_eq!(need, 4);
+                assert_eq!(free, 0);
+            }
+            other => panic!("expected reject, got {other:?}"),
+        }
+        assert_eq!(ac.rejected, 1);
+    }
+
+    #[test]
+    fn utilization_bound_respected() {
+        // 0.5 budget = 144 slots; one huge (72) + one large (16) = 88.
+        let sim = sim_with(&[(VmType::Huge, App::Neo4j), (VmType::Large, App::Fft)]);
+        let mut ac = AdmissionController::new(AdmissionConfig {
+            max_utilization: 0.5,
+            allow_eviction: false,
+        });
+        assert_eq!(ac.decide(&sim, VmType::Large), Decision::Admit); // 104
+        assert!(matches!(ac.decide(&sim, VmType::Huge), Decision::Reject { .. })); // 160 > 144
+    }
+
+    #[test]
+    fn evicts_youngest_lowest_priority_first() {
+        let mut sim = Simulator::new(Topology::paper(), SimConfig::vanilla(2));
+        // Fill: 3 huge (216) + 16 small (64) = 280; small #16 is youngest.
+        for _ in 0..3 {
+            let id = sim.create(VmType::Huge, App::Neo4j);
+            sim.start(id).unwrap();
+        }
+        let mut smalls = Vec::new();
+        for k in 0..16 {
+            sim.run(1); // advance ticks so arrival times differ
+            let id = sim.create(VmType::Small, App::Sockshop);
+            sim.start(id).unwrap();
+            smalls.push(id);
+            let _ = k;
+        }
+        let mut ac = AdmissionController::new(AdmissionConfig {
+            max_utilization: 1.0,
+            allow_eviction: true,
+        });
+        // A large (16) needs 288-280=8 free -> must evict 2 smalls.
+        match ac.decide(&sim, VmType::Large) {
+            Decision::AdmitAfterEvicting(victims) => {
+                assert_eq!(victims.len(), 2);
+                // Youngest smalls go first.
+                assert_eq!(victims[0], *smalls.last().unwrap());
+                assert_eq!(victims[1], smalls[smalls.len() - 2]);
+            }
+            other => panic!("expected eviction, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn never_evicts_equal_or_higher_priority() {
+        let sim = sim_with(&[(VmType::Huge, App::Neo4j); 4].as_ref());
+        let mut ac = AdmissionController::new(AdmissionConfig {
+            max_utilization: 1.0,
+            allow_eviction: true,
+        });
+        // Another huge cannot evict huges.
+        assert!(matches!(ac.decide(&sim, VmType::Huge), Decision::Reject { .. }));
+    }
+
+    #[test]
+    fn priorities_are_ordered_by_size() {
+        assert!(priority(VmType::Huge) > priority(VmType::Large));
+        assert!(priority(VmType::Large) > priority(VmType::Medium));
+        assert!(priority(VmType::Medium) > priority(VmType::Small));
+    }
+}

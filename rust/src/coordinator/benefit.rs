@@ -1,0 +1,161 @@
+//! The benefit matrix (paper Table 4): per (isolation level × animal
+//! class) estimates, on a 1–10 scale, of how much a class gains from being
+//! moved to its own socket / NUMA node / server.
+//!
+//! "This table is dynamically updated during runtime and, hence, the
+//! algorithm can make better mapping decisions over time" (§4.1): after a
+//! remap the coordinator measures the realized relative-performance gain
+//! and folds it into the matrix by EMA — see [`BenefitMatrix::observe`].
+
+use crate::workload::classes::{initial_benefit, AnimalClass, IsolationLevel};
+
+/// Learned copy of Table 4.
+#[derive(Debug, Clone)]
+pub struct BenefitMatrix {
+    /// `[level][class]`, 1–10.
+    values: [[f64; 3]; 3],
+    /// EMA smoothing for observations.
+    alpha: f64,
+    /// Number of observations folded in (telemetry / tests).
+    observations: u64,
+}
+
+impl Default for BenefitMatrix {
+    fn default() -> Self {
+        Self::new(0.3)
+    }
+}
+
+impl BenefitMatrix {
+    pub fn new(alpha: f64) -> Self {
+        let mut values = [[0.0; 3]; 3];
+        for (li, level) in IsolationLevel::ALL.iter().enumerate() {
+            for (ci, class) in AnimalClass::ALL.iter().enumerate() {
+                values[li][ci] = initial_benefit(*level, *class);
+            }
+        }
+        Self { values, alpha, observations: 0 }
+    }
+
+    pub fn get(&self, level: IsolationLevel, class: AnimalClass) -> f64 {
+        self.values[level_index(level)][class.index()]
+    }
+
+    /// Isolation levels for `class`, best benefit first — the order in
+    /// which the remap search tries candidate moves.
+    pub fn ranked_levels(&self, class: AnimalClass) -> Vec<IsolationLevel> {
+        let mut levels = IsolationLevel::ALL.to_vec();
+        levels.sort_by(|a, b| {
+            self.get(*b, class).partial_cmp(&self.get(*a, class)).unwrap()
+        });
+        levels
+    }
+
+    /// Fold in an observed relative gain from a move of `class` to its own
+    /// `level` domain.  `gain` is fractional (0.5 = +50% throughput); it is
+    /// mapped onto the 1–10 scale (1 + 9·clamp(gain, 0, 1)) and EMA'd.
+    pub fn observe(&mut self, level: IsolationLevel, class: AnimalClass, gain: f64) {
+        let target = 1.0 + 9.0 * gain.clamp(0.0, 1.0);
+        let v = &mut self.values[level_index(level)][class.index()];
+        *v = (1.0 - self.alpha) * *v + self.alpha * target;
+        *v = v.clamp(1.0, 10.0);
+        self.observations += 1;
+    }
+
+    pub fn observations(&self) -> u64 {
+        self.observations
+    }
+
+    /// Render as the paper's Table 4 layout.
+    pub fn to_table(&self) -> crate::util::table::Table {
+        let mut t = crate::util::table::Table::new("Benefit Matrix (Table 4)")
+            .header(&["", "Sheep", "Rabbit", "Devil"]);
+        for level in IsolationLevel::ALL {
+            t.row_f(
+                level.name(),
+                &AnimalClass::ALL.map(|c| self.get(level, c)),
+                1,
+            );
+        }
+        t
+    }
+}
+
+fn level_index(level: IsolationLevel) -> usize {
+    match level {
+        IsolationLevel::Socket => 0,
+        IsolationLevel::NumaNode => 1,
+        IsolationLevel::ServerNode => 2,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use AnimalClass::*;
+    use IsolationLevel::*;
+
+    #[test]
+    fn starts_at_table4() {
+        let b = BenefitMatrix::default();
+        assert_eq!(b.get(Socket, Sheep), 1.0);
+        assert_eq!(b.get(NumaNode, Rabbit), 5.0);
+        assert_eq!(b.get(ServerNode, Devil), 9.0);
+        assert_eq!(b.observations(), 0);
+    }
+
+    #[test]
+    fn ranked_levels_prefer_big_benefit() {
+        let b = BenefitMatrix::default();
+        // Devils: server (9) > numa (8) > socket (7).
+        assert_eq!(b.ranked_levels(Devil), vec![ServerNode, NumaNode, Socket]);
+    }
+
+    #[test]
+    fn observe_moves_value_toward_observation() {
+        let mut b = BenefitMatrix::new(0.5);
+        let before = b.get(Socket, Rabbit); // 4.0
+        b.observe(Socket, Rabbit, 1.0); // target 10
+        let after = b.get(Socket, Rabbit);
+        assert!(after > before);
+        assert!((after - 7.0).abs() < 1e-9); // 0.5*4 + 0.5*10
+        assert_eq!(b.observations(), 1);
+    }
+
+    #[test]
+    fn observe_no_gain_decays_value() {
+        let mut b = BenefitMatrix::new(0.5);
+        b.observe(ServerNode, Devil, 0.0); // target 1
+        assert!((b.get(ServerNode, Devil) - 5.0).abs() < 1e-9); // 0.5*9 + 0.5*1
+    }
+
+    #[test]
+    fn values_stay_in_1_to_10() {
+        let mut b = BenefitMatrix::new(1.0);
+        for _ in 0..20 {
+            b.observe(Socket, Sheep, 100.0);
+            b.observe(ServerNode, Devil, -5.0);
+        }
+        assert!(b.get(Socket, Sheep) <= 10.0);
+        assert!(b.get(ServerNode, Devil) >= 1.0);
+    }
+
+    #[test]
+    fn learning_can_reorder_levels() {
+        let mut b = BenefitMatrix::new(0.8);
+        // Rabbits empirically gain most from their own socket here.
+        for _ in 0..5 {
+            b.observe(Socket, Rabbit, 1.0);
+            b.observe(ServerNode, Rabbit, 0.0);
+        }
+        assert_eq!(b.ranked_levels(Rabbit)[0], Socket);
+    }
+
+    #[test]
+    fn table_rendering_contains_levels() {
+        let s = BenefitMatrix::default().to_table().render();
+        assert!(s.contains("Socket"));
+        assert!(s.contains("Numa Node"));
+        assert!(s.contains("Server Node"));
+    }
+}

@@ -1,0 +1,417 @@
+//! Slot accounting and candidate-placement generation for Algorithm 1.
+//!
+//! The paper's constraints (§4.1): no core overbooking (0–1 vCPUs per
+//! schedulable CPU), slice a VM over as few servers as possible, and avoid
+//! co-locating incompatible animal classes (Table 3).  Candidates are
+//! *proximity fills*: pick an anchor node, walk outward in SLIT-distance
+//! order, and take free CPUs until the VM fits.
+
+use crate::topology::{CpuId, NodeId, Topology};
+use crate::vm::VmState;
+use crate::workload::classes::{compatible, AnimalClass};
+
+/// Free/busy state of every schedulable CPU.
+#[derive(Debug, Clone)]
+pub struct SlotMap {
+    free: Vec<bool>,
+    free_per_node: Vec<usize>,
+    /// Animal classes resident per node (for Table 3 filtering).
+    resident: Vec<Vec<AnimalClass>>,
+}
+
+impl SlotMap {
+    /// Build from the simulator's pinned VMs, optionally pretending `skip`
+    /// is absent (used when generating remap candidates for that VM).
+    pub fn from_sim(sim: &crate::sim::Simulator, skip: Option<crate::vm::VmId>) -> Self {
+        let topo = &sim.topo;
+        let mut free = vec![true; topo.num_cpus()];
+        let mut resident = vec![Vec::new(); topo.num_nodes()];
+        for (id, mvm) in sim.vms() {
+            if Some(*id) == skip || mvm.vm.state != VmState::Running {
+                continue;
+            }
+            let class = mvm.vm.app.profile().class;
+            for pos in mvm.vcpu_pos.iter().flatten() {
+                free[pos.0] = false;
+                let node = topo.node_of_cpu(*pos);
+                if !resident[node.0].contains(&class) {
+                    resident[node.0].push(class);
+                }
+            }
+        }
+        let mut free_per_node = vec![0usize; topo.num_nodes()];
+        for (cpu, is_free) in free.iter().enumerate() {
+            if *is_free {
+                free_per_node[topo.node_of_cpu(CpuId(cpu)).0] += 1;
+            }
+        }
+        Self { free, free_per_node, resident }
+    }
+
+    /// Empty machine of the given topology.
+    pub fn empty(topo: &Topology) -> Self {
+        Self {
+            free: vec![true; topo.num_cpus()],
+            free_per_node: vec![topo.spec.cores_per_node * topo.spec.threads_per_core;
+                                topo.num_nodes()],
+            resident: vec![Vec::new(); topo.num_nodes()],
+        }
+    }
+
+    pub fn total_free(&self) -> usize {
+        self.free_per_node.iter().sum()
+    }
+
+    pub fn free_in_node(&self, topo: &Topology, node: NodeId) -> Vec<CpuId> {
+        topo.cores_of_node(node)
+            .flat_map(|c| topo.cpus_of_core(c).collect::<Vec<_>>())
+            .filter(|cpu| self.free[cpu.0])
+            .collect()
+    }
+
+    pub fn free_count(&self, node: NodeId) -> usize {
+        self.free_per_node[node.0]
+    }
+
+    pub fn classes_on(&self, node: NodeId) -> &[AnimalClass] {
+        &self.resident[node.0]
+    }
+
+    /// Would placing `class` on `node` violate Table 3?
+    pub fn node_compatible(&self, node: NodeId, class: AnimalClass) -> bool {
+        self.resident[node.0].iter().all(|c| compatible(class, *c))
+    }
+
+    /// Mark an assignment as taken (when planning several VMs in one pass).
+    pub fn commit(&mut self, topo: &Topology, assignment: &Assignment, class: AnimalClass) {
+        for cpu in &assignment.cpus {
+            debug_assert!(self.free[cpu.0], "double booking {cpu:?}");
+            self.free[cpu.0] = false;
+            let node = topo.node_of_cpu(*cpu);
+            self.free_per_node[node.0] -= 1;
+            if !self.resident[node.0].contains(&class) {
+                self.resident[node.0].push(class);
+            }
+        }
+    }
+}
+
+/// A concrete candidate: which CPUs to pin, plus derived per-node
+/// fractions for the scorer.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Assignment {
+    pub cpus: Vec<CpuId>,
+    /// Fraction of vCPUs per node (sums to 1).
+    pub fractions: Vec<f64>,
+    /// Number of distinct servers touched ("slicing", to be minimized).
+    pub servers: usize,
+    /// Anchor node the fill started from.
+    pub anchor: NodeId,
+}
+
+/// Greedy proximity fill from `anchor`: take free CPUs in SLIT-distance
+/// order until `vcpus` are found.  Honors Table 3 unless `strict` is off
+/// (scarcity fallback, §4.1 "If the system is nearing its capacity").
+pub fn proximity_fill(
+    topo: &Topology,
+    slots: &SlotMap,
+    anchor: NodeId,
+    vcpus: usize,
+    class: AnimalClass,
+    strict: bool,
+) -> Option<Assignment> {
+    proximity_fill_capped(topo, slots, anchor, vcpus, class, strict, usize::MAX)
+}
+
+/// Like [`proximity_fill`] but takes at most `max_per_node` vCPUs from any
+/// one node — how bandwidth-bound VMs (STREAM-like) are spread over enough
+/// memory controllers.
+#[allow(clippy::too_many_arguments)]
+pub fn proximity_fill_capped(
+    topo: &Topology,
+    slots: &SlotMap,
+    anchor: NodeId,
+    vcpus: usize,
+    class: AnimalClass,
+    strict: bool,
+    max_per_node: usize,
+) -> Option<Assignment> {
+    let max_per_node = max_per_node.max(1);
+    let mut cpus = Vec::with_capacity(vcpus);
+    let mut per_node = vec![0usize; topo.num_nodes()];
+    for node in topo.nodes_by_distance(anchor) {
+        if strict && !slots.node_compatible(node, class) {
+            continue;
+        }
+        for cpu in slots.free_in_node(topo, node) {
+            if per_node[node.0] >= max_per_node {
+                break;
+            }
+            cpus.push(cpu);
+            per_node[node.0] += 1;
+            if cpus.len() == vcpus {
+                let fractions: Vec<f64> =
+                    per_node.iter().map(|&c| c as f64 / vcpus as f64).collect();
+                let servers = {
+                    let mut s: Vec<usize> = cpus
+                        .iter()
+                        .map(|c| topo.server_of_node(topo.node_of_cpu(*c)).0)
+                        .collect();
+                    s.sort_unstable();
+                    s.dedup();
+                    s.len()
+                };
+                return Some(Assignment { cpus, fractions, servers, anchor });
+            }
+        }
+    }
+    None
+}
+
+/// Per-node vCPU cap that keeps a VM's bandwidth demand within each
+/// node's memory controller (∞ for compute-bound apps).
+pub fn bw_node_cap(topo: &Topology, profile: &crate::workload::AppProfile) -> usize {
+    if profile.bw_gbs_per_vcpu <= 0.0 {
+        return usize::MAX;
+    }
+    let fit = (topo.spec.mem_bw_per_node_gbs / profile.bw_gbs_per_vcpu).floor() as usize;
+    if fit == 0 {
+        1
+    } else if fit >= topo.spec.cores_per_node * topo.spec.threads_per_core {
+        usize::MAX
+    } else {
+        fit
+    }
+}
+
+/// Generate up to `max` distinct candidates for a VM of `vcpus`/`class`.
+///
+/// Anchor selection mixes the heuristics Algorithm 1 needs:
+/// * emptiest nodes first (isolation — what the benefit matrix rewards),
+/// * one anchor per server (minimize slicing / spread options),
+/// * `near` (e.g. the VM's current memory node) for least-reshuffle moves.
+///
+/// When `bw_cap` limits vCPUs per node, an additional bandwidth-spread
+/// variant of each anchor is emitted alongside the compact fill, and the
+/// scorer (whose cost model carries the bandwidth term) arbitrates.
+pub fn generate(
+    topo: &Topology,
+    slots: &SlotMap,
+    vcpus: usize,
+    class: AnimalClass,
+    near: Option<NodeId>,
+    max: usize,
+) -> Vec<Assignment> {
+    generate_with_bw(topo, slots, vcpus, class, near, max, usize::MAX)
+}
+
+/// [`generate`] with a bandwidth-derived per-node vCPU cap.
+#[allow(clippy::too_many_arguments)]
+pub fn generate_with_bw(
+    topo: &Topology,
+    slots: &SlotMap,
+    vcpus: usize,
+    class: AnimalClass,
+    near: Option<NodeId>,
+    max: usize,
+    bw_cap: usize,
+) -> Vec<Assignment> {
+    let mut anchors: Vec<NodeId> = Vec::new();
+    if let Some(n) = near {
+        anchors.push(n);
+    }
+    // Emptiest node of each server.
+    for server in 0..topo.spec.servers {
+        if let Some(best) = topo
+            .nodes_of_server(crate::topology::ServerId(server))
+            .max_by_key(|n| slots.free_count(*n))
+        {
+            anchors.push(best);
+        }
+    }
+    // Globally emptiest nodes.
+    let mut by_free: Vec<NodeId> = (0..topo.num_nodes()).map(NodeId).collect();
+    by_free.sort_by_key(|n| std::cmp::Reverse(slots.free_count(*n)));
+    anchors.extend(by_free.into_iter().take(max));
+
+    let mut seen = std::collections::HashSet::new();
+    let mut out = Vec::new();
+    for anchor in anchors {
+        if out.len() >= max {
+            break;
+        }
+        if !seen.insert(anchor.0) {
+            continue;
+        }
+        // Strict (Table 3) first; relax only if strict found nothing.
+        if let Some(a) = proximity_fill(topo, slots, anchor, vcpus, class, true) {
+            if !out.contains(&a) {
+                out.push(a);
+            }
+        }
+        // Bandwidth-spread variant for bw-heavy apps.
+        if bw_cap != usize::MAX && out.len() < max {
+            if let Some(a) =
+                proximity_fill_capped(topo, slots, anchor, vcpus, class, true, bw_cap)
+            {
+                if !out.contains(&a) {
+                    out.push(a);
+                }
+            }
+        }
+    }
+    if out.is_empty() {
+        // Scarcity fallback: ignore class compatibility.
+        for anchor in (0..topo.num_nodes()).map(NodeId) {
+            if let Some(a) = proximity_fill_capped(
+                topo, slots, anchor, vcpus, class, false,
+                if bw_cap == usize::MAX { usize::MAX } else { bw_cap },
+            )
+            .or_else(|| proximity_fill(topo, slots, anchor, vcpus, class, false))
+            {
+                out.push(a);
+                if out.len() >= max.max(1) {
+                    break;
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{SimConfig, Simulator};
+    use crate::util::testkit::{prop_assert, propcheck};
+    use crate::vm::VmType;
+    use crate::workload::App;
+
+    #[test]
+    fn fill_prefers_local_contiguous() {
+        let topo = Topology::paper();
+        let slots = SlotMap::empty(&topo);
+        let a = proximity_fill(&topo, &slots, NodeId(3), 8, AnimalClass::Sheep, true).unwrap();
+        assert_eq!(a.cpus.len(), 8);
+        // 8 slots fit entirely in node 3.
+        assert!((a.fractions[3] - 1.0).abs() < 1e-12);
+        assert_eq!(a.servers, 1);
+    }
+
+    #[test]
+    fn fill_spills_to_nearest_nodes() {
+        let topo = Topology::paper();
+        let slots = SlotMap::empty(&topo);
+        // 16 vcpus = 2 nodes; anchored at 0 should use 0 and its socket
+        // neighbour 1 (distance 16), not a remote server.
+        let a = proximity_fill(&topo, &slots, NodeId(0), 16, AnimalClass::Sheep, true).unwrap();
+        assert!((a.fractions[0] - 0.5).abs() < 1e-12);
+        assert!((a.fractions[1] - 0.5).abs() < 1e-12);
+        assert_eq!(a.servers, 1);
+    }
+
+    #[test]
+    fn huge_vm_spans_servers_minimally() {
+        let topo = Topology::paper();
+        let slots = SlotMap::empty(&topo);
+        // 72 vcpus = 9 nodes = 1.5 servers.
+        let a = proximity_fill(&topo, &slots, NodeId(0), 72, AnimalClass::Sheep, true).unwrap();
+        assert_eq!(a.cpus.len(), 72);
+        assert_eq!(a.servers, 2, "72 vcpus should slice over exactly 2 servers");
+    }
+
+    #[test]
+    fn strict_fill_avoids_incompatible_nodes() {
+        let topo = Topology::paper();
+        let mut sim = Simulator::new(topo.clone(), SimConfig::pinned(1));
+        // A devil pinned on node 0.
+        let devil = sim.create(VmType::Small, App::Fft);
+        sim.pin_all(devil, &[CpuId(0), CpuId(1), CpuId(2), CpuId(3)]).unwrap();
+        sim.place_memory(devil, &[(NodeId(0), 1.0)]).unwrap();
+        sim.start(devil).unwrap();
+        let slots = SlotMap::from_sim(&sim, None);
+        // A rabbit must not land on node 0 under strict mode.
+        let a = proximity_fill(&topo, &slots, NodeId(0), 4, AnimalClass::Rabbit, true).unwrap();
+        assert!((a.fractions[0]).abs() < 1e-12, "rabbit placed with devil: {:?}", a.fractions);
+        // Relaxed mode may use it.
+        let b = proximity_fill(&topo, &slots, NodeId(0), 4, AnimalClass::Rabbit, false).unwrap();
+        assert!(b.fractions[0] > 0.0);
+    }
+
+    #[test]
+    fn fill_fails_when_capacity_exhausted() {
+        let topo = Topology::tiny(); // 16 cpus
+        let mut slots = SlotMap::empty(&topo);
+        let a = proximity_fill(&topo, &slots, NodeId(0), 12, AnimalClass::Sheep, true).unwrap();
+        slots.commit(&topo, &a, AnimalClass::Sheep);
+        assert!(proximity_fill(&topo, &slots, NodeId(0), 8, AnimalClass::Sheep, true).is_none());
+        assert_eq!(slots.total_free(), 4);
+    }
+
+    #[test]
+    fn generate_returns_distinct_candidates() {
+        let topo = Topology::paper();
+        let slots = SlotMap::empty(&topo);
+        let cands = generate(&topo, &slots, 8, AnimalClass::Sheep, Some(NodeId(0)), 12);
+        assert!(!cands.is_empty());
+        assert!(cands.len() <= 12);
+        for c in &cands {
+            assert_eq!(c.cpus.len(), 8);
+            assert!((c.fractions.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        }
+        // near-anchor candidate is first
+        assert_eq!(cands[0].anchor, NodeId(0));
+    }
+
+    #[test]
+    fn generate_relaxes_when_strict_impossible() {
+        let topo = Topology::tiny();
+        let mut sim = Simulator::new(topo.clone(), SimConfig::pinned(2));
+        // A devil's vCPUs touch all 4 nodes (2 slots each), leaving free
+        // capacity everywhere but no devil-free node.
+        for k in 0..2 {
+            let id = sim.create(VmType::Small, App::Sor); // 4 vcpus
+            let base = k * 8;
+            let cpus: Vec<CpuId> =
+                [base, base + 1, base + 4, base + 5].map(CpuId).to_vec();
+            sim.pin_all(id, &cpus).unwrap();
+            sim.place_memory(id, &[(NodeId(k * 2), 1.0)]).unwrap();
+            sim.start(id).unwrap();
+        }
+        let slots = SlotMap::from_sim(&sim, None);
+        // No node is rabbit-compatible, but capacity exists — must relax.
+        let cands = generate(&topo, &slots, 4, AnimalClass::Rabbit, None, 4);
+        assert!(!cands.is_empty(), "scarcity fallback failed");
+    }
+
+    #[test]
+    fn commit_updates_resident_classes() {
+        let topo = Topology::paper();
+        let mut slots = SlotMap::empty(&topo);
+        let a = proximity_fill(&topo, &slots, NodeId(5), 4, AnimalClass::Devil, true).unwrap();
+        slots.commit(&topo, &a, AnimalClass::Devil);
+        assert!(!slots.node_compatible(NodeId(5), AnimalClass::Rabbit));
+        assert!(slots.node_compatible(NodeId(5), AnimalClass::Sheep));
+    }
+
+    #[test]
+    fn fractions_always_normalized_property() {
+        propcheck("fill fractions normalized", 100, |rng| {
+            let topo = Topology::paper();
+            let slots = SlotMap::empty(&topo);
+            let vcpus = rng.range(1, 96);
+            let anchor = NodeId(rng.below(topo.num_nodes()));
+            let class = *rng.choose(&AnimalClass::ALL);
+            match proximity_fill(&topo, &slots, anchor, vcpus, class, true) {
+                None => prop_assert(vcpus > topo.num_cpus(), "fill failed with capacity"),
+                Some(a) => {
+                    let sum: f64 = a.fractions.iter().sum();
+                    prop_assert(
+                        (sum - 1.0).abs() < 1e-9 && a.cpus.len() == vcpus,
+                        format!("sum {sum}, cpus {}", a.cpus.len()),
+                    )
+                }
+            }
+        });
+    }
+}

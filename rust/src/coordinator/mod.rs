@@ -1,0 +1,23 @@
+//! The L3 coordinator — the paper's contribution (Algorithm 1).
+//!
+//! * [`mapper::SmMapper`] — the online mapping algorithm: arrival
+//!   placement, counter monitoring, affected-set remapping, whole-system
+//!   reshuffle.  Variants SM-IPC / SM-MPI via [`mapper::Metric`].
+//! * [`candidates`] — slot accounting + proximity-fill candidate
+//!   generation under the paper's constraints (no overbooking, minimal
+//!   slicing, Table 3 class compatibility).
+//! * [`benefit`] — the dynamically learned benefit matrix (Table 4).
+//!
+//! Candidate scoring runs on the AOT-compiled JAX/Pallas artifacts through
+//! PJRT ([`crate::runtime::Scorer`]); a native Rust scorer is the
+//! artifact-free fallback.
+
+pub mod admission;
+pub mod benefit;
+pub mod candidates;
+pub mod mapper;
+
+pub use admission::{AdmissionConfig, AdmissionController, Decision};
+pub use benefit::BenefitMatrix;
+pub use candidates::{Assignment, SlotMap};
+pub use mapper::{classify_isolation, IntervalReport, MapperConfig, MapperStats, Metric, SmMapper};

@@ -1,0 +1,490 @@
+//! One runner per paper table/figure.  Every function returns rendered
+//! text plus the structured tables (for CSV export); `mod.rs` dispatches
+//! by experiment id.
+
+use anyhow::Result;
+
+use super::harness::{run_all, run_cluster, Algorithm};
+use super::studies;
+use super::ExpOptions;
+use crate::metrics::across_run_cov;
+use crate::coordinator::{MapperConfig, Metric};
+use crate::topology::{distance, Topology};
+use crate::util::rng::Rng;
+use crate::util::table::{bar_chart, Table};
+use crate::vm::VmType;
+use crate::workload::classes::{compatible, AnimalClass};
+use crate::workload::{trace, App};
+
+pub struct Output {
+    pub text: String,
+    pub tables: Vec<(String, Table)>,
+}
+
+impl Output {
+    fn from_tables(tables: Vec<(String, Table)>) -> Output {
+        let text = tables.iter().map(|(_, t)| t.render()).collect::<Vec<_>>().join("\n");
+        Output { text, tables }
+    }
+}
+
+// ---------------------------------------------------------------- tables --
+
+/// Table 1: hardware information.
+pub fn t1(_o: &ExpOptions) -> Result<Output> {
+    let topo = Topology::paper();
+    let mut t = Table::new("Table 1: Hardware information").header(&["Property", "Value"]);
+    for (k, v) in topo.summary() {
+        t.row(vec![k, v]);
+    }
+    Ok(Output::from_tables(vec![("t1".into(), t)]))
+}
+
+/// Table 2: applications and animal classes.
+pub fn t2(_o: &ExpOptions) -> Result<Output> {
+    let mut t = Table::new("Table 2: Applications").header(&["", "Type", "Class", "Sensitivity"]);
+    for app in App::ALL {
+        let p = app.profile();
+        t.row(vec![
+            app.name().into(),
+            app.kind().into(),
+            p.class.name().into(),
+            format!("{:?}", p.sensitivity),
+        ]);
+    }
+    Ok(Output::from_tables(vec![("t2".into(), t)]))
+}
+
+/// Table 3: class compatibility matrix.
+pub fn t3(_o: &ExpOptions) -> Result<Output> {
+    let mut t =
+        Table::new("Table 3: Class matrix (X = may co-locate)").header(&["", "Sheep", "Rabbit", "Devil"]);
+    for a in AnimalClass::ALL {
+        let row: Vec<String> = AnimalClass::ALL
+            .iter()
+            .map(|b| if compatible(a, *b) { "X".into() } else { "-".into() })
+            .collect();
+        t.row(std::iter::once(a.name().to_string()).chain(row).collect());
+    }
+    Ok(Output::from_tables(vec![("t3".into(), t)]))
+}
+
+/// Table 4: benefit matrix — initial values plus a learned copy after a
+/// short SM-IPC cluster run (§4.1: updated dynamically at runtime).
+pub fn t4(o: &ExpOptions) -> Result<Output> {
+    let initial = crate::coordinator::BenefitMatrix::default().to_table();
+    let mut rng = Rng::new(o.seed);
+    let arrivals = trace::paper_mix(&mut rng);
+    let res = run_cluster(Algorithm::SmIpc, &arrivals, &o.harness())?;
+    let learned = res.benefit.expect("SM run has benefit matrix").to_table();
+    let text = format!(
+        "{}\nAfter one run ({} remaps observed):\n{}",
+        initial.render(),
+        res.mapper_stats.unwrap().remaps,
+        learned.render()
+    );
+    Ok(Output { text, tables: vec![("t4_initial".into(), initial), ("t4_learned".into(), learned)] })
+}
+
+/// Table 5: VM types.
+pub fn t5(_o: &ExpOptions) -> Result<Output> {
+    let mut t =
+        Table::new("Table 5: VM types").header(&["VM Type", "Number of Cores", "Memory (GB)"]);
+    for vt in VmType::ALL {
+        let s = vt.spec();
+        t.row(vec![vt.name().into(), s.vcpus.to_string(), format!("{:.0}", s.mem_gb)]);
+    }
+    Ok(Output::from_tables(vec![("t5".into(), t)]))
+}
+
+// --------------------------------------------------------------- figures --
+
+/// Fig. 2: latencies in the memory hierarchy.
+pub fn f2(_o: &ExpOptions) -> Result<Output> {
+    let mut t = Table::new("Fig 2: Memory-hierarchy latencies").header(&["Level", "Latency (ns)"]);
+    let mut chart = Vec::new();
+    for (name, ns) in distance::latency_hierarchy() {
+        t.row(vec![name.into(), format!("{ns:.1}")]);
+        chart.push((name.to_string(), ns));
+    }
+    let text = format!("{}\n{}", t.render(), bar_chart("latency (ns, log-ish scale)", &chart, 50));
+    Ok(Output { text, tables: vec![("f2".into(), t)] })
+}
+
+/// Fig. 3: the 2-D torus topology (hop matrix).
+pub fn f3(_o: &ExpOptions) -> Result<Output> {
+    let topo = Topology::paper();
+    let mut t = Table::new("Fig 3: Torus hop counts between servers")
+        .header(&["", "S0", "S1", "S2", "S3", "S4", "S5"]);
+    for a in 0..topo.spec.servers {
+        let row: Vec<String> = (0..topo.spec.servers)
+            .map(|b| {
+                topo.server_hops(crate::topology::ServerId(a), crate::topology::ServerId(b))
+                    .to_string()
+            })
+            .collect();
+        t.row(std::iter::once(format!("S{a}")).chain(row).collect());
+    }
+    Ok(Output::from_tables(vec![("f3".into(), t)]))
+}
+
+/// Figs. 4–10: co-location study for each Table 2 app.
+pub fn f4_10(o: &ExpOptions) -> Result<Output> {
+    let apps = [App::Neo4j, App::Sockshop, App::Derby, App::Fft, App::Sor, App::Mpegaudio,
+                App::Sunflow];
+    let mut tables = Vec::new();
+    let mut text = String::new();
+    for (i, app) in apps.iter().enumerate() {
+        let rows = studies::colocation_study(*app, o.seed, o.ticks, o.repeats)?;
+        let mut t = Table::new(format!("Fig {}: {} co-location (relative to solo)", i + 4, app))
+            .header(&["co-runner", "rel IPC", "rel MPI", "rel perf"]);
+        for r in &rows {
+            t.row_f(r.co_runner.name(), &[r.rel_ipc, r.rel_mpi, r.rel_perf], 3);
+        }
+        text.push_str(&t.render());
+        text.push('\n');
+        tables.push((format!("f{}_{}", i + 4, app.name().to_lowercase()), t));
+    }
+    Ok(Output { text, tables })
+}
+
+/// Fig. 11: NUMA-distance impact on mpegaudio.
+pub fn f11(o: &ExpOptions) -> Result<Output> {
+    let rows = studies::distance_study(App::Mpegaudio, o.seed, o.ticks)?;
+    let mut t = Table::new("Fig 11: mpegaudio vs NUMA distance")
+        .header(&["node pair", "SLIT distance", "relative performance"]);
+    let mut chart = Vec::new();
+    for r in &rows {
+        t.row(vec![r.label.into(), format!("{:.0}", r.distance), format!("{:.3}", r.rel_perf)]);
+        chart.push((r.label.to_string(), r.rel_perf));
+    }
+    let text = format!("{}\n{}", t.render(), bar_chart("relative performance", &chart, 40));
+    Ok(Output { text, tables: vec![("f11".into(), t)] })
+}
+
+/// Render one huge-VM core map as an ASCII grid (Figs. 12–13).
+fn core_map_text(res: &super::harness::ClusterResult, topo: &Topology) -> String {
+    // Find the huge Neo4j VM.
+    let huge = res
+        .summaries
+        .iter()
+        .find(|s| s.vm_type == VmType::Huge && s.app == App::Neo4j)
+        .map(|s| s.id);
+    let Some(huge) = huge else { return "no huge VM in run".into() };
+    let mut out = format!("Huge VM ({huge}) core map under {} — '#' = this VM, 'o' = others, '!' = overbooked, '.' = idle\n", res.algorithm.name());
+    for server in 0..topo.spec.servers {
+        out.push_str(&format!("server {server}: "));
+        for node in topo.nodes_of_server(crate::topology::ServerId(server)) {
+            for core in topo.cores_of_node(node) {
+                let vms = &res.core_map[core.0];
+                let c = if vms.len() > 2 {
+                    '!'
+                } else if vms.contains(&huge) {
+                    '#'
+                } else if !vms.is_empty() {
+                    'o'
+                } else {
+                    '.'
+                };
+                out.push(c);
+            }
+            out.push(' ');
+        }
+        out.push('\n');
+    }
+    let slices: std::collections::BTreeSet<usize> = res.core_map
+        .iter()
+        .enumerate()
+        .filter(|(_, vms)| vms.contains(&huge))
+        .map(|(core, _)| topo.server_of_node(topo.node_of_core(crate::topology::CoreId(core))).0)
+        .collect();
+    out.push_str(&format!("servers used by huge VM: {slices:?}\n"));
+    out
+}
+
+/// Fig. 12: huge-VM core map under vanilla.
+pub fn f12(o: &ExpOptions) -> Result<Output> {
+    let topo = Topology::paper();
+    let mut rng = Rng::new(o.seed);
+    let arrivals = trace::paper_mix(&mut rng);
+    let res = run_cluster(Algorithm::Vanilla, &arrivals, &o.harness())?;
+    Ok(Output { text: core_map_text(&res, &topo), tables: vec![] })
+}
+
+/// Fig. 13: huge-VM core map under the shared-memory algorithm.
+pub fn f13(o: &ExpOptions) -> Result<Output> {
+    let topo = Topology::paper();
+    let mut rng = Rng::new(o.seed);
+    let arrivals = trace::paper_mix(&mut rng);
+    let res = run_cluster(Algorithm::SmIpc, &arrivals, &o.harness())?;
+    Ok(Output { text: core_map_text(&res, &topo), tables: vec![] })
+}
+
+/// Figs. 14–16: per-application relative performance under the three
+/// algorithms, plus the headline improvement factors (§5.3.2).
+pub fn f14_16(o: &ExpOptions) -> Result<Output> {
+    let mut per_alg: Vec<(Algorithm, Vec<(App, f64, f64, f64)>)> = Vec::new();
+    for alg in Algorithm::ALL {
+        // Average over repeats (seeds) as the paper averages 3 runs.
+        let mut acc: std::collections::BTreeMap<&str, (App, Vec<f64>, Vec<f64>, Vec<f64>)> =
+            Default::default();
+        for r in 0..o.repeats {
+            let mut rng = Rng::new(o.seed + r);
+            let arrivals = trace::paper_mix(&mut rng);
+            let mut cfg = o.harness();
+            cfg.seed = o.seed + r;
+            let res = run_cluster(alg, &arrivals, &cfg)?;
+            for app in App::ALL {
+                // §5.3.2: medium VMs for all apps except Neo4j (huge) and
+                // Sockshop (small).
+                let vt = match app {
+                    App::Neo4j => VmType::Huge,
+                    App::Sockshop => VmType::Small,
+                    _ => VmType::Medium,
+                };
+                let pick = |f: &dyn Fn(&crate::metrics::VmSummary) -> f64| {
+                    res.collector
+                        .mean_by_app_and_type(app, vt, f)
+                        .or_else(|| res.collector.mean_by_app(app, f))
+                };
+                if let Some(rel) = pick(&|s| s.mean_rel_perf) {
+                    let ipc = pick(&|s| s.mean_ipc).unwrap();
+                    let mpi = pick(&|s| s.mean_mpi).unwrap();
+                    let e = acc.entry(app.name()).or_insert_with(|| {
+                        (app, Vec::new(), Vec::new(), Vec::new())
+                    });
+                    e.1.push(rel);
+                    e.2.push(ipc);
+                    e.3.push(mpi);
+                }
+            }
+        }
+        let rows = acc
+            .into_values()
+            .map(|(app, rel, ipc, mpi)| {
+                (
+                    app,
+                    crate::util::stats::mean(&rel),
+                    crate::util::stats::mean(&ipc),
+                    crate::util::stats::mean(&mpi),
+                )
+            })
+            .collect();
+        per_alg.push((alg, rows));
+    }
+
+    let mut tables = Vec::new();
+    let mut text = String::new();
+    for (i, (alg, rows)) in per_alg.iter().enumerate() {
+        let mut t = Table::new(format!(
+            "Fig {}: relative performance under {}",
+            14 + i,
+            alg.name()
+        ))
+        .header(&["app", "rel perf", "IPC", "MPI"]);
+        for (app, rel, ipc, mpi) in rows {
+            t.row_f(app.name(), &[*rel, *ipc, *mpi], 4);
+        }
+        text.push_str(&t.render());
+        text.push('\n');
+        tables.push((format!("f{}", 14 + i), t));
+    }
+
+    // Headline: SM-over-vanilla improvement factors per app.
+    let vanilla = &per_alg[0].1;
+    let mut t = Table::new("Improvement factor over vanilla (paper §5.3.2)")
+        .header(&["app", "SM-IPC x", "SM-MPI x"]);
+    for (app, vrel, _, _) in vanilla {
+        let f = |alg_rows: &Vec<(App, f64, f64, f64)>| {
+            alg_rows
+                .iter()
+                .find(|(a, ..)| a == app)
+                .map(|(_, rel, ..)| rel / vrel.max(1e-9))
+                .unwrap_or(f64::NAN)
+        };
+        t.row_f(app.name(), &[f(&per_alg[1].1), f(&per_alg[2].1)], 1);
+    }
+    text.push_str(&t.render());
+    tables.push(("f14_16_factors".into(), t));
+    Ok(Output { text, tables })
+}
+
+/// The Stream-by-VM-size trace behind Figs. 17–19.
+pub fn stream_size_trace() -> Vec<trace::Arrival> {
+    let mut arrivals = vec![
+        trace::Arrival { at_tick: 0, vm_type: VmType::Huge, app: App::Stream },
+        trace::Arrival { at_tick: 2, vm_type: VmType::Large, app: App::Stream },
+        trace::Arrival { at_tick: 4, vm_type: VmType::Medium, app: App::Stream },
+        trace::Arrival { at_tick: 6, vm_type: VmType::Small, app: App::Stream },
+    ];
+    // Background sheep load, as in the cluster experiments.
+    for i in 0..8 {
+        arrivals.push(trace::Arrival {
+            at_tick: 8 + i,
+            vm_type: if i < 6 { VmType::Small } else { VmType::Medium },
+            app: if i % 2 == 0 { App::Sockshop } else { App::Derby },
+        });
+    }
+    arrivals
+}
+
+/// Figs. 17–19: Stream relative performance by VM size per algorithm.
+pub fn f17_19(o: &ExpOptions) -> Result<Output> {
+    let arrivals = stream_size_trace();
+    let results = run_all(&arrivals, &o.harness())?;
+    let mut tables = Vec::new();
+    let mut text = String::new();
+    let mut vanilla_by_size: Vec<(VmType, f64)> = Vec::new();
+    for (i, res) in results.iter().enumerate() {
+        let mut t = Table::new(format!(
+            "Fig {}: Stream relative performance by VM size under {}",
+            17 + i,
+            res.algorithm.name()
+        ))
+        .header(&["VM size", "rel perf", "IPC", "MPI"]);
+        for vt in VmType::ALL {
+            let stream_only = |f: &dyn Fn(&crate::metrics::VmSummary) -> f64| {
+                let vals: Vec<f64> = res
+                    .summaries
+                    .iter()
+                    .filter(|s| s.vm_type == vt && s.app == App::Stream)
+                    .map(|s| f(s))
+                    .collect();
+                crate::util::stats::mean(&vals)
+            };
+            let rel = stream_only(&|s| s.mean_rel_perf);
+            if res.algorithm == Algorithm::Vanilla {
+                vanilla_by_size.push((vt, rel));
+            }
+            t.row_f(vt.name(), &[rel, stream_only(&|s| s.mean_ipc), stream_only(&|s| s.mean_mpi)], 4);
+        }
+        text.push_str(&t.render());
+        text.push('\n');
+        tables.push((format!("f{}", 17 + i), t));
+    }
+    // Improvement factors by size (paper: 48x, 105x, 41x, 2x shaped).
+    let mut t = Table::new("Stream improvement factor over vanilla by size")
+        .header(&["VM size", "SM-IPC x", "SM-MPI x"]);
+    for (vt, vrel) in &vanilla_by_size {
+        let f = |res: &super::harness::ClusterResult| {
+            let vals: Vec<f64> = res
+                .summaries
+                .iter()
+                .filter(|s| s.vm_type == *vt && s.app == App::Stream)
+                .map(|s| s.mean_rel_perf)
+                .collect();
+            crate::util::stats::mean(&vals) / vrel.max(1e-9)
+        };
+        t.row_f(vt.name(), &[f(&results[1]), f(&results[2])], 1);
+    }
+    text.push_str(&t.render());
+    tables.push(("f17_19_factors".into(), t));
+    Ok(Output { text, tables })
+}
+
+/// §5.3.2/5.3.3 variability: std/mean of per-app performance across
+/// repeated runs (> 0.4 vanilla, < 0.04 SM in the paper).
+pub fn var(o: &ExpOptions) -> Result<Output> {
+    let repeats = o.repeats.max(3);
+    let mut tables = Vec::new();
+    let mut text = String::new();
+    let mut t = Table::new("Across-run variability (std/mean of app performance)")
+        .header(&["app", "vanilla", "SM-IPC", "SM-MPI"]);
+    let mut per_alg: Vec<Vec<(App, f64)>> = Vec::new();
+    for alg in Algorithm::ALL {
+        let mut runs = Vec::new();
+        for r in 0..repeats {
+            let mut rng = Rng::new(o.seed + 100 + r);
+            let arrivals = trace::paper_mix(&mut rng);
+            let mut cfg = o.harness();
+            cfg.seed = o.seed + 100 + r;
+            let res = run_cluster(alg, &arrivals, &cfg)?;
+            // Use load-normalized performance so interactive apps' random
+            // load phases don't masquerade as placement variability.
+            let means: Vec<(App, f64)> = App::ALL
+                .iter()
+                .filter_map(|app| {
+                    res.collector.mean_by_app(*app, |s| s.mean_rel_perf).map(|m| (*app, m))
+                })
+                .collect();
+            runs.push(means);
+        }
+        per_alg.push(across_run_cov(&runs));
+    }
+    for app in App::ALL {
+        let get = |i: usize| {
+            per_alg[i]
+                .iter()
+                .find(|(a, _)| *a == app)
+                .map(|(_, c)| *c)
+                .unwrap_or(f64::NAN)
+        };
+        t.row_f(app.name(), &[get(0), get(1), get(2)], 3);
+    }
+    text.push_str(&t.render());
+    tables.push(("var".into(), t));
+    Ok(Output { text, tables })
+}
+
+/// Ablations over the DESIGN.md §Design-choices list.
+pub fn abl(o: &ExpOptions) -> Result<Output> {
+    let mut rng = Rng::new(o.seed);
+    let arrivals = trace::paper_mix(&mut rng);
+    let mut text = String::new();
+    let mut tables = Vec::new();
+
+    let run_with = |mcfg: MapperConfig, seed: u64| -> Result<(f64, u64)> {
+        let mut cfg = o.harness();
+        cfg.seed = seed;
+        cfg.mapper = Some(mcfg);
+        let res = run_cluster(Algorithm::SmIpc, &arrivals, &cfg)?;
+        let rel: Vec<f64> = res.summaries.iter().map(|s| s.mean_rel_perf).collect();
+        Ok((crate::util::stats::mean(&rel), res.mapper_stats.unwrap().remaps))
+    };
+
+    // 1. Benefit learning on/off.
+    let mut t = Table::new("Ablation: benefit-matrix learning")
+        .header(&["variant", "mean rel perf", "remaps"]);
+    for (name, learn) in [("learning on", true), ("learning off", false)] {
+        let mcfg = MapperConfig { learn_benefit: learn, ..MapperConfig::new(Metric::Ipc) };
+        let (rel, remaps) = run_with(mcfg, o.seed)?;
+        t.row(vec![name.into(), format!("{rel:.4}"), remaps.to_string()]);
+    }
+    text.push_str(&t.render());
+    tables.push(("abl_benefit".into(), t));
+
+    // 2. Threshold T sweep.
+    let mut t = Table::new("Ablation: deviation threshold T")
+        .header(&["T", "mean rel perf", "remaps"]);
+    for thr in [0.05, 0.15, 0.30, 0.50] {
+        let mcfg = MapperConfig { threshold: thr, ..MapperConfig::new(Metric::Ipc) };
+        let (rel, remaps) = run_with(mcfg, o.seed)?;
+        t.row(vec![format!("{thr:.2}"), format!("{rel:.4}"), remaps.to_string()]);
+    }
+    text.push_str(&t.render());
+    tables.push(("abl_threshold".into(), t));
+
+    // 3. Candidate batch width.
+    let mut t = Table::new("Ablation: candidate batch width")
+        .header(&["batch", "mean rel perf", "remaps"]);
+    for cap in [4usize, 8, 24] {
+        let mcfg = MapperConfig { batch_cap: cap, ..MapperConfig::new(Metric::Ipc) };
+        let (rel, remaps) = run_with(mcfg, o.seed)?;
+        t.row(vec![cap.to_string(), format!("{rel:.4}"), remaps.to_string()]);
+    }
+    text.push_str(&t.render());
+    tables.push(("abl_batch".into(), t));
+
+    // 4. Memory-follows-cores on/off (the paper's future-work extension).
+    let mut t = Table::new("Ablation: memory follows cores")
+        .header(&["variant", "mean rel perf", "remaps"]);
+    for (name, follows) in [("memory follows", true), ("memory stays", false)] {
+        let mcfg = MapperConfig { memory_follows: follows, ..MapperConfig::new(Metric::Ipc) };
+        let (rel, remaps) = run_with(mcfg, o.seed)?;
+        t.row(vec![name.into(), format!("{rel:.4}"), remaps.to_string()]);
+    }
+    text.push_str(&t.render());
+    tables.push(("abl_memory".into(), t));
+
+    Ok(Output { text, tables })
+}

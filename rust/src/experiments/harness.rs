@@ -1,0 +1,231 @@
+//! Cluster experiment harness: replays an arrival trace under one of the
+//! three evaluated algorithms and collects per-VM counters — the engine
+//! behind Figs. 12–19 and the variability analysis.
+
+use anyhow::Result;
+
+use crate::coordinator::{MapperConfig, Metric, SmMapper};
+use crate::metrics::{Collector, VmSummary};
+use crate::runtime::Scorer;
+use crate::sim::{SimConfig, Simulator};
+use crate::topology::Topology;
+use crate::workload::trace::Arrival;
+
+/// The three algorithms of §5.3.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Algorithm {
+    Vanilla,
+    SmIpc,
+    SmMpi,
+}
+
+impl Algorithm {
+    pub const ALL: [Algorithm; 3] = [Algorithm::Vanilla, Algorithm::SmIpc, Algorithm::SmMpi];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Algorithm::Vanilla => "vanilla",
+            Algorithm::SmIpc => "SM-IPC",
+            Algorithm::SmMpi => "SM-MPI",
+        }
+    }
+
+    pub fn metric(self) -> Option<Metric> {
+        match self {
+            Algorithm::Vanilla => None,
+            Algorithm::SmIpc => Some(Metric::Ipc),
+            Algorithm::SmMpi => Some(Metric::Mpi),
+        }
+    }
+}
+
+/// Which scorer backend the SM variants use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScorerChoice {
+    /// PJRT if artifacts exist, else native (the default).
+    Auto,
+    /// Force the pure-Rust scorer (fast unit tests, ablations).
+    Native,
+}
+
+impl ScorerChoice {
+    fn build(self) -> Scorer {
+        match self {
+            ScorerChoice::Auto => Scorer::auto(),
+            ScorerChoice::Native => Scorer::Native,
+        }
+    }
+}
+
+/// Harness configuration.
+#[derive(Debug, Clone)]
+pub struct HarnessConfig {
+    pub seed: u64,
+    /// Ticks to run after the last arrival before measuring.
+    pub warmup: u64,
+    /// Measurement window length in ticks.
+    pub measure: u64,
+    pub scorer: ScorerChoice,
+    /// Override of the mapper config (threshold, metric is set per run).
+    pub mapper: Option<MapperConfig>,
+}
+
+impl HarnessConfig {
+    pub fn new(seed: u64) -> Self {
+        Self { seed, warmup: 30, measure: 60, scorer: ScorerChoice::Auto, mapper: None }
+    }
+
+    pub fn fast(seed: u64) -> Self {
+        Self { warmup: 10, measure: 25, scorer: ScorerChoice::Native, ..Self::new(seed) }
+    }
+}
+
+/// Result of one cluster run.
+pub struct ClusterResult {
+    pub algorithm: Algorithm,
+    pub summaries: Vec<VmSummary>,
+    pub collector: Collector,
+    pub mapper_stats: Option<crate::coordinator::MapperStats>,
+    pub benefit: Option<crate::coordinator::BenefitMatrix>,
+    /// Core occupancy snapshot at the end (Figs. 12–13).
+    pub core_map: Vec<Vec<crate::vm::VmId>>,
+    pub sim_seed: u64,
+}
+
+/// Run one cluster experiment.
+pub fn run_cluster(
+    alg: Algorithm,
+    arrivals: &[Arrival],
+    cfg: &HarnessConfig,
+) -> Result<ClusterResult> {
+    let topo = Topology::paper();
+    let sim_cfg = match alg {
+        Algorithm::Vanilla => SimConfig::vanilla(cfg.seed),
+        _ => SimConfig::pinned(cfg.seed),
+    };
+    let mut sim = Simulator::new(topo, sim_cfg);
+    let mut mapper = alg.metric().map(|metric| {
+        let mcfg = cfg.mapper.clone().unwrap_or_else(|| MapperConfig::new(metric));
+        let mcfg = MapperConfig { metric, ..mcfg };
+        SmMapper::new(mcfg, cfg.scorer.build())
+    });
+
+    let mut collector = Collector::new();
+    let last_arrival = arrivals.iter().map(|a| a.at_tick).max().unwrap_or(0);
+    let measure_from = last_arrival + cfg.warmup;
+    let total = measure_from + cfg.measure;
+
+    let mut pending = arrivals.to_vec();
+    let mut t = 0u64;
+    while t < total {
+        // Admit arrivals scheduled for this tick.
+        while let Some(next) = pending.first().copied() {
+            if next.at_tick > t {
+                break;
+            }
+            pending.remove(0);
+            let id = sim.create(next.vm_type, next.app);
+            collector.register(id, next.app, next.vm_type);
+            if let Some(m) = mapper.as_mut() {
+                m.place_arrival(&mut sim, id)?;
+            }
+            sim.start(id)?;
+        }
+
+        let samples = sim.step();
+        if t >= measure_from {
+            for (id, s) in &samples {
+                collector.record(*id, s);
+            }
+        }
+        if let Some(m) = mapper.as_mut() {
+            if t % m.cfg.interval == 0 {
+                m.interval(&mut sim)?;
+            }
+        }
+        t += 1;
+    }
+
+    let core_map = sim.core_map();
+    let (mapper_stats, benefit) = match mapper {
+        Some(m) => (Some(m.stats.clone()), Some(m.benefit.clone())),
+        None => (None, None),
+    };
+    Ok(ClusterResult {
+        algorithm: alg,
+        summaries: collector.summaries(),
+        collector,
+        mapper_stats,
+        benefit,
+        core_map,
+        sim_seed: cfg.seed,
+    })
+}
+
+/// Run the same trace under all three algorithms.
+pub fn run_all(arrivals: &[Arrival], cfg: &HarnessConfig) -> Result<Vec<ClusterResult>> {
+    Algorithm::ALL.iter().map(|alg| run_cluster(*alg, arrivals, cfg)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use crate::vm::VmType;
+    use crate::workload::{trace, App};
+
+    fn tiny_trace() -> Vec<Arrival> {
+        vec![
+            Arrival { at_tick: 0, vm_type: VmType::Medium, app: App::Stream },
+            Arrival { at_tick: 1, vm_type: VmType::Medium, app: App::Mpegaudio },
+            Arrival { at_tick: 2, vm_type: VmType::Small, app: App::Sockshop },
+        ]
+    }
+
+    #[test]
+    fn vanilla_run_completes_and_collects() {
+        let res =
+            run_cluster(Algorithm::Vanilla, &tiny_trace(), &HarnessConfig::fast(1)).unwrap();
+        assert_eq!(res.summaries.len(), 3);
+        assert!(res.mapper_stats.is_none());
+        for s in &res.summaries {
+            assert!(s.mean_perf > 0.0, "{:?}", s.app);
+        }
+    }
+
+    #[test]
+    fn sm_run_beats_vanilla_on_stream() {
+        let cfg = HarnessConfig::fast(2);
+        let v = run_cluster(Algorithm::Vanilla, &tiny_trace(), &cfg).unwrap();
+        let s = run_cluster(Algorithm::SmIpc, &tiny_trace(), &cfg).unwrap();
+        let vrel = v.collector.mean_by_app(App::Stream, |x| x.mean_rel_perf).unwrap();
+        let srel = s.collector.mean_by_app(App::Stream, |x| x.mean_rel_perf).unwrap();
+        assert!(
+            srel > vrel * 1.5,
+            "SM-IPC ({srel:.3}) must clearly beat vanilla ({vrel:.3}) on Stream"
+        );
+        assert!(s.mapper_stats.unwrap().arrivals == 3);
+    }
+
+    #[test]
+    fn sm_never_overbooks_on_paper_mix() {
+        let mut rng = Rng::new(3);
+        let arrivals = trace::paper_mix(&mut rng);
+        let res =
+            run_cluster(Algorithm::SmIpc, &arrivals, &HarnessConfig::fast(3)).unwrap();
+        // Core map: at most 2 VM-slots per core (2 hw threads, 1 vCPU each).
+        for (core, vms) in res.core_map.iter().enumerate() {
+            assert!(vms.len() <= 2, "core {core} hosts {vms:?}");
+        }
+        assert_eq!(res.summaries.len(), 20);
+    }
+
+    #[test]
+    fn same_seed_reproduces_vanilla_exactly() {
+        let a = run_cluster(Algorithm::Vanilla, &tiny_trace(), &HarnessConfig::fast(7)).unwrap();
+        let b = run_cluster(Algorithm::Vanilla, &tiny_trace(), &HarnessConfig::fast(7)).unwrap();
+        for (x, y) in a.summaries.iter().zip(b.summaries.iter()) {
+            assert_eq!(x.mean_perf, y.mean_perf);
+        }
+    }
+}

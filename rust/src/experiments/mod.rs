@@ -1,0 +1,119 @@
+//! Experiment registry: regenerates every table and figure of the paper's
+//! evaluation (see DESIGN.md per-experiment index).
+//!
+//! `dvrm experiment <id>` runs one; `dvrm experiment all` runs the lot and
+//! writes CSVs next to the textual report.
+
+pub mod figures;
+pub mod harness;
+pub mod studies;
+
+pub use harness::{run_all, run_cluster, Algorithm, ClusterResult, HarnessConfig, ScorerChoice};
+
+use anyhow::{bail, Result};
+
+/// Shared experiment options (from the CLI).
+#[derive(Debug, Clone)]
+pub struct ExpOptions {
+    pub seed: u64,
+    /// Measurement ticks for micro-studies.
+    pub ticks: u64,
+    /// Repeats ("the results are the average of the three runs").
+    pub repeats: u64,
+    /// Fast mode: smaller windows, native scorer (CI-friendly).
+    pub fast: bool,
+    pub scorer: ScorerChoice,
+}
+
+impl Default for ExpOptions {
+    fn default() -> Self {
+        Self { seed: 42, ticks: 30, repeats: 3, fast: false, scorer: ScorerChoice::Auto }
+    }
+}
+
+impl ExpOptions {
+    pub fn fast() -> Self {
+        Self { ticks: 15, repeats: 2, fast: true, scorer: ScorerChoice::Native, ..Self::default() }
+    }
+
+    /// Harness config derived from these options.
+    pub fn harness(&self) -> HarnessConfig {
+        let mut h =
+            if self.fast { HarnessConfig::fast(self.seed) } else { HarnessConfig::new(self.seed) };
+        h.scorer = self.scorer;
+        h
+    }
+}
+
+/// All experiment ids, in DESIGN.md order.
+pub const ALL_IDS: &[&str] = &[
+    "t1", "t2", "t3", "t4", "t5", "f2", "f3", "f4_10", "f11", "f12", "f13", "f14_16",
+    "f17_19", "var", "abl",
+];
+
+/// Run one experiment by id.
+pub fn run(id: &str, opts: &ExpOptions) -> Result<figures::Output> {
+    match id {
+        "t1" => figures::t1(opts),
+        "t2" => figures::t2(opts),
+        "t3" => figures::t3(opts),
+        "t4" => figures::t4(opts),
+        "t5" => figures::t5(opts),
+        "f2" => figures::f2(opts),
+        "f3" => figures::f3(opts),
+        "f4_10" => figures::f4_10(opts),
+        "f11" => figures::f11(opts),
+        "f12" => figures::f12(opts),
+        "f13" => figures::f13(opts),
+        "f14_16" => figures::f14_16(opts),
+        "f17_19" => figures::f17_19(opts),
+        "var" => figures::var(opts),
+        "abl" => figures::abl(opts),
+        other => bail!("unknown experiment {other:?}; known: {ALL_IDS:?}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fast() -> ExpOptions {
+        ExpOptions { ticks: 8, repeats: 1, ..ExpOptions::fast() }
+    }
+
+    #[test]
+    fn static_tables_render() {
+        for id in ["t1", "t2", "t3", "t5", "f2", "f3"] {
+            let out = run(id, &fast()).unwrap();
+            assert!(!out.text.is_empty(), "{id} empty");
+        }
+    }
+
+    #[test]
+    fn table1_contains_288_cpus() {
+        let out = run("t1", &fast()).unwrap();
+        assert!(out.text.contains("288"));
+        assert!(out.text.contains("36"));
+    }
+
+    #[test]
+    fn table3_matches_paper_layout() {
+        let out = run("t3", &fast()).unwrap();
+        assert!(out.text.contains("Rabbit"));
+        // Rabbit row: X - -
+        let rabbit_line =
+            out.text.lines().find(|l| l.starts_with("Rabbit")).unwrap().to_string();
+        assert!(rabbit_line.contains('X') && rabbit_line.contains('-'));
+    }
+
+    #[test]
+    fn unknown_id_is_error() {
+        assert!(run("f99", &fast()).is_err());
+    }
+
+    #[test]
+    fn fig11_runs_fast() {
+        let out = run("f11", &fast()).unwrap();
+        assert!(out.text.contains("2 hops"));
+    }
+}

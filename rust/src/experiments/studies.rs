@@ -1,0 +1,178 @@
+//! Controlled micro-studies (paper §3): the co-location interference study
+//! behind Figs. 4–10 and the NUMA-distance study behind Fig. 11.
+
+use anyhow::Result;
+
+use crate::sim::{SimConfig, Simulator};
+use crate::topology::{CpuId, NodeId, Topology};
+use crate::util::stats;
+use crate::vm::VmType;
+use crate::workload::App;
+
+/// Outcome of one measurement: mean IPC / MPI / throughput.
+#[derive(Debug, Clone, Copy)]
+pub struct Measured {
+    pub ipc: f64,
+    pub mpi: f64,
+    pub perf: f64,
+}
+
+fn measure(sim: &mut Simulator, id: crate::vm::VmId, ticks: u64) -> Measured {
+    let mut ipc = Vec::new();
+    let mut mpi = Vec::new();
+    let mut perf = Vec::new();
+    for _ in 0..ticks {
+        for (vid, s) in sim.step() {
+            if vid == id {
+                ipc.push(s.ipc);
+                mpi.push(s.mpi);
+                perf.push(s.perf);
+            }
+        }
+    }
+    Measured { ipc: stats::mean(&ipc), mpi: stats::mean(&mpi), perf: stats::mean(&perf) }
+}
+
+/// Pin a 4-vCPU VM of `app` on `node`, using the slot range
+/// `[first, first+4)` of that node, memory local.
+fn pinned_small(sim: &mut Simulator, app: App, node: usize, first: usize) -> crate::vm::VmId {
+    let id = sim.create(VmType::Small, app);
+    let base = node * 8 + first;
+    let cpus: Vec<CpuId> = (base..base + 4).map(CpuId).collect();
+    sim.pin_all(id, &cpus).unwrap();
+    sim.place_memory(id, &[(NodeId(node), 1.0)]).unwrap();
+    sim.start(id).unwrap();
+    id
+}
+
+/// One row of the co-location study: `app` measured solo and next to
+/// `co_runner` on the same NUMA node (shared LLC + memory controller).
+#[derive(Debug, Clone)]
+pub struct CoLocationRow {
+    pub co_runner: App,
+    /// IPC relative to solo (1.0 = unaffected).
+    pub rel_ipc: f64,
+    /// MPI relative to solo (>1 = more misses).
+    pub rel_mpi: f64,
+    /// Throughput relative to solo.
+    pub rel_perf: f64,
+}
+
+/// The paper's §3.2 methodology: run solo, then co-locate each candidate
+/// on the same node, 3–5 repeats, report means relative to solo.
+pub fn colocation_study(app: App, seed: u64, ticks: u64, repeats: u64) -> Result<Vec<CoLocationRow>> {
+    let mut rows = Vec::new();
+    for co in App::ALL {
+        let mut rel = [Vec::new(), Vec::new(), Vec::new()];
+        for r in 0..repeats {
+            let mk = |s| Simulator::new(Topology::paper(), SimConfig::pinned(s));
+            // Solo baseline.
+            let mut sim = mk(seed + r);
+            let id = pinned_small(&mut sim, app, 0, 0);
+            let solo = measure(&mut sim, id, ticks);
+            // Co-located on the same node.
+            let mut sim = mk(seed + r);
+            let id = pinned_small(&mut sim, app, 0, 0);
+            let _co = pinned_small(&mut sim, co, 0, 4);
+            let coloc = measure(&mut sim, id, ticks);
+            rel[0].push(coloc.ipc / solo.ipc);
+            rel[1].push(coloc.mpi / solo.mpi);
+            rel[2].push(coloc.perf / solo.perf);
+        }
+        rows.push(CoLocationRow {
+            co_runner: co,
+            rel_ipc: stats::mean(&rel[0]),
+            rel_mpi: stats::mean(&rel[1]),
+            rel_perf: stats::mean(&rel[2]),
+        });
+    }
+    Ok(rows)
+}
+
+/// One point of the distance study (Fig. 11).
+#[derive(Debug, Clone)]
+pub struct DistanceRow {
+    pub label: &'static str,
+    pub distance: f64,
+    pub rel_perf: f64,
+}
+
+/// Fig. 11: the same app, same thread/node count, different node
+/// *connectivity*.  An 8-vCPU VM is split 4+4 over node 0 and a partner
+/// node at increasing SLIT distance, memory striped over both; performance
+/// is reported relative to the best-connected pair.
+pub fn distance_study(app: App, seed: u64, ticks: u64) -> Result<Vec<DistanceRow>> {
+    let topo = Topology::paper();
+    // Partner nodes: same socket (16), same server (22), 1 hop (160), 2 hops (200).
+    let partners: [(&'static str, usize); 4] =
+        [("same socket", 1), ("same server", 2), ("1 hop", 6), ("2 hops", 24)];
+    let mut out = Vec::new();
+    let mut baseline = None;
+    for (label, partner) in partners {
+        let mut sim = Simulator::new(topo.clone(), SimConfig::pinned(seed));
+        let id = sim.create(VmType::Medium, app); // 8 vCPUs
+        let mut cpus: Vec<CpuId> = (0..4).map(CpuId).collect();
+        cpus.extend((partner * 8..partner * 8 + 4).map(CpuId));
+        sim.pin_all(id, &cpus).unwrap();
+        sim.place_memory(id, &[(NodeId(0), 0.5), (NodeId(partner), 0.5)]).unwrap();
+        sim.start(id).unwrap();
+        let m = measure(&mut sim, id, ticks);
+        let base = *baseline.get_or_insert(m.perf);
+        out.push(DistanceRow {
+            label,
+            distance: topo.distance(NodeId(0), NodeId(partner)),
+            rel_perf: m.perf / base,
+        });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn devil_corunner_hurts_rabbit_most() {
+        let rows = colocation_study(App::Mpegaudio, 1, 15, 2).unwrap();
+        let by = |app: App| rows.iter().find(|r| r.co_runner == app).unwrap().rel_perf;
+        assert!(by(App::Stream) < by(App::Sockshop), "devil should hurt more than sheep");
+        assert!(by(App::Fft) < 0.9, "fft next door must cost a rabbit");
+        // MPI inflates under the devil.
+        let mpi = rows.iter().find(|r| r.co_runner == App::Stream).unwrap().rel_mpi;
+        assert!(mpi > 1.1, "rel MPI {mpi}");
+    }
+
+    #[test]
+    fn sheep_tolerate_sheep() {
+        let rows = colocation_study(App::Sockshop, 2, 15, 2).unwrap();
+        let derby = rows.iter().find(|r| r.co_runner == App::Derby).unwrap();
+        assert!(derby.rel_perf > 0.9, "sheep+sheep should be ~free: {}", derby.rel_perf);
+    }
+
+    #[test]
+    fn distance_study_monotonic_decline() {
+        let rows = distance_study(App::Mpegaudio, 3, 15).unwrap();
+        assert_eq!(rows.len(), 4);
+        assert!((rows[0].rel_perf - 1.0).abs() < 1e-9, "baseline normalizes to 1");
+        for w in rows.windows(2) {
+            assert!(
+                w[1].rel_perf <= w[0].rel_perf + 1e-9,
+                "{} ({}) should not beat {} ({})",
+                w[1].label,
+                w[1].rel_perf,
+                w[0].label,
+                w[0].rel_perf
+            );
+        }
+        // Fig. 11 magnitude: worst case costs mpegaudio up to ~17%.
+        let worst = rows.last().unwrap().rel_perf;
+        assert!(worst < 0.97 && worst > 0.75, "worst-case rel perf {worst}");
+    }
+
+    #[test]
+    fn distance_hurts_stream_much_more_than_mpegaudio() {
+        let mpeg = distance_study(App::Mpegaudio, 4, 15).unwrap();
+        let stream = distance_study(App::Stream, 4, 15).unwrap();
+        assert!(stream.last().unwrap().rel_perf < mpeg.last().unwrap().rel_perf);
+    }
+}

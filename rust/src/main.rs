@@ -1,0 +1,12 @@
+//! `dvrm` — leader entrypoint.  See `dvrm help` / `cli::usage()`.
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    match dvrm::cli::main_with(&argv) {
+        Ok(code) => std::process::exit(code),
+        Err(err) => {
+            eprintln!("error: {err:#}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -1,0 +1,216 @@
+//! Metrics collection and aggregation for the experiment harness: per-VM
+//! time series of the synthesized counters plus the summary statistics the
+//! paper reports (mean relative performance, run-to-run variability).
+
+use std::collections::BTreeMap;
+
+use crate::sim::PerfSample;
+use crate::util::stats::{self, Welford};
+use crate::vm::{VmId, VmType};
+use crate::workload::App;
+
+/// Identity + series of one VM across a measurement window.
+#[derive(Debug, Clone)]
+pub struct VmSeries {
+    pub id: VmId,
+    pub app: App,
+    pub vm_type: VmType,
+    pub rel_perf: Vec<f64>,
+    pub ipc: Vec<f64>,
+    pub mpi: Vec<f64>,
+    pub perf: Vec<f64>,
+}
+
+impl VmSeries {
+    pub fn new(id: VmId, app: App, vm_type: VmType) -> Self {
+        Self {
+            id,
+            app,
+            vm_type,
+            rel_perf: Vec::new(),
+            ipc: Vec::new(),
+            mpi: Vec::new(),
+            perf: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, s: &PerfSample) {
+        self.rel_perf.push(s.rel_perf);
+        self.ipc.push(s.ipc);
+        self.mpi.push(s.mpi);
+        self.perf.push(s.perf);
+    }
+
+    pub fn summary(&self) -> VmSummary {
+        VmSummary {
+            id: self.id,
+            app: self.app,
+            vm_type: self.vm_type,
+            mean_rel_perf: stats::mean(&self.rel_perf),
+            mean_ipc: stats::mean(&self.ipc),
+            mean_mpi: stats::mean(&self.mpi),
+            mean_perf: stats::mean(&self.perf),
+            perf_cov: stats::cov(&self.perf),
+        }
+    }
+}
+
+/// Aggregated per-VM statistics.
+#[derive(Debug, Clone, Copy)]
+pub struct VmSummary {
+    pub id: VmId,
+    pub app: App,
+    pub vm_type: VmType,
+    pub mean_rel_perf: f64,
+    pub mean_ipc: f64,
+    pub mean_mpi: f64,
+    pub mean_perf: f64,
+    /// Within-run variability (std/mean of throughput).
+    pub perf_cov: f64,
+}
+
+/// Collects samples per VM during a harness run.
+#[derive(Debug, Default)]
+pub struct Collector {
+    series: BTreeMap<VmId, VmSeries>,
+}
+
+impl Collector {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn register(&mut self, id: VmId, app: App, vm_type: VmType) {
+        self.series.entry(id).or_insert_with(|| VmSeries::new(id, app, vm_type));
+    }
+
+    pub fn record(&mut self, id: VmId, sample: &PerfSample) {
+        if let Some(s) = self.series.get_mut(&id) {
+            s.push(sample);
+        }
+    }
+
+    pub fn series(&self) -> impl Iterator<Item = &VmSeries> {
+        self.series.values()
+    }
+
+    pub fn summaries(&self) -> Vec<VmSummary> {
+        self.series.values().map(VmSeries::summary).collect()
+    }
+
+    /// Mean of `f` over all VMs running `app`.
+    pub fn mean_by_app(&self, app: App, f: impl Fn(&VmSummary) -> f64) -> Option<f64> {
+        let vals: Vec<f64> = self
+            .summaries()
+            .into_iter()
+            .filter(|s| s.app == app)
+            .map(|s| f(&s))
+            .collect();
+        if vals.is_empty() { None } else { Some(stats::mean(&vals)) }
+    }
+
+    /// Mean of `f` over VMs running `app` at a specific VM type — the
+    /// paper's Figs. 14–16 convention (medium for all apps, huge for
+    /// Neo4j, small for Sockshop).
+    pub fn mean_by_app_and_type(
+        &self,
+        app: App,
+        t: VmType,
+        f: impl Fn(&VmSummary) -> f64,
+    ) -> Option<f64> {
+        let vals: Vec<f64> = self
+            .summaries()
+            .into_iter()
+            .filter(|s| s.app == app && s.vm_type == t)
+            .map(|s| f(&s))
+            .collect();
+        if vals.is_empty() { None } else { Some(stats::mean(&vals)) }
+    }
+
+    /// Mean of `f` over all VMs of a given type.
+    pub fn mean_by_type(&self, t: VmType, f: impl Fn(&VmSummary) -> f64) -> Option<f64> {
+        let vals: Vec<f64> = self
+            .summaries()
+            .into_iter()
+            .filter(|s| s.vm_type == t)
+            .map(|s| f(&s))
+            .collect();
+        if vals.is_empty() { None } else { Some(stats::mean(&vals)) }
+    }
+}
+
+/// Across-run variability: std/mean of each app's mean throughput over
+/// repeated runs (the paper's §5.3.2 ratio: > 0.4 vanilla, < 0.04 SM).
+pub fn across_run_cov(per_run_means: &[Vec<(App, f64)>]) -> Vec<(App, f64)> {
+    let mut acc: BTreeMap<&'static str, (App, Welford)> = BTreeMap::new();
+    for run in per_run_means {
+        for (app, mean) in run {
+            acc.entry(app.name()).or_insert_with(|| (*app, Welford::new())).1.add(*mean);
+        }
+    }
+    acc.into_values().map(|(app, w)| (app, w.cov())).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::Factors;
+
+    fn sample(rel: f64) -> PerfSample {
+        PerfSample {
+            tick: 0,
+            ipc: rel,
+            mpi: 0.01,
+            perf: rel * 100.0,
+            rel_perf: rel,
+            factors: Factors::ideal(),
+        }
+    }
+
+    #[test]
+    fn collector_tracks_registered_vms_only() {
+        let mut c = Collector::new();
+        c.register(VmId(1), App::Derby, VmType::Small);
+        c.record(VmId(1), &sample(0.5));
+        c.record(VmId(2), &sample(0.9)); // unregistered: dropped
+        assert_eq!(c.summaries().len(), 1);
+        assert!((c.summaries()[0].mean_rel_perf - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mean_by_app_aggregates_across_vms() {
+        let mut c = Collector::new();
+        c.register(VmId(1), App::Stream, VmType::Small);
+        c.register(VmId(2), App::Stream, VmType::Medium);
+        c.register(VmId(3), App::Derby, VmType::Small);
+        c.record(VmId(1), &sample(0.2));
+        c.record(VmId(2), &sample(0.4));
+        c.record(VmId(3), &sample(1.0));
+        let m = c.mean_by_app(App::Stream, |s| s.mean_rel_perf).unwrap();
+        assert!((m - 0.3).abs() < 1e-12);
+        assert!(c.mean_by_app(App::Fft, |s| s.mean_rel_perf).is_none());
+    }
+
+    #[test]
+    fn mean_by_type_filters() {
+        let mut c = Collector::new();
+        c.register(VmId(1), App::Stream, VmType::Huge);
+        c.record(VmId(1), &sample(0.7));
+        assert!(c.mean_by_type(VmType::Huge, |s| s.mean_rel_perf).is_some());
+        assert!(c.mean_by_type(VmType::Small, |s| s.mean_rel_perf).is_none());
+    }
+
+    #[test]
+    fn across_run_cov_flags_variable_runs() {
+        let runs = vec![
+            vec![(App::Derby, 100.0), (App::Stream, 10.0)],
+            vec![(App::Derby, 300.0), (App::Stream, 10.0)],
+            vec![(App::Derby, 50.0), (App::Stream, 10.0)],
+        ];
+        let cov = across_run_cov(&runs);
+        let derby = cov.iter().find(|(a, _)| *a == App::Derby).unwrap().1;
+        let stream = cov.iter().find(|(a, _)| *a == App::Stream).unwrap().1;
+        assert!(derby > 0.4, "derby cov {derby}");
+        assert!(stream < 1e-9, "stream cov {stream}");
+    }
+}

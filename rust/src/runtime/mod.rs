@@ -1,0 +1,113 @@
+//! Runtime: loads the AOT-compiled JAX/Pallas artifacts (HLO text) and
+//! executes them through the PJRT CPU client from the coordinator's
+//! decision loop — plus a native Rust scorer with identical semantics used
+//! as fallback and cross-check.  See DESIGN.md (three-layer architecture).
+
+pub mod native;
+pub mod pjrt;
+pub mod problem;
+pub mod shapes;
+
+pub use pjrt::Engine;
+pub use problem::{CandidateBatch, ScoreOut, ScoreProblem, VmEntry, Weights};
+pub use shapes::Meta;
+
+/// Scorer backend: PJRT artifacts when available, native math otherwise.
+pub enum Scorer {
+    Pjrt(std::rc::Rc<Engine>),
+    Native,
+}
+
+thread_local! {
+    /// Engine loading costs ~1 s (PJRT client + XLA compilation of three
+    /// artifacts).  Experiments run many clusters per process, so the
+    /// compiled engine is cached per thread (PJRT handles are not Sync).
+    static ENGINE_CACHE: std::cell::OnceCell<Option<std::rc::Rc<Engine>>> =
+        const { std::cell::OnceCell::new() };
+}
+
+impl Scorer {
+    /// Prefer PJRT; fall back to native when artifacts are missing.  The
+    /// compiled engine is shared across all `auto()` calls on this thread.
+    pub fn auto() -> Scorer {
+        ENGINE_CACHE.with(|cell| {
+            match cell.get_or_init(|| Engine::load_default().map(std::rc::Rc::new)) {
+                Some(e) => Scorer::Pjrt(std::rc::Rc::clone(e)),
+                None => Scorer::Native,
+            }
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Scorer::Pjrt(_) => "pjrt",
+            Scorer::Native => "native",
+        }
+    }
+
+    /// Score a candidate batch.
+    pub fn score(
+        &self,
+        problem: &ScoreProblem,
+        batch: &CandidateBatch,
+    ) -> anyhow::Result<Vec<ScoreOut>> {
+        match self {
+            Scorer::Pjrt(engine) => engine.score(problem, batch),
+            Scorer::Native => Ok(native::score_batch(problem, batch)),
+        }
+    }
+
+    /// Index of the lowest-total candidate, if any.
+    pub fn argmin(
+        &self,
+        problem: &ScoreProblem,
+        batch: &CandidateBatch,
+    ) -> anyhow::Result<Option<(usize, ScoreOut)>> {
+        let scores = self.score(problem, batch)?;
+        Ok(scores
+            .into_iter()
+            .enumerate()
+            .min_by(|(_, a), (_, b)| a.total.partial_cmp(&b.total).unwrap())
+            .map(|(i, s)| (i, s)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::Topology;
+    use crate::workload::App;
+
+    #[test]
+    fn native_scorer_argmin() {
+        let topo = Topology::paper();
+        let n = topo.num_nodes();
+        let mut mem = vec![0.0; n];
+        mem[0] = 1.0;
+        let prob = ScoreProblem::build(
+            &topo,
+            &[VmEntry { profile: App::Derby.profile(), vcpus: 4, mem_fractions: mem }],
+            Weights::default(),
+            Meta::expected(),
+        )
+        .unwrap();
+        let scorer = Scorer::Native;
+        let mut b = CandidateBatch::zeroed(prob.meta, 8);
+        for node in [24usize, 0, 6] {
+            let mut p = vec![vec![0.0; 36]; 1];
+            p[0][node] = 1.0;
+            b.push(&p);
+        }
+        let (idx, _) = scorer.argmin(&prob, &b).unwrap().unwrap();
+        assert_eq!(idx, 1, "local candidate must win");
+    }
+
+    #[test]
+    fn empty_batch_argmin_is_none() {
+        let topo = Topology::tiny();
+        let prob =
+            ScoreProblem::build(&topo, &[], Weights::default(), Meta::expected()).unwrap();
+        let b = CandidateBatch::zeroed(prob.meta, 8);
+        assert!(Scorer::Native.argmin(&prob, &b).unwrap().is_none());
+    }
+}

@@ -1,0 +1,192 @@
+//! Pure-Rust reference scorer — the same cost model as the Pallas kernel
+//! (`python/compile/kernels/ref.py`), used (a) as a fallback when the
+//! artifacts have not been built, (b) to cross-validate the PJRT path in
+//! tests, and (c) as the baseline in the hot-path benchmarks.
+
+use super::problem::{CandidateBatch, ScoreOut, ScoreProblem};
+
+/// Score every live candidate in the batch.
+pub fn score_batch(problem: &ScoreProblem, batch: &CandidateBatch) -> Vec<ScoreOut> {
+    let v = problem.meta.max_vms;
+    let n = problem.meta.num_nodes;
+    let mut out = Vec::with_capacity(batch.len);
+    let mut pd = vec![0.0f32; n]; // one row of P @ D at a time
+    for b in 0..batch.len {
+        let p = &batch.p[b * v * n..(b + 1) * v * n];
+        let mut locality = 0.0f32;
+        let mut contention = 0.0f32;
+        // locality: sum_v s_v * sum_j (P@D)[v,j] * M[v,j]
+        for i in 0..v {
+            let prow = &p[i * n..(i + 1) * n];
+            if problem.cores[i] == 0.0 && prow.iter().all(|&x| x == 0.0) {
+                continue;
+            }
+            pd.iter_mut().for_each(|x| *x = 0.0);
+            for (k, &pik) in prow.iter().enumerate() {
+                if pik == 0.0 {
+                    continue;
+                }
+                let drow = &problem.d[k * n..(k + 1) * n];
+                for j in 0..n {
+                    pd[j] += pik * drow[j];
+                }
+            }
+            let mrow = &problem.m[i * n..(i + 1) * n];
+            let mut loc_i = 0.0f32;
+            for j in 0..n {
+                loc_i += pd[j] * mrow[j];
+            }
+            locality += problem.s[i] * loc_i;
+
+            // contention: sum_w C[v,w] * <P_v, P_w>
+            for w_idx in 0..v {
+                if w_idx == i {
+                    continue;
+                }
+                let cvw = problem.c[i * v + w_idx];
+                if cvw == 0.0 {
+                    continue;
+                }
+                let prow_w = &p[w_idx * n..(w_idx + 1) * n];
+                let mut overlap = 0.0f32;
+                for j in 0..n {
+                    overlap += prow[j] * prow_w[j];
+                }
+                contention += cvw * overlap;
+            }
+        }
+        // overload + bandwidth overload: sum_j relu(demand_j - cap_j)^2
+        let mut overload = 0.0f32;
+        let mut bw_over = 0.0f32;
+        for j in 0..n {
+            let mut load = 0.0f32;
+            let mut bw_load = 0.0f32;
+            for i in 0..v {
+                load += problem.cores[i] * p[i * n + j];
+                bw_load += problem.bw[i] * p[i * n + j];
+            }
+            let over = (load - problem.cap[j]).max(0.0);
+            overload += over * over;
+            let bwo = (bw_load - problem.bwcap[j]).max(0.0);
+            bw_over += bwo * bwo;
+        }
+        let total = problem.w[0] * locality
+            + problem.w[1] * contention
+            + problem.w[2] * overload
+            + problem.w[3] * bw_over;
+        out.push(ScoreOut { total, locality, contention, overload, bw_over });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::problem::{VmEntry, Weights};
+    use crate::runtime::shapes::Meta;
+    use crate::topology::Topology;
+    use crate::util::rng::Rng;
+    use crate::util::testkit::{prop_assert, propcheck};
+    use crate::workload::App;
+
+    fn problem_with(apps: &[(App, usize, usize)]) -> (ScoreProblem, Topology) {
+        let topo = Topology::paper();
+        let n = topo.num_nodes();
+        let entries: Vec<VmEntry> = apps
+            .iter()
+            .map(|(app, vcpus, node)| {
+                let mut mem = vec![0.0; n];
+                mem[*node] = 1.0;
+                VmEntry { profile: app.profile(), vcpus: *vcpus, mem_fractions: mem }
+            })
+            .collect();
+        (ScoreProblem::build(&topo, &entries, Weights::default(), Meta::expected()).unwrap(), topo)
+    }
+
+    fn one_hot(v: usize, n: usize, assignments: &[(usize, usize)]) -> Vec<Vec<f64>> {
+        let mut p = vec![vec![0.0; n]; v];
+        for (vm, node) in assignments {
+            p[*vm][*node] = 1.0;
+        }
+        p
+    }
+
+    #[test]
+    fn local_beats_remote() {
+        let (prob, _) = problem_with(&[(App::Neo4j, 4, 0)]);
+        let mut b = CandidateBatch::zeroed(prob.meta, 8);
+        b.push(&one_hot(2, 36, &[(0, 0)])); // local to memory
+        b.push(&one_hot(2, 36, &[(0, 24)])); // 2 hops away
+        let scores = score_batch(&prob, &b);
+        assert!(scores[0].total < scores[1].total);
+        assert!(scores[0].locality < scores[1].locality);
+    }
+
+    #[test]
+    fn separating_rabbit_from_devil_wins() {
+        let (prob, _) = problem_with(&[(App::Mpegaudio, 4, 0), (App::Fft, 4, 0)]);
+        let mut b = CandidateBatch::zeroed(prob.meta, 8);
+        b.push(&one_hot(2, 36, &[(0, 0), (1, 0)])); // shared node
+        b.push(&one_hot(2, 36, &[(0, 0), (1, 2)])); // separated (same server)
+        let scores = score_batch(&prob, &b);
+        assert!(scores[1].total < scores[0].total, "{scores:?}");
+        assert!(scores[1].contention < scores[0].contention);
+    }
+
+    #[test]
+    fn overload_penalized() {
+        let (prob, topo) = problem_with(&[(App::Derby, 16, 0)]);
+        let mut b = CandidateBatch::zeroed(prob.meta, 8);
+        // 16 vcpus on one 4-core node: overload 12^2
+        b.push(&one_hot(2, 36, &[(0, 0)]));
+        // spread over 4 nodes of server 0: no overload
+        let mut spread = vec![vec![0.0; 36]; 2];
+        for node in 0..4 {
+            spread[0][node] = 0.25;
+        }
+        b.push(&spread);
+        let scores = score_batch(&prob, &b);
+        assert!(scores[0].overload > 0.0);
+        assert_eq!(scores[1].overload, 0.0);
+        assert!(scores[1].total < scores[0].total);
+        let _ = topo;
+    }
+
+    #[test]
+    fn empty_batch_gives_empty_scores() {
+        let (prob, _) = problem_with(&[(App::Sor, 4, 0)]);
+        let b = CandidateBatch::zeroed(prob.meta, 8);
+        assert!(score_batch(&prob, &b).is_empty());
+    }
+
+    #[test]
+    fn total_is_weighted_sum_property() {
+        propcheck("total = w·components", 50, |rng: &mut Rng| {
+            let (prob, _) = problem_with(&[(App::Stream, 4, 0), (App::Sunflow, 8, 5)]);
+            let mut b = CandidateBatch::zeroed(prob.meta, 8);
+            for _ in 0..4 {
+                let mut p = vec![vec![0.0; 36]; 2];
+                for row in p.iter_mut() {
+                    // random sparse distribution over a few nodes
+                    for f in rng.simplex(4) {
+                        row[rng.below(36)] += f;
+                    }
+                    let sum: f64 = row.iter().sum();
+                    row.iter_mut().for_each(|x| *x /= sum);
+                }
+                b.push(&p);
+            }
+            let scores = score_batch(&prob, &b);
+            for sc in scores {
+                let want = prob.w[0] * sc.locality
+                    + prob.w[1] * sc.contention
+                    + prob.w[2] * sc.overload
+                    + prob.w[3] * sc.bw_over;
+                if (want - sc.total).abs() > 1e-3 * (1.0 + want.abs()) {
+                    return Err(format!("total {} != {}", sc.total, want));
+                }
+            }
+            prop_assert(true, "")
+        });
+    }
+}

@@ -1,0 +1,341 @@
+//! PJRT execution of the AOT artifacts (the L2/L1 compute path).
+//!
+//! Loads the HLO-text artifacts produced by `python/compile/aot.py`,
+//! compiles them once on the PJRT CPU client, and executes them from the
+//! coordinator's decision loop.  Python never runs here.
+//!
+//! Wiring follows /opt/xla-example/load_hlo: HLO **text** →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`, with `return_tuple=True` on the Python
+//! side so every artifact returns one tuple literal.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::problem::{CandidateBatch, ScoreOut, ScoreProblem};
+use super::shapes::Meta;
+
+/// Compiled artifacts + the PJRT client that owns them.
+pub struct Engine {
+    client: xla::PjRtClient,
+    scorer: xla::PjRtLoadedExecutable,
+    scorer_small: xla::PjRtLoadedExecutable,
+    optimizer: xla::PjRtLoadedExecutable,
+    pub meta: Meta,
+    /// Cumulative number of scorer invocations (telemetry).
+    pub scorer_calls: std::cell::Cell<u64>,
+}
+
+impl Engine {
+    /// Load from an artifacts directory (`make artifacts` output).
+    pub fn load<P: AsRef<Path>>(dir: P) -> Result<Engine> {
+        let dir = dir.as_ref();
+        let meta = Meta::from_file(dir.join("meta.txt"))
+            .with_context(|| format!("loading meta from {}", dir.display()))?;
+        if meta != Meta::expected() {
+            bail!("artifact meta {:?} != runtime contract {:?}", meta, Meta::expected());
+        }
+        let client = xla::PjRtClient::cpu().map_err(wrap)?;
+        let compile = |name: &str| -> Result<xla::PjRtLoadedExecutable> {
+            let path: PathBuf = dir.join(name);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(wrap)
+                .with_context(|| format!("parsing {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            client.compile(&comp).map_err(wrap).with_context(|| format!("compiling {name}"))
+        };
+        Ok(Engine {
+            scorer: compile("scorer.hlo.txt")?,
+            scorer_small: compile("scorer_small.hlo.txt")?,
+            optimizer: compile("optimizer.hlo.txt")?,
+            client,
+            meta,
+            scorer_calls: std::cell::Cell::new(0),
+        })
+    }
+
+    /// Load from the conventional location (`$DVRM_ARTIFACTS` or
+    /// `<manifest>/artifacts`), or fall back to `None` when absent —
+    /// callers then use the native scorer.
+    pub fn load_default() -> Option<Engine> {
+        let dir = std::env::var("DVRM_ARTIFACTS")
+            .unwrap_or_else(|_| concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts").to_string());
+        match Engine::load(&dir) {
+            Ok(e) => Some(e),
+            Err(err) => {
+                log::warn!("PJRT engine unavailable ({err:#}); using native scorer");
+                None
+            }
+        }
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn lit_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+        // One copy straight into the literal (vec1 + reshape would copy and
+        // re-allocate; this path shows up on the decision-loop profile).
+        let dims: Vec<usize> = dims.iter().map(|&d| d as usize).collect();
+        let bytes = unsafe {
+            std::slice::from_raw_parts(data.as_ptr() as *const u8, std::mem::size_of_val(data))
+        };
+        xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::F32, &dims, bytes)
+            .map_err(wrap)
+    }
+
+    /// Score a candidate batch (padded to whichever compiled batch size
+    /// fits).  Returns one [`ScoreOut`] per live candidate.
+    pub fn score(&self, problem: &ScoreProblem, batch: &CandidateBatch) -> Result<Vec<ScoreOut>> {
+        if batch.is_empty() {
+            return Ok(Vec::new());
+        }
+        let (v, n) = (self.meta.max_vms as i64, self.meta.num_nodes as i64);
+        let (exe, bsz) = if batch.len <= self.meta.batch_small {
+            (&self.scorer_small, self.meta.batch_small)
+        } else if batch.len <= self.meta.batch {
+            (&self.scorer, self.meta.batch)
+        } else {
+            bail!("candidate batch {} exceeds compiled max {}", batch.len, self.meta.batch);
+        };
+        // Pad the flat placement buffer to bsz candidates — zero-copy when
+        // the batch was allocated at the compiled size (the common case).
+        let cand_elems = (v * n) as usize;
+        let mut padded;
+        let p: &[f32] = if batch.batch == bsz && batch.p.len() == bsz * cand_elems {
+            &batch.p
+        } else {
+            padded = vec![0.0f32; bsz * cand_elems];
+            padded[..batch.len * cand_elems]
+                .copy_from_slice(&batch.p[..batch.len * cand_elems]);
+            &padded
+        };
+
+        let args = [
+            Self::lit_f32(p, &[bsz as i64, v, n])?,
+            Self::lit_f32(&problem.d, &[n, n])?,
+            Self::lit_f32(&problem.m, &[v, n])?,
+            Self::lit_f32(&problem.c, &[v, v])?,
+            Self::lit_f32(&problem.s, &[v])?,
+            Self::lit_f32(&problem.cores, &[v])?,
+            Self::lit_f32(&problem.cap, &[n])?,
+            Self::lit_f32(&problem.w, &[4])?,
+            Self::lit_f32(&problem.bw, &[v])?,
+            Self::lit_f32(&problem.bwcap, &[n])?,
+        ];
+        let result = exe.execute::<xla::Literal>(&args).map_err(wrap)?[0][0]
+            .to_literal_sync()
+            .map_err(wrap)?;
+        self.scorer_calls.set(self.scorer_calls.get() + 1);
+        let mut parts = result.to_tuple().map_err(wrap)?;
+        if parts.len() != 5 {
+            bail!("scorer returned {}-tuple, want 5", parts.len());
+        }
+        let bw_over = parts.pop().unwrap().to_vec::<f32>().map_err(wrap)?;
+        let over = parts.pop().unwrap().to_vec::<f32>().map_err(wrap)?;
+        let cont = parts.pop().unwrap().to_vec::<f32>().map_err(wrap)?;
+        let loc = parts.pop().unwrap().to_vec::<f32>().map_err(wrap)?;
+        let total = parts.pop().unwrap().to_vec::<f32>().map_err(wrap)?;
+
+        let vs = self.meta.max_vms;
+        Ok((0..batch.len)
+            .map(|b| ScoreOut {
+                total: total[b],
+                locality: loc[b * vs..(b + 1) * vs].iter().sum(),
+                contention: cont[b * vs..(b + 1) * vs].iter().sum(),
+                overload: over[b],
+                bw_over: bw_over[b],
+            })
+            .collect())
+    }
+
+    /// Run the relaxed whole-system optimizer artifact.
+    ///
+    /// `logits0` is `[V, N]` (e.g. log of the current placement + noise);
+    /// returns the optimized `[V, N]` placement fractions (rows of live
+    /// VMs sum to 1) and the cost trace.
+    pub fn optimize(
+        &self,
+        problem: &ScoreProblem,
+        logits0: &[f32],
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let (v, n) = (self.meta.max_vms as i64, self.meta.num_nodes as i64);
+        if logits0.len() != (v * n) as usize {
+            bail!("logits0 len {} != {}", logits0.len(), v * n);
+        }
+        let mut live = vec![0.0f32; v as usize];
+        for (i, l) in live.iter_mut().enumerate().take(problem.vms) {
+            let _ = i;
+            *l = 1.0;
+        }
+        let args = [
+            Self::lit_f32(logits0, &[v, n])?,
+            Self::lit_f32(&problem.d, &[n, n])?,
+            Self::lit_f32(&problem.m, &[v, n])?,
+            Self::lit_f32(&problem.c, &[v, v])?,
+            Self::lit_f32(&problem.s, &[v])?,
+            Self::lit_f32(&problem.cores, &[v])?,
+            Self::lit_f32(&problem.cap, &[n])?,
+            Self::lit_f32(&problem.w, &[4])?,
+            Self::lit_f32(&problem.bw, &[v])?,
+            Self::lit_f32(&problem.bwcap, &[n])?,
+            Self::lit_f32(&live, &[v])?,
+        ];
+        let result = self.optimizer.execute::<xla::Literal>(&args).map_err(wrap)?[0][0]
+            .to_literal_sync()
+            .map_err(wrap)?;
+        let (p_opt, trace) = result.to_tuple2().map_err(wrap)?;
+        Ok((p_opt.to_vec::<f32>().map_err(wrap)?, trace.to_vec::<f32>().map_err(wrap)?))
+    }
+}
+
+fn wrap(e: xla::Error) -> anyhow::Error {
+    anyhow!("xla: {e}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::native;
+    use crate::runtime::problem::{VmEntry, Weights};
+    use crate::topology::Topology;
+    use crate::util::rng::Rng;
+    use crate::workload::App;
+
+    fn engine() -> Engine {
+        Engine::load(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
+            .expect("run `make artifacts` before cargo test")
+    }
+
+    fn problem() -> ScoreProblem {
+        let topo = Topology::paper();
+        let n = topo.num_nodes();
+        let entries: Vec<VmEntry> = [
+            (App::Neo4j, 72usize, 0usize),
+            (App::Stream, 8, 6),
+            (App::Mpegaudio, 8, 12),
+            (App::Fft, 16, 18),
+        ]
+        .iter()
+        .map(|(app, vcpus, node)| {
+            let mut mem = vec![0.0; n];
+            mem[*node] = 1.0;
+            VmEntry { profile: app.profile(), vcpus: *vcpus, mem_fractions: mem }
+        })
+        .collect();
+        ScoreProblem::build(&topo, &entries, Weights::default(), Meta::expected()).unwrap()
+    }
+
+    fn random_batch(meta: Meta, len: usize, vms: usize, seed: u64) -> CandidateBatch {
+        let bsz = if len <= meta.batch_small { meta.batch_small } else { meta.batch };
+        let mut b = CandidateBatch::zeroed(meta, bsz);
+        let mut rng = Rng::new(seed);
+        for _ in 0..len {
+            let mut p = vec![vec![0.0; meta.num_nodes]; vms];
+            for row in p.iter_mut() {
+                for f in rng.simplex(3) {
+                    row[rng.below(36)] += f;
+                }
+                let s: f64 = row.iter().sum();
+                row.iter_mut().for_each(|x| *x /= s);
+            }
+            b.push(&p);
+        }
+        b
+    }
+
+    #[test]
+    fn pjrt_matches_native_scorer() {
+        let eng = engine();
+        let prob = problem();
+        for (len, seed) in [(3usize, 1u64), (8, 2), (64, 3)] {
+            let batch = random_batch(eng.meta, len, prob.vms, seed);
+            let pjrt = eng.score(&prob, &batch).unwrap();
+            let nat = native::score_batch(&prob, &batch);
+            assert_eq!(pjrt.len(), nat.len());
+            for (a, b) in pjrt.iter().zip(nat.iter()) {
+                assert!(
+                    (a.total - b.total).abs() <= 1e-2 * (1.0 + b.total.abs()),
+                    "total pjrt={} native={}",
+                    a.total,
+                    b.total
+                );
+                assert!((a.overload - b.overload).abs() <= 1e-2 * (1.0 + b.overload.abs()));
+            }
+        }
+    }
+
+    #[test]
+    fn scorer_prefers_local_placement() {
+        let eng = engine();
+        let prob = problem();
+        let mut b = CandidateBatch::zeroed(eng.meta, eng.meta.batch_small);
+        let mut local = vec![vec![0.0; 36]; prob.vms];
+        let mut remote = local.clone();
+        // VM 1 (stream, mem on node 6): local vs far server
+        local[1][6] = 1.0;
+        remote[1][30] = 1.0;
+        for vm in [0usize, 2, 3] {
+            let node = [0usize, 0, 12, 18][vm];
+            local[vm][node] = 1.0;
+            remote[vm][node] = 1.0;
+        }
+        b.push(&local);
+        b.push(&remote);
+        let scores = eng.score(&prob, &b).unwrap();
+        assert!(scores[0].total < scores[1].total);
+    }
+
+    #[test]
+    fn oversize_batch_rejected() {
+        let eng = engine();
+        let prob = problem();
+        let mut b = CandidateBatch::zeroed(eng.meta, eng.meta.batch);
+        b.batch = eng.meta.batch + 1; // simulate overflow
+        b.len = eng.meta.batch + 1;
+        b.p = vec![0.0; (eng.meta.batch + 1) * 32 * 36];
+        assert!(eng.score(&prob, &b).is_err());
+    }
+
+    #[test]
+    fn optimizer_reduces_cost_and_localizes() {
+        let eng = engine();
+        let prob = problem();
+        let mut rng = Rng::new(7);
+        let logits0: Vec<f32> =
+            (0..32 * 36).map(|_| rng.normal_ms(0.0, 0.01) as f32).collect();
+        let (p_opt, trace) = eng.optimize(&prob, &logits0).unwrap();
+        assert_eq!(p_opt.len(), 32 * 36);
+        assert_eq!(trace.len(), eng.meta.opt_steps);
+        // The returned placement is the best iterate: re-score it natively
+        // and check it beats the first step's cost.
+        let mut b = CandidateBatch::zeroed(eng.meta, eng.meta.batch_small);
+        let rows: Vec<Vec<f64>> = (0..32)
+            .map(|i| p_opt[i * 36..(i + 1) * 36].iter().map(|&x| x as f64).collect())
+            .collect();
+        b.push(&rows);
+        let best = crate::runtime::native::score_batch(&prob, &b)[0].total;
+        assert!(
+            best <= trace[0] * 1.01,
+            "optimizer best ({best}) worse than first step ({})",
+            trace[0]
+        );
+        // Live rows are distributions; padding rows are ~zero.
+        for i in 0..prob.vms {
+            let row: f32 = p_opt[i * 36..(i + 1) * 36].iter().sum();
+            assert!((row - 1.0).abs() < 1e-3, "row {i} sums to {row}");
+        }
+        let pad: f32 = p_opt[prob.vms * 36..].iter().sum();
+        assert!(pad.abs() < 1e-3);
+    }
+
+    #[test]
+    fn empty_batch_short_circuits() {
+        let eng = engine();
+        let prob = problem();
+        let b = CandidateBatch::zeroed(eng.meta, eng.meta.batch_small);
+        assert!(eng.score(&prob, &b).unwrap().is_empty());
+        assert_eq!(eng.scorer_calls.get(), 0);
+    }
+}

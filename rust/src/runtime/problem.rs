@@ -1,0 +1,287 @@
+//! The scoring problem: the dense matrices the L1/L2 scorer consumes,
+//! built from the live system state (topology + VMs) and padded to the
+//! artifact shapes.
+
+use anyhow::{bail, Result};
+
+use super::shapes::Meta;
+use crate::topology::Topology;
+use crate::workload::{pair_penalty, AppProfile};
+
+/// Cost-model weights `(w_loc, w_cont, w_over, w_bw)` — see `ref.py`.
+#[derive(Debug, Clone, Copy)]
+pub struct Weights {
+    pub locality: f32,
+    pub contention: f32,
+    pub overload: f32,
+    /// Per-node memory-bandwidth overload (GB/s)² coefficient.
+    pub bandwidth: f32,
+}
+
+impl Default for Weights {
+    fn default() -> Self {
+        // Calibrated so one fully-remote sensitive VM, one bad class pair,
+        // one overbooked core, and ~10 GB/s of controller oversubscription
+        // are comparable offences.
+        Self { locality: 1.0, contention: 20.0, overload: 400.0, bandwidth: 2.0 }
+    }
+}
+
+/// Dense, padded scorer inputs.  Row `i < vms` corresponds to
+/// `vm_order[i]`; rows `>= vms` are zero padding.
+#[derive(Debug, Clone)]
+pub struct ScoreProblem {
+    pub meta: Meta,
+    /// Live VM count (≤ meta.max_vms).
+    pub vms: usize,
+    /// `[N, N]` distance matrix, row-major.
+    pub d: Vec<f32>,
+    /// `[V, N]` memory fractions.
+    pub m: Vec<f32>,
+    /// `[V, V]` class-pair penalties (zero diagonal / padding).
+    pub c: Vec<f32>,
+    /// `[V]` remote sensitivity.
+    pub s: Vec<f32>,
+    /// `[V]` vCPU counts.
+    pub cores: Vec<f32>,
+    /// `[N]` core capacity per node.
+    pub cap: Vec<f32>,
+    /// `[4]` weights.
+    pub w: Vec<f32>,
+    /// `[V]` total memory-bandwidth demand per VM, GB/s.
+    pub bw: Vec<f32>,
+    /// `[N]` memory controller bandwidth per node, GB/s.
+    pub bwcap: Vec<f32>,
+}
+
+/// Per-VM inputs for problem construction.
+#[derive(Debug, Clone)]
+pub struct VmEntry {
+    pub profile: AppProfile,
+    pub vcpus: usize,
+    /// Memory fractions per node (length = topo nodes).
+    pub mem_fractions: Vec<f64>,
+}
+
+impl ScoreProblem {
+    /// Build from live state.  Fails if the system exceeds artifact bounds.
+    pub fn build(
+        topo: &Topology,
+        entries: &[VmEntry],
+        weights: Weights,
+        meta: Meta,
+    ) -> Result<Self> {
+        let n_live = topo.num_nodes();
+        if n_live > meta.num_nodes {
+            bail!("topology has {n_live} nodes, artifacts compiled for {}", meta.num_nodes);
+        }
+        if entries.len() > meta.max_vms {
+            bail!("{} VMs exceed artifact capacity {}", entries.len(), meta.max_vms);
+        }
+        let (v, n) = (meta.max_vms, meta.num_nodes);
+
+        let mut d = vec![0.0f32; n * n];
+        for i in 0..n_live {
+            for j in 0..n_live {
+                d[i * n + j] = topo
+                    .distance(crate::topology::NodeId(i), crate::topology::NodeId(j))
+                    as f32;
+            }
+        }
+        // Padding nodes are unreachable: huge distance + zero capacity, so
+        // any mass placed there is dominated.
+        for i in 0..n {
+            for j in 0..n {
+                if i >= n_live || j >= n_live {
+                    d[i * n + j] = 1e4;
+                }
+            }
+        }
+
+        let mut m = vec![0.0f32; v * n];
+        let mut c = vec![0.0f32; v * v];
+        let mut s = vec![0.0f32; v];
+        let mut cores = vec![0.0f32; v];
+        let mut bw = vec![0.0f32; v];
+        for (i, e) in entries.iter().enumerate() {
+            bw[i] = (e.profile.bw_gbs_per_vcpu * e.vcpus as f64) as f32;
+            for (j, f) in e.mem_fractions.iter().enumerate().take(n_live) {
+                m[i * n + j] = *f as f32;
+            }
+            s[i] = if e.profile.sensitivity.is_sensitive() { 1.0 } else { 0.3 };
+            // Weight locality by how memory-bound the app actually is.
+            s[i] *= (e.profile.mem_stall_frac as f32).max(0.05);
+            cores[i] = e.vcpus as f32;
+            for (j, o) in entries.iter().enumerate() {
+                if i != j {
+                    c[i * v + j] = pair_penalty(e.profile.class, o.profile.class) as f32;
+                }
+            }
+        }
+
+        // Capacity = schedulable hw threads per node (the paper counts its
+        // 288 "cores" this way; one vCPU per hw thread = no overbooking).
+        let slots = (topo.spec.cores_per_node * topo.spec.threads_per_core) as f32;
+        let mut cap = vec![0.0f32; n];
+        for c in cap.iter_mut().take(n_live) {
+            *c = slots;
+        }
+
+        let mut bwcap = vec![0.0f32; n];
+        for b in bwcap.iter_mut().take(n_live) {
+            *b = topo.spec.mem_bw_per_node_gbs as f32;
+        }
+
+        Ok(Self {
+            meta,
+            vms: entries.len(),
+            d,
+            m,
+            c,
+            s,
+            cores,
+            cap,
+            w: vec![weights.locality, weights.contention, weights.overload,
+                    weights.bandwidth],
+            bw,
+            bwcap,
+        })
+    }
+
+    /// Free capacity variant: subtract cores already pinned by VMs *not*
+    /// part of this problem (so candidates cannot overload foreign cores).
+    pub fn with_reduced_capacity(mut self, used_per_node: &[f64]) -> Self {
+        for (j, used) in used_per_node.iter().enumerate().take(self.cap.len()) {
+            self.cap[j] = (self.cap[j] - *used as f32).max(0.0);
+        }
+        self
+    }
+}
+
+/// A candidate batch: `B` placements, each `[V, N]` row-major fractions.
+#[derive(Debug, Clone)]
+pub struct CandidateBatch {
+    pub meta: Meta,
+    /// `[B, V, N]` flattened.
+    pub p: Vec<f32>,
+    /// Number of real candidates (rest is padding).
+    pub len: usize,
+    pub batch: usize,
+}
+
+impl CandidateBatch {
+    /// Allocate a zeroed batch of capacity `batch` (must be one of the
+    /// compiled batch sizes).
+    pub fn zeroed(meta: Meta, batch: usize) -> Self {
+        Self { meta, p: vec![0.0; batch * meta.max_vms * meta.num_nodes], len: 0, batch }
+    }
+
+    /// Append a candidate given per-VM node fractions.  Rows beyond the
+    /// problem's VM count stay zero.
+    pub fn push(&mut self, placement: &[Vec<f64>]) {
+        assert!(self.len < self.batch, "batch full");
+        let (v, n) = (self.meta.max_vms, self.meta.num_nodes);
+        let base = self.len * v * n;
+        for (i, row) in placement.iter().enumerate().take(v) {
+            for (j, f) in row.iter().enumerate().take(n) {
+                self.p[base + i * n + j] = *f as f32;
+            }
+        }
+        self.len += 1;
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
+/// Scorer output per candidate.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ScoreOut {
+    pub total: f32,
+    pub locality: f32,
+    pub contention: f32,
+    pub overload: f32,
+    pub bw_over: f32,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::Topology;
+    use crate::workload::App;
+
+    fn entry(app: App, vcpus: usize, node: usize, n: usize) -> VmEntry {
+        let mut mem = vec![0.0; n];
+        mem[node] = 1.0;
+        VmEntry { profile: app.profile(), vcpus, mem_fractions: mem }
+    }
+
+    #[test]
+    fn build_pads_to_meta_shapes() {
+        let topo = Topology::paper();
+        let meta = Meta::expected();
+        let entries =
+            vec![entry(App::Neo4j, 8, 0, 36), entry(App::Stream, 4, 1, 36)];
+        let p = ScoreProblem::build(&topo, &entries, Weights::default(), meta).unwrap();
+        assert_eq!(p.d.len(), 36 * 36);
+        assert_eq!(p.m.len(), 32 * 36);
+        assert_eq!(p.c.len(), 32 * 32);
+        assert_eq!(p.vms, 2);
+        // class penalty Neo4j(Sheep) vs Stream(Devil): victim sheep = 1.0
+        assert_eq!(p.c[0 * 32 + 1], 1.0);
+        assert_eq!(p.c[1 * 32 + 0], 0.3);
+        // diagonal zero
+        assert_eq!(p.c[0], 0.0);
+    }
+
+    #[test]
+    fn too_many_vms_rejected() {
+        let topo = Topology::paper();
+        let meta = Meta::expected();
+        let entries: Vec<VmEntry> =
+            (0..33).map(|_| entry(App::Sockshop, 1, 0, 36)).collect();
+        assert!(ScoreProblem::build(&topo, &entries, Weights::default(), meta).is_err());
+    }
+
+    #[test]
+    fn tiny_topology_pads_nodes() {
+        let topo = Topology::tiny(); // 4 nodes
+        let meta = Meta::expected();
+        let p = ScoreProblem::build(&topo, &[entry(App::Fft, 2, 0, 4)], Weights::default(), meta)
+            .unwrap();
+        // real node distance kept, padding distance huge, padding cap zero
+        assert_eq!(p.d[0], 10.0);
+        assert_eq!(p.d[5 * 36 + 5], 1e4);
+        let slots = (topo.spec.cores_per_node * topo.spec.threads_per_core) as f32;
+        assert_eq!(p.cap[3], slots);
+        assert_eq!(p.cap[4], 0.0);
+    }
+
+    #[test]
+    fn candidate_batch_layout() {
+        let meta = Meta::expected();
+        let mut b = CandidateBatch::zeroed(meta, 8);
+        let mut place = vec![vec![0.0; 36]; 2];
+        place[0][3] = 1.0;
+        place[1][0] = 0.5;
+        place[1][1] = 0.5;
+        b.push(&place);
+        assert_eq!(b.len, 1);
+        assert_eq!(b.p[0 * 36 + 3], 1.0);
+        assert_eq!(b.p[1 * 36 + 0], 0.5);
+        // second candidate region untouched
+        assert!(b.p[32 * 36..].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn reduced_capacity_saturates_at_zero() {
+        let topo = Topology::tiny();
+        let meta = Meta::expected();
+        let p = ScoreProblem::build(&topo, &[], Weights::default(), meta).unwrap();
+        let p = p.with_reduced_capacity(&[1.0, 99.0]);
+        let slots = (topo.spec.cores_per_node * topo.spec.threads_per_core) as f32;
+        assert_eq!(p.cap[0], slots - 1.0);
+        assert_eq!(p.cap[1], 0.0);
+    }
+}

@@ -1,0 +1,114 @@
+//! AOT shape contract shared with the Python compile path.
+//!
+//! `python/compile/shapes.py` writes `artifacts/meta.txt`; this module
+//! parses it and the runtime asserts the values before feeding buffers to
+//! the compiled executables — a shape mismatch must fail loudly at load
+//! time, not corrupt scores at run time.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Fixed shapes of the compiled artifacts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Meta {
+    /// Candidate batch of the big scorer.
+    pub batch: usize,
+    /// Candidate batch of the low-latency scorer.
+    pub batch_small: usize,
+    /// Max VMs per scoring problem (rows are padded up to this).
+    pub max_vms: usize,
+    /// NUMA nodes the artifacts were compiled for.
+    pub num_nodes: usize,
+    /// Gradient steps inside the optimizer artifact.
+    pub opt_steps: usize,
+    /// Pallas kernel block size (informational).
+    pub block_b: usize,
+}
+
+impl Meta {
+    /// The values `python/compile/shapes.py` currently pins (kept in sync
+    /// by `meta.txt` verification at load time and the cross-layer test).
+    pub fn expected() -> Self {
+        Self { batch: 64, batch_small: 8, max_vms: 32, num_nodes: 36, opt_steps: 60, block_b: 8 }
+    }
+
+    /// Parse the `key=value` lines of `meta.txt`.
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut kv = BTreeMap::new();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow!("bad meta line: {line:?}"))?;
+            kv.insert(k.trim().to_string(), v.trim().to_string());
+        }
+        let get = |k: &str| -> Result<usize> {
+            kv.get(k)
+                .ok_or_else(|| anyhow!("meta.txt missing key {k}"))?
+                .parse::<usize>()
+                .with_context(|| format!("meta key {k}"))
+        };
+        let dtype = kv.get("dtype").map(String::as_str).unwrap_or("float32");
+        if dtype != "float32" {
+            bail!("unsupported artifact dtype {dtype}");
+        }
+        Ok(Self {
+            batch: get("batch")?,
+            batch_small: get("batch_small")?,
+            max_vms: get("max_vms")?,
+            num_nodes: get("num_nodes")?,
+            opt_steps: get("opt_steps")?,
+            block_b: get("block_b")?,
+        })
+    }
+
+    pub fn from_file<P: AsRef<Path>>(path: P) -> Result<Self> {
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        Self::parse(&text)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "batch=64\nbatch_small=8\nmax_vms=32\nnum_nodes=36\nopt_steps=60\nblock_b=8\ndtype=float32\n";
+
+    #[test]
+    fn parses_meta() {
+        let m = Meta::parse(SAMPLE).unwrap();
+        assert_eq!(m, Meta::expected());
+    }
+
+    #[test]
+    fn missing_key_is_error() {
+        assert!(Meta::parse("batch=64\n").is_err());
+    }
+
+    #[test]
+    fn wrong_dtype_rejected() {
+        let text = SAMPLE.replace("float32", "bfloat16");
+        assert!(Meta::parse(&text).is_err());
+    }
+
+    #[test]
+    fn malformed_line_rejected() {
+        assert!(Meta::parse("nonsense").is_err());
+    }
+
+    #[test]
+    fn artifact_meta_matches_expected_if_built() {
+        // Cross-layer contract: if `make artifacts` has run, its meta must
+        // agree with what this runtime was written against.
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/meta.txt");
+        if let Ok(m) = Meta::from_file(path) {
+            assert_eq!(m, Meta::expected(), "artifacts/meta.txt drifted — re-run make artifacts");
+        }
+    }
+}

@@ -1,0 +1,160 @@
+//! Synthesized hardware performance counters (paper §3.4).
+//!
+//! The paper's control loop consumes Linux `perf` readings — IPC (§3.4.1)
+//! and MPI (§3.4.2) — per VM.  The simulator synthesizes the same signals
+//! from the performance model, with multiplicative measurement noise, and
+//! keeps a short history for EMA smoothing and variability statistics.
+
+use crate::util::stats::{cov, mean};
+
+/// One tick's worth of counters and model factors for a VM.
+#[derive(Debug, Clone, Copy)]
+pub struct PerfSample {
+    pub tick: u64,
+    /// Instructions per cycle (higher is better).
+    pub ipc: f64,
+    /// LLC misses per instruction (lower is better).
+    pub mpi: f64,
+    /// Application throughput, ops/s (model unit).
+    pub perf: f64,
+    /// Throughput relative to the solo-ideal reference (1.0 = ideal).
+    pub rel_perf: f64,
+    /// Decomposed model factors (all in (0, 1]; 1 = no penalty).
+    pub factors: Factors,
+}
+
+/// Multiplicative penalty decomposition — exported for telemetry, tests
+/// and the ablation experiments.
+#[derive(Debug, Clone, Copy)]
+pub struct Factors {
+    /// Memory access latency (NUMA distance) factor.
+    pub lat: f64,
+    /// Cache / class interference factor.
+    pub cont: f64,
+    /// Memory bandwidth saturation factor.
+    pub bw: f64,
+    /// Core overbooking (timesharing) factor.
+    pub ob: f64,
+}
+
+impl Factors {
+    pub fn ideal() -> Self {
+        Self { lat: 1.0, cont: 1.0, bw: 1.0, ob: 1.0 }
+    }
+}
+
+/// Rolling counter history per VM (bounded ring).
+#[derive(Debug, Clone)]
+pub struct CounterHistory {
+    samples: Vec<PerfSample>,
+    cap: usize,
+}
+
+impl CounterHistory {
+    pub fn new(cap: usize) -> Self {
+        assert!(cap > 0);
+        Self { samples: Vec::with_capacity(cap), cap }
+    }
+
+    pub fn push(&mut self, s: PerfSample) {
+        if self.samples.len() == self.cap {
+            self.samples.remove(0);
+        }
+        self.samples.push(s);
+    }
+
+    pub fn last(&self) -> Option<&PerfSample> {
+        self.samples.last()
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &PerfSample> {
+        self.samples.iter()
+    }
+
+    /// Mean IPC over the most recent `n` samples.
+    pub fn mean_ipc(&self, n: usize) -> f64 {
+        let xs: Vec<f64> = self.samples.iter().rev().take(n).map(|s| s.ipc).collect();
+        mean(&xs)
+    }
+
+    /// Mean MPI over the most recent `n` samples.
+    pub fn mean_mpi(&self, n: usize) -> f64 {
+        let xs: Vec<f64> = self.samples.iter().rev().take(n).map(|s| s.mpi).collect();
+        mean(&xs)
+    }
+
+    /// Mean relative performance over the most recent `n` samples.
+    pub fn mean_rel_perf(&self, n: usize) -> f64 {
+        let xs: Vec<f64> = self.samples.iter().rev().take(n).map(|s| s.rel_perf).collect();
+        mean(&xs)
+    }
+
+    /// Coefficient of variation of throughput (run-to-run variability).
+    pub fn perf_cov(&self) -> f64 {
+        let xs: Vec<f64> = self.samples.iter().map(|s| s.perf).collect();
+        cov(&xs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(tick: u64, ipc: f64) -> PerfSample {
+        PerfSample {
+            tick,
+            ipc,
+            mpi: 0.01,
+            perf: ipc * 100.0,
+            rel_perf: ipc,
+            factors: Factors::ideal(),
+        }
+    }
+
+    #[test]
+    fn ring_respects_capacity() {
+        let mut h = CounterHistory::new(3);
+        for t in 0..10 {
+            h.push(sample(t, 1.0));
+        }
+        assert_eq!(h.len(), 3);
+        assert_eq!(h.last().unwrap().tick, 9);
+        assert_eq!(h.iter().next().unwrap().tick, 7);
+    }
+
+    #[test]
+    fn recent_means() {
+        let mut h = CounterHistory::new(10);
+        for t in 0..6 {
+            h.push(sample(t, t as f64));
+        }
+        // last 3 samples: ipc 3, 4, 5
+        assert!((h.mean_ipc(3) - 4.0).abs() < 1e-12);
+        assert!((h.mean_ipc(100) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cov_zero_for_constant_series() {
+        let mut h = CounterHistory::new(10);
+        for t in 0..5 {
+            h.push(sample(t, 2.0));
+        }
+        assert!(h.perf_cov() < 1e-12);
+    }
+
+    #[test]
+    fn empty_history_is_safe() {
+        let h = CounterHistory::new(4);
+        assert!(h.is_empty());
+        assert!(h.last().is_none());
+        assert_eq!(h.mean_ipc(5), 0.0);
+    }
+}

@@ -1,0 +1,163 @@
+//! Event tracing: a structured log of everything that changes a mapping —
+//! arrivals, boots, pins, migrations, remaps, evictions.  The paper's
+//! §5.3.1 observation ("this mapping changes during runtime ... due to the
+//! inner workings of the linux scheduler") is quantified from this trace;
+//! experiments export it as CSV for offline analysis.
+
+use crate::topology::CpuId;
+use crate::vm::VmId;
+
+/// One traced event.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Event {
+    Defined { vm: VmId },
+    Booted { vm: VmId },
+    Pinned { vm: VmId, vcpu: usize, cpu: CpuId },
+    /// A floating thread moved by the host scheduler.
+    SchedMigration { vm: VmId, moved: usize },
+    /// Coordinator remap (whole-VM repin).
+    Remapped { vm: VmId, servers: usize },
+    MemoryMigrated { vm: VmId },
+    Destroyed { vm: VmId },
+    Evicted { vm: VmId },
+}
+
+impl Event {
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Event::Defined { .. } => "defined",
+            Event::Booted { .. } => "booted",
+            Event::Pinned { .. } => "pinned",
+            Event::SchedMigration { .. } => "sched_migration",
+            Event::Remapped { .. } => "remapped",
+            Event::MemoryMigrated { .. } => "memory_migrated",
+            Event::Destroyed { .. } => "destroyed",
+            Event::Evicted { .. } => "evicted",
+        }
+    }
+
+    pub fn vm(&self) -> VmId {
+        match self {
+            Event::Defined { vm }
+            | Event::Booted { vm }
+            | Event::Pinned { vm, .. }
+            | Event::SchedMigration { vm, .. }
+            | Event::Remapped { vm, .. }
+            | Event::MemoryMigrated { vm }
+            | Event::Destroyed { vm }
+            | Event::Evicted { vm } => *vm,
+        }
+    }
+}
+
+/// Bounded in-memory trace.
+#[derive(Debug, Clone)]
+pub struct EventTrace {
+    events: Vec<(u64, Event)>,
+    cap: usize,
+    dropped: u64,
+}
+
+impl Default for EventTrace {
+    fn default() -> Self {
+        Self::new(100_000)
+    }
+}
+
+impl EventTrace {
+    pub fn new(cap: usize) -> Self {
+        Self { events: Vec::new(), cap, dropped: 0 }
+    }
+
+    pub fn push(&mut self, tick: u64, event: Event) {
+        if self.events.len() >= self.cap {
+            self.dropped += 1;
+            return;
+        }
+        self.events.push((tick, event));
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &(u64, Event)> {
+        self.events.iter()
+    }
+
+    /// Count events of a kind (e.g. scheduler churn under vanilla).
+    pub fn count_kind(&self, kind: &str) -> usize {
+        self.events.iter().filter(|(_, e)| e.kind() == kind).count()
+    }
+
+    /// Total scheduler-moved threads (the vanilla churn headline).
+    pub fn total_sched_moves(&self) -> usize {
+        self.events
+            .iter()
+            .map(|(_, e)| match e {
+                Event::SchedMigration { moved, .. } => *moved,
+                _ => 0,
+            })
+            .sum()
+    }
+
+    /// Export as CSV (`tick,kind,vm`).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("tick,kind,vm\n");
+        for (tick, e) in &self.events {
+            out.push_str(&format!("{tick},{},{}\n", e.kind(), e.vm()));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_counts() {
+        let mut t = EventTrace::new(10);
+        t.push(1, Event::Defined { vm: VmId(1) });
+        t.push(2, Event::Booted { vm: VmId(1) });
+        t.push(3, Event::SchedMigration { vm: VmId(1), moved: 3 });
+        t.push(4, Event::SchedMigration { vm: VmId(1), moved: 2 });
+        assert_eq!(t.len(), 4);
+        assert_eq!(t.count_kind("sched_migration"), 2);
+        assert_eq!(t.total_sched_moves(), 5);
+    }
+
+    #[test]
+    fn bounded_capacity_drops() {
+        let mut t = EventTrace::new(2);
+        for i in 0..5 {
+            t.push(i, Event::Defined { vm: VmId(i) });
+        }
+        assert_eq!(t.len(), 2);
+        assert_eq!(t.dropped(), 3);
+    }
+
+    #[test]
+    fn csv_export_shape() {
+        let mut t = EventTrace::new(10);
+        t.push(7, Event::Remapped { vm: VmId(3), servers: 2 });
+        let csv = t.to_csv();
+        assert!(csv.starts_with("tick,kind,vm\n"));
+        assert!(csv.contains("7,remapped,vm3"));
+    }
+
+    #[test]
+    fn event_kind_and_vm_accessors() {
+        let e = Event::Evicted { vm: VmId(9) };
+        assert_eq!(e.kind(), "evicted");
+        assert_eq!(e.vm(), VmId(9));
+    }
+}

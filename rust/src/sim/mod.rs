@@ -1,0 +1,641 @@
+//! Discrete-time host simulator: the stand-in for the paper's 6-server
+//! NumaConnect testbed + CentOS/KVM stack (see DESIGN.md §Substitutions).
+//!
+//! One tick ≈ one second of wall-clock.  Each tick the simulator
+//! (1) lets the vanilla Linux balancer move floating threads,
+//! (2) evaluates the joint performance model, and (3) synthesizes noisy
+//! IPC/MPI counters per VM — the same signals the paper reads via `perf`.
+
+pub mod counters;
+pub mod events;
+pub mod linux_sched;
+pub mod perf_model;
+
+pub use counters::{CounterHistory, Factors, PerfSample};
+pub use events::{Event, EventTrace};
+pub use perf_model::{ModelOut, ModelParams, VmView};
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::topology::{CpuId, NodeId, Topology};
+use crate::util::rng::Rng;
+use crate::vm::{Vm, VmId, VmState, VmType};
+use crate::workload::loadgen::LoadGen;
+use crate::workload::App;
+use linux_sched::{LinuxScheduler, VanillaParams};
+
+/// Which host scheduler governs *floating* (unpinned) vCPUs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedulerKind {
+    /// Default Linux/KVM behaviour: all vCPUs float, memory is first-touch.
+    Vanilla,
+    /// Coordinator-controlled: vCPUs are pinned via the libvirt-like API;
+    /// any still-floating vCPU falls back to vanilla behaviour.
+    Pinned,
+}
+
+/// Simulator configuration.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    pub seed: u64,
+    pub scheduler: SchedulerKind,
+    /// Multiplicative log-normal noise on synthesized counters.
+    pub noise_sigma: f64,
+    pub model: ModelParams,
+    pub vanilla: VanillaParams,
+    /// Counter history ring size per VM.
+    pub history_cap: usize,
+}
+
+impl SimConfig {
+    pub fn vanilla(seed: u64) -> Self {
+        Self {
+            seed,
+            scheduler: SchedulerKind::Vanilla,
+            noise_sigma: 0.03,
+            model: ModelParams::default(),
+            vanilla: VanillaParams::default(),
+            history_cap: 512,
+        }
+    }
+
+    pub fn pinned(seed: u64) -> Self {
+        Self { scheduler: SchedulerKind::Pinned, ..Self::vanilla(seed) }
+    }
+}
+
+/// A VM under simulation: spec + live scheduling state.
+#[derive(Debug, Clone)]
+pub struct ManagedVm {
+    pub vm: Vm,
+    /// Actual current hw-thread of each vCPU (pin if pinned, else the
+    /// vanilla scheduler's choice).  `None` until started.
+    pub vcpu_pos: Vec<Option<CpuId>>,
+    pub loadgen: LoadGen,
+    /// Utilization drawn this tick.
+    pub util: f64,
+    /// Fraction of vCPUs moved this tick (feeds the churn penalty).
+    pub churn: f64,
+    pub history: CounterHistory,
+    rng: Rng,
+}
+
+impl ManagedVm {
+    /// vCPU-count-weighted placement fractions per node from live positions.
+    pub fn placement_fractions(&self, topo: &Topology) -> Vec<f64> {
+        let mut p = vec![0.0; topo.num_nodes()];
+        let mut placed = 0usize;
+        for pos in self.vcpu_pos.iter().flatten() {
+            p[topo.node_of_cpu(*pos).0] += 1.0;
+            placed += 1;
+        }
+        if placed > 0 {
+            p.iter_mut().for_each(|x| *x /= placed as f64);
+        }
+        p
+    }
+}
+
+/// The host simulator.
+pub struct Simulator {
+    pub topo: Topology,
+    pub cfg: SimConfig,
+    vms: BTreeMap<VmId, ManagedVm>,
+    sched: LinuxScheduler,
+    tick: u64,
+    next_id: u64,
+    rng: Rng,
+    /// Memoized solo-ideal throughput per (app, vcpus).
+    solo_cache: std::cell::RefCell<std::collections::HashMap<(App, usize), f64>>,
+    /// Structured event log (arrivals, migrations, remaps, ...).
+    pub trace: EventTrace,
+}
+
+impl Simulator {
+    pub fn new(topo: Topology, cfg: SimConfig) -> Self {
+        let sched = LinuxScheduler::new(&topo, cfg.vanilla.clone());
+        let rng = Rng::new(cfg.seed);
+        Self {
+            topo,
+            cfg,
+            vms: BTreeMap::new(),
+            sched,
+            tick: 0,
+            next_id: 0,
+            rng,
+            solo_cache: Default::default(),
+            trace: EventTrace::default(),
+        }
+    }
+
+    pub fn tick(&self) -> u64 {
+        self.tick
+    }
+
+    pub fn vms(&self) -> impl Iterator<Item = (&VmId, &ManagedVm)> {
+        self.vms.iter()
+    }
+
+    pub fn num_vms(&self) -> usize {
+        self.vms.len()
+    }
+
+    pub fn get(&self, id: VmId) -> Option<&ManagedVm> {
+        self.vms.get(&id)
+    }
+
+    pub fn get_mut(&mut self, id: VmId) -> Option<&mut ManagedVm> {
+        self.vms.get_mut(&id)
+    }
+
+    // ---- lifecycle (the libvirt-like surface) ---------------------------
+
+    /// Define a VM (not yet running).
+    pub fn create(&mut self, vm_type: VmType, app: App) -> VmId {
+        self.next_id += 1;
+        let id = VmId(self.next_id);
+        let mut rng = self.rng.fork(self.next_id);
+        let vm = Vm::new(id, vm_type, app, self.tick);
+        let loadgen = LoadGen::new(app, &mut rng);
+        self.vms.insert(
+            id,
+            ManagedVm {
+                vcpu_pos: vec![None; vm.vcpus()],
+                vm,
+                loadgen,
+                util: 1.0,
+                churn: 0.0,
+                history: CounterHistory::new(self.cfg.history_cap),
+                rng,
+            },
+        );
+        self.trace.push(self.tick, Event::Defined { vm: id });
+        id
+    }
+
+    /// Start a VM: floating vCPUs get vanilla wakeup placement; memory is
+    /// placed first-touch (proportional to where the threads landed)
+    /// unless the coordinator placed it explicitly beforehand.
+    pub fn start(&mut self, id: VmId) -> Result<()> {
+        self.sync_sched_load();
+        let topo = self.topo.clone();
+        let mut rng = self.rng.fork(id.0 ^ 0xBEEF);
+        let mvm = self.vms.get_mut(&id).ok_or_else(|| anyhow!("no such vm {id}"))?;
+        if mvm.vm.state == VmState::Running {
+            bail!("{id} already running");
+        }
+        for (i, pin) in mvm.vm.vcpu_pins.clone().iter().enumerate() {
+            mvm.vcpu_pos[i] = Some(match pin {
+                Some(cpu) => *cpu,
+                None => self.sched.place_thread(&mut rng),
+            });
+        }
+        if mvm.vm.mem_gb_per_node.is_empty() {
+            // First-touch memory policy: most pages are faulted in by the
+            // boot vCPU (guest kernel + heap arenas), the rest where the
+            // other threads happen to run at start.  This is the default
+            // kernel behaviour the paper's vanilla baseline inherits —
+            // and never revisits, since pages do not migrate.
+            const BOOT_SKEW: f64 = 0.6;
+            let mut fractions = mvm.placement_fractions(&topo);
+            if let Some(boot_cpu) = mvm.vcpu_pos[0] {
+                let boot_node = topo.node_of_cpu(boot_cpu).0;
+                fractions.iter_mut().for_each(|f| *f *= 1.0 - BOOT_SKEW);
+                fractions[boot_node] += BOOT_SKEW;
+            }
+            let total = mvm.vm.mem_gb();
+            mvm.vm.mem_gb_per_node = fractions
+                .iter()
+                .enumerate()
+                .filter(|(_, f)| **f > 0.0)
+                .map(|(n, f)| (NodeId(n), f * total))
+                .collect();
+        }
+        mvm.vm.state = VmState::Running;
+        self.trace.push(self.tick, Event::Booted { vm: id });
+        Ok(())
+    }
+
+    /// Pin one vCPU to a hardware thread (libvirt `vcpupin`).
+    pub fn pin_vcpu(&mut self, id: VmId, vcpu: usize, cpu: CpuId) -> Result<()> {
+        if cpu.0 >= self.topo.num_cpus() {
+            bail!("cpu {} out of range", cpu.0);
+        }
+        let running = {
+            let mvm = self.vms.get_mut(&id).ok_or_else(|| anyhow!("no such vm {id}"))?;
+            if vcpu >= mvm.vm.vcpus() {
+                bail!("{id} has no vcpu {vcpu}");
+            }
+            let moved = mvm.vcpu_pos[vcpu].is_some_and(|cur| cur != cpu);
+            mvm.vm.vcpu_pins[vcpu] = Some(cpu);
+            if mvm.vm.state == VmState::Running {
+                mvm.vcpu_pos[vcpu] = Some(cpu);
+                if moved {
+                    mvm.churn += 1.0 / mvm.vm.vcpus() as f64;
+                }
+            }
+            mvm.vm.state == VmState::Running
+        };
+        if running {
+            self.sync_sched_load();
+        }
+        self.trace.push(self.tick, Event::Pinned { vm: id, vcpu, cpu });
+        Ok(())
+    }
+
+    /// Pin all vCPUs at once (the coordinator's normal mode).
+    pub fn pin_all(&mut self, id: VmId, cpus: &[CpuId]) -> Result<()> {
+        let nvcpus =
+            self.vms.get(&id).ok_or_else(|| anyhow!("no such vm {id}"))?.vm.vcpus();
+        if cpus.len() != nvcpus {
+            bail!("{id}: {} pins for {} vcpus", cpus.len(), nvcpus);
+        }
+        for (i, cpu) in cpus.iter().enumerate() {
+            self.pin_vcpu(id, i, *cpu)?;
+        }
+        Ok(())
+    }
+
+    /// Remove all pins; vCPUs float again next tick.
+    pub fn unpin_all(&mut self, id: VmId) -> Result<()> {
+        let mvm = self.vms.get_mut(&id).ok_or_else(|| anyhow!("no such vm {id}"))?;
+        mvm.vm.vcpu_pins.iter_mut().for_each(|p| *p = None);
+        Ok(())
+    }
+
+    /// Explicitly place (or migrate) memory across nodes; replaces the
+    /// previous distribution.  Fractions are normalized to the VM's size.
+    pub fn place_memory(&mut self, id: VmId, dist: &[(NodeId, f64)]) -> Result<()> {
+        let num_nodes = self.topo.num_nodes();
+        let mvm = self.vms.get_mut(&id).ok_or_else(|| anyhow!("no such vm {id}"))?;
+        let total: f64 = dist.iter().map(|(_, gb)| gb).sum();
+        if total <= 0.0 {
+            bail!("empty memory distribution");
+        }
+        if let Some((bad, _)) = dist.iter().find(|(n, _)| n.0 >= num_nodes) {
+            bail!("node {} out of range", bad.0);
+        }
+        let scale = mvm.vm.mem_gb() / total;
+        let migrating = !mvm.vm.mem_gb_per_node.is_empty();
+        mvm.vm.mem_gb_per_node =
+            dist.iter().map(|(n, gb)| (*n, gb * scale)).collect();
+        if migrating && mvm.vm.state == VmState::Running {
+            // Page migration stalls the guest briefly — charge churn.
+            mvm.churn += 0.25;
+            self.trace.push(self.tick, Event::MemoryMigrated { vm: id });
+        }
+        Ok(())
+    }
+
+    /// Destroy (libvirt `destroy` + `undefine`).
+    pub fn destroy(&mut self, id: VmId) -> Result<()> {
+        self.vms.remove(&id).ok_or_else(|| anyhow!("no such vm {id}"))?;
+        self.sync_sched_load();
+        self.trace.push(self.tick, Event::Destroyed { vm: id });
+        Ok(())
+    }
+
+    // ---- stepping --------------------------------------------------------
+
+    fn sync_sched_load(&mut self) {
+        self.sched.sync_load(
+            self.vms
+                .values()
+                .filter(|m| m.vm.state == VmState::Running)
+                .flat_map(|m| m.vcpu_pos.iter().flatten().copied()),
+        );
+    }
+
+    /// Advance one tick; returns this tick's sample per running VM.
+    pub fn step(&mut self) -> Vec<(VmId, PerfSample)> {
+        self.tick += 1;
+        let tick = self.tick;
+
+        // 1. Vanilla balancing of floating vCPUs.
+        self.sync_sched_load();
+        let ids: Vec<VmId> = self.vms.keys().copied().collect();
+        for id in &ids {
+            // Split borrows: temporarily move positions out.
+            let (mut floating, idxs): (Vec<CpuId>, Vec<usize>) = {
+                let mvm = &self.vms[id];
+                if mvm.vm.state != VmState::Running {
+                    continue;
+                }
+                let mut cpus = Vec::new();
+                let mut idxs = Vec::new();
+                for (i, pos) in mvm.vcpu_pos.iter().enumerate() {
+                    if mvm.vm.vcpu_pins[i].is_none() {
+                        if let Some(c) = pos {
+                            cpus.push(*c);
+                            idxs.push(i);
+                        }
+                    }
+                }
+                (cpus, idxs)
+            };
+            let mut rng = self.rng.fork(tick.wrapping_mul(31).wrapping_add(id.0));
+            let moved = if floating.is_empty() {
+                0
+            } else {
+                self.sched.balance(&mut floating, &mut rng)
+            };
+            let mvm = self.vms.get_mut(id).unwrap();
+            for (k, i) in idxs.iter().enumerate() {
+                mvm.vcpu_pos[*i] = Some(floating[k]);
+            }
+            if !mvm.vcpu_pos.is_empty() {
+                mvm.churn += moved as f64 / mvm.vcpu_pos.len() as f64;
+            }
+            if moved > 0 {
+                self.trace.push(tick, Event::SchedMigration { vm: *id, moved });
+            }
+        }
+
+        // 2. Draw utilization.
+        for mvm in self.vms.values_mut() {
+            if mvm.vm.state == VmState::Running {
+                let mut r = mvm.rng.clone();
+                mvm.util = mvm.loadgen.utilization(tick, &mut r);
+                mvm.rng = r;
+            }
+        }
+
+        // 3. Build views and evaluate the model jointly.
+        let running: Vec<VmId> = self
+            .vms
+            .iter()
+            .filter(|(_, m)| m.vm.state == VmState::Running)
+            .map(|(id, _)| *id)
+            .collect();
+        let occupancy = self.occupancy();
+        let views: Vec<VmView> = running
+            .iter()
+            .map(|id| {
+                let mvm = &self.vms[id];
+                let p = mvm.placement_fractions(&self.topo);
+                let m = mvm.vm.memory_fractions(self.topo.num_nodes());
+                let mean_occ = {
+                    let occs: Vec<f64> = mvm
+                        .vcpu_pos
+                        .iter()
+                        .flatten()
+                        .map(|c| occupancy[c.0] as f64)
+                        .collect();
+                    if occs.is_empty() { 1.0 } else { occs.iter().sum::<f64>() / occs.len() as f64 }
+                };
+                VmView {
+                    p,
+                    m,
+                    vcpus: mvm.vm.vcpus(),
+                    util: mvm.util,
+                    mean_occupancy: mean_occ,
+                    churn: mvm.churn.min(1.0),
+                    profile: mvm.vm.app.profile(),
+                }
+            })
+            .collect();
+        let outs = perf_model::evaluate(&self.topo, &views, &self.cfg.model);
+
+        // 4. Synthesize noisy counters + reset churn.
+        let sigma = self.cfg.noise_sigma;
+        let mut samples = Vec::with_capacity(running.len());
+        for (id, out) in running.iter().zip(outs.iter()) {
+            let solo = self.solo_ref(self.vms[id].vm.app, self.vms[id].vm.vcpus());
+            let mvm = self.vms.get_mut(id).unwrap();
+            let noise = mvm.rng.noise(sigma);
+            let denom = (solo * mvm.util).max(1e-9);
+            let sample = PerfSample {
+                tick,
+                ipc: out.ipc * noise,
+                mpi: out.mpi * mvm.rng.noise(sigma),
+                perf: out.perf * noise,
+                rel_perf: out.perf * noise / denom,
+                factors: out.factors,
+            };
+            mvm.history.push(sample);
+            mvm.churn = 0.0;
+            samples.push((*id, sample));
+        }
+        samples
+    }
+
+    /// Run `n` ticks, discarding samples (convenience for warmup).
+    pub fn run(&mut self, n: u64) {
+        for _ in 0..n {
+            self.step();
+        }
+    }
+
+    // ---- introspection ----------------------------------------------------
+
+    /// Runnable-thread count per hardware thread (overbooking map).
+    pub fn occupancy(&self) -> Vec<u32> {
+        let mut occ = vec![0u32; self.topo.num_cpus()];
+        for mvm in self.vms.values() {
+            if mvm.vm.state != VmState::Running {
+                continue;
+            }
+            for pos in mvm.vcpu_pos.iter().flatten() {
+                occ[pos.0] += 1;
+            }
+        }
+        occ
+    }
+
+    /// Which VMs occupy each core (Figs. 12–13 core-mapping snapshots).
+    pub fn core_map(&self) -> Vec<Vec<VmId>> {
+        let mut map = vec![Vec::new(); self.topo.num_cores()];
+        for (id, mvm) in &self.vms {
+            if mvm.vm.state != VmState::Running {
+                continue;
+            }
+            for pos in mvm.vcpu_pos.iter().flatten() {
+                let core = self.topo.core_of_cpu(*pos);
+                if !map[core.0].contains(id) {
+                    map[core.0].push(*id);
+                }
+            }
+        }
+        map
+    }
+
+    /// Memory allocated per node (GB), for capacity checks.
+    pub fn mem_allocated(&self) -> Vec<f64> {
+        let mut alloc = vec![0.0; self.topo.num_nodes()];
+        for mvm in self.vms.values() {
+            for (node, gb) in &mvm.vm.mem_gb_per_node {
+                alloc[node.0] += gb;
+            }
+        }
+        alloc
+    }
+
+    /// Solo-ideal throughput for (app, vcpus) — memoized.
+    pub fn solo_ref(&self, app: App, vcpus: usize) -> f64 {
+        if let Some(v) = self.solo_cache.borrow().get(&(app, vcpus)) {
+            return *v;
+        }
+        let out = perf_model::solo_ideal(&self.topo, &app.profile(), vcpus, &self.cfg.model);
+        self.solo_cache.borrow_mut().insert((app, vcpus), out.perf);
+        out.perf
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sim(kind: SchedulerKind, seed: u64) -> Simulator {
+        let cfg = match kind {
+            SchedulerKind::Vanilla => SimConfig::vanilla(seed),
+            SchedulerKind::Pinned => SimConfig::pinned(seed),
+        };
+        Simulator::new(Topology::paper(), cfg)
+    }
+
+    fn pin_local(sim: &mut Simulator, id: VmId, first_cpu: usize) {
+        let n = sim.get(id).unwrap().vm.vcpus();
+        let cpus: Vec<CpuId> = (first_cpu..first_cpu + n).map(CpuId).collect();
+        sim.pin_all(id, &cpus).unwrap();
+        // Memory local to the pinned node(s).
+        let node = sim.topo.node_of_cpu(CpuId(first_cpu));
+        sim.place_memory(id, &[(node, 1.0)]).unwrap();
+    }
+
+    #[test]
+    fn lifecycle_create_start_destroy() {
+        let mut s = sim(SchedulerKind::Vanilla, 1);
+        let id = s.create(VmType::Small, App::Derby);
+        assert_eq!(s.get(id).unwrap().vm.state, VmState::Defined);
+        s.start(id).unwrap();
+        assert_eq!(s.get(id).unwrap().vm.state, VmState::Running);
+        assert!(s.get(id).unwrap().vcpu_pos.iter().all(Option::is_some));
+        // First-touch memory was placed.
+        assert!(s.get(id).unwrap().vm.mem_placed_gb() > 15.9);
+        s.destroy(id).unwrap();
+        assert!(s.get(id).is_none());
+    }
+
+    #[test]
+    fn double_start_rejected() {
+        let mut s = sim(SchedulerKind::Vanilla, 2);
+        let id = s.create(VmType::Small, App::Fft);
+        s.start(id).unwrap();
+        assert!(s.start(id).is_err());
+    }
+
+    #[test]
+    fn pinned_vm_stays_put_vanilla_drifts() {
+        let mut s = sim(SchedulerKind::Pinned, 3);
+        let pinned = s.create(VmType::Small, App::Derby);
+        pin_local(&mut s, pinned, 0);
+        s.start(pinned).unwrap();
+        let mut v = sim(SchedulerKind::Vanilla, 3);
+        let floating = v.create(VmType::Small, App::Derby);
+        v.start(floating).unwrap();
+
+        let before_pin: Vec<_> = s.get(pinned).unwrap().vcpu_pos.clone();
+        let before_float: Vec<_> = v.get(floating).unwrap().vcpu_pos.clone();
+        for _ in 0..60 {
+            s.step();
+            v.step();
+        }
+        assert_eq!(s.get(pinned).unwrap().vcpu_pos, before_pin, "pins must hold");
+        assert_ne!(v.get(floating).unwrap().vcpu_pos, before_float, "vanilla should drift");
+    }
+
+    #[test]
+    fn pinned_local_outperforms_vanilla_for_sensitive_app() {
+        // The paper's core claim in miniature.
+        let mut s = sim(SchedulerKind::Pinned, 4);
+        let a = s.create(VmType::Medium, App::Neo4j);
+        pin_local(&mut s, a, 0);
+        s.start(a).unwrap();
+        let mut v = sim(SchedulerKind::Vanilla, 4);
+        let b = v.create(VmType::Medium, App::Neo4j);
+        v.start(b).unwrap();
+        let mut p_pin = 0.0;
+        let mut p_van = 0.0;
+        for _ in 0..50 {
+            p_pin += s.step()[0].1.perf;
+            p_van += v.step()[0].1.perf;
+        }
+        assert!(
+            p_pin > p_van * 1.3,
+            "pinned {p_pin} should clearly beat vanilla {p_van}"
+        );
+    }
+
+    #[test]
+    fn occupancy_counts_all_running_vcpus() {
+        let mut s = sim(SchedulerKind::Vanilla, 5);
+        for _ in 0..4 {
+            let id = s.create(VmType::Medium, App::Sockshop);
+            s.start(id).unwrap();
+        }
+        let total: u32 = s.occupancy().iter().sum();
+        assert_eq!(total, 32);
+    }
+
+    #[test]
+    fn core_map_lists_each_vm_once_per_core() {
+        let mut s = sim(SchedulerKind::Pinned, 6);
+        let id = s.create(VmType::Small, App::Sunflow);
+        // Two vcpus per core: 4 vcpus on cores 0-1.
+        s.pin_all(id, &[CpuId(0), CpuId(1), CpuId(2), CpuId(3)]).unwrap();
+        s.place_memory(id, &[(NodeId(0), 1.0)]).unwrap();
+        s.start(id).unwrap();
+        let map = s.core_map();
+        assert_eq!(map[0], vec![id]);
+        assert_eq!(map[1], vec![id]);
+        assert!(map[2].is_empty());
+    }
+
+    #[test]
+    fn place_memory_normalizes_and_validates() {
+        let mut s = sim(SchedulerKind::Pinned, 7);
+        let id = s.create(VmType::Large, App::Stream);
+        s.place_memory(id, &[(NodeId(0), 3.0), (NodeId(1), 1.0)]).unwrap();
+        let m = s.get(id).unwrap().vm.memory_fractions(s.topo.num_nodes());
+        assert!((m[0] - 0.75).abs() < 1e-9);
+        assert!(s.place_memory(id, &[(NodeId(999), 1.0)]).is_err());
+        assert!(s.place_memory(id, &[]).is_err());
+    }
+
+    #[test]
+    fn counters_accumulate_with_noise() {
+        let mut s = sim(SchedulerKind::Vanilla, 8);
+        let id = s.create(VmType::Small, App::Mpegaudio);
+        s.start(id).unwrap();
+        for _ in 0..20 {
+            s.step();
+        }
+        let h = &s.get(id).unwrap().history;
+        assert_eq!(h.len(), 20);
+        assert!(h.mean_ipc(10) > 0.0);
+        assert!(h.mean_mpi(10) > 0.0);
+    }
+
+    #[test]
+    fn deterministic_under_same_seed() {
+        let run = |seed| {
+            let mut s = sim(SchedulerKind::Vanilla, seed);
+            let id = s.create(VmType::Medium, App::Fft);
+            s.start(id).unwrap();
+            (0..30).map(|_| s.step()[0].1.perf).collect::<Vec<f64>>()
+        };
+        assert_eq!(run(42), run(42));
+        assert_ne!(run(42), run(43));
+    }
+
+    #[test]
+    fn solo_ref_memoizes_consistently() {
+        let s = sim(SchedulerKind::Pinned, 9);
+        let a = s.solo_ref(App::Stream, 8);
+        let b = s.solo_ref(App::Stream, 8);
+        assert_eq!(a, b);
+        assert!(a > 0.0);
+    }
+}

@@ -1,0 +1,458 @@
+//! The performance model: maps (topology, placements, workloads) to
+//! per-VM throughput, IPC and MPI (the simulator's ground truth).
+//!
+//! Four multiplicative penalty sources, matching the paper's analysis of
+//! why the vanilla scheduler collapses (§5.3.2: "resource contention,
+//! overbooking and NUMA distance"):
+//!
+//! 1. **Latency (NUMA distance)** — execution stretches by
+//!    `1 + stall · σ · (d̄/d_local − 1)` where `d̄` is the
+//!    placement-weighted mean SLIT distance between the VM's vCPUs and its
+//!    memory, `stall` the app's memory-stall fraction, and `σ` the
+//!    sensitivity multiplier (§2.2's sensitive/insensitive tag).
+//! 2. **Cache/class contention** — LLC pressure from co-resident thrashy
+//!    apps plus the animal-class pair penalties (Table 3).
+//! 3. **Memory bandwidth** — per-node controller saturation and the much
+//!    smaller cache-coherent fabric capacity for remote traffic.
+//! 4. **Overbooking** — timesharing when multiple vCPUs land on one core
+//!    (vanilla only; the paper's algorithm forbids it).
+//!
+//! Throughput combines the compute path and the bandwidth path
+//! harmonically (time-domain addition); IPC excludes the overbooking
+//! factor (timeslicing does not change per-cycle efficiency, only wall
+//! clock), which is why the paper can use IPC as a placement signal.
+
+use crate::topology::Topology;
+use crate::workload::AppProfile;
+
+use super::counters::Factors;
+
+/// Immutable per-VM view consumed by the model.
+#[derive(Debug, Clone)]
+pub struct VmView {
+    /// Fraction of vCPUs per NUMA node (sums to 1).
+    pub p: Vec<f64>,
+    /// Fraction of memory per NUMA node (sums to 1).
+    pub m: Vec<f64>,
+    /// Number of vCPUs.
+    pub vcpus: usize,
+    /// Current target utilization in [0, 1].
+    pub util: f64,
+    /// Mean number of runnable threads per core used by this VM
+    /// (1 = dedicated cores; 2 = every core shared with one other thread).
+    pub mean_occupancy: f64,
+    /// Fraction of this VM's vCPUs whose core moved this tick (scheduler
+    /// churn -> cold caches). 0 under pinning.
+    pub churn: f64,
+    pub profile: AppProfile,
+}
+
+/// Model constants (tunable; defaults calibrated against the paper's
+/// reported magnitudes — see EXPERIMENTS.md).
+#[derive(Debug, Clone)]
+pub struct ModelParams {
+    /// Sensitivity multiplier σ for remote-memory-sensitive apps.
+    pub sens_mult: f64,
+    /// σ for insensitive apps.
+    pub insens_mult: f64,
+    /// Cache-pressure → IPC coefficient.
+    pub press_coeff: f64,
+    /// Class-pair penalty → slowdown coefficient.
+    pub pair_coeff: f64,
+    /// Cache-pressure → MPI inflation coefficient.
+    pub mpi_press_coeff: f64,
+    /// Pair penalty → MPI inflation coefficient.
+    pub mpi_pair_coeff: f64,
+    /// Per-direction fabric link bandwidth, GB/s (NumaConnect-class).
+    pub link_bw_gbs: f64,
+    /// Total fabric bisection capacity, GB/s.
+    pub fabric_cap_gbs: f64,
+    /// Cache-cooling slowdown per unit churn.
+    pub churn_coeff: f64,
+    /// IPC context-switch penalty base per extra runnable thread.
+    pub ctx_penalty: f64,
+}
+
+impl Default for ModelParams {
+    fn default() -> Self {
+        Self {
+            sens_mult: 1.0,
+            insens_mult: 0.3,
+            press_coeff: 0.9,
+            pair_coeff: 0.08,
+            mpi_press_coeff: 1.5,
+            mpi_pair_coeff: 0.12,
+            // NumaConnect-class fabrics deliver far less than local DRAM
+            // bandwidth for remote traffic, and coherence-protocol thrash
+            // degrades it further under contention.
+            link_bw_gbs: 0.4,
+            fabric_cap_gbs: 6.0,
+            churn_coeff: 2.5,
+            ctx_penalty: 0.95,
+        }
+    }
+}
+
+/// Model output for one VM (pre-noise).
+#[derive(Debug, Clone, Copy)]
+pub struct ModelOut {
+    pub ipc: f64,
+    pub mpi: f64,
+    pub perf: f64,
+    pub factors: Factors,
+}
+
+/// Evaluate all VMs jointly (contention couples them).
+pub fn evaluate(topo: &Topology, views: &[VmView], params: &ModelParams) -> Vec<ModelOut> {
+    let n = topo.num_nodes();
+    let l3_mb = topo.spec.l3_per_node_mb;
+    let node_bw = topo.spec.mem_bw_per_node_gbs;
+
+    // --- shared state -----------------------------------------------------
+    // Cache pressure per node (working-set MB weighted by thrashiness / L3).
+    let mut press = vec![0.0f64; n];
+    // Memory-controller demand per node (GB/s, at the memory side).
+    let mut mem_demand = vec![0.0f64; n];
+    // Total cross-server (fabric) traffic GB/s.
+    let mut fabric_demand = 0.0f64;
+
+    let per_vm_demand: Vec<f64> = views
+        .iter()
+        .map(|v| v.profile.bw_gbs_per_vcpu * v.vcpus as f64 * v.util)
+        .collect();
+
+    for (v, view) in views.iter().enumerate() {
+        let vcpus = view.vcpus as f64;
+        for i in 0..n {
+            press[i] += view.p[i] * vcpus * view.profile.cache_mb_per_vcpu * view.profile.thrash
+                / l3_mb;
+            mem_demand[i] += per_vm_demand[v] * view.m[i];
+        }
+        fabric_demand += per_vm_demand[v] * remote_fraction(topo, &view.p, &view.m);
+    }
+
+    let mem_sat: Vec<f64> = mem_demand
+        .iter()
+        .map(|&d| if d <= node_bw { 1.0 } else { node_bw / d })
+        .collect();
+    let fabric_sat = if fabric_demand <= params.fabric_cap_gbs {
+        1.0
+    } else {
+        params.fabric_cap_gbs / fabric_demand
+    };
+
+    // --- per-VM evaluation -------------------------------------------------
+    views
+        .iter()
+        .enumerate()
+        .map(|(v, view)| evaluate_one(topo, views, view, v, params, &press, &mem_sat, fabric_sat,
+                                      per_vm_demand[v]))
+        .collect()
+}
+
+fn remote_fraction(topo: &Topology, p: &[f64], m: &[f64]) -> f64 {
+    let mut remote = 0.0;
+    for (i, &pi) in p.iter().enumerate() {
+        if pi == 0.0 {
+            continue;
+        }
+        for (j, &mj) in m.iter().enumerate() {
+            if mj == 0.0 {
+                continue;
+            }
+            if topo.server_of_node(crate::topology::NodeId(i))
+                != topo.server_of_node(crate::topology::NodeId(j))
+            {
+                remote += pi * mj;
+            }
+        }
+    }
+    remote
+}
+
+#[allow(clippy::too_many_arguments)]
+fn evaluate_one(
+    topo: &Topology,
+    views: &[VmView],
+    view: &VmView,
+    v_idx: usize,
+    params: &ModelParams,
+    press: &[f64],
+    mem_sat: &[f64],
+    fabric_sat: f64,
+    bw_demand: f64,
+) -> ModelOut {
+    let prof = &view.profile;
+    let n = topo.num_nodes();
+    let vcpus = view.vcpus as f64;
+
+    // 1. Latency factor from placement-weighted mean distance.
+    let mut avg_dist = 0.0;
+    let mut p_total = 0.0;
+    for i in 0..n {
+        if view.p[i] == 0.0 {
+            continue;
+        }
+        p_total += view.p[i];
+        for j in 0..n {
+            if view.m[j] == 0.0 {
+                continue;
+            }
+            avg_dist += view.p[i]
+                * view.m[j]
+                * topo.distance(crate::topology::NodeId(i), crate::topology::NodeId(j));
+        }
+    }
+    // Unplaced VM (no pins yet): treat as local.
+    let avg_dist = if p_total > 0.0 { avg_dist / p_total } else { 10.0 };
+    let sigma = if prof.sensitivity.is_sensitive() { params.sens_mult } else { params.insens_mult };
+    let lat_mult = 1.0 + prof.mem_stall_frac * sigma * (avg_dist / 10.0 - 1.0);
+    let lat = 1.0 / lat_mult;
+
+    // 2. Contention: others' cache pressure where my vCPUs sit + class pairs.
+    let mut own_press = vec![0.0f64; n];
+    for i in 0..n {
+        own_press[i] =
+            view.p[i] * vcpus * prof.cache_mb_per_vcpu * prof.thrash / topo.spec.l3_per_node_mb;
+    }
+    let mut other_press = 0.0;
+    for i in 0..n {
+        other_press += view.p[i] * (press[i] - own_press[i]).max(0.0);
+    }
+    let mut pair_pen = 0.0;
+    for (w, other) in views.iter().enumerate() {
+        if w == v_idx {
+            continue;
+        }
+        let overlap: f64 = (0..n).map(|i| view.p[i] * other.p[i]).sum();
+        if overlap > 0.0 {
+            pair_pen +=
+                crate::workload::pair_penalty(prof.class, other.profile.class) * overlap;
+        }
+    }
+    let cont = 1.0
+        / (1.0 + prof.cache_sens * params.press_coeff * other_press + params.pair_coeff * pair_pen);
+
+    // 3. Bandwidth factor: local controller saturation + fabric share.
+    let remote_frac = remote_fraction(topo, &view.p, &view.m);
+    let local_sat: f64 = (0..n).map(|j| view.m[j] * mem_sat[j]).sum::<f64>().min(1.0);
+    let bw = if bw_demand <= 1e-9 {
+        1.0
+    } else {
+        let remote_demand = bw_demand * remote_frac;
+        // A VM's remote traffic is additionally capped by the links its
+        // servers expose (a few × link bandwidth), regardless of global
+        // fabric headroom.
+        let vm_link_cap = 4.0 * params.link_bw_gbs;
+        let remote_sat = if remote_demand <= 1e-9 {
+            1.0
+        } else {
+            fabric_sat.min(vm_link_cap / remote_demand).min(1.0)
+        };
+        ((1.0 - remote_frac) * local_sat + remote_frac * remote_sat).clamp(1e-4, 1.0)
+    };
+
+    // 4. Overbooking + scheduler churn.
+    let ob_share = 1.0 / view.mean_occupancy.max(1.0);
+    let churn_pen = 1.0 / (1.0 + params.churn_coeff * view.churn);
+    let ob = ob_share * churn_pen;
+
+    // Combine: compute path vs bandwidth path, harmonically in time.
+    let cpu_path = (lat * cont).max(1e-6);
+    let a = prof.bw_bound_frac;
+    let eff = 1.0 / ((1.0 - a) / cpu_path + a / bw.max(1e-6));
+    let perf = prof.base_rate() * vcpus * view.util * eff * ob;
+
+    // Counters: IPC excludes timesharing but includes a context-switch tax.
+    let ctx = params.ctx_penalty.powf((view.mean_occupancy - 1.0).max(0.0));
+    let ipc = prof.base_ipc * eff * ctx;
+    let mpi = prof.base_mpi
+        * (1.0
+            + params.mpi_press_coeff * other_press
+            + params.mpi_pair_coeff * pair_pen
+            + 0.4 * (avg_dist / 10.0 - 1.0).min(4.0));
+
+    ModelOut { ipc, mpi, perf, factors: Factors { lat, cont, bw, ob } }
+}
+
+/// The solo-ideal reference: the VM alone on the machine, vCPUs spread
+/// over enough NUMA nodes that neither the LLC nor any memory controller
+/// saturates, memory local to its vCPUs.  This is the paper's "expected
+/// performance" `p̄` (Algorithm 1) and the normalization base of every
+/// relative-performance figure.
+pub fn solo_ideal(topo: &Topology, profile: &AppProfile, vcpus: usize, params: &ModelParams) -> ModelOut {
+    let n = topo.num_nodes();
+    let slots_per_node = topo.spec.cores_per_node * topo.spec.threads_per_core;
+    // Spread: use as many nodes as needed for bandwidth and schedulable slots.
+    let by_bw =
+        (profile.bw_gbs_per_vcpu * vcpus as f64 / topo.spec.mem_bw_per_node_gbs).ceil() as usize;
+    let by_cores = vcpus.div_ceil(slots_per_node);
+    let nodes_used = by_bw.max(by_cores).max(1).min(n);
+    let mut p = vec![0.0; n];
+    // Prefer proximity: fill nodes in `nodes_by_distance` order from node 0.
+    for (k, node) in topo.nodes_by_distance(crate::topology::NodeId(0)).iter().take(nodes_used).enumerate() {
+        let _ = k;
+        p[node.0] = 1.0 / nodes_used as f64;
+    }
+    let m = p.clone();
+    let view = VmView {
+        p,
+        m,
+        vcpus,
+        util: 1.0,
+        mean_occupancy: 1.0,
+        churn: 0.0,
+        profile: profile.clone(),
+    };
+    evaluate(topo, &[view], params)[0]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::Topology;
+    use crate::workload::App;
+
+    fn one_vm_view(topo: &Topology, app: App, vcpus: usize, node: usize) -> VmView {
+        let n = topo.num_nodes();
+        let mut p = vec![0.0; n];
+        p[node] = 1.0;
+        VmView {
+            p: p.clone(),
+            m: p,
+            vcpus,
+            util: 1.0,
+            mean_occupancy: 1.0,
+            churn: 0.0,
+            profile: app.profile(),
+        }
+    }
+
+    #[test]
+    fn ideal_local_placement_has_no_penalties() {
+        let topo = Topology::paper();
+        let view = one_vm_view(&topo, App::Mpegaudio, 4, 0);
+        let out = &evaluate(&topo, &[view], &ModelParams::default())[0];
+        assert!((out.factors.lat - 1.0).abs() < 1e-9);
+        assert!((out.factors.cont - 1.0).abs() < 1e-9);
+        assert!((out.factors.ob - 1.0).abs() < 1e-9);
+        assert!((out.ipc - App::Mpegaudio.profile().base_ipc).abs() < 0.01);
+    }
+
+    #[test]
+    fn remote_memory_slows_sensitive_apps() {
+        let topo = Topology::paper();
+        let mut view = one_vm_view(&topo, App::Neo4j, 4, 0);
+        // memory entirely on a 2-hop remote server
+        view.m = vec![0.0; topo.num_nodes()];
+        view.m[24] = 1.0; // server 4 — 2 torus hops from server 0
+        let params = ModelParams::default();
+        let remote = evaluate(&topo, &[view], &params)[0];
+        let local = evaluate(&topo, &[one_vm_view(&topo, App::Neo4j, 4, 0)], &params)[0];
+        assert!(remote.perf < local.perf * 0.3, "remote {} local {}", remote.perf, local.perf);
+        assert!(remote.factors.lat < 0.3);
+    }
+
+    #[test]
+    fn insensitive_apps_shrug_off_distance() {
+        let topo = Topology::paper();
+        let mut view = one_vm_view(&topo, App::Sunflow, 4, 0);
+        view.m = vec![0.0; topo.num_nodes()];
+        view.m[24] = 1.0;
+        let params = ModelParams::default();
+        let remote = evaluate(&topo, &[view], &params)[0];
+        // Sunflow is insensitive + low stall: mild impact only.
+        assert!(remote.factors.lat > 0.65, "lat factor {}", remote.factors.lat);
+    }
+
+    #[test]
+    fn devil_colocation_hurts_rabbit_not_vice_versa() {
+        let topo = Topology::paper();
+        let rabbit = one_vm_view(&topo, App::Mpegaudio, 4, 0);
+        let devil = one_vm_view(&topo, App::Fft, 4, 0);
+        let params = ModelParams::default();
+        let outs = evaluate(&topo, &[rabbit.clone(), devil.clone()], &params);
+        let solo_rabbit = evaluate(&topo, &[rabbit], &params)[0];
+        let solo_devil = evaluate(&topo, &[devil], &params)[0];
+        let rabbit_degr = outs[0].perf / solo_rabbit.perf;
+        let devil_degr = outs[1].perf / solo_devil.perf;
+        assert!(rabbit_degr < 0.75, "rabbit should suffer: {rabbit_degr}");
+        assert!(devil_degr > rabbit_degr, "devil should suffer less");
+    }
+
+    #[test]
+    fn two_sheep_colocate_peacefully() {
+        let topo = Topology::paper();
+        let a = one_vm_view(&topo, App::Sockshop, 4, 0);
+        let b = one_vm_view(&topo, App::Derby, 4, 0);
+        let params = ModelParams::default();
+        let outs = evaluate(&topo, &[a.clone(), b], &params);
+        let solo = evaluate(&topo, &[a], &params)[0];
+        assert!(outs[0].perf / solo.perf > 0.9, "sheep-pair degradation too big");
+    }
+
+    #[test]
+    fn overbooking_halves_throughput_but_not_ipc() {
+        let topo = Topology::paper();
+        let mut view = one_vm_view(&topo, App::Derby, 4, 0);
+        view.mean_occupancy = 2.0;
+        let params = ModelParams::default();
+        let out = evaluate(&topo, &[view], &params)[0];
+        let solo = evaluate(&topo, &[one_vm_view(&topo, App::Derby, 4, 0)], &params)[0];
+        assert!((out.perf / solo.perf - 0.5).abs() < 0.05);
+        // IPC only drops by the context-switch tax, not by half.
+        assert!(out.ipc / solo.ipc > 0.9);
+    }
+
+    #[test]
+    fn stream_saturates_a_single_node() {
+        let topo = Topology::paper();
+        // 8 vCPUs x 6 GB/s = 48 GB/s demand vs 12.8 GB/s node bw.
+        let view = one_vm_view(&topo, App::Stream, 8, 0);
+        let out = evaluate(&topo, &[view], &ModelParams::default())[0];
+        assert!(out.factors.bw < 0.35, "bw factor {}", out.factors.bw);
+    }
+
+    #[test]
+    fn solo_ideal_spreads_stream_wide_enough() {
+        let topo = Topology::paper();
+        let params = ModelParams::default();
+        let out = solo_ideal(&topo, &App::Stream.profile(), 8, &params);
+        // With enough nodes the controller never saturates.
+        assert!(out.factors.bw > 0.9, "bw {}", out.factors.bw);
+        assert!(out.perf > 0.0);
+    }
+
+    #[test]
+    fn churn_penalizes_throughput() {
+        let topo = Topology::paper();
+        let mut view = one_vm_view(&topo, App::Derby, 4, 0);
+        view.churn = 0.5;
+        let params = ModelParams::default();
+        let out = evaluate(&topo, &[view], &params)[0];
+        let calm = evaluate(&topo, &[one_vm_view(&topo, App::Derby, 4, 0)], &params)[0];
+        assert!(out.perf < calm.perf * 0.7);
+    }
+
+    #[test]
+    fn mpi_rises_under_contention() {
+        let topo = Topology::paper();
+        let rabbit = one_vm_view(&topo, App::Mpegaudio, 4, 0);
+        let devil = one_vm_view(&topo, App::Stream, 4, 0);
+        let params = ModelParams::default();
+        let paired = evaluate(&topo, &[rabbit.clone(), devil], &params);
+        let solo = evaluate(&topo, &[rabbit], &params)[0];
+        assert!(paired[0].mpi > solo.mpi * 1.2, "MPI should inflate under a Devil");
+    }
+
+    #[test]
+    fn utilization_scales_throughput_linearly() {
+        let topo = Topology::paper();
+        let mut view = one_vm_view(&topo, App::Sockshop, 4, 0);
+        view.util = 0.5;
+        let params = ModelParams::default();
+        let half = evaluate(&topo, &[view], &params)[0];
+        let full = evaluate(&topo, &[one_vm_view(&topo, App::Sockshop, 4, 0)], &params)[0];
+        assert!((half.perf / full.perf - 0.5).abs() < 0.05);
+    }
+}

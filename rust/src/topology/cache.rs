@@ -1,0 +1,90 @@
+//! Cache sharing domains (paper §3, Table 1): which hardware threads share
+//! which cache level.  The contention model charges interference within the
+//! LLC (L3) domain — one per NUMA node on the testbed — and lighter
+//! interference within the L2 (per-core) domain.
+
+use super::{CoreId, CpuId, NodeId, Topology};
+
+/// A cache level with a sharing domain.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CacheLevel {
+    /// Per hw-thread (instruction/data L1).
+    L1,
+    /// Shared by the threads of one core (Table 1: "2048K unified, shared
+    /// by 2 threads in a core").
+    L2,
+    /// Shared by all cores of a NUMA node (Table 1: "6144K unified, shared
+    /// by 8 cores").
+    L3,
+}
+
+/// Sharing-domain id for a cpu at a cache level.
+pub fn domain_of(topo: &Topology, cpu: CpuId, level: CacheLevel) -> usize {
+    match level {
+        CacheLevel::L1 => cpu.0,
+        CacheLevel::L2 => topo.core_of_cpu(cpu).0,
+        CacheLevel::L3 => topo.node_of_cpu(cpu).0,
+    }
+}
+
+/// All cpus sharing a given L3 (one NUMA node's LLC).
+pub fn cpus_of_l3(topo: &Topology, node: NodeId) -> Vec<CpuId> {
+    topo.cores_of_node(node)
+        .flat_map(|c| topo.cpus_of_core(c).collect::<Vec<_>>())
+        .collect()
+}
+
+/// All cpus sharing a given L2 (one core).
+pub fn cpus_of_l2(topo: &Topology, core: CoreId) -> Vec<CpuId> {
+    topo.cpus_of_core(core).collect()
+}
+
+/// Cache capacities in KiB per level (Table 1).
+pub fn capacity_kib(topo: &Topology, level: CacheLevel) -> f64 {
+    match level {
+        CacheLevel::L1 => 16.0 + 64.0, // 16K D + 64K I
+        CacheLevel::L2 => 2048.0,
+        CacheLevel::L3 => topo.spec.l3_per_node_mb * 1024.0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn l3_domain_equals_numa_node() {
+        let t = Topology::paper();
+        for n in 0..t.num_nodes() {
+            let cpus = cpus_of_l3(&t, NodeId(n));
+            // 4 cores x 2 threads share one LLC
+            assert_eq!(cpus.len(), 8);
+            for cpu in cpus {
+                assert_eq!(domain_of(&t, cpu, CacheLevel::L3), n);
+            }
+        }
+    }
+
+    #[test]
+    fn l2_domain_equals_core() {
+        let t = Topology::paper();
+        let cpus = cpus_of_l2(&t, CoreId(17));
+        assert_eq!(cpus.len(), 2);
+        for cpu in cpus {
+            assert_eq!(domain_of(&t, cpu, CacheLevel::L2), 17);
+        }
+    }
+
+    #[test]
+    fn l1_domain_is_private() {
+        let t = Topology::tiny();
+        assert_eq!(domain_of(&t, CpuId(3), CacheLevel::L1), 3);
+    }
+
+    #[test]
+    fn capacities_match_table1() {
+        let t = Topology::paper();
+        assert_eq!(capacity_kib(&t, CacheLevel::L2), 2048.0);
+        assert_eq!(capacity_kib(&t, CacheLevel::L3), 6144.0);
+    }
+}

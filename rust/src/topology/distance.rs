@@ -1,0 +1,118 @@
+//! NUMA distance computation (paper §3.3) and the latency hierarchy
+//! (paper Fig. 2).
+//!
+//! The paper reports SLIT distances on the testbed as:
+//! * 10 — local access (same NUMA node)
+//! * 16 — neighbour die on the same socket
+//! * 22 — different socket, same server
+//! * 160 — remote server, 1 torus hop
+//! * 200 — remote server, 2 torus hops
+
+use super::{torus::Torus, TopologySpec};
+
+/// Distance constants, overridable per experiment.
+#[derive(Debug, Clone)]
+pub struct DistanceParams {
+    pub local: f64,
+    pub same_socket: f64,
+    pub same_server: f64,
+    /// Base distance for a 1-hop remote access.
+    pub remote_base: f64,
+    /// Extra distance per additional torus hop beyond the first.
+    pub remote_per_hop: f64,
+}
+
+impl DistanceParams {
+    /// The paper's measured SLIT values (§3.3).
+    pub fn paper() -> Self {
+        Self {
+            local: 10.0,
+            same_socket: 16.0,
+            same_server: 22.0,
+            remote_base: 160.0,
+            remote_per_hop: 40.0, // 1 hop = 160, 2 hops = 200
+        }
+    }
+}
+
+/// SLIT distance between two NUMA nodes under `spec`.
+pub fn node_distance(spec: &TopologySpec, torus: &Torus, a: usize, b: usize) -> f64 {
+    let d = &spec.dist;
+    if a == b {
+        return d.local;
+    }
+    let nps = spec.nodes_per_server();
+    let (srv_a, srv_b) = (a / nps, b / nps);
+    if srv_a == srv_b {
+        let (sock_a, sock_b) = (a / spec.nodes_per_socket, b / spec.nodes_per_socket);
+        return if sock_a == sock_b { d.same_socket } else { d.same_server };
+    }
+    let hops = torus.hops(srv_a, srv_b).max(1);
+    d.remote_base + d.remote_per_hop * (hops as f64 - 1.0)
+}
+
+/// Approximate access latency (ns) for a given SLIT distance — anchors the
+/// Fig. 2 "latencies in the memory hierarchy" regeneration.  Local DRAM is
+/// ~90 ns at distance 10 and latency scales linearly with SLIT beyond
+/// that (NumaConnect remote ~ 1.5–2 µs).
+pub fn latency_ns(distance: f64) -> f64 {
+    const LOCAL_DRAM_NS: f64 = 90.0;
+    LOCAL_DRAM_NS * distance / 10.0
+}
+
+/// The full latency hierarchy of the machine (paper Fig. 2): cache levels
+/// are fixed silicon latencies; memory levels derive from SLIT.
+pub fn latency_hierarchy() -> Vec<(&'static str, f64)> {
+    let d = DistanceParams::paper();
+    vec![
+        ("L1 cache", 1.2),
+        ("L2 cache", 4.0),
+        ("L3 cache (LLC)", 14.0),
+        ("Local DRAM", latency_ns(d.local)),
+        ("Same-socket DRAM", latency_ns(d.same_socket)),
+        ("Same-server DRAM", latency_ns(d.same_server)),
+        ("Remote DRAM (1 hop)", latency_ns(d.remote_base)),
+        ("Remote DRAM (2 hops)", latency_ns(d.remote_base + d.remote_per_hop)),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn paper_spec() -> (TopologySpec, Torus) {
+        let spec = TopologySpec::paper();
+        let torus = Torus::new(spec.torus.0, spec.torus.1);
+        (spec, torus)
+    }
+
+    #[test]
+    fn distance_classes_match_paper() {
+        let (spec, torus) = paper_spec();
+        // node 0 and 1: same socket (nodes_per_socket = 2)
+        assert_eq!(node_distance(&spec, &torus, 0, 1), 16.0);
+        // node 0 and 2: same server, different socket
+        assert_eq!(node_distance(&spec, &torus, 0, 2), 22.0);
+        // node 0 and 6: server 0 -> server 1, one hop
+        assert_eq!(node_distance(&spec, &torus, 0, 6), 160.0);
+        // server 0 (0,0) -> server 4 (1,1): two hops on the 3x2 torus
+        assert_eq!(node_distance(&spec, &torus, 0, 4 * 6), 200.0);
+        // identity
+        assert_eq!(node_distance(&spec, &torus, 5, 5), 10.0);
+    }
+
+    #[test]
+    fn latency_hierarchy_is_monotonic() {
+        let h = latency_hierarchy();
+        for w in h.windows(2) {
+            assert!(w[0].1 < w[1].1, "{} !< {}", w[0].0, w[1].0);
+        }
+    }
+
+    #[test]
+    fn remote_is_order_of_magnitude_worse() {
+        // Fig. 2's point: remote access is ~an order of magnitude slower
+        // than local DRAM.
+        assert!(latency_ns(200.0) / latency_ns(10.0) >= 10.0);
+    }
+}

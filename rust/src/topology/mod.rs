@@ -1,0 +1,382 @@
+//! Multi-level NUMA topology of a disaggregated system (paper §2.1, §3.1).
+//!
+//! Models the paper's testbed: six commodity servers joined by a
+//! NumaConnect-style cache-coherent fabric into one shared-memory machine —
+//! 288 cores / 36 NUMA nodes / ~1.1 TB — with the hierarchy
+//!
+//! `hw thread ⊂ core (L2) ⊂ NUMA node (L3 + memory controller) ⊂ socket ⊂
+//! server ⊂ 2-D torus fabric`
+//!
+//! and the paper's SLIT distances: 10 (local), 16 / 22 (on-server
+//! neighbour), 160 / 200 (remote, 1 / 2 torus hops).  Everything is
+//! parameterized through [`TopologySpec`] so experiments can scale the
+//! system up or down.
+
+pub mod cache;
+pub mod distance;
+pub mod torus;
+
+pub use distance::DistanceParams;
+pub use torus::Torus;
+
+use crate::util::config::Config;
+
+/// Index newtypes — the simulator and coordinator never mix these up.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct CpuId(pub usize); // one hardware thread
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct CoreId(pub usize);
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct NodeId(pub usize); // NUMA node
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct SocketId(pub usize);
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct ServerId(pub usize);
+
+/// Build parameters for a disaggregated topology.
+#[derive(Debug, Clone)]
+pub struct TopologySpec {
+    /// Number of physical servers joined by the fabric.
+    pub servers: usize,
+    /// Torus layout (must multiply to `servers`), e.g. 3 × 2.
+    pub torus: (usize, usize),
+    pub sockets_per_server: usize,
+    pub nodes_per_socket: usize,
+    pub cores_per_node: usize,
+    pub threads_per_core: usize,
+    /// Memory per NUMA node, GiB.
+    pub mem_per_node_gb: f64,
+    /// Per-node memory bandwidth, GB/s (STREAM-like achievable).
+    pub mem_bw_per_node_gbs: f64,
+    /// LLC (L3) per NUMA node, MiB.
+    pub l3_per_node_mb: f64,
+    pub dist: DistanceParams,
+}
+
+impl TopologySpec {
+    /// The paper's testbed (Table 1): 6 × IBM x3755 M3 via NumaConnect —
+    /// 288 cores, 36 NUMA nodes, 18 sockets, 2×3 torus, 1176 GB RAM.
+    pub fn paper() -> Self {
+        Self {
+            servers: 6,
+            torus: (3, 2),
+            sockets_per_server: 3,
+            nodes_per_socket: 2,
+            cores_per_node: 4,
+            threads_per_core: 2,
+            mem_per_node_gb: 1176.0 / 36.0, // ≈ 32.7 GB / node
+            mem_bw_per_node_gbs: 12.8,      // one Opteron 6380 channel pair
+            l3_per_node_mb: 6.0,            // Table 1: 6144K shared by 8 cores
+            dist: DistanceParams::paper(),
+        }
+    }
+
+    /// A small topology for fast unit tests: 2 servers, 8 cores.
+    pub fn tiny() -> Self {
+        Self {
+            servers: 2,
+            torus: (2, 1),
+            sockets_per_server: 1,
+            nodes_per_socket: 2,
+            cores_per_node: 2,
+            threads_per_core: 2,
+            mem_per_node_gb: 8.0,
+            mem_bw_per_node_gbs: 10.0,
+            l3_per_node_mb: 6.0,
+            dist: DistanceParams::paper(),
+        }
+    }
+
+    /// Read a spec from a `[topology]` config section (missing keys fall
+    /// back to the paper testbed).
+    pub fn from_config(cfg: &Config) -> Self {
+        let p = Self::paper();
+        let torus = cfg
+            .get("topology", "torus")
+            .and_then(|v| v.as_list().map(|l| {
+                let xs: Vec<i64> = l.iter().filter_map(|x| x.as_i64()).collect();
+                (xs.first().copied().unwrap_or(3) as usize,
+                 xs.get(1).copied().unwrap_or(2) as usize)
+            }))
+            .unwrap_or(p.torus);
+        Self {
+            servers: cfg.i64_or("topology", "servers", p.servers as i64) as usize,
+            torus,
+            sockets_per_server: cfg.i64_or("topology", "sockets_per_server",
+                                           p.sockets_per_server as i64) as usize,
+            nodes_per_socket: cfg.i64_or("topology", "nodes_per_socket",
+                                         p.nodes_per_socket as i64) as usize,
+            cores_per_node: cfg.i64_or("topology", "cores_per_node",
+                                       p.cores_per_node as i64) as usize,
+            threads_per_core: cfg.i64_or("topology", "threads_per_core",
+                                         p.threads_per_core as i64) as usize,
+            mem_per_node_gb: cfg.f64_or("topology", "mem_per_node_gb", p.mem_per_node_gb),
+            mem_bw_per_node_gbs: cfg.f64_or("topology", "mem_bw_per_node_gbs",
+                                            p.mem_bw_per_node_gbs),
+            l3_per_node_mb: cfg.f64_or("topology", "l3_per_node_mb", p.l3_per_node_mb),
+            dist: DistanceParams::paper(),
+        }
+    }
+
+    pub fn nodes_per_server(&self) -> usize {
+        self.sockets_per_server * self.nodes_per_socket
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.servers * self.nodes_per_server()
+    }
+
+    pub fn num_sockets(&self) -> usize {
+        self.servers * self.sockets_per_server
+    }
+
+    pub fn num_cores(&self) -> usize {
+        self.num_nodes() * self.cores_per_node
+    }
+
+    pub fn num_cpus(&self) -> usize {
+        self.num_cores() * self.threads_per_core
+    }
+
+    pub fn total_mem_gb(&self) -> f64 {
+        self.mem_per_node_gb * self.num_nodes() as f64
+    }
+}
+
+/// A fully-built topology: index maps plus the node distance matrix.
+#[derive(Debug, Clone)]
+pub struct Topology {
+    pub spec: TopologySpec,
+    /// `distance[i][j]` — SLIT distance between NUMA nodes i and j.
+    distance: Vec<Vec<f64>>,
+    torus: Torus,
+}
+
+impl Topology {
+    pub fn build(spec: TopologySpec) -> Self {
+        assert_eq!(
+            spec.torus.0 * spec.torus.1,
+            spec.servers,
+            "torus dims must multiply to server count"
+        );
+        let torus = Torus::new(spec.torus.0, spec.torus.1);
+        let n = spec.num_nodes();
+        let mut distance = vec![vec![0.0; n]; n];
+        for i in 0..n {
+            for j in 0..n {
+                distance[i][j] = distance::node_distance(&spec, &torus, i, j);
+            }
+        }
+        Self { spec, distance, torus }
+    }
+
+    pub fn paper() -> Self {
+        Self::build(TopologySpec::paper())
+    }
+
+    pub fn tiny() -> Self {
+        Self::build(TopologySpec::tiny())
+    }
+
+    // ---- entity counts -------------------------------------------------
+
+    pub fn num_nodes(&self) -> usize {
+        self.spec.num_nodes()
+    }
+
+    pub fn num_cores(&self) -> usize {
+        self.spec.num_cores()
+    }
+
+    pub fn num_cpus(&self) -> usize {
+        self.spec.num_cpus()
+    }
+
+    // ---- index arithmetic (contiguous layout) --------------------------
+
+    pub fn node_of_core(&self, core: CoreId) -> NodeId {
+        NodeId(core.0 / self.spec.cores_per_node)
+    }
+
+    pub fn core_of_cpu(&self, cpu: CpuId) -> CoreId {
+        CoreId(cpu.0 / self.spec.threads_per_core)
+    }
+
+    pub fn node_of_cpu(&self, cpu: CpuId) -> NodeId {
+        self.node_of_core(self.core_of_cpu(cpu))
+    }
+
+    pub fn socket_of_node(&self, node: NodeId) -> SocketId {
+        SocketId(node.0 / self.spec.nodes_per_socket)
+    }
+
+    pub fn server_of_node(&self, node: NodeId) -> ServerId {
+        ServerId(node.0 / self.spec.nodes_per_server())
+    }
+
+    pub fn server_of_socket(&self, socket: SocketId) -> ServerId {
+        ServerId(socket.0 / self.spec.sockets_per_server)
+    }
+
+    /// All cores of a NUMA node (contiguous range).
+    pub fn cores_of_node(&self, node: NodeId) -> impl Iterator<Item = CoreId> {
+        let c = self.spec.cores_per_node;
+        (node.0 * c..(node.0 + 1) * c).map(CoreId)
+    }
+
+    /// All hw threads of a core.
+    pub fn cpus_of_core(&self, core: CoreId) -> impl Iterator<Item = CpuId> {
+        let t = self.spec.threads_per_core;
+        (core.0 * t..(core.0 + 1) * t).map(CpuId)
+    }
+
+    /// All NUMA nodes of a server.
+    pub fn nodes_of_server(&self, server: ServerId) -> impl Iterator<Item = NodeId> {
+        let n = self.spec.nodes_per_server();
+        (server.0 * n..(server.0 + 1) * n).map(NodeId)
+    }
+
+    // ---- distances ------------------------------------------------------
+
+    /// SLIT distance between two NUMA nodes.
+    pub fn distance(&self, a: NodeId, b: NodeId) -> f64 {
+        self.distance[a.0][b.0]
+    }
+
+    /// Dense distance matrix (row-major), as fed to the scorer artifacts.
+    pub fn distance_matrix(&self) -> &Vec<Vec<f64>> {
+        &self.distance
+    }
+
+    /// Torus hop count between two servers.
+    pub fn server_hops(&self, a: ServerId, b: ServerId) -> usize {
+        self.torus.hops(a.0, b.0)
+    }
+
+    /// Approximate memory access latency in ns for a cpu on `from`
+    /// accessing memory on `to` (Fig. 2 regeneration).
+    pub fn access_latency_ns(&self, from: NodeId, to: NodeId) -> f64 {
+        distance::latency_ns(self.distance(from, to))
+    }
+
+    /// Nodes sorted by distance from `from` (self first) — the
+    /// coordinator's proximity-ordered allocation walk.
+    pub fn nodes_by_distance(&self, from: NodeId) -> Vec<NodeId> {
+        let mut nodes: Vec<NodeId> = (0..self.num_nodes()).map(NodeId).collect();
+        nodes.sort_by(|a, b| {
+            self.distance(from, *a)
+                .partial_cmp(&self.distance(from, *b))
+                .unwrap()
+                .then(a.0.cmp(&b.0))
+        });
+        nodes
+    }
+
+    /// `lscpu`-style summary — regenerates the paper's Table 1.
+    pub fn summary(&self) -> Vec<(String, String)> {
+        let s = &self.spec;
+        vec![
+            ("CPU(s)".into(), format!("{}", self.num_cpus())),
+            ("Thread(s) per core".into(), format!("{}", s.threads_per_core)),
+            ("Core(s) per socket".into(),
+             format!("{}", s.nodes_per_socket * s.cores_per_node)),
+            ("Socket(s)".into(), format!("{}", s.num_sockets())),
+            ("NUMA node(s)".into(), format!("{}", s.num_nodes())),
+            ("Server(s)".into(), format!("{}", s.servers)),
+            ("Memory (GB)".into(), format!("{:.0}", s.total_mem_gb())),
+            ("L3 cache".into(),
+             format!("{:.0}K unified, shared by {} cores",
+                     s.l3_per_node_mb * 1024.0, s.cores_per_node * s.threads_per_core)),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_counts_match_table1() {
+        let t = Topology::paper();
+        assert_eq!(t.num_cpus(), 288); // "CPU(s): 288"
+        assert_eq!(t.num_nodes(), 36); // "NUMA node(s): 36"
+        assert_eq!(t.spec.num_sockets(), 18); // "Socket(s): 18"
+        assert!((t.spec.total_mem_gb() - 1176.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn index_arithmetic_roundtrips() {
+        let t = Topology::paper();
+        for cpu in 0..t.num_cpus() {
+            let cpu = CpuId(cpu);
+            let core = t.core_of_cpu(cpu);
+            let node = t.node_of_core(core);
+            assert!(t.cpus_of_core(core).any(|c| c == cpu));
+            assert!(t.cores_of_node(node).any(|c| c == core));
+            let server = t.server_of_node(node);
+            assert!(t.nodes_of_server(server).any(|n| n == node));
+        }
+    }
+
+    #[test]
+    fn distance_paper_values_present() {
+        let t = Topology::paper();
+        let mut seen = std::collections::BTreeSet::new();
+        for i in 0..t.num_nodes() {
+            for j in 0..t.num_nodes() {
+                seen.insert(t.distance(NodeId(i), NodeId(j)) as i64);
+            }
+        }
+        // §3.3: 10 local, 16/22 on-server, 160/200 remote.
+        assert_eq!(seen, [10, 16, 22, 160, 200].into_iter().collect());
+    }
+
+    #[test]
+    fn distance_symmetric_and_local_minimal() {
+        let t = Topology::paper();
+        for i in 0..t.num_nodes() {
+            assert_eq!(t.distance(NodeId(i), NodeId(i)), 10.0);
+            for j in 0..t.num_nodes() {
+                assert_eq!(t.distance(NodeId(i), NodeId(j)), t.distance(NodeId(j), NodeId(i)));
+                assert!(t.distance(NodeId(i), NodeId(j)) >= 10.0);
+            }
+        }
+    }
+
+    #[test]
+    fn nodes_by_distance_starts_local() {
+        let t = Topology::paper();
+        for i in [0, 7, 35] {
+            let order = t.nodes_by_distance(NodeId(i));
+            assert_eq!(order[0], NodeId(i));
+            // distances must be non-decreasing along the walk
+            let ds: Vec<f64> = order.iter().map(|n| t.distance(NodeId(i), *n)).collect();
+            assert!(ds.windows(2).all(|w| w[0] <= w[1]));
+        }
+    }
+
+    #[test]
+    fn latency_grows_with_distance() {
+        let t = Topology::paper();
+        let local = t.access_latency_ns(NodeId(0), NodeId(0));
+        let neighbor = t.access_latency_ns(NodeId(0), NodeId(1));
+        let remote = t.access_latency_ns(NodeId(0), NodeId(35));
+        assert!(local < neighbor && neighbor < remote);
+    }
+
+    #[test]
+    #[should_panic(expected = "torus dims")]
+    fn bad_torus_rejected() {
+        let mut spec = TopologySpec::paper();
+        spec.torus = (4, 2);
+        Topology::build(spec);
+    }
+
+    #[test]
+    fn tiny_topology_consistent() {
+        let t = Topology::tiny();
+        assert_eq!(t.num_nodes(), 4);
+        assert_eq!(t.num_cores(), 8);
+        assert_eq!(t.num_cpus(), 16);
+    }
+}

@@ -1,0 +1,131 @@
+//! 2-D torus fabric (paper Fig. 3): servers are arranged on an
+//! `x × y` grid with wraparound links, so "the distance between nodes is
+//! never more than two hops" on the 3 × 2 testbed.
+
+/// A 2-D torus over `x * y` servers, identified by linear index.
+#[derive(Debug, Clone)]
+pub struct Torus {
+    pub x: usize,
+    pub y: usize,
+}
+
+impl Torus {
+    pub fn new(x: usize, y: usize) -> Self {
+        assert!(x >= 1 && y >= 1, "degenerate torus");
+        Self { x, y }
+    }
+
+    pub fn len(&self) -> usize {
+        self.x * self.y
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Linear index -> grid coordinate.
+    pub fn coord(&self, server: usize) -> (usize, usize) {
+        assert!(server < self.len(), "server {server} out of torus");
+        (server % self.x, server / self.x)
+    }
+
+    /// Minimal hop count between two servers (wraparound Manhattan).
+    pub fn hops(&self, a: usize, b: usize) -> usize {
+        let (ax, ay) = self.coord(a);
+        let (bx, by) = self.coord(b);
+        let dx = ax.abs_diff(bx);
+        let dy = ay.abs_diff(by);
+        dx.min(self.x - dx) + dy.min(self.y - dy)
+    }
+
+    /// Maximum hop count over all pairs (network diameter).
+    pub fn diameter(&self) -> usize {
+        (0..self.len())
+            .flat_map(|a| (0..self.len()).map(move |b| (a, b)))
+            .map(|(a, b)| self.hops(a, b))
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Direct neighbours of a server (de-duplicated; on a 3×2 torus the
+    /// wraparound can alias).
+    pub fn neighbors(&self, server: usize) -> Vec<usize> {
+        let (x, y) = self.coord(server);
+        let mut out = vec![
+            ((x + 1) % self.x, y),
+            ((x + self.x - 1) % self.x, y),
+            (x, (y + 1) % self.y),
+            (x, (y + self.y - 1) % self.y),
+        ]
+        .into_iter()
+        .map(|(cx, cy)| cy * self.x + cx)
+        .filter(|&s| s != server)
+        .collect::<Vec<_>>();
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testkit::{prop_assert, propcheck};
+
+    #[test]
+    fn paper_torus_diameter_is_two() {
+        // §3.1: "the distance between nodes is never more than two hops"
+        assert_eq!(Torus::new(3, 2).diameter(), 2);
+    }
+
+    #[test]
+    fn hops_zero_iff_same() {
+        let t = Torus::new(3, 2);
+        for a in 0..t.len() {
+            for b in 0..t.len() {
+                assert_eq!(t.hops(a, b) == 0, a == b);
+            }
+        }
+    }
+
+    #[test]
+    fn hops_symmetric() {
+        let t = Torus::new(4, 3);
+        for a in 0..t.len() {
+            for b in 0..t.len() {
+                assert_eq!(t.hops(a, b), t.hops(b, a));
+            }
+        }
+    }
+
+    #[test]
+    fn wraparound_shortens_path() {
+        let t = Torus::new(4, 1);
+        // 0 -> 3 is one wraparound hop, not three forward hops.
+        assert_eq!(t.hops(0, 3), 1);
+    }
+
+    #[test]
+    fn neighbors_are_one_hop() {
+        let t = Torus::new(3, 2);
+        for s in 0..t.len() {
+            for n in t.neighbors(s) {
+                assert_eq!(t.hops(s, n), 1, "server {s} neighbor {n}");
+            }
+        }
+    }
+
+    #[test]
+    fn triangle_inequality_property() {
+        propcheck("torus triangle inequality", 200, |rng| {
+            let x = rng.range(1, 6);
+            let y = rng.range(1, 6);
+            let t = Torus::new(x, y);
+            let (a, b, c) = (rng.below(t.len()), rng.below(t.len()), rng.below(t.len()));
+            prop_assert(
+                t.hops(a, c) <= t.hops(a, b) + t.hops(b, c),
+                format!("hops({a},{c}) > hops({a},{b}) + hops({b},{c}) on {x}x{y}"),
+            )
+        });
+    }
+}

@@ -1,0 +1,162 @@
+//! Minimal criterion-style benchmark harness (criterion is not in the
+//! offline registry).  `cargo bench` targets are `harness = false`
+//! binaries that call [`Bench::run`] / [`Bench::run_with_result`].
+//!
+//! Output format is one line per benchmark:
+//! `bench <name> ... iters=N mean=… p50=… p99=… min=…`
+
+use std::time::{Duration, Instant};
+
+use super::stats;
+
+/// Benchmark configuration.
+#[derive(Debug, Clone)]
+pub struct Bench {
+    pub warmup: u32,
+    pub iters: u32,
+    /// Hard wall-clock cap per benchmark; iteration stops early when hit.
+    pub max_time: Duration,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self { warmup: 3, iters: 20, max_time: Duration::from_secs(30) }
+    }
+}
+
+/// Result of one benchmark: per-iteration wall-clock times (seconds).
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples: Vec<f64>,
+}
+
+impl BenchResult {
+    pub fn mean(&self) -> f64 {
+        stats::mean(&self.samples)
+    }
+
+    pub fn p50(&self) -> f64 {
+        stats::percentile(&self.samples, 50.0)
+    }
+
+    pub fn p99(&self) -> f64 {
+        stats::percentile(&self.samples, 99.0)
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    /// One-line human-readable report.
+    pub fn report(&self) -> String {
+        format!(
+            "bench {:<44} iters={:<4} mean={} p50={} p99={} min={}",
+            self.name,
+            self.samples.len(),
+            fmt_dur(self.mean()),
+            fmt_dur(self.p50()),
+            fmt_dur(self.p99()),
+            fmt_dur(self.min()),
+        )
+    }
+}
+
+/// Render seconds with an adaptive unit.
+pub fn fmt_dur(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:8.1}ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:8.2}µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:8.3}ms", secs * 1e3)
+    } else {
+        format!("{:8.3}s ", secs)
+    }
+}
+
+impl Bench {
+    pub fn new(warmup: u32, iters: u32) -> Self {
+        Self { warmup, iters, ..Default::default() }
+    }
+
+    /// Time `f` over the configured iterations.
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> BenchResult {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let started = Instant::now();
+        let mut samples = Vec::with_capacity(self.iters as usize);
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_secs_f64());
+            if started.elapsed() > self.max_time {
+                break;
+            }
+        }
+        let res = BenchResult { name: name.to_string(), samples };
+        println!("{}", res.report());
+        res
+    }
+
+    /// Like [`run`], but keeps the closure's last return value alive so the
+    /// optimizer cannot discard the computation.
+    pub fn run_with_result<T, F: FnMut() -> T>(&self, name: &str, mut f: F) -> (BenchResult, T) {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let started = Instant::now();
+        let mut samples = Vec::with_capacity(self.iters as usize);
+        let mut last = None;
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            let v = std::hint::black_box(f());
+            samples.push(t0.elapsed().as_secs_f64());
+            last = Some(v);
+            if started.elapsed() > self.max_time {
+                break;
+            }
+        }
+        let res = BenchResult { name: name.to_string(), samples };
+        println!("{}", res.report());
+        (res, last.unwrap())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_requested_iterations() {
+        let b = Bench::new(1, 5);
+        let mut count = 0u32;
+        let res = b.run("noop", || count += 1);
+        assert_eq!(res.samples.len(), 5);
+        assert_eq!(count, 6); // warmup + iters
+    }
+
+    #[test]
+    fn respects_max_time() {
+        let b = Bench { warmup: 0, iters: 1000, max_time: Duration::from_millis(50) };
+        let res = b.run("sleepy", || std::thread::sleep(Duration::from_millis(20)));
+        assert!(res.samples.len() < 1000);
+    }
+
+    #[test]
+    fn stats_are_consistent() {
+        let res = BenchResult { name: "x".into(), samples: vec![1.0, 2.0, 3.0] };
+        assert!((res.mean() - 2.0).abs() < 1e-12);
+        assert_eq!(res.min(), 1.0);
+        assert_eq!(res.p50(), 2.0);
+    }
+
+    #[test]
+    fn fmt_dur_units() {
+        assert!(fmt_dur(5e-9).contains("ns"));
+        assert!(fmt_dur(5e-6).contains("µs"));
+        assert!(fmt_dur(5e-3).contains("ms"));
+        assert!(fmt_dur(5.0).trim_end().ends_with('s'));
+    }
+}

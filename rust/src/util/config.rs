@@ -1,0 +1,279 @@
+//! A minimal INI/TOML-subset configuration parser (the offline registry has
+//! no `serde`/`toml`).  Supports `[sections]`, `key = value` with string,
+//! integer, float, boolean and flat-list values, `#`/`;` comments.
+//!
+//! Used by the launcher for topology / experiment / coordinator settings
+//! (see `configs/*.toml` in the repo root).
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::path::Path;
+
+/// A parsed configuration value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    List(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_list(&self) -> Option<&[Value]> {
+        match self {
+            Value::List(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Value::Str(s) => write!(f, "{s}"),
+            Value::Int(i) => write!(f, "{i}"),
+            Value::Float(x) => write!(f, "{x}"),
+            Value::Bool(b) => write!(f, "{b}"),
+            Value::List(v) => {
+                write!(f, "[")?;
+                for (i, x) in v.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ", ")?;
+                    }
+                    write!(f, "{x}")?;
+                }
+                write!(f, "]")
+            }
+        }
+    }
+}
+
+/// Parse error with line information.
+#[derive(Debug, thiserror::Error)]
+#[error("config parse error at line {line}: {msg}")]
+pub struct ParseError {
+    pub line: usize,
+    pub msg: String,
+}
+
+/// A parsed config: `section -> key -> value`.  Keys outside any section
+/// land in the `""` section.
+#[derive(Debug, Clone, Default)]
+pub struct Config {
+    sections: BTreeMap<String, BTreeMap<String, Value>>,
+}
+
+impl Config {
+    pub fn parse(text: &str) -> Result<Self, ParseError> {
+        let mut cfg = Config::default();
+        let mut section = String::new();
+        for (ln, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            let line = match line.find(['#', ';']) {
+                // Allow inline comments only when not inside a quoted string.
+                Some(pos) if !line[..pos].contains('"') => line[..pos].trim(),
+                _ => line,
+            };
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[') {
+                let name = name.strip_suffix(']').ok_or(ParseError {
+                    line: ln + 1,
+                    msg: "unterminated section header".into(),
+                })?;
+                section = name.trim().to_string();
+                cfg.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let (key, val) = line.split_once('=').ok_or(ParseError {
+                line: ln + 1,
+                msg: format!("expected `key = value`, got {line:?}"),
+            })?;
+            let value = parse_value(val.trim()).map_err(|msg| ParseError { line: ln + 1, msg })?;
+            cfg.sections
+                .entry(section.clone())
+                .or_default()
+                .insert(key.trim().to_string(), value);
+        }
+        Ok(cfg)
+    }
+
+    pub fn from_file<P: AsRef<Path>>(path: P) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(&path)?;
+        Ok(Self::parse(&text).map_err(|e| anyhow::anyhow!("{}: {e}", path.as_ref().display()))?)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.sections.get(section).and_then(|s| s.get(key))
+    }
+
+    pub fn sections(&self) -> impl Iterator<Item = &str> {
+        self.sections.keys().map(String::as_str)
+    }
+
+    pub fn keys(&self, section: &str) -> Vec<&str> {
+        self.sections
+            .get(section)
+            .map(|s| s.keys().map(String::as_str).collect())
+            .unwrap_or_default()
+    }
+
+    pub fn str_or(&self, section: &str, key: &str, default: &str) -> String {
+        self.get(section, key)
+            .and_then(Value::as_str)
+            .unwrap_or(default)
+            .to_string()
+    }
+
+    pub fn i64_or(&self, section: &str, key: &str, default: i64) -> i64 {
+        self.get(section, key).and_then(Value::as_i64).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, section: &str, key: &str, default: f64) -> f64 {
+        self.get(section, key).and_then(Value::as_f64).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, section: &str, key: &str, default: bool) -> bool {
+        self.get(section, key).and_then(Value::as_bool).unwrap_or(default)
+    }
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner.strip_suffix('"').ok_or("unterminated string")?;
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner.strip_suffix(']').ok_or("unterminated list")?;
+        let items = inner.trim();
+        if items.is_empty() {
+            return Ok(Value::List(vec![]));
+        }
+        return items
+            .split(',')
+            .map(|item| parse_value(item.trim()))
+            .collect::<Result<Vec<_>, _>>()
+            .map(Value::List);
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    // Bare word — treat as string (lenient INI style).
+    Ok(Value::Str(s.to_string()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+        # cluster config
+        name = "testbed"
+        seed = 42
+
+        [topology]
+        servers = 6
+        sockets_per_server = 3
+        local_distance = 10
+        torus = [3, 2]
+        coherent = true
+
+        [sched]
+        threshold = 0.15   ; inline comment
+        metric = ipc
+    "#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let cfg = Config::parse(SAMPLE).unwrap();
+        assert_eq!(cfg.str_or("", "name", ""), "testbed");
+        assert_eq!(cfg.i64_or("", "seed", 0), 42);
+        assert_eq!(cfg.i64_or("topology", "servers", 0), 6);
+        assert_eq!(cfg.f64_or("sched", "threshold", 0.0), 0.15);
+        assert!(cfg.bool_or("topology", "coherent", false));
+        assert_eq!(cfg.str_or("sched", "metric", ""), "ipc");
+        let torus = cfg.get("topology", "torus").unwrap().as_list().unwrap();
+        assert_eq!(torus, &[Value::Int(3), Value::Int(2)]);
+    }
+
+    #[test]
+    fn missing_keys_fall_back() {
+        let cfg = Config::parse(SAMPLE).unwrap();
+        assert_eq!(cfg.i64_or("topology", "absent", 7), 7);
+        assert_eq!(cfg.f64_or("nosection", "absent", 1.5), 1.5);
+    }
+
+    #[test]
+    fn int_coerces_to_f64() {
+        let cfg = Config::parse("x = 3").unwrap();
+        assert_eq!(cfg.f64_or("", "x", 0.0), 3.0);
+    }
+
+    #[test]
+    fn rejects_bad_section() {
+        assert!(Config::parse("[oops").is_err());
+    }
+
+    #[test]
+    fn rejects_missing_equals() {
+        let err = Config::parse("just a line").unwrap_err();
+        assert_eq!(err.line, 1);
+    }
+
+    #[test]
+    fn empty_list_and_nested_values() {
+        let cfg = Config::parse("xs = []\nys = [1, 2.5, \"a\"]").unwrap();
+        assert_eq!(cfg.get("", "xs").unwrap().as_list().unwrap().len(), 0);
+        let ys = cfg.get("", "ys").unwrap().as_list().unwrap();
+        assert_eq!(ys.len(), 3);
+        assert_eq!(ys[1].as_f64(), Some(2.5));
+    }
+
+    #[test]
+    fn quoted_hash_not_comment() {
+        let cfg = Config::parse("s = \"a#b\"").unwrap();
+        assert_eq!(cfg.str_or("", "s", ""), "a#b");
+    }
+}

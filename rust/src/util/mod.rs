@@ -1,0 +1,13 @@
+//! Support substrates that replace crates unavailable in the offline
+//! registry: deterministic RNG (`rand`), statistics, a TOML-subset config
+//! parser (`serde`), a scoped thread pool (`tokio`/`rayon`), a benchmark
+//! harness (`criterion`), and a property-testing mini-framework
+//! (`proptest`).
+
+pub mod benchkit;
+pub mod config;
+pub mod pool;
+pub mod rng;
+pub mod stats;
+pub mod table;
+pub mod testkit;

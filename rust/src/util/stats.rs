@@ -1,0 +1,194 @@
+//! Streaming and batch statistics used by the metrics pipeline and the
+//! benchmark harness (Welford accumulation, percentiles, EMA).
+
+/// Online mean/variance accumulator (Welford's algorithm).
+#[derive(Debug, Clone, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Welford {
+    pub fn new() -> Self {
+        Self { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.n += 1;
+        let delta = x - self.mean;
+        self.mean += delta / self.n as f64;
+        self.m2 += delta * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Population variance (n in the denominator); 0 for n < 2.
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 { 0.0 } else { self.m2 / self.n as f64 }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    /// std/mean — the paper's run-to-run variability metric (§5.3.2:
+    /// > 0.4 under vanilla, < 0.04 under SM-IPC/SM-MPI).
+    pub fn cov(&self) -> f64 {
+        if self.mean.abs() < 1e-12 { 0.0 } else { self.std() / self.mean.abs() }
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.n == 0 { 0.0 } else { self.min }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.n == 0 { 0.0 } else { self.max }
+    }
+
+    pub fn merge(&mut self, other: &Welford) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let n = (self.n + other.n) as f64;
+        let delta = other.mean - self.mean;
+        self.mean += delta * other.n as f64 / n;
+        self.m2 += other.m2 + delta * delta * (self.n as f64 * other.n as f64) / n;
+        self.n += other.n;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+}
+
+/// Percentile of a sample (linear interpolation, `q` in `[0, 100]`).
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    assert!(!xs.is_empty(), "percentile of empty slice");
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = (q / 100.0) * (v.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (v[hi] - v[lo]) * (pos - lo as f64)
+    }
+}
+
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() { 0.0 } else { xs.iter().sum::<f64>() / xs.len() as f64 }
+}
+
+pub fn std(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Coefficient of variation std/mean of a sample.
+pub fn cov(xs: &[f64]) -> f64 {
+    let m = mean(xs);
+    if m.abs() < 1e-12 { 0.0 } else { std(xs) / m.abs() }
+}
+
+/// Exponential moving average with smoothing factor `alpha`.
+#[derive(Debug, Clone)]
+pub struct Ema {
+    alpha: f64,
+    value: Option<f64>,
+}
+
+impl Ema {
+    pub fn new(alpha: f64) -> Self {
+        assert!((0.0..=1.0).contains(&alpha));
+        Self { alpha, value: None }
+    }
+
+    pub fn add(&mut self, x: f64) -> f64 {
+        let v = match self.value {
+            None => x,
+            Some(prev) => self.alpha * x + (1.0 - self.alpha) * prev,
+        };
+        self.value = Some(v);
+        v
+    }
+
+    pub fn get(&self) -> Option<f64> {
+        self.value
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn welford_matches_batch() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 10.0];
+        let mut w = Welford::new();
+        xs.iter().for_each(|&x| w.add(x));
+        assert!((w.mean() - mean(&xs)).abs() < 1e-12);
+        assert!((w.std() - std(&xs)).abs() < 1e-12);
+        assert_eq!(w.min(), 1.0);
+        assert_eq!(w.max(), 10.0);
+        assert_eq!(w.count(), 5);
+    }
+
+    #[test]
+    fn welford_merge_equals_concat() {
+        let a = [1.0, 5.0, 2.0];
+        let b = [7.0, 3.0, 9.0, 4.0];
+        let mut wa = Welford::new();
+        a.iter().for_each(|&x| wa.add(x));
+        let mut wb = Welford::new();
+        b.iter().for_each(|&x| wb.add(x));
+        wa.merge(&wb);
+        let all: Vec<f64> = a.iter().chain(b.iter()).copied().collect();
+        assert!((wa.mean() - mean(&all)).abs() < 1e-12);
+        assert!((wa.std() - std(&all)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_endpoints_and_median() {
+        let xs = [3.0, 1.0, 2.0, 5.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 5.0);
+        assert_eq!(percentile(&xs, 50.0), 3.0);
+    }
+
+    #[test]
+    fn cov_zero_mean_guard() {
+        assert_eq!(cov(&[0.0, 0.0, 0.0]), 0.0);
+    }
+
+    #[test]
+    fn ema_converges_to_constant() {
+        let mut e = Ema::new(0.3);
+        for _ in 0..100 {
+            e.add(5.0);
+        }
+        assert!((e.get().unwrap() - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ema_first_value_passthrough() {
+        let mut e = Ema::new(0.1);
+        assert_eq!(e.add(42.0), 42.0);
+    }
+}

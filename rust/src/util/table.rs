@@ -1,0 +1,154 @@
+//! ASCII table / bar-chart rendering for experiment reports — the
+//! evaluation figures are emitted as aligned text tables plus horizontal
+//! bar charts (and CSV for external plotting).
+
+/// A simple aligned text table.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>) -> Self {
+        Self { title: title.into(), ..Default::default() }
+    }
+
+    pub fn header(mut self, cols: &[&str]) -> Self {
+        self.header = cols.iter().map(|s| s.to_string()).collect();
+        self
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn row_f(&mut self, label: &str, values: &[f64], prec: usize) -> &mut Self {
+        let mut cells = vec![label.to_string()];
+        cells.extend(values.iter().map(|v| format!("{v:.prec$}")));
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn num_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Render with per-column alignment.
+    pub fn render(&self) -> String {
+        let ncols = self
+            .rows
+            .iter()
+            .map(Vec::len)
+            .chain(std::iter::once(self.header.len()))
+            .max()
+            .unwrap_or(0);
+        let mut widths = vec![0usize; ncols];
+        let all = std::iter::once(&self.header).chain(self.rows.iter());
+        for row in all {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.chars().count());
+            }
+        }
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("== {} ==\n", self.title));
+        }
+        let fmt_row = |row: &[String]| -> String {
+            row.iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:<w$}", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+                .trim_end()
+                .to_string()
+        };
+        if !self.header.is_empty() {
+            out.push_str(&fmt_row(&self.header));
+            out.push('\n');
+            out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (ncols - 1)));
+            out.push('\n');
+        }
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Render as CSV (for external plotting).
+    pub fn to_csv(&self) -> String {
+        let esc = |s: &str| {
+            if s.contains(',') || s.contains('"') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let mut out = String::new();
+        if !self.header.is_empty() {
+            out.push_str(&self.header.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        for row in &self.rows {
+            out.push_str(&row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Horizontal bar chart: one `(label, value)` per row, scaled to `width`.
+pub fn bar_chart(title: &str, data: &[(String, f64)], width: usize) -> String {
+    let max = data.iter().map(|(_, v)| *v).fold(f64::MIN, f64::max).max(1e-12);
+    let lw = data.iter().map(|(l, _)| l.chars().count()).max().unwrap_or(0);
+    let mut out = format!("-- {title} --\n");
+    for (label, v) in data {
+        let n = ((v / max) * width as f64).round().max(0.0) as usize;
+        out.push_str(&format!("{label:<lw$} | {} {v:.3}\n", "#".repeat(n)));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned_columns() {
+        let mut t = Table::new("demo").header(&["name", "x"]);
+        t.row(vec!["a".into(), "1".into()]);
+        t.row(vec!["longer".into(), "2".into()]);
+        let s = t.render();
+        assert!(s.contains("== demo =="));
+        let lines: Vec<&str> = s.lines().collect();
+        // header, separator, 2 rows
+        assert_eq!(lines.len(), 5);
+        assert!(lines[1].starts_with("name"));
+    }
+
+    #[test]
+    fn csv_escapes_commas() {
+        let mut t = Table::new("").header(&["a,b", "c"]);
+        t.row(vec!["x\"y".into(), "2".into()]);
+        let csv = t.to_csv();
+        assert!(csv.contains("\"a,b\""));
+        assert!(csv.contains("\"x\"\"y\""));
+    }
+
+    #[test]
+    fn row_f_formats_precision() {
+        let mut t = Table::new("");
+        t.row_f("r", &[1.23456], 2);
+        assert!(t.render().contains("1.23"));
+    }
+
+    #[test]
+    fn bar_chart_scales_to_width() {
+        let s = bar_chart("t", &[("a".into(), 2.0), ("b".into(), 1.0)], 10);
+        assert!(s.contains("##########"));
+        assert!(s.contains("#####"));
+    }
+}

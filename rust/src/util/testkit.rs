@@ -1,0 +1,90 @@
+//! Property-testing mini-framework (the offline registry has no proptest).
+//!
+//! [`propcheck`] runs a property over `cases` seeded inputs; on failure it
+//! reports the failing seed so the case can be replayed exactly:
+//!
+//! ```ignore
+//! propcheck("placement rows sum to one", 200, |rng| {
+//!     let p = random_placement(rng);
+//!     prop_assert(rows_sum_to_one(&p), "rows must sum to 1")
+//! });
+//! ```
+//!
+//! Properties return `Result<(), String>`; `prop_assert` builds the error.
+//! A failing case panics with the property name, case index, and seed.
+
+use super::rng::Rng;
+
+/// Default base seed; override with the `DVRM_PROP_SEED` env var.
+const DEFAULT_BASE_SEED: u64 = 0x5EED_0DF0_0D15_EA5E;
+
+/// Assert inside a property; returns `Err(msg)` on failure.
+pub fn prop_assert(cond: bool, msg: impl Into<String>) -> Result<(), String> {
+    if cond { Ok(()) } else { Err(msg.into()) }
+}
+
+/// Assert two floats are within `tol` (scaled by magnitude).
+pub fn prop_close(a: f64, b: f64, tol: f64) -> Result<(), String> {
+    let close = (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs()));
+    prop_assert(close, format!("{a} !~ {b} (tol {tol})"))
+}
+
+/// Run `prop` over `cases` independently-seeded RNGs.  The base seed is
+/// fixed (reproducible CI) but can be overridden via `DVRM_PROP_SEED`.
+pub fn propcheck<F>(name: &str, cases: u64, prop: F)
+where
+    F: Fn(&mut Rng) -> Result<(), String>,
+{
+    let base: u64 = std::env::var("DVRM_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(DEFAULT_BASE_SEED);
+    for case in 0..cases {
+        let seed = base
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add(case.wrapping_mul(0xD134_2543_DE82_EF95));
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property {name:?} failed at case {case}/{cases} \
+                 (replay with DVRM_PROP_SEED={base}, case seed {seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let counter = std::cell::Cell::new(0u64);
+        propcheck("trivially true", 50, |_rng| {
+            counter.set(counter.get() + 1);
+            Ok(())
+        });
+        assert_eq!(counter.get(), 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "always false")]
+    fn failing_property_panics_with_message() {
+        propcheck("fails", 5, |_rng| prop_assert(false, "always false"));
+    }
+
+    #[test]
+    fn prop_close_accepts_near_values() {
+        assert!(prop_close(1.0, 1.0 + 1e-9, 1e-6).is_ok());
+        assert!(prop_close(1.0, 2.0, 1e-6).is_err());
+    }
+
+    #[test]
+    fn seeds_differ_across_cases() {
+        let seen = std::cell::RefCell::new(std::collections::HashSet::new());
+        propcheck("distinct streams", 20, |rng| {
+            let v = rng.next_u64();
+            prop_assert(seen.borrow_mut().insert(v), "duplicate stream value")
+        });
+    }
+}

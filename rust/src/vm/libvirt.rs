@@ -1,0 +1,125 @@
+//! The libvirt-like control surface (paper §5: "The algorithm controls the
+//! virtualized instances through the Libvirt API").
+//!
+//! [`VirtApi`] is the exact interface Algorithm 1 needs — define/start VMs,
+//! pin vCPUs, migrate memory, read counters.  The simulator implements it;
+//! tests can substitute mocks.  On real hardware this trait would wrap
+//! `virDomainPinVcpu` / `virDomainMigrate` / perf fds; nothing in the
+//! coordinator would change.
+
+use anyhow::Result;
+
+use crate::sim::{PerfSample, Simulator};
+use crate::topology::{CpuId, NodeId, Topology};
+use crate::vm::{VmId, VmType};
+use crate::workload::App;
+
+/// Host virtualization control API, as used by the coordinator.
+pub trait VirtApi {
+    /// The host's hardware layout (`R` in Algorithm 1).
+    fn topology(&self) -> &Topology;
+
+    /// Define a new VM (returns its id; not yet running).
+    fn define(&mut self, vm_type: VmType, app: App) -> VmId;
+
+    /// Boot a defined VM.
+    fn boot(&mut self, id: VmId) -> Result<()>;
+
+    /// Pin every vCPU of `id` to the given hardware threads.
+    fn pin(&mut self, id: VmId, cpus: &[CpuId]) -> Result<()>;
+
+    /// Migrate/settle guest memory to the given per-node distribution.
+    fn migrate_memory(&mut self, id: VmId, dist: &[(NodeId, f64)]) -> Result<()>;
+
+    /// Tear down a VM.
+    fn undefine(&mut self, id: VmId) -> Result<()>;
+
+    /// Most recent perf counters for a VM, if any were sampled yet.
+    fn counters(&self, id: VmId) -> Option<PerfSample>;
+
+    /// Mean of the most recent `n` counter samples `(ipc, mpi, rel_perf)`.
+    fn counters_window(&self, id: VmId, n: usize) -> Option<(f64, f64, f64)>;
+
+    /// All currently defined VM ids.
+    fn list(&self) -> Vec<VmId>;
+}
+
+impl VirtApi for Simulator {
+    fn topology(&self) -> &Topology {
+        &self.topo
+    }
+
+    fn define(&mut self, vm_type: VmType, app: App) -> VmId {
+        self.create(vm_type, app)
+    }
+
+    fn boot(&mut self, id: VmId) -> Result<()> {
+        self.start(id)
+    }
+
+    fn pin(&mut self, id: VmId, cpus: &[CpuId]) -> Result<()> {
+        self.pin_all(id, cpus)
+    }
+
+    fn migrate_memory(&mut self, id: VmId, dist: &[(NodeId, f64)]) -> Result<()> {
+        self.place_memory(id, dist)
+    }
+
+    fn undefine(&mut self, id: VmId) -> Result<()> {
+        self.destroy(id)
+    }
+
+    fn counters(&self, id: VmId) -> Option<PerfSample> {
+        self.get(id).and_then(|m| m.history.last().copied())
+    }
+
+    fn counters_window(&self, id: VmId, n: usize) -> Option<(f64, f64, f64)> {
+        let h = &self.get(id)?.history;
+        if h.is_empty() {
+            return None;
+        }
+        Some((h.mean_ipc(n), h.mean_mpi(n), h.mean_rel_perf(n)))
+    }
+
+    fn list(&self) -> Vec<VmId> {
+        self.vms().map(|(id, _)| *id).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::SimConfig;
+    use crate::topology::Topology;
+
+    fn host() -> Simulator {
+        Simulator::new(Topology::paper(), SimConfig::pinned(1))
+    }
+
+    #[test]
+    fn trait_surface_drives_full_lifecycle() {
+        let mut h = host();
+        let api: &mut dyn VirtApi = &mut h;
+        let id = api.define(VmType::Small, App::Derby);
+        let cpus: Vec<CpuId> = (0..4).map(CpuId).collect();
+        api.pin(id, &cpus).unwrap();
+        api.migrate_memory(id, &[(NodeId(0), 1.0)]).unwrap();
+        api.boot(id).unwrap();
+        assert_eq!(api.list(), vec![id]);
+        assert!(api.counters(id).is_none(), "no samples before first tick");
+        h.step();
+        let api: &mut dyn VirtApi = &mut h;
+        assert!(api.counters(id).is_some());
+        let (ipc, mpi, rel) = api.counters_window(id, 5).unwrap();
+        assert!(ipc > 0.0 && mpi > 0.0 && rel > 0.0);
+        api.undefine(id).unwrap();
+        assert!(api.list().is_empty());
+    }
+
+    #[test]
+    fn pin_length_mismatch_is_error() {
+        let mut h = host();
+        let id = h.define(VmType::Medium, App::Fft);
+        assert!(h.pin(id, &[CpuId(0)]).is_err());
+    }
+}

@@ -1,0 +1,141 @@
+//! Virtual machines (paper §5.1, Table 5) and the libvirt-like control API
+//! the coordinator drives ([`libvirt`]).
+
+pub mod libvirt;
+pub mod types;
+
+pub use types::{VmId, VmSpec, VmType};
+
+use crate::topology::{CpuId, NodeId};
+use crate::workload::App;
+
+/// Lifecycle state of a VM.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum VmState {
+    Defined,
+    Running,
+    Destroyed,
+}
+
+/// A virtual machine: spec, workload, and its current physical mapping.
+#[derive(Debug, Clone)]
+pub struct Vm {
+    pub id: VmId,
+    pub vm_type: VmType,
+    pub app: App,
+    pub state: VmState,
+    /// Current vCPU → hw-thread mapping (`None` = floating, i.e. scheduled
+    /// by the host scheduler rather than pinned).
+    pub vcpu_pins: Vec<Option<CpuId>>,
+    /// Memory placement: GiB per NUMA node; sums to `spec().mem_gb`.
+    pub mem_gb_per_node: Vec<(NodeId, f64)>,
+    /// Arrival tick (for trace replay and metrics).
+    pub arrived_at: u64,
+}
+
+impl Vm {
+    pub fn new(id: VmId, vm_type: VmType, app: App, arrived_at: u64) -> Self {
+        Self {
+            id,
+            vm_type,
+            app,
+            state: VmState::Defined,
+            vcpu_pins: vec![None; vm_type.spec().vcpus],
+            mem_gb_per_node: Vec::new(),
+            arrived_at,
+        }
+    }
+
+    pub fn spec(&self) -> VmSpec {
+        self.vm_type.spec()
+    }
+
+    pub fn vcpus(&self) -> usize {
+        self.spec().vcpus
+    }
+
+    pub fn mem_gb(&self) -> f64 {
+        self.spec().mem_gb
+    }
+
+    /// Is every vCPU pinned to a concrete hw thread?
+    pub fn fully_pinned(&self) -> bool {
+        self.vcpu_pins.iter().all(Option::is_some)
+    }
+
+    /// Total memory currently placed (GiB).
+    pub fn mem_placed_gb(&self) -> f64 {
+        self.mem_gb_per_node.iter().map(|(_, gb)| gb).sum()
+    }
+
+    /// Fraction of this VM's vCPUs on each NUMA node — the `P` row the
+    /// scorer consumes.  `num_nodes` sizes the output.
+    pub fn placement_fractions(&self, topo: &crate::topology::Topology) -> Vec<f64> {
+        let mut p = vec![0.0; topo.num_nodes()];
+        let mut pinned = 0usize;
+        for pin in self.vcpu_pins.iter().flatten() {
+            p[topo.node_of_cpu(*pin).0] += 1.0;
+            pinned += 1;
+        }
+        if pinned > 0 {
+            p.iter_mut().for_each(|x| *x /= pinned as f64);
+        }
+        p
+    }
+
+    /// Fraction of this VM's memory on each NUMA node — the `M` row.
+    pub fn memory_fractions(&self, num_nodes: usize) -> Vec<f64> {
+        let mut m = vec![0.0; num_nodes];
+        let total = self.mem_placed_gb();
+        if total > 0.0 {
+            for (node, gb) in &self.mem_gb_per_node {
+                m[node.0] += gb / total;
+            }
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::Topology;
+
+    #[test]
+    fn new_vm_is_unpinned() {
+        let vm = Vm::new(VmId(1), VmType::Medium, App::Derby, 0);
+        assert_eq!(vm.state, VmState::Defined);
+        assert_eq!(vm.vcpus(), 8);
+        assert!(!vm.fully_pinned());
+        assert_eq!(vm.mem_placed_gb(), 0.0);
+    }
+
+    #[test]
+    fn placement_fractions_sum_to_one_when_pinned() {
+        let topo = Topology::paper();
+        let mut vm = Vm::new(VmId(1), VmType::Small, App::Stream, 0);
+        for (i, pin) in vm.vcpu_pins.iter_mut().enumerate() {
+            *pin = Some(CpuId(i)); // node 0 holds cpus 0..8
+        }
+        let p = vm.placement_fractions(&topo);
+        assert!((p.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert_eq!(p[0], 1.0);
+    }
+
+    #[test]
+    fn memory_fractions_normalized() {
+        let mut vm = Vm::new(VmId(2), VmType::Large, App::Neo4j, 0);
+        vm.mem_gb_per_node = vec![(NodeId(0), 48.0), (NodeId(1), 16.0)];
+        let m = vm.memory_fractions(4);
+        assert!((m[0] - 0.75).abs() < 1e-12);
+        assert!((m[1] - 0.25).abs() < 1e-12);
+        assert!((m.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn unpinned_vm_has_zero_fractions() {
+        let topo = Topology::tiny();
+        let vm = Vm::new(VmId(3), VmType::Small, App::Fft, 0);
+        assert!(vm.placement_fractions(&topo).iter().all(|&x| x == 0.0));
+    }
+}

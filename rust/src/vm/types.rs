@@ -1,0 +1,91 @@
+//! VM instance types (paper Table 5).  The *huge* type deliberately
+//! exceeds one physical server (72 cores × 288 GB on a 48-core / 196 GB
+//! box) to exercise the disaggregated fabric.
+
+/// Unique VM identifier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct VmId(pub u64);
+
+impl std::fmt::Display for VmId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "vm{}", self.0)
+    }
+}
+
+/// The four instance types of the evaluation (Table 5).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum VmType {
+    Small,
+    Medium,
+    Large,
+    Huge,
+}
+
+/// Resources of a VM type.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct VmSpec {
+    pub vcpus: usize,
+    pub mem_gb: f64,
+}
+
+impl VmType {
+    pub const ALL: [VmType; 4] = [VmType::Small, VmType::Medium, VmType::Large, VmType::Huge];
+
+    /// Table 5.
+    pub fn spec(self) -> VmSpec {
+        match self {
+            VmType::Small => VmSpec { vcpus: 4, mem_gb: 16.0 },
+            VmType::Medium => VmSpec { vcpus: 8, mem_gb: 32.0 },
+            VmType::Large => VmSpec { vcpus: 16, mem_gb: 64.0 },
+            VmType::Huge => VmSpec { vcpus: 72, mem_gb: 288.0 },
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            VmType::Small => "Small",
+            VmType::Medium => "Medium",
+            VmType::Large => "Large",
+            VmType::Huge => "Huge",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<VmType> {
+        VmType::ALL.iter().copied().find(|t| t.name().eq_ignore_ascii_case(s))
+    }
+}
+
+impl std::fmt::Display for VmType {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table5_specs() {
+        assert_eq!(VmType::Small.spec(), VmSpec { vcpus: 4, mem_gb: 16.0 });
+        assert_eq!(VmType::Medium.spec(), VmSpec { vcpus: 8, mem_gb: 32.0 });
+        assert_eq!(VmType::Large.spec(), VmSpec { vcpus: 16, mem_gb: 64.0 });
+        assert_eq!(VmType::Huge.spec(), VmSpec { vcpus: 72, mem_gb: 288.0 });
+    }
+
+    #[test]
+    fn huge_exceeds_one_server() {
+        // One server: 48 cores, 196 GB — huge needs 1.5 servers of cores.
+        let huge = VmType::Huge.spec();
+        assert!(huge.vcpus > 48);
+        assert!(huge.mem_gb > 196.0);
+    }
+
+    #[test]
+    fn name_roundtrip() {
+        for t in VmType::ALL {
+            assert_eq!(VmType::from_name(t.name()), Some(t));
+        }
+        assert_eq!(VmType::from_name("gigantic"), None);
+    }
+}

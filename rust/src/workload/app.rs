@@ -1,0 +1,227 @@
+//! Application performance profiles (paper Table 2 + §5.2).
+//!
+//! Each evaluated application is modelled by a small set of parameters that
+//! drive the simulator's synthetic performance counters.  The profiles are
+//! fit to the paper's classification (Table 2) and the solo/co-located
+//! behaviour of Figs. 4–10; see DESIGN.md §Substitutions.
+
+use super::classes::{AnimalClass, Sensitivity};
+
+/// The applications of the paper's evaluation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum App {
+    /// Neo4j graph database under LDBC load (real-world application).
+    Neo4j,
+    /// Sockshop microservices demo under simulated shoppers.
+    Sockshop,
+    /// SPECjvm2008 derby — in-JVM database benchmark.
+    Derby,
+    /// SPECjvm2008 fft.large — FP kernel, streams through the cache.
+    Fft,
+    /// SPECjvm2008 sor.large — stencil over a large matrix.
+    Sor,
+    /// SPECjvm2008 mpegaudio — CPU-bound codec, cache-friendly.
+    Mpegaudio,
+    /// SPECjvm2008 sunflow — multi-threaded ray tracer.
+    Sunflow,
+    /// STREAM — memory bandwidth benchmark.
+    Stream,
+}
+
+impl App {
+    pub const ALL: [App; 8] = [
+        App::Neo4j,
+        App::Sockshop,
+        App::Derby,
+        App::Fft,
+        App::Sor,
+        App::Mpegaudio,
+        App::Sunflow,
+        App::Stream,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            App::Neo4j => "Neo4j",
+            App::Sockshop => "Sockshop",
+            App::Derby => "Derby",
+            App::Fft => "fft",
+            App::Sor => "sor",
+            App::Mpegaudio => "mpegaudio",
+            App::Sunflow => "Sunflow",
+            App::Stream => "Stream",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<App> {
+        App::ALL.iter().copied().find(|a| a.name().eq_ignore_ascii_case(name))
+    }
+
+    /// Workload type label (Table 2 first row).
+    pub fn kind(self) -> &'static str {
+        match self {
+            App::Neo4j => "Database",
+            App::Sockshop => "Microservice",
+            _ => "Benchmark",
+        }
+    }
+
+    pub fn profile(self) -> AppProfile {
+        AppProfile::of(self)
+    }
+}
+
+impl std::fmt::Display for App {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Synthetic performance profile of an application.
+///
+/// Rates are *per vCPU at full utilization on an ideal (local, solo)
+/// placement*; the simulator scales them with locality, contention,
+/// bandwidth saturation and overbooking.
+#[derive(Debug, Clone)]
+pub struct AppProfile {
+    pub app: App,
+    pub class: AnimalClass,
+    pub sensitivity: Sensitivity,
+    /// Solo instructions-per-cycle on an ideal placement.
+    pub base_ipc: f64,
+    /// Solo LLC misses per instruction on an ideal placement.
+    pub base_mpi: f64,
+    /// LLC working set per vCPU, MiB — drives cache pressure.
+    pub cache_mb_per_vcpu: f64,
+    /// DRAM bandwidth demand per vCPU, GB/s — drives controller/fabric load.
+    pub bw_gbs_per_vcpu: f64,
+    /// Fraction of execution time stalled on memory at *local* distance —
+    /// scales the latency penalty of remote placement.
+    pub mem_stall_frac: f64,
+    /// Fraction of the app's progress that is bandwidth-bound (vs
+    /// latency/compute-bound); STREAM ≈ 1, mpegaudio ≈ 0.
+    pub bw_bound_frac: f64,
+    /// How hard this app thrashes a shared LLC (0–1; Devils high).
+    pub thrash: f64,
+    /// How sensitive this app's own IPC is to cache pressure (0–1;
+    /// Rabbits high, Devils low — they miss anyway).
+    pub cache_sens: f64,
+}
+
+impl AppProfile {
+    /// Profile table — the repo's calibrated stand-ins for Table 2's apps.
+    pub fn of(app: App) -> AppProfile {
+        use AnimalClass::*;
+        use Sensitivity::*;
+        let (class, sens, ipc, mpi, cache, bw, stall, bwb, thrash, csens) = match app {
+            //                       class    sens         ipc   mpi     cMB   bw    stall  bwb   thr   csens
+            App::Neo4j =>       (Sheep,  Sensitive,   0.80, 0.0050, 4.0,  1.2,  0.25,  0.40, 0.25, 0.35),
+            App::Sockshop =>    (Sheep,  Insensitive, 1.00, 0.0020, 1.0,  0.4,  0.10,  0.15, 0.10, 0.25),
+            App::Derby =>       (Sheep,  Sensitive,   1.10, 0.0030, 2.0,  0.8,  0.18,  0.25, 0.15, 0.30),
+            App::Fft =>         (Devil,  Sensitive,   0.90, 0.0200, 8.0,  3.0,  0.35,  0.55, 0.85, 0.15),
+            App::Sor =>         (Devil,  Sensitive,   0.85, 0.0180, 6.0,  2.5,  0.32,  0.50, 0.80, 0.15),
+            App::Mpegaudio =>   (Rabbit, Sensitive,   1.60, 0.0010, 1.5,  0.3,  0.009, 0.05, 0.10, 0.80),
+            App::Sunflow =>     (Rabbit, Insensitive, 1.40, 0.0020, 2.0,  0.6,  0.05,  0.10, 0.15, 0.70),
+            App::Stream =>      (Devil,  Sensitive,   0.50, 0.0400, 12.0, 6.0,  0.70,  0.95, 0.95, 0.05),
+        };
+        AppProfile {
+            app,
+            class,
+            sensitivity: sens,
+            base_ipc: ipc,
+            base_mpi: mpi,
+            cache_mb_per_vcpu: cache,
+            bw_gbs_per_vcpu: bw,
+            mem_stall_frac: stall,
+            bw_bound_frac: bwb,
+            thrash,
+            cache_sens: csens,
+        }
+    }
+
+    /// Solo application throughput per vCPU (arbitrary ops/s unit) — the
+    /// normalization base for "relative performance" figures.
+    pub fn base_rate(&self) -> f64 {
+        // Proportional to IPC; the absolute unit cancels in relative plots.
+        self.base_ipc * 1000.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use AnimalClass::*;
+
+    #[test]
+    fn table2_classes_reproduced() {
+        assert_eq!(App::Neo4j.profile().class, Sheep);
+        assert_eq!(App::Sockshop.profile().class, Sheep);
+        assert_eq!(App::Derby.profile().class, Sheep);
+        assert_eq!(App::Fft.profile().class, Devil);
+        assert_eq!(App::Sor.profile().class, Devil);
+        assert_eq!(App::Mpegaudio.profile().class, Rabbit);
+        assert_eq!(App::Sunflow.profile().class, Rabbit);
+        assert_eq!(App::Stream.profile().class, Devil);
+    }
+
+    #[test]
+    fn table2_kinds() {
+        assert_eq!(App::Neo4j.kind(), "Database");
+        assert_eq!(App::Sockshop.kind(), "Microservice");
+        assert_eq!(App::Derby.kind(), "Benchmark");
+    }
+
+    #[test]
+    fn devils_thrash_rabbits_are_cache_sensitive() {
+        for app in App::ALL {
+            let p = app.profile();
+            match p.class {
+                Devil => assert!(p.thrash >= 0.8, "{app} thrash {}", p.thrash),
+                Rabbit => assert!(p.cache_sens >= 0.7, "{app} csens {}", p.cache_sens),
+                Sheep => {
+                    assert!(p.thrash <= 0.3);
+                    assert!(p.cache_sens <= 0.5);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn stream_is_bandwidth_bound() {
+        let p = App::Stream.profile();
+        assert!(p.bw_bound_frac > 0.9);
+        assert!(p.bw_gbs_per_vcpu >= 5.0);
+    }
+
+    #[test]
+    fn mpegaudio_mostly_latency_insensitive() {
+        // Fig. 11: worst-case distance costs mpegaudio ~17%.
+        let p = App::Mpegaudio.profile();
+        // At worst distance (200), latency multiplier ≈ 1 + stall*(200/10-1)
+        let mult = 1.0 + p.mem_stall_frac * (200.0 / 10.0 - 1.0);
+        assert!(mult < 1.25, "mpegaudio distance multiplier too big: {mult}");
+        assert!(mult > 1.10, "mpegaudio distance multiplier too small: {mult}");
+    }
+
+    #[test]
+    fn name_roundtrip() {
+        for app in App::ALL {
+            assert_eq!(App::from_name(app.name()), Some(app));
+            assert_eq!(App::from_name(&app.name().to_uppercase()), Some(app));
+        }
+        assert_eq!(App::from_name("nosuch"), None);
+    }
+
+    #[test]
+    fn profiles_are_positive_and_bounded() {
+        for app in App::ALL {
+            let p = app.profile();
+            assert!(p.base_ipc > 0.0 && p.base_ipc < 4.0);
+            assert!(p.base_mpi > 0.0 && p.base_mpi < 0.1);
+            assert!((0.0..=1.0).contains(&p.mem_stall_frac));
+            assert!((0.0..=1.0).contains(&p.bw_bound_frac));
+            assert!((0.0..=1.0).contains(&p.thrash));
+            assert!((0.0..=1.0).contains(&p.cache_sens));
+        }
+    }
+}

@@ -1,0 +1,200 @@
+//! The animal workload classification (paper §2.2, after Xie & Loh) and the
+//! paper's class-compatibility matrix (Table 3).
+//!
+//! * **Sheep** — gentle: insensitive to sharing cache, harmless to others.
+//! * **Rabbit** — delicate: degrades rapidly when sharing cache.
+//! * **Devil** — thrashes the LLC: hurts co-located applications, does not
+//!   benefit from cache itself.
+//!
+//! The paper additionally tags each application *sensitive* or
+//! *insensitive* to remote memory (§2.2).
+
+/// Animal class of an application (the paper omits "Turtle").
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AnimalClass {
+    Sheep,
+    Rabbit,
+    Devil,
+}
+
+impl AnimalClass {
+    pub const ALL: [AnimalClass; 3] = [AnimalClass::Sheep, AnimalClass::Rabbit, AnimalClass::Devil];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            AnimalClass::Sheep => "Sheep",
+            AnimalClass::Rabbit => "Rabbit",
+            AnimalClass::Devil => "Devil",
+        }
+    }
+
+    pub fn index(self) -> usize {
+        match self {
+            AnimalClass::Sheep => 0,
+            AnimalClass::Rabbit => 1,
+            AnimalClass::Devil => 2,
+        }
+    }
+}
+
+impl std::fmt::Display for AnimalClass {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Remote-memory sensitivity (paper §2.2: "rather coarse" — binary).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Sensitivity {
+    Sensitive,
+    Insensitive,
+}
+
+impl Sensitivity {
+    pub fn is_sensitive(self) -> bool {
+        matches!(self, Sensitivity::Sensitive)
+    }
+}
+
+/// Table 3 — may these two classes share an LLC / NUMA node?
+/// (`X` in the paper = compatible, `-` = avoid.)
+pub fn compatible(a: AnimalClass, b: AnimalClass) -> bool {
+    use AnimalClass::*;
+    match (a, b) {
+        (Sheep, _) | (_, Sheep) => true,
+        (Rabbit, Rabbit) => false,
+        (Rabbit, Devil) | (Devil, Rabbit) => false,
+        (Devil, Devil) => true, // already thrashing; Table 3 marks X
+    }
+}
+
+/// Quantified interference penalty for the scoring kernel's class matrix
+/// `C[v, w]` — the cost of VM `v` sharing a node with VM `w`.  Values are
+/// on the paper's 1–10 benefit scale (Table 4) and are deliberately
+/// asymmetric: a Devil hurts a Rabbit far more than vice versa.
+pub fn pair_penalty(victim: AnimalClass, aggressor: AnimalClass) -> f64 {
+    use AnimalClass::*;
+    match (victim, aggressor) {
+        (Sheep, Sheep) => 0.3,
+        (Sheep, Rabbit) => 0.4,
+        (Sheep, Devil) => 1.0,
+        (Rabbit, Sheep) => 0.8,
+        (Rabbit, Rabbit) => 5.0,
+        (Rabbit, Devil) => 9.0,
+        (Devil, Sheep) => 0.3,
+        (Devil, Rabbit) => 0.5,
+        (Devil, Devil) => 2.0,
+    }
+}
+
+/// The benefit matrix (Table 4): how much a class gains from being moved to
+/// its own socket / NUMA node / server node, values 1–10.  The coordinator
+/// updates a learned copy online ([`crate::coordinator::benefit`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum IsolationLevel {
+    Socket,
+    NumaNode,
+    ServerNode,
+}
+
+impl IsolationLevel {
+    pub const ALL: [IsolationLevel; 3] =
+        [IsolationLevel::Socket, IsolationLevel::NumaNode, IsolationLevel::ServerNode];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            IsolationLevel::Socket => "Socket",
+            IsolationLevel::NumaNode => "Numa Node",
+            IsolationLevel::ServerNode => "Server Node",
+        }
+    }
+}
+
+/// Initial benefit values from Table 4 (`[level][class]`).
+pub fn initial_benefit(level: IsolationLevel, class: AnimalClass) -> f64 {
+    use AnimalClass::*;
+    use IsolationLevel::*;
+    match (level, class) {
+        (Socket, Sheep) => 1.0,
+        (Socket, Rabbit) => 4.0,
+        (Socket, Devil) => 7.0,
+        (NumaNode, Sheep) => 1.0,
+        (NumaNode, Rabbit) => 5.0,
+        (NumaNode, Devil) => 8.0,
+        (ServerNode, Sheep) => 1.0,
+        (ServerNode, Rabbit) => 6.0,
+        (ServerNode, Devil) => 9.0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use AnimalClass::*;
+
+    #[test]
+    fn table3_matrix_reproduced() {
+        // Sheep row/column: all compatible.
+        for c in AnimalClass::ALL {
+            assert!(compatible(Sheep, c));
+            assert!(compatible(c, Sheep));
+        }
+        assert!(!compatible(Rabbit, Rabbit));
+        assert!(!compatible(Rabbit, Devil));
+        assert!(!compatible(Devil, Rabbit));
+        assert!(compatible(Devil, Devil));
+    }
+
+    #[test]
+    fn compatibility_is_symmetric() {
+        for a in AnimalClass::ALL {
+            for b in AnimalClass::ALL {
+                assert_eq!(compatible(a, b), compatible(b, a));
+            }
+        }
+    }
+
+    #[test]
+    fn devil_on_rabbit_is_worst_penalty() {
+        let worst = pair_penalty(Rabbit, Devil);
+        for a in AnimalClass::ALL {
+            for b in AnimalClass::ALL {
+                assert!(pair_penalty(a, b) <= worst);
+            }
+        }
+    }
+
+    #[test]
+    fn incompatible_pairs_have_high_penalty() {
+        // Penalties are asymmetric (victim vs aggressor), so an
+        // incompatible pair must be expensive in at least one direction.
+        for a in AnimalClass::ALL {
+            for b in AnimalClass::ALL {
+                if !compatible(a, b) {
+                    assert!(pair_penalty(a, b).max(pair_penalty(b, a)) >= 5.0, "{a}/{b}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn table4_initial_values() {
+        use IsolationLevel::*;
+        assert_eq!(initial_benefit(Socket, Sheep), 1.0);
+        assert_eq!(initial_benefit(Socket, Rabbit), 4.0);
+        assert_eq!(initial_benefit(Socket, Devil), 7.0);
+        assert_eq!(initial_benefit(NumaNode, Rabbit), 5.0);
+        assert_eq!(initial_benefit(ServerNode, Devil), 9.0);
+    }
+
+    #[test]
+    fn benefit_grows_with_isolation_level_for_non_sheep() {
+        for class in [Rabbit, Devil] {
+            let v: Vec<f64> = IsolationLevel::ALL
+                .iter()
+                .map(|l| initial_benefit(*l, class))
+                .collect();
+            assert!(v[0] < v[1] && v[1] < v[2], "{class}: {v:?}");
+        }
+    }
+}

@@ -1,0 +1,127 @@
+//! Load generation (paper §5.2): the LDBC driver for Neo4j, the Sockshop
+//! shopper simulator, and the batch SPECjvm/STREAM runs are modelled as
+//! per-tick utilization processes.
+//!
+//! Interactive services (Neo4j, Sockshop) follow a diurnal-ish sinusoid
+//! with noise; batch benchmarks run flat-out until completion.
+
+use super::app::App;
+use crate::util::rng::Rng;
+
+/// Kind of load process driving a VM.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LoadKind {
+    /// Closed-loop interactive load (level varies around a mean).
+    Interactive,
+    /// Batch job: full utilization for the whole run.
+    Batch,
+}
+
+impl LoadKind {
+    pub fn of(app: App) -> LoadKind {
+        match app {
+            App::Neo4j | App::Sockshop => LoadKind::Interactive,
+            _ => LoadKind::Batch,
+        }
+    }
+}
+
+/// Per-VM load generator: produces target utilization in `[0, 1]` per tick.
+#[derive(Debug, Clone)]
+pub struct LoadGen {
+    kind: LoadKind,
+    /// Mean utilization for interactive load.
+    mean: f64,
+    /// Sinusoid amplitude (fraction of mean).
+    amplitude: f64,
+    /// Period in ticks.
+    period: f64,
+    /// Per-tick noise sigma.
+    noise: f64,
+    phase: f64,
+}
+
+impl LoadGen {
+    pub fn new(app: App, rng: &mut Rng) -> Self {
+        let kind = LoadKind::of(app);
+        Self {
+            kind,
+            mean: 0.75,
+            amplitude: 0.2,
+            period: 600.0,
+            noise: 0.05,
+            phase: rng.f64() * std::f64::consts::TAU,
+        }
+    }
+
+    /// Constant full-load generator (used in controlled studies).
+    pub fn flat() -> Self {
+        Self {
+            kind: LoadKind::Batch,
+            mean: 1.0,
+            amplitude: 0.0,
+            period: 1.0,
+            noise: 0.0,
+            phase: 0.0,
+        }
+    }
+
+    /// Target utilization at `tick`.
+    pub fn utilization(&self, tick: u64, rng: &mut Rng) -> f64 {
+        match self.kind {
+            LoadKind::Batch => 1.0,
+            LoadKind::Interactive => {
+                let t = tick as f64 / self.period * std::f64::consts::TAU + self.phase;
+                let u = self.mean * (1.0 + self.amplitude * t.sin()) + rng.normal() * self.noise;
+                u.clamp(0.05, 1.0)
+            }
+        }
+    }
+
+    pub fn kind(&self) -> LoadKind {
+        self.kind
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_apps_run_flat_out() {
+        let mut rng = Rng::new(1);
+        let lg = LoadGen::new(App::Stream, &mut rng);
+        assert_eq!(lg.kind(), LoadKind::Batch);
+        for t in 0..100 {
+            assert_eq!(lg.utilization(t, &mut rng), 1.0);
+        }
+    }
+
+    #[test]
+    fn interactive_load_varies_within_bounds() {
+        let mut rng = Rng::new(2);
+        let lg = LoadGen::new(App::Neo4j, &mut rng);
+        assert_eq!(lg.kind(), LoadKind::Interactive);
+        let us: Vec<f64> = (0..1000).map(|t| lg.utilization(t, &mut rng)).collect();
+        assert!(us.iter().all(|&u| (0.05..=1.0).contains(&u)));
+        let spread = us.iter().cloned().fold(f64::MIN, f64::max)
+            - us.iter().cloned().fold(f64::MAX, f64::min);
+        assert!(spread > 0.1, "interactive load should vary, spread={spread}");
+    }
+
+    #[test]
+    fn flat_generator_is_constant_one() {
+        let mut rng = Rng::new(3);
+        let lg = LoadGen::flat();
+        assert_eq!(lg.utilization(123, &mut rng), 1.0);
+    }
+
+    #[test]
+    fn load_kind_assignment_matches_paper() {
+        assert_eq!(LoadKind::of(App::Neo4j), LoadKind::Interactive);
+        assert_eq!(LoadKind::of(App::Sockshop), LoadKind::Interactive);
+        for app in [App::Derby, App::Fft, App::Sor, App::Mpegaudio, App::Sunflow, App::Stream] {
+            assert_eq!(LoadKind::of(app), LoadKind::Batch);
+        }
+    }
+}

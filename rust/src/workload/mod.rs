@@ -1,0 +1,11 @@
+//! Workload models (paper §2.2, §3.2, Table 2): the evaluated applications
+//! as synthetic performance profiles, the animal classification scheme,
+//! and load/trace generation for the cluster experiments.
+
+pub mod app;
+pub mod classes;
+pub mod loadgen;
+pub mod trace;
+
+pub use app::{App, AppProfile};
+pub use classes::{pair_penalty, AnimalClass, Sensitivity};

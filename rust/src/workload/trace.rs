@@ -1,0 +1,145 @@
+//! Arrival traces for cluster experiments (paper §5.1: "12 small VMs, 4
+//! medium VMs, 2 large VMs, and 2 huge VMs were hosted at the same time").
+
+use super::app::App;
+use crate::util::rng::Rng;
+use crate::vm::VmType;
+
+/// One VM arrival.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Arrival {
+    pub at_tick: u64,
+    pub vm_type: VmType,
+    pub app: App,
+}
+
+/// The paper's steady-state evaluation mix: 12 small + 4 medium + 2 large
+/// + 2 huge (= 20 VMs, 256 vCPUs on 288 hw threads).  Apps are assigned
+/// per §5.3.2: Neo4j runs on *huge*, Sockshop on *small*, the SPECjvm
+/// benchmarks + Stream on the rest, cycling so every app appears.
+pub fn paper_mix(rng: &mut Rng) -> Vec<Arrival> {
+    let bench_apps =
+        [App::Derby, App::Fft, App::Sor, App::Mpegaudio, App::Sunflow, App::Stream];
+    let mut arrivals = Vec::new();
+
+    // 2 huge: Neo4j (the paper's huge-VM case study) + one Stream.
+    arrivals.push((VmType::Huge, App::Neo4j));
+    arrivals.push((VmType::Huge, App::Stream));
+    // 2 large: heavy benchmarks.
+    arrivals.push((VmType::Large, App::Fft));
+    arrivals.push((VmType::Large, App::Sor));
+    // 4 medium: one per remaining benchmark family.
+    arrivals.push((VmType::Medium, App::Derby));
+    arrivals.push((VmType::Medium, App::Mpegaudio));
+    arrivals.push((VmType::Medium, App::Sunflow));
+    arrivals.push((VmType::Medium, App::Stream));
+    // 12 small: Sockshop plus a cycle over the benchmarks.
+    for i in 0..12 {
+        let app = if i < 6 { App::Sockshop } else { bench_apps[i % bench_apps.len()] };
+        arrivals.push((VmType::Small, app));
+    }
+
+    // Staggered arrivals with a little jitter (1 VM every ~3 ticks).
+    let mut out: Vec<Arrival> = arrivals
+        .into_iter()
+        .enumerate()
+        .map(|(i, (vm_type, app))| Arrival {
+            at_tick: (i as u64) * 3 + rng.below(3) as u64,
+            vm_type,
+            app,
+        })
+        .collect();
+    out.sort_by_key(|a| a.at_tick);
+    out
+}
+
+/// A trace with one VM of the given type per app — used by the
+/// per-application comparison figures (Figs. 14–16 use medium for all
+/// apps except Neo4j=huge, Sockshop=small).
+pub fn per_app_mix() -> Vec<Arrival> {
+    App::ALL
+        .iter()
+        .enumerate()
+        .map(|(i, app)| Arrival {
+            at_tick: i as u64,
+            vm_type: match app {
+                App::Neo4j => VmType::Huge,
+                App::Sockshop => VmType::Small,
+                _ => VmType::Medium,
+            },
+            app: *app,
+        })
+        .collect()
+}
+
+/// Random background load of `n` small/medium VMs (for co-location and
+/// stress studies).
+pub fn background(n: usize, rng: &mut Rng) -> Vec<Arrival> {
+    (0..n)
+        .map(|i| Arrival {
+            at_tick: i as u64,
+            vm_type: if rng.chance(0.7) { VmType::Small } else { VmType::Medium },
+            app: *rng.choose(&App::ALL),
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_mix_has_the_table5_counts() {
+        let mut rng = Rng::new(1);
+        let mix = paper_mix(&mut rng);
+        assert_eq!(mix.len(), 20);
+        let count = |t: VmType| mix.iter().filter(|a| a.vm_type == t).count();
+        assert_eq!(count(VmType::Small), 12);
+        assert_eq!(count(VmType::Medium), 4);
+        assert_eq!(count(VmType::Large), 2);
+        assert_eq!(count(VmType::Huge), 2);
+    }
+
+    #[test]
+    fn paper_mix_total_vcpus_fit_machine() {
+        let mut rng = Rng::new(2);
+        let total: usize = paper_mix(&mut rng).iter().map(|a| a.vm_type.spec().vcpus).sum();
+        assert_eq!(total, 256); // < 288 hw threads: no forced overbooking
+    }
+
+    #[test]
+    fn paper_mix_covers_all_apps() {
+        let mut rng = Rng::new(3);
+        let mix = paper_mix(&mut rng);
+        for app in App::ALL {
+            assert!(mix.iter().any(|a| a.app == app), "missing {app}");
+        }
+    }
+
+    #[test]
+    fn paper_mix_arrivals_sorted() {
+        let mut rng = Rng::new(4);
+        let mix = paper_mix(&mut rng);
+        assert!(mix.windows(2).all(|w| w[0].at_tick <= w[1].at_tick));
+    }
+
+    #[test]
+    fn per_app_mix_matches_figure_setup() {
+        let mix = per_app_mix();
+        assert_eq!(mix.len(), App::ALL.len());
+        for a in &mix {
+            let want = match a.app {
+                App::Neo4j => VmType::Huge,
+                App::Sockshop => VmType::Small,
+                _ => VmType::Medium,
+            };
+            assert_eq!(a.vm_type, want, "{}", a.app);
+        }
+    }
+
+    #[test]
+    fn background_respects_count() {
+        let mut rng = Rng::new(5);
+        assert_eq!(background(7, &mut rng).len(), 7);
+    }
+}

@@ -1,0 +1,181 @@
+//! Integration tests: whole-stack behaviour across runtime + coordinator +
+//! simulator, including the PJRT path when artifacts are built.
+
+use dvrm::coordinator::{MapperConfig, Metric, SmMapper};
+use dvrm::experiments::{run_cluster, Algorithm, HarnessConfig};
+use dvrm::runtime::{Engine, Scorer};
+use dvrm::sim::{SimConfig, Simulator};
+use dvrm::topology::{CpuId, NodeId, Topology};
+use dvrm::util::rng::Rng;
+use dvrm::vm::VmType;
+use dvrm::workload::{trace, App};
+
+fn engine() -> Engine {
+    Engine::load(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
+        .expect("run `make artifacts` before cargo test")
+}
+
+#[test]
+fn pjrt_mapper_places_full_paper_mix() {
+    // The paper's 20-VM / 256-vCPU load, placed entirely through the
+    // AOT-compiled JAX/Pallas scorer over PJRT.
+    let mut sim = Simulator::new(Topology::paper(), SimConfig::pinned(1));
+    let mut mapper =
+        SmMapper::new(MapperConfig::new(Metric::Ipc), Scorer::Pjrt(std::rc::Rc::new(engine())));
+    let mut rng = Rng::new(1);
+    for a in trace::paper_mix(&mut rng) {
+        let id = sim.create(a.vm_type, a.app);
+        mapper.place_arrival(&mut sim, id).unwrap();
+        sim.start(id).unwrap();
+    }
+    // No overbooking anywhere.
+    assert!(sim.occupancy().iter().all(|&o| o <= 1));
+    // 256 of 288 slots used.
+    assert_eq!(sim.occupancy().iter().map(|&o| o as usize).sum::<usize>(), 256);
+    assert!(mapper.stats.scorer_batches >= 20);
+}
+
+#[test]
+fn pjrt_and_native_mappers_agree_on_quality() {
+    // Same trace, same seed: the PJRT-scored mapper and the native-scored
+    // mapper must land within a few percent of each other (identical cost
+    // model, float tolerance apart).
+    let mut rng = Rng::new(5);
+    let arrivals = trace::paper_mix(&mut rng);
+    let mut cfg = HarnessConfig::fast(5);
+    cfg.scorer = dvrm::experiments::ScorerChoice::Native;
+    let native = run_cluster(Algorithm::SmIpc, &arrivals, &cfg).unwrap();
+    cfg.scorer = dvrm::experiments::ScorerChoice::Auto; // PJRT (artifacts built)
+    let pjrt = run_cluster(Algorithm::SmIpc, &arrivals, &cfg).unwrap();
+    let mean = |r: &dvrm::experiments::ClusterResult| {
+        let xs: Vec<f64> = r.summaries.iter().map(|s| s.mean_rel_perf).collect();
+        dvrm::util::stats::mean(&xs)
+    };
+    let (a, b) = (mean(&native), mean(&pjrt));
+    assert!(
+        (a - b).abs() / a.max(b) < 0.10,
+        "native {a:.4} vs pjrt {b:.4} diverge by >10%"
+    );
+}
+
+#[test]
+fn whole_system_reshuffle_via_optimizer_artifact() {
+    // Fill the machine badly by hand, then let the L2 optimizer artifact
+    // drive a whole-system reshuffle through the mapper.
+    let mut sim = Simulator::new(Topology::paper(), SimConfig::pinned(9));
+    let mut rng = Rng::new(9);
+    let mut ids = Vec::new();
+    for k in 0..10 {
+        let id = sim.create(VmType::Medium, *rng.choose(&App::ALL));
+        // Scatter each VM's 8 vcpus across random distinct cpus.
+        let mut cpus: Vec<CpuId> = Vec::new();
+        while cpus.len() < 8 {
+            let c = CpuId(rng.below(288));
+            if !cpus.contains(&c) {
+                cpus.push(c);
+            }
+        }
+        sim.pin_all(id, &cpus).unwrap();
+        sim.place_memory(id, &[(NodeId(rng.below(36)), 1.0)]).unwrap();
+        sim.start(id).unwrap();
+        ids.push(id);
+        let _ = k;
+    }
+    let mut mapper =
+        SmMapper::new(MapperConfig::new(Metric::Ipc), Scorer::Pjrt(std::rc::Rc::new(engine())));
+    // Perf before.
+    sim.run(10);
+    let before: f64 = ids
+        .iter()
+        .map(|id| sim.get(*id).unwrap().history.mean_rel_perf(5))
+        .sum::<f64>();
+    mapper.reshuffle(&mut sim).unwrap();
+    sim.run(10);
+    let after: f64 = ids
+        .iter()
+        .map(|id| sim.get(*id).unwrap().history.mean_rel_perf(5))
+        .sum::<f64>();
+    assert!(sim.occupancy().iter().all(|&o| o <= 1), "reshuffle overbooked");
+    assert!(
+        after > before,
+        "optimizer reshuffle should improve aggregate rel perf: {before:.3} -> {after:.3}"
+    );
+}
+
+#[test]
+fn end_to_end_three_algorithms_ordering() {
+    // The paper's core result as an invariant: SM-IPC and SM-MPI both
+    // strictly beat vanilla on aggregate relative performance.
+    let mut rng = Rng::new(11);
+    let arrivals = trace::paper_mix(&mut rng);
+    let cfg = HarnessConfig::fast(11);
+    let mean = |alg| {
+        let r = run_cluster(alg, &arrivals, &cfg).unwrap();
+        let xs: Vec<f64> = r.summaries.iter().map(|s| s.mean_rel_perf).collect();
+        dvrm::util::stats::mean(&xs)
+    };
+    let vanilla = mean(Algorithm::Vanilla);
+    let sm_ipc = mean(Algorithm::SmIpc);
+    let sm_mpi = mean(Algorithm::SmMpi);
+    assert!(sm_ipc > vanilla * 2.0, "SM-IPC {sm_ipc:.3} vs vanilla {vanilla:.3}");
+    assert!(sm_mpi > vanilla * 2.0, "SM-MPI {sm_mpi:.3} vs vanilla {vanilla:.3}");
+    // And the two SM variants are comparable (paper: "comparable
+    // performance for all applications").
+    assert!(
+        (sm_ipc - sm_mpi).abs() / sm_ipc.max(sm_mpi) < 0.25,
+        "SM variants diverge: {sm_ipc:.3} vs {sm_mpi:.3}"
+    );
+}
+
+#[test]
+fn arrival_churn_with_departures() {
+    // Failure-injection-ish: VMs arrive and leave; the mapper must keep
+    // the no-overbooking invariant and survive capacity churn.
+    let mut sim = Simulator::new(Topology::paper(), SimConfig::pinned(13));
+    let mut mapper = SmMapper::new(MapperConfig::new(Metric::Ipc), Scorer::Native);
+    let mut rng = Rng::new(13);
+    let mut live: Vec<dvrm::vm::VmId> = Vec::new();
+    for round in 0..40 {
+        if rng.chance(0.6) || live.is_empty() {
+            let vm_type = *rng.choose(&[VmType::Small, VmType::Medium, VmType::Large]);
+            let id = sim.create(vm_type, *rng.choose(&App::ALL));
+            match mapper.place_arrival(&mut sim, id) {
+                Ok(_) => {
+                    sim.start(id).unwrap();
+                    live.push(id);
+                }
+                Err(_) => {
+                    // Out of capacity is acceptable; clean up the defined VM.
+                    sim.destroy(id).unwrap();
+                }
+            }
+        } else {
+            let idx = rng.below(live.len());
+            let id = live.swap_remove(idx);
+            sim.destroy(id).unwrap();
+        }
+        sim.step();
+        if round % 5 == 0 {
+            mapper.interval(&mut sim).unwrap();
+        }
+        assert!(
+            sim.occupancy().iter().all(|&o| o <= 1),
+            "overbooking after round {round}"
+        );
+    }
+    assert!(!live.is_empty());
+}
+
+#[test]
+fn cli_surface_smoke() {
+    // Drive the CLI entry exactly as the binary would.
+    let args = |xs: &[&str]| xs.iter().map(|s| s.to_string()).collect::<Vec<_>>();
+    assert_eq!(dvrm::cli::main_with(&args(&["list"])).unwrap(), 0);
+    assert_eq!(dvrm::cli::main_with(&args(&["help"])).unwrap(), 0);
+    assert_eq!(
+        dvrm::cli::main_with(&args(&["experiment", "t5", "--fast"])).unwrap(),
+        0
+    );
+    assert!(dvrm::cli::main_with(&args(&["bogus"])).is_err());
+    assert!(dvrm::cli::main_with(&args(&["experiment"])).is_err());
+}

@@ -1,0 +1,252 @@
+//! Cross-module property tests (our proptest stand-in, `util::testkit`):
+//! invariants that must hold for *any* workload, placement or trace.
+
+use dvrm::coordinator::candidates::{self, SlotMap};
+use dvrm::coordinator::{MapperConfig, Metric, SmMapper};
+use dvrm::runtime::{native, CandidateBatch, Meta, ScoreProblem, Scorer, VmEntry, Weights};
+use dvrm::sim::{perf_model, ModelParams, SimConfig, Simulator, VmView};
+use dvrm::topology::{NodeId, Topology};
+use dvrm::util::rng::Rng;
+use dvrm::util::testkit::{prop_assert, propcheck};
+use dvrm::vm::VmType;
+use dvrm::workload::{App, AnimalClass};
+
+fn random_entries(rng: &mut Rng, topo: &Topology, n_vms: usize) -> Vec<VmEntry> {
+    (0..n_vms)
+        .map(|_| {
+            let app = *rng.choose(&App::ALL);
+            let mut mem = vec![0.0; topo.num_nodes()];
+            for f in rng.simplex(3) {
+                mem[rng.below(topo.num_nodes())] += f;
+            }
+            VmEntry {
+                profile: app.profile(),
+                vcpus: *rng.choose(&[2usize, 4, 8, 16]),
+                mem_fractions: mem,
+            }
+        })
+        .collect()
+}
+
+fn random_batch(rng: &mut Rng, meta: Meta, len: usize, vms: usize) -> CandidateBatch {
+    let cap = if len <= meta.batch_small { meta.batch_small } else { meta.batch };
+    let mut b = CandidateBatch::zeroed(meta, cap);
+    for _ in 0..len {
+        let mut p = vec![vec![0.0; meta.num_nodes]; vms];
+        for row in p.iter_mut() {
+            for f in rng.simplex(4) {
+                row[rng.below(36)] += f;
+            }
+            let s: f64 = row.iter().sum();
+            row.iter_mut().for_each(|x| *x /= s);
+        }
+        b.push(&p);
+    }
+    b
+}
+
+#[test]
+fn scorer_total_nonnegative_and_finite() {
+    let topo = Topology::paper();
+    propcheck("scores are finite and >= 0", 60, |rng| {
+        let n_vms = rng.range(1, 12);
+        let entries = random_entries(rng, &topo, n_vms);
+        let prob =
+            ScoreProblem::build(&topo, &entries, Weights::default(), Meta::expected()).unwrap();
+        let blen = rng.range(1, 8);
+        let batch = random_batch(rng, prob.meta, blen, prob.vms);
+        for s in native::score_batch(&prob, &batch) {
+            prop_assert(s.total.is_finite() && s.total >= 0.0, format!("total {}", s.total))?;
+            prop_assert(s.locality >= 0.0 && s.contention >= 0.0, "components >= 0")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn scorer_is_permutation_invariant_over_candidates() {
+    // Scores depend only on the candidate content, not its batch slot.
+    let topo = Topology::paper();
+    propcheck("batch-slot invariance", 30, |rng| {
+        let entries = random_entries(rng, &topo, 6);
+        let prob =
+            ScoreProblem::build(&topo, &entries, Weights::default(), Meta::expected()).unwrap();
+        let batch = random_batch(rng, prob.meta, 4, prob.vms);
+        let scores = native::score_batch(&prob, &batch);
+        // Reverse the candidates.
+        let (v, n) = (prob.meta.max_vms, prob.meta.num_nodes);
+        let mut rev = CandidateBatch::zeroed(prob.meta, batch.batch);
+        for b in (0..batch.len).rev() {
+            let rows: Vec<Vec<f64>> = (0..v)
+                .map(|i| {
+                    batch.p[b * v * n + i * n..b * v * n + (i + 1) * n]
+                        .iter()
+                        .map(|&x| x as f64)
+                        .collect()
+                })
+                .collect();
+            rev.push(&rows);
+        }
+        let rev_scores = native::score_batch(&prob, &rev);
+        for (a, b) in scores.iter().zip(rev_scores.iter().rev()) {
+            prop_assert((a.total - b.total).abs() < 1e-3, format!("{} != {}", a.total, b.total))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn moving_memory_closer_never_raises_locality() {
+    let topo = Topology::paper();
+    propcheck("locality monotone in distance", 40, |rng| {
+        let app = *rng.choose(&App::ALL);
+        let node = rng.below(topo.num_nodes());
+        let mut local_mem = vec![0.0; topo.num_nodes()];
+        local_mem[node] = 1.0;
+        let mut far_mem = vec![0.0; topo.num_nodes()];
+        far_mem[(node + 18) % 36] = 1.0; // other side of the torus
+        let mk = |mem: Vec<f64>| {
+            ScoreProblem::build(
+                &topo,
+                &[VmEntry { profile: app.profile(), vcpus: 4, mem_fractions: mem }],
+                Weights::default(),
+                Meta::expected(),
+            )
+            .unwrap()
+        };
+        let mut batch = CandidateBatch::zeroed(Meta::expected(), 8);
+        let mut p = vec![vec![0.0; 36]; 1];
+        p[0][node] = 1.0;
+        batch.push(&p);
+        let near = native::score_batch(&mk(local_mem), &batch)[0];
+        let far = native::score_batch(&mk(far_mem), &batch)[0];
+        prop_assert(
+            near.locality <= far.locality + 1e-6,
+            format!("near {} > far {}", near.locality, far.locality),
+        )
+    });
+}
+
+#[test]
+fn perf_model_factors_bounded() {
+    let topo = Topology::paper();
+    let params = ModelParams::default();
+    propcheck("factors in (0, 1]", 60, |rng| {
+        let views: Vec<VmView> = (0..rng.range(1, 8))
+            .map(|_| {
+                let app = *rng.choose(&App::ALL);
+                let mut p = vec![0.0; topo.num_nodes()];
+                let mut m = vec![0.0; topo.num_nodes()];
+                for f in rng.simplex(3) {
+                    p[rng.below(36)] += f;
+                }
+                for f in rng.simplex(2) {
+                    m[rng.below(36)] += f;
+                }
+                let norm = |v: &mut Vec<f64>| {
+                    let s: f64 = v.iter().sum();
+                    v.iter_mut().for_each(|x| *x /= s);
+                };
+                norm(&mut p);
+                norm(&mut m);
+                VmView {
+                    p,
+                    m,
+                    vcpus: rng.range(1, 16),
+                    util: rng.uniform(0.1, 1.0),
+                    mean_occupancy: rng.uniform(1.0, 4.0),
+                    churn: rng.uniform(0.0, 1.0),
+                    profile: app.profile(),
+                }
+            })
+            .collect();
+        for out in perf_model::evaluate(&topo, &views, &params) {
+            let f = out.factors;
+            for (name, x) in
+                [("lat", f.lat), ("cont", f.cont), ("bw", f.bw), ("ob", f.ob)]
+            {
+                prop_assert(
+                    x > 0.0 && x <= 1.0 + 1e-9,
+                    format!("{name} factor {x} out of (0,1]"),
+                )?;
+            }
+            prop_assert(out.perf >= 0.0 && out.perf.is_finite(), "perf finite")?;
+            prop_assert(out.ipc > 0.0 && out.mpi > 0.0, "counters positive")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn proximity_fill_never_overbooks_or_splits_unnecessarily() {
+    let topo = Topology::paper();
+    propcheck("fill uses distinct free cpus", 80, |rng| {
+        let mut slots = SlotMap::empty(&topo);
+        // Pre-occupy a random set.
+        for _ in 0..rng.below(20) {
+            let class = *rng.choose(&AnimalClass::ALL);
+            if let Some(a) = candidates::proximity_fill(
+                &topo,
+                &slots,
+                NodeId(rng.below(36)),
+                rng.range(1, 8),
+                class,
+                false,
+            ) {
+                slots.commit(&topo, &a, class);
+            }
+        }
+        let vcpus = rng.range(1, 32);
+        if let Some(a) = candidates::proximity_fill(
+            &topo,
+            &slots,
+            NodeId(rng.below(36)),
+            vcpus,
+            AnimalClass::Sheep,
+            false,
+        ) {
+            let mut seen = std::collections::HashSet::new();
+            for cpu in &a.cpus {
+                prop_assert(seen.insert(cpu.0), format!("cpu {} reused", cpu.0))?;
+            }
+            prop_assert(a.cpus.len() == vcpus, "wrong vcpu count")?;
+            // A fill that fits one node must not slice servers.
+            if vcpus <= 8 && slots.total_free() >= 8 * 36 - 160 {
+                prop_assert(a.servers <= 2, format!("{vcpus} vcpus over {} servers", a.servers))?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn mapper_random_trace_invariants() {
+    // Under arbitrary admissible traces the SM mapper must (a) never
+    // overbook and (b) keep every placed VM fully pinned.
+    propcheck("mapper invariants under random traces", 12, |rng| {
+        let mut sim = Simulator::new(Topology::paper(), SimConfig::pinned(rng.next_u64()));
+        let mut mapper = SmMapper::new(MapperConfig::new(Metric::Ipc), Scorer::Native);
+        let mut placed = 0usize;
+        for _ in 0..10 {
+            let vm_type = *rng.choose(&[VmType::Small, VmType::Medium, VmType::Large]);
+            if placed + vm_type.spec().vcpus > 288 {
+                break;
+            }
+            let id = sim.create(vm_type, *rng.choose(&App::ALL));
+            if mapper.place_arrival(&mut sim, id).is_ok() {
+                sim.start(id).unwrap();
+                placed += vm_type.spec().vcpus;
+            }
+            sim.step();
+            mapper.interval(&mut sim).unwrap();
+        }
+        prop_assert(sim.occupancy().iter().all(|&o| o <= 1), "overbooked")?;
+        for (id, mvm) in sim.vms() {
+            prop_assert(
+                mvm.vm.fully_pinned(),
+                format!("{id} not fully pinned under SM"),
+            )?;
+        }
+        Ok(())
+    });
+}
