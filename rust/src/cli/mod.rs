@@ -44,6 +44,8 @@ pub fn usage() -> &'static str {
      commands:\n\
        topo              print the paper testbed topology (Table 1, Fig 2, Fig 3)\n\
        experiment <id>   regenerate a paper table/figure (see `dvrm list`)\n\
+       experiment mem    memory study: first-touch vs AutoNUMA vs planner,\n\
+                         plus fabric-bandwidth starvation\n\
        experiment all    regenerate everything\n\
        run               end-to-end cluster demo under all three algorithms\n\
        list              list experiment ids\n\

@@ -66,6 +66,10 @@ pub struct MapperConfig {
     pub learn_benefit: bool,
     /// Migrate guest memory to follow remapped vCPUs.
     pub memory_follows: bool,
+    /// Per-VM migration budget (GB) per monitoring pass: the planner
+    /// moves the hottest misplaced pages first and stops at the budget,
+    /// so one pass cannot monopolize the fabric.
+    pub mig_budget_gb: f64,
     pub weights: Weights,
 }
 
@@ -83,6 +87,7 @@ impl MapperConfig {
             margin: 0.02,
             learn_benefit: true,
             memory_follows: true,
+            mig_budget_gb: 64.0,
             weights: Weights::default(),
         }
     }
@@ -384,6 +389,11 @@ impl SmMapper {
 
         sim.pin_all(id, &chosen.cpus)?;
         if self.cfg.memory_follows {
+            // Memory-migration planner: drive the hottest misplaced pages
+            // toward the new vCPU nodes, within the per-pass bandwidth
+            // budget.  The job drains over the following ticks; the next
+            // monitoring window sees the realized (partial) gain and the
+            // benefit matrix learns from it (settle_benefit).
             let mem: Vec<(NodeId, f64)> = chosen
                 .fractions
                 .iter()
@@ -391,7 +401,7 @@ impl SmMapper {
                 .filter(|(_, f)| **f > 0.0)
                 .map(|(nidx, f)| (NodeId(nidx), *f))
                 .collect();
-            sim.place_memory(id, &mem)?;
+            sim.migrate_memory_toward(id, &mem, self.cfg.mig_budget_gb)?;
         }
         self.stats.remaps += 1;
 
@@ -507,7 +517,7 @@ impl SmMapper {
                     .filter(|(_, f)| **f > 0.0)
                     .map(|(nidx, f)| (NodeId(nidx), *f))
                     .collect();
-                sim.place_memory(id, &mem)?;
+                sim.migrate_memory_toward(id, &mem, self.cfg.mig_budget_gb)?;
             }
         }
         Ok(())
@@ -666,6 +676,30 @@ mod tests {
         assert!(
             rel_after > rel_before * 1.5,
             "remap should help: {rel_before} -> {rel_after}"
+        );
+    }
+
+    #[test]
+    fn remap_memory_respects_migration_budget() {
+        let mut s = sim();
+        let mut cfg = MapperConfig::new(Metric::Ipc);
+        cfg.mig_budget_gb = 4.0;
+        let mut m = SmMapper::new(cfg, Scorer::Native);
+        // Badly placed sensitive VM: vCPUs 2 hops from its memory.
+        let id = s.create(VmType::Small, App::Stream);
+        s.pin_all(id, &(0..4).map(crate::topology::CpuId).collect::<Vec<_>>()).unwrap();
+        s.place_memory(id, &[(NodeId(24), 1.0)]).unwrap();
+        s.start(id).unwrap();
+        for _ in 0..m.cfg.window as u64 {
+            s.step();
+        }
+        let report = m.interval(&mut s).unwrap();
+        assert_eq!(report.remapped, vec![id]);
+        // The planner may queue at most the per-pass budget.
+        assert!(
+            s.inflight_gb(id) <= 4.0 + 1e-9,
+            "queued {} GB over a 4 GB budget",
+            s.inflight_gb(id)
         );
     }
 

@@ -7,9 +7,10 @@ use anyhow::Result;
 use super::harness::{run_all, run_cluster, Algorithm};
 use super::studies;
 use super::ExpOptions;
-use crate::metrics::across_run_cov;
+use crate::metrics::{across_run_cov, MigrationReport};
 use crate::coordinator::{MapperConfig, Metric};
-use crate::topology::{distance, Topology};
+use crate::sim::{SimConfig, Simulator};
+use crate::topology::{distance, CpuId, NodeId, Topology};
 use crate::util::rng::Rng;
 use crate::util::table::{bar_chart, Table};
 use crate::vm::VmType;
@@ -423,6 +424,85 @@ pub fn var(o: &ExpOptions) -> Result<Output> {
     }
     text.push_str(&t.render());
     tables.push(("var".into(), t));
+    Ok(Output { text, tables })
+}
+
+/// One bandwidth-starvation run: a Large Stream VM pinned on server 0
+/// with all 64 GB two torus hops away; migrate the hottest 8 GB home and
+/// watch the job drain through the (scaled) fabric.  Returns (GB arrived
+/// on the local nodes, ticks run, migration report).  Public so the
+/// integration tests exercise the exact scenario the experiment reports.
+pub fn bw_starved_run(
+    seed: u64,
+    bw_scale: f64,
+    max_ticks: u64,
+) -> Result<(f64, u64, MigrationReport)> {
+    let mut cfg = SimConfig::pinned(seed);
+    cfg.mem.bw_scale = bw_scale;
+    let mut sim = Simulator::new(Topology::paper(), cfg);
+    let id = sim.create(VmType::Large, App::Stream); // 64 GB
+    let cpus: Vec<CpuId> = (0..16).map(CpuId).collect();
+    sim.pin_all(id, &cpus)?;
+    sim.place_memory(id, &[(NodeId(24), 1.0)])?; // server 4: 2 torus hops
+    sim.start(id)?;
+    sim.migrate_memory_toward(id, &[(NodeId(0), 0.5), (NodeId(1), 0.5)], 8.0)?;
+    let mut ticks = 0;
+    while sim.active_migrations() > 0 && ticks < max_ticks {
+        sim.step();
+        ticks += 1;
+    }
+    let gb = sim.get(id).unwrap().pages.gb_per_node(sim.topo.num_nodes());
+    Ok((gb[0] + gb[1], ticks, MigrationReport::from_trace(&sim.trace)))
+}
+
+/// EXP-MEM: the memory-policy study enabled by the page-granular memory
+/// subsystem.  Part one compares first-touch, AutoNUMA, and the
+/// coordinator's hottest-first migration planner on the per-app mix; part
+/// two starves the fabric and shows migration throughput throttling
+/// (multi-tick jobs in the event trace).
+pub fn mem(o: &ExpOptions) -> Result<Output> {
+    let mut text = String::new();
+    let mut tables = Vec::new();
+
+    let arrivals = trace::per_app_mix();
+    let mut t = Table::new("EXP-MEM: memory policy comparison (per-app mix)")
+        .header(&["policy", "mean rel perf", "jobs done", "GB moved", "mean job ticks"]);
+    for alg in [Algorithm::Vanilla, Algorithm::AutoNuma, Algorithm::SmIpc] {
+        let res = run_cluster(alg, &arrivals, &o.harness())?;
+        let rel: Vec<f64> = res.summaries.iter().map(|s| s.mean_rel_perf).collect();
+        let m = res.migration;
+        let name = match alg {
+            Algorithm::Vanilla => "first-touch".to_string(),
+            Algorithm::AutoNuma => "AutoNUMA".to_string(),
+            _ => format!("{} + planner", alg.name()),
+        };
+        t.row(vec![
+            name,
+            format!("{:.4}", crate::util::stats::mean(&rel)),
+            m.jobs_finished.to_string(),
+            format!("{:.1}", m.gb_moved),
+            format!("{:.1}", m.mean_job_ticks),
+        ]);
+    }
+    text.push_str(&t.render());
+    tables.push(("mem_policies".into(), t));
+
+    let mut t = Table::new(
+        "EXP-MEM: fabric bandwidth vs migration throughput (8 GB hottest-first over a 2-hop link)",
+    )
+    .header(&["bw scale", "GB arrived", "ticks run", "jobs done", "mean job ticks"]);
+    for scale in [1.0, 0.25, 0.05] {
+        let (gb_done, ticks, report) = bw_starved_run(o.seed, scale, o.ticks.max(30))?;
+        t.row(vec![
+            format!("{scale:.2}"),
+            format!("{gb_done:.2}"),
+            ticks.to_string(),
+            report.jobs_finished.to_string(),
+            format!("{:.1}", report.mean_job_ticks),
+        ]);
+    }
+    text.push_str(&t.render());
+    tables.push(("mem_bandwidth".into(), t));
     Ok(Output { text, tables })
 }
 

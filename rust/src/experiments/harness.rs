@@ -5,26 +5,31 @@
 use anyhow::Result;
 
 use crate::coordinator::{MapperConfig, Metric, SmMapper};
-use crate::metrics::{Collector, VmSummary};
+use crate::metrics::{Collector, MigrationReport, VmSummary};
 use crate::runtime::Scorer;
 use crate::sim::{SimConfig, Simulator};
 use crate::topology::Topology;
 use crate::workload::trace::Arrival;
 
-/// The three algorithms of §5.3.
+/// The three algorithms of §5.3, plus the AutoNUMA kernel baseline of the
+/// memory study (vanilla scheduling + sampled-fault page promotion).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Algorithm {
     Vanilla,
+    /// Vanilla scheduling with AutoNUMA memory promotion (EXP-MEM).
+    AutoNuma,
     SmIpc,
     SmMpi,
 }
 
 impl Algorithm {
+    /// The paper's evaluated trio (the memory study adds [`Algorithm::AutoNuma`]).
     pub const ALL: [Algorithm; 3] = [Algorithm::Vanilla, Algorithm::SmIpc, Algorithm::SmMpi];
 
     pub fn name(self) -> &'static str {
         match self {
             Algorithm::Vanilla => "vanilla",
+            Algorithm::AutoNuma => "AutoNUMA",
             Algorithm::SmIpc => "SM-IPC",
             Algorithm::SmMpi => "SM-MPI",
         }
@@ -32,7 +37,7 @@ impl Algorithm {
 
     pub fn metric(self) -> Option<Metric> {
         match self {
-            Algorithm::Vanilla => None,
+            Algorithm::Vanilla | Algorithm::AutoNuma => None,
             Algorithm::SmIpc => Some(Metric::Ipc),
             Algorithm::SmMpi => Some(Metric::Mpi),
         }
@@ -68,11 +73,21 @@ pub struct HarnessConfig {
     pub scorer: ScorerChoice,
     /// Override of the mapper config (threshold, metric is set per run).
     pub mapper: Option<MapperConfig>,
+    /// Override of the memory subsystem config (chunk size, fabric scale;
+    /// the policy implied by the algorithm still wins).
+    pub mem: Option<crate::mem::MemConfig>,
 }
 
 impl HarnessConfig {
     pub fn new(seed: u64) -> Self {
-        Self { seed, warmup: 30, measure: 60, scorer: ScorerChoice::Auto, mapper: None }
+        Self {
+            seed,
+            warmup: 30,
+            measure: 60,
+            scorer: ScorerChoice::Auto,
+            mapper: None,
+            mem: None,
+        }
     }
 
     pub fn fast(seed: u64) -> Self {
@@ -89,6 +104,8 @@ pub struct ClusterResult {
     pub benefit: Option<crate::coordinator::BenefitMatrix>,
     /// Core occupancy snapshot at the end (Figs. 12–13).
     pub core_map: Vec<Vec<crate::vm::VmId>>,
+    /// Page-migration activity over the whole run (EXP-MEM).
+    pub migration: MigrationReport,
     pub sim_seed: u64,
 }
 
@@ -99,10 +116,16 @@ pub fn run_cluster(
     cfg: &HarnessConfig,
 ) -> Result<ClusterResult> {
     let topo = Topology::paper();
-    let sim_cfg = match alg {
+    let mut sim_cfg = match alg {
         Algorithm::Vanilla => SimConfig::vanilla(cfg.seed),
+        Algorithm::AutoNuma => SimConfig::vanilla_autonuma(cfg.seed),
         _ => SimConfig::pinned(cfg.seed),
     };
+    if let Some(mem) = &cfg.mem {
+        let policy = sim_cfg.mem.policy;
+        sim_cfg.mem = mem.clone();
+        sim_cfg.mem.policy = policy;
+    }
     let mut sim = Simulator::new(topo, sim_cfg);
     let mut mapper = alg.metric().map(|metric| {
         let mcfg = cfg.mapper.clone().unwrap_or_else(|| MapperConfig::new(metric));
@@ -147,6 +170,7 @@ pub fn run_cluster(
     }
 
     let core_map = sim.core_map();
+    let migration = MigrationReport::from_trace(&sim.trace);
     let (mapper_stats, benefit) = match mapper {
         Some(m) => (Some(m.stats.clone()), Some(m.benefit.clone())),
         None => (None, None),
@@ -158,6 +182,7 @@ pub fn run_cluster(
         mapper_stats,
         benefit,
         core_map,
+        migration,
         sim_seed: cfg.seed,
     })
 }
@@ -218,6 +243,38 @@ mod tests {
             assert!(vms.len() <= 2, "core {core} hosts {vms:?}");
         }
         assert_eq!(res.summaries.len(), 20);
+    }
+
+    #[test]
+    fn coordinator_beats_both_memory_baselines() {
+        let cfg = HarnessConfig::fast(21);
+        let arrivals = trace::per_app_mix();
+        let mean = |alg| {
+            let r = run_cluster(alg, &arrivals, &cfg).unwrap();
+            let xs: Vec<f64> = r.summaries.iter().map(|s| s.mean_rel_perf).collect();
+            crate::util::stats::mean(&xs)
+        };
+        let first_touch = mean(Algorithm::Vanilla);
+        let autonuma = mean(Algorithm::AutoNuma);
+        let coordinator = mean(Algorithm::SmIpc);
+        assert!(
+            coordinator > first_touch,
+            "planner ({coordinator:.3}) must beat first-touch ({first_touch:.3})"
+        );
+        assert!(
+            coordinator > autonuma,
+            "planner ({coordinator:.3}) must beat AutoNUMA ({autonuma:.3})"
+        );
+    }
+
+    #[test]
+    fn autonuma_actually_migrates_pages() {
+        let res =
+            run_cluster(Algorithm::AutoNuma, &trace::per_app_mix(), &HarnessConfig::fast(22))
+                .unwrap();
+        assert!(res.migration.jobs_finished > 0, "no promotions: {:?}", res.migration);
+        assert!(res.migration.gb_moved > 0.0);
+        assert!(res.mapper_stats.is_none(), "AutoNUMA is a kernel baseline, not a mapper");
     }
 
     #[test]

@@ -48,7 +48,7 @@ impl ExpOptions {
 /// All experiment ids, in DESIGN.md order.
 pub const ALL_IDS: &[&str] = &[
     "t1", "t2", "t3", "t4", "t5", "f2", "f3", "f4_10", "f11", "f12", "f13", "f14_16",
-    "f17_19", "var", "abl",
+    "f17_19", "var", "abl", "mem",
 ];
 
 /// Run one experiment by id.
@@ -69,6 +69,7 @@ pub fn run(id: &str, opts: &ExpOptions) -> Result<figures::Output> {
         "f17_19" => figures::f17_19(opts),
         "var" => figures::var(opts),
         "abl" => figures::abl(opts),
+        "mem" => figures::mem(opts),
         other => bail!("unknown experiment {other:?}; known: {ALL_IDS:?}"),
     }
 }
@@ -115,5 +116,14 @@ mod tests {
     fn fig11_runs_fast() {
         let out = run("f11", &fast()).unwrap();
         assert!(out.text.contains("2 hops"));
+    }
+
+    #[test]
+    fn memory_study_compares_all_three_policies() {
+        let out = run("mem", &fast()).unwrap();
+        assert!(out.text.contains("first-touch"));
+        assert!(out.text.contains("AutoNUMA"));
+        assert!(out.text.contains("planner"));
+        assert_eq!(out.tables.len(), 2);
     }
 }

@@ -1,0 +1,149 @@
+//! AutoNUMA-style kernel baseline: sampled page faults + lazy promotion.
+//!
+//! The Linux kernel's NUMA balancing periodically unmaps a sample of a
+//! process's pages; the resulting hinting faults reveal which node
+//! actually touches each page, and pages that repeatedly fault remotely
+//! are migrated toward the accessing node.  This module reproduces that
+//! policy against the [`PageMap`]/[`MigrationEngine`] substrate, giving
+//! the evaluation a second vanilla memory policy between first-touch
+//! (never migrate) and the coordinator's planned migration.
+//!
+//! Invariant the property tests rely on: promotions only ever target a
+//! node that currently hosts one of the VM's vCPUs, so under a stable
+//! pinning the remote heat fraction is non-increasing.
+
+use crate::topology::NodeId;
+use crate::util::rng::Rng;
+
+use super::migration::ChunkMove;
+use super::pagemap::PageMap;
+
+/// AutoNUMA tunables.
+#[derive(Debug, Clone)]
+pub struct AutoNumaParams {
+    /// Chunks sampled (hinting faults taken) per VM per tick.
+    pub samples_per_tick: usize,
+    /// Remote faults on a chunk before it is promoted.
+    pub fault_threshold: u8,
+    /// Max chunks a VM may have queued/in transit (migration back-pressure).
+    pub max_inflight_chunks: usize,
+}
+
+impl Default for AutoNumaParams {
+    fn default() -> Self {
+        Self { samples_per_tick: 16, fault_threshold: 2, max_inflight_chunks: 32 }
+    }
+}
+
+/// One tick of sampled-fault promotion for one VM.
+///
+/// `vcpu_nodes` lists the NUMA node of every vCPU (with multiplicity, so
+/// the sampled "accessing node" is weighted by where the threads actually
+/// run).  Returns the chunk moves to enqueue; sampled chunks are marked
+/// in-flight here so they cannot be double-queued.
+pub fn promote(
+    pages: &mut PageMap,
+    vcpu_nodes: &[NodeId],
+    inflight: usize,
+    params: &AutoNumaParams,
+    rng: &mut Rng,
+) -> Vec<ChunkMove> {
+    if vcpu_nodes.is_empty() || !pages.is_placed() {
+        return Vec::new();
+    }
+    let mut budget = params.max_inflight_chunks.saturating_sub(inflight);
+    let mut moves = Vec::new();
+    for _ in 0..params.samples_per_tick {
+        if budget == 0 {
+            break;
+        }
+        let chunk = pages.sample_chunk(rng.f64());
+        let accessing = *rng.choose(vcpu_nodes);
+        let Some(owner) = pages.owner_of(chunk) else { continue };
+        if owner == accessing || pages.is_in_flight(chunk) {
+            continue;
+        }
+        if pages.fault(chunk) >= params.fault_threshold {
+            pages.reset_faults(chunk);
+            pages.mark_in_flight(chunk, accessing);
+            moves.push(ChunkMove { chunk, from: owner, to: accessing });
+            budget -= 1;
+        }
+    }
+    moves
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn remote_map() -> PageMap {
+        let mut pm = PageMap::new(16.0, 2, 0.8);
+        pm.place(&[(NodeId(24), 1.0)]); // all memory remote
+        pm
+    }
+
+    #[test]
+    fn promotes_only_toward_accessing_nodes() {
+        let mut pm = remote_map();
+        let vcpu_nodes = vec![NodeId(0), NodeId(0), NodeId(1), NodeId(1)];
+        let mut rng = Rng::new(1);
+        let params = AutoNumaParams::default();
+        let mut all = Vec::new();
+        for _ in 0..50 {
+            all.extend(promote(&mut pm, &vcpu_nodes, 0, &params, &mut rng));
+        }
+        assert!(!all.is_empty(), "hot remote chunks must eventually promote");
+        for mv in &all {
+            assert_eq!(mv.from, NodeId(24));
+            assert!(mv.to == NodeId(0) || mv.to == NodeId(1), "bad target {:?}", mv.to);
+        }
+    }
+
+    #[test]
+    fn threshold_requires_repeat_faults() {
+        let mut pm = remote_map();
+        let params =
+            AutoNumaParams { samples_per_tick: 1, fault_threshold: 2, ..Default::default() };
+        let mut rng = Rng::new(2);
+        // A single sample can never promote at threshold 2.
+        let moves = promote(&mut pm, &[NodeId(0)], 0, &params, &mut rng);
+        assert!(moves.is_empty());
+    }
+
+    #[test]
+    fn respects_inflight_budget() {
+        let mut pm = remote_map();
+        let params = AutoNumaParams {
+            samples_per_tick: 1000,
+            fault_threshold: 1,
+            max_inflight_chunks: 8,
+        };
+        let mut rng = Rng::new(3);
+        let moves = promote(&mut pm, &[NodeId(0)], 5, &params, &mut rng);
+        assert!(moves.len() <= 3, "budget violated: {}", moves.len());
+        // And a full queue admits nothing.
+        let moves = promote(&mut pm, &[NodeId(0)], 8, &params, &mut rng);
+        assert!(moves.is_empty());
+    }
+
+    #[test]
+    fn local_memory_generates_no_moves() {
+        let mut pm = PageMap::new(16.0, 2, 0.8);
+        pm.place(&[(NodeId(0), 1.0)]);
+        let mut rng = Rng::new(4);
+        let params =
+            AutoNumaParams { samples_per_tick: 200, fault_threshold: 1, ..Default::default() };
+        assert!(promote(&mut pm, &[NodeId(0)], 0, &params, &mut rng).is_empty());
+    }
+
+    #[test]
+    fn unplaced_or_unpinned_is_a_noop() {
+        let mut pm = PageMap::new(16.0, 2, 0.8);
+        let mut rng = Rng::new(5);
+        let params = AutoNumaParams::default();
+        assert!(promote(&mut pm, &[NodeId(0)], 0, &params, &mut rng).is_empty());
+        pm.place(&[(NodeId(3), 1.0)]);
+        assert!(promote(&mut pm, &[], 0, &params, &mut rng).is_empty());
+    }
+}

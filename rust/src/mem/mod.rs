@@ -1,0 +1,80 @@
+//! Page-granular disaggregated memory subsystem.
+//!
+//! The paper's Algorithm 1 rests on two actuators: vCPU pinning *and*
+//! memory migration across the disaggregated fabric.  This module makes
+//! the second one real (see DESIGN.md §Memory):
+//!
+//! * [`pagemap`] — per-VM ownership and hot/cold access statistics at
+//!   2 MB-chunk granularity.
+//! * [`migration`] — a bandwidth-limited asynchronous engine: migrations
+//!   are multi-tick jobs draining through per-link fabric bandwidth
+//!   derived from the topology distance matrix, with guest-stall
+//!   accounting proportional to pages in flight.
+//! * [`autonuma`] — the AutoNUMA-style kernel baseline (sampled hinting
+//!   faults, lazy promotion toward the accessing node), joining
+//!   first-touch as a second vanilla memory policy.
+//!
+//! The simulator owns the engine and advances it each tick
+//! ([`crate::sim::Simulator::step`]); the coordinator plans hottest-first
+//! migrations within a bandwidth budget
+//! ([`crate::sim::Simulator::migrate_memory_toward`]).
+
+pub mod autonuma;
+pub mod migration;
+pub mod pagemap;
+
+pub use autonuma::AutoNumaParams;
+pub use migration::{ChunkMove, MigrationEngine, MigrationId, MigrationJob};
+pub use pagemap::{PageMap, DEFAULT_CHUNK_MB};
+
+/// Which kernel memory policy governs pages the coordinator does not
+/// manage explicitly.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MemPolicy {
+    /// Pages stay where they were first faulted in (default kernel
+    /// behaviour; the paper's vanilla baseline).
+    FirstTouch,
+    /// Sampled-fault lazy promotion toward the accessing node.
+    AutoNuma,
+}
+
+/// Memory-subsystem configuration carried by [`crate::sim::SimConfig`].
+#[derive(Debug, Clone)]
+pub struct MemConfig {
+    pub policy: MemPolicy,
+    /// Chunk (huge page) size.
+    pub chunk_mb: usize,
+    /// Scale on cross-server (fabric) migration bandwidth (1.0 = the
+    /// topology's fabric; small values model a starved or heavily shared
+    /// fabric).  Intra-server copies are unaffected.
+    pub bw_scale: f64,
+    /// Guest stall per tick = `stall_coeff * gb_moved_this_tick / mem_gb`,
+    /// folded into the churn penalty of the performance model.
+    pub stall_coeff: f64,
+    pub autonuma: AutoNumaParams,
+}
+
+impl Default for MemConfig {
+    fn default() -> Self {
+        Self {
+            policy: MemPolicy::FirstTouch,
+            chunk_mb: DEFAULT_CHUNK_MB,
+            bw_scale: 1.0,
+            stall_coeff: 2.0,
+            autonuma: AutoNumaParams::default(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_is_first_touch_at_2mb() {
+        let cfg = MemConfig::default();
+        assert_eq!(cfg.policy, MemPolicy::FirstTouch);
+        assert_eq!(cfg.chunk_mb, 2);
+        assert!((cfg.bw_scale - 1.0).abs() < 1e-12);
+    }
+}

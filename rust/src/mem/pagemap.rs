@@ -1,0 +1,572 @@
+//! Per-VM page-granular memory tracking (chunk = a 2 MB huge page).
+//!
+//! The disaggregated-memory literature (Maruf & Chowdhury's survey,
+//! DaeMon) identifies *which pages live where* and *how hot they are* as
+//! the state every migration policy needs.  A [`PageMap`] tracks both for
+//! one VM: the owning NUMA node of every chunk and a static power-law
+//! access-weight profile ("heat") derived from the workload — streaming
+//! apps touch their footprint near-uniformly, cache-friendly apps
+//! concentrate accesses on a small hot set.
+//!
+//! Two invariants the rest of the system builds on:
+//!
+//! * **Conservation** — chunk ownership moves atomically, so the per-node
+//!   GB distribution always sums to the VM's full memory size, including
+//!   mid-migration (`tests/properties.rs`).
+//! * **Index order = heat order** — chunk `k` carries weight
+//!   `(k+1)^-alpha`, strictly decreasing, so "hottest first" policies walk
+//!   chunks in index order with no sorting.  Placement *interleaves*
+//!   chunks across target nodes, so every node holds a proportional mix of
+//!   hot and cold chunks and heat-weighted fractions track capacity
+//!   fractions at placement time.
+
+use crate::topology::NodeId;
+
+use super::migration::ChunkMove;
+
+/// Default chunk size: one x86-64 huge page.
+pub const DEFAULT_CHUNK_MB: usize = 2;
+
+/// Sentinel for "chunk not yet faulted in anywhere".
+const NO_NODE: u16 = u16::MAX;
+
+/// Page-granular memory map of one VM.
+#[derive(Debug, Clone)]
+pub struct PageMap {
+    /// Owning NUMA node per chunk (`NO_NODE` until placed).
+    owner: Vec<u16>,
+    /// Normalized access weight per chunk (sums to 1), decreasing in index.
+    heat: Vec<f64>,
+    /// Cumulative heat (prefix sums) for O(log n) weighted sampling.
+    cum: Vec<f64>,
+    /// NUMA-fault counter per chunk (AutoNUMA promotion state).
+    faults: Vec<u8>,
+    /// Pending migration destination per chunk (`NO_NODE` = not in
+    /// flight).  Knowing the destination lets re-planning count queued
+    /// chunks where they are *going*, so overlapping plans don't queue
+    /// the same delta twice.
+    pending: Vec<u16>,
+    /// Incremental per-node chunk counts (index = node id; grown on
+    /// demand) — keeps `gb_per_node`/`to_dist` O(nodes) on the tick path.
+    node_chunks: Vec<usize>,
+    /// Incremental per-node heat sums — keeps `heat_fractions` (the
+    /// perf-model input, read every tick per VM) O(nodes).
+    node_heat: Vec<f64>,
+    chunk_gb: f64,
+}
+
+impl PageMap {
+    /// Build a map for `mem_gb` of guest memory at `chunk_mb` granularity.
+    /// `heat_alpha` is the power-law exponent of the access profile
+    /// (0 = uniform, ~1 = strongly skewed toward a hot set).
+    pub fn new(mem_gb: f64, chunk_mb: usize, heat_alpha: f64) -> Self {
+        let chunk_gb = chunk_mb as f64 / 1024.0;
+        let chunks = ((mem_gb / chunk_gb).round() as usize).max(1);
+        let mut heat: Vec<f64> =
+            (0..chunks).map(|k| (k as f64 + 1.0).powf(-heat_alpha)).collect();
+        let total: f64 = heat.iter().sum();
+        heat.iter_mut().for_each(|h| *h /= total);
+        let mut cum = Vec::with_capacity(chunks);
+        let mut acc = 0.0;
+        for h in &heat {
+            acc += h;
+            cum.push(acc);
+        }
+        Self {
+            owner: vec![NO_NODE; chunks],
+            heat,
+            cum,
+            faults: vec![0; chunks],
+            pending: vec![NO_NODE; chunks],
+            node_chunks: Vec::new(),
+            node_heat: Vec::new(),
+            chunk_gb,
+        }
+    }
+
+    pub fn num_chunks(&self) -> usize {
+        self.owner.len()
+    }
+
+    pub fn chunk_gb(&self) -> f64 {
+        self.chunk_gb
+    }
+
+    /// Total tracked memory (GB) — constant for the VM's lifetime.
+    pub fn total_gb(&self) -> f64 {
+        self.owner.len() as f64 * self.chunk_gb
+    }
+
+    /// Has the memory been faulted in / placed yet?
+    pub fn is_placed(&self) -> bool {
+        self.owner.first().is_some_and(|&o| o != NO_NODE)
+    }
+
+    pub fn owner_of(&self, chunk: usize) -> Option<NodeId> {
+        let o = self.owner[chunk];
+        if o == NO_NODE {
+            None
+        } else {
+            Some(NodeId(o as usize))
+        }
+    }
+
+    pub fn heat_of(&self, chunk: usize) -> f64 {
+        self.heat[chunk]
+    }
+
+    /// Largest-remainder apportionment of `n` chunks over normalized
+    /// weights: exact when `n * w` is integral, off by at most one chunk
+    /// per node otherwise.  Empty or non-positive weights yield an empty
+    /// plan rather than a panic.
+    fn apportion(n: usize, weights: &[(NodeId, f64)]) -> Vec<(NodeId, usize)> {
+        let total: f64 = weights.iter().map(|(_, w)| w).sum();
+        if weights.is_empty() || total <= 0.0 || !total.is_finite() {
+            return Vec::new();
+        }
+        let mut counts: Vec<(NodeId, usize, f64)> = weights
+            .iter()
+            .map(|(node, w)| {
+                let quota = n as f64 * w / total;
+                (*node, quota.floor() as usize, quota - quota.floor())
+            })
+            .collect();
+        let assigned: usize = counts.iter().map(|(_, c, _)| c).sum();
+        // Hand the leftover chunks to the largest remainders (ties to the
+        // lower node id for determinism).
+        let mut order: Vec<usize> = (0..counts.len()).collect();
+        order.sort_by(|&a, &b| {
+            counts[b]
+                .2
+                .partial_cmp(&counts[a].2)
+                .unwrap()
+                .then(counts[a].0 .0.cmp(&counts[b].0 .0))
+        });
+        for k in 0..n - assigned {
+            counts[order[k % order.len()]].1 += 1;
+        }
+        counts.into_iter().map(|(node, c, _)| (node, c)).collect()
+    }
+
+    /// Replace the whole distribution (instant placement; used at
+    /// first-touch and for not-yet-running VMs).  Chunks are dealt
+    /// proportionally interleaved so every target node receives a mix of
+    /// hot and cold chunks.
+    pub fn place(&mut self, dist: &[(NodeId, f64)]) {
+        let n = self.num_chunks();
+        let counts = Self::apportion(n, dist);
+        if counts.is_empty() {
+            return; // degenerate distribution: keep the current placement
+        }
+        let totals: Vec<f64> = counts.iter().map(|(_, c)| *c as f64).collect();
+        let mut remaining: Vec<f64> = totals.clone();
+        for chunk in 0..n {
+            // Deal to the node with the largest remaining share of its
+            // quota — a deterministic proportional interleave.
+            let mut best = 0usize;
+            let mut best_share = -1.0;
+            for (j, rem) in remaining.iter().enumerate() {
+                if totals[j] <= 0.0 {
+                    continue;
+                }
+                let share = rem / totals[j];
+                if share > best_share {
+                    best_share = share;
+                    best = j;
+                }
+            }
+            self.owner[chunk] = counts[best].0 .0 as u16;
+            remaining[best] -= 1.0;
+        }
+        self.faults.iter_mut().for_each(|f| *f = 0);
+        self.pending.iter_mut().for_each(|p| *p = NO_NODE);
+        self.rebuild_node_stats();
+    }
+
+    /// Recompute the per-node aggregates from scratch (placement time).
+    fn rebuild_node_stats(&mut self) {
+        self.node_chunks.iter_mut().for_each(|c| *c = 0);
+        self.node_heat.iter_mut().for_each(|h| *h = 0.0);
+        let max_node =
+            self.owner.iter().filter(|&&o| o != NO_NODE).map(|&o| o as usize).max();
+        if let Some(m) = max_node {
+            self.grow_node_stats(m);
+        }
+        for chunk in 0..self.owner.len() {
+            let o = self.owner[chunk];
+            if o != NO_NODE {
+                self.node_chunks[o as usize] += 1;
+                self.node_heat[o as usize] += self.heat[chunk];
+            }
+        }
+    }
+
+    fn grow_node_stats(&mut self, node: usize) {
+        if node >= self.node_chunks.len() {
+            self.node_chunks.resize(node + 1, 0);
+            self.node_heat.resize(node + 1, 0.0);
+        }
+    }
+
+    /// GB owned per node.
+    pub fn gb_per_node(&self, num_nodes: usize) -> Vec<f64> {
+        let mut gb = vec![0.0; num_nodes];
+        for (j, &c) in self.node_chunks.iter().enumerate().take(num_nodes) {
+            gb[j] = c as f64 * self.chunk_gb;
+        }
+        gb
+    }
+
+    /// Capacity fractions per node (sums to 1 when placed).
+    pub fn capacity_fractions(&self, num_nodes: usize) -> Vec<f64> {
+        let mut f = self.gb_per_node(num_nodes);
+        let total = self.total_gb();
+        f.iter_mut().for_each(|x| *x /= total);
+        f
+    }
+
+    /// Access-weighted fractions per node: the share of the VM's memory
+    /// *traffic* served by each node.  This is what the performance model
+    /// consumes — migrating the hot set pays off before the cold tail.
+    /// O(nodes): read from the incrementally maintained aggregates.
+    pub fn heat_fractions(&self, num_nodes: usize) -> Vec<f64> {
+        let mut f = vec![0.0; num_nodes];
+        for (j, &h) in self.node_heat.iter().enumerate().take(num_nodes) {
+            f[j] = h.max(0.0);
+        }
+        f
+    }
+
+    /// Fraction of access weight on nodes *not* marked local.
+    pub fn remote_heat_fraction(&self, local: &[bool]) -> f64 {
+        self.node_heat
+            .iter()
+            .enumerate()
+            .filter(|(j, _)| !local.get(*j).copied().unwrap_or(false))
+            .map(|(_, &h)| h.max(0.0))
+            .sum()
+    }
+
+    /// Sample a chunk with probability proportional to heat; `u` is a
+    /// uniform draw in `[0, 1)`.
+    pub fn sample_chunk(&self, u: f64) -> usize {
+        let target = u * self.cum.last().copied().unwrap_or(1.0);
+        self.cum.partition_point(|&c| c <= target).min(self.num_chunks() - 1)
+    }
+
+    /// Transfer ownership of one chunk (migration completion); keeps the
+    /// per-node aggregates in sync.
+    pub fn set_owner(&mut self, chunk: usize, node: NodeId) {
+        let old = self.owner[chunk];
+        if old != NO_NODE {
+            self.node_chunks[old as usize] -= 1;
+            self.node_heat[old as usize] -= self.heat[chunk];
+        }
+        self.grow_node_stats(node.0);
+        self.node_chunks[node.0] += 1;
+        self.node_heat[node.0] += self.heat[chunk];
+        self.owner[chunk] = node.0 as u16;
+    }
+
+    pub fn is_in_flight(&self, chunk: usize) -> bool {
+        self.pending[chunk] != NO_NODE
+    }
+
+    /// Mark a chunk queued for migration toward `to`.
+    pub fn mark_in_flight(&mut self, chunk: usize, to: NodeId) {
+        self.pending[chunk] = to.0 as u16;
+    }
+
+    pub fn clear_in_flight(&mut self, chunk: usize) {
+        self.pending[chunk] = NO_NODE;
+    }
+
+    /// Record one sampled NUMA fault on `chunk`; returns the new count.
+    pub fn fault(&mut self, chunk: usize) -> u8 {
+        self.faults[chunk] = self.faults[chunk].saturating_add(1);
+        self.faults[chunk]
+    }
+
+    pub fn reset_faults(&mut self, chunk: usize) {
+        self.faults[chunk] = 0;
+    }
+
+    /// Plan a hottest-first migration toward the target distribution:
+    /// chunks sitting on over-target nodes are redirected to under-target
+    /// nodes, hottest first (= index order), at most `budget_chunks`
+    /// moves.  Selected chunks are marked in flight so concurrent plans
+    /// cannot double-queue them; chunks already in flight are counted at
+    /// their pending *destination*, so re-planning the same target while
+    /// a job drains queues nothing extra (no overshoot).
+    pub fn plan_toward(
+        &mut self,
+        num_nodes: usize,
+        dist: &[(NodeId, f64)],
+        budget_chunks: usize,
+    ) -> Vec<ChunkMove> {
+        let n = self.num_chunks();
+        let mut target = vec![0usize; num_nodes];
+        for (node, count) in Self::apportion(n, dist) {
+            target[node.0] = count;
+        }
+        let mut current = vec![0usize; num_nodes];
+        for (chunk, &o) in self.owner.iter().enumerate() {
+            // Where the chunk will be once in-flight jobs drain.
+            let eff = if self.pending[chunk] != NO_NODE { self.pending[chunk] } else { o };
+            if eff != NO_NODE {
+                current[eff as usize] += 1;
+            }
+        }
+        let mut surplus: Vec<usize> =
+            current.iter().zip(&target).map(|(c, t)| c.saturating_sub(*t)).collect();
+        let mut deficit: Vec<usize> =
+            target.iter().zip(&current).map(|(t, c)| t.saturating_sub(*c)).collect();
+
+        let mut moves = Vec::new();
+        for chunk in 0..n {
+            if moves.len() >= budget_chunks {
+                break;
+            }
+            if self.pending[chunk] != NO_NODE {
+                continue;
+            }
+            let Some(owner) = self.owner_of(chunk) else { continue };
+            if surplus[owner.0] == 0 {
+                continue;
+            }
+            // Fill the largest remaining deficit first — interleaves hot
+            // chunks across the destination nodes.
+            let Some(dst) = (0..num_nodes).filter(|&j| deficit[j] > 0).max_by_key(|&j| deficit[j])
+            else {
+                break;
+            };
+            surplus[owner.0] -= 1;
+            deficit[dst] -= 1;
+            self.pending[chunk] = dst as u16;
+            moves.push(ChunkMove { chunk, from: owner, to: NodeId(dst) });
+        }
+        moves
+    }
+
+    /// Current distribution as a `(node, GB)` list (non-zero nodes only,
+    /// ascending node id) — the shape `Vm::mem_gb_per_node` stores.
+    /// O(nodes), so the simulator can re-sync it every tick mid-migration.
+    pub fn to_dist(&self) -> Vec<(NodeId, f64)> {
+        self.node_chunks
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(node, &c)| (NodeId(node), c as f64 * self.chunk_gb))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn map_16gb() -> PageMap {
+        PageMap::new(16.0, 2, 0.8)
+    }
+
+    #[test]
+    fn chunk_count_is_exact_for_integral_sizes() {
+        let pm = map_16gb();
+        assert_eq!(pm.num_chunks(), 8192);
+        assert!((pm.total_gb() - 16.0).abs() < 1e-12);
+        assert!(!pm.is_placed());
+    }
+
+    #[test]
+    fn heat_is_normalized_and_decreasing() {
+        let pm = map_16gb();
+        let total: f64 = (0..pm.num_chunks()).map(|c| pm.heat_of(c)).sum();
+        assert!((total - 1.0).abs() < 1e-9);
+        for c in 1..pm.num_chunks() {
+            assert!(pm.heat_of(c) <= pm.heat_of(c - 1), "heat must decrease with index");
+        }
+    }
+
+    #[test]
+    fn uniform_alpha_gives_flat_heat() {
+        let pm = PageMap::new(1.0, 2, 0.0);
+        let h0 = pm.heat_of(0);
+        assert!((pm.heat_of(pm.num_chunks() - 1) - h0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn place_is_exact_for_integral_splits() {
+        let mut pm = PageMap::new(64.0, 2, 0.8);
+        pm.place(&[(NodeId(0), 3.0), (NodeId(1), 1.0)]);
+        let gb = pm.gb_per_node(4);
+        assert!((gb[0] - 48.0).abs() < 1e-9);
+        assert!((gb[1] - 16.0).abs() < 1e-9);
+        let f = pm.capacity_fractions(4);
+        assert!((f[0] - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn place_interleaves_hot_and_cold() {
+        let mut pm = PageMap::new(16.0, 2, 1.0);
+        pm.place(&[(NodeId(0), 0.5), (NodeId(1), 0.5)]);
+        // Both nodes must hold part of the hot head: heat fractions stay
+        // close to the 50/50 capacity split (within a few points).
+        let h = pm.heat_fractions(2);
+        assert!((h[0] - 0.5).abs() < 0.10, "heat fractions {h:?}");
+        assert!((h[0] + h[1] - 1.0).abs() < 1e-9);
+        // The two hottest chunks land on different nodes.
+        assert_ne!(pm.owner_of(0), pm.owner_of(1));
+    }
+
+    #[test]
+    fn conservation_under_ownership_moves() {
+        let mut pm = map_16gb();
+        pm.place(&[(NodeId(2), 1.0)]);
+        for chunk in 0..100 {
+            pm.set_owner(chunk, NodeId(5));
+            let gb = pm.gb_per_node(8);
+            assert!((gb.iter().sum::<f64>() - 16.0).abs() < 1e-9);
+        }
+        assert!((pm.gb_per_node(8)[5] - 100.0 * pm.chunk_gb()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn remote_heat_fraction_tracks_ownership() {
+        let mut pm = map_16gb();
+        pm.place(&[(NodeId(1), 1.0)]);
+        let mut local = vec![false; 4];
+        local[0] = true;
+        assert!((pm.remote_heat_fraction(&local) - 1.0).abs() < 1e-9);
+        // Promote the hottest chunk: remote fraction drops by its heat.
+        pm.set_owner(0, NodeId(0));
+        let expect = 1.0 - pm.heat_of(0);
+        assert!((pm.remote_heat_fraction(&local) - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sampling_prefers_hot_chunks() {
+        let pm = PageMap::new(16.0, 2, 1.0);
+        // The first percent of chunks carries far more than 1% of heat, so
+        // low-u samples land there.
+        assert!(pm.sample_chunk(0.0) == 0);
+        assert!(pm.sample_chunk(0.05) < pm.num_chunks() / 100);
+        assert!(pm.sample_chunk(0.999) > pm.num_chunks() / 2);
+    }
+
+    #[test]
+    fn fault_counters_saturate_and_reset() {
+        let mut pm = map_16gb();
+        for _ in 0..300 {
+            pm.fault(7);
+        }
+        assert_eq!(pm.fault(7), u8::MAX);
+        pm.reset_faults(7);
+        assert_eq!(pm.fault(7), 1);
+    }
+
+    #[test]
+    fn plan_toward_moves_hottest_surplus_first() {
+        let mut pm = PageMap::new(16.0, 2, 1.0);
+        pm.place(&[(NodeId(3), 1.0)]);
+        let moves = pm.plan_toward(8, &[(NodeId(0), 1.0)], 100);
+        assert_eq!(moves.len(), 100, "budget caps the plan");
+        // Hottest first: the plan starts at chunk 0 and walks upward.
+        assert_eq!(moves[0].chunk, 0);
+        assert!(moves.windows(2).all(|w| w[0].chunk < w[1].chunk));
+        for mv in &moves {
+            assert_eq!(mv.from, NodeId(3));
+            assert_eq!(mv.to, NodeId(0));
+            assert!(pm.is_in_flight(mv.chunk));
+        }
+        // A second plan must skip the in-flight chunks.
+        let more = pm.plan_toward(8, &[(NodeId(0), 1.0)], 50);
+        assert_eq!(more[0].chunk, 100);
+    }
+
+    #[test]
+    fn plan_toward_accounts_for_in_flight_destinations() {
+        let mut pm = PageMap::new(16.0, 2, 0.8);
+        pm.place(&[(NodeId(3), 1.0)]);
+        let first = pm.plan_toward(8, &[(NodeId(3), 0.5), (NodeId(0), 0.5)], usize::MAX);
+        assert_eq!(first.len(), pm.num_chunks() / 2);
+        // Re-planning the same target while the first batch is still in
+        // flight must queue nothing — the delta is already on the wire.
+        let second = pm.plan_toward(8, &[(NodeId(3), 0.5), (NodeId(0), 0.5)], usize::MAX);
+        assert!(second.is_empty(), "overshoot: {} extra moves queued", second.len());
+    }
+
+    #[test]
+    fn plan_toward_noop_when_already_on_target() {
+        let mut pm = PageMap::new(16.0, 2, 0.5);
+        pm.place(&[(NodeId(1), 0.5), (NodeId(2), 0.5)]);
+        let moves = pm.plan_toward(4, &[(NodeId(1), 1.0), (NodeId(2), 1.0)], 1000);
+        assert!(moves.is_empty(), "balanced layout needs no moves: {moves:?}");
+    }
+
+    #[test]
+    fn plan_toward_splits_across_deficit_nodes() {
+        let mut pm = PageMap::new(16.0, 2, 0.8);
+        pm.place(&[(NodeId(5), 1.0)]);
+        let moves = pm.plan_toward(8, &[(NodeId(0), 0.5), (NodeId(1), 0.5)], usize::MAX);
+        assert_eq!(moves.len(), pm.num_chunks());
+        let to0 = moves.iter().filter(|m| m.to == NodeId(0)).count();
+        let to1 = moves.iter().filter(|m| m.to == NodeId(1)).count();
+        assert_eq!(to0, to1, "even split expected: {to0} vs {to1}");
+        // Destinations interleave, so both nodes get hot chunks.
+        assert_ne!(moves[0].to, moves[1].to);
+    }
+
+    #[test]
+    fn incremental_node_stats_match_rescan() {
+        let mut pm = PageMap::new(16.0, 2, 0.9);
+        pm.place(&[(NodeId(1), 0.5), (NodeId(4), 0.5)]);
+        // Churn ownership around, then compare the incremental aggregates
+        // against a from-scratch rescan of the owner map.
+        for chunk in (0..pm.num_chunks()).step_by(3) {
+            pm.set_owner(chunk, NodeId(chunk % 7));
+        }
+        let n = 8;
+        let gb = pm.gb_per_node(n);
+        let heat = pm.heat_fractions(n);
+        let mut gb_scan = vec![0.0; n];
+        let mut heat_scan = vec![0.0; n];
+        for chunk in 0..pm.num_chunks() {
+            let node = pm.owner_of(chunk).unwrap().0;
+            gb_scan[node] += pm.chunk_gb();
+            heat_scan[node] += pm.heat_of(chunk);
+        }
+        for j in 0..n {
+            assert!((gb[j] - gb_scan[j]).abs() < 1e-9, "gb[{j}]: {} vs {}", gb[j], gb_scan[j]);
+            assert!(
+                (heat[j] - heat_scan[j]).abs() < 1e-9,
+                "heat[{j}]: {} vs {}",
+                heat[j],
+                heat_scan[j]
+            );
+        }
+        assert!((gb.iter().sum::<f64>() - 16.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn degenerate_distributions_are_noops_not_panics() {
+        let mut pm = map_16gb();
+        pm.place(&[]);
+        assert!(!pm.is_placed());
+        pm.place(&[(NodeId(2), 0.0)]);
+        assert!(!pm.is_placed());
+        pm.place(&[(NodeId(2), 1.0)]);
+        assert!(pm.plan_toward(4, &[], usize::MAX).is_empty());
+        assert!((pm.gb_per_node(4)[2] - 16.0).abs() < 1e-9, "placement must survive");
+    }
+
+    #[test]
+    fn to_dist_roundtrips_through_place() {
+        let mut pm = PageMap::new(32.0, 2, 0.5);
+        pm.place(&[(NodeId(3), 0.25), (NodeId(7), 0.75)]);
+        let dist = pm.to_dist();
+        assert_eq!(dist.len(), 2);
+        assert_eq!(dist[0].0, NodeId(3));
+        assert!((dist[0].1 - 8.0).abs() < 1e-9);
+        assert!((dist[1].1 - 24.0).abs() < 1e-9);
+    }
+}

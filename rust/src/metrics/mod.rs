@@ -4,7 +4,7 @@
 
 use std::collections::BTreeMap;
 
-use crate::sim::PerfSample;
+use crate::sim::{Event, EventTrace, PerfSample};
 use crate::util::stats::{self, Welford};
 use crate::vm::{VmId, VmType};
 use crate::workload::App;
@@ -139,6 +139,45 @@ impl Collector {
     }
 }
 
+/// Aggregate page-migration activity of one run, derived from the event
+/// trace (the memory-side analogue of the scheduler-churn headline).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct MigrationReport {
+    /// Jobs queued (`mem_migration_started` events).
+    pub jobs_started: usize,
+    /// Jobs fully drained (`memory_migrated` events).
+    pub jobs_finished: usize,
+    /// Total guest memory moved, GB.
+    pub gb_moved: f64,
+    /// Mean ticks a finished job needed (multi-tick under bandwidth
+    /// pressure; 0 when nothing finished).
+    pub mean_job_ticks: f64,
+    pub max_job_ticks: u64,
+}
+
+impl MigrationReport {
+    pub fn from_trace(trace: &EventTrace) -> Self {
+        let mut r = MigrationReport::default();
+        let mut tick_sum = 0u64;
+        for (_, e) in trace.iter() {
+            match e {
+                Event::MemMigrationStarted { .. } => r.jobs_started += 1,
+                Event::MemoryMigrated { gb_moved, ticks, .. } => {
+                    r.jobs_finished += 1;
+                    r.gb_moved += gb_moved;
+                    tick_sum += ticks;
+                    r.max_job_ticks = r.max_job_ticks.max(*ticks);
+                }
+                _ => {}
+            }
+        }
+        if r.jobs_finished > 0 {
+            r.mean_job_ticks = tick_sum as f64 / r.jobs_finished as f64;
+        }
+        r
+    }
+}
+
 /// Across-run variability: std/mean of each app's mean throughput over
 /// repeated runs (the paper's §5.3.2 ratio: > 0.4 vanilla, < 0.04 SM).
 pub fn across_run_cov(per_run_means: &[Vec<(App, f64)>]) -> Vec<(App, f64)> {
@@ -198,6 +237,28 @@ mod tests {
         c.record(VmId(1), &sample(0.7));
         assert!(c.mean_by_type(VmType::Huge, |s| s.mean_rel_perf).is_some());
         assert!(c.mean_by_type(VmType::Small, |s| s.mean_rel_perf).is_none());
+    }
+
+    #[test]
+    fn migration_report_aggregates_trace() {
+        let mut t = EventTrace::new(16);
+        t.push(1, Event::MemMigrationStarted { vm: VmId(1), gb: 8.0 });
+        t.push(2, Event::MemMigrationStarted { vm: VmId(2), gb: 4.0 });
+        t.push(9, Event::MemoryMigrated { vm: VmId(1), gb_moved: 8.0, ticks: 8 });
+        t.push(4, Event::MemoryMigrated { vm: VmId(2), gb_moved: 4.0, ticks: 2 });
+        let r = MigrationReport::from_trace(&t);
+        assert_eq!(r.jobs_started, 2);
+        assert_eq!(r.jobs_finished, 2);
+        assert!((r.gb_moved - 12.0).abs() < 1e-12);
+        assert!((r.mean_job_ticks - 5.0).abs() < 1e-12);
+        assert_eq!(r.max_job_ticks, 8);
+    }
+
+    #[test]
+    fn empty_trace_gives_zero_report() {
+        let r = MigrationReport::from_trace(&EventTrace::new(4));
+        assert_eq!(r.jobs_started, 0);
+        assert_eq!(r.mean_job_ticks, 0.0);
     }
 
     #[test]

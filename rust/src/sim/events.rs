@@ -17,7 +17,11 @@ pub enum Event {
     SchedMigration { vm: VmId, moved: usize },
     /// Coordinator remap (whole-VM repin).
     Remapped { vm: VmId, servers: usize },
-    MemoryMigrated { vm: VmId },
+    /// A page-migration job was queued (`gb` = payload size).
+    MemMigrationStarted { vm: VmId, gb: f64 },
+    /// A page-migration job drained completely: `gb_moved` GB over
+    /// `ticks` ticks (multi-tick under bandwidth pressure).
+    MemoryMigrated { vm: VmId, gb_moved: f64, ticks: u64 },
     Destroyed { vm: VmId },
     Evicted { vm: VmId },
 }
@@ -30,6 +34,7 @@ impl Event {
             Event::Pinned { .. } => "pinned",
             Event::SchedMigration { .. } => "sched_migration",
             Event::Remapped { .. } => "remapped",
+            Event::MemMigrationStarted { .. } => "mem_migration_started",
             Event::MemoryMigrated { .. } => "memory_migrated",
             Event::Destroyed { .. } => "destroyed",
             Event::Evicted { .. } => "evicted",
@@ -43,7 +48,8 @@ impl Event {
             | Event::Pinned { vm, .. }
             | Event::SchedMigration { vm, .. }
             | Event::Remapped { vm, .. }
-            | Event::MemoryMigrated { vm }
+            | Event::MemMigrationStarted { vm, .. }
+            | Event::MemoryMigrated { vm, .. }
             | Event::Destroyed { vm }
             | Event::Evicted { vm } => *vm,
         }
@@ -98,6 +104,18 @@ impl EventTrace {
         self.events.iter().filter(|(_, e)| e.kind() == kind).count()
     }
 
+    /// Total guest memory migrated (GB) — the memory-side analogue of
+    /// [`Self::total_sched_moves`].
+    pub fn total_gb_migrated(&self) -> f64 {
+        self.events
+            .iter()
+            .map(|(_, e)| match e {
+                Event::MemoryMigrated { gb_moved, .. } => *gb_moved,
+                _ => 0.0,
+            })
+            .sum()
+    }
+
     /// Total scheduler-moved threads (the vanilla churn headline).
     pub fn total_sched_moves(&self) -> usize {
         self.events
@@ -133,6 +151,17 @@ mod tests {
         assert_eq!(t.len(), 4);
         assert_eq!(t.count_kind("sched_migration"), 2);
         assert_eq!(t.total_sched_moves(), 5);
+    }
+
+    #[test]
+    fn memory_migration_magnitudes_accumulate() {
+        let mut t = EventTrace::new(10);
+        t.push(1, Event::MemMigrationStarted { vm: VmId(1), gb: 8.0 });
+        t.push(5, Event::MemoryMigrated { vm: VmId(1), gb_moved: 8.0, ticks: 4 });
+        t.push(9, Event::MemoryMigrated { vm: VmId(2), gb_moved: 2.5, ticks: 1 });
+        assert_eq!(t.count_kind("mem_migration_started"), 1);
+        assert_eq!(t.count_kind("memory_migrated"), 2);
+        assert!((t.total_gb_migrated() - 10.5).abs() < 1e-12);
     }
 
     #[test]

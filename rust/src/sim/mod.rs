@@ -2,9 +2,12 @@
 //! NumaConnect testbed + CentOS/KVM stack (see DESIGN.md §Substitutions).
 //!
 //! One tick ≈ one second of wall-clock.  Each tick the simulator
+//! (0) advances in-flight page migrations through the bandwidth-limited
+//! engine (plus AutoNUMA promotion when that policy is on),
 //! (1) lets the vanilla Linux balancer move floating threads,
-//! (2) evaluates the joint performance model, and (3) synthesizes noisy
-//! IPC/MPI counters per VM — the same signals the paper reads via `perf`.
+//! (2) evaluates the joint performance model over the live page
+//! distribution, and (3) synthesizes noisy IPC/MPI counters per VM — the
+//! same signals the paper reads via `perf`.
 
 pub mod counters;
 pub mod events;
@@ -19,6 +22,9 @@ use std::collections::BTreeMap;
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::mem::{
+    autonuma, MemConfig, MemPolicy, MigrationEngine, MigrationId, MigrationJob, PageMap,
+};
 use crate::topology::{CpuId, NodeId, Topology};
 use crate::util::rng::Rng;
 use crate::vm::{Vm, VmId, VmState, VmType};
@@ -47,6 +53,8 @@ pub struct SimConfig {
     pub vanilla: VanillaParams,
     /// Counter history ring size per VM.
     pub history_cap: usize,
+    /// Memory subsystem: page granularity, kernel policy, fabric scale.
+    pub mem: MemConfig,
 }
 
 impl SimConfig {
@@ -58,7 +66,16 @@ impl SimConfig {
             model: ModelParams::default(),
             vanilla: VanillaParams::default(),
             history_cap: 512,
+            mem: MemConfig::default(),
         }
+    }
+
+    /// Vanilla scheduling with AutoNUMA page promotion — the second
+    /// kernel memory baseline (first-touch being the default).
+    pub fn vanilla_autonuma(seed: u64) -> Self {
+        let mut cfg = Self::vanilla(seed);
+        cfg.mem.policy = MemPolicy::AutoNuma;
+        cfg
     }
 
     pub fn pinned(seed: u64) -> Self {
@@ -78,6 +95,9 @@ pub struct ManagedVm {
     pub util: f64,
     /// Fraction of vCPUs moved this tick (feeds the churn penalty).
     pub churn: f64,
+    /// Page-granular memory map (ownership + hot/cold statistics); the
+    /// source of truth behind `vm.mem_gb_per_node`.
+    pub pages: PageMap,
     pub history: CounterHistory,
     rng: Rng,
 }
@@ -104,6 +124,8 @@ pub struct Simulator {
     pub cfg: SimConfig,
     vms: BTreeMap<VmId, ManagedVm>,
     sched: LinuxScheduler,
+    /// Shared page-migration queue (all policies drain through it).
+    migrations: MigrationEngine,
     tick: u64,
     next_id: u64,
     rng: Rng,
@@ -122,6 +144,7 @@ impl Simulator {
             cfg,
             vms: BTreeMap::new(),
             sched,
+            migrations: MigrationEngine::new(),
             tick: 0,
             next_id: 0,
             rng,
@@ -159,6 +182,10 @@ impl Simulator {
         let mut rng = self.rng.fork(self.next_id);
         let vm = Vm::new(id, vm_type, app, self.tick);
         let loadgen = LoadGen::new(app, &mut rng);
+        // Access skew: streaming (thrashy) apps touch their footprint
+        // near-uniformly; cache-friendly apps hammer a small hot set.
+        let heat_alpha = (1.1 - app.profile().thrash).clamp(0.1, 1.1);
+        let pages = PageMap::new(vm.mem_gb(), self.cfg.mem.chunk_mb, heat_alpha);
         self.vms.insert(
             id,
             ManagedVm {
@@ -167,6 +194,7 @@ impl Simulator {
                 loadgen,
                 util: 1.0,
                 churn: 0.0,
+                pages,
                 history: CounterHistory::new(self.cfg.history_cap),
                 rng,
             },
@@ -196,8 +224,8 @@ impl Simulator {
             // First-touch memory policy: most pages are faulted in by the
             // boot vCPU (guest kernel + heap arenas), the rest where the
             // other threads happen to run at start.  This is the default
-            // kernel behaviour the paper's vanilla baseline inherits —
-            // and never revisits, since pages do not migrate.
+            // kernel behaviour the paper's vanilla baseline inherits; only
+            // the AutoNUMA policy or an explicit migration revisits it.
             const BOOT_SKEW: f64 = 0.6;
             let mut fractions = mvm.placement_fractions(&topo);
             if let Some(boot_cpu) = mvm.vcpu_pos[0] {
@@ -205,13 +233,14 @@ impl Simulator {
                 fractions.iter_mut().for_each(|f| *f *= 1.0 - BOOT_SKEW);
                 fractions[boot_node] += BOOT_SKEW;
             }
-            let total = mvm.vm.mem_gb();
-            mvm.vm.mem_gb_per_node = fractions
+            let dist: Vec<(NodeId, f64)> = fractions
                 .iter()
                 .enumerate()
                 .filter(|(_, f)| **f > 0.0)
-                .map(|(n, f)| (NodeId(n), f * total))
+                .map(|(n, f)| (NodeId(n), *f))
                 .collect();
+            mvm.pages.place(&dist);
+            mvm.vm.mem_gb_per_node = mvm.pages.to_dist();
         }
         mvm.vm.state = VmState::Running;
         self.trace.push(self.tick, Event::Booted { vm: id });
@@ -267,8 +296,33 @@ impl Simulator {
 
     /// Explicitly place (or migrate) memory across nodes; replaces the
     /// previous distribution.  Fractions are normalized to the VM's size.
+    ///
+    /// Cold placements (VM not running, or first placement) apply
+    /// instantly.  For a running VM this starts an asynchronous,
+    /// bandwidth-limited page migration of the full delta — the guest is
+    /// stalled per tick in proportion to the pages actually in flight, not
+    /// by a flat churn charge.  Use [`Self::migrate_memory_toward`] for
+    /// the budgeted, handle-returning variant.
     pub fn place_memory(&mut self, id: VmId, dist: &[(NodeId, f64)]) -> Result<()> {
+        self.migrate_memory_toward(id, dist, f64::INFINITY).map(|_| ())
+    }
+
+    /// Drive a VM's memory toward the given per-node distribution, moving
+    /// the hottest misplaced chunks first, at most `budget_gb` of them
+    /// (the coordinator's per-pass migration budget).
+    ///
+    /// Returns `Ok(None)` when the placement applied instantly (cold VM)
+    /// or nothing needed to move; otherwise the handle of the queued
+    /// multi-tick job, observable via [`Self::migration`] and the event
+    /// trace.
+    pub fn migrate_memory_toward(
+        &mut self,
+        id: VmId,
+        dist: &[(NodeId, f64)],
+        budget_gb: f64,
+    ) -> Result<Option<MigrationId>> {
         let num_nodes = self.topo.num_nodes();
+        let tick = self.tick;
         let mvm = self.vms.get_mut(&id).ok_or_else(|| anyhow!("no such vm {id}"))?;
         let total: f64 = dist.iter().map(|(_, gb)| gb).sum();
         if total <= 0.0 {
@@ -277,21 +331,33 @@ impl Simulator {
         if let Some((bad, _)) = dist.iter().find(|(n, _)| n.0 >= num_nodes) {
             bail!("node {} out of range", bad.0);
         }
-        let scale = mvm.vm.mem_gb() / total;
-        let migrating = !mvm.vm.mem_gb_per_node.is_empty();
-        mvm.vm.mem_gb_per_node =
-            dist.iter().map(|(n, gb)| (*n, gb * scale)).collect();
-        if migrating && mvm.vm.state == VmState::Running {
-            // Page migration stalls the guest briefly — charge churn.
-            mvm.churn += 0.25;
-            self.trace.push(self.tick, Event::MemoryMigrated { vm: id });
+        if mvm.vm.state != VmState::Running || !mvm.pages.is_placed() {
+            // Cold placement: no guest to stall, apply instantly.
+            mvm.pages.place(dist);
+            mvm.vm.mem_gb_per_node = mvm.pages.to_dist();
+            return Ok(None);
         }
-        Ok(())
+
+        let chunk_gb = mvm.pages.chunk_gb();
+        let budget_chunks = if budget_gb.is_finite() {
+            (budget_gb / chunk_gb).floor() as usize
+        } else {
+            mvm.pages.num_chunks()
+        };
+        let moves = mvm.pages.plan_toward(num_nodes, dist, budget_chunks);
+        if moves.is_empty() {
+            return Ok(None);
+        }
+        let gb = moves.len() as f64 * chunk_gb;
+        let mid = self.migrations.enqueue(id, moves, tick);
+        self.trace.push(tick, Event::MemMigrationStarted { vm: id, gb });
+        Ok(Some(mid))
     }
 
     /// Destroy (libvirt `destroy` + `undefine`).
     pub fn destroy(&mut self, id: VmId) -> Result<()> {
         self.vms.remove(&id).ok_or_else(|| anyhow!("no such vm {id}"))?;
+        self.migrations.cancel_vm(id);
         self.sync_sched_load();
         self.trace.push(self.tick, Event::Destroyed { vm: id });
         Ok(())
@@ -308,10 +374,78 @@ impl Simulator {
         );
     }
 
+    /// One tick of the memory subsystem: AutoNUMA promotion (when that
+    /// policy is on), then the bandwidth-limited migration engine.
+    /// Completed chunks transfer ownership; guests with pages in flight
+    /// are stalled in proportion to the GB moved this tick.
+    fn advance_migrations(&mut self) {
+        let tick = self.tick;
+        if self.cfg.mem.policy == MemPolicy::AutoNuma {
+            let params = self.cfg.mem.autonuma.clone();
+            // Immutable prepass: each running VM's accessing-node list
+            // (with multiplicity), so the mutable loop below needs no
+            // topology access.
+            let targets: Vec<(VmId, Vec<NodeId>)> = self
+                .vms
+                .iter()
+                .filter(|(_, m)| m.vm.state == VmState::Running)
+                .map(|(id, m)| {
+                    let nodes =
+                        m.vcpu_pos.iter().flatten().map(|c| self.topo.node_of_cpu(*c)).collect();
+                    (*id, nodes)
+                })
+                .collect();
+            for (id, vcpu_nodes) in targets {
+                let inflight = self.migrations.inflight_chunks_for(id);
+                let mut rng = self.rng.fork(tick.wrapping_mul(131).wrapping_add(id.0));
+                let mvm = self.vms.get_mut(&id).unwrap();
+                let moves =
+                    autonuma::promote(&mut mvm.pages, &vcpu_nodes, inflight, &params, &mut rng);
+                if !moves.is_empty() {
+                    let gb = moves.len() as f64 * mvm.pages.chunk_gb();
+                    self.migrations.enqueue(id, moves, tick);
+                    self.trace.push(tick, Event::MemMigrationStarted { vm: id, gb });
+                }
+            }
+        }
+        if self.migrations.active_jobs() == 0 {
+            return;
+        }
+        let chunk_gb = self.cfg.mem.chunk_mb as f64 / 1024.0;
+        let outcome = self.migrations.advance(&self.topo, chunk_gb, self.cfg.mem.bw_scale);
+        for c in &outcome.completed_chunks {
+            if let Some(mvm) = self.vms.get_mut(&c.vm) {
+                mvm.pages.set_owner(c.chunk, c.to);
+                mvm.pages.clear_in_flight(c.chunk);
+            }
+        }
+        for (vm, gb) in &outcome.gb_moved {
+            if let Some(mvm) = self.vms.get_mut(vm) {
+                // In-flight pages are unmapped and copied: stall the guest
+                // in proportion to the fraction of its memory on the move.
+                mvm.churn += (self.cfg.mem.stall_coeff * gb / mvm.vm.mem_gb()).min(0.5);
+                mvm.vm.mem_gb_per_node = mvm.pages.to_dist();
+            }
+        }
+        for job in outcome.finished_jobs {
+            self.trace.push(
+                tick,
+                Event::MemoryMigrated {
+                    vm: job.vm,
+                    gb_moved: job.gb_done,
+                    ticks: tick.saturating_sub(job.started_at).max(1),
+                },
+            );
+        }
+    }
+
     /// Advance one tick; returns this tick's sample per running VM.
     pub fn step(&mut self) -> Vec<(VmId, PerfSample)> {
         self.tick += 1;
         let tick = self.tick;
+
+        // 0. Page migrations drain through the fabric.
+        self.advance_migrations();
 
         // 1. Vanilla balancing of floating vCPUs.
         self.sync_sched_load();
@@ -375,7 +509,9 @@ impl Simulator {
             .map(|id| {
                 let mvm = &self.vms[id];
                 let p = mvm.placement_fractions(&self.topo);
-                let m = mvm.vm.memory_fractions(self.topo.num_nodes());
+                // Access-weighted page distribution: a partially migrated
+                // VM whose hot set already arrived performs accordingly.
+                let m = mvm.pages.heat_fractions(self.topo.num_nodes());
                 let mean_occ = {
                     let occs: Vec<f64> = mvm
                         .vcpu_pos
@@ -459,6 +595,21 @@ impl Simulator {
             }
         }
         map
+    }
+
+    /// Number of page-migration jobs still draining.
+    pub fn active_migrations(&self) -> usize {
+        self.migrations.active_jobs()
+    }
+
+    /// Look up an in-flight migration job by handle (`None` once drained).
+    pub fn migration(&self, id: MigrationId) -> Option<&MigrationJob> {
+        self.migrations.get(id)
+    }
+
+    /// GB of guest memory still queued or in transit for `id`.
+    pub fn inflight_gb(&self, id: VmId) -> f64 {
+        self.migrations.inflight_chunks_for(id) as f64 * self.cfg.mem.chunk_mb as f64 / 1024.0
     }
 
     /// Memory allocated per node (GB), for capacity checks.
@@ -602,6 +753,109 @@ mod tests {
         assert!((m[0] - 0.75).abs() < 1e-9);
         assert!(s.place_memory(id, &[(NodeId(999), 1.0)]).is_err());
         assert!(s.place_memory(id, &[]).is_err());
+    }
+
+    #[test]
+    fn running_memory_migration_is_gradual_and_conserves() {
+        let mut s = sim(SchedulerKind::Pinned, 21);
+        let id = s.create(VmType::Medium, App::Derby); // 32 GB
+        pin_local(&mut s, id, 0);
+        s.start(id).unwrap();
+        // Retarget to a 2-hop remote server: 2.0 / 2 = 1 GB/s effective.
+        let mid = s
+            .migrate_memory_toward(id, &[(NodeId(24), 1.0)], f64::INFINITY)
+            .unwrap()
+            .expect("running VM must migrate asynchronously");
+        assert!(s.migration(mid).is_some());
+        let mut last_remote = 0.0;
+        for _ in 0..10 {
+            s.step();
+            let gb = s.get(id).unwrap().pages.gb_per_node(s.topo.num_nodes());
+            assert!((gb.iter().sum::<f64>() - 32.0).abs() < 1e-6, "conservation broke: {gb:?}");
+            assert!(gb[24] >= last_remote - 1e-9, "migration must be monotone");
+            last_remote = gb[24];
+        }
+        // ~1 GB/s: after 10 ticks roughly 10 GB arrived, job far from done.
+        assert!(last_remote > 5.0 && last_remote < 15.0, "remote {last_remote}");
+        assert!(s.active_migrations() > 0, "32 GB over a slow link is multi-tick");
+        assert_eq!(s.trace.count_kind("mem_migration_started"), 1);
+    }
+
+    #[test]
+    fn completed_migration_reaches_target_and_traces_gb() {
+        let mut s = sim(SchedulerKind::Pinned, 22);
+        let id = s.create(VmType::Small, App::Fft); // 16 GB
+        pin_local(&mut s, id, 0);
+        s.start(id).unwrap();
+        // Same-server move drains at memory-controller speed (12.8 GB/s).
+        s.place_memory(id, &[(NodeId(2), 1.0)]).unwrap();
+        for _ in 0..3 {
+            s.step();
+        }
+        assert_eq!(s.active_migrations(), 0);
+        let m = s.get(id).unwrap().vm.memory_fractions(s.topo.num_nodes());
+        assert!((m[2] - 1.0).abs() < 1e-9, "memory must land on node 2: {m:?}");
+        assert!((s.trace.total_gb_migrated() - 16.0).abs() < 1e-6);
+        assert_eq!(s.trace.count_kind("memory_migrated"), 1);
+    }
+
+    #[test]
+    fn in_flight_pages_stall_the_guest() {
+        let mut s = sim(SchedulerKind::Pinned, 23);
+        let id = s.create(VmType::Small, App::Derby);
+        pin_local(&mut s, id, 0);
+        s.start(id).unwrap();
+        let calm = s.step()[0].1.factors.ob;
+        s.place_memory(id, &[(NodeId(24), 1.0)]).unwrap();
+        let busy = s.step()[0].1.factors.ob;
+        assert!(busy < calm, "in-flight pages must stall the guest: {busy} vs {calm}");
+    }
+
+    #[test]
+    fn cold_placement_has_no_migration_cost() {
+        let mut s = sim(SchedulerKind::Pinned, 25);
+        let id = s.create(VmType::Large, App::Stream);
+        // Defined (not running): every placement is instant and free.
+        s.place_memory(id, &[(NodeId(0), 1.0)]).unwrap();
+        s.place_memory(id, &[(NodeId(30), 1.0)]).unwrap();
+        assert_eq!(s.active_migrations(), 0);
+        assert_eq!(s.trace.count_kind("mem_migration_started"), 0);
+        let m = s.get(id).unwrap().vm.memory_fractions(s.topo.num_nodes());
+        assert!((m[30] - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn autonuma_promotes_memory_toward_pinned_vcpus() {
+        let mut cfg = SimConfig::pinned(24);
+        cfg.mem.policy = crate::mem::MemPolicy::AutoNuma;
+        let mut s = Simulator::new(Topology::paper(), cfg);
+        let id = s.create(VmType::Small, App::Derby);
+        let cpus: Vec<CpuId> = (0..4).map(CpuId).collect();
+        s.pin_all(id, &cpus).unwrap();
+        s.place_memory(id, &[(NodeId(2), 1.0)]).unwrap(); // same server, wrong node
+        s.start(id).unwrap();
+        let n = s.topo.num_nodes();
+        assert!(s.get(id).unwrap().pages.heat_fractions(n)[0] < 1e-9);
+        for _ in 0..40 {
+            s.step();
+        }
+        let local = s.get(id).unwrap().pages.heat_fractions(n)[0];
+        assert!(local > 0.1, "AutoNUMA should pull hot pages local: {local}");
+        assert!(s.trace.count_kind("mem_migration_started") > 0);
+        assert!(s.trace.total_gb_migrated() > 0.0);
+    }
+
+    #[test]
+    fn first_touch_never_migrates() {
+        let mut s = sim(SchedulerKind::Vanilla, 26);
+        let id = s.create(VmType::Small, App::Derby);
+        s.start(id).unwrap();
+        let before = s.get(id).unwrap().vm.mem_gb_per_node.clone();
+        for _ in 0..30 {
+            s.step();
+        }
+        assert_eq!(s.get(id).unwrap().vm.mem_gb_per_node, before);
+        assert_eq!(s.trace.count_kind("memory_migrated"), 0);
     }
 
     #[test]

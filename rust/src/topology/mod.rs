@@ -48,6 +48,9 @@ pub struct TopologySpec {
     pub mem_per_node_gb: f64,
     /// Per-node memory bandwidth, GB/s (STREAM-like achievable).
     pub mem_bw_per_node_gbs: f64,
+    /// Per-direction fabric link bandwidth between adjacent servers, GB/s
+    /// (NumaConnect-class; bounds page-migration throughput).
+    pub fabric_link_bw_gbs: f64,
     /// LLC (L3) per NUMA node, MiB.
     pub l3_per_node_mb: f64,
     pub dist: DistanceParams,
@@ -66,6 +69,7 @@ impl TopologySpec {
             threads_per_core: 2,
             mem_per_node_gb: 1176.0 / 36.0, // ≈ 32.7 GB / node
             mem_bw_per_node_gbs: 12.8,      // one Opteron 6380 channel pair
+            fabric_link_bw_gbs: 2.0,        // NumaConnect-class adapter
             l3_per_node_mb: 6.0,            // Table 1: 6144K shared by 8 cores
             dist: DistanceParams::paper(),
         }
@@ -82,6 +86,7 @@ impl TopologySpec {
             threads_per_core: 2,
             mem_per_node_gb: 8.0,
             mem_bw_per_node_gbs: 10.0,
+            fabric_link_bw_gbs: 1.0,
             l3_per_node_mb: 6.0,
             dist: DistanceParams::paper(),
         }
@@ -113,6 +118,8 @@ impl TopologySpec {
             mem_per_node_gb: cfg.f64_or("topology", "mem_per_node_gb", p.mem_per_node_gb),
             mem_bw_per_node_gbs: cfg.f64_or("topology", "mem_bw_per_node_gbs",
                                             p.mem_bw_per_node_gbs),
+            fabric_link_bw_gbs: cfg.f64_or("topology", "fabric_link_bw_gbs",
+                                           p.fabric_link_bw_gbs),
             l3_per_node_mb: cfg.f64_or("topology", "l3_per_node_mb", p.l3_per_node_mb),
             dist: DistanceParams::paper(),
         }
@@ -259,6 +266,19 @@ impl Topology {
         distance::latency_ns(self.distance(from, to))
     }
 
+    /// Achievable page-migration bandwidth between two nodes, GB/s:
+    /// intra-server copies are bounded by the memory controller;
+    /// cross-server copies drain through the fabric, whose effective
+    /// bandwidth falls with torus hop count (store-and-forward per hop).
+    pub fn migration_bw_gbs(&self, from: NodeId, to: NodeId) -> f64 {
+        let (a, b) = (self.server_of_node(from), self.server_of_node(to));
+        if a == b {
+            self.spec.mem_bw_per_node_gbs
+        } else {
+            self.spec.fabric_link_bw_gbs / self.server_hops(a, b).max(1) as f64
+        }
+    }
+
     /// Nodes sorted by distance from `from` (self first) — the
     /// coordinator's proximity-ordered allocation walk.
     pub fn nodes_by_distance(&self, from: NodeId) -> Vec<NodeId> {
@@ -362,6 +382,18 @@ mod tests {
         let neighbor = t.access_latency_ns(NodeId(0), NodeId(1));
         let remote = t.access_latency_ns(NodeId(0), NodeId(35));
         assert!(local < neighbor && neighbor < remote);
+    }
+
+    #[test]
+    fn migration_bandwidth_falls_with_distance() {
+        let t = Topology::paper();
+        let intra = t.migration_bw_gbs(NodeId(0), NodeId(1));
+        let one_hop = t.migration_bw_gbs(NodeId(0), NodeId(6)); // server 1
+        let two_hops = t.migration_bw_gbs(NodeId(0), NodeId(24)); // server 4
+        assert_eq!(intra, t.spec.mem_bw_per_node_gbs);
+        assert_eq!(one_hop, t.spec.fabric_link_bw_gbs);
+        assert_eq!(two_hops, t.spec.fabric_link_bw_gbs / 2.0);
+        assert!(intra > one_hop && one_hop > two_hops);
     }
 
     #[test]

@@ -9,6 +9,7 @@
 
 use anyhow::Result;
 
+use crate::mem::MigrationId;
 use crate::sim::{PerfSample, Simulator};
 use crate::topology::{CpuId, NodeId, Topology};
 use crate::vm::{VmId, VmType};
@@ -28,8 +29,14 @@ pub trait VirtApi {
     /// Pin every vCPU of `id` to the given hardware threads.
     fn pin(&mut self, id: VmId, cpus: &[CpuId]) -> Result<()>;
 
-    /// Migrate/settle guest memory to the given per-node distribution.
-    fn migrate_memory(&mut self, id: VmId, dist: &[(NodeId, f64)]) -> Result<()>;
+    /// Migrate/settle guest memory toward the given per-node distribution.
+    /// Returns a job handle when an asynchronous page migration started
+    /// (running VM); `None` when the placement applied instantly.
+    fn migrate_memory(&mut self, id: VmId, dist: &[(NodeId, f64)])
+        -> Result<Option<MigrationId>>;
+
+    /// Is a previously returned migration job still draining?
+    fn migration_active(&self, job: MigrationId) -> bool;
 
     /// Tear down a VM.
     fn undefine(&mut self, id: VmId) -> Result<()>;
@@ -61,8 +68,16 @@ impl VirtApi for Simulator {
         self.pin_all(id, cpus)
     }
 
-    fn migrate_memory(&mut self, id: VmId, dist: &[(NodeId, f64)]) -> Result<()> {
-        self.place_memory(id, dist)
+    fn migrate_memory(
+        &mut self,
+        id: VmId,
+        dist: &[(NodeId, f64)],
+    ) -> Result<Option<MigrationId>> {
+        self.migrate_memory_toward(id, dist, f64::INFINITY)
+    }
+
+    fn migration_active(&self, job: MigrationId) -> bool {
+        self.migration(job).is_some()
     }
 
     fn undefine(&mut self, id: VmId) -> Result<()> {
@@ -103,7 +118,8 @@ mod tests {
         let id = api.define(VmType::Small, App::Derby);
         let cpus: Vec<CpuId> = (0..4).map(CpuId).collect();
         api.pin(id, &cpus).unwrap();
-        api.migrate_memory(id, &[(NodeId(0), 1.0)]).unwrap();
+        // Cold placement applies instantly: no job handle.
+        assert!(api.migrate_memory(id, &[(NodeId(0), 1.0)]).unwrap().is_none());
         api.boot(id).unwrap();
         assert_eq!(api.list(), vec![id]);
         assert!(api.counters(id).is_none(), "no samples before first tick");
@@ -114,6 +130,27 @@ mod tests {
         assert!(ipc > 0.0 && mpi > 0.0 && rel > 0.0);
         api.undefine(id).unwrap();
         assert!(api.list().is_empty());
+    }
+
+    #[test]
+    fn live_migration_returns_a_drainable_job_handle() {
+        let mut h = host();
+        let id = h.define(VmType::Small, App::Derby);
+        h.pin(id, &(0..4).map(CpuId).collect::<Vec<_>>()).unwrap();
+        h.migrate_memory(id, &[(NodeId(0), 1.0)]).unwrap();
+        h.boot(id).unwrap();
+        // Live migration to a remote server: asynchronous, multi-tick.
+        let job = h
+            .migrate_memory(id, &[(NodeId(24), 1.0)])
+            .unwrap()
+            .expect("live migration must return a handle");
+        assert!(h.migration_active(job));
+        for _ in 0..60 {
+            h.step();
+        }
+        assert!(!h.migration_active(job), "16 GB at 1 GB/s drains within 60 ticks");
+        let m = h.get(id).unwrap().vm.memory_fractions(h.topo.num_nodes());
+        assert!((m[24] - 1.0).abs() < 1e-9);
     }
 
     #[test]

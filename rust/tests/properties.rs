@@ -3,9 +3,10 @@
 
 use dvrm::coordinator::candidates::{self, SlotMap};
 use dvrm::coordinator::{MapperConfig, Metric, SmMapper};
+use dvrm::mem::MemPolicy;
 use dvrm::runtime::{native, CandidateBatch, Meta, ScoreProblem, Scorer, VmEntry, Weights};
 use dvrm::sim::{perf_model, ModelParams, SimConfig, Simulator, VmView};
-use dvrm::topology::{NodeId, Topology};
+use dvrm::topology::{CpuId, NodeId, Topology};
 use dvrm::util::rng::Rng;
 use dvrm::util::testkit::{prop_assert, propcheck};
 use dvrm::vm::VmType;
@@ -214,6 +215,99 @@ fn proximity_fill_never_overbooks_or_splits_unnecessarily() {
             if vcpus <= 8 && slots.total_free() >= 8 * 36 - 160 {
                 prop_assert(a.servers <= 2, format!("{vcpus} vcpus over {} servers", a.servers))?;
             }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn pagemap_conserves_memory_mid_migration() {
+    // Per-node GB always sums to the VM's full size, at every tick of an
+    // arbitrary in-flight migration.
+    propcheck("page-map conservation", 12, |rng| {
+        let mut sim = Simulator::new(Topology::paper(), SimConfig::pinned(rng.next_u64()));
+        let vm_type = *rng.choose(&[VmType::Small, VmType::Medium, VmType::Large]);
+        let app = *rng.choose(&App::ALL);
+        let id = sim.create(vm_type, app);
+        let vcpus = vm_type.spec().vcpus;
+        sim.pin_all(id, &(0..vcpus).map(CpuId).collect::<Vec<_>>()).unwrap();
+        let src = NodeId(rng.below(36));
+        sim.place_memory(id, &[(src, 1.0)]).unwrap();
+        sim.start(id).unwrap();
+        let dst = NodeId(rng.below(36));
+        let budget = rng.uniform(0.5, 32.0);
+        sim.migrate_memory_toward(id, &[(dst, 1.0)], budget).unwrap();
+        let expect = vm_type.spec().mem_gb;
+        for _ in 0..10 {
+            sim.step();
+            let gb = sim.get(id).unwrap().pages.gb_per_node(sim.topo.num_nodes());
+            let total: f64 = gb.iter().sum();
+            prop_assert(
+                (total - expect).abs() < 1e-6,
+                format!("{total} GB tracked, want {expect}"),
+            )?;
+            let placed = sim.get(id).unwrap().vm.mem_placed_gb();
+            prop_assert(
+                (placed - expect).abs() < 1e-6,
+                format!("vm dist drifted: {placed} vs {expect}"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn migrations_converge_in_bounded_ticks() {
+    // Any queued job finishes within total_gb / min_bandwidth ticks (plus
+    // slack) as long as bandwidth is positive.
+    propcheck("migration convergence", 8, |rng| {
+        let mut sim = Simulator::new(Topology::paper(), SimConfig::pinned(rng.next_u64()));
+        let id = sim.create(VmType::Small, *rng.choose(&App::ALL)); // 16 GB
+        sim.pin_all(id, &(0..4).map(CpuId).collect::<Vec<_>>()).unwrap();
+        sim.place_memory(id, &[(NodeId(rng.below(36)), 1.0)]).unwrap();
+        sim.start(id).unwrap();
+        sim.migrate_memory_toward(id, &[(NodeId(rng.below(36)), 1.0)], f64::INFINITY)
+            .unwrap();
+        // Worst link: fabric 2.0 GB/s over 2 hops = 1 GB/s -> 16 ticks.
+        let bound = 16 + 4;
+        for _ in 0..bound {
+            if sim.active_migrations() == 0 {
+                break;
+            }
+            sim.step();
+        }
+        prop_assert(
+            sim.active_migrations() == 0,
+            format!("job not drained after {bound} ticks"),
+        )
+    });
+}
+
+#[test]
+fn autonuma_remote_fraction_non_increasing_under_stable_pinning() {
+    // AutoNUMA only promotes toward nodes hosting vCPUs, so with pins held
+    // fixed the remote heat fraction can never grow.
+    propcheck("autonuma monotonicity", 6, |rng| {
+        let mut cfg = SimConfig::pinned(rng.next_u64());
+        cfg.mem.policy = MemPolicy::AutoNuma;
+        let mut sim = Simulator::new(Topology::paper(), cfg);
+        let id = sim.create(VmType::Small, *rng.choose(&App::ALL));
+        sim.pin_all(id, &(0..4).map(CpuId).collect::<Vec<_>>()).unwrap();
+        // Memory split between the local node and a random remote one.
+        let remote = NodeId(rng.range(1, 36));
+        sim.place_memory(id, &[(NodeId(0), 0.5), (remote, 0.5)]).unwrap();
+        sim.start(id).unwrap();
+        let mut local = vec![false; sim.topo.num_nodes()];
+        local[0] = true;
+        let mut last = sim.get(id).unwrap().pages.remote_heat_fraction(&local);
+        for _ in 0..40 {
+            sim.step();
+            let now = sim.get(id).unwrap().pages.remote_heat_fraction(&local);
+            prop_assert(
+                now <= last + 1e-12,
+                format!("remote fraction grew: {last} -> {now}"),
+            )?;
+            last = now;
         }
         Ok(())
     });
