@@ -1,17 +1,25 @@
 //! Hot-path microbenchmarks (harness = false): the decision-loop pieces
-//! whose latency bounds the coordinator's control interval.
+//! whose latency bounds the coordinator's control interval, plus the
+//! simulator tick at small/medium/large topologies (incremental vs full
+//! recompute — the `scale` experiment's acceptance numbers).
 //!
 //! * scorer: PJRT (AOT JAX/Pallas artifacts) vs native Rust, both batch
 //!   sizes — the L1/L2 compute path.
 //! * optimizer: the whole-system relaxed reshuffle artifact.
-//! * sim tick: the discrete-time host model under full cluster load.
+//! * sim tick: the discrete-time host model, paper testbed through
+//!   100 servers / 5000 VMs.
+//! * slot map: persistent journal path vs the from-scratch rebuild.
 //! * mapper interval: a complete monitor+remap pass.
+//!
+//! Results are also written machine-readably to `BENCH_hotpath.json` at
+//! the repo root so the perf trajectory is recorded across PRs.
 
 use dvrm::coordinator::{MapperConfig, Metric, SmMapper};
+use dvrm::experiments::figures::{full_eval_ticks, run_scale_config, scale_spec};
 use dvrm::runtime::{CandidateBatch, Engine, Meta, ScoreProblem, Scorer, VmEntry, Weights};
 use dvrm::sim::{SimConfig, Simulator};
 use dvrm::topology::Topology;
-use dvrm::util::benchkit::Bench;
+use dvrm::util::benchkit::{self, Bench, BenchResult};
 use dvrm::util::rng::Rng;
 use dvrm::workload::{trace, App};
 
@@ -48,16 +56,23 @@ fn batch(meta: Meta, len: usize, vms: usize, seed: u64) -> CandidateBatch {
 
 fn main() {
     println!("== dvrm bench_hotpath ==");
+    let mut results: Vec<BenchResult> = Vec::new();
     let bench = Bench::new(3, 30);
     let topo = Topology::paper();
     let prob = problem(&topo, 20);
 
-    // Native scorer.
+    // Native scorer, serial and pool-parallel.
     for len in [8usize, 64] {
         let b = batch(prob.meta, len, prob.vms, 1);
-        bench.run(&format!("scorer/native/batch{len}"), || {
+        results.push(bench.run(&format!("scorer/native/batch{len}"), || {
             std::hint::black_box(dvrm::runtime::native::score_batch(&prob, &b));
-        });
+        }));
+    }
+    {
+        let b = batch(prob.meta, 64, prob.vms, 1);
+        results.push(bench.run("scorer/native-parallel/batch64", || {
+            std::hint::black_box(dvrm::runtime::native::score_batch_parallel(&prob, &b));
+        }));
     }
 
     // PJRT scorer (AOT JAX/Pallas artifacts).
@@ -65,19 +80,19 @@ fn main() {
         Some(engine) => {
             for len in [8usize, 64] {
                 let b = batch(prob.meta, len, prob.vms, 1);
-                bench.run(&format!("scorer/pjrt/batch{len}"), || {
+                results.push(bench.run(&format!("scorer/pjrt/batch{len}"), || {
                     std::hint::black_box(engine.score(&prob, &b).unwrap());
-                });
+                }));
             }
             let logits: Vec<f32> = vec![0.0; prob.meta.max_vms * prob.meta.num_nodes];
-            Bench::new(1, 10).run("optimizer/pjrt/60steps", || {
+            results.push(Bench::new(1, 10).run("optimizer/pjrt/60steps", || {
                 std::hint::black_box(engine.optimize(&prob, &logits).unwrap());
-            });
+            }));
         }
         None => println!("(artifacts not built; skipping PJRT benches — run `make artifacts`)"),
     }
 
-    // Simulator tick under the full paper mix.
+    // Simulator tick under the full paper mix (incremental evaluator).
     let mut rng = Rng::new(7);
     let arrivals = trace::paper_mix(&mut rng);
     let mut sim = Simulator::new(topo.clone(), SimConfig::pinned(7));
@@ -87,15 +102,24 @@ fn main() {
         mapper.place_arrival(&mut sim, id).unwrap();
         sim.start(id).unwrap();
     }
-    bench.run("sim/tick/20vms", || {
+    results.push(bench.run("sim/tick/20vms", || {
         std::hint::black_box(sim.step());
-    });
+    }));
+
+    // Slot-map paths: persistent journal what-if vs from-scratch rebuild.
+    results.push(bench.run("slotmap/from_sim/20vms", || {
+        std::hint::black_box(dvrm::coordinator::SlotMap::from_sim(&sim, None));
+    }));
+    let probe = *sim.vms().next().expect("populated sim").0;
+    results.push(bench.run("slotmap/released_plan/20vms", || {
+        std::hint::black_box(sim.with_vm_released(probe, |_, slots| slots.total_free()));
+    }));
 
     // Full monitoring pass (native scorer).
-    bench.run("mapper/interval/native/20vms", || {
+    results.push(bench.run("mapper/interval/native/20vms", || {
         sim.step();
         std::hint::black_box(mapper.interval(&mut sim).unwrap());
-    });
+    }));
 
     // Full monitoring pass (PJRT scorer) — the paper-relevant config.
     if let Some(engine) = Engine::load_default() {
@@ -107,22 +131,62 @@ fn main() {
             mapper2.place_arrival(&mut sim2, id).unwrap();
             sim2.start(id).unwrap();
         }
-        bench.run("mapper/interval/pjrt/20vms", || {
+        results.push(bench.run("mapper/interval/pjrt/20vms", || {
             sim2.step();
             std::hint::black_box(mapper2.interval(&mut sim2).unwrap());
-        });
+        }));
     }
 
-    // Candidate generation alone.
-    let slots = dvrm::coordinator::SlotMap::from_sim(&sim, None);
-    bench.run("candidates/generate/24", || {
+    // Candidate generation alone (persistent slot map).
+    results.push(bench.run("candidates/generate/24", || {
         std::hint::black_box(dvrm::coordinator::candidates::generate(
             &sim.topo,
-            &slots,
+            sim.slots(),
             8,
             dvrm::workload::AnimalClass::Devil,
             None,
             24,
         ));
-    });
+    }));
+
+    // Tick evaluation across topology scales: incremental vs the
+    // pre-refactor full recompute.  The full evaluator's tick is O(V²·N),
+    // so it is only timed where that stays affordable; the xlarge config
+    // (100 servers / 5000 VMs) is the ROADMAP-scale point the incremental
+    // core exists for.  Recorded as seconds-per-tick.
+    // (name, servers, torus, vms, ticks, also_time_full)
+    let scales = [
+        ("small/6srv/60vms", 6, (3, 2), 60, 30, true),
+        ("medium/24srv/500vms", 24, (6, 4), 500, 15, true),
+        ("large/100srv/1200vms", 100, (10, 10), 1200, 10, true),
+        ("xlarge/100srv/5000vms", 100, (10, 10), 5000, 8, false),
+    ];
+    for (name, servers, torus, vms, ticks, full_too) in scales {
+        let spec = scale_spec(servers, torus);
+        let tps = run_scale_config(spec.clone(), vms, ticks, true, 7).unwrap();
+        let inc = BenchResult {
+            name: format!("sim/tick/incremental/{name}"),
+            samples: vec![1.0 / tps.max(1e-12)],
+        };
+        println!("{}", inc.report());
+        results.push(inc);
+        if full_too {
+            let tps_full = run_scale_config(spec, vms, full_eval_ticks(vms), false, 7).unwrap();
+            let full = BenchResult {
+                name: format!("sim/tick/full/{name}"),
+                samples: vec![1.0 / tps_full.max(1e-12)],
+            };
+            println!("{}  (speedup {:.1}x)", full.report(), tps / tps_full.max(1e-12));
+            results.push(full);
+        }
+    }
+
+    // Machine-readable trajectory record at the repo root.
+    let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("BENCH_hotpath.json");
+    match benchkit::write_json(&out, &results) {
+        Ok(()) => println!("wrote {}", out.display()),
+        Err(e) => println!("could not write {}: {e}", out.display()),
+    }
 }

@@ -46,6 +46,8 @@ pub fn usage() -> &'static str {
        experiment <id>   regenerate a paper table/figure (see `dvrm list`)\n\
        experiment mem    memory study: first-touch vs AutoNUMA vs planner,\n\
                          plus fabric-bandwidth starvation\n\
+       experiment scale  tick-throughput sweep to 100 servers / 5k VMs:\n\
+                         incremental evaluator vs full recompute\n\
        experiment all    regenerate everything\n\
        run               end-to-end cluster demo under all three algorithms\n\
        list              list experiment ids\n\

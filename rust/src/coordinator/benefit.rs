@@ -42,9 +42,10 @@ impl BenefitMatrix {
     }
 
     /// Isolation levels for `class`, best benefit first — the order in
-    /// which the remap search tries candidate moves.
-    pub fn ranked_levels(&self, class: AnimalClass) -> Vec<IsolationLevel> {
-        let mut levels = IsolationLevel::ALL.to_vec();
+    /// which the remap search tries candidate moves.  Returns a fixed
+    /// array: this sits in the remap hot loop and must not allocate.
+    pub fn ranked_levels(&self, class: AnimalClass) -> [IsolationLevel; 3] {
+        let mut levels = IsolationLevel::ALL;
         levels.sort_by(|a, b| {
             self.get(*b, class).partial_cmp(&self.get(*a, class)).unwrap()
         });
@@ -108,7 +109,7 @@ mod tests {
     fn ranked_levels_prefer_big_benefit() {
         let b = BenefitMatrix::default();
         // Devils: server (9) > numa (8) > socket (7).
-        assert_eq!(b.ranked_levels(Devil), vec![ServerNode, NumaNode, Socket]);
+        assert_eq!(b.ranked_levels(Devil), [ServerNode, NumaNode, Socket]);
     }
 
     #[test]

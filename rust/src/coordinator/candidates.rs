@@ -5,56 +5,136 @@
 //! co-locating incompatible animal classes (Table 3).  Candidates are
 //! *proximity fills*: pick an anchor node, walk outward in SLIT-distance
 //! order, and take free CPUs until the VM fits.
+//!
+//! The [`SlotMap`] is *persistent*: the simulator maintains one
+//! incrementally on every pin/unpin/balance/start/destroy
+//! ([`crate::sim::Simulator::slots`]), so decisions no longer pay an
+//! O(VMs × vCPUs) [`SlotMap::from_sim`] rebuild.  Speculative planning
+//! (e.g. "pretend this VM is absent while generating its remap
+//! candidates") uses the checkpoint/revert journal instead of a copy.
 
 use crate::topology::{CpuId, NodeId, Topology};
 use crate::vm::VmState;
 use crate::workload::classes::{compatible, AnimalClass};
 
-/// Free/busy state of every schedulable CPU.
+/// One journaled mutation, undoable by applying the inverse.
+#[derive(Debug, Clone, Copy)]
+enum SlotOp {
+    /// (cpu index, class index)
+    Occupy(usize, usize),
+    Release(usize, usize),
+}
+
+/// A checkpoint into the journal; pass back to [`SlotMap::revert`].
+#[derive(Debug, Clone, Copy)]
+pub struct SlotCheckpoint(usize);
+
+/// Occupancy state of every schedulable CPU, plus per-node class residency
+/// (for Table 3 filtering).  Relies on the topology's contiguous index
+/// layout: node `n` owns cpus `[n·cpn, (n+1)·cpn)`.
 #[derive(Debug, Clone)]
 pub struct SlotMap {
-    free: Vec<bool>,
+    /// Resident vCPUs per hw thread (0 = free; >1 = overbooked vanilla).
+    occ: Vec<u16>,
+    /// CPUs with zero occupancy per node.
     free_per_node: Vec<usize>,
-    /// Animal classes resident per node (for Table 3 filtering).
-    resident: Vec<Vec<AnimalClass>>,
+    /// Resident vCPU count per (node, animal-class index).
+    class_count: Vec<[u32; 3]>,
+    cpus_per_node: usize,
+    /// Undo log; only written while a checkpoint is active.
+    journal: Vec<SlotOp>,
+    journaling: bool,
 }
 
 impl SlotMap {
-    /// Build from the simulator's pinned VMs, optionally pretending `skip`
-    /// is absent (used when generating remap candidates for that VM).
+    /// Build from the simulator's running VMs, optionally pretending
+    /// `skip` is absent.  Kept as the from-scratch reference (tests,
+    /// cross-checks); the live path reads [`crate::sim::Simulator::slots`].
     pub fn from_sim(sim: &crate::sim::Simulator, skip: Option<crate::vm::VmId>) -> Self {
-        let topo = &sim.topo;
-        let mut free = vec![true; topo.num_cpus()];
-        let mut resident = vec![Vec::new(); topo.num_nodes()];
+        let mut slots = Self::empty(&sim.topo);
         for (id, mvm) in sim.vms() {
             if Some(*id) == skip || mvm.vm.state != VmState::Running {
                 continue;
             }
             let class = mvm.vm.app.profile().class;
             for pos in mvm.vcpu_pos.iter().flatten() {
-                free[pos.0] = false;
-                let node = topo.node_of_cpu(*pos);
-                if !resident[node.0].contains(&class) {
-                    resident[node.0].push(class);
-                }
+                slots.occupy(*pos, class);
             }
         }
-        let mut free_per_node = vec![0usize; topo.num_nodes()];
-        for (cpu, is_free) in free.iter().enumerate() {
-            if *is_free {
-                free_per_node[topo.node_of_cpu(CpuId(cpu)).0] += 1;
-            }
-        }
-        Self { free, free_per_node, resident }
+        slots
     }
 
     /// Empty machine of the given topology.
     pub fn empty(topo: &Topology) -> Self {
+        let cpus_per_node = topo.spec.cores_per_node * topo.spec.threads_per_core;
         Self {
-            free: vec![true; topo.num_cpus()],
-            free_per_node: vec![topo.spec.cores_per_node * topo.spec.threads_per_core;
-                                topo.num_nodes()],
-            resident: vec![Vec::new(); topo.num_nodes()],
+            occ: vec![0; topo.num_cpus()],
+            free_per_node: vec![cpus_per_node; topo.num_nodes()],
+            class_count: vec![[0; 3]; topo.num_nodes()],
+            cpus_per_node,
+            journal: Vec::new(),
+            journaling: false,
+        }
+    }
+
+    #[inline]
+    fn node_of(&self, cpu: usize) -> usize {
+        cpu / self.cpus_per_node
+    }
+
+    fn occupy_raw(&mut self, cpu: usize, class_idx: usize) {
+        let node = self.node_of(cpu);
+        if self.occ[cpu] == 0 {
+            self.free_per_node[node] -= 1;
+        }
+        self.occ[cpu] += 1;
+        self.class_count[node][class_idx] += 1;
+    }
+
+    fn release_raw(&mut self, cpu: usize, class_idx: usize) {
+        let node = self.node_of(cpu);
+        debug_assert!(self.occ[cpu] > 0, "releasing free cpu {cpu}");
+        self.occ[cpu] -= 1;
+        if self.occ[cpu] == 0 {
+            self.free_per_node[node] += 1;
+        }
+        debug_assert!(self.class_count[node][class_idx] > 0, "class underflow on node {node}");
+        self.class_count[node][class_idx] -= 1;
+    }
+
+    /// Account one vCPU of `class` landing on `cpu`.
+    pub fn occupy(&mut self, cpu: CpuId, class: AnimalClass) {
+        self.occupy_raw(cpu.0, class.index());
+        if self.journaling {
+            self.journal.push(SlotOp::Occupy(cpu.0, class.index()));
+        }
+    }
+
+    /// Account one vCPU of `class` leaving `cpu`.
+    pub fn release(&mut self, cpu: CpuId, class: AnimalClass) {
+        self.release_raw(cpu.0, class.index());
+        if self.journaling {
+            self.journal.push(SlotOp::Release(cpu.0, class.index()));
+        }
+    }
+
+    /// Start journaling mutations for later [`Self::revert`] — the cheap
+    /// what-if mechanism behind candidate planning.
+    pub fn checkpoint(&mut self) -> SlotCheckpoint {
+        self.journaling = true;
+        SlotCheckpoint(self.journal.len())
+    }
+
+    /// Undo every mutation made since `cp`, newest first.
+    pub fn revert(&mut self, cp: SlotCheckpoint) {
+        while self.journal.len() > cp.0 {
+            match self.journal.pop().expect("journal entry") {
+                SlotOp::Occupy(cpu, ci) => self.release_raw(cpu, ci),
+                SlotOp::Release(cpu, ci) => self.occupy_raw(cpu, ci),
+            }
+        }
+        if cp.0 == 0 {
+            self.journaling = false;
         }
     }
 
@@ -62,37 +142,50 @@ impl SlotMap {
         self.free_per_node.iter().sum()
     }
 
-    pub fn free_in_node(&self, topo: &Topology, node: NodeId) -> Vec<CpuId> {
-        topo.cores_of_node(node)
-            .flat_map(|c| topo.cpus_of_core(c).collect::<Vec<_>>())
-            .filter(|cpu| self.free[cpu.0])
-            .collect()
+    /// Free CPUs of a node, ascending — no allocation (contiguous layout).
+    pub fn free_in_node(&self, node: NodeId) -> impl Iterator<Item = CpuId> + '_ {
+        let lo = node.0 * self.cpus_per_node;
+        (lo..lo + self.cpus_per_node).filter(|&c| self.occ[c] == 0).map(CpuId)
     }
 
     pub fn free_count(&self, node: NodeId) -> usize {
         self.free_per_node[node.0]
     }
 
-    pub fn classes_on(&self, node: NodeId) -> &[AnimalClass] {
-        &self.resident[node.0]
+    /// Animal classes with at least one resident vCPU on `node`.
+    pub fn classes_on(&self, node: NodeId) -> impl Iterator<Item = AnimalClass> + '_ {
+        AnimalClass::ALL
+            .into_iter()
+            .filter(move |c| self.class_count[node.0][c.index()] > 0)
     }
 
     /// Would placing `class` on `node` violate Table 3?
     pub fn node_compatible(&self, node: NodeId, class: AnimalClass) -> bool {
-        self.resident[node.0].iter().all(|c| compatible(class, *c))
+        let counts = &self.class_count[node.0];
+        AnimalClass::ALL
+            .iter()
+            .all(|c| counts[c.index()] == 0 || compatible(class, *c))
     }
 
     /// Mark an assignment as taken (when planning several VMs in one pass).
     pub fn commit(&mut self, topo: &Topology, assignment: &Assignment, class: AnimalClass) {
+        debug_assert_eq!(
+            self.cpus_per_node,
+            topo.spec.cores_per_node * topo.spec.threads_per_core,
+            "slot map built for a different topology"
+        );
         for cpu in &assignment.cpus {
-            debug_assert!(self.free[cpu.0], "double booking {cpu:?}");
-            self.free[cpu.0] = false;
-            let node = topo.node_of_cpu(*cpu);
-            self.free_per_node[node.0] -= 1;
-            if !self.resident[node.0].contains(&class) {
-                self.resident[node.0].push(class);
-            }
+            debug_assert!(self.occ[cpu.0] == 0, "double booking {cpu:?}");
+            self.occupy(*cpu, class);
         }
+    }
+
+    /// Structural equality against another map (journal state ignored) —
+    /// the persistent-vs-rebuilt cross-check used by tests.
+    pub fn same_state(&self, other: &SlotMap) -> bool {
+        self.occ == other.occ
+            && self.free_per_node == other.free_per_node
+            && self.class_count == other.class_count
     }
 }
 
@@ -139,11 +232,11 @@ pub fn proximity_fill_capped(
     let max_per_node = max_per_node.max(1);
     let mut cpus = Vec::with_capacity(vcpus);
     let mut per_node = vec![0usize; topo.num_nodes()];
-    for node in topo.nodes_by_distance(anchor) {
+    for &node in topo.nodes_by_distance(anchor) {
         if strict && !slots.node_compatible(node, class) {
             continue;
         }
-        for cpu in slots.free_in_node(topo, node) {
+        for cpu in slots.free_in_node(node) {
             if per_node[node.0] >= max_per_node {
                 break;
             }
@@ -382,6 +475,54 @@ mod tests {
         // No node is rabbit-compatible, but capacity exists — must relax.
         let cands = generate(&topo, &slots, 4, AnimalClass::Rabbit, None, 4);
         assert!(!cands.is_empty(), "scarcity fallback failed");
+    }
+
+    #[test]
+    fn checkpoint_revert_restores_state() {
+        let topo = Topology::paper();
+        let mut slots = SlotMap::empty(&topo);
+        let a = proximity_fill(&topo, &slots, NodeId(0), 8, AnimalClass::Devil, true).unwrap();
+        slots.commit(&topo, &a, AnimalClass::Devil);
+        let before = slots.clone();
+        let cp = slots.checkpoint();
+        // Speculatively evict the devil and book a rabbit in its place.
+        for cpu in &a.cpus {
+            slots.release(*cpu, AnimalClass::Devil);
+        }
+        let b = proximity_fill(&topo, &slots, NodeId(0), 4, AnimalClass::Rabbit, true).unwrap();
+        slots.commit(&topo, &b, AnimalClass::Rabbit);
+        assert!(!slots.same_state(&before));
+        slots.revert(cp);
+        assert!(slots.same_state(&before), "revert must restore the pre-checkpoint state");
+        assert_eq!(slots.total_free(), topo.num_cpus() - 8);
+    }
+
+    #[test]
+    fn occupancy_counts_handle_overbooking() {
+        let topo = Topology::tiny(); // 4 cpus per node
+        let mut slots = SlotMap::empty(&topo);
+        slots.occupy(CpuId(0), AnimalClass::Sheep);
+        slots.occupy(CpuId(0), AnimalClass::Devil); // vanilla stacking
+        assert_eq!(slots.free_count(NodeId(0)), 3);
+        slots.release(CpuId(0), AnimalClass::Sheep);
+        assert_eq!(slots.free_count(NodeId(0)), 3, "one thread still resident");
+        assert!(!slots.node_compatible(NodeId(0), AnimalClass::Rabbit));
+        slots.release(CpuId(0), AnimalClass::Devil);
+        assert_eq!(slots.free_count(NodeId(0)), 4);
+        assert!(slots.node_compatible(NodeId(0), AnimalClass::Rabbit));
+        assert_eq!(slots.classes_on(NodeId(0)).count(), 0);
+    }
+
+    #[test]
+    fn free_in_node_iterates_ascending_free_cpus() {
+        let topo = Topology::tiny();
+        let mut slots = SlotMap::empty(&topo);
+        slots.occupy(CpuId(1), AnimalClass::Sheep);
+        slots.occupy(CpuId(2), AnimalClass::Sheep);
+        let free: Vec<usize> = slots.free_in_node(NodeId(0)).map(|c| c.0).collect();
+        assert_eq!(free, vec![0, 3]);
+        let free1: Vec<usize> = slots.free_in_node(NodeId(1)).map(|c| c.0).collect();
+        assert_eq!(free1, vec![4, 5, 6, 7]);
     }
 
     #[test]

@@ -222,16 +222,15 @@ impl SmMapper {
             )
         };
 
-        let mut slots = SlotMap::from_sim(sim, None);
+        // The simulator maintains the slot map persistently; no rebuild.
         let mut cands = candidates::generate_with_bw(
-            &sim.topo, &slots, vcpus, class, None, self.cfg.batch_cap, bw_cap,
+            &sim.topo, sim.slots(), vcpus, class, None, self.cfg.batch_cap, bw_cap,
         );
         if cands.is_empty() {
             // Line 7: reshuffle running VMs to carve out a suitable slot.
             self.reshuffle(sim)?;
-            slots = SlotMap::from_sim(sim, None);
             cands = candidates::generate_with_bw(
-                &sim.topo, &slots, vcpus, class, None, self.cfg.batch_cap, bw_cap,
+                &sim.topo, sim.slots(), vcpus, class, None, self.cfg.batch_cap, bw_cap,
             );
         }
         if cands.is_empty() {
@@ -366,10 +365,12 @@ impl SmMapper {
             .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
             .map(|(i, _)| NodeId(i));
 
-        let slots = SlotMap::from_sim(sim, Some(id));
-        let cands = candidates::generate_with_bw(
-            &sim.topo, &slots, vcpus, class, near, self.cfg.batch_cap - 1, bw_cap,
-        );
+        // Journal-backed what-if: plan candidates with this VM's slots
+        // released, then revert — no from_sim rebuild, no copy.
+        let batch_cap = self.cfg.batch_cap - 1;
+        let cands = sim.with_vm_released(id, |topo, slots| {
+            candidates::generate_with_bw(topo, slots, vcpus, class, near, batch_cap, bw_cap)
+        });
         if cands.is_empty() {
             return Ok(false);
         }

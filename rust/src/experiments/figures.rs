@@ -4,13 +4,13 @@
 
 use anyhow::Result;
 
-use super::harness::{run_all, run_cluster, Algorithm};
+use super::harness::{self, run_all, run_cluster, Algorithm};
 use super::studies;
 use super::ExpOptions;
 use crate::metrics::{across_run_cov, MigrationReport};
 use crate::coordinator::{MapperConfig, Metric};
 use crate::sim::{SimConfig, Simulator};
-use crate::topology::{distance, CpuId, NodeId, Topology};
+use crate::topology::{distance, CpuId, NodeId, Topology, TopologySpec};
 use crate::util::rng::Rng;
 use crate::util::table::{bar_chart, Table};
 use crate::vm::VmType;
@@ -224,17 +224,26 @@ pub fn f13(o: &ExpOptions) -> Result<Output> {
 /// Figs. 14–16: per-application relative performance under the three
 /// algorithms, plus the headline improvement factors (§5.3.2).
 pub fn f14_16(o: &ExpOptions) -> Result<Output> {
-    let mut per_alg: Vec<(Algorithm, Vec<(App, f64, f64, f64)>)> = Vec::new();
+    // One job per (algorithm, repeat); the whole sweep fans out over the
+    // thread pool at once (the paper averages 3 runs per algorithm).
+    let repeats = o.repeats as usize;
+    let mut jobs: Vec<harness::ClusterJob> = Vec::new();
     for alg in Algorithm::ALL {
-        // Average over repeats (seeds) as the paper averages 3 runs.
-        let mut acc: std::collections::BTreeMap<&str, (App, Vec<f64>, Vec<f64>, Vec<f64>)> =
-            Default::default();
         for r in 0..o.repeats {
             let mut rng = Rng::new(o.seed + r);
             let arrivals = trace::paper_mix(&mut rng);
             let mut cfg = o.harness();
             cfg.seed = o.seed + r;
-            let res = run_cluster(alg, &arrivals, &cfg)?;
+            jobs.push((alg, arrivals, cfg));
+        }
+    }
+    let results = harness::run_many(jobs)?;
+
+    let mut per_alg: Vec<(Algorithm, Vec<(App, f64, f64, f64)>)> = Vec::new();
+    for (ai, alg) in Algorithm::ALL.iter().enumerate() {
+        let mut acc: std::collections::BTreeMap<&str, (App, Vec<f64>, Vec<f64>, Vec<f64>)> =
+            Default::default();
+        for res in &results[ai * repeats..(ai + 1) * repeats] {
             for app in App::ALL {
                 // §5.3.2: medium VMs for all apps except Neo4j (huge) and
                 // Sockshop (small).
@@ -271,7 +280,7 @@ pub fn f14_16(o: &ExpOptions) -> Result<Output> {
                 )
             })
             .collect();
-        per_alg.push((alg, rows));
+        per_alg.push((*alg, rows));
     }
 
     let mut tables = Vec::new();
@@ -391,25 +400,34 @@ pub fn var(o: &ExpOptions) -> Result<Output> {
     let mut text = String::new();
     let mut t = Table::new("Across-run variability (std/mean of app performance)")
         .header(&["app", "vanilla", "SM-IPC", "SM-MPI"]);
-    let mut per_alg: Vec<Vec<(App, f64)>> = Vec::new();
+    // All (algorithm × repeat) runs fan out over the pool at once.
+    let mut jobs: Vec<harness::ClusterJob> = Vec::new();
     for alg in Algorithm::ALL {
-        let mut runs = Vec::new();
         for r in 0..repeats {
             let mut rng = Rng::new(o.seed + 100 + r);
             let arrivals = trace::paper_mix(&mut rng);
             let mut cfg = o.harness();
             cfg.seed = o.seed + 100 + r;
-            let res = run_cluster(alg, &arrivals, &cfg)?;
-            // Use load-normalized performance so interactive apps' random
-            // load phases don't masquerade as placement variability.
-            let means: Vec<(App, f64)> = App::ALL
-                .iter()
-                .filter_map(|app| {
-                    res.collector.mean_by_app(*app, |s| s.mean_rel_perf).map(|m| (*app, m))
-                })
-                .collect();
-            runs.push(means);
+            jobs.push((alg, arrivals, cfg));
         }
+    }
+    let results = harness::run_many(jobs)?;
+    let mut per_alg: Vec<Vec<(App, f64)>> = Vec::new();
+    for ai in 0..Algorithm::ALL.len() {
+        // Use load-normalized performance so interactive apps' random
+        // load phases don't masquerade as placement variability.
+        let lo = ai * repeats as usize;
+        let runs: Vec<Vec<(App, f64)>> = results[lo..lo + repeats as usize]
+            .iter()
+            .map(|res| {
+                App::ALL
+                    .iter()
+                    .filter_map(|app| {
+                        res.collector.mean_by_app(*app, |s| s.mean_rel_perf).map(|m| (*app, m))
+                    })
+                    .collect()
+            })
+            .collect();
         per_alg.push(across_run_cov(&runs));
     }
     for app in App::ALL {
@@ -567,4 +585,93 @@ pub fn abl(o: &ExpOptions) -> Result<Output> {
     tables.push(("abl_memory".into(), t));
 
     Ok(Output { text, tables })
+}
+
+/// A paper-like server joined `servers`-wide into a `torus` — the sweep
+/// axis of the `scale` experiment (shared with `bench_hotpath`).
+pub fn scale_spec(servers: usize, torus: (usize, usize)) -> TopologySpec {
+    TopologySpec { servers, torus, ..TopologySpec::paper() }
+}
+
+/// How many ticks the from-scratch evaluator is timed for at a given VM
+/// count (its tick is O(V²·N); keep the measurement affordable).  Single
+/// source of truth for both the `scale` experiment and `bench_hotpath`.
+pub fn full_eval_ticks(vms: usize) -> u64 {
+    if vms >= 500 {
+        2
+    } else {
+        5
+    }
+}
+
+/// One timed tick-loop run at (spec, vms) under vanilla scheduling (the
+/// churn-heavy stress: the balancer keeps dirtying placements); returns
+/// ticks/second.  `incremental` selects the dirty-tracked evaluator or
+/// the from-scratch O(V²·N) baseline.  Public so `bench_hotpath` records
+/// the same configurations.
+pub fn run_scale_config(
+    spec: TopologySpec,
+    vms: usize,
+    ticks: u64,
+    incremental: bool,
+    seed: u64,
+) -> Result<f64> {
+    let topo = Topology::build(spec);
+    let mut cfg = SimConfig::vanilla(seed);
+    cfg.incremental = incremental;
+    // Coarse chunks: page bookkeeping for thousands of VMs without
+    // gigabytes of chunk tables (first-touch never migrates here anyway).
+    cfg.mem.chunk_mb = 512;
+    cfg.history_cap = 4;
+    let mut sim = Simulator::new(topo, cfg);
+    for k in 0..vms {
+        let app = App::ALL[k % App::ALL.len()];
+        let vm_type = if k % 8 == 0 { VmType::Medium } else { VmType::Small };
+        let id = sim.create(vm_type, app);
+        sim.start(id)?;
+    }
+    sim.step(); // warmup: registers every VM with the evaluator
+    let t0 = std::time::Instant::now();
+    for _ in 0..ticks {
+        sim.step();
+    }
+    Ok(ticks as f64 / t0.elapsed().as_secs_f64().max(1e-9))
+}
+
+/// EXP-SCALE: simulator tick throughput as the system grows toward the
+/// ROADMAP's production scale — the incremental evaluator head-to-head
+/// against the pre-refactor from-scratch evaluator, up to 100 servers /
+/// 5000 VMs.  The full evaluator is only *timed* where a tick is
+/// affordable; its per-tick cost grows as O(V²·N), which is the point.
+pub fn scale(o: &ExpOptions) -> Result<Output> {
+    let sweep: &[(usize, (usize, usize), usize)] = if o.fast {
+        &[(6, (3, 2), 60), (12, (4, 3), 200)]
+    } else {
+        &[(6, (3, 2), 100), (24, (6, 4), 500), (48, (8, 6), 1500), (100, (10, 10), 5000)]
+    };
+    const FULL_EVAL_MAX_VMS: usize = 1500;
+    let mut t = Table::new("EXP-SCALE: simulator ticks/sec, incremental vs full recompute")
+        .header(&["servers", "nodes", "vms", "incremental t/s", "full t/s", "speedup"]);
+    for &(servers, torus, vms) in sweep {
+        let spec = scale_spec(servers, torus);
+        let nodes = spec.num_nodes();
+        let inc_ticks = (if vms >= 2000 { o.ticks.min(15) } else { o.ticks }).max(3);
+        let inc = run_scale_config(spec.clone(), vms, inc_ticks, true, o.seed)?;
+        let (full_col, speedup_col) = if vms <= FULL_EVAL_MAX_VMS {
+            let full = run_scale_config(spec, vms, full_eval_ticks(vms), false, o.seed)?;
+            (format!("{full:.2}"), format!("{:.1}x", inc / full.max(1e-12)))
+        } else {
+            ("(skipped: O(V²·N))".into(), "-".into())
+        };
+        t.row(vec![
+            servers.to_string(),
+            nodes.to_string(),
+            vms.to_string(),
+            format!("{inc:.1}"),
+            full_col,
+            speedup_col,
+        ]);
+    }
+    let text = t.render();
+    Ok(Output { text, tables: vec![("scale".into(), t)] })
 }

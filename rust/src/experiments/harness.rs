@@ -1,6 +1,11 @@
 //! Cluster experiment harness: replays an arrival trace under one of the
 //! three evaluated algorithms and collects per-VM counters — the engine
 //! behind Figs. 12–19 and the variability analysis.
+//!
+//! Independent runs (algorithm × repetition sweeps) fan out over the
+//! shared [`crate::util::pool::ThreadPool`] via [`run_many`]; each job
+//! owns its simulator and RNG streams, so parallel results are
+//! bit-identical to sequential ones.
 
 use anyhow::Result;
 
@@ -187,9 +192,28 @@ pub fn run_cluster(
     })
 }
 
-/// Run the same trace under all three algorithms.
+/// One independent cluster run: algorithm, its trace, its config.
+pub type ClusterJob = (Algorithm, Vec<Arrival>, HarnessConfig);
+
+/// Run independent cluster experiments in parallel on the shared thread
+/// pool, preserving input order.  Each job is self-contained (own
+/// simulator, own seeded RNG streams), so results are identical to
+/// running them sequentially.
+pub fn run_many(jobs: Vec<ClusterJob>) -> Result<Vec<ClusterResult>> {
+    if jobs.len() <= 1 {
+        return jobs.into_iter().map(|(alg, trace, cfg)| run_cluster(alg, &trace, &cfg)).collect();
+    }
+    crate::util::pool::global()
+        .scope_map(jobs, |(alg, trace, cfg)| run_cluster(alg, &trace, &cfg))
+        .into_iter()
+        .collect()
+}
+
+/// Run the same trace under all three algorithms (in parallel).
 pub fn run_all(arrivals: &[Arrival], cfg: &HarnessConfig) -> Result<Vec<ClusterResult>> {
-    Algorithm::ALL.iter().map(|alg| run_cluster(*alg, arrivals, cfg)).collect()
+    run_many(
+        Algorithm::ALL.iter().map(|alg| (*alg, arrivals.to_vec(), cfg.clone())).collect(),
+    )
 }
 
 #[cfg(test)]
@@ -275,6 +299,30 @@ mod tests {
         assert!(res.migration.jobs_finished > 0, "no promotions: {:?}", res.migration);
         assert!(res.migration.gb_moved > 0.0);
         assert!(res.mapper_stats.is_none(), "AutoNUMA is a kernel baseline, not a mapper");
+    }
+
+    #[test]
+    fn run_many_matches_sequential_runs() {
+        let cfg = HarnessConfig::fast(9);
+        let jobs: Vec<ClusterJob> = vec![
+            (Algorithm::Vanilla, tiny_trace(), cfg.clone()),
+            (Algorithm::SmIpc, tiny_trace(), cfg.clone()),
+            (Algorithm::Vanilla, tiny_trace(), HarnessConfig::fast(10)),
+        ];
+        let par = run_many(jobs).unwrap();
+        let seq = [
+            run_cluster(Algorithm::Vanilla, &tiny_trace(), &cfg).unwrap(),
+            run_cluster(Algorithm::SmIpc, &tiny_trace(), &cfg).unwrap(),
+            run_cluster(Algorithm::Vanilla, &tiny_trace(), &HarnessConfig::fast(10)).unwrap(),
+        ];
+        assert_eq!(par.len(), seq.len());
+        for (p, s) in par.iter().zip(seq.iter()) {
+            assert_eq!(p.algorithm, s.algorithm);
+            assert_eq!(p.summaries.len(), s.summaries.len());
+            for (a, b) in p.summaries.iter().zip(s.summaries.iter()) {
+                assert_eq!(a.mean_perf, b.mean_perf, "parallel run must be bit-identical");
+            }
+        }
     }
 
     #[test]

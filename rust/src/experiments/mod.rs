@@ -8,7 +8,10 @@ pub mod figures;
 pub mod harness;
 pub mod studies;
 
-pub use harness::{run_all, run_cluster, Algorithm, ClusterResult, HarnessConfig, ScorerChoice};
+pub use harness::{
+    run_all, run_cluster, run_many, Algorithm, ClusterJob, ClusterResult, HarnessConfig,
+    ScorerChoice,
+};
 
 use anyhow::{bail, Result};
 
@@ -48,7 +51,7 @@ impl ExpOptions {
 /// All experiment ids, in DESIGN.md order.
 pub const ALL_IDS: &[&str] = &[
     "t1", "t2", "t3", "t4", "t5", "f2", "f3", "f4_10", "f11", "f12", "f13", "f14_16",
-    "f17_19", "var", "abl", "mem",
+    "f17_19", "var", "abl", "mem", "scale",
 ];
 
 /// Run one experiment by id.
@@ -70,6 +73,7 @@ pub fn run(id: &str, opts: &ExpOptions) -> Result<figures::Output> {
         "var" => figures::var(opts),
         "abl" => figures::abl(opts),
         "mem" => figures::mem(opts),
+        "scale" => figures::scale(opts),
         other => bail!("unknown experiment {other:?}; known: {ALL_IDS:?}"),
     }
 }
@@ -116,6 +120,14 @@ mod tests {
     fn fig11_runs_fast() {
         let out = run("f11", &fast()).unwrap();
         assert!(out.text.contains("2 hops"));
+    }
+
+    #[test]
+    fn scale_experiment_times_both_evaluators() {
+        let out = run("scale", &fast()).unwrap();
+        assert!(out.text.contains("incremental"), "{}", out.text);
+        // Every fast-sweep row is small enough to time the full evaluator.
+        assert!(out.text.contains('x'), "speedup column missing: {}", out.text);
     }
 
     #[test]

@@ -45,7 +45,8 @@ impl Scorer {
         }
     }
 
-    /// Score a candidate batch.
+    /// Score a candidate batch.  Native scoring fans large batches out
+    /// over the scorer thread pool (bit-identical to the serial loop).
     pub fn score(
         &self,
         problem: &ScoreProblem,
@@ -53,7 +54,7 @@ impl Scorer {
     ) -> anyhow::Result<Vec<ScoreOut>> {
         match self {
             Scorer::Pjrt(engine) => engine.score(problem, batch),
-            Scorer::Native => Ok(native::score_batch(problem, batch)),
+            Scorer::Native => Ok(native::score_batch_parallel(problem, batch)),
         }
     }
 

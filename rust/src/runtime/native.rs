@@ -2,8 +2,62 @@
 //! (`python/compile/kernels/ref.py`), used (a) as a fallback when the
 //! artifacts have not been built, (b) to cross-validate the PJRT path in
 //! tests, and (c) as the baseline in the hot-path benchmarks.
+//!
+//! Large batches fan out over a dedicated thread pool
+//! ([`score_batch_parallel`]); candidates are scored independently, so
+//! chunked evaluation is bit-identical to the serial loop.
+
+use std::sync::{Arc, OnceLock};
+
+use crate::util::pool::ThreadPool;
 
 use super::problem::{CandidateBatch, ScoreOut, ScoreProblem};
+
+/// Below this many candidates the fan-out overhead beats the win.
+const PARALLEL_MIN_BATCH: usize = 16;
+
+/// The scorer's own pool — deliberately distinct from
+/// [`crate::util::pool::global`]: batch scoring runs *inside* experiment
+/// jobs that occupy the global workers, and nesting one pool inside
+/// itself deadlocks.
+fn score_pool() -> &'static ThreadPool {
+    static POOL: OnceLock<ThreadPool> = OnceLock::new();
+    POOL.get_or_init(|| {
+        let n = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4);
+        ThreadPool::new(n.min(8))
+    })
+}
+
+/// Score a batch, fanning contiguous candidate chunks out over the scorer
+/// pool when the batch is large.  Identical results to [`score_batch`] —
+/// candidates never interact.
+pub fn score_batch_parallel(problem: &ScoreProblem, batch: &CandidateBatch) -> Vec<ScoreOut> {
+    let workers = score_pool().workers();
+    if batch.len < PARALLEL_MIN_BATCH || workers < 2 {
+        return score_batch(problem, batch);
+    }
+    let stride = batch.meta.max_vms * batch.meta.num_nodes;
+    let chunk = batch.len.div_ceil(workers);
+    let problem = Arc::new(problem.clone());
+    let jobs: Vec<(Arc<ScoreProblem>, CandidateBatch)> = (0..batch.len)
+        .step_by(chunk)
+        .map(|lo| {
+            let hi = (lo + chunk).min(batch.len);
+            let sub = CandidateBatch {
+                meta: batch.meta,
+                p: batch.p[lo * stride..hi * stride].to_vec(),
+                len: hi - lo,
+                batch: hi - lo,
+            };
+            (Arc::clone(&problem), sub)
+        })
+        .collect();
+    score_pool()
+        .scope_map(jobs, |(prob, sub)| score_batch(prob.as_ref(), &sub))
+        .into_iter()
+        .flatten()
+        .collect()
+}
 
 /// Score every live candidate in the batch.
 pub fn score_batch(problem: &ScoreProblem, batch: &CandidateBatch) -> Vec<ScoreOut> {
@@ -157,6 +211,31 @@ mod tests {
         let (prob, _) = problem_with(&[(App::Sor, 4, 0)]);
         let b = CandidateBatch::zeroed(prob.meta, 8);
         assert!(score_batch(&prob, &b).is_empty());
+        assert!(score_batch_parallel(&prob, &b).is_empty());
+    }
+
+    #[test]
+    fn parallel_scoring_is_bit_identical_to_serial() {
+        let (prob, _) = problem_with(&[(App::Stream, 4, 0), (App::Neo4j, 8, 5)]);
+        let mut rng = Rng::new(3);
+        let mut b = CandidateBatch::zeroed(prob.meta, 64);
+        for _ in 0..40 {
+            let mut p = vec![vec![0.0; 36]; 2];
+            for row in p.iter_mut() {
+                for f in rng.simplex(3) {
+                    row[rng.below(36)] += f;
+                }
+                let sum: f64 = row.iter().sum();
+                row.iter_mut().for_each(|x| *x /= sum);
+            }
+            b.push(&p);
+        }
+        let serial = score_batch(&prob, &b);
+        let par = score_batch_parallel(&prob, &b);
+        assert_eq!(serial.len(), par.len());
+        for (a, c) in serial.iter().zip(par.iter()) {
+            assert_eq!(a, c, "chunked scoring must be bit-identical");
+        }
     }
 
     #[test]

@@ -1,0 +1,535 @@
+//! Dirty-tracked incremental evaluation of the joint performance model.
+//!
+//! [`super::perf_model::evaluate`] recomputes the world every tick:
+//! O(V²·N) for the pairwise class-contention overlaps, O(V·N) for the
+//! shared cache-pressure and bandwidth accumulators, and an O(N²)-shaped
+//! `remote_fraction` walk per VM.  At the paper's 36-node/20-VM testbed
+//! that is harmless; at the ROADMAP's production scale (hundreds of nodes,
+//! thousands of VMs) it is the tick-rate ceiling.
+//!
+//! [`IncrementalEvaluator`] holds the same model state *persistently*:
+//!
+//! * per-VM **sparse** placement/memory vectors (`(node, fraction)` pairs —
+//!   VMs touch a handful of nodes, not all N), plus the derived per-VM
+//!   quantities that only change when the placement changes: the
+//!   placement-weighted mean SLIT distance and the cross-server remote
+//!   fraction (computed through per-server memory aggregates in
+//!   O(|p| + |m|) instead of O(N²));
+//! * shared accumulators — cache pressure per node, per-(node, class)
+//!   placement mass (which turns the O(V²·N) pairwise penalty into a
+//!   per-VM O(|p|) read), memory-controller demand per node, and total
+//!   fabric demand.
+//!
+//! The simulator marks a VM dirty only when something that feeds these
+//! caches actually changed (pin/unpin, balancer move, page-migration
+//! completion); [`Self::set_placement`] then *subtracts the stale
+//! contribution and adds the fresh one*.  Per-tick utilization changes are
+//! folded in as multiplicative deltas.  A tick therefore costs
+//! O(dirty·|p| + V·(|p|+|m|) + N) instead of O(V²·N + V·N²).
+//!
+//! Float drift from repeated add/subtract is bounded by rebuilding the
+//! accumulators from the (exact) per-VM caches every
+//! [`REBUILD_EVERY`] ticks; the oracle property tests
+//! (`tests/properties.rs` and below) pin the incremental outputs to the
+//! from-scratch evaluator within 1e-9.
+
+use std::collections::BTreeMap;
+
+use crate::topology::{NodeId, Topology};
+use crate::vm::VmId;
+use crate::workload::{pair_penalty, AnimalClass, AppProfile};
+
+use super::counters::Factors;
+use super::perf_model::{ModelOut, ModelParams};
+
+/// Rebuild the shared accumulators from the per-VM caches this often
+/// (bounds add/subtract float drift; one rebuild is O(Σ|p|+|m|)).
+const REBUILD_EVERY: u32 = 1024;
+
+/// Per-tick inputs that change for every VM every tick and are therefore
+/// passed by value rather than dirty-tracked.
+#[derive(Debug, Clone, Copy)]
+pub struct TickInput {
+    pub util: f64,
+    pub mean_occupancy: f64,
+    pub churn: f64,
+}
+
+/// Cached per-VM state; invalidated only via [`IncrementalEvaluator::set_placement`].
+#[derive(Debug, Clone)]
+struct VmCache {
+    /// Sparse vCPU fractions per node (nonzero entries only).
+    p: Vec<(u32, f64)>,
+    /// Sparse memory (access-weight) fractions per node.
+    m: Vec<(u32, f64)>,
+    vcpus: f64,
+    profile: AppProfile,
+    class_idx: usize,
+    /// `pair_penalty(my class, other class)` by class index.
+    pen: [f64; 3],
+    /// Cache-pressure contribution per unit of placement fraction.
+    press_per_p: f64,
+    /// Bandwidth demand at util = 1 (GB/s).
+    demand_static: f64,
+    /// Utilization currently folded into the shared accumulators.
+    util: f64,
+    /// Fraction of memory traffic crossing servers.
+    remote_frac: f64,
+    /// Placement-weighted mean SLIT distance (10 = local).
+    avg_dist: f64,
+}
+
+/// Persistent, dirty-tracked implementation of the joint performance model.
+/// Semantically identical to [`super::perf_model::evaluate`].
+#[derive(Debug, Clone)]
+pub struct IncrementalEvaluator {
+    l3_mb: f64,
+    node_bw: f64,
+    /// Node → server lookup table (avoids per-access index arithmetic).
+    server_of: Vec<u32>,
+    /// Cache pressure per node from all registered VMs.
+    press: Vec<f64>,
+    /// Placement mass per (node, animal-class index).
+    class_p: Vec<[f64; 3]>,
+    /// Memory-controller demand per node (GB/s, util folded in).
+    mem_demand: Vec<f64>,
+    /// Total cross-server traffic (GB/s, util folded in).
+    fabric_demand: f64,
+    vms: BTreeMap<VmId, VmCache>,
+    /// Scratch: per-node saturation, recomputed each tick.
+    mem_sat: Vec<f64>,
+    /// Scratch: per-server memory aggregates (zeroed after each use).
+    m_server: Vec<f64>,
+    evals_since_rebuild: u32,
+}
+
+impl IncrementalEvaluator {
+    pub fn new(topo: &Topology) -> Self {
+        let n = topo.num_nodes();
+        let server_of: Vec<u32> =
+            (0..n).map(|i| topo.server_of_node(NodeId(i)).0 as u32).collect();
+        Self {
+            l3_mb: topo.spec.l3_per_node_mb,
+            node_bw: topo.spec.mem_bw_per_node_gbs,
+            server_of,
+            press: vec![0.0; n],
+            class_p: vec![[0.0; 3]; n],
+            mem_demand: vec![0.0; n],
+            fabric_demand: 0.0,
+            vms: BTreeMap::new(),
+            mem_sat: vec![1.0; n],
+            m_server: vec![0.0; topo.spec.servers],
+            evals_since_rebuild: 0,
+        }
+    }
+
+    /// Number of VMs currently registered.
+    pub fn num_tracked(&self) -> usize {
+        self.vms.len()
+    }
+
+    fn apply(&mut self, c: &VmCache, sign: f64) {
+        for &(i, pi) in &c.p {
+            self.press[i as usize] += sign * pi * c.press_per_p;
+            self.class_p[i as usize][c.class_idx] += sign * pi;
+        }
+        let demand = c.demand_static * c.util;
+        for &(j, mj) in &c.m {
+            self.mem_demand[j as usize] += sign * demand * mj;
+        }
+        self.fabric_demand += sign * demand * c.remote_frac;
+    }
+
+    /// (Re)register a VM's placement and memory distribution: subtract the
+    /// stale contribution, cache the fresh sparse vectors and derived
+    /// scalars, add the fresh contribution.  Call only when `p`/`m`
+    /// actually changed — that is the whole point.
+    pub fn set_placement(
+        &mut self,
+        topo: &Topology,
+        id: VmId,
+        p: &[f64],
+        m: &[f64],
+        vcpus: usize,
+        profile: AppProfile,
+    ) {
+        let util = match self.vms.remove(&id) {
+            Some(old) => {
+                let u = old.util;
+                self.apply(&old, -1.0);
+                u
+            }
+            None => 0.0,
+        };
+
+        let sp: Vec<(u32, f64)> = p
+            .iter()
+            .enumerate()
+            .filter(|(_, &x)| x != 0.0)
+            .map(|(i, &x)| (i as u32, x))
+            .collect();
+        let sm: Vec<(u32, f64)> = m
+            .iter()
+            .enumerate()
+            .filter(|(_, &x)| x != 0.0)
+            .map(|(j, &x)| (j as u32, x))
+            .collect();
+
+        // Placement-weighted mean distance, exactly as the from-scratch
+        // evaluator computes it (unplaced VM defaults to local).
+        let p_total: f64 = sp.iter().map(|(_, x)| x).sum();
+        let mut avg = 0.0;
+        for &(i, pi) in &sp {
+            for &(j, mj) in &sm {
+                avg += pi * mj * topo.distance(NodeId(i as usize), NodeId(j as usize));
+            }
+        }
+        let avg_dist = if p_total > 0.0 { avg / p_total } else { 10.0 };
+
+        // Remote fraction via per-server memory aggregates:
+        // Σᵢ pᵢ (m_total − m_server[server(i)])  ==  Σᵢⱼ pᵢ mⱼ [srv(i)≠srv(j)].
+        let mut m_total = 0.0;
+        for &(j, mj) in &sm {
+            self.m_server[self.server_of[j as usize] as usize] += mj;
+            m_total += mj;
+        }
+        let mut remote_frac = 0.0;
+        for &(i, pi) in &sp {
+            remote_frac += pi * (m_total - self.m_server[self.server_of[i as usize] as usize]);
+        }
+        for &(j, _) in &sm {
+            self.m_server[self.server_of[j as usize] as usize] = 0.0;
+        }
+
+        let class_idx = profile.class.index();
+        let pen = [
+            pair_penalty(profile.class, AnimalClass::Sheep),
+            pair_penalty(profile.class, AnimalClass::Rabbit),
+            pair_penalty(profile.class, AnimalClass::Devil),
+        ];
+        let cache = VmCache {
+            p: sp,
+            m: sm,
+            vcpus: vcpus as f64,
+            press_per_p: vcpus as f64 * profile.cache_mb_per_vcpu * profile.thrash / self.l3_mb,
+            demand_static: profile.bw_gbs_per_vcpu * vcpus as f64,
+            class_idx,
+            pen,
+            profile,
+            util,
+            remote_frac,
+            avg_dist,
+        };
+        self.apply(&cache, 1.0);
+        self.vms.insert(id, cache);
+    }
+
+    /// Forget a VM (destroy), subtracting its contributions.
+    pub fn remove(&mut self, id: VmId) {
+        if let Some(old) = self.vms.remove(&id) {
+            self.apply(&old, -1.0);
+        }
+    }
+
+    /// Recompute the shared accumulators from the per-VM caches (drift
+    /// control; deterministic BTreeMap order keeps runs bit-reproducible).
+    fn rebuild(&mut self) {
+        self.press.iter_mut().for_each(|x| *x = 0.0);
+        self.class_p.iter_mut().for_each(|x| *x = [0.0; 3]);
+        self.mem_demand.iter_mut().for_each(|x| *x = 0.0);
+        self.fabric_demand = 0.0;
+        // Move the map aside so the loop can borrow caches while apply()
+        // mutates the accumulators — no per-VM clone.
+        let vms = std::mem::take(&mut self.vms);
+        for c in vms.values() {
+            self.apply(c, 1.0);
+        }
+        self.vms = vms;
+    }
+
+    /// Evaluate one tick for the given VMs (all registered running VMs, in
+    /// a stable order).  Returns one [`ModelOut`] per input, aligned.
+    pub fn evaluate(
+        &mut self,
+        params: &ModelParams,
+        inputs: &[(VmId, TickInput)],
+    ) -> Vec<ModelOut> {
+        self.evals_since_rebuild += 1;
+        if self.evals_since_rebuild >= REBUILD_EVERY {
+            self.rebuild();
+            self.evals_since_rebuild = 0;
+        }
+
+        // Pass 1: fold per-tick utilization changes into the bandwidth
+        // accumulators as multiplicative deltas — O(Σ|m|).
+        for (id, inp) in inputs {
+            let c = self.vms.get_mut(id).expect("evaluate: vm not registered");
+            if inp.util != c.util {
+                let du = c.demand_static * (inp.util - c.util);
+                for &(j, mj) in &c.m {
+                    self.mem_demand[j as usize] += du * mj;
+                }
+                self.fabric_demand += du * c.remote_frac;
+                c.util = inp.util;
+            }
+        }
+
+        // Shared saturation state — O(N).
+        let node_bw = self.node_bw;
+        for (sat, &d) in self.mem_sat.iter_mut().zip(self.mem_demand.iter()) {
+            *sat = if d <= node_bw { 1.0 } else { node_bw / d };
+        }
+        let fabric_sat = if self.fabric_demand <= params.fabric_cap_gbs {
+            1.0
+        } else {
+            params.fabric_cap_gbs / self.fabric_demand
+        };
+
+        // Pass 2: per-VM O(|p| + |m|) evaluation.
+        inputs
+            .iter()
+            .map(|(id, inp)| self.eval_one(&self.vms[id], inp, params, fabric_sat))
+            .collect()
+    }
+
+    /// Mirror of `perf_model::evaluate_one` over the cached state.
+    fn eval_one(
+        &self,
+        c: &VmCache,
+        inp: &TickInput,
+        params: &ModelParams,
+        fabric_sat: f64,
+    ) -> ModelOut {
+        let prof = &c.profile;
+
+        // 1. Latency factor from the cached mean distance.
+        let sigma =
+            if prof.sensitivity.is_sensitive() { params.sens_mult } else { params.insens_mult };
+        let lat_mult = 1.0 + prof.mem_stall_frac * sigma * (c.avg_dist / 10.0 - 1.0);
+        let lat = 1.0 / lat_mult;
+
+        // 2. Contention: others' pressure + class-pair mass where my vCPUs
+        // sit, both read from the shared accumulators minus my own share.
+        let mut other_press = 0.0;
+        let mut pair_pen = 0.0;
+        for &(i, pi) in &c.p {
+            let i = i as usize;
+            other_press += pi * (self.press[i] - pi * c.press_per_p).max(0.0);
+            let counts = &self.class_p[i];
+            let mut pen_i = 0.0;
+            for (k, pen_k) in c.pen.iter().enumerate() {
+                let others = counts[k] - if k == c.class_idx { pi } else { 0.0 };
+                pen_i += pen_k * others;
+            }
+            pair_pen += pi * pen_i;
+        }
+        let cont = 1.0
+            / (1.0
+                + prof.cache_sens * params.press_coeff * other_press
+                + params.pair_coeff * pair_pen);
+
+        // 3. Bandwidth factor.
+        let bw_demand = c.demand_static * inp.util;
+        let remote_frac = c.remote_frac;
+        let local_sat: f64 = c
+            .m
+            .iter()
+            .map(|&(j, mj)| mj * self.mem_sat[j as usize])
+            .sum::<f64>()
+            .min(1.0);
+        let bw = if bw_demand <= 1e-9 {
+            1.0
+        } else {
+            let remote_demand = bw_demand * remote_frac;
+            let vm_link_cap = 4.0 * params.link_bw_gbs;
+            let remote_sat = if remote_demand <= 1e-9 {
+                1.0
+            } else {
+                fabric_sat.min(vm_link_cap / remote_demand).min(1.0)
+            };
+            ((1.0 - remote_frac) * local_sat + remote_frac * remote_sat).clamp(1e-4, 1.0)
+        };
+
+        // 4. Overbooking + churn.
+        let ob_share = 1.0 / inp.mean_occupancy.max(1.0);
+        let churn_pen = 1.0 / (1.0 + params.churn_coeff * inp.churn);
+        let ob = ob_share * churn_pen;
+
+        let cpu_path = (lat * cont).max(1e-6);
+        let a = prof.bw_bound_frac;
+        let eff = 1.0 / ((1.0 - a) / cpu_path + a / bw.max(1e-6));
+        let perf = prof.base_rate() * c.vcpus * inp.util * eff * ob;
+
+        let ctx = params.ctx_penalty.powf((inp.mean_occupancy - 1.0).max(0.0));
+        let ipc = prof.base_ipc * eff * ctx;
+        let mpi = prof.base_mpi
+            * (1.0
+                + params.mpi_press_coeff * other_press
+                + params.mpi_pair_coeff * pair_pen
+                + 0.4 * (c.avg_dist / 10.0 - 1.0).min(4.0));
+
+        ModelOut { ipc, mpi, perf, factors: Factors { lat, cont, bw, ob } }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::perf_model::{self, VmView};
+    use crate::util::rng::Rng;
+    use crate::util::testkit::{prop_assert, propcheck};
+    use crate::workload::App;
+
+    fn close(a: f64, b: f64) -> bool {
+        (a - b).abs() <= 1e-9 * (1.0 + a.abs().max(b.abs()))
+    }
+
+    fn assert_outputs_match(inc: &[ModelOut], full: &[ModelOut]) -> Result<(), String> {
+        prop_assert(inc.len() == full.len(), "length mismatch")?;
+        for (k, (a, b)) in inc.iter().zip(full.iter()).enumerate() {
+            for (name, x, y) in [
+                ("perf", a.perf, b.perf),
+                ("ipc", a.ipc, b.ipc),
+                ("mpi", a.mpi, b.mpi),
+                ("lat", a.factors.lat, b.factors.lat),
+                ("cont", a.factors.cont, b.factors.cont),
+                ("bw", a.factors.bw, b.factors.bw),
+                ("ob", a.factors.ob, b.factors.ob),
+            ] {
+                prop_assert(close(x, y), format!("vm {k} {name}: {x} vs {y}"))?;
+            }
+        }
+        Ok(())
+    }
+
+    fn random_view(rng: &mut Rng, topo: &Topology) -> VmView {
+        let n = topo.num_nodes();
+        let app = *rng.choose(&App::ALL);
+        let mut p = vec![0.0; n];
+        let mut m = vec![0.0; n];
+        for f in rng.simplex(rng.range(1, 5)) {
+            p[rng.below(n)] += f;
+        }
+        for f in rng.simplex(rng.range(1, 4)) {
+            m[rng.below(n)] += f;
+        }
+        let norm = |v: &mut Vec<f64>| {
+            let s: f64 = v.iter().sum();
+            if s > 0.0 {
+                v.iter_mut().for_each(|x| *x /= s);
+            }
+        };
+        norm(&mut p);
+        norm(&mut m);
+        VmView {
+            p,
+            m,
+            vcpus: rng.range(1, 16),
+            util: rng.uniform(0.05, 1.0),
+            mean_occupancy: rng.uniform(1.0, 3.0),
+            churn: rng.uniform(0.0, 1.0),
+            profile: app.profile(),
+        }
+    }
+
+    /// Feed the same views to both evaluators and compare.
+    fn cross_check(
+        topo: &Topology,
+        params: &ModelParams,
+        inc: &mut IncrementalEvaluator,
+        views: &[(VmId, VmView)],
+    ) -> Result<(), String> {
+        let inputs: Vec<(VmId, TickInput)> = views
+            .iter()
+            .map(|(id, v)| {
+                (*id, TickInput { util: v.util, mean_occupancy: v.mean_occupancy, churn: v.churn })
+            })
+            .collect();
+        let got = inc.evaluate(params, &inputs);
+        let dense: Vec<VmView> = views.iter().map(|(_, v)| v.clone()).collect();
+        let want = perf_model::evaluate(topo, &dense, params);
+        assert_outputs_match(&got, &want)
+    }
+
+    #[test]
+    fn matches_full_evaluate_on_static_placements() {
+        let topo = Topology::paper();
+        let params = ModelParams::default();
+        propcheck("incremental == full (static)", 30, |rng| {
+            let mut inc = IncrementalEvaluator::new(&topo);
+            let views: Vec<(VmId, VmView)> = (0..rng.range(1, 10))
+                .map(|k| (VmId(k as u64 + 1), random_view(rng, &topo)))
+                .collect();
+            for (id, v) in &views {
+                inc.set_placement(&topo, *id, &v.p, &v.m, v.vcpus, v.profile.clone());
+            }
+            cross_check(&topo, &params, &mut inc, &views)
+        });
+    }
+
+    #[test]
+    fn matches_full_evaluate_across_churn_sequences() {
+        // The oracle test: placements, utilization draws, re-placements and
+        // destroys interleave arbitrarily; every tick both evaluators must
+        // agree within 1e-9.
+        let topo = Topology::tiny();
+        let params = ModelParams::default();
+        propcheck("incremental == full (churn)", 20, |rng| {
+            let mut inc = IncrementalEvaluator::new(&topo);
+            let mut views: Vec<(VmId, VmView)> = Vec::new();
+            let mut next_id = 0u64;
+            for _ in 0..30 {
+                // Mutate the population.
+                match rng.below(4) {
+                    0 => {
+                        next_id += 1;
+                        let id = VmId(next_id);
+                        let v = random_view(rng, &topo);
+                        inc.set_placement(&topo, id, &v.p, &v.m, v.vcpus, v.profile.clone());
+                        views.push((id, v));
+                    }
+                    1 if !views.is_empty() => {
+                        let k = rng.below(views.len());
+                        let (id, _) = views[k];
+                        let v = random_view(rng, &topo);
+                        inc.set_placement(&topo, id, &v.p, &v.m, v.vcpus, v.profile.clone());
+                        views[k].1 = v;
+                    }
+                    2 if !views.is_empty() => {
+                        let k = rng.below(views.len());
+                        let (id, _) = views.remove(k);
+                        inc.remove(id);
+                    }
+                    _ => {}
+                }
+                // Fresh per-tick utilization/occupancy/churn for everyone.
+                for (_, v) in views.iter_mut() {
+                    v.util = rng.uniform(0.05, 1.0);
+                    v.mean_occupancy = rng.uniform(1.0, 3.0);
+                    v.churn = rng.uniform(0.0, 1.0);
+                }
+                cross_check(&topo, &params, &mut inc, &views)?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn remove_fully_retracts_contributions() {
+        let topo = Topology::tiny();
+        let params = ModelParams::default();
+        let mut rng = Rng::new(7);
+        let mut inc = IncrementalEvaluator::new(&topo);
+        let a = random_view(&mut rng, &topo);
+        let b = random_view(&mut rng, &topo);
+        inc.set_placement(&topo, VmId(1), &a.p, &a.m, a.vcpus, a.profile.clone());
+        let solo = cross_check(&topo, &params, &mut inc, &[(VmId(1), a.clone())]);
+        assert!(solo.is_ok(), "{solo:?}");
+        inc.set_placement(&topo, VmId(2), &b.p, &b.m, b.vcpus, b.profile.clone());
+        inc.remove(VmId(2));
+        assert_eq!(inc.num_tracked(), 1);
+        // After add+remove of VM 2, VM 1 must evaluate as if alone.
+        let again = cross_check(&topo, &params, &mut inc, &[(VmId(1), a)]);
+        assert!(again.is_ok(), "{again:?}");
+    }
+}

@@ -11,17 +11,20 @@
 
 pub mod counters;
 pub mod events;
+pub mod incremental;
 pub mod linux_sched;
 pub mod perf_model;
 
 pub use counters::{CounterHistory, Factors, PerfSample};
 pub use events::{Event, EventTrace};
+pub use incremental::{IncrementalEvaluator, TickInput};
 pub use perf_model::{ModelOut, ModelParams, VmView};
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::coordinator::candidates::SlotMap;
 use crate::mem::{
     autonuma, MemConfig, MemPolicy, MigrationEngine, MigrationId, MigrationJob, PageMap,
 };
@@ -29,7 +32,7 @@ use crate::topology::{CpuId, NodeId, Topology};
 use crate::util::rng::Rng;
 use crate::vm::{Vm, VmId, VmState, VmType};
 use crate::workload::loadgen::LoadGen;
-use crate::workload::App;
+use crate::workload::{AnimalClass, App};
 use linux_sched::{LinuxScheduler, VanillaParams};
 
 /// Which host scheduler governs *floating* (unpinned) vCPUs.
@@ -55,6 +58,12 @@ pub struct SimConfig {
     pub history_cap: usize,
     /// Memory subsystem: page granularity, kernel policy, fabric scale.
     pub mem: MemConfig,
+    /// Evaluate the perf model through the dirty-tracked
+    /// [`IncrementalEvaluator`] (default).  `false` re-evaluates the world
+    /// from scratch every tick — the original O(V²·N + V·N²) path, kept as
+    /// the oracle for the equivalence property tests and as the baseline
+    /// the `scale` experiment measures against.
+    pub incremental: bool,
 }
 
 impl SimConfig {
@@ -67,6 +76,7 @@ impl SimConfig {
             vanilla: VanillaParams::default(),
             history_cap: 512,
             mem: MemConfig::default(),
+            incremental: true,
         }
     }
 
@@ -133,12 +143,23 @@ pub struct Simulator {
     solo_cache: std::cell::RefCell<std::collections::HashMap<(App, usize), f64>>,
     /// Structured event log (arrivals, migrations, remaps, ...).
     pub trace: EventTrace,
+    /// Persistent slot accounting, maintained on every pin/unpin/balance/
+    /// boot/destroy — the coordinator reads it instead of rebuilding
+    /// [`SlotMap::from_sim`] per decision.
+    slot_map: SlotMap,
+    /// VMs whose placement (`p`) or memory distribution (`m`) changed
+    /// since the evaluator last cached them.
+    dirty: BTreeSet<VmId>,
+    /// Dirty-tracked joint performance model.
+    inc: IncrementalEvaluator,
 }
 
 impl Simulator {
     pub fn new(topo: Topology, cfg: SimConfig) -> Self {
         let sched = LinuxScheduler::new(&topo, cfg.vanilla.clone());
         let rng = Rng::new(cfg.seed);
+        let slot_map = SlotMap::empty(&topo);
+        let inc = IncrementalEvaluator::new(&topo);
         Self {
             topo,
             cfg,
@@ -150,6 +171,9 @@ impl Simulator {
             rng,
             solo_cache: Default::default(),
             trace: EventTrace::default(),
+            slot_map,
+            dirty: BTreeSet::new(),
+            inc,
         }
     }
 
@@ -208,17 +232,19 @@ impl Simulator {
     /// unless the coordinator placed it explicitly beforehand.
     pub fn start(&mut self, id: VmId) -> Result<()> {
         self.sync_sched_load();
-        let topo = self.topo.clone();
         let mut rng = self.rng.fork(id.0 ^ 0xBEEF);
         let mvm = self.vms.get_mut(&id).ok_or_else(|| anyhow!("no such vm {id}"))?;
         if mvm.vm.state == VmState::Running {
             bail!("{id} already running");
         }
+        let class = mvm.vm.app.profile().class;
         for (i, pin) in mvm.vm.vcpu_pins.clone().iter().enumerate() {
-            mvm.vcpu_pos[i] = Some(match pin {
+            let cpu = match pin {
                 Some(cpu) => *cpu,
                 None => self.sched.place_thread(&mut rng),
-            });
+            };
+            mvm.vcpu_pos[i] = Some(cpu);
+            self.slot_map.occupy(cpu, class);
         }
         if mvm.vm.mem_gb_per_node.is_empty() {
             // First-touch memory policy: most pages are faulted in by the
@@ -227,9 +253,9 @@ impl Simulator {
             // kernel behaviour the paper's vanilla baseline inherits; only
             // the AutoNUMA policy or an explicit migration revisits it.
             const BOOT_SKEW: f64 = 0.6;
-            let mut fractions = mvm.placement_fractions(&topo);
+            let mut fractions = mvm.placement_fractions(&self.topo);
             if let Some(boot_cpu) = mvm.vcpu_pos[0] {
-                let boot_node = topo.node_of_cpu(boot_cpu).0;
+                let boot_node = self.topo.node_of_cpu(boot_cpu).0;
                 fractions.iter_mut().for_each(|f| *f *= 1.0 - BOOT_SKEW);
                 fractions[boot_node] += BOOT_SKEW;
             }
@@ -243,6 +269,7 @@ impl Simulator {
             mvm.vm.mem_gb_per_node = mvm.pages.to_dist();
         }
         mvm.vm.state = VmState::Running;
+        self.dirty.insert(id);
         self.trace.push(self.tick, Event::Booted { vm: id });
         Ok(())
     }
@@ -257,12 +284,23 @@ impl Simulator {
             if vcpu >= mvm.vm.vcpus() {
                 bail!("{id} has no vcpu {vcpu}");
             }
-            let moved = mvm.vcpu_pos[vcpu].is_some_and(|cur| cur != cpu);
+            let prev = mvm.vcpu_pos[vcpu];
+            let moved = prev.is_some_and(|cur| cur != cpu);
             mvm.vm.vcpu_pins[vcpu] = Some(cpu);
             if mvm.vm.state == VmState::Running {
                 mvm.vcpu_pos[vcpu] = Some(cpu);
                 if moved {
                     mvm.churn += 1.0 / mvm.vm.vcpus() as f64;
+                }
+                // Keep the persistent slot map and the evaluator's dirty
+                // set in sync with the position change.
+                if prev != Some(cpu) {
+                    let class = mvm.vm.app.profile().class;
+                    if let Some(prev) = prev {
+                        self.slot_map.release(prev, class);
+                    }
+                    self.slot_map.occupy(cpu, class);
+                    self.dirty.insert(id);
                 }
             }
             mvm.vm.state == VmState::Running
@@ -335,6 +373,7 @@ impl Simulator {
             // Cold placement: no guest to stall, apply instantly.
             mvm.pages.place(dist);
             mvm.vm.mem_gb_per_node = mvm.pages.to_dist();
+            self.dirty.insert(id);
             return Ok(None);
         }
 
@@ -356,7 +395,15 @@ impl Simulator {
 
     /// Destroy (libvirt `destroy` + `undefine`).
     pub fn destroy(&mut self, id: VmId) -> Result<()> {
-        self.vms.remove(&id).ok_or_else(|| anyhow!("no such vm {id}"))?;
+        let mvm = self.vms.remove(&id).ok_or_else(|| anyhow!("no such vm {id}"))?;
+        if mvm.vm.state == VmState::Running {
+            let class = mvm.vm.app.profile().class;
+            for pos in mvm.vcpu_pos.iter().flatten() {
+                self.slot_map.release(*pos, class);
+            }
+        }
+        self.dirty.remove(&id);
+        self.inc.remove(id);
         self.migrations.cancel_vm(id);
         self.sync_sched_load();
         self.trace.push(self.tick, Event::Destroyed { vm: id });
@@ -417,6 +464,9 @@ impl Simulator {
             if let Some(mvm) = self.vms.get_mut(&c.vm) {
                 mvm.pages.set_owner(c.chunk, c.to);
                 mvm.pages.clear_in_flight(c.chunk);
+                // Ownership moved -> the heat-weighted memory distribution
+                // this VM feeds the perf model changed.
+                self.dirty.insert(c.vm);
             }
         }
         for (vm, gb) in &outcome.gb_moved {
@@ -452,7 +502,7 @@ impl Simulator {
         let ids: Vec<VmId> = self.vms.keys().copied().collect();
         for id in &ids {
             // Split borrows: temporarily move positions out.
-            let (mut floating, idxs): (Vec<CpuId>, Vec<usize>) = {
+            let (mut floating, idxs, class): (Vec<CpuId>, Vec<usize>, AnimalClass) = {
                 let mvm = &self.vms[id];
                 if mvm.vm.state != VmState::Running {
                     continue;
@@ -467,14 +517,24 @@ impl Simulator {
                         }
                     }
                 }
-                (cpus, idxs)
+                (cpus, idxs, mvm.vm.app.profile().class)
             };
             let mut rng = self.rng.fork(tick.wrapping_mul(31).wrapping_add(id.0));
+            let before = floating.clone();
             let moved = if floating.is_empty() {
                 0
             } else {
                 self.sched.balance(&mut floating, &mut rng)
             };
+            if moved > 0 {
+                for (old, new) in before.iter().zip(floating.iter()) {
+                    if old != new {
+                        self.slot_map.release(*old, class);
+                        self.slot_map.occupy(*new, class);
+                    }
+                }
+                self.dirty.insert(*id);
+            }
             let mvm = self.vms.get_mut(id).unwrap();
             for (k, i) in idxs.iter().enumerate() {
                 mvm.vcpu_pos[*i] = Some(floating[k]);
@@ -496,7 +556,9 @@ impl Simulator {
             }
         }
 
-        // 3. Build views and evaluate the model jointly.
+        // 3. Evaluate the model jointly over all running VMs: through the
+        // dirty-tracked incremental evaluator (default), or from scratch
+        // (the oracle / pre-refactor baseline).
         let running: Vec<VmId> = self
             .vms
             .iter()
@@ -504,35 +566,76 @@ impl Simulator {
             .map(|(id, _)| *id)
             .collect();
         let occupancy = self.occupancy();
-        let views: Vec<VmView> = running
-            .iter()
-            .map(|id| {
-                let mvm = &self.vms[id];
-                let p = mvm.placement_fractions(&self.topo);
-                // Access-weighted page distribution: a partially migrated
-                // VM whose hot set already arrived performs accordingly.
-                let m = mvm.pages.heat_fractions(self.topo.num_nodes());
-                let mean_occ = {
-                    let occs: Vec<f64> = mvm
-                        .vcpu_pos
-                        .iter()
-                        .flatten()
-                        .map(|c| occupancy[c.0] as f64)
-                        .collect();
-                    if occs.is_empty() { 1.0 } else { occs.iter().sum::<f64>() / occs.len() as f64 }
-                };
-                VmView {
-                    p,
-                    m,
-                    vcpus: mvm.vm.vcpus(),
-                    util: mvm.util,
-                    mean_occupancy: mean_occ,
-                    churn: mvm.churn.min(1.0),
-                    profile: mvm.vm.app.profile(),
+        let mean_occ_of = |mvm: &ManagedVm| -> f64 {
+            let mut sum = 0.0;
+            let mut cnt = 0usize;
+            for pos in mvm.vcpu_pos.iter().flatten() {
+                sum += occupancy[pos.0] as f64;
+                cnt += 1;
+            }
+            if cnt == 0 {
+                1.0
+            } else {
+                sum / cnt as f64
+            }
+        };
+        let outs = if self.cfg.incremental {
+            // Re-cache only what changed since the last tick.
+            let dirty = std::mem::take(&mut self.dirty);
+            for id in dirty {
+                match self.vms.get(&id) {
+                    Some(mvm) if mvm.vm.state == VmState::Running => {
+                        let p = mvm.placement_fractions(&self.topo);
+                        // Access-weighted page distribution: a partially
+                        // migrated VM whose hot set already arrived
+                        // performs accordingly.
+                        let m = mvm.pages.heat_fractions(self.topo.num_nodes());
+                        self.inc.set_placement(
+                            &self.topo,
+                            id,
+                            &p,
+                            &m,
+                            mvm.vm.vcpus(),
+                            mvm.vm.app.profile(),
+                        );
+                    }
+                    Some(_) => {}
+                    None => self.inc.remove(id),
                 }
-            })
-            .collect();
-        let outs = perf_model::evaluate(&self.topo, &views, &self.cfg.model);
+            }
+            let inputs: Vec<(VmId, TickInput)> = running
+                .iter()
+                .map(|id| {
+                    let mvm = &self.vms[id];
+                    (
+                        *id,
+                        TickInput {
+                            util: mvm.util,
+                            mean_occupancy: mean_occ_of(mvm),
+                            churn: mvm.churn.min(1.0),
+                        },
+                    )
+                })
+                .collect();
+            self.inc.evaluate(&self.cfg.model, &inputs)
+        } else {
+            let views: Vec<VmView> = running
+                .iter()
+                .map(|id| {
+                    let mvm = &self.vms[id];
+                    VmView {
+                        p: mvm.placement_fractions(&self.topo),
+                        m: mvm.pages.heat_fractions(self.topo.num_nodes()),
+                        vcpus: mvm.vm.vcpus(),
+                        util: mvm.util,
+                        mean_occupancy: mean_occ_of(mvm),
+                        churn: mvm.churn.min(1.0),
+                        profile: mvm.vm.app.profile(),
+                    }
+                })
+                .collect();
+            perf_model::evaluate(&self.topo, &views, &self.cfg.model)
+        };
 
         // 4. Synthesize noisy counters + reset churn.
         let sigma = self.cfg.noise_sigma;
@@ -595,6 +698,39 @@ impl Simulator {
             }
         }
         map
+    }
+
+    /// The persistent slot map — maintained incrementally on every
+    /// pin/unpin/balance/boot/destroy, always equal to
+    /// [`SlotMap::from_sim`]`(self, None)` (property-tested) without the
+    /// O(VMs × vCPUs) rebuild.
+    pub fn slots(&self) -> &SlotMap {
+        &self.slot_map
+    }
+
+    /// Run `f` over the slot map as if `id` were absent — how the
+    /// coordinator generates remap candidates for a VM without paying a
+    /// rebuild or a copy.  Uses the journal: release the VM's slots,
+    /// evaluate `f`, revert.
+    pub fn with_vm_released<R>(
+        &mut self,
+        id: VmId,
+        f: impl FnOnce(&Topology, &SlotMap) -> R,
+    ) -> R {
+        let released: Vec<(CpuId, AnimalClass)> = match self.vms.get(&id) {
+            Some(mvm) if mvm.vm.state == VmState::Running => {
+                let class = mvm.vm.app.profile().class;
+                mvm.vcpu_pos.iter().flatten().map(|c| (*c, class)).collect()
+            }
+            _ => Vec::new(),
+        };
+        let cp = self.slot_map.checkpoint();
+        for (cpu, class) in &released {
+            self.slot_map.release(*cpu, *class);
+        }
+        let out = f(&self.topo, &self.slot_map);
+        self.slot_map.revert(cp);
+        out
     }
 
     /// Number of page-migration jobs still draining.
@@ -882,6 +1018,84 @@ mod tests {
         };
         assert_eq!(run(42), run(42));
         assert_ne!(run(42), run(43));
+    }
+
+    #[test]
+    fn persistent_slot_map_matches_rebuild_under_churn() {
+        // Scheduler drift, explicit re-pins and a destroy: the
+        // incrementally maintained slot map must equal a from-scratch
+        // rebuild at every tick.
+        let mut s = sim(SchedulerKind::Vanilla, 31);
+        let a = s.create(VmType::Medium, App::Derby);
+        s.start(a).unwrap();
+        let b = s.create(VmType::Small, App::Fft);
+        s.start(b).unwrap();
+        for t in 0..30 {
+            s.step();
+            if t == 10 {
+                s.pin_all(b, &(40..44).map(CpuId).collect::<Vec<_>>()).unwrap();
+            }
+            if t == 20 {
+                s.destroy(a).unwrap();
+            }
+            let rebuilt = crate::coordinator::candidates::SlotMap::from_sim(&s, None);
+            assert!(s.slots().same_state(&rebuilt), "slot map diverged at tick {t}");
+        }
+    }
+
+    #[test]
+    fn with_vm_released_matches_from_sim_skip_and_reverts() {
+        let mut s = sim(SchedulerKind::Pinned, 32);
+        let a = s.create(VmType::Small, App::Derby);
+        pin_local(&mut s, a, 0);
+        s.start(a).unwrap();
+        let b = s.create(VmType::Small, App::Stream);
+        pin_local(&mut s, b, 8);
+        s.start(b).unwrap();
+        let skipped = crate::coordinator::candidates::SlotMap::from_sim(&s, Some(a));
+        let (free_during, matches) =
+            s.with_vm_released(a, |_, slots| (slots.total_free(), slots.same_state(&skipped)));
+        assert!(matches, "released view must equal from_sim(skip)");
+        assert_eq!(free_during, s.topo.num_cpus() - 4);
+        assert_eq!(s.slots().total_free(), s.topo.num_cpus() - 8, "revert must restore");
+    }
+
+    #[test]
+    fn incremental_and_full_evaluators_agree_in_sim() {
+        // Same seed, same trace of operations; only the evaluator differs.
+        // Outputs must match to float-rounding level (the oracle check at
+        // the whole-simulator altitude; the pure-model version lives in
+        // sim::incremental and tests/properties.rs).
+        let run = |incremental: bool| {
+            let mut cfg = SimConfig::vanilla(77);
+            cfg.incremental = incremental;
+            let mut s = Simulator::new(Topology::paper(), cfg);
+            let a = s.create(VmType::Medium, App::Stream);
+            s.start(a).unwrap();
+            let b = s.create(VmType::Small, App::Neo4j);
+            s.start(b).unwrap();
+            let mut out = Vec::new();
+            for t in 0..25 {
+                if t == 5 {
+                    s.place_memory(a, &[(NodeId(24), 1.0)]).unwrap();
+                }
+                if t == 12 {
+                    s.pin_all(b, &(16..20).map(CpuId).collect::<Vec<_>>()).unwrap();
+                }
+                for (_, smp) in s.step() {
+                    out.push(smp.perf);
+                    out.push(smp.ipc);
+                    out.push(smp.mpi);
+                }
+            }
+            out
+        };
+        let inc = run(true);
+        let full = run(false);
+        assert_eq!(inc.len(), full.len());
+        for (x, y) in inc.iter().zip(full.iter()) {
+            assert!((x - y).abs() <= 1e-9 * (1.0 + x.abs()), "{x} vs {y}");
+        }
     }
 
     #[test]

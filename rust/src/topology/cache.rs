@@ -2,8 +2,46 @@
 //! which cache level.  The contention model charges interference within the
 //! LLC (L3) domain — one per NUMA node on the testbed — and lighter
 //! interference within the L2 (per-core) domain.
+//!
+//! Also hosts [`DistanceWalks`], the precomputed distance-ordered node
+//! walks the coordinator's proximity fills and the solo-ideal spread
+//! consume on every placement decision — sorting the SLIT row once per
+//! anchor at topology build time instead of on every fill.
 
 use super::{CoreId, CpuId, NodeId, Topology};
+
+/// Precomputed `nodes_by_distance` walks: for every anchor node, all nodes
+/// sorted by SLIT distance from it (self first, ties by node id).  Built
+/// once per [`Topology`]; O(N² log N) at construction, O(1) per lookup.
+#[derive(Debug, Clone)]
+pub struct DistanceWalks {
+    walks: Vec<Vec<NodeId>>,
+}
+
+impl DistanceWalks {
+    /// Build from a dense distance matrix (`distance[i][j]`).
+    pub fn build(distance: &[Vec<f64>]) -> Self {
+        let n = distance.len();
+        let walks = (0..n)
+            .map(|from| {
+                let mut nodes: Vec<NodeId> = (0..n).map(NodeId).collect();
+                nodes.sort_by(|a, b| {
+                    distance[from][a.0]
+                        .partial_cmp(&distance[from][b.0])
+                        .unwrap()
+                        .then(a.0.cmp(&b.0))
+                });
+                nodes
+            })
+            .collect();
+        Self { walks }
+    }
+
+    /// The walk anchored at `from`.
+    pub fn walk(&self, from: NodeId) -> &[NodeId] {
+        &self.walks[from.0]
+    }
+}
 
 /// A cache level with a sharing domain.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -86,5 +124,23 @@ mod tests {
         let t = Topology::paper();
         assert_eq!(capacity_kib(&t, CacheLevel::L2), 2048.0);
         assert_eq!(capacity_kib(&t, CacheLevel::L3), 6144.0);
+    }
+
+    #[test]
+    fn distance_walks_match_fresh_sort() {
+        let t = Topology::paper();
+        let walks = DistanceWalks::build(t.distance_matrix());
+        for from in [0usize, 13, 35] {
+            let cached = walks.walk(NodeId(from));
+            let mut fresh: Vec<NodeId> = (0..t.num_nodes()).map(NodeId).collect();
+            fresh.sort_by(|a, b| {
+                t.distance(NodeId(from), *a)
+                    .partial_cmp(&t.distance(NodeId(from), *b))
+                    .unwrap()
+                    .then(a.0.cmp(&b.0))
+            });
+            assert_eq!(cached, fresh.as_slice());
+            assert_eq!(cached[0], NodeId(from), "walk must start at the anchor");
+        }
     }
 }

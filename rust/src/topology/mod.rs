@@ -150,13 +150,15 @@ impl TopologySpec {
     }
 }
 
-/// A fully-built topology: index maps plus the node distance matrix.
+/// A fully-built topology: index maps plus the node distance matrix and
+/// the precomputed distance-ordered walks the proximity fills consume.
 #[derive(Debug, Clone)]
 pub struct Topology {
     pub spec: TopologySpec,
     /// `distance[i][j]` — SLIT distance between NUMA nodes i and j.
     distance: Vec<Vec<f64>>,
     torus: Torus,
+    walks: cache::DistanceWalks,
 }
 
 impl Topology {
@@ -174,7 +176,8 @@ impl Topology {
                 distance[i][j] = distance::node_distance(&spec, &torus, i, j);
             }
         }
-        Self { spec, distance, torus }
+        let walks = cache::DistanceWalks::build(&distance);
+        Self { spec, distance, torus, walks }
     }
 
     pub fn paper() -> Self {
@@ -280,16 +283,10 @@ impl Topology {
     }
 
     /// Nodes sorted by distance from `from` (self first) — the
-    /// coordinator's proximity-ordered allocation walk.
-    pub fn nodes_by_distance(&self, from: NodeId) -> Vec<NodeId> {
-        let mut nodes: Vec<NodeId> = (0..self.num_nodes()).map(NodeId).collect();
-        nodes.sort_by(|a, b| {
-            self.distance(from, *a)
-                .partial_cmp(&self.distance(from, *b))
-                .unwrap()
-                .then(a.0.cmp(&b.0))
-        });
-        nodes
+    /// coordinator's proximity-ordered allocation walk.  Precomputed at
+    /// build time ([`cache::DistanceWalks`]); no per-call sort.
+    pub fn nodes_by_distance(&self, from: NodeId) -> &[NodeId] {
+        self.walks.walk(from)
     }
 
     /// `lscpu`-style summary — regenerates the paper's Table 1.

@@ -4,7 +4,12 @@
 //!
 //! Output format is one line per benchmark:
 //! `bench <name> ... iters=N mean=… p50=… p99=… min=…`
+//!
+//! [`write_json`] additionally emits the collected results as a
+//! machine-readable JSON file (e.g. `BENCH_hotpath.json` at the repo
+//! root), so the perf trajectory is recorded across PRs.
 
+use std::path::Path;
 use std::time::{Duration, Instant};
 
 use super::stats;
@@ -60,6 +65,34 @@ impl BenchResult {
             fmt_dur(self.min()),
         )
     }
+}
+
+/// Serialize results as JSON (hand-rolled; no serde offline).  Names are
+/// expected to be plain `a/b/c` identifiers; quotes/backslashes are
+/// escaped defensively.
+pub fn to_json(results: &[BenchResult]) -> String {
+    let esc = |s: &str| s.replace('\\', "\\\\").replace('"', "\\\"");
+    let mut out = String::from("{\n  \"benchmarks\": [\n");
+    for (k, r) in results.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"name\": \"{}\", \"iters\": {}, \"mean_s\": {:.9}, \
+             \"p50_s\": {:.9}, \"p99_s\": {:.9}, \"min_s\": {:.9}}}{}\n",
+            esc(&r.name),
+            r.samples.len(),
+            r.mean(),
+            r.p50(),
+            r.p99(),
+            r.min(),
+            if k + 1 == results.len() { "" } else { "," },
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
+/// Write [`to_json`] to `path`.
+pub fn write_json(path: &Path, results: &[BenchResult]) -> std::io::Result<()> {
+    std::fs::write(path, to_json(results))
 }
 
 /// Render seconds with an adaptive unit.
@@ -150,6 +183,22 @@ mod tests {
         assert!((res.mean() - 2.0).abs() < 1e-12);
         assert_eq!(res.min(), 1.0);
         assert_eq!(res.p50(), 2.0);
+    }
+
+    #[test]
+    fn json_output_is_well_formed() {
+        let results = vec![
+            BenchResult { name: "a/b".into(), samples: vec![1.0, 2.0] },
+            BenchResult { name: "c\"d".into(), samples: vec![0.5] },
+        ];
+        let json = to_json(&results);
+        assert!(json.contains("\"benchmarks\""));
+        assert!(json.contains("\"a/b\""));
+        assert!(json.contains("c\\\"d"), "quote must be escaped: {json}");
+        assert!(json.contains("\"iters\": 2"));
+        // One comma between the two entries, none after the last.
+        assert_eq!(json.matches("},").count(), 1);
+        assert!(json.trim_end().ends_with('}'));
     }
 
     #[test]

@@ -1,12 +1,19 @@
 //! A small scoped thread pool (the offline registry has no tokio/rayon).
 //!
-//! Used to parallelize independent experiment repetitions and the
-//! coordinator's candidate generation.  Jobs are closures sent over an
-//! mpsc channel to a fixed set of workers; `scope_map` provides the
-//! common fork-join pattern.
+//! Used to parallelize independent experiment repetitions
+//! ([`crate::experiments::harness::run_many`]) and the native scorer's
+//! candidate batches ([`crate::runtime::native`]).  Jobs are closures sent
+//! over an mpsc channel to a fixed set of workers; `scope_map` provides
+//! the common fork-join pattern.
+//!
+//! [`global`] exposes a process-wide pool for *top-level* fan-out (one
+//! experiment repetition per job).  Nested work (e.g. batch scoring inside
+//! a repetition) must use a separate pool — blocking a `global` worker on
+//! jobs queued behind other `global` jobs would deadlock — which is why
+//! the scorer keeps its own ([`crate::runtime::native::score_batch_parallel`]).
 
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
 use std::thread;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
@@ -16,10 +23,17 @@ enum Msg {
     Shutdown,
 }
 
-/// Fixed-size thread pool.
+/// Fixed-size thread pool.  `Sync`: the sender side is mutex-guarded, so
+/// a `static` pool can be shared across experiment threads.
 pub struct ThreadPool {
-    tx: mpsc::Sender<Msg>,
+    tx: Mutex<mpsc::Sender<Msg>>,
     workers: Vec<thread::JoinHandle<()>>,
+}
+
+/// Process-wide pool for top-level experiment fan-out.
+pub fn global() -> &'static ThreadPool {
+    static GLOBAL: OnceLock<ThreadPool> = OnceLock::new();
+    GLOBAL.get_or_init(ThreadPool::default_size)
 }
 
 impl ThreadPool {
@@ -43,7 +57,7 @@ impl ThreadPool {
                     .expect("spawn pool worker")
             })
             .collect();
-        Self { tx, workers }
+        Self { tx: Mutex::new(tx), workers }
     }
 
     /// Pool sized to the machine (#cpus, capped at 16).
@@ -52,9 +66,15 @@ impl ThreadPool {
         Self::new(n.min(16))
     }
 
+    /// Number of worker threads.
+    pub fn workers(&self) -> usize {
+        self.workers.len()
+    }
+
     /// Submit a fire-and-forget job.
     pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
-        self.tx.send(Msg::Run(Box::new(f))).expect("pool closed");
+        let tx = self.tx.lock().expect("pool sender poisoned");
+        tx.send(Msg::Run(Box::new(f))).expect("pool closed");
     }
 
     /// Map `f` over `items` in parallel, preserving order.
@@ -87,8 +107,10 @@ impl ThreadPool {
 
 impl Drop for ThreadPool {
     fn drop(&mut self) {
-        for _ in &self.workers {
-            let _ = self.tx.send(Msg::Shutdown);
+        if let Ok(tx) = self.tx.lock() {
+            for _ in &self.workers {
+                let _ = tx.send(Msg::Shutdown);
+            }
         }
         for w in self.workers.drain(..) {
             let _ = w.join();
@@ -127,5 +149,21 @@ mod tests {
         let pool = ThreadPool::new(1);
         let out = pool.scope_map(vec![1, 2, 3], |x: i32| x + 1);
         assert_eq!(out, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn global_pool_is_shared_and_usable() {
+        let out = global().scope_map((0..20).collect(), |x: usize| x * 3);
+        assert_eq!(out, (0..20).map(|x| x * 3).collect::<Vec<_>>());
+        assert!(global().workers() >= 1);
+        // Usable from several threads at once (Sync).
+        let handles: Vec<_> = (0..4)
+            .map(|k| {
+                thread::spawn(move || global().scope_map(vec![k], |x: usize| x + 1))
+            })
+            .collect();
+        for (k, h) in handles.into_iter().enumerate() {
+            assert_eq!(h.join().unwrap(), vec![k + 1]);
+        }
     }
 }

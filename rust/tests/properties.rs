@@ -314,6 +314,129 @@ fn autonuma_remote_fraction_non_increasing_under_stable_pinning() {
 }
 
 #[test]
+fn incremental_perf_model_matches_full_recompute() {
+    // The oracle property behind the dirty-tracked evaluator: over
+    // arbitrary placement / memory-migration / churn sequences, a
+    // simulator using the incremental evaluator produces the same
+    // samples (within 1e-9) as one re-evaluating from scratch each tick.
+    #[derive(Clone, Copy)]
+    enum Op {
+        Spawn(VmType, App),
+        Pin { vm: usize, first_cpu: usize },
+        Migrate { vm: usize, node: usize, budget_gb: f64 },
+        Destroy { vm: usize },
+    }
+
+    propcheck("incremental == full over random op sequences", 6, |rng| {
+        let seed = rng.next_u64();
+        // Fixed op plan, applied identically to both simulators.
+        let plan: Vec<Op> = (0..12)
+            .map(|_| match rng.below(5) {
+                0 | 1 => Op::Spawn(
+                    *rng.choose(&[VmType::Small, VmType::Medium]),
+                    *rng.choose(&App::ALL),
+                ),
+                2 => Op::Pin { vm: rng.below(8), first_cpu: rng.below(288 - 16) },
+                3 => Op::Migrate {
+                    vm: rng.below(8),
+                    node: rng.below(36),
+                    budget_gb: rng.uniform(1.0, 16.0),
+                },
+                _ => Op::Destroy { vm: rng.below(8) },
+            })
+            .collect();
+
+        let run = |incremental: bool| -> Vec<f64> {
+            let mut cfg = SimConfig::vanilla(seed);
+            cfg.incremental = incremental;
+            let mut sim = Simulator::new(Topology::paper(), cfg);
+            let mut ids = Vec::new();
+            let mut out = Vec::new();
+            for op in &plan {
+                match *op {
+                    Op::Spawn(vm_type, app) => {
+                        let id = sim.create(vm_type, app);
+                        sim.start(id).unwrap();
+                        ids.push(id);
+                    }
+                    Op::Pin { vm, first_cpu } if !ids.is_empty() => {
+                        let id = ids[vm % ids.len()];
+                        let n = sim.get(id).unwrap().vm.vcpus();
+                        let cpus: Vec<CpuId> =
+                            (first_cpu..first_cpu + n).map(CpuId).collect();
+                        sim.pin_all(id, &cpus).unwrap();
+                    }
+                    Op::Migrate { vm, node, budget_gb } if !ids.is_empty() => {
+                        let id = ids[vm % ids.len()];
+                        sim.migrate_memory_toward(id, &[(NodeId(node), 1.0)], budget_gb)
+                            .unwrap();
+                    }
+                    Op::Destroy { vm } if !ids.is_empty() => {
+                        let id = ids.remove(vm % ids.len());
+                        sim.destroy(id).unwrap();
+                    }
+                    _ => {}
+                }
+                for _ in 0..3 {
+                    for (_, s) in sim.step() {
+                        out.push(s.perf);
+                        out.push(s.ipc);
+                        out.push(s.mpi);
+                        out.push(s.factors.lat);
+                        out.push(s.factors.bw);
+                    }
+                }
+            }
+            out
+        };
+        let inc = run(true);
+        let full = run(false);
+        prop_assert(inc.len() == full.len(), "sample count diverged")?;
+        for (k, (x, y)) in inc.iter().zip(full.iter()).enumerate() {
+            prop_assert(
+                (x - y).abs() <= 1e-9 * (1.0 + x.abs().max(y.abs())),
+                format!("sample {k}: incremental {x} vs full {y}"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn persistent_slot_map_always_matches_rebuild() {
+    // Under arbitrary mapper-driven churn the simulator's incrementally
+    // maintained slot map equals a from-scratch rebuild.
+    propcheck("slots() == from_sim()", 8, |rng| {
+        let mut sim = Simulator::new(Topology::paper(), SimConfig::pinned(rng.next_u64()));
+        let mut mapper = SmMapper::new(MapperConfig::new(Metric::Ipc), Scorer::Native);
+        let mut ids: Vec<dvrm::vm::VmId> = Vec::new();
+        for step in 0..8 {
+            if rng.chance(0.7) {
+                let vm_type = *rng.choose(&[VmType::Small, VmType::Medium]);
+                let id = sim.create(vm_type, *rng.choose(&App::ALL));
+                if mapper.place_arrival(&mut sim, id).is_ok() {
+                    sim.start(id).unwrap();
+                    ids.push(id);
+                } else {
+                    sim.destroy(id).unwrap();
+                }
+            } else if !ids.is_empty() {
+                let id = ids.remove(rng.below(ids.len()));
+                sim.destroy(id).unwrap();
+            }
+            sim.step();
+            mapper.interval(&mut sim).unwrap();
+            let rebuilt = SlotMap::from_sim(&sim, None);
+            prop_assert(
+                sim.slots().same_state(&rebuilt),
+                format!("slot map diverged from rebuild at step {step}"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn mapper_random_trace_invariants() {
     // Under arbitrary admissible traces the SM mapper must (a) never
     // overbook and (b) keep every placed VM fully pinned.
