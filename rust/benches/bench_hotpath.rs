@@ -55,9 +55,15 @@ fn batch(meta: Meta, len: usize, vms: usize, seed: u64) -> CandidateBatch {
 }
 
 fn main() {
-    println!("== dvrm bench_hotpath ==");
+    // `--quick` (or DVRM_BENCH_QUICK=1): fewer iterations and only the
+    // small scale config — the CI regression gate's mode.  Benchmark
+    // *names* are a stable subset of the full run, so quick results stay
+    // comparable against a committed full or quick baseline.
+    let quick = std::env::args().any(|a| a == "--quick")
+        || std::env::var("DVRM_BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+    println!("== dvrm bench_hotpath{} ==", if quick { " (quick)" } else { "" });
     let mut results: Vec<BenchResult> = Vec::new();
-    let bench = Bench::new(3, 30);
+    let bench = if quick { Bench::new(2, 10) } else { Bench::new(3, 30) };
     let topo = Topology::paper();
     let prob = problem(&topo, 20);
 
@@ -155,27 +161,44 @@ fn main() {
     // (100 servers / 5000 VMs) is the ROADMAP-scale point the incremental
     // core exists for.  Recorded as seconds-per-tick.
     // (name, servers, torus, vms, ticks, also_time_full)
-    let scales = [
-        ("small/6srv/60vms", 6, (3, 2), 60, 30, true),
-        ("medium/24srv/500vms", 24, (6, 4), 500, 15, true),
-        ("large/100srv/1200vms", 100, (10, 10), 1200, 10, true),
-        ("xlarge/100srv/5000vms", 100, (10, 10), 5000, 8, false),
-    ];
-    for (name, servers, torus, vms, ticks, full_too) in scales {
+    let scales: &[(&str, usize, (usize, usize), usize, u64, bool)] = if quick {
+        &[("small/6srv/60vms", 6, (3, 2), 60, 15, true)]
+    } else {
+        &[
+            ("small/6srv/60vms", 6, (3, 2), 60, 30, true),
+            ("medium/24srv/500vms", 24, (6, 4), 500, 15, true),
+            ("large/100srv/1200vms", 100, (10, 10), 1200, 10, true),
+            ("xlarge/100srv/5000vms", 100, (10, 10), 5000, 8, false),
+        ]
+    };
+    // Quick mode is the CI gate's input: take several repetitions so the
+    // gate's min_s statistic can absorb shared-runner noise.
+    let scale_reps = if quick { 3 } else { 1 };
+    for &(name, servers, torus, vms, ticks, full_too) in scales {
         let spec = scale_spec(servers, torus);
-        let tps = run_scale_config(spec.clone(), vms, ticks, true, 7).unwrap();
-        let inc = BenchResult {
-            name: format!("sim/tick/incremental/{name}"),
-            samples: vec![1.0 / tps.max(1e-12)],
-        };
+        let inc_samples: Vec<f64> = (0..scale_reps)
+            .map(|_| {
+                let tps = run_scale_config(spec.clone(), vms, ticks, true, 7).unwrap();
+                1.0 / tps.max(1e-12)
+            })
+            .collect();
+        let tps = 1.0 / inc_samples.iter().cloned().fold(f64::INFINITY, f64::min);
+        let inc =
+            BenchResult { name: format!("sim/tick/incremental/{name}"), samples: inc_samples };
         println!("{}", inc.report());
         results.push(inc);
         if full_too {
-            let tps_full = run_scale_config(spec, vms, full_eval_ticks(vms), false, 7).unwrap();
-            let full = BenchResult {
-                name: format!("sim/tick/full/{name}"),
-                samples: vec![1.0 / tps_full.max(1e-12)],
-            };
+            let full_samples: Vec<f64> = (0..scale_reps)
+                .map(|_| {
+                    let t =
+                        run_scale_config(spec.clone(), vms, full_eval_ticks(vms), false, 7)
+                            .unwrap();
+                    1.0 / t.max(1e-12)
+                })
+                .collect();
+            let tps_full = 1.0 / full_samples.iter().cloned().fold(f64::INFINITY, f64::min);
+            let full =
+                BenchResult { name: format!("sim/tick/full/{name}"), samples: full_samples };
             println!("{}  (speedup {:.1}x)", full.report(), tps / tps_full.max(1e-12));
             results.push(full);
         }

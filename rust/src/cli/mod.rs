@@ -5,9 +5,10 @@
 //! dvrm topo                         # Table 1 + latency hierarchy
 //! dvrm experiment <id>|all [opts]   # regenerate paper tables/figures
 //! dvrm run [opts]                   # end-to-end cluster demo (3 algorithms)
+//! dvrm scenarios [opts]             # dynamic scenario suite (churn, drain, ...)
 //! dvrm list                         # known experiment ids
 //! options: --seed N --ticks N --repeats N --fast --scorer auto|native
-//!          --csv DIR
+//!          --csv DIR --suite smoke|full --json PATH
 //! ```
 
 pub mod args;
@@ -24,6 +25,7 @@ pub fn main_with(argv: &[String]) -> Result<i32> {
         Some("topo") => cmd_topo(),
         Some("experiment") => cmd_experiment(&parsed),
         Some("run") => cmd_run(&parsed),
+        Some("scenarios") => cmd_scenarios(&parsed),
         Some("list") => {
             println!("experiments: {}", experiments::ALL_IDS.join(" "));
             Ok(0)
@@ -50,6 +52,9 @@ pub fn usage() -> &'static str {
                          incremental evaluator vs full recompute\n\
        experiment all    regenerate everything\n\
        run               end-to-end cluster demo under all three algorithms\n\
+       scenarios         dynamic scenario suite (steady, churn, drain, diurnal,\n\
+                         degraded-fabric): LinuxSched vs coordinator, with\n\
+                         per-scenario p50/p99-tail perf, migrations, GB moved\n\
        list              list experiment ids\n\
      \n\
      options:\n\
@@ -58,7 +63,10 @@ pub fn usage() -> &'static str {
        --repeats N       run repeats to average (default 3)\n\
        --fast            small windows + native scorer\n\
        --scorer S        auto|native (default auto: PJRT artifacts if built)\n\
-       --csv DIR         also write result tables as CSV into DIR"
+       --csv DIR         also write result tables as CSV into DIR\n\
+       --suite S         scenarios: smoke (short horizon) | full (default smoke)\n\
+       --json PATH       scenarios: also write per-scenario JSON to PATH\n\
+       --events          scenarios: print the applied-event log per scenario"
 }
 
 fn opts_from(parsed: &Parsed) -> ExpOptions {
@@ -113,6 +121,38 @@ fn cmd_experiment(parsed: &Parsed) -> Result<i32> {
                 println!("wrote {path}");
             }
         }
+    }
+    Ok(0)
+}
+
+fn cmd_scenarios(parsed: &Parsed) -> Result<i32> {
+    use crate::scenario::{self, suite, ScenarioConfig};
+
+    let suite_name = parsed.value("suite").unwrap_or("smoke");
+    let specs = suite::suite_by_name(suite_name)?;
+    let opts = opts_from(parsed);
+    let cfg = ScenarioConfig { seed: opts.seed, scorer: opts.scorer, mapper: None };
+    println!(
+        "scenario suite {suite_name:?}: {} scenarios x {} algorithms (seed {})",
+        specs.len(),
+        suite::SUITE_ALGS.len(),
+        opts.seed
+    );
+    let t0 = std::time::Instant::now();
+    let results = scenario::run_suite(&specs, &cfg)?;
+    println!("{}", suite::render_table(&results).render());
+    println!("suite completed in {:.2}s", t0.elapsed().as_secs_f64());
+    if parsed.flag("events") {
+        for r in &results {
+            println!("--- {} / {} ---", r.metrics.scenario, r.metrics.algorithm);
+            for (tick, desc) in &r.event_log {
+                println!("  t{tick:<6} {desc}");
+            }
+        }
+    }
+    if let Some(path) = parsed.value("json") {
+        std::fs::write(path, scenario::to_json(&results))?;
+        println!("wrote {path}");
     }
     Ok(0)
 }

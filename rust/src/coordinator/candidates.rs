@@ -41,6 +41,10 @@ pub struct SlotMap {
     /// Resident vCPU count per (node, animal-class index).
     class_count: Vec<[u32; 3]>,
     cpus_per_node: usize,
+    /// Per-node availability (false = drained server).  Blocks candidate
+    /// generation; occupancy bookkeeping is unaffected, so slots of VMs
+    /// still resident on a draining server stay accounted.
+    avail: Vec<bool>,
     /// Undo log; only written while a checkpoint is active.
     journal: Vec<SlotOp>,
     journaling: bool,
@@ -56,7 +60,7 @@ impl SlotMap {
             if Some(*id) == skip || mvm.vm.state != VmState::Running {
                 continue;
             }
-            let class = mvm.vm.app.profile().class;
+            let class = mvm.profile.class;
             for pos in mvm.vcpu_pos.iter().flatten() {
                 slots.occupy(*pos, class);
             }
@@ -72,9 +76,27 @@ impl SlotMap {
             free_per_node: vec![cpus_per_node; topo.num_nodes()],
             class_count: vec![[0; 3]; topo.num_nodes()],
             cpus_per_node,
+            avail: vec![true; topo.num_nodes()],
             journal: Vec::new(),
             journaling: false,
         }
+    }
+
+    /// Mark every node of `server` (un)available for candidate generation
+    /// — the scenario engine's drain/recover hook.
+    pub fn set_server_available(
+        &mut self,
+        topo: &Topology,
+        server: crate::topology::ServerId,
+        available: bool,
+    ) {
+        for node in topo.nodes_of_server(server) {
+            self.avail[node.0] = available;
+        }
+    }
+
+    pub fn node_available(&self, node: NodeId) -> bool {
+        self.avail[node.0]
     }
 
     #[inline]
@@ -138,18 +160,29 @@ impl SlotMap {
         }
     }
 
+    /// Schedulable free CPUs (excludes drained servers).
     pub fn total_free(&self) -> usize {
-        self.free_per_node.iter().sum()
+        self.free_per_node
+            .iter()
+            .zip(&self.avail)
+            .map(|(f, a)| if *a { *f } else { 0 })
+            .sum()
     }
 
     /// Free CPUs of a node, ascending — no allocation (contiguous layout).
+    /// Empty while the node's server is drained.
     pub fn free_in_node(&self, node: NodeId) -> impl Iterator<Item = CpuId> + '_ {
         let lo = node.0 * self.cpus_per_node;
-        (lo..lo + self.cpus_per_node).filter(|&c| self.occ[c] == 0).map(CpuId)
+        let avail = self.avail[node.0];
+        (lo..lo + self.cpus_per_node).filter(move |&c| avail && self.occ[c] == 0).map(CpuId)
     }
 
     pub fn free_count(&self, node: NodeId) -> usize {
-        self.free_per_node[node.0]
+        if self.avail[node.0] {
+            self.free_per_node[node.0]
+        } else {
+            0
+        }
     }
 
     /// Animal classes with at least one resident vCPU on `node`.
@@ -180,7 +213,8 @@ impl SlotMap {
         }
     }
 
-    /// Structural equality against another map (journal state ignored) —
+    /// Structural equality against another map (journal and availability
+    /// state ignored — `from_sim` rebuilds don't carry drain state) —
     /// the persistent-vs-rebuilt cross-check used by tests.
     pub fn same_state(&self, other: &SlotMap) -> bool {
         self.occ == other.occ
@@ -533,6 +567,28 @@ mod tests {
         slots.commit(&topo, &a, AnimalClass::Devil);
         assert!(!slots.node_compatible(NodeId(5), AnimalClass::Rabbit));
         assert!(slots.node_compatible(NodeId(5), AnimalClass::Sheep));
+    }
+
+    #[test]
+    fn drained_server_is_invisible_to_candidate_generation() {
+        let topo = Topology::paper();
+        let mut slots = SlotMap::empty(&topo);
+        let all_free = slots.total_free();
+        slots.set_server_available(&topo, crate::topology::ServerId(0), false);
+        assert!(!slots.node_available(NodeId(0)));
+        assert_eq!(slots.free_count(NodeId(0)), 0);
+        assert_eq!(slots.free_in_node(NodeId(0)).count(), 0);
+        assert_eq!(slots.total_free(), all_free - 48);
+        // Fills anchored on the drained server walk past it.
+        let a = proximity_fill(&topo, &slots, NodeId(0), 8, AnimalClass::Sheep, true).unwrap();
+        for cpu in &a.cpus {
+            assert!(topo.server_of_node(topo.node_of_cpu(*cpu)).0 != 0, "used drained slot");
+        }
+        // Occupancy bookkeeping still works on the drained server.
+        slots.occupy(CpuId(0), AnimalClass::Sheep);
+        slots.release(CpuId(0), AnimalClass::Sheep);
+        slots.set_server_available(&topo, crate::topology::ServerId(0), true);
+        assert_eq!(slots.total_free(), all_free);
     }
 
     #[test]

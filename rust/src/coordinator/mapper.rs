@@ -109,6 +109,8 @@ pub struct MapperStats {
     pub reshuffles: u64,
     pub scorer_batches: u64,
     pub affected_total: u64,
+    /// VMs moved off draining servers (scenario engine).
+    pub evacuations: u64,
 }
 
 /// Result of one monitoring pass.
@@ -168,7 +170,7 @@ impl SmMapper {
             .map(|id| {
                 let mvm = sim.get(*id).expect("vm in order");
                 VmEntry {
-                    profile: mvm.vm.app.profile(),
+                    profile: mvm.profile.clone(),
                     vcpus: mvm.vm.vcpus(),
                     mem_fractions: mvm.vm.memory_fractions(n),
                 }
@@ -190,7 +192,10 @@ impl SmMapper {
         )
     }
 
-    /// Expected (ipc, mpi) for a VM, memoized.
+    /// Expected (ipc, mpi) for a VM, memoized.  Deliberately derived from
+    /// the app's *base* profile: a workload that shifts into a heavier
+    /// phase is supposed to trip the deviation threshold so the monitor
+    /// re-evaluates its placement under the live profile.
     fn expectation(&mut self, sim: &Simulator, id: VmId) -> (f64, f64) {
         if let Some(e) = self.expected.get(&id) {
             return *e;
@@ -214,7 +219,7 @@ impl SmMapper {
         self.stats.arrivals += 1;
         let (vcpus, class, bw_cap) = {
             let mvm = sim.get(id).ok_or_else(|| anyhow::anyhow!("no such vm {id}"))?;
-            let profile = mvm.vm.app.profile();
+            let profile = mvm.profile.clone();
             (
                 mvm.vm.vcpus(),
                 profile.class,
@@ -349,7 +354,7 @@ impl SmMapper {
         let (vcpus, class, mem_fractions, rel_before, bw_cap) = {
             let mvm = sim.get(id).expect("affected vm exists");
             let rel = mvm.history.mean_rel_perf(self.cfg.window);
-            let profile = mvm.vm.app.profile();
+            let profile = mvm.profile.clone();
             (
                 mvm.vm.vcpus(),
                 profile.class,
@@ -430,6 +435,103 @@ impl SmMapper {
         }
     }
 
+    // ---- drain reaction (scenario engine) ----------------------------------
+
+    /// React to a server drain: re-pin every VM stranded with pinned
+    /// vCPUs on the drained server to the best-scoring online candidate
+    /// and evacuate guest memory off the drained nodes through the
+    /// migration engine (the per-pass budget does not apply — the server
+    /// is going away).  Returns the VMs that could not be moved for lack
+    /// of online capacity.
+    pub fn handle_drain(
+        &mut self,
+        sim: &mut Simulator,
+        server: crate::topology::ServerId,
+        stranded: &[VmId],
+    ) -> Result<Vec<VmId>> {
+        let mut failed = Vec::new();
+        for &id in stranded {
+            if self.evacuate_vm(sim, id)? {
+                self.stats.evacuations += 1;
+            } else {
+                failed.push(id);
+            }
+        }
+
+        // Memory-only residents: pull pages off the drained nodes toward
+        // each VM's vCPU nodes (hottest first, bandwidth-limited).
+        let num_nodes = sim.topo.num_nodes();
+        let drained: Vec<bool> = (0..num_nodes)
+            .map(|n| sim.topo.server_of_node(NodeId(n)) == server)
+            .collect();
+        let ids: Vec<VmId> = sim
+            .vms()
+            .filter(|(_, m)| m.vm.state == VmState::Running)
+            .map(|(id, _)| *id)
+            .collect();
+        for id in ids {
+            let dist: Vec<(NodeId, f64)> = {
+                let mvm = sim.get(id).expect("running vm");
+                let mem = mvm.vm.memory_fractions(num_nodes);
+                let on_drained: f64 =
+                    mem.iter().enumerate().filter(|(n, _)| drained[*n]).map(|(_, f)| f).sum();
+                if on_drained <= 1e-9 {
+                    continue;
+                }
+                mvm.placement_fractions(&sim.topo)
+                    .iter()
+                    .enumerate()
+                    .filter(|(n, f)| **f > 0.0 && !drained[*n])
+                    .map(|(n, f)| (NodeId(n), *f))
+                    .collect()
+            };
+            if dist.is_empty() {
+                continue; // evacuation failed above; nowhere to put pages
+            }
+            sim.migrate_memory_toward(id, &dist, f64::INFINITY)?;
+        }
+        Ok(failed)
+    }
+
+    /// Forced remap of one VM off a draining server: like [`Self::remap_vm`]
+    /// but without the keep-current option (staying is not on the menu).
+    fn evacuate_vm(&mut self, sim: &mut Simulator, id: VmId) -> Result<bool> {
+        let (vcpus, class, bw_cap) = {
+            let Some(mvm) = sim.get(id) else { return Ok(false) };
+            if mvm.vm.state != VmState::Running {
+                return Ok(false);
+            }
+            let profile = mvm.profile.clone();
+            (mvm.vm.vcpus(), profile.class, candidates::bw_node_cap(&sim.topo, &profile))
+        };
+        // The slot map already blocks the drained server's nodes, so every
+        // candidate is online by construction.
+        let batch_cap = self.cfg.batch_cap;
+        let cands = sim.with_vm_released(id, |topo, slots| {
+            candidates::generate_with_bw(topo, slots, vcpus, class, None, batch_cap, bw_cap)
+        });
+        if cands.is_empty() {
+            return Ok(false);
+        }
+        let order = self.vm_order(sim, None);
+        let row = order.iter().position(|x| *x == id).expect("running vm in order");
+        let problem = self.build_problem(sim, &order)?;
+        let current = self.placements(sim, &order);
+        let best = self.pick_best(&problem, &current, row, &cands, None)?;
+        let chosen = cands[best].clone();
+        sim.pin_all(id, &chosen.cpus)?;
+        let mem: Vec<(NodeId, f64)> = chosen
+            .fractions
+            .iter()
+            .enumerate()
+            .filter(|(_, f)| **f > 0.0)
+            .map(|(nidx, f)| (NodeId(nidx), *f))
+            .collect();
+        sim.migrate_memory_toward(id, &mem, f64::INFINITY)?;
+        self.stats.remaps += 1;
+        Ok(true)
+    }
+
     // ---- whole-system reshuffle (line 7) -----------------------------------
 
     /// Re-place all running VMs at once.  With the PJRT engine this rounds
@@ -477,10 +579,14 @@ impl SmMapper {
 
         let topo = sim.topo.clone();
         let mut slots = SlotMap::empty(&topo);
+        // Drained servers stay out of the replan.
+        for server in sim.offline_servers().collect::<Vec<_>>() {
+            slots.set_server_available(&topo, server, false);
+        }
         let mut plan: Vec<(VmId, Assignment)> = Vec::new();
         for (vcpus, id) in sized {
             let idx = order.iter().position(|x| *x == id).unwrap();
-            let profile = sim.get(id).unwrap().vm.app.profile();
+            let profile = sim.get(id).unwrap().profile.clone();
             let class = profile.class;
             let bw_cap = candidates::bw_node_cap(&topo, &profile);
             let anchor = match &target {
@@ -790,6 +896,39 @@ mod tests {
             assert_eq!(servers.len(), 1, "small VM sliced after reshuffle");
         }
         assert_eq!(m.stats.reshuffles, 1);
+    }
+
+    #[test]
+    fn handle_drain_evacuates_pinned_vms_and_memory() {
+        let mut s = sim();
+        let mut m = mapper(Metric::Ipc);
+        let a = s.create(VmType::Medium, App::Derby);
+        m.place_arrival(&mut s, a).unwrap();
+        s.start(a).unwrap();
+        let server = {
+            let mvm = s.get(a).unwrap();
+            let cpu = mvm.vcpu_pos[0].unwrap();
+            s.topo.server_of_node(s.topo.node_of_cpu(cpu))
+        };
+        let stranded = s.drain_server(server).unwrap();
+        assert_eq!(stranded, vec![a], "pinned VM must be stranded");
+        let failed = m.handle_drain(&mut s, server, &stranded).unwrap();
+        assert!(failed.is_empty(), "evacuation must succeed with 5 empty servers");
+        assert_eq!(m.stats.evacuations, 1);
+        for pos in s.get(a).unwrap().vcpu_pos.iter().flatten() {
+            assert_ne!(
+                s.topo.server_of_node(s.topo.node_of_cpu(*pos)),
+                server,
+                "vCPU left on drained server"
+            );
+        }
+        // Guest memory drains off the dead server over the next ticks.
+        for _ in 0..60 {
+            s.step();
+        }
+        let mem = s.get(a).unwrap().vm.memory_fractions(s.topo.num_nodes());
+        let on_drained: f64 = s.topo.nodes_of_server(server).map(|n| mem[n.0]).sum();
+        assert!(on_drained < 1e-9, "memory still on drained server: {on_drained}");
     }
 
     #[test]

@@ -51,7 +51,7 @@ impl ExpOptions {
 /// All experiment ids, in DESIGN.md order.
 pub const ALL_IDS: &[&str] = &[
     "t1", "t2", "t3", "t4", "t5", "f2", "f3", "f4_10", "f11", "f12", "f13", "f14_16",
-    "f17_19", "var", "abl", "mem", "scale",
+    "f17_19", "var", "abl", "mem", "scale", "scenarios",
 ];
 
 /// Run one experiment by id.
@@ -74,6 +74,7 @@ pub fn run(id: &str, opts: &ExpOptions) -> Result<figures::Output> {
         "abl" => figures::abl(opts),
         "mem" => figures::mem(opts),
         "scale" => figures::scale(opts),
+        "scenarios" => crate::scenario::suite::experiment(opts),
         other => bail!("unknown experiment {other:?}; known: {ALL_IDS:?}"),
     }
 }

@@ -1,0 +1,27 @@
+//! Dynamic scenario engine: declarative, seed-deterministic timelines of
+//! cluster events — VM arrival/departure churn (Poisson), per-app phase
+//! shifts, diurnal load multipliers, server drain/recovery, fabric-link
+//! degradation — applied to the [`crate::sim::Simulator`] between mapper
+//! intervals.
+//!
+//! The paper evaluates mapping quality under *live* conditions; the static
+//! harness ([`crate::experiments::harness`]) only replays arrival traces
+//! to steady state.  This module is the stress layer on top: a
+//! [`ScenarioSpec`] expands into a timeline of [`ScenarioEvent`]s, the
+//! [`runner`] drives a simulator (plus optionally the coordinator) through
+//! it, and [`suite`] packages the five named scenarios (steady, churn,
+//! drain, diurnal, degraded-fabric) compared across `LinuxSched` vs the
+//! coordinator, with per-scenario JSON for the CI artifact.
+//!
+//! **Determinism contract**: the same `(spec, algorithm, seed)` produces a
+//! bit-identical event log and final metrics — across runs and across
+//! thread-pool sizes (`run_suite_on`); only `ticks_per_sec` (wall clock)
+//! is excluded.  Property-tested in `tests/scenarios.rs`.
+
+pub mod runner;
+pub mod suite;
+pub mod timeline;
+
+pub use runner::{run_scenario, ScenarioConfig, ScenarioMetrics, ScenarioResult};
+pub use suite::{full_suite, run_suite, run_suite_on, smoke_suite, to_json, SCENARIO_NAMES};
+pub use timeline::{DiurnalSpec, DrainWindow, FabricWindow, ScenarioEvent, ScenarioSpec};

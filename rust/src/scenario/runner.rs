@@ -1,0 +1,357 @@
+//! Drives one simulator (plus optionally the coordinator) through a
+//! scenario timeline and aggregates per-scenario metrics.
+//!
+//! Event application rules (all deterministic):
+//! * **Arrive** — coordinator runs place-arrival; if even a reshuffle
+//!   finds no online capacity the VM is queued and re-admission is
+//!   retried every tick (and naturally succeeds after recovery).  The
+//!   vanilla baseline always admits (it overbooks).
+//! * **Depart** — the oldest still-running churn VM is destroyed.
+//! * **Drain** — [`crate::sim::Simulator::drain_server`] evicts floating
+//!   threads; the coordinator then evacuates stranded pinned VMs and
+//!   pulls guest memory off the drained nodes through the migration
+//!   engine ([`SmMapper::handle_drain`]).
+//! * **PhaseShift** — round-robin over running VMs in id order.
+//!
+//! The reported tail metric follows SLO convention: `p99_tail_rel` is the
+//! relative performance of the 99th-percentile *worst* sample — 99% of
+//! all (VM, tick) samples in the measurement window perform at least this
+//! well.  `ticks_per_sec` is wall clock and is the only field excluded
+//! from the determinism contract.
+
+use std::collections::VecDeque;
+
+use anyhow::Result;
+
+use crate::coordinator::{MapperConfig, SmMapper};
+use crate::experiments::{Algorithm, ScorerChoice};
+use crate::runtime::Scorer;
+use crate::sim::{SimConfig, Simulator};
+use crate::topology::{ServerId, Topology};
+use crate::util::stats;
+use crate::vm::{VmId, VmState, VmType};
+use crate::workload::App;
+
+use super::timeline::{ScenarioEvent, ScenarioSpec};
+
+/// Runner configuration shared by every scenario of a suite.
+#[derive(Debug, Clone)]
+pub struct ScenarioConfig {
+    pub seed: u64,
+    pub scorer: ScorerChoice,
+    /// Coordinator override (metric is set per algorithm).
+    pub mapper: Option<MapperConfig>,
+}
+
+impl ScenarioConfig {
+    pub fn new(seed: u64) -> Self {
+        Self { seed, scorer: ScorerChoice::Native, mapper: None }
+    }
+}
+
+/// Deterministic per-scenario aggregate (everything but wall clock).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScenarioMetrics {
+    pub scenario: String,
+    pub algorithm: &'static str,
+    /// VMs that ran at any point (initial + admitted churn).
+    pub vms_seen: usize,
+    /// (VM, tick) perf samples in the measurement window.
+    pub samples: usize,
+    pub mean_rel: f64,
+    pub p50_rel: f64,
+    /// SLO-style p99 tail: 99% of samples perform at least this well
+    /// (the 1st percentile of relative performance).
+    pub p99_tail_rel: f64,
+    pub remaps: u64,
+    pub evacuations: u64,
+    pub sched_moves: usize,
+    pub migrations_started: usize,
+    pub gb_moved: f64,
+    /// Arrivals queued for lack of capacity.
+    pub rejected: u64,
+    /// Queued arrivals admitted later (e.g. after recovery).
+    pub readmitted: u64,
+    pub events_applied: usize,
+}
+
+/// One scenario run: metrics + the applied-event log (both deterministic)
+/// plus wall-clock throughput.
+#[derive(Debug, Clone)]
+pub struct ScenarioResult {
+    pub metrics: ScenarioMetrics,
+    pub event_log: Vec<(u64, String)>,
+    pub ticks_per_sec: f64,
+}
+
+fn build_scorer(choice: ScorerChoice) -> Scorer {
+    match choice {
+        ScorerChoice::Auto => Scorer::auto(),
+        ScorerChoice::Native => Scorer::Native,
+    }
+}
+
+/// Admit one VM: create, (coordinator) place, start.  Returns `None` —
+/// with the defined VM rolled back — when placement finds no capacity.
+fn admit(
+    sim: &mut Simulator,
+    mapper: Option<&mut SmMapper>,
+    vm_type: VmType,
+    app: App,
+) -> Result<Option<VmId>> {
+    let id = sim.create(vm_type, app);
+    if let Some(m) = mapper {
+        if m.place_arrival(sim, id).is_err() {
+            sim.destroy(id)?;
+            return Ok(None);
+        }
+    }
+    sim.start(id)?;
+    Ok(Some(id))
+}
+
+struct EventCtx {
+    churn_pool: VecDeque<VmId>,
+    pending: VecDeque<(VmType, App)>,
+    vms_seen: usize,
+    rejected: u64,
+    readmitted: u64,
+    phase_rr: usize,
+}
+
+fn apply_event(
+    sim: &mut Simulator,
+    mapper: &mut Option<SmMapper>,
+    ev: &ScenarioEvent,
+    ctx: &mut EventCtx,
+) -> Result<String> {
+    Ok(match ev {
+        ScenarioEvent::Arrive { vm_type, app } => {
+            match admit(sim, mapper.as_mut(), *vm_type, *app)? {
+                Some(id) => {
+                    ctx.churn_pool.push_back(id);
+                    ctx.vms_seen += 1;
+                    format!("arrive {} {app} -> {id}", vm_type.name())
+                }
+                None => {
+                    ctx.rejected += 1;
+                    ctx.pending.push_back((*vm_type, *app));
+                    format!("arrive {} {app} -> queued (no capacity)", vm_type.name())
+                }
+            }
+        }
+        ScenarioEvent::Depart => loop {
+            match ctx.churn_pool.pop_front() {
+                Some(id) if sim.get(id).is_some() => {
+                    sim.destroy(id)?;
+                    break format!("depart {id}");
+                }
+                Some(_) => continue, // already gone; try the next oldest
+                None => break "depart (no churn vm alive)".to_string(),
+            }
+        },
+        ScenarioEvent::PhaseShift { phase } => {
+            let ids: Vec<VmId> = sim
+                .vms()
+                .filter(|(_, m)| m.vm.state == VmState::Running)
+                .map(|(id, _)| *id)
+                .collect();
+            if ids.is_empty() {
+                "phase-shift (no running vm)".to_string()
+            } else {
+                let id = ids[ctx.phase_rr % ids.len()];
+                ctx.phase_rr += 1;
+                sim.shift_phase(id, *phase)?;
+                format!("phase-shift {id} -> {phase}")
+            }
+        }
+        ScenarioEvent::SetLoad { scale } => {
+            sim.set_global_load(*scale)?;
+            format!("set-load {scale:.3}")
+        }
+        ScenarioEvent::Drain { server } => {
+            let stranded = sim.drain_server(ServerId(*server))?;
+            let failed = match mapper.as_mut() {
+                Some(m) => m.handle_drain(sim, ServerId(*server), &stranded)?,
+                None => Vec::new(),
+            };
+            format!("drain s{server} (stranded {}, unplaceable {})", stranded.len(), failed.len())
+        }
+        ScenarioEvent::Recover { server } => {
+            sim.recover_server(ServerId(*server))?;
+            format!("recover s{server}")
+        }
+        ScenarioEvent::DegradeFabric { scale } => {
+            sim.degrade_fabric(*scale)?;
+            format!("degrade-fabric {scale:.2}")
+        }
+        ScenarioEvent::RestoreFabric => {
+            sim.restore_fabric();
+            "restore-fabric".to_string()
+        }
+    })
+}
+
+/// Run one scenario under one algorithm.
+pub fn run_scenario(
+    spec: &ScenarioSpec,
+    alg: Algorithm,
+    cfg: &ScenarioConfig,
+) -> Result<ScenarioResult> {
+    let sim_seed = spec.salted_seed(cfg.seed);
+    let sim_cfg = match alg {
+        Algorithm::Vanilla => SimConfig::vanilla(sim_seed),
+        Algorithm::AutoNuma => SimConfig::vanilla_autonuma(sim_seed),
+        _ => SimConfig::pinned(sim_seed),
+    };
+    let mut sim = Simulator::new(Topology::paper(), sim_cfg);
+    let mut mapper = alg.metric().map(|metric| {
+        let mcfg = cfg.mapper.clone().unwrap_or_else(|| MapperConfig::new(metric));
+        let mcfg = MapperConfig { metric, ..mcfg };
+        SmMapper::new(mcfg, build_scorer(cfg.scorer))
+    });
+
+    let timeline = spec.timeline(cfg.seed);
+    let mut initial = spec.initial.clone();
+    initial.sort_by_key(|a| a.at_tick);
+
+    let mut cursor = 0usize;
+    let mut init_cursor = 0usize;
+    let mut ctx = EventCtx {
+        churn_pool: VecDeque::new(),
+        pending: VecDeque::new(),
+        vms_seen: 0,
+        rejected: 0,
+        readmitted: 0,
+        phase_rr: 0,
+    };
+    let mut samples: Vec<f64> = Vec::new();
+    let mut event_log: Vec<(u64, String)> = Vec::new();
+
+    let t0 = std::time::Instant::now();
+    for t in 0..spec.horizon {
+        while init_cursor < initial.len() && initial[init_cursor].at_tick <= t {
+            let a = initial[init_cursor];
+            init_cursor += 1;
+            match admit(&mut sim, mapper.as_mut(), a.vm_type, a.app)? {
+                Some(_) => ctx.vms_seen += 1,
+                None => {
+                    ctx.rejected += 1;
+                    ctx.pending.push_back((a.vm_type, a.app));
+                }
+            }
+        }
+        while cursor < timeline.len() && timeline[cursor].0 <= t {
+            let ev = timeline[cursor].1.clone();
+            cursor += 1;
+            let desc = apply_event(&mut sim, &mut mapper, &ev, &mut ctx)?;
+            event_log.push((t, desc));
+        }
+        // Re-admission: drain the queue while capacity allows (recovered
+        // servers or departures free slots up).  Throttled to every 5th
+        // tick: a failed place_arrival can fall back to a whole-cluster
+        // reshuffle, which must not run on every tick of a long shortage.
+        while t % 5 == 0 {
+            let Some((vm_type, app)) = ctx.pending.front().copied() else { break };
+            match admit(&mut sim, mapper.as_mut(), vm_type, app)? {
+                Some(id) => {
+                    ctx.pending.pop_front();
+                    ctx.churn_pool.push_back(id);
+                    ctx.vms_seen += 1;
+                    ctx.readmitted += 1;
+                    event_log.push((t, format!("re-admit {} {app} -> {id}", vm_type.name())));
+                }
+                None => break,
+            }
+        }
+
+        let out = sim.step();
+        if t >= spec.warmup {
+            for (_, s) in &out {
+                samples.push(s.rel_perf);
+            }
+        }
+        if let Some(m) = mapper.as_mut() {
+            if t % m.cfg.interval == 0 {
+                m.interval(&mut sim)?;
+            }
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64().max(1e-9);
+
+    let (remaps, evacuations) = match &mapper {
+        Some(m) => (m.stats.remaps, m.stats.evacuations),
+        None => (0, 0),
+    };
+    let metrics = ScenarioMetrics {
+        scenario: spec.name.clone(),
+        algorithm: alg.name(),
+        vms_seen: ctx.vms_seen,
+        samples: samples.len(),
+        mean_rel: stats::mean(&samples),
+        p50_rel: if samples.is_empty() { 0.0 } else { stats::percentile(&samples, 50.0) },
+        p99_tail_rel: if samples.is_empty() { 0.0 } else { stats::percentile(&samples, 1.0) },
+        remaps,
+        evacuations,
+        sched_moves: sim.trace.total_sched_moves(),
+        migrations_started: sim.trace.count_kind("mem_migration_started"),
+        gb_moved: sim.trace.total_gb_migrated(),
+        rejected: ctx.rejected,
+        readmitted: ctx.readmitted,
+        events_applied: event_log.len(),
+    };
+    Ok(ScenarioResult { metrics, event_log, ticks_per_sec: spec.horizon as f64 / wall })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::suite;
+
+    #[test]
+    fn steady_scenario_collects_samples_for_both_algorithms() {
+        let spec = suite::named("steady", true).unwrap();
+        let cfg = ScenarioConfig::new(1);
+        for alg in [Algorithm::Vanilla, Algorithm::SmIpc] {
+            let r = run_scenario(&spec, alg, &cfg).unwrap();
+            assert!(r.metrics.samples > 100, "{alg:?}: {} samples", r.metrics.samples);
+            assert_eq!(r.metrics.vms_seen, spec.initial.len());
+            assert!(r.metrics.mean_rel > 0.0);
+            assert!(r.metrics.p99_tail_rel <= r.metrics.p50_rel);
+            assert_eq!(r.metrics.rejected, 0, "steady load must fit");
+        }
+    }
+
+    #[test]
+    fn churn_scenario_arrives_and_departs() {
+        let spec = suite::named("churn", true).unwrap();
+        let r = run_scenario(&spec, Algorithm::SmIpc, &ScenarioConfig::new(2)).unwrap();
+        assert!(
+            r.metrics.vms_seen > spec.initial.len(),
+            "churn must admit extra VMs: {}",
+            r.metrics.vms_seen
+        );
+        assert!(r.event_log.iter().any(|(_, d)| d.starts_with("arrive")));
+        assert!(r.event_log.iter().any(|(_, d)| d.starts_with("depart")));
+    }
+
+    #[test]
+    fn drain_scenario_logs_drain_and_recovery() {
+        let spec = suite::named("drain", true).unwrap();
+        let r = run_scenario(&spec, Algorithm::SmIpc, &ScenarioConfig::new(3)).unwrap();
+        let drain_line = r
+            .event_log
+            .iter()
+            .find(|(_, d)| d.starts_with("drain s4"))
+            .unwrap_or_else(|| panic!("no drain logged: {:?}", r.event_log))
+            .1
+            .clone();
+        assert!(r.event_log.iter().any(|(_, d)| d.starts_with("recover s4")));
+        // If anything was pinned there, the coordinator must have moved it
+        // (and its memory) off the drained server.
+        if !drain_line.contains("stranded 0") {
+            assert!(r.metrics.evacuations > 0, "{drain_line}: no evacuation");
+            assert!(r.metrics.gb_moved > 0.0, "{drain_line}: no memory evacuated");
+        }
+    }
+}

@@ -1,0 +1,250 @@
+//! The named scenario suite (steady, churn, drain, diurnal,
+//! degraded-fabric), run for `LinuxSched` (vanilla) vs the coordinator
+//! (SM-IPC) with per-scenario JSON output — the payload behind
+//! `dvrm scenarios --suite smoke|full` and the CI `scenario-smoke` job.
+
+use anyhow::{bail, Result};
+
+use crate::experiments::figures::Output;
+use crate::experiments::{Algorithm, ExpOptions};
+use crate::util::pool::{self, ThreadPool};
+use crate::util::table::Table;
+use crate::vm::VmType;
+use crate::workload::trace::Arrival;
+use crate::workload::App;
+
+use super::runner::{run_scenario, ScenarioConfig, ScenarioResult};
+use super::timeline::{DiurnalSpec, DrainWindow, FabricWindow, ScenarioSpec};
+
+/// The compared policies: the kernel baseline ("LinuxSched") and the
+/// coordinator (SM-IPC).
+pub const SUITE_ALGS: [Algorithm; 2] = [Algorithm::Vanilla, Algorithm::SmIpc];
+
+/// The five named scenarios.
+pub const SCENARIO_NAMES: [&str; 5] = ["steady", "churn", "drain", "diurnal", "degraded-fabric"];
+
+/// Steady background population: ~48 vCPUs (1/6 of the paper machine) of
+/// mixed classes, leaving headroom for churn, drains and re-admission.
+fn base_population() -> Vec<Arrival> {
+    let medium = [App::Stream, App::Derby];
+    let small = [
+        App::Sockshop,
+        App::Mpegaudio,
+        App::Fft,
+        App::Sunflow,
+        App::Sor,
+        App::Sockshop,
+        App::Neo4j,
+        App::Derby,
+    ];
+    let mut out = Vec::new();
+    for (i, app) in medium.iter().enumerate() {
+        out.push(Arrival { at_tick: i as u64 * 2, vm_type: VmType::Medium, app: *app });
+    }
+    for (i, app) in small.iter().enumerate() {
+        out.push(Arrival { at_tick: 4 + i as u64 * 2, vm_type: VmType::Small, app: *app });
+    }
+    out
+}
+
+/// Build one named scenario.  `fast` shrinks the horizon for CI smoke.
+pub fn named(name: &str, fast: bool) -> Option<ScenarioSpec> {
+    let h: u64 = if fast { 140 } else { 600 };
+    let mut s = ScenarioSpec {
+        name: name.to_string(),
+        horizon: h,
+        warmup: h / 5,
+        initial: base_population(),
+        arrive_rate: 0.0,
+        depart_rate: 0.0,
+        churn_from: h / 5,
+        phase_every: 0,
+        diurnal: None,
+        drains: Vec::new(),
+        fabric: Vec::new(),
+    };
+    match name {
+        "steady" => {}
+        "churn" => {
+            s.arrive_rate = 16.0 / h as f64;
+            s.depart_rate = 12.0 / h as f64;
+        }
+        "drain" => {
+            s.drains = vec![DrainWindow { at: h * 2 / 5, server: 4, recover_at: h * 4 / 5 }];
+        }
+        "diurnal" => {
+            s.diurnal =
+                Some(DiurnalSpec { period: h / 2, amplitude: 0.5, every: (h / 24).max(1) });
+            s.phase_every = h / 8;
+        }
+        "degraded-fabric" => {
+            s.fabric = vec![FabricWindow { at: h / 4, scale: 0.1, restore_at: h * 3 / 4 }];
+            s.arrive_rate = 6.0 / h as f64;
+            s.depart_rate = 4.0 / h as f64;
+        }
+        _ => return None,
+    }
+    Some(s)
+}
+
+fn suite(fast: bool) -> Vec<ScenarioSpec> {
+    SCENARIO_NAMES.iter().map(|n| named(n, fast).expect("known scenario")).collect()
+}
+
+/// Small topology-of-time suite for CI (short horizon).
+pub fn smoke_suite() -> Vec<ScenarioSpec> {
+    suite(true)
+}
+
+/// Full-length suite.
+pub fn full_suite() -> Vec<ScenarioSpec> {
+    suite(false)
+}
+
+/// Run `specs × {LinuxSched, SM-IPC}` on the shared pool, in order:
+/// `[s0×vanilla, s0×sm, s1×vanilla, ...]`.
+pub fn run_suite(specs: &[ScenarioSpec], cfg: &ScenarioConfig) -> Result<Vec<ScenarioResult>> {
+    run_suite_on(pool::global(), specs, cfg)
+}
+
+/// [`run_suite`] on an explicit pool.  Each job owns its simulator and
+/// RNG streams, so results are bit-identical across pool sizes (only
+/// `ticks_per_sec` varies) — property-tested in `tests/scenarios.rs`.
+pub fn run_suite_on(
+    pool: &ThreadPool,
+    specs: &[ScenarioSpec],
+    cfg: &ScenarioConfig,
+) -> Result<Vec<ScenarioResult>> {
+    let jobs: Vec<(ScenarioSpec, Algorithm, ScenarioConfig)> = specs
+        .iter()
+        .flat_map(|s| SUITE_ALGS.iter().map(move |a| (s.clone(), *a, cfg.clone())))
+        .collect();
+    if jobs.len() <= 1 {
+        return jobs.into_iter().map(|(s, a, c)| run_scenario(&s, a, &c)).collect();
+    }
+    pool.scope_map(jobs, |(s, a, c)| run_scenario(&s, a, &c)).into_iter().collect()
+}
+
+/// Hand-rolled JSON export (no serde offline) — one record per
+/// (scenario, algorithm); the CI artifact.
+pub fn to_json(results: &[ScenarioResult]) -> String {
+    let esc = |s: &str| s.replace('\\', "\\\\").replace('"', "\\\"");
+    let mut out = String::from("{\n  \"scenarios\": [\n");
+    for (k, r) in results.iter().enumerate() {
+        let m = &r.metrics;
+        out.push_str(&format!(
+            "    {{\"scenario\": \"{}\", \"algorithm\": \"{}\", \"vms\": {}, \
+             \"samples\": {}, \"mean_rel\": {:.6}, \"p50_rel\": {:.6}, \
+             \"p99_tail_rel\": {:.6}, \"remaps\": {}, \"evacuations\": {}, \
+             \"sched_moves\": {}, \"migrations_started\": {}, \"gb_moved\": {:.3}, \
+             \"rejected\": {}, \"readmitted\": {}, \"events\": {}, \
+             \"ticks_per_sec\": {:.1}}}{}\n",
+            esc(&m.scenario),
+            esc(m.algorithm),
+            m.vms_seen,
+            m.samples,
+            m.mean_rel,
+            m.p50_rel,
+            m.p99_tail_rel,
+            m.remaps,
+            m.evacuations,
+            m.sched_moves,
+            m.migrations_started,
+            m.gb_moved,
+            m.rejected,
+            m.readmitted,
+            m.events_applied,
+            r.ticks_per_sec,
+            if k + 1 == results.len() { "" } else { "," },
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
+/// Render suite results as the `scenarios` experiment table.
+pub fn render_table(results: &[ScenarioResult]) -> Table {
+    let mut t = Table::new("EXP-SCEN: dynamic scenarios — LinuxSched vs coordinator").header(&[
+        "scenario",
+        "algorithm",
+        "p50 rel",
+        "p99-tail rel",
+        "mean rel",
+        "remaps",
+        "migs",
+        "GB moved",
+        "rejected",
+        "ticks/s",
+    ]);
+    for r in results {
+        let m = &r.metrics;
+        t.row(vec![
+            m.scenario.clone(),
+            m.algorithm.to_string(),
+            format!("{:.3}", m.p50_rel),
+            format!("{:.3}", m.p99_tail_rel),
+            format!("{:.3}", m.mean_rel),
+            m.remaps.to_string(),
+            m.migrations_started.to_string(),
+            format!("{:.1}", m.gb_moved),
+            m.rejected.to_string(),
+            format!("{:.0}", r.ticks_per_sec),
+        ]);
+    }
+    t
+}
+
+/// The `scenarios` experiment (`dvrm experiment scenarios`).
+pub fn experiment(o: &ExpOptions) -> Result<Output> {
+    let specs = if o.fast { smoke_suite() } else { full_suite() };
+    let cfg = ScenarioConfig { seed: o.seed, scorer: o.scorer, mapper: None };
+    let results = run_suite(&specs, &cfg)?;
+    let t = render_table(&results);
+    Ok(Output { text: t.render(), tables: vec![("scenarios".into(), t)] })
+}
+
+/// Resolve a suite by CLI name.
+pub fn suite_by_name(name: &str) -> Result<Vec<ScenarioSpec>> {
+    match name {
+        "smoke" => Ok(smoke_suite()),
+        "full" => Ok(full_suite()),
+        other => bail!("unknown suite {other:?}; known: smoke, full"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suite_has_the_five_named_scenarios() {
+        let s = smoke_suite();
+        assert_eq!(s.len(), 5);
+        for (spec, name) in s.iter().zip(SCENARIO_NAMES.iter()) {
+            assert_eq!(spec.name, *name);
+            assert!(spec.warmup < spec.horizon);
+        }
+        assert!(named("nosuch", true).is_none());
+        assert!(suite_by_name("nosuch").is_err());
+    }
+
+    #[test]
+    fn base_population_fits_comfortably() {
+        let vcpus: usize = base_population().iter().map(|a| a.vm_type.spec().vcpus).sum();
+        assert!(vcpus <= 64, "background too heavy: {vcpus} vcpus");
+    }
+
+    #[test]
+    fn json_is_well_formed_and_escaped() {
+        let mut spec = named("steady", true).unwrap();
+        spec.horizon = 30;
+        spec.warmup = 5;
+        let r = run_scenario(&spec, Algorithm::Vanilla, &ScenarioConfig::new(5)).unwrap();
+        let json = to_json(&[r]);
+        assert!(json.contains("\"scenarios\""));
+        assert!(json.contains("\"scenario\": \"steady\""));
+        assert!(json.contains("\"p99_tail_rel\""));
+        assert!(json.trim_end().ends_with('}'));
+        assert_eq!(json.matches("},").count(), 0, "single record needs no comma");
+    }
+}

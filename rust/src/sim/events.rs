@@ -24,6 +24,18 @@ pub enum Event {
     MemoryMigrated { vm: VmId, gb_moved: f64, ticks: u64 },
     Destroyed { vm: VmId },
     Evicted { vm: VmId },
+    /// A server was drained (scenario engine): `moved` floating vCPUs
+    /// were immediately re-placed onto online servers.
+    ServerDrained { server: usize, moved: usize },
+    /// A drained server came back online.
+    ServerRecovered { server: usize },
+    /// Fabric health changed; `scale` multiplies cross-server bandwidth
+    /// and fabric capacity (1.0 = restored to nominal).
+    FabricDegraded { scale: f64 },
+    /// A VM's workload shifted execution phase.
+    PhaseShifted { vm: VmId, phase: &'static str },
+    /// Cluster-wide load multiplier changed (diurnal scenarios).
+    LoadScaled { scale: f64 },
 }
 
 impl Event {
@@ -38,10 +50,17 @@ impl Event {
             Event::MemoryMigrated { .. } => "memory_migrated",
             Event::Destroyed { .. } => "destroyed",
             Event::Evicted { .. } => "evicted",
+            Event::ServerDrained { .. } => "server_drained",
+            Event::ServerRecovered { .. } => "server_recovered",
+            Event::FabricDegraded { .. } => "fabric_degraded",
+            Event::PhaseShifted { .. } => "phase_shifted",
+            Event::LoadScaled { .. } => "load_scaled",
         }
     }
 
-    pub fn vm(&self) -> VmId {
+    /// The VM this event concerns, if any (cluster-scoped scenario events
+    /// — drains, fabric health, load scaling — have none).
+    pub fn vm(&self) -> Option<VmId> {
         match self {
             Event::Defined { vm }
             | Event::Booted { vm }
@@ -51,7 +70,12 @@ impl Event {
             | Event::MemMigrationStarted { vm, .. }
             | Event::MemoryMigrated { vm, .. }
             | Event::Destroyed { vm }
-            | Event::Evicted { vm } => *vm,
+            | Event::Evicted { vm }
+            | Event::PhaseShifted { vm, .. } => Some(*vm),
+            Event::ServerDrained { .. }
+            | Event::ServerRecovered { .. }
+            | Event::FabricDegraded { .. }
+            | Event::LoadScaled { .. } => None,
         }
     }
 }
@@ -131,7 +155,8 @@ impl EventTrace {
     pub fn to_csv(&self) -> String {
         let mut out = String::from("tick,kind,vm\n");
         for (tick, e) in &self.events {
-            out.push_str(&format!("{tick},{},{}\n", e.kind(), e.vm()));
+            let vm = e.vm().map(|v| v.to_string()).unwrap_or_else(|| "-".into());
+            out.push_str(&format!("{tick},{},{vm}\n", e.kind()));
         }
         out
     }
@@ -187,6 +212,17 @@ mod tests {
     fn event_kind_and_vm_accessors() {
         let e = Event::Evicted { vm: VmId(9) };
         assert_eq!(e.kind(), "evicted");
-        assert_eq!(e.vm(), VmId(9));
+        assert_eq!(e.vm(), Some(VmId(9)));
+        let d = Event::ServerDrained { server: 3, moved: 5 };
+        assert_eq!(d.kind(), "server_drained");
+        assert_eq!(d.vm(), None);
+    }
+
+    #[test]
+    fn cluster_scoped_events_export_dash_vm() {
+        let mut t = EventTrace::new(10);
+        t.push(3, Event::FabricDegraded { scale: 0.1 });
+        assert!(t.to_csv().contains("3,fabric_degraded,-"));
+        assert_eq!(t.count_kind("fabric_degraded"), 1);
     }
 }

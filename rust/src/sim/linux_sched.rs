@@ -40,11 +40,41 @@ pub struct LinuxScheduler {
     params: VanillaParams,
     /// Runqueue length per hardware thread.
     load: Vec<u32>,
+    /// Unschedulable hardware threads (drained servers).
+    offline: Vec<bool>,
+    /// Cached `offline.iter().any()` — keeps the all-online sampling path
+    /// bit-identical to the pre-drain scheduler.
+    any_offline: bool,
 }
 
 impl LinuxScheduler {
     pub fn new(topo: &Topology, params: VanillaParams) -> Self {
-        Self { params, load: vec![0; topo.num_cpus()] }
+        let n = topo.num_cpus();
+        Self { params, load: vec![0; n], offline: vec![false; n], any_offline: false }
+    }
+
+    /// Mark hardware threads (un)schedulable — the scenario engine's
+    /// server drain hook.  At least one thread must stay online.
+    pub fn set_offline(&mut self, offline: Vec<bool>) {
+        assert_eq!(offline.len(), self.load.len(), "offline mask sized to cpus");
+        assert!(offline.iter().any(|o| !o), "cannot take every cpu offline");
+        self.any_offline = offline.iter().any(|&o| o);
+        self.offline = offline;
+    }
+
+    /// Sample a uniformly random *online* cpu.  With no offline cpus this
+    /// consumes exactly one RNG draw, like the original code.
+    fn sample_online(&self, rng: &mut Rng) -> usize {
+        let n = self.load.len();
+        if !self.any_offline {
+            return rng.below(n);
+        }
+        loop {
+            let c = rng.below(n);
+            if !self.offline[c] {
+                return c;
+            }
+        }
     }
 
     /// Rebuild runqueue lengths from the authoritative position list.
@@ -59,13 +89,12 @@ impl LinuxScheduler {
         self.load[cpu.0]
     }
 
-    /// Wakeup placement for a new thread: least-loaded of K random cpus
-    /// (ties broken by sample order) — machine-wide, distance-blind.
+    /// Wakeup placement for a new thread: least-loaded of K random online
+    /// cpus (ties broken by sample order) — machine-wide, distance-blind.
     pub fn place_thread(&mut self, rng: &mut Rng) -> CpuId {
-        let n = self.load.len();
-        let mut best = CpuId(rng.below(n));
+        let mut best = CpuId(self.sample_online(rng));
         for _ in 1..self.params.sample_k {
-            let cand = CpuId(rng.below(n));
+            let cand = CpuId(self.sample_online(rng));
             if self.load[cand.0] < self.load[best.0] {
                 best = cand;
             }
@@ -75,23 +104,24 @@ impl LinuxScheduler {
     }
 
     /// One balancing pass over floating threads.  Returns the new position
-    /// for each input thread and whether it moved.
+    /// for each input thread and whether it moved.  Threads stranded on an
+    /// offline cpu (server drained mid-run) are moved unconditionally.
     pub fn balance(&mut self, positions: &mut [CpuId], rng: &mut Rng) -> usize {
-        let n = self.load.len();
         let mut moved = 0;
         for pos in positions.iter_mut() {
-            if !rng.chance(self.params.migrate_prob) {
+            let stranded = self.any_offline && self.offline[pos.0];
+            if !stranded && !rng.chance(self.params.migrate_prob) {
                 continue;
             }
             // Pull toward the least-loaded of K random candidates.
-            let mut best = CpuId(rng.below(n));
+            let mut best = CpuId(self.sample_online(rng));
             for _ in 1..self.params.sample_k {
-                let cand = CpuId(rng.below(n));
+                let cand = CpuId(self.sample_online(rng));
                 if self.load[cand.0] < self.load[best.0] {
                     best = cand;
                 }
             }
-            if self.load[best.0] + 1 < self.load[pos.0] || rng.chance(0.15) {
+            if stranded || self.load[best.0] + 1 < self.load[pos.0] || rng.chance(0.15) {
                 self.load[pos.0] -= 1;
                 self.load[best.0] += 1;
                 *pos = best;
@@ -172,5 +202,44 @@ mod tests {
         }
         let total: u32 = (0..topo.num_cpus()).map(|c| sched.load_of(CpuId(c))).sum();
         assert_eq!(total, 10, "load accounting drifted");
+    }
+
+    #[test]
+    fn offline_cpus_never_receive_threads_and_strand_forces_moves() {
+        let topo = Topology::tiny(); // 16 cpus, 2 servers of 8
+        let mut sched = LinuxScheduler::new(&topo, VanillaParams::default());
+        let mut rng = Rng::new(13);
+        // Server 0 (cpus 0..8) goes offline.
+        let offline: Vec<bool> = (0..topo.num_cpus()).map(|c| c < 8).collect();
+        sched.set_offline(offline);
+        for _ in 0..30 {
+            let c = sched.place_thread(&mut rng);
+            assert!(c.0 >= 8, "placed on offline cpu {c:?}");
+        }
+        // A thread stranded on the offline server is moved unconditionally.
+        let mut pos = vec![CpuId(2)];
+        sched.sync_load(pos.iter().copied());
+        let moved = sched.balance(&mut pos, &mut rng);
+        assert_eq!(moved, 1, "stranded thread must be evicted");
+        assert!(pos[0].0 >= 8);
+    }
+
+    #[test]
+    fn all_online_mask_is_bit_identical_to_no_mask() {
+        let topo = Topology::tiny();
+        let params = VanillaParams::default();
+        let run = |mask: bool| {
+            let mut sched = LinuxScheduler::new(&topo, params.clone());
+            if mask {
+                sched.set_offline(vec![false; topo.num_cpus()]);
+            }
+            let mut rng = Rng::new(17);
+            let mut pos: Vec<CpuId> = (0..6).map(|_| sched.place_thread(&mut rng)).collect();
+            for _ in 0..20 {
+                sched.balance(&mut pos, &mut rng);
+            }
+            pos
+        };
+        assert_eq!(run(false), run(true), "all-online mask changed the RNG sequence");
     }
 }

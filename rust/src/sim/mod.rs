@@ -28,11 +28,11 @@ use crate::coordinator::candidates::SlotMap;
 use crate::mem::{
     autonuma, MemConfig, MemPolicy, MigrationEngine, MigrationId, MigrationJob, PageMap,
 };
-use crate::topology::{CpuId, NodeId, Topology};
+use crate::topology::{CpuId, NodeId, ServerId, Topology};
 use crate::util::rng::Rng;
 use crate::vm::{Vm, VmId, VmState, VmType};
 use crate::workload::loadgen::LoadGen;
-use crate::workload::{AnimalClass, App};
+use crate::workload::{AnimalClass, App, AppProfile, Phase};
 use linux_sched::{LinuxScheduler, VanillaParams};
 
 /// Which host scheduler governs *floating* (unpinned) vCPUs.
@@ -108,6 +108,12 @@ pub struct ManagedVm {
     /// Page-granular memory map (ownership + hot/cold statistics); the
     /// source of truth behind `vm.mem_gb_per_node`.
     pub pages: PageMap,
+    /// Live workload profile: the app's base profile with the current
+    /// scenario [`Phase`] applied.  Phases never change the animal class,
+    /// so slot accounting stays consistent across shifts.
+    pub profile: AppProfile,
+    /// Current execution phase (scenario engine).
+    pub phase: Phase,
     pub history: CounterHistory,
     rng: Rng,
 }
@@ -147,11 +153,20 @@ pub struct Simulator {
     /// boot/destroy — the coordinator reads it instead of rebuilding
     /// [`SlotMap::from_sim`] per decision.
     slot_map: SlotMap,
-    /// VMs whose placement (`p`) or memory distribution (`m`) changed
-    /// since the evaluator last cached them.
+    /// VMs whose placement (`p`), memory distribution (`m`) or live
+    /// profile changed since the evaluator last cached them.
     dirty: BTreeSet<VmId>,
     /// Dirty-tracked joint performance model.
     inc: IncrementalEvaluator,
+    /// Drained servers (scenario engine): unschedulable and blocked for
+    /// candidate generation until recovered.
+    offline: BTreeSet<usize>,
+    /// Fabric health multiplier in (0, 1]: scales cross-server migration
+    /// bandwidth and the model's fabric capacity (1 = nominal).
+    fabric_health: f64,
+    /// Cluster-wide demand multiplier on every VM's utilization draw
+    /// (diurnal scenarios; 1 = nominal).
+    global_load: f64,
 }
 
 impl Simulator {
@@ -174,6 +189,9 @@ impl Simulator {
             slot_map,
             dirty: BTreeSet::new(),
             inc,
+            offline: BTreeSet::new(),
+            fabric_health: 1.0,
+            global_load: 1.0,
         }
     }
 
@@ -206,9 +224,10 @@ impl Simulator {
         let mut rng = self.rng.fork(self.next_id);
         let vm = Vm::new(id, vm_type, app, self.tick);
         let loadgen = LoadGen::new(app, &mut rng);
+        let profile = app.profile();
         // Access skew: streaming (thrashy) apps touch their footprint
         // near-uniformly; cache-friendly apps hammer a small hot set.
-        let heat_alpha = (1.1 - app.profile().thrash).clamp(0.1, 1.1);
+        let heat_alpha = (1.1 - profile.thrash).clamp(0.1, 1.1);
         let pages = PageMap::new(vm.mem_gb(), self.cfg.mem.chunk_mb, heat_alpha);
         self.vms.insert(
             id,
@@ -219,6 +238,8 @@ impl Simulator {
                 util: 1.0,
                 churn: 0.0,
                 pages,
+                profile,
+                phase: Phase::Baseline,
                 history: CounterHistory::new(self.cfg.history_cap),
                 rng,
             },
@@ -237,7 +258,7 @@ impl Simulator {
         if mvm.vm.state == VmState::Running {
             bail!("{id} already running");
         }
-        let class = mvm.vm.app.profile().class;
+        let class = mvm.profile.class;
         for (i, pin) in mvm.vm.vcpu_pins.clone().iter().enumerate() {
             let cpu = match pin {
                 Some(cpu) => *cpu,
@@ -279,6 +300,9 @@ impl Simulator {
         if cpu.0 >= self.topo.num_cpus() {
             bail!("cpu {} out of range", cpu.0);
         }
+        if self.offline.contains(&self.topo.server_of_node(self.topo.node_of_cpu(cpu)).0) {
+            bail!("cpu {} is on a drained server", cpu.0);
+        }
         let running = {
             let mvm = self.vms.get_mut(&id).ok_or_else(|| anyhow!("no such vm {id}"))?;
             if vcpu >= mvm.vm.vcpus() {
@@ -295,7 +319,7 @@ impl Simulator {
                 // Keep the persistent slot map and the evaluator's dirty
                 // set in sync with the position change.
                 if prev != Some(cpu) {
-                    let class = mvm.vm.app.profile().class;
+                    let class = mvm.profile.class;
                     if let Some(prev) = prev {
                         self.slot_map.release(prev, class);
                     }
@@ -397,7 +421,7 @@ impl Simulator {
     pub fn destroy(&mut self, id: VmId) -> Result<()> {
         let mvm = self.vms.remove(&id).ok_or_else(|| anyhow!("no such vm {id}"))?;
         if mvm.vm.state == VmState::Running {
-            let class = mvm.vm.app.profile().class;
+            let class = mvm.profile.class;
             for pos in mvm.vcpu_pos.iter().flatten() {
                 self.slot_map.release(*pos, class);
             }
@@ -408,6 +432,167 @@ impl Simulator {
         self.sync_sched_load();
         self.trace.push(self.tick, Event::Destroyed { vm: id });
         Ok(())
+    }
+
+    // ---- scenario hooks (drain / fabric / phase / load) ------------------
+
+    /// Take a server offline for scheduling (planned drain).  Floating
+    /// vCPUs resident there are immediately re-placed onto online servers
+    /// (kernel CPU-hotplug semantics); *pinned* vCPUs stay put and their
+    /// VMs are returned so the coordinator can evacuate them through the
+    /// migration engine.  The server's slots are blocked for candidate
+    /// generation and every running VM is re-cached in the evaluator.
+    pub fn drain_server(&mut self, server: ServerId) -> Result<Vec<VmId>> {
+        if server.0 >= self.topo.spec.servers {
+            bail!("server {} out of range", server.0);
+        }
+        if self.offline.contains(&server.0) {
+            bail!("server {} already drained", server.0);
+        }
+        if self.offline.len() + 1 >= self.topo.spec.servers {
+            bail!("cannot drain the last online server");
+        }
+        self.offline.insert(server.0);
+        self.slot_map.set_server_available(&self.topo, server, false);
+        self.sync_offline_mask();
+        self.sync_sched_load();
+
+        // Floating vCPUs on the drained server, plus VMs pinned there.
+        let mut moves: Vec<(VmId, usize, CpuId, AnimalClass)> = Vec::new();
+        let mut stranded: Vec<VmId> = Vec::new();
+        for (id, mvm) in &self.vms {
+            if mvm.vm.state != VmState::Running {
+                continue;
+            }
+            let mut pinned_here = false;
+            for (i, pos) in mvm.vcpu_pos.iter().enumerate() {
+                let Some(cpu) = pos else { continue };
+                if self.topo.server_of_node(self.topo.node_of_cpu(*cpu)).0 != server.0 {
+                    continue;
+                }
+                if mvm.vm.vcpu_pins[i].is_some() {
+                    pinned_here = true;
+                } else {
+                    moves.push((*id, i, *cpu, mvm.profile.class));
+                }
+            }
+            if pinned_here {
+                stranded.push(*id);
+            }
+        }
+
+        let tick = self.tick;
+        let mut rng = self.rng.fork(0xD7A1_0000 ^ server.0 as u64 ^ tick.wrapping_mul(97));
+        let moved = moves.len();
+        for (id, i, old, class) in moves {
+            let new = self.sched.place_thread(&mut rng);
+            let mvm = self.vms.get_mut(&id).unwrap();
+            mvm.vcpu_pos[i] = Some(new);
+            mvm.churn += 1.0 / mvm.vm.vcpus() as f64;
+            self.slot_map.release(old, class);
+            self.slot_map.occupy(new, class);
+        }
+        self.mark_all_running_dirty();
+        self.sync_sched_load();
+        self.trace.push(tick, Event::ServerDrained { server: server.0, moved });
+        Ok(stranded)
+    }
+
+    /// Bring a drained server back online: slots become schedulable and
+    /// placeable again (nothing moves until the balancer drifts or the
+    /// coordinator re-admits / remaps).
+    pub fn recover_server(&mut self, server: ServerId) -> Result<()> {
+        if !self.offline.remove(&server.0) {
+            bail!("server {} is not drained", server.0);
+        }
+        self.slot_map.set_server_available(&self.topo, server, true);
+        self.sync_offline_mask();
+        self.mark_all_running_dirty();
+        self.trace.push(self.tick, Event::ServerRecovered { server: server.0 });
+        Ok(())
+    }
+
+    /// Servers currently drained.
+    pub fn offline_servers(&self) -> impl Iterator<Item = ServerId> + '_ {
+        self.offline.iter().map(|s| ServerId(*s))
+    }
+
+    pub fn is_server_offline(&self, server: ServerId) -> bool {
+        self.offline.contains(&server.0)
+    }
+
+    /// Degrade the cache-coherent fabric: `scale` in (0, 1] multiplies
+    /// cross-server migration bandwidth *and* the perf model's fabric
+    /// capacity.  No dirty marking needed — both evaluators read the
+    /// shared capacity every tick.
+    pub fn degrade_fabric(&mut self, scale: f64) -> Result<()> {
+        if !(scale > 0.0 && scale <= 1.0) {
+            bail!("fabric scale must be in (0, 1], got {scale}");
+        }
+        self.fabric_health = scale;
+        self.trace.push(self.tick, Event::FabricDegraded { scale });
+        Ok(())
+    }
+
+    /// Restore the fabric to nominal health.
+    pub fn restore_fabric(&mut self) {
+        self.fabric_health = 1.0;
+        self.trace.push(self.tick, Event::FabricDegraded { scale: 1.0 });
+    }
+
+    pub fn fabric_health(&self) -> f64 {
+        self.fabric_health
+    }
+
+    /// Shift a running VM's workload phase: the live profile becomes
+    /// `phase` applied to the app's *base* profile (never cumulative),
+    /// and the VM is re-cached in the evaluator.  Relative performance
+    /// stays normalized against the app's baseline solo reference.
+    pub fn shift_phase(&mut self, id: VmId, phase: Phase) -> Result<()> {
+        let mvm = self.vms.get_mut(&id).ok_or_else(|| anyhow!("no such vm {id}"))?;
+        if mvm.phase == phase {
+            return Ok(());
+        }
+        mvm.profile = phase.apply(&mvm.vm.app.profile());
+        mvm.phase = phase;
+        self.dirty.insert(id);
+        self.trace.push(self.tick, Event::PhaseShifted { vm: id, phase: phase.name() });
+        Ok(())
+    }
+
+    /// Cluster-wide demand multiplier (diurnal scenarios): every VM's
+    /// utilization draw is scaled by `scale` and clamped to [0.01, 1].
+    pub fn set_global_load(&mut self, scale: f64) -> Result<()> {
+        if !(scale > 0.0) {
+            bail!("load scale must be positive, got {scale}");
+        }
+        self.global_load = scale;
+        self.trace.push(self.tick, Event::LoadScaled { scale });
+        Ok(())
+    }
+
+    pub fn global_load(&self) -> f64 {
+        self.global_load
+    }
+
+    fn mark_all_running_dirty(&mut self) {
+        let running: Vec<VmId> = self
+            .vms
+            .iter()
+            .filter(|(_, m)| m.vm.state == VmState::Running)
+            .map(|(id, _)| *id)
+            .collect();
+        self.dirty.extend(running);
+    }
+
+    fn sync_offline_mask(&mut self) {
+        let mask: Vec<bool> = (0..self.topo.num_cpus())
+            .map(|c| {
+                let srv = self.topo.server_of_node(self.topo.node_of_cpu(CpuId(c))).0;
+                self.offline.contains(&srv)
+            })
+            .collect();
+        self.sched.set_offline(mask);
     }
 
     // ---- stepping --------------------------------------------------------
@@ -459,7 +644,11 @@ impl Simulator {
             return;
         }
         let chunk_gb = self.cfg.mem.chunk_mb as f64 / 1024.0;
-        let outcome = self.migrations.advance(&self.topo, chunk_gb, self.cfg.mem.bw_scale);
+        let outcome = self.migrations.advance(
+            &self.topo,
+            chunk_gb,
+            self.cfg.mem.bw_scale * self.fabric_health,
+        );
         for c in &outcome.completed_chunks {
             if let Some(mvm) = self.vms.get_mut(&c.vm) {
                 mvm.pages.set_owner(c.chunk, c.to);
@@ -517,7 +706,7 @@ impl Simulator {
                         }
                     }
                 }
-                (cpus, idxs, mvm.vm.app.profile().class)
+                (cpus, idxs, mvm.profile.class)
             };
             let mut rng = self.rng.fork(tick.wrapping_mul(31).wrapping_add(id.0));
             let before = floating.clone();
@@ -547,11 +736,13 @@ impl Simulator {
             }
         }
 
-        // 2. Draw utilization.
+        // 2. Draw utilization (scaled by the scenario's diurnal
+        // multiplier; bit-identical to the unscaled draw at 1.0).
+        let gl = self.global_load;
         for mvm in self.vms.values_mut() {
             if mvm.vm.state == VmState::Running {
                 let mut r = mvm.rng.clone();
-                mvm.util = mvm.loadgen.utilization(tick, &mut r);
+                mvm.util = (mvm.loadgen.utilization(tick, &mut r) * gl).clamp(0.01, 1.0);
                 mvm.rng = r;
             }
         }
@@ -579,6 +770,15 @@ impl Simulator {
                 sum / cnt as f64
             }
         };
+        // Fabric degradation scales the shared capacity read by both
+        // evaluators every tick — oracle-equivalent by construction.
+        let params = if self.fabric_health < 1.0 {
+            let mut p = self.cfg.model.clone();
+            p.fabric_cap_gbs *= self.fabric_health;
+            p
+        } else {
+            self.cfg.model.clone()
+        };
         let outs = if self.cfg.incremental {
             // Re-cache only what changed since the last tick.
             let dirty = std::mem::take(&mut self.dirty);
@@ -596,7 +796,7 @@ impl Simulator {
                             &p,
                             &m,
                             mvm.vm.vcpus(),
-                            mvm.vm.app.profile(),
+                            mvm.profile.clone(),
                         );
                     }
                     Some(_) => {}
@@ -617,7 +817,7 @@ impl Simulator {
                     )
                 })
                 .collect();
-            self.inc.evaluate(&self.cfg.model, &inputs)
+            self.inc.evaluate(&params, &inputs)
         } else {
             let views: Vec<VmView> = running
                 .iter()
@@ -630,11 +830,11 @@ impl Simulator {
                         util: mvm.util,
                         mean_occupancy: mean_occ_of(mvm),
                         churn: mvm.churn.min(1.0),
-                        profile: mvm.vm.app.profile(),
+                        profile: mvm.profile.clone(),
                     }
                 })
                 .collect();
-            perf_model::evaluate(&self.topo, &views, &self.cfg.model)
+            perf_model::evaluate(&self.topo, &views, &params)
         };
 
         // 4. Synthesize noisy counters + reset churn.
@@ -719,7 +919,7 @@ impl Simulator {
     ) -> R {
         let released: Vec<(CpuId, AnimalClass)> = match self.vms.get(&id) {
             Some(mvm) if mvm.vm.state == VmState::Running => {
-                let class = mvm.vm.app.profile().class;
+                let class = mvm.profile.class;
                 mvm.vcpu_pos.iter().flatten().map(|c| (*c, class)).collect()
             }
             _ => Vec::new(),
@@ -1105,5 +1305,161 @@ mod tests {
         let b = s.solo_ref(App::Stream, 8);
         assert_eq!(a, b);
         assert!(a > 0.0);
+    }
+
+    fn server_of(s: &Simulator, cpu: CpuId) -> usize {
+        s.topo.server_of_node(s.topo.node_of_cpu(cpu)).0
+    }
+
+    #[test]
+    fn drain_moves_floating_threads_off_and_recover_reopens() {
+        let mut s = sim(SchedulerKind::Vanilla, 41);
+        let ids: Vec<VmId> = (0..6)
+            .map(|_| {
+                let id = s.create(VmType::Medium, App::Derby);
+                s.start(id).unwrap();
+                id
+            })
+            .collect();
+        s.run(5);
+        let target = crate::topology::ServerId(0);
+        let stranded = s.drain_server(target).unwrap();
+        assert!(stranded.is_empty(), "floating VMs have no pins to strand");
+        for id in &ids {
+            for pos in s.get(*id).unwrap().vcpu_pos.iter().flatten() {
+                assert_ne!(server_of(&s, *pos), 0, "thread left on drained server");
+            }
+        }
+        // The balancer never drifts back while drained.
+        s.run(20);
+        for id in &ids {
+            for pos in s.get(*id).unwrap().vcpu_pos.iter().flatten() {
+                assert_ne!(server_of(&s, *pos), 0);
+            }
+        }
+        assert_eq!(s.trace.count_kind("server_drained"), 1);
+        assert!(s.is_server_offline(target));
+        s.recover_server(target).unwrap();
+        assert!(!s.is_server_offline(target));
+        assert_eq!(s.trace.count_kind("server_recovered"), 1);
+        // Recovered slots are placeable again.
+        let id = s.create(VmType::Small, App::Fft);
+        s.pin_all(id, &[CpuId(0), CpuId(1), CpuId(2), CpuId(3)]).unwrap();
+    }
+
+    #[test]
+    fn drain_returns_pinned_vms_and_rejects_pins_to_drained_cpus() {
+        let mut s = sim(SchedulerKind::Pinned, 42);
+        let a = s.create(VmType::Small, App::Derby);
+        pin_local(&mut s, a, 0); // server 0
+        s.start(a).unwrap();
+        let b = s.create(VmType::Small, App::Stream);
+        pin_local(&mut s, b, 48); // server 1
+        s.start(b).unwrap();
+        let stranded = s.drain_server(crate::topology::ServerId(0)).unwrap();
+        assert_eq!(stranded, vec![a], "pinned VM on the drained server must be reported");
+        // Pins on the drained server are rejected until recovery.
+        assert!(s.pin_vcpu(b, 0, CpuId(5)).is_err());
+        assert!(s.drain_server(crate::topology::ServerId(0)).is_err(), "double drain");
+        s.recover_server(crate::topology::ServerId(0)).unwrap();
+        assert!(s.pin_vcpu(b, 0, CpuId(5)).is_ok());
+    }
+
+    #[test]
+    fn cannot_drain_the_last_online_server() {
+        let mut s = Simulator::new(Topology::tiny(), SimConfig::vanilla(43));
+        s.drain_server(crate::topology::ServerId(0)).unwrap();
+        assert!(s.drain_server(crate::topology::ServerId(1)).is_err());
+        assert!(s.recover_server(crate::topology::ServerId(1)).is_err(), "not drained");
+    }
+
+    #[test]
+    fn drain_keeps_persistent_slot_map_consistent() {
+        let mut s = sim(SchedulerKind::Vanilla, 44);
+        for _ in 0..4 {
+            let id = s.create(VmType::Medium, App::Sockshop);
+            s.start(id).unwrap();
+        }
+        s.run(3);
+        s.drain_server(crate::topology::ServerId(2)).unwrap();
+        s.run(5);
+        let rebuilt = crate::coordinator::candidates::SlotMap::from_sim(&s, None);
+        assert!(s.slots().same_state(&rebuilt), "slot map diverged after drain");
+        s.recover_server(crate::topology::ServerId(2)).unwrap();
+        s.run(5);
+        let rebuilt = crate::coordinator::candidates::SlotMap::from_sim(&s, None);
+        assert!(s.slots().same_state(&rebuilt), "slot map diverged after recovery");
+    }
+
+    #[test]
+    fn degraded_fabric_slows_cross_server_migration() {
+        let run = |scale: f64| {
+            let mut s = sim(SchedulerKind::Pinned, 45);
+            let id = s.create(VmType::Medium, App::Derby); // 32 GB
+            pin_local(&mut s, id, 0);
+            s.start(id).unwrap();
+            if scale < 1.0 {
+                s.degrade_fabric(scale).unwrap();
+            }
+            s.place_memory(id, &[(NodeId(24), 1.0)]).unwrap(); // 2 hops
+            for _ in 0..5 {
+                s.step();
+            }
+            s.get(id).unwrap().pages.gb_per_node(s.topo.num_nodes())[24]
+        };
+        let healthy = run(1.0);
+        let degraded = run(0.1);
+        assert!(
+            degraded < healthy * 0.3,
+            "degraded fabric must throttle migration: {degraded} vs {healthy}"
+        );
+        let mut s = sim(SchedulerKind::Pinned, 46);
+        assert!(s.degrade_fabric(0.0).is_err());
+        assert!(s.degrade_fabric(1.5).is_err());
+        s.degrade_fabric(0.5).unwrap();
+        s.restore_fabric();
+        assert_eq!(s.fabric_health(), 1.0);
+        assert_eq!(s.trace.count_kind("fabric_degraded"), 2);
+    }
+
+    #[test]
+    fn shift_phase_changes_profile_and_perf_but_never_class() {
+        let mut s = sim(SchedulerKind::Pinned, 47);
+        let id = s.create(VmType::Small, App::Derby);
+        pin_local(&mut s, id, 0);
+        s.start(id).unwrap();
+        let base_class = s.get(id).unwrap().profile.class;
+        let mut base = 0.0;
+        for _ in 0..10 {
+            base += s.step()[0].1.perf;
+        }
+        s.shift_phase(id, Phase::MemoryHeavy).unwrap();
+        assert_eq!(s.get(id).unwrap().phase, Phase::MemoryHeavy);
+        assert_eq!(s.get(id).unwrap().profile.class, base_class);
+        let mut heavy = 0.0;
+        for _ in 0..10 {
+            heavy += s.step()[0].1.perf;
+        }
+        assert!(heavy < base, "memory-heavy phase should cost perf: {heavy} vs {base}");
+        // Back to baseline restores the base profile exactly.
+        s.shift_phase(id, Phase::Baseline).unwrap();
+        assert_eq!(s.get(id).unwrap().profile.base_ipc, App::Derby.profile().base_ipc);
+        assert_eq!(s.trace.count_kind("phase_shifted"), 2);
+    }
+
+    #[test]
+    fn global_load_scales_interactive_utilization() {
+        let mut s = sim(SchedulerKind::Vanilla, 48);
+        let id = s.create(VmType::Small, App::Neo4j); // interactive
+        s.start(id).unwrap();
+        s.run(3);
+        let u_full = s.get(id).unwrap().util;
+        assert!(u_full > 0.3);
+        s.set_global_load(0.25).unwrap();
+        s.step();
+        let u_low = s.get(id).unwrap().util;
+        assert!(u_low < u_full, "load multiplier must shrink util: {u_low} vs {u_full}");
+        assert!(s.set_global_load(0.0).is_err());
+        assert_eq!(s.trace.count_kind("load_scaled"), 1);
     }
 }

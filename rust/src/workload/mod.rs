@@ -5,7 +5,9 @@
 pub mod app;
 pub mod classes;
 pub mod loadgen;
+pub mod phases;
 pub mod trace;
 
 pub use app::{App, AppProfile};
 pub use classes::{pair_penalty, AnimalClass, Sensitivity};
+pub use phases::Phase;

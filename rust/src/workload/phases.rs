@@ -1,0 +1,129 @@
+//! Workload execution phases (scenario engine): real applications are not
+//! stationary — a graph database alternates between memory-heavy scans and
+//! compute-heavy traversals, batch jobs grow their working sets, services
+//! ride diurnal load.  A [`Phase`] is a *bounded transformation of the
+//! app's base profile*: it scales the numeric demand parameters but never
+//! touches the animal class or sensitivity, so Table 3 compatibility and
+//! the slot map's per-class accounting stay consistent across shifts.
+//!
+//! Phases are always applied to the **base** profile (not cumulatively),
+//! so a schedule of shifts is order-independent per VM and the event log
+//! alone reconstructs the live profile.
+
+use super::app::AppProfile;
+
+/// A workload execution phase.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// The app's calibrated Table 2 profile.
+    Baseline,
+    /// Scan/shuffle phase: bandwidth demand up, more memory-stalled.
+    MemoryHeavy,
+    /// Crunch phase: cache-resident compute, little memory traffic.
+    ComputeHeavy,
+    /// Working-set growth: larger cache footprint, more misses.
+    WorkingSetGrowth,
+}
+
+impl Phase {
+    pub const ALL: [Phase; 4] =
+        [Phase::Baseline, Phase::MemoryHeavy, Phase::ComputeHeavy, Phase::WorkingSetGrowth];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Baseline => "baseline",
+            Phase::MemoryHeavy => "memory-heavy",
+            Phase::ComputeHeavy => "compute-heavy",
+            Phase::WorkingSetGrowth => "ws-growth",
+        }
+    }
+
+    /// The live profile for this phase, derived from the app's base
+    /// profile.  Every transformed field stays inside its documented
+    /// range; `class` and `sensitivity` are never modified.
+    pub fn apply(self, base: &AppProfile) -> AppProfile {
+        let mut p = base.clone();
+        match self {
+            Phase::Baseline => {}
+            Phase::MemoryHeavy => {
+                p.bw_gbs_per_vcpu = base.bw_gbs_per_vcpu * 2.0 + 0.5;
+                p.mem_stall_frac = (base.mem_stall_frac * 1.5 + 0.05).min(0.9);
+                p.bw_bound_frac = (base.bw_bound_frac * 1.4 + 0.05).min(0.95);
+                p.base_ipc = base.base_ipc * 0.9;
+            }
+            Phase::ComputeHeavy => {
+                p.bw_gbs_per_vcpu = base.bw_gbs_per_vcpu * 0.4;
+                p.mem_stall_frac = base.mem_stall_frac * 0.5;
+                p.bw_bound_frac = base.bw_bound_frac * 0.5;
+                p.base_ipc = (base.base_ipc * 1.15).min(3.9);
+            }
+            Phase::WorkingSetGrowth => {
+                p.cache_mb_per_vcpu = base.cache_mb_per_vcpu * 2.0;
+                p.base_mpi = (base.base_mpi * 1.5).min(0.09);
+                p.mem_stall_frac = (base.mem_stall_frac * 1.2 + 0.02).min(0.9);
+            }
+        }
+        p
+    }
+}
+
+impl std::fmt::Display for Phase {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::App;
+
+    #[test]
+    fn baseline_is_identity() {
+        for app in App::ALL {
+            let base = app.profile();
+            let p = Phase::Baseline.apply(&base);
+            assert_eq!(p.base_ipc, base.base_ipc);
+            assert_eq!(p.bw_gbs_per_vcpu, base.bw_gbs_per_vcpu);
+            assert_eq!(p.mem_stall_frac, base.mem_stall_frac);
+        }
+    }
+
+    #[test]
+    fn phases_never_change_class_or_sensitivity() {
+        for app in App::ALL {
+            let base = app.profile();
+            for ph in Phase::ALL {
+                let p = ph.apply(&base);
+                assert_eq!(p.class, base.class, "{app} {ph}");
+                assert_eq!(p.sensitivity, base.sensitivity, "{app} {ph}");
+            }
+        }
+    }
+
+    #[test]
+    fn phased_profiles_stay_bounded() {
+        for app in App::ALL {
+            for ph in Phase::ALL {
+                let p = ph.apply(&app.profile());
+                assert!(p.base_ipc > 0.0 && p.base_ipc < 4.0, "{app} {ph}");
+                assert!(p.base_mpi > 0.0 && p.base_mpi < 0.1, "{app} {ph}");
+                assert!((0.0..=1.0).contains(&p.mem_stall_frac), "{app} {ph}");
+                assert!((0.0..=1.0).contains(&p.bw_bound_frac), "{app} {ph}");
+                assert!(p.bw_gbs_per_vcpu >= 0.0, "{app} {ph}");
+                assert!(p.cache_mb_per_vcpu > 0.0, "{app} {ph}");
+            }
+        }
+    }
+
+    #[test]
+    fn memory_heavy_raises_demand_compute_heavy_lowers_it() {
+        let base = App::Derby.profile();
+        let mem = Phase::MemoryHeavy.apply(&base);
+        let cpu = Phase::ComputeHeavy.apply(&base);
+        assert!(mem.bw_gbs_per_vcpu > base.bw_gbs_per_vcpu);
+        assert!(mem.mem_stall_frac > base.mem_stall_frac);
+        assert!(cpu.bw_gbs_per_vcpu < base.bw_gbs_per_vcpu);
+        assert!(cpu.mem_stall_frac < base.mem_stall_frac);
+    }
+}

@@ -403,6 +403,103 @@ fn incremental_perf_model_matches_full_recompute() {
 }
 
 #[test]
+fn incremental_matches_oracle_under_scenario_events() {
+    // The scenario hooks — server drain/recovery, phase shifts, fabric
+    // degradation, diurnal load — must keep the dirty-tracked evaluator
+    // within 1e-9 of the from-scratch oracle (the PR-2 invariant extended
+    // to the scenario engine's mutation surface).
+    use dvrm::topology::ServerId;
+    use dvrm::workload::Phase;
+
+    #[derive(Clone, Copy)]
+    enum Ev {
+        Drain(usize),
+        Recover(usize),
+        Shift(usize, Phase),
+        Degrade(f64),
+        Restore,
+        Load(f64),
+        Destroy(usize),
+        None,
+    }
+
+    propcheck("incremental == full under scenario events", 6, |rng| {
+        let seed = rng.next_u64();
+        let phases = [Phase::MemoryHeavy, Phase::ComputeHeavy, Phase::WorkingSetGrowth];
+        let plan: Vec<Ev> = (0..14)
+            .map(|_| match rng.below(8) {
+                0 => Ev::Drain(rng.below(6)),
+                1 => Ev::Recover(rng.below(6)),
+                2 => Ev::Shift(rng.below(6), *rng.choose(&phases)),
+                3 => Ev::Degrade(rng.uniform(0.05, 0.9)),
+                4 => Ev::Restore,
+                5 => Ev::Load(rng.uniform(0.2, 1.3)),
+                6 => Ev::Destroy(rng.below(6)),
+                _ => Ev::None,
+            })
+            .collect();
+
+        let run = |incremental: bool| -> Vec<f64> {
+            let mut cfg = SimConfig::vanilla(seed);
+            cfg.incremental = incremental;
+            let mut sim = Simulator::new(Topology::paper(), cfg);
+            let mut ids = Vec::new();
+            for k in 0..6 {
+                let vm_type = if k % 2 == 0 { VmType::Medium } else { VmType::Small };
+                let id = sim.create(vm_type, App::ALL[k % App::ALL.len()]);
+                sim.start(id).unwrap();
+                ids.push(id);
+            }
+            let mut out = Vec::new();
+            for ev in &plan {
+                match *ev {
+                    // Drain/recover can legitimately fail (already drained,
+                    // last server, ...) — both runs fail identically.
+                    Ev::Drain(s) => {
+                        let _ = sim.drain_server(ServerId(s));
+                    }
+                    Ev::Recover(s) => {
+                        let _ = sim.recover_server(ServerId(s));
+                    }
+                    Ev::Shift(v, phase) if !ids.is_empty() => {
+                        let id = ids[v % ids.len()];
+                        let _ = sim.shift_phase(id, phase);
+                    }
+                    Ev::Degrade(x) => sim.degrade_fabric(x).unwrap(),
+                    Ev::Restore => sim.restore_fabric(),
+                    Ev::Load(x) => sim.set_global_load(x).unwrap(),
+                    Ev::Destroy(v) if !ids.is_empty() => {
+                        let id = ids.remove(v % ids.len());
+                        let _ = sim.destroy(id);
+                    }
+                    _ => {}
+                }
+                for _ in 0..3 {
+                    for (_, s) in sim.step() {
+                        out.push(s.perf);
+                        out.push(s.ipc);
+                        out.push(s.mpi);
+                        out.push(s.factors.lat);
+                        out.push(s.factors.bw);
+                    }
+                }
+            }
+            out
+        };
+        let inc = run(true);
+        let full = run(false);
+        prop_assert(inc.len() == full.len(), "sample count diverged")?;
+        for (k, (x, y)) in inc.iter().zip(full.iter()).enumerate() {
+            prop_assert(
+                (x - y).abs() <= 1e-9 * (1.0 + x.abs().max(y.abs())),
+                format!("sample {k}: incremental {x} vs full {y}"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn persistent_slot_map_always_matches_rebuild() {
     // Under arbitrary mapper-driven churn the simulator's incrementally
     // maintained slot map equals a from-scratch rebuild.

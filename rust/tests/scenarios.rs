@@ -1,0 +1,107 @@
+//! Scenario-engine integration tests: the determinism contract (same
+//! scenario + seed ⇒ bit-identical event log and metrics, across runs and
+//! across thread-pool sizes) and the acceptance comparison (coordinator
+//! beats LinuxSched on tail performance under churn and drain).
+
+use dvrm::experiments::Algorithm;
+use dvrm::scenario::{self, run_scenario, suite, ScenarioConfig, ScenarioMetrics, ScenarioResult};
+use dvrm::util::pool::ThreadPool;
+
+/// Everything deterministic: metrics + event log (wall clock stripped).
+fn strip_wall(results: &[ScenarioResult]) -> Vec<(ScenarioMetrics, Vec<(u64, String)>)> {
+    results.iter().map(|r| (r.metrics.clone(), r.event_log.clone())).collect()
+}
+
+#[test]
+fn same_scenario_and_seed_is_bit_identical() {
+    let spec = suite::named("churn", true).unwrap();
+    let cfg = ScenarioConfig::new(42);
+    for alg in [Algorithm::Vanilla, Algorithm::SmIpc] {
+        let a = run_scenario(&spec, alg, &cfg).unwrap();
+        let b = run_scenario(&spec, alg, &cfg).unwrap();
+        assert_eq!(a.metrics, b.metrics, "{alg:?}: metrics not reproducible");
+        assert_eq!(a.event_log, b.event_log, "{alg:?}: event log not reproducible");
+    }
+    let a = run_scenario(&spec, Algorithm::Vanilla, &cfg).unwrap();
+    let c = run_scenario(&spec, Algorithm::Vanilla, &ScenarioConfig::new(43)).unwrap();
+    assert_ne!(a.metrics, c.metrics, "different seeds must differ");
+}
+
+#[test]
+fn suite_results_identical_across_pool_sizes() {
+    let specs =
+        vec![suite::named("churn", true).unwrap(), suite::named("drain", true).unwrap()];
+    let cfg = ScenarioConfig::new(7);
+    let p1 = ThreadPool::new(1);
+    let p4 = ThreadPool::new(4);
+    let a = scenario::run_suite_on(&p1, &specs, &cfg).unwrap();
+    let b = scenario::run_suite_on(&p4, &specs, &cfg).unwrap();
+    assert_eq!(a.len(), 4);
+    assert_eq!(strip_wall(&a), strip_wall(&b), "pool size changed scenario results");
+}
+
+#[test]
+fn coordinator_beats_linux_sched_tail_in_churn_and_drain() {
+    // Acceptance criterion.  `p99_tail_rel` follows SLO convention: the
+    // relative performance of the 99th-percentile worst (VM, tick)
+    // sample — 99% of samples perform at least this well.
+    let cfg = ScenarioConfig::new(42);
+    for name in ["churn", "drain"] {
+        let spec = suite::named(name, true).unwrap();
+        let van = run_scenario(&spec, Algorithm::Vanilla, &cfg).unwrap().metrics;
+        let sm = run_scenario(&spec, Algorithm::SmIpc, &cfg).unwrap().metrics;
+        assert!(
+            sm.p99_tail_rel > van.p99_tail_rel,
+            "{name}: coordinator tail {:.3} must beat LinuxSched tail {:.3}",
+            sm.p99_tail_rel,
+            van.p99_tail_rel
+        );
+        assert!(
+            sm.p50_rel > van.p50_rel,
+            "{name}: coordinator p50 {:.3} must beat LinuxSched p50 {:.3}",
+            sm.p50_rel,
+            van.p50_rel
+        );
+        assert!(
+            sm.mean_rel > van.mean_rel,
+            "{name}: coordinator mean {:.3} must beat LinuxSched mean {:.3}",
+            sm.mean_rel,
+            van.mean_rel
+        );
+    }
+}
+
+#[test]
+fn all_five_scenarios_run_under_both_algorithms() {
+    let specs = suite::smoke_suite();
+    assert_eq!(specs.len(), 5);
+    let cfg = ScenarioConfig::new(5);
+    let results = scenario::run_suite(&specs, &cfg).unwrap();
+    assert_eq!(results.len(), 10, "5 scenarios x 2 algorithms");
+    for r in &results {
+        assert!(r.metrics.samples > 0, "{}: no samples", r.metrics.scenario);
+        assert!(r.metrics.mean_rel > 0.0, "{}: zero perf", r.metrics.scenario);
+        assert!(r.ticks_per_sec > 0.0);
+    }
+    // JSON export covers every record.
+    let json = scenario::to_json(&results);
+    for name in suite::SCENARIO_NAMES {
+        assert!(json.contains(&format!("\"scenario\": \"{name}\"")), "{name} missing");
+    }
+}
+
+#[test]
+fn degraded_fabric_scenario_applies_and_restores() {
+    let spec = suite::named("degraded-fabric", true).unwrap();
+    let r = run_scenario(&spec, Algorithm::SmIpc, &ScenarioConfig::new(9)).unwrap();
+    assert!(r.event_log.iter().any(|(_, d)| d.starts_with("degrade-fabric")));
+    assert!(r.event_log.iter().any(|(_, d)| d == "restore-fabric"));
+}
+
+#[test]
+fn diurnal_scenario_shifts_phases_and_load() {
+    let spec = suite::named("diurnal", true).unwrap();
+    let r = run_scenario(&spec, Algorithm::Vanilla, &ScenarioConfig::new(11)).unwrap();
+    assert!(r.event_log.iter().any(|(_, d)| d.starts_with("phase-shift")));
+    assert!(r.event_log.iter().any(|(_, d)| d.starts_with("set-load")));
+}

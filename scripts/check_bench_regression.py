@@ -1,0 +1,98 @@
+#!/usr/bin/env python3
+"""Bench regression gate for CI.
+
+Compares a fresh `BENCH_hotpath.json` (written by
+`cargo bench --bench bench_hotpath -- --quick`) against the committed
+baseline and fails on a >threshold slowdown of any benchmark present in
+both files.  All recorded metrics are seconds (lower is better), so a
+single rule covers scorer latencies and sim seconds-per-tick (the
+inverse of ticks/sec) alike.
+
+Exit codes: 0 = pass (or bootstrap: no baseline to compare against),
+1 = regression beyond threshold, 2 = usage/parse error.
+
+Override: set BENCH_OVERRIDE=true (the CI workflow sets it when the PR
+carries the `bench-regression-override` label) to report regressions
+without failing the job — for intentional trade-offs, with the artifact
+keeping the new numbers on record.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+
+def load(path):
+    with open(path, "r", encoding="utf-8") as f:
+        data = json.load(f)
+    out = {}
+    for b in data.get("benchmarks", []):
+        # min_s is the most stable statistic on shared CI runners.
+        out[b["name"]] = float(b.get("min_s", b.get("mean_s", 0.0)))
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", required=True, help="committed baseline JSON")
+    ap.add_argument("--current", required=True, help="freshly measured JSON")
+    ap.add_argument(
+        "--threshold",
+        type=float,
+        default=0.25,
+        help="allowed fractional slowdown (default 0.25 = 25%%)",
+    )
+    args = ap.parse_args()
+
+    if not os.path.exists(args.baseline):
+        print(
+            f"[bench-gate] no baseline at {args.baseline} — bootstrap run. "
+            "Commit the uploaded BENCH_hotpath.json artifact as the baseline "
+            "to arm the gate."
+        )
+        return 0
+    try:
+        base = load(args.baseline)
+        cur = load(args.current)
+    except (OSError, ValueError, KeyError) as e:
+        print(f"[bench-gate] cannot parse inputs: {e}")
+        return 2
+
+    common = sorted(set(base) & set(cur))
+    if not common:
+        print("[bench-gate] no common benchmark names — nothing to compare.")
+        return 0
+
+    override = os.environ.get("BENCH_OVERRIDE", "").lower() in ("1", "true", "yes")
+    regressions = []
+    print(f"[bench-gate] comparing {len(common)} benchmarks "
+          f"(threshold {args.threshold:.0%}, min_s, lower is better)")
+    for name in common:
+        b, c = base[name], cur[name]
+        if b <= 0.0:
+            continue
+        ratio = c / b - 1.0
+        flag = ""
+        if ratio > args.threshold:
+            regressions.append((name, ratio))
+            flag = "  << REGRESSION"
+        print(f"  {name:<44} base={b:.6g}s cur={c:.6g}s delta={ratio:+.1%}{flag}")
+
+    if regressions:
+        worst = max(r for _, r in regressions)
+        print(f"[bench-gate] {len(regressions)} regression(s), worst {worst:+.1%}")
+        if override:
+            print("[bench-gate] BENCH_OVERRIDE set (bench-regression-override "
+                  "label) — reporting only, not failing.")
+            return 0
+        print("[bench-gate] FAIL. If intentional, apply the "
+              "`bench-regression-override` label and re-run, then commit the "
+              "new BENCH_hotpath.json as the baseline.")
+        return 1
+    print("[bench-gate] OK — no benchmark regressed beyond the threshold.")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
