@@ -15,7 +15,9 @@
 //! the repo root so the perf trajectory is recorded across PRs.
 
 use dvrm::coordinator::{MapperConfig, Metric, SmMapper};
-use dvrm::experiments::figures::{full_eval_ticks, run_scale_config, scale_spec};
+use dvrm::experiments::figures::{
+    full_eval_ticks, run_scale_config, run_scale_mapper_config, scale_spec,
+};
 use dvrm::runtime::{CandidateBatch, Engine, Meta, ScoreProblem, Scorer, VmEntry, Weights};
 use dvrm::sim::{SimConfig, Simulator};
 use dvrm::topology::Topology;
@@ -127,6 +129,20 @@ fn main() {
         std::hint::black_box(mapper.interval(&mut sim).unwrap());
     }));
 
+    // Arrival decision latency: define → place (delta-scored against the
+    // persistent problem) → roll back, so slot state returns to baseline.
+    results.push(bench.run("mapper/arrival/20vms", || {
+        let id = sim.create(dvrm::vm::VmType::Small, App::Derby);
+        std::hint::black_box(mapper.place_arrival(&mut sim, id).unwrap());
+        sim.destroy(id).unwrap();
+    }));
+
+    // Worst-first reshuffle on the steady population: dominated by the
+    // O(V) misplacement scan once the system has settled.
+    results.push(bench.run("mapper/reshuffle/20vms", || {
+        std::hint::black_box(mapper.reshuffle(&mut sim).unwrap());
+    }));
+
     // Full monitoring pass (PJRT scorer) — the paper-relevant config.
     if let Some(engine) = Engine::load_default() {
         let mut sim2 = Simulator::new(topo, SimConfig::pinned(8));
@@ -154,6 +170,62 @@ fn main() {
             24,
         ));
     }));
+
+    // End-to-end churn scenario (sim + coordinator + scenario engine):
+    // the decision loop under live arrivals/departures.  Recorded as
+    // seconds-per-tick so the regression gate's lower-is-better rule
+    // applies unchanged.
+    {
+        let reps = if quick { 2 } else { 3 };
+        let spec = dvrm::scenario::suite::named("churn", true).expect("known scenario");
+        let scfg = dvrm::scenario::ScenarioConfig::new(7);
+        let samples: Vec<f64> = (0..reps)
+            .map(|_| {
+                let r = dvrm::scenario::run_scenario(
+                    &spec,
+                    dvrm::experiments::Algorithm::SmIpc,
+                    &scfg,
+                )
+                .unwrap();
+                1.0 / r.ticks_per_sec.max(1e-12)
+            })
+            .collect();
+        let res =
+            BenchResult { name: "mapper/churn_scenario/seconds_per_tick".into(), samples };
+        println!("{}", res.report());
+        results.push(res);
+    }
+
+    // Mapper decisions beyond the artifact shapes: pruned candidates +
+    // sparse delta scoring.  Recorded as seconds-per-arrival and
+    // seconds-per-monitoring-pass.  Populations sit at ~75–80% of
+    // schedulable threads (the coordinator never overbooks); the xlarge
+    // point (100 servers — the ROADMAP scale the delta path exists for)
+    // only runs in full mode.
+    let mapper_scales: &[(&str, usize, (usize, usize), usize, u64)] = if quick {
+        &[("sparse/12srv/100vms", 12, (4, 3), 100, 5)]
+    } else {
+        &[
+            ("sparse/12srv/100vms", 12, (4, 3), 100, 10),
+            ("xlarge/100srv/800vms", 100, (10, 10), 800, 3),
+        ]
+    };
+    let mapper_reps = if quick { 2 } else { 1 };
+    for &(name, servers, torus, vms, passes) in mapper_scales {
+        let mut arr_samples = Vec::new();
+        let mut int_samples = Vec::new();
+        for _ in 0..mapper_reps {
+            let (arr, intr) =
+                run_scale_mapper_config(scale_spec(servers, torus), vms, passes, 7).unwrap();
+            arr_samples.push(1.0 / arr.max(1e-12));
+            int_samples.push(1.0 / intr.max(1e-12));
+        }
+        for (kind, samples) in [("arrival", arr_samples), ("interval", int_samples)] {
+            let res = BenchResult { name: format!("mapper/{kind}/{name}"), samples };
+            println!("{}", res.report());
+            results.push(res);
+        }
+    }
 
     // Tick evaluation across topology scales: incremental vs the
     // pre-refactor full recompute.  The full evaluator's tick is O(V²·N),

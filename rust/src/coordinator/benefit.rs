@@ -67,6 +67,19 @@ impl BenefitMatrix {
         self.observations
     }
 
+    /// Expected fractional gain (0..1) of giving `class` its best
+    /// isolation level — the inverse of the 1–10 mapping `observe` applies.
+    /// The worst-first reshuffle uses this learned prior to scale per-VM
+    /// priorities: classes that historically gained more from isolation
+    /// are revisited first.
+    pub fn expected_gain(&self, class: AnimalClass) -> f64 {
+        let best = IsolationLevel::ALL
+            .iter()
+            .map(|l| self.get(*l, class))
+            .fold(f64::MIN, f64::max);
+        ((best - 1.0) / 9.0).clamp(0.0, 1.0)
+    }
+
     /// Render as the paper's Table 4 layout.
     pub fn to_table(&self) -> crate::util::table::Table {
         let mut t = crate::util::table::Table::new("Benefit Matrix (Table 4)")
@@ -150,6 +163,18 @@ mod tests {
             b.observe(ServerNode, Rabbit, 0.0);
         }
         assert_eq!(b.ranked_levels(Rabbit)[0], Socket);
+    }
+
+    #[test]
+    fn expected_gain_tracks_best_level() {
+        let b = BenefitMatrix::default();
+        // Devils: best initial level is ServerNode at 9 -> (9-1)/9.
+        assert!((b.expected_gain(Devil) - 8.0 / 9.0).abs() < 1e-9);
+        let mut b = BenefitMatrix::new(1.0);
+        for level in IsolationLevel::ALL {
+            b.observe(level, Sheep, 0.0); // every level decays to 1
+        }
+        assert_eq!(b.expected_gain(Sheep), 0.0);
     }
 
     #[test]

@@ -406,6 +406,93 @@ pub fn generate_with_bw(
     out
 }
 
+/// Distance-pruned variant of [`generate_with_bw`] for large topologies.
+///
+/// The unpruned generator seeds one anchor per server plus the globally
+/// emptiest nodes — O(servers) proximity fills per decision, which is the
+/// dominant candidate-generation cost at the ROADMAP's 100-server scale.
+/// This variant instead walks the precomputed [`Topology::nodes_by_distance`]
+/// order from `near` (or the globally emptiest available node), keeps only
+/// the first `k` nodes that are available, Table-3-compatible and have free
+/// capacity, and fills from those top-k anchors.
+///
+/// Pruning can only *narrow* the anchor set; every candidate it emits comes
+/// from the same strict [`proximity_fill`] / [`proximity_fill_capped`]
+/// machinery, so it never returns a placement the unpruned path would have
+/// rejected (overbooked, class-incompatible or drained) — property-tested.
+/// When the pruned walk leaves the scorer without a real choice (fewer
+/// than two candidates — scarce or fragmented systems, where anchor
+/// coverage matters more than decision latency), the unpruned path runs as
+/// a fallback and its candidates are merged in; the returned flag reports
+/// that fallback so the caller can log it.
+#[allow(clippy::too_many_arguments)]
+pub fn generate_pruned(
+    topo: &Topology,
+    slots: &SlotMap,
+    vcpus: usize,
+    class: AnimalClass,
+    near: Option<NodeId>,
+    max: usize,
+    bw_cap: usize,
+    k: usize,
+) -> (Vec<Assignment>, bool) {
+    let anchor0 = near.unwrap_or_else(|| {
+        (0..topo.num_nodes())
+            .map(NodeId)
+            .filter(|n| slots.node_available(*n))
+            .max_by_key(|n| slots.free_count(*n))
+            .unwrap_or(NodeId(0))
+    });
+    let mut out: Vec<Assignment> = Vec::new();
+    let mut picked = 0usize;
+    for &node in topo.nodes_by_distance(anchor0) {
+        if picked >= k || out.len() >= max {
+            break;
+        }
+        if !slots.node_available(node)
+            || slots.free_count(node) == 0
+            || !slots.node_compatible(node, class)
+        {
+            continue;
+        }
+        picked += 1;
+        if let Some(a) = proximity_fill(topo, slots, node, vcpus, class, true) {
+            if !out.contains(&a) {
+                out.push(a);
+            }
+        }
+        if bw_cap != usize::MAX && out.len() < max {
+            if let Some(a) =
+                proximity_fill_capped(topo, slots, node, vcpus, class, true, bw_cap)
+            {
+                if !out.contains(&a) {
+                    out.push(a);
+                }
+            }
+        }
+    }
+    if out.len() < max.min(2) {
+        // Fallback: the pruned walk left the scorer without a real choice
+        // (fewer than two candidates) — merge the unpruned anchor set so
+        // pruning never strands a decision the full path could have made.
+        // Deliberately NOT triggered by merely-short batches: on saturated
+        // systems the unpruned path would find little more, and running
+        // both generators on every decision would make pruning a pure
+        // overhead exactly where it should help.
+        for a in generate_with_bw(topo, slots, vcpus, class, near, max, bw_cap) {
+            if out.len() >= max {
+                break;
+            }
+            if !out.contains(&a) {
+                out.push(a);
+            }
+        }
+        (out, true)
+    } else {
+        (out, false)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -589,6 +676,61 @@ mod tests {
         slots.release(CpuId(0), AnimalClass::Sheep);
         slots.set_server_available(&topo, crate::topology::ServerId(0), true);
         assert_eq!(slots.total_free(), all_free);
+    }
+
+    #[test]
+    fn pruned_generation_fills_from_near_anchor_first() {
+        let topo = Topology::paper();
+        let slots = SlotMap::empty(&topo);
+        let (cands, fell_back) = generate_pruned(
+            &topo, &slots, 8, AnimalClass::Sheep, Some(NodeId(5)), 8, usize::MAX, 32,
+        );
+        assert!(!fell_back, "empty machine must not need the fallback");
+        assert_eq!(cands.len(), 8);
+        assert_eq!(cands[0].anchor, NodeId(5), "near anchor must come first");
+        for c in &cands {
+            assert_eq!(c.cpus.len(), 8);
+        }
+    }
+
+    #[test]
+    fn pruned_generation_skips_incompatible_and_drained_nodes() {
+        let topo = Topology::paper();
+        let mut sim = Simulator::new(topo.clone(), SimConfig::pinned(1));
+        // A devil on node 0 makes it rabbit-incompatible.
+        let devil = sim.create(VmType::Small, App::Fft);
+        sim.pin_all(devil, &[CpuId(0), CpuId(1), CpuId(2), CpuId(3)]).unwrap();
+        sim.place_memory(devil, &[(NodeId(0), 1.0)]).unwrap();
+        sim.start(devil).unwrap();
+        let mut slots = SlotMap::from_sim(&sim, None);
+        // Server 1 (nodes 6..12) is drained.
+        slots.set_server_available(&topo, crate::topology::ServerId(1), false);
+        let (cands, _) = generate_pruned(
+            &topo, &slots, 4, AnimalClass::Rabbit, Some(NodeId(0)), 8, usize::MAX, 36,
+        );
+        assert!(!cands.is_empty());
+        for c in &cands {
+            assert!(c.fractions[0].abs() < 1e-12, "rabbit placed with devil: {:?}", c.fractions);
+            for (n, f) in c.fractions.iter().enumerate() {
+                if *f > 0.0 {
+                    assert!(slots.node_available(NodeId(n)), "candidate on drained node {n}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pruned_generation_falls_back_when_scarce() {
+        let topo = Topology::tiny(); // 16 cpus
+        let mut slots = SlotMap::empty(&topo);
+        let a = proximity_fill(&topo, &slots, NodeId(0), 12, AnimalClass::Sheep, true).unwrap();
+        slots.commit(&topo, &a, AnimalClass::Sheep);
+        // 4 free cpus left: at most one distinct 4-cpu fill exists, so a
+        // request for 8 candidates must take (and report) the fallback.
+        let (cands, fell_back) =
+            generate_pruned(&topo, &slots, 4, AnimalClass::Sheep, None, 8, usize::MAX, 4);
+        assert!(fell_back, "scarce system must fall back to the unpruned path");
+        assert!(!cands.is_empty());
     }
 
     #[test]

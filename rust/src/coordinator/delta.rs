@@ -1,0 +1,667 @@
+//! The persistent, incrementally patched scoring problem behind every
+//! coordinator decision.
+//!
+//! Pre-PR, each `place_arrival` / `remap_vm` / `reshuffle` / `interval`
+//! call rebuilt the world from scratch: a sorted VM order, cloned
+//! [`VmEntry`]s, a fresh [`ScoreProblem`] (including the O(V²) class-pair
+//! matrix and the O(N²) padded distance matrix) and a fresh placement
+//! matrix.  [`DeltaProblem`] holds all of that *persistently* and patches
+//! only the rows the simulator's coordinator dirty set
+//! ([`Simulator::drain_coord_dirty`]) names — O(dirty) per decision
+//! instead of O(V·N + V²).
+//!
+//! Two complementary representations are maintained:
+//!
+//! * **Dense** (artifact-compatible systems: nodes ≤ compiled `num_nodes`
+//!   and VMs ≤ compiled `max_vms`): the actual padded [`ScoreProblem`]
+//!   plus the cached placement matrix, with rows kept sorted by [`VmId`]
+//!   exactly like the rebuilt path's `vm_order` — the patched matrices are
+//!   *bit-identical* to a fresh [`ScoreProblem::build`], so scorer results
+//!   (PJRT or native) and therefore decisions are unchanged
+//!   (property-tested).
+//! * **Sparse aggregates** (always maintained; the only representation
+//!   once the system outgrows the artifact shapes): per-node core load,
+//!   memory-bandwidth load and per-(node, class) placement mass.  They
+//!   power [`DeltaProblem::contribution`] — an O(|p|) per-candidate *delta* score
+//!   whose candidate ordering equals the full scorer's (the rest of the
+//!   system contributes a constant), which is what makes mapper decisions
+//!   tractable at the ROADMAP's 100-server scale where a full [V,N]
+//!   batch score would cost O(V²·N) per candidate.
+//!
+//! Mode policy: dense whenever the system fits the compiled shapes,
+//! sparse-only while it does not.  A population that temporarily
+//! outgrows `max_vms` on an artifact-sized topology spills to sparse
+//! scoring (counted in [`DeltaProblem`]`::sparse_spills` — pre-PR those
+//! decisions simply errored out) and returns to the dense path as soon
+//! as it fits again; each transition is one O(V·N + V²) row rebuild of a
+//! ≤32-row problem, i.e. negligible.  While the population fits, the
+//! dense path is always taken, so pre-existing behaviour is preserved
+//! bit-for-bit.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+use crate::runtime::{Meta, ScoreProblem, VmEntry, Weights};
+use crate::sim::Simulator;
+use crate::topology::{NodeId, Topology};
+use crate::vm::{VmId, VmState};
+use crate::workload::{pair_penalty, AnimalClass, AppProfile};
+
+/// Rebuild the sparse aggregates from the per-VM caches this often
+/// (bounds add/subtract float drift, same trick as `sim::incremental`).
+const AGG_REBUILD_EVERY: u32 = 4096;
+
+/// One tracked VM: the scorer-facing entry plus its cached placement row.
+#[derive(Debug, Clone)]
+struct TrackedVm {
+    entry: VmEntry,
+    /// Dense placement fractions (length = live topology nodes).
+    p: Vec<f64>,
+}
+
+/// Artifact-shaped dense state: the persistent padded problem and the
+/// cached placement matrix, rows sorted by [`VmId`].
+#[derive(Debug, Clone)]
+struct DenseState {
+    problem: ScoreProblem,
+    order: Vec<VmId>,
+    current: Vec<Vec<f64>>,
+}
+
+/// Shared aggregates for delta scoring (order-independent, so they need
+/// no row bookkeeping).
+#[derive(Debug, Clone)]
+struct AggState {
+    /// Σ cores·p per node.
+    core_load: Vec<f64>,
+    /// Σ bw·p per node (GB/s at full utilization).
+    bw_load: Vec<f64>,
+    /// Σ p per (node, animal-class index).
+    class_mass: Vec<[f64; 3]>,
+    /// `pen2[a][b]` = pair_penalty(a,b) + pair_penalty(b,a): both
+    /// directions of a class pair, since changing one VM's row touches
+    /// its victim *and* aggressor terms.
+    pen2: [[f64; 3]; 3],
+}
+
+impl AggState {
+    fn new(n: usize) -> Self {
+        let mut pen2 = [[0.0; 3]; 3];
+        for a in AnimalClass::ALL {
+            for b in AnimalClass::ALL {
+                pen2[a.index()][b.index()] = pair_penalty(a, b) + pair_penalty(b, a);
+            }
+        }
+        Self {
+            core_load: vec![0.0; n],
+            bw_load: vec![0.0; n],
+            class_mass: vec![[0.0; 3]; n],
+            pen2,
+        }
+    }
+
+    fn apply(&mut self, tv: &TrackedVm, sign: f64) {
+        let ci = tv.entry.profile.class.index();
+        let cores = tv.entry.vcpus as f64;
+        let bw = tv.entry.profile.bw_gbs_per_vcpu * cores;
+        for (j, &pj) in tv.p.iter().enumerate() {
+            if pj != 0.0 {
+                self.core_load[j] += sign * cores * pj;
+                self.bw_load[j] += sign * bw * pj;
+                self.class_mass[j][ci] += sign * pj;
+            }
+        }
+    }
+}
+
+/// Effective remote-sensitivity weight, matching what
+/// [`ScoreProblem::build`] writes into `s` (in f64 — the sparse path has
+/// no bit-parity contract with the f32 dense matrices).
+fn sens(profile: &AppProfile) -> f64 {
+    let base = if profile.sensitivity.is_sensitive() { 1.0 } else { 0.3 };
+    base * profile.mem_stall_frac.max(0.05)
+}
+
+/// The coordinator's persistent scoring problem.  See the module docs.
+#[derive(Debug, Clone)]
+pub struct DeltaProblem {
+    weights: Weights,
+    n_live: usize,
+    /// Schedulable hw threads per node (the dense problem's `cap`).
+    slots_per_node: f64,
+    /// Memory-controller bandwidth per node, GB/s (the dense `bwcap`).
+    node_bw: f64,
+    tracked: BTreeMap<VmId, TrackedVm>,
+    dense: Option<DenseState>,
+    /// Pristine empty dense problem (static d/cap/bwcap/w only), kept
+    /// whenever the *topology* fits the artifacts so the dense path can
+    /// be re-entered after a transient VM-count overgrowth.
+    template: Option<ScoreProblem>,
+    agg: AggState,
+    ops_since_rebuild: u32,
+    /// Rows patched in place (telemetry).
+    pub patches: u64,
+    /// Full dense-row rewrites after membership changes (telemetry).
+    pub row_rebuilds: u64,
+    /// Times the population outgrew the artifact row count and decisions
+    /// spilled to the sparse scorer (dense resumes once it fits again).
+    pub sparse_spills: u64,
+}
+
+impl DeltaProblem {
+    pub fn new(topo: &Topology, weights: Weights) -> Result<Self> {
+        let meta = Meta::expected();
+        let n_live = topo.num_nodes();
+        let template = if n_live <= meta.num_nodes {
+            Some(ScoreProblem::build(topo, &[], weights, meta)?)
+        } else {
+            None
+        };
+        let dense = template.as_ref().map(|t| DenseState {
+            problem: t.clone(),
+            order: Vec::new(),
+            current: Vec::new(),
+        });
+        Ok(Self {
+            weights,
+            n_live,
+            slots_per_node: (topo.spec.cores_per_node * topo.spec.threads_per_core) as f64,
+            node_bw: topo.spec.mem_bw_per_node_gbs,
+            tracked: BTreeMap::new(),
+            dense,
+            template,
+            agg: AggState::new(n_live),
+            ops_since_rebuild: 0,
+            patches: 0,
+            row_rebuilds: 0,
+            sparse_spills: 0,
+        })
+    }
+
+    /// Number of VMs with a live row.
+    pub fn len(&self) -> usize {
+        self.tracked.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tracked.is_empty()
+    }
+
+    pub fn contains(&self, id: VmId) -> bool {
+        self.tracked.contains_key(&id)
+    }
+
+    /// Tracked VMs in row order (sorted by id).
+    pub fn ids(&self) -> impl Iterator<Item = VmId> + '_ {
+        self.tracked.keys().copied()
+    }
+
+    /// `true` once the system outgrew the compiled artifact shapes and
+    /// scoring runs through the sparse delta path.
+    pub fn is_sparse(&self) -> bool {
+        self.dense.is_none()
+    }
+
+    /// Dense artifact-shaped problem + cached placement matrix, when the
+    /// system still fits the compiled shapes.
+    pub fn dense(&self) -> Option<(&ScoreProblem, &[Vec<f64>])> {
+        self.dense.as_ref().map(|d| (&d.problem, d.current.as_slice()))
+    }
+
+    /// Dense row index of `id`.
+    pub fn row_of(&self, id: VmId) -> Option<usize> {
+        self.dense.as_ref().and_then(|d| d.order.binary_search(&id).ok())
+    }
+
+    /// Current cached placement row of `id`.
+    pub fn current_row(&self, id: VmId) -> Option<&[f64]> {
+        self.tracked.get(&id).map(|tv| tv.p.as_slice())
+    }
+
+    // ---- synchronisation -------------------------------------------------
+
+    /// Drain the simulator's coordinator dirty set and patch only the
+    /// affected rows.  Returns the number of rows touched (0 on the
+    /// common clean-path decision).
+    pub fn sync(&mut self, sim: &mut Simulator) -> usize {
+        let dirty = sim.drain_coord_dirty();
+        if dirty.is_empty() {
+            return 0;
+        }
+        let mut membership = false;
+        let mut updated: Vec<VmId> = Vec::new();
+        let mut touched = 0usize;
+        for id in dirty {
+            match sim.get(id) {
+                Some(mvm) if mvm.vm.state == VmState::Running => {
+                    let entry = VmEntry {
+                        profile: mvm.profile.clone(),
+                        vcpus: mvm.vm.vcpus(),
+                        mem_fractions: mvm.vm.memory_fractions(self.n_live),
+                    };
+                    let p = mvm.placement_fractions(&sim.topo);
+                    if self.set_vm(id, entry, p) {
+                        membership = true;
+                    } else {
+                        updated.push(id);
+                    }
+                    touched += 1;
+                }
+                _ => {
+                    if self.forget(id) {
+                        membership = true;
+                        touched += 1;
+                    }
+                }
+            }
+        }
+        self.apply_dense(membership, &updated);
+        touched
+    }
+
+    /// Give `id` a row even though it is not running yet — the arrival
+    /// being placed scores jointly with the running population, exactly
+    /// like the rebuilt path's `include` row did.  Fails when the dense
+    /// problem is at artifact capacity on an artifact-sized topology
+    /// *and* the tracked population already uses every row (the same
+    /// "exceeds artifact capacity" error the rebuild raised).
+    pub fn ensure_row(&mut self, sim: &Simulator, id: VmId) -> Result<()> {
+        let mvm = sim.get(id).ok_or_else(|| anyhow!("no such vm {id}"))?;
+        let entry = VmEntry {
+            profile: mvm.profile.clone(),
+            vcpus: mvm.vm.vcpus(),
+            mem_fractions: mvm.vm.memory_fractions(self.n_live),
+        };
+        let p = mvm.placement_fractions(&sim.topo);
+        let fresh = self.set_vm(id, entry, p);
+        self.apply_dense(fresh, &[id]);
+        if let Some(d) = &self.dense {
+            if d.order.len() > d.problem.meta.max_vms {
+                // Unreachable (apply_dense switches to sparse first) but
+                // kept as a loud guard against artifact-shape corruption.
+                self.forget(id);
+                self.apply_dense(true, &[]);
+                return Err(anyhow!("delta problem over artifact capacity"));
+            }
+        }
+        Ok(())
+    }
+
+    /// Upsert the tracked entry + aggregates; returns true when `id` is new.
+    fn set_vm(&mut self, id: VmId, entry: VmEntry, p: Vec<f64>) -> bool {
+        let fresh = match self.tracked.remove(&id) {
+            Some(old) => {
+                self.agg.apply(&old, -1.0);
+                false
+            }
+            None => true,
+        };
+        let tv = TrackedVm { entry, p };
+        self.agg.apply(&tv, 1.0);
+        self.tracked.insert(id, tv);
+        self.bump_agg_ops();
+        fresh
+    }
+
+    /// Drop a VM's row + aggregate contributions; true if it was tracked.
+    fn forget(&mut self, id: VmId) -> bool {
+        match self.tracked.remove(&id) {
+            Some(old) => {
+                self.agg.apply(&old, -1.0);
+                self.bump_agg_ops();
+                true
+            }
+            None => false,
+        }
+    }
+
+    fn bump_agg_ops(&mut self) {
+        self.ops_since_rebuild += 1;
+        if self.ops_since_rebuild >= AGG_REBUILD_EVERY {
+            self.ops_since_rebuild = 0;
+            let mut agg = AggState::new(self.n_live);
+            for tv in self.tracked.values() {
+                agg.apply(tv, 1.0);
+            }
+            self.agg = agg;
+        }
+    }
+
+    /// Propagate tracked-state changes into the dense matrices: patch the
+    /// named rows in place, or rewrite the row block after a membership
+    /// change.  A population larger than the compiled row count spills to
+    /// sparse-only scoring; dense resumes from the pristine template as
+    /// soon as the population fits again.
+    fn apply_dense(&mut self, membership: bool, updated: &[VmId]) {
+        if self.dense.is_none() && membership {
+            if let Some(t) = &self.template {
+                if self.tracked.len() <= t.meta.max_vms {
+                    // Fits again: re-enter the dense path; the membership
+                    // rebuild below fills every row from the caches.
+                    self.dense = Some(DenseState {
+                        problem: t.clone(),
+                        order: Vec::new(),
+                        current: Vec::new(),
+                    });
+                }
+            }
+        }
+        let Some(d) = self.dense.as_mut() else { return };
+        if membership {
+            if self.tracked.len() > d.problem.meta.max_vms {
+                // Outgrew the artifact rows: sparse-only until it fits.
+                self.dense = None;
+                self.sparse_spills += 1;
+                return;
+            }
+            let old_len = d.order.len();
+            d.order.clear();
+            d.order.extend(self.tracked.keys().copied());
+            let classes: Vec<AnimalClass> =
+                self.tracked.values().map(|tv| tv.entry.profile.class).collect();
+            d.current.resize(d.order.len(), Vec::new());
+            for (i, tv) in self.tracked.values().enumerate() {
+                d.problem.set_entry(i, &tv.entry, &classes);
+                d.current[i].clear();
+                d.current[i].extend_from_slice(&tv.p);
+            }
+            for i in d.order.len()..old_len {
+                d.problem.clear_entry(i);
+            }
+            d.problem.set_vm_count(d.order.len());
+            self.row_rebuilds += 1;
+        } else if !updated.is_empty() {
+            let classes: Vec<AnimalClass> =
+                self.tracked.values().map(|tv| tv.entry.profile.class).collect();
+            for id in updated {
+                let Ok(i) = d.order.binary_search(id) else { continue };
+                let tv = &self.tracked[id];
+                d.problem.set_entry(i, &tv.entry, &classes);
+                d.current[i].clear();
+                d.current[i].extend_from_slice(&tv.p);
+                self.patches += 1;
+            }
+        }
+    }
+
+    // ---- delta scoring ---------------------------------------------------
+
+    /// Contribution of VM `id` to the global score if its placement row
+    /// were `p`, with every other VM fixed at its current placement and
+    /// `id`'s own current contribution excluded from the aggregates.
+    /// Differences between two candidates' contributions equal the
+    /// differences of the full scorer's totals for the corresponding
+    /// whole-system placements (the rest of the system is a constant), so
+    /// the argmin over candidates is the same — at O(|p|·|m|) per
+    /// candidate instead of O(V²·N).
+    pub fn contribution(&self, topo: &Topology, id: VmId, p: &[f64]) -> f64 {
+        let tv = &self.tracked[&id];
+        let e = &tv.entry;
+        let ci = e.profile.class.index();
+        let cores = e.vcpus as f64;
+        let bw = e.profile.bw_gbs_per_vcpu * cores;
+        let s = sens(&e.profile);
+
+        let mut loc = 0.0;
+        let mut cont = 0.0;
+        let mut over = 0.0;
+        let mut bwo = 0.0;
+        for (k, &pk) in p.iter().enumerate() {
+            if pk == 0.0 {
+                continue;
+            }
+            // Locality: distance from node k to this VM's memory.
+            let mut dm = 0.0;
+            for (j, &mj) in e.mem_fractions.iter().enumerate() {
+                if mj != 0.0 {
+                    dm += mj * topo.distance(NodeId(k), NodeId(j));
+                }
+            }
+            loc += pk * dm;
+
+            // Contention against the *other* VMs' class mass on node k.
+            let own = tv.p[k];
+            let counts = &self.agg.class_mass[k];
+            let mut c_k = 0.0;
+            for (cj, &mass) in counts.iter().enumerate() {
+                let others = mass - if cj == ci { own } else { 0.0 };
+                c_k += self.agg.pen2[ci][cj] * others;
+            }
+            cont += pk * c_k;
+
+            // Overload / bandwidth overload deltas vs the row-empty state.
+            let lw = self.agg.core_load[k] - cores * own;
+            let o_new = (lw + cores * pk - self.slots_per_node).max(0.0);
+            let o_old = (lw - self.slots_per_node).max(0.0);
+            over += o_new * o_new - o_old * o_old;
+            let bl = self.agg.bw_load[k] - bw * own;
+            let b_new = (bl + bw * pk - self.node_bw).max(0.0);
+            let b_old = (bl - self.node_bw).max(0.0);
+            bwo += b_new * b_new - b_old * b_old;
+        }
+        self.weights.locality as f64 * s * loc
+            + self.weights.contention as f64 * cont
+            + self.weights.overload as f64 * over
+            + self.weights.bandwidth as f64 * bwo
+    }
+
+    /// How much worse than an ideal isolated all-local placement this
+    /// VM's *current* row scores — the worst-first reshuffle priority
+    /// (0 = nothing to gain).
+    pub fn misplacement(&self, topo: &Topology, id: VmId) -> f64 {
+        let tv = &self.tracked[&id];
+        let s = sens(&tv.entry.profile);
+        let m_total: f64 = tv.entry.mem_fractions.iter().sum();
+        let p_total: f64 = tv.p.iter().sum();
+        // Best possible locality: every access at local distance (10).
+        let floor = self.weights.locality as f64 * s * 10.0 * m_total * p_total;
+        (self.contribution(topo, id, &tv.p) - floor).max(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::native;
+    use crate::sim::SimConfig;
+    use crate::topology::CpuId;
+    use crate::util::rng::Rng;
+    use crate::vm::VmType;
+    use crate::workload::App;
+
+    /// The pre-PR rebuild path, reproduced for the parity checks.
+    fn rebuild(sim: &Simulator, weights: Weights) -> (ScoreProblem, Vec<VmId>, Vec<Vec<f64>>) {
+        let mut order: Vec<VmId> = sim
+            .vms()
+            .filter(|(_, m)| m.vm.state == VmState::Running)
+            .map(|(id, _)| *id)
+            .collect();
+        order.sort();
+        let n = sim.topo.num_nodes();
+        let entries: Vec<VmEntry> = order
+            .iter()
+            .map(|id| {
+                let mvm = sim.get(*id).unwrap();
+                VmEntry {
+                    profile: mvm.profile.clone(),
+                    vcpus: mvm.vm.vcpus(),
+                    mem_fractions: mvm.vm.memory_fractions(n),
+                }
+            })
+            .collect();
+        let problem =
+            ScoreProblem::build(&sim.topo, &entries, weights, Meta::expected()).unwrap();
+        let current: Vec<Vec<f64>> =
+            order.iter().map(|id| sim.get(*id).unwrap().placement_fractions(&sim.topo)).collect();
+        (problem, order, current)
+    }
+
+    fn assert_dense_matches_rebuild(dp: &DeltaProblem, sim: &Simulator) {
+        let (want, order, current) = rebuild(sim, Weights::default());
+        let (got, got_current) = dp.dense().expect("paper topology stays dense");
+        assert_eq!(dp.ids().collect::<Vec<_>>(), order, "row order diverged");
+        assert_eq!(got.vms, want.vms);
+        assert_eq!(got.m, want.m, "memory matrix diverged");
+        assert_eq!(got.c, want.c, "class matrix diverged");
+        assert_eq!(got.s, want.s, "sensitivity diverged");
+        assert_eq!(got.cores, want.cores);
+        assert_eq!(got.bw, want.bw);
+        assert_eq!(got_current, current.as_slice(), "placement cache diverged");
+    }
+
+    #[test]
+    fn dense_stays_bit_identical_to_rebuild_under_churn() {
+        let mut rng = Rng::new(11);
+        let mut sim = Simulator::new(Topology::paper(), SimConfig::pinned(11));
+        let mut dp = DeltaProblem::new(&sim.topo, Weights::default()).unwrap();
+        let mut ids: Vec<VmId> = Vec::new();
+        for step in 0..40 {
+            match rng.below(4) {
+                0 => {
+                    let id = sim.create(VmType::Small, *rng.choose(&App::ALL));
+                    let base = rng.below(280);
+                    let cpus: Vec<CpuId> = (base..base + 4).map(CpuId).collect();
+                    sim.pin_all(id, &cpus).unwrap();
+                    sim.place_memory(id, &[(NodeId(rng.below(36)), 1.0)]).unwrap();
+                    sim.start(id).unwrap();
+                    ids.push(id);
+                }
+                1 if !ids.is_empty() => {
+                    let id = ids.remove(rng.below(ids.len()));
+                    sim.destroy(id).unwrap();
+                }
+                2 if !ids.is_empty() => {
+                    let id = ids[rng.below(ids.len())];
+                    sim.place_memory(id, &[(NodeId(rng.below(36)), 1.0)]).unwrap();
+                }
+                _ => {
+                    sim.step();
+                }
+            }
+            dp.sync(&mut sim);
+            assert_dense_matches_rebuild(&dp, &sim);
+            let _ = step;
+        }
+    }
+
+    #[test]
+    fn outgrowing_artifact_capacity_switches_to_sparse() {
+        let mut sim = Simulator::new(Topology::paper(), SimConfig::pinned(3));
+        let mut dp = DeltaProblem::new(&sim.topo, Weights::default()).unwrap();
+        for k in 0..40 {
+            let id = sim.create(VmType::Small, App::Sockshop);
+            let cpus: Vec<CpuId> = (k * 4..k * 4 + 4).map(CpuId).collect();
+            sim.pin_all(id, &cpus).unwrap();
+            sim.start(id).unwrap();
+        }
+        dp.sync(&mut sim);
+        assert_eq!(dp.len(), 40);
+        assert!(dp.is_sparse(), "33+ VMs must leave the dense artifacts behind");
+        assert!(dp.dense().is_none());
+        assert_eq!(dp.sparse_spills, 1);
+        // Delta scoring still ranks candidates sanely: of two *empty*
+        // (contention- and overload-free) nodes, the one closer to the
+        // victim's memory (first-touch on node 0) must score lower.
+        // 160 vcpus fill nodes 0..19; nodes 20..35 are empty.
+        let victim = dp.ids().next().unwrap();
+        let d0 = |n: usize| sim.topo.distance(NodeId(0), NodeId(n));
+        let near = (20..36).min_by(|a, b| d0(*a).partial_cmp(&d0(*b)).unwrap()).unwrap();
+        let far = (20..36).max_by(|a, b| d0(*a).partial_cmp(&d0(*b)).unwrap()).unwrap();
+        assert!(d0(near) < d0(far), "torus must expose distinct hop counts");
+        let cand = |n: usize| {
+            let mut p = vec![0.0; 36];
+            p[n] = 1.0;
+            p
+        };
+        let c_near = dp.contribution(&sim.topo, victim, &cand(near));
+        let c_far = dp.contribution(&sim.topo, victim, &cand(far));
+        assert!(c_near >= 0.0 && c_far >= 0.0, "contributions are sums of penalties");
+        assert!(c_near < c_far, "closer empty node must score better: {c_near} vs {c_far}");
+
+        // Destroys shrink the population back under the artifact row
+        // count: the dense path resumes from the template and is again
+        // bit-identical to a fresh rebuild.
+        let ids: Vec<VmId> = dp.ids().collect();
+        for id in ids.iter().take(20) {
+            sim.destroy(*id).unwrap();
+        }
+        dp.sync(&mut sim);
+        assert!(!dp.is_sparse(), "population fits again -> dense resumes");
+        assert_dense_matches_rebuild(&dp, &sim);
+    }
+
+    #[test]
+    fn contribution_deltas_match_full_scorer() {
+        // The delta-vs-full oracle at module level: for random candidate
+        // rows, contribution differences must match the full native
+        // scorer's total differences (f32 tolerance).
+        let mut rng = Rng::new(7);
+        let mut sim = Simulator::new(Topology::paper(), SimConfig::pinned(7));
+        let mut ids = Vec::new();
+        for k in 0..6 {
+            let id = sim.create(VmType::Small, *rng.choose(&App::ALL));
+            let cpus: Vec<CpuId> = (k * 8..k * 8 + 4).map(CpuId).collect();
+            sim.pin_all(id, &cpus).unwrap();
+            sim.place_memory(id, &[(NodeId(rng.below(36)), 1.0)]).unwrap();
+            sim.start(id).unwrap();
+            ids.push(id);
+        }
+        let mut dp = DeltaProblem::new(&sim.topo, Weights::default()).unwrap();
+        dp.sync(&mut sim);
+        let (problem, current) = dp.dense().unwrap();
+        let victim = ids[2];
+        let row = dp.row_of(victim).unwrap();
+
+        let mut cands: Vec<Vec<f64>> = Vec::new();
+        for _ in 0..6 {
+            let mut p = vec![0.0; 36];
+            for f in rng.simplex(3) {
+                p[rng.below(36)] += f;
+            }
+            let sum: f64 = p.iter().sum();
+            p.iter_mut().for_each(|x| *x /= sum);
+            cands.push(p);
+        }
+        let full: Vec<f64> = cands
+            .iter()
+            .map(|cand| {
+                let mut rows = current.to_vec();
+                rows[row] = cand.clone();
+                native::score_one(problem, &rows).total as f64
+            })
+            .collect();
+        let delta: Vec<f64> =
+            cands.iter().map(|cand| dp.contribution(&sim.topo, victim, cand)).collect();
+        for i in 0..cands.len() {
+            for j in 0..cands.len() {
+                let want = full[i] - full[j];
+                let got = delta[i] - delta[j];
+                assert!(
+                    (want - got).abs() <= 1e-3 * (1.0 + want.abs()),
+                    "delta mismatch ({i},{j}): full {want} vs delta {got}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn misplacement_is_zero_for_ideal_and_positive_for_remote() {
+        let mut sim = Simulator::new(Topology::paper(), SimConfig::pinned(5));
+        let good = sim.create(VmType::Small, App::Stream);
+        sim.pin_all(good, &(0..4).map(CpuId).collect::<Vec<_>>()).unwrap();
+        sim.place_memory(good, &[(NodeId(0), 1.0)]).unwrap();
+        sim.start(good).unwrap();
+        let bad = sim.create(VmType::Small, App::Stream);
+        sim.pin_all(bad, &(8..12).map(CpuId).collect::<Vec<_>>()).unwrap();
+        sim.place_memory(bad, &[(NodeId(24), 1.0)]).unwrap();
+        sim.start(bad).unwrap();
+        let mut dp = DeltaProblem::new(&sim.topo, Weights::default()).unwrap();
+        dp.sync(&mut sim);
+        let m_good = dp.misplacement(&sim.topo, good);
+        let m_bad = dp.misplacement(&sim.topo, bad);
+        assert!(m_good < 1e-9, "local isolated VM should have ~0 misplacement: {m_good}");
+        assert!(m_bad > 1.0, "2-hop remote VM must rank high: {m_bad}");
+        assert!(m_bad > m_good);
+    }
+}

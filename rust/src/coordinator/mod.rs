@@ -5,7 +5,12 @@
 //!   reshuffle.  Variants SM-IPC / SM-MPI via [`mapper::Metric`].
 //! * [`candidates`] — slot accounting + proximity-fill candidate
 //!   generation under the paper's constraints (no overbooking, minimal
-//!   slicing, Table 3 class compatibility).
+//!   slicing, Table 3 class compatibility), with distance-pruned anchor
+//!   selection for large topologies.
+//! * [`delta`] — the persistent, dirty-set-patched scoring problem every
+//!   decision reads instead of rebuilding the world (dense artifact
+//!   matrices while the system fits the compiled shapes; sparse O(|p|)
+//!   delta scoring beyond them).
 //! * [`benefit`] — the dynamically learned benefit matrix (Table 4).
 //!
 //! Candidate scoring runs on the AOT-compiled JAX/Pallas artifacts through
@@ -15,9 +20,11 @@
 pub mod admission;
 pub mod benefit;
 pub mod candidates;
+pub mod delta;
 pub mod mapper;
 
 pub use admission::{AdmissionConfig, AdmissionController, Decision};
 pub use benefit::BenefitMatrix;
 pub use candidates::{Assignment, SlotMap};
+pub use delta::DeltaProblem;
 pub use mapper::{classify_isolation, IntervalReport, MapperConfig, MapperStats, Metric, SmMapper};

@@ -638,6 +638,52 @@ pub fn run_scale_config(
     Ok(ticks as f64 / t0.elapsed().as_secs_f64().max(1e-9))
 }
 
+/// One timed mapper-decision loop at `(spec, vms)`: admit `vms` through
+/// `place_arrival` (persistent delta problem; pruned candidates and
+/// sparse O(|p|) delta scoring once the system outgrows the compiled
+/// artifact shapes), then run `passes` monitoring intervals with a sim
+/// tick between each.  Returns `(arrivals/sec, intervals/sec)`.  Public
+/// so `bench_hotpath` records the same configurations the `scale`
+/// experiment reports.
+pub fn run_scale_mapper_config(
+    spec: TopologySpec,
+    vms: usize,
+    passes: u64,
+    seed: u64,
+) -> Result<(f64, f64)> {
+    use crate::coordinator::SmMapper;
+    use crate::runtime::Scorer;
+
+    let topo = Topology::build(spec);
+    let mut cfg = SimConfig::pinned(seed);
+    cfg.mem.chunk_mb = 512;
+    cfg.history_cap = 8;
+    let mut sim = Simulator::new(topo, cfg);
+    let mut mapper = SmMapper::new(MapperConfig::new(Metric::Ipc), Scorer::Native);
+    let t0 = std::time::Instant::now();
+    let mut placed = 0usize;
+    for k in 0..vms {
+        let app = App::ALL[k % App::ALL.len()];
+        let vm_type = if k % 8 == 0 { VmType::Medium } else { VmType::Small };
+        let id = sim.create(vm_type, app);
+        if mapper.place_arrival(&mut sim, id).is_ok() {
+            sim.start(id)?;
+            placed += 1;
+        } else {
+            sim.destroy(id)?;
+        }
+    }
+    let arrivals_per_sec = placed as f64 / t0.elapsed().as_secs_f64().max(1e-9);
+    sim.step(); // warmup: registers every VM with the evaluator
+    let t1 = std::time::Instant::now();
+    for _ in 0..passes {
+        sim.step();
+        mapper.interval(&mut sim)?;
+    }
+    let intervals_per_sec = passes as f64 / t1.elapsed().as_secs_f64().max(1e-9);
+    Ok((arrivals_per_sec, intervals_per_sec))
+}
+
 /// EXP-SCALE: simulator tick throughput as the system grows toward the
 /// ROADMAP's production scale — the incremental evaluator head-to-head
 /// against the pre-refactor from-scratch evaluator, up to 100 servers /
@@ -672,6 +718,35 @@ pub fn scale(o: &ExpOptions) -> Result<Output> {
             speedup_col,
         ]);
     }
-    let text = t.render();
-    Ok(Output { text, tables: vec![("scale".into(), t)] })
+
+    // Coordinator decision throughput (this PR's headline): the mapper
+    // places the whole population and then runs monitoring passes, with
+    // every decision served by the persistent delta problem.  Beyond the
+    // artifact shapes (>36 nodes / >32 VMs) this path did not exist
+    // pre-delta: every decision errored out.  Unlike the overbooking
+    // vanilla tick sweep above, the coordinator never overbooks, so VM
+    // counts are sized to ~75–80% of schedulable threads (48/server):
+    // saturating arrivals would mostly time the failure/repack path.
+    let mapper_sweep: &[(usize, (usize, usize), usize, u64)] = if o.fast {
+        &[(6, (3, 2), 50, 5), (12, (4, 3), 100, 5)]
+    } else {
+        &[(6, (3, 2), 60, 10), (24, (6, 4), 200, 10), (100, (10, 10), 800, 5)]
+    };
+    let mut tm = Table::new("EXP-SCALE-MAPPER: coordinator decision throughput (delta-scored)")
+        .header(&["servers", "nodes", "vms", "arrivals/s", "intervals/s"]);
+    for &(servers, torus, vms, passes) in mapper_sweep {
+        let spec = scale_spec(servers, torus);
+        let nodes = spec.num_nodes();
+        let (arr, intr) = run_scale_mapper_config(spec, vms, passes, o.seed)?;
+        tm.row(vec![
+            servers.to_string(),
+            nodes.to_string(),
+            vms.to_string(),
+            format!("{arr:.1}"),
+            format!("{intr:.2}"),
+        ]);
+    }
+
+    let text = format!("{}\n{}", t.render(), tm.render());
+    Ok(Output { text, tables: vec![("scale".into(), t), ("scale_mapper".into(), tm)] })
 }

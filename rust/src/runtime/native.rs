@@ -59,6 +59,15 @@ pub fn score_batch_parallel(problem: &ScoreProblem, batch: &CandidateBatch) -> V
         .collect()
 }
 
+/// Score a single whole-system placement (a one-candidate batch) — the
+/// reference the delta-scoring oracle tests compare against, and the
+/// cheapest way to get a baseline score for one configuration.
+pub fn score_one(problem: &ScoreProblem, placement: &[Vec<f64>]) -> ScoreOut {
+    let mut b = CandidateBatch::zeroed(problem.meta, 1);
+    b.push(placement);
+    score_batch(problem, &b)[0]
+}
+
 /// Score every live candidate in the batch.
 pub fn score_batch(problem: &ScoreProblem, batch: &CandidateBatch) -> Vec<ScoreOut> {
     let v = problem.meta.max_vms;

@@ -6,7 +6,7 @@ use anyhow::{bail, Result};
 
 use super::shapes::Meta;
 use crate::topology::Topology;
-use crate::workload::{pair_penalty, AppProfile};
+use crate::workload::{pair_penalty, AnimalClass, AppProfile};
 
 /// Cost-model weights `(w_loc, w_cont, w_over, w_bw)` — see `ref.py`.
 #[derive(Debug, Clone, Copy)]
@@ -156,6 +156,58 @@ impl ScoreProblem {
         }
         self
     }
+
+    // ---- in-place patching (the coordinator's persistent DeltaProblem) --
+
+    /// Overwrite row `i`'s per-VM inputs in place: memory fractions,
+    /// sensitivity, cores, bandwidth, and the class-pair row *and* column
+    /// against `classes` (the animal class of every live row, `classes[i]`
+    /// included).  Writes exactly the values [`Self::build`] would write
+    /// for the same entry — bit-identical, so a patched problem equals a
+    /// fresh rebuild (property-tested in `tests/properties.rs`).
+    pub fn set_entry(&mut self, i: usize, e: &VmEntry, classes: &[AnimalClass]) {
+        let (v, n) = (self.meta.max_vms, self.meta.num_nodes);
+        assert!(i < v, "row {i} out of range ({v} max)");
+        assert!(classes.len() <= v, "class list exceeds problem rows");
+        self.bw[i] = (e.profile.bw_gbs_per_vcpu * e.vcpus as f64) as f32;
+        let mrow = &mut self.m[i * n..(i + 1) * n];
+        mrow.iter_mut().for_each(|x| *x = 0.0);
+        for (j, f) in e.mem_fractions.iter().enumerate().take(n) {
+            mrow[j] = *f as f32;
+        }
+        self.s[i] = if e.profile.sensitivity.is_sensitive() { 1.0 } else { 0.3 };
+        self.s[i] *= (e.profile.mem_stall_frac as f32).max(0.05);
+        self.cores[i] = e.vcpus as f32;
+        for (j, cj) in classes.iter().enumerate() {
+            if j == i {
+                self.c[i * v + i] = 0.0;
+            } else {
+                self.c[i * v + j] = pair_penalty(e.profile.class, *cj) as f32;
+                self.c[j * v + i] = pair_penalty(*cj, e.profile.class) as f32;
+            }
+        }
+    }
+
+    /// Zero row `i` back to padding state (per-VM inputs plus its class
+    /// row and column) — the removal half of the patch protocol.
+    pub fn clear_entry(&mut self, i: usize) {
+        let (v, n) = (self.meta.max_vms, self.meta.num_nodes);
+        assert!(i < v, "row {i} out of range ({v} max)");
+        self.m[i * n..(i + 1) * n].iter_mut().for_each(|x| *x = 0.0);
+        self.s[i] = 0.0;
+        self.cores[i] = 0.0;
+        self.bw[i] = 0.0;
+        for j in 0..v {
+            self.c[i * v + j] = 0.0;
+            self.c[j * v + i] = 0.0;
+        }
+    }
+
+    /// Set the live VM count after patching rows.
+    pub fn set_vm_count(&mut self, vms: usize) {
+        assert!(vms <= self.meta.max_vms, "{vms} VMs exceed {}", self.meta.max_vms);
+        self.vms = vms;
+    }
 }
 
 /// A candidate batch: `B` placements, each `[V, N]` row-major fractions.
@@ -192,6 +244,22 @@ impl CandidateBatch {
 
     pub fn is_empty(&self) -> bool {
         self.len == 0
+    }
+
+    /// Append a candidate equal to `placement` with row `row` replaced by
+    /// `replacement` — the mapper's one-row-varies case, without cloning
+    /// the whole placement matrix per candidate.
+    pub fn push_with_row(&mut self, placement: &[Vec<f64>], row: usize, replacement: &[f64]) {
+        assert!(self.len < self.batch, "batch full");
+        let (v, n) = (self.meta.max_vms, self.meta.num_nodes);
+        let base = self.len * v * n;
+        for (i, r) in placement.iter().enumerate().take(v) {
+            let src: &[f64] = if i == row { replacement } else { r.as_slice() };
+            for (j, f) in src.iter().enumerate().take(n) {
+                self.p[base + i * n + j] = *f as f32;
+            }
+        }
+        self.len += 1;
     }
 }
 
@@ -272,6 +340,70 @@ mod tests {
         assert_eq!(b.p[1 * 36 + 0], 0.5);
         // second candidate region untouched
         assert!(b.p[32 * 36..].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn set_entry_patches_to_exactly_a_fresh_build() {
+        let topo = Topology::paper();
+        let meta = Meta::expected();
+        let e1 = entry(App::Neo4j, 8, 0, 36);
+        let e2 = entry(App::Stream, 4, 1, 36);
+        let e3 = entry(App::Fft, 2, 5, 36);
+        let want =
+            ScoreProblem::build(&topo, &[e1.clone(), e3.clone()], Weights::default(), meta)
+                .unwrap();
+        // Start from a different population and patch row 1 into place.
+        let mut got =
+            ScoreProblem::build(&topo, &[e1.clone(), e2], Weights::default(), meta).unwrap();
+        let classes = [e1.profile.class, e3.profile.class];
+        got.set_entry(1, &e3, &classes);
+        got.set_vm_count(2);
+        assert_eq!(got.m, want.m);
+        assert_eq!(got.c, want.c);
+        assert_eq!(got.s, want.s);
+        assert_eq!(got.cores, want.cores);
+        assert_eq!(got.bw, want.bw);
+        assert_eq!(got.vms, want.vms);
+    }
+
+    #[test]
+    fn clear_entry_restores_padding_state() {
+        let topo = Topology::paper();
+        let meta = Meta::expected();
+        let e1 = entry(App::Neo4j, 8, 0, 36);
+        let e2 = entry(App::Stream, 4, 1, 36);
+        let want = ScoreProblem::build(&topo, &[e1.clone()], Weights::default(), meta).unwrap();
+        let mut got =
+            ScoreProblem::build(&topo, &[e1, e2], Weights::default(), meta).unwrap();
+        got.clear_entry(1);
+        got.set_vm_count(1);
+        assert_eq!(got.m, want.m);
+        assert_eq!(got.c, want.c);
+        assert_eq!(got.s, want.s);
+        assert_eq!(got.cores, want.cores);
+        assert_eq!(got.bw, want.bw);
+    }
+
+    #[test]
+    fn push_with_row_equals_push_of_mutated_rows() {
+        let meta = Meta::expected();
+        let mut rows = vec![vec![0.0; 36]; 3];
+        rows[0][3] = 1.0;
+        rows[1][0] = 0.5;
+        rows[1][1] = 0.5;
+        rows[2][7] = 1.0;
+        let mut replacement = vec![0.0; 36];
+        replacement[12] = 0.25;
+        replacement[13] = 0.75;
+
+        let mut a = CandidateBatch::zeroed(meta, 8);
+        a.push_with_row(&rows, 1, &replacement);
+        let mut mutated = rows.clone();
+        mutated[1] = replacement;
+        let mut b = CandidateBatch::zeroed(meta, 8);
+        b.push(&mutated);
+        assert_eq!(a.p, b.p);
+        assert_eq!(a.len, b.len);
     }
 
     #[test]

@@ -64,6 +64,8 @@ pub struct ScenarioMetrics {
     /// (the 1st percentile of relative performance).
     pub p99_tail_rel: f64,
     pub remaps: u64,
+    /// Worst-first reshuffle passes (arrival-capacity fallback).
+    pub reshuffles: u64,
     pub evacuations: u64,
     pub sched_moves: usize,
     pub migrations_started: usize,
@@ -271,6 +273,10 @@ pub fn run_scenario(
                 samples.push(s.rel_perf);
             }
         }
+        // The mapper's persistent DeltaProblem carries over between
+        // monitoring passes (and arrivals/drains above): each interval
+        // patches only the rows the simulator dirtied since the last
+        // decision instead of rebuilding the scoring problem.
         if let Some(m) = mapper.as_mut() {
             if t % m.cfg.interval == 0 {
                 m.interval(&mut sim)?;
@@ -279,9 +285,9 @@ pub fn run_scenario(
     }
     let wall = t0.elapsed().as_secs_f64().max(1e-9);
 
-    let (remaps, evacuations) = match &mapper {
-        Some(m) => (m.stats.remaps, m.stats.evacuations),
-        None => (0, 0),
+    let (remaps, reshuffles, evacuations) = match &mapper {
+        Some(m) => (m.stats.remaps, m.stats.reshuffles, m.stats.evacuations),
+        None => (0, 0, 0),
     };
     let metrics = ScenarioMetrics {
         scenario: spec.name.clone(),
@@ -292,6 +298,7 @@ pub fn run_scenario(
         p50_rel: if samples.is_empty() { 0.0 } else { stats::percentile(&samples, 50.0) },
         p99_tail_rel: if samples.is_empty() { 0.0 } else { stats::percentile(&samples, 1.0) },
         remaps,
+        reshuffles,
         evacuations,
         sched_moves: sim.trace.total_sched_moves(),
         migrations_started: sim.trace.count_kind("mem_migration_started"),

@@ -135,7 +135,8 @@ pub fn to_json(results: &[ScenarioResult]) -> String {
         out.push_str(&format!(
             "    {{\"scenario\": \"{}\", \"algorithm\": \"{}\", \"vms\": {}, \
              \"samples\": {}, \"mean_rel\": {:.6}, \"p50_rel\": {:.6}, \
-             \"p99_tail_rel\": {:.6}, \"remaps\": {}, \"evacuations\": {}, \
+             \"p99_tail_rel\": {:.6}, \"remaps\": {}, \"reshuffles\": {}, \
+             \"evacuations\": {}, \
              \"sched_moves\": {}, \"migrations_started\": {}, \"gb_moved\": {:.3}, \
              \"rejected\": {}, \"readmitted\": {}, \"events\": {}, \
              \"ticks_per_sec\": {:.1}}}{}\n",
@@ -147,6 +148,7 @@ pub fn to_json(results: &[ScenarioResult]) -> String {
             m.p50_rel,
             m.p99_tail_rel,
             m.remaps,
+            m.reshuffles,
             m.evacuations,
             m.sched_moves,
             m.migrations_started,

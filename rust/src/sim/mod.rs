@@ -156,6 +156,13 @@ pub struct Simulator {
     /// VMs whose placement (`p`), memory distribution (`m`) or live
     /// profile changed since the evaluator last cached them.
     dirty: BTreeSet<VmId>,
+    /// Same events, tracked separately for the coordinator: the mapper's
+    /// persistent [`crate::coordinator::DeltaProblem`] drains this set
+    /// ([`Self::drain_coord_dirty`]) to patch only the changed rows of its
+    /// scoring problem instead of rebuilding it per decision.  Destroyed
+    /// VMs stay in the set (unlike `dirty`) so the consumer learns about
+    /// the removal.
+    coord_dirty: BTreeSet<VmId>,
     /// Dirty-tracked joint performance model.
     inc: IncrementalEvaluator,
     /// Drained servers (scenario engine): unschedulable and blocked for
@@ -188,6 +195,7 @@ impl Simulator {
             trace: EventTrace::default(),
             slot_map,
             dirty: BTreeSet::new(),
+            coord_dirty: BTreeSet::new(),
             inc,
             offline: BTreeSet::new(),
             fabric_health: 1.0,
@@ -291,6 +299,7 @@ impl Simulator {
         }
         mvm.vm.state = VmState::Running;
         self.dirty.insert(id);
+        self.coord_dirty.insert(id);
         self.trace.push(self.tick, Event::Booted { vm: id });
         Ok(())
     }
@@ -325,6 +334,7 @@ impl Simulator {
                     }
                     self.slot_map.occupy(cpu, class);
                     self.dirty.insert(id);
+                    self.coord_dirty.insert(id);
                 }
             }
             mvm.vm.state == VmState::Running
@@ -398,6 +408,7 @@ impl Simulator {
             mvm.pages.place(dist);
             mvm.vm.mem_gb_per_node = mvm.pages.to_dist();
             self.dirty.insert(id);
+            self.coord_dirty.insert(id);
             return Ok(None);
         }
 
@@ -427,6 +438,7 @@ impl Simulator {
             }
         }
         self.dirty.remove(&id);
+        self.coord_dirty.insert(id);
         self.inc.remove(id);
         self.migrations.cancel_vm(id);
         self.sync_sched_load();
@@ -556,6 +568,7 @@ impl Simulator {
         mvm.profile = phase.apply(&mvm.vm.app.profile());
         mvm.phase = phase;
         self.dirty.insert(id);
+        self.coord_dirty.insert(id);
         self.trace.push(self.tick, Event::PhaseShifted { vm: id, phase: phase.name() });
         Ok(())
     }
@@ -582,7 +595,8 @@ impl Simulator {
             .filter(|(_, m)| m.vm.state == VmState::Running)
             .map(|(id, _)| *id)
             .collect();
-        self.dirty.extend(running);
+        self.dirty.extend(running.iter().copied());
+        self.coord_dirty.extend(running);
     }
 
     fn sync_offline_mask(&mut self) {
@@ -656,6 +670,7 @@ impl Simulator {
                 // Ownership moved -> the heat-weighted memory distribution
                 // this VM feeds the perf model changed.
                 self.dirty.insert(c.vm);
+                self.coord_dirty.insert(c.vm);
             }
         }
         for (vm, gb) in &outcome.gb_moved {
@@ -723,6 +738,7 @@ impl Simulator {
                     }
                 }
                 self.dirty.insert(*id);
+                self.coord_dirty.insert(*id);
             }
             let mvm = self.vms.get_mut(id).unwrap();
             for (k, i) in idxs.iter().enumerate() {
@@ -906,6 +922,21 @@ impl Simulator {
     /// O(VMs × vCPUs) rebuild.
     pub fn slots(&self) -> &SlotMap {
         &self.slot_map
+    }
+
+    /// Take the set of VMs whose placement, memory distribution or live
+    /// profile changed since the coordinator last looked — plus destroyed
+    /// VMs (still present here after removal, unlike the evaluator's
+    /// internal dirty set).  The mapper's persistent `DeltaProblem` drains
+    /// this to patch only the affected scoring-problem rows.
+    ///
+    /// **Single-consumer contract**: draining is destructive, so exactly
+    /// one coordinator may sync against a simulator.  Attaching a second
+    /// `SmMapper` to an already-driven simulator would leave its problem
+    /// missing every row drained before it was created — create one
+    /// mapper per simulator (every harness/scenario/experiment path does).
+    pub fn drain_coord_dirty(&mut self) -> BTreeSet<VmId> {
+        std::mem::take(&mut self.coord_dirty)
     }
 
     /// Run `f` over the slot map as if `id` were absent — how the

@@ -2,15 +2,15 @@
 //! invariants that must hold for *any* workload, placement or trace.
 
 use dvrm::coordinator::candidates::{self, SlotMap};
-use dvrm::coordinator::{MapperConfig, Metric, SmMapper};
+use dvrm::coordinator::{DeltaProblem, MapperConfig, Metric, SmMapper};
 use dvrm::mem::MemPolicy;
 use dvrm::runtime::{native, CandidateBatch, Meta, ScoreProblem, Scorer, VmEntry, Weights};
 use dvrm::sim::{perf_model, ModelParams, SimConfig, Simulator, VmView};
-use dvrm::topology::{CpuId, NodeId, Topology};
+use dvrm::topology::{CpuId, NodeId, ServerId, Topology};
 use dvrm::util::rng::Rng;
 use dvrm::util::testkit::{prop_assert, propcheck};
-use dvrm::vm::VmType;
-use dvrm::workload::{App, AnimalClass};
+use dvrm::vm::{VmId, VmState, VmType};
+use dvrm::workload::{App, AnimalClass, Phase};
 
 fn random_entries(rng: &mut Rng, topo: &Topology, n_vms: usize) -> Vec<VmEntry> {
     (0..n_vms)
@@ -494,6 +494,175 @@ fn incremental_matches_oracle_under_scenario_events() {
                 (x - y).abs() <= 1e-9 * (1.0 + x.abs().max(y.abs())),
                 format!("sample {k}: incremental {x} vs full {y}"),
             )?;
+        }
+        Ok(())
+    });
+}
+
+/// The pre-delta rebuild path, reproduced as the oracle: sorted running
+/// population, fresh entries, fresh `ScoreProblem`, fresh placements.
+fn rebuild_problem(sim: &Simulator) -> (ScoreProblem, Vec<VmId>, Vec<Vec<f64>>) {
+    let mut order: Vec<VmId> = sim
+        .vms()
+        .filter(|(_, m)| m.vm.state == VmState::Running)
+        .map(|(id, _)| *id)
+        .collect();
+    order.sort();
+    let n = sim.topo.num_nodes();
+    let entries: Vec<VmEntry> = order
+        .iter()
+        .map(|id| {
+            let mvm = sim.get(*id).unwrap();
+            VmEntry {
+                profile: mvm.profile.clone(),
+                vcpus: mvm.vm.vcpus(),
+                mem_fractions: mvm.vm.memory_fractions(n),
+            }
+        })
+        .collect();
+    let problem =
+        ScoreProblem::build(&sim.topo, &entries, Weights::default(), Meta::expected()).unwrap();
+    let current: Vec<Vec<f64>> =
+        order.iter().map(|id| sim.get(*id).unwrap().placement_fractions(&sim.topo)).collect();
+    (problem, order, current)
+}
+
+#[test]
+fn delta_problem_matches_rebuilt_problem_under_scenario_events() {
+    // The delta-vs-rebuilt oracle: across random scenario-event sequences
+    // (churn, async memory migrations, drains/recoveries, phase shifts,
+    // load scaling) the persistent DeltaProblem's dense matrices must stay
+    // within 1e-9 of — in practice bit-identical to — a freshly built
+    // ScoreProblem over the sorted running population.
+    propcheck("delta problem == rebuilt problem", 6, |rng| {
+        let topo = Topology::paper();
+        let mut sim = Simulator::new(topo.clone(), SimConfig::pinned(rng.next_u64()));
+        let mut dp = DeltaProblem::new(&sim.topo, Weights::default()).unwrap();
+        let mut ids: Vec<VmId> = Vec::new();
+        for step in 0..25 {
+            match rng.below(10) {
+                0 | 1 | 2 => {
+                    let id = sim.create(VmType::Small, *rng.choose(&App::ALL));
+                    let base = rng.below(284);
+                    let cpus: Vec<CpuId> = (base..base + 4).map(CpuId).collect();
+                    if sim.pin_all(id, &cpus).is_ok() {
+                        sim.place_memory(id, &[(NodeId(rng.below(36)), 1.0)]).unwrap();
+                        sim.start(id).unwrap();
+                        ids.push(id);
+                    } else {
+                        sim.destroy(id).unwrap(); // pins hit a drained server
+                    }
+                }
+                3 if !ids.is_empty() => {
+                    let id = ids.remove(rng.below(ids.len()));
+                    sim.destroy(id).unwrap();
+                }
+                4 if !ids.is_empty() => {
+                    // Async hottest-first migration: the memory matrix row
+                    // changes gradually over the following ticks.
+                    let id = ids[rng.below(ids.len())];
+                    sim.place_memory(id, &[(NodeId(rng.below(36)), 1.0)]).unwrap();
+                }
+                5 if !ids.is_empty() => {
+                    let id = ids[rng.below(ids.len())];
+                    sim.shift_phase(id, *rng.choose(&Phase::ALL)).unwrap();
+                }
+                6 => {
+                    let server = ServerId(rng.below(6));
+                    let _ = sim.drain_server(server); // may refuse; fine
+                }
+                7 => {
+                    if let Some(server) = sim.offline_servers().next() {
+                        sim.recover_server(server).unwrap();
+                    }
+                }
+                8 => {
+                    sim.set_global_load(rng.uniform(0.3, 1.5)).unwrap();
+                }
+                _ => {}
+            }
+            sim.step();
+            dp.sync(&mut sim);
+
+            let (want, order, current) = rebuild_problem(&sim);
+            let (got, got_current) = dp.dense().expect("paper topology stays dense");
+            prop_assert(
+                dp.ids().collect::<Vec<_>>() == order,
+                format!("row order diverged at step {step}"),
+            )?;
+            prop_assert(got.vms == want.vms, "vm count diverged")?;
+            for (name, a, b) in [
+                ("m", &got.m, &want.m),
+                ("c", &got.c, &want.c),
+                ("s", &got.s, &want.s),
+                ("cores", &got.cores, &want.cores),
+                ("bw", &got.bw, &want.bw),
+            ] {
+                prop_assert(a.len() == b.len(), format!("{name} length diverged"))?;
+                for (x, y) in a.iter().zip(b.iter()) {
+                    prop_assert(
+                        (x - y).abs() <= 1e-9,
+                        format!("{name} diverged at step {step}: {x} vs {y}"),
+                    )?;
+                }
+            }
+            for (row, (x, y)) in got_current.iter().zip(current.iter()).enumerate() {
+                for (a, b) in x.iter().zip(y.iter()) {
+                    prop_assert(
+                        (a - b).abs() <= 1e-9,
+                        format!("placement cache diverged at step {step}, row {row}"),
+                    )?;
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn pruned_candidates_never_violate_unpruned_constraints() {
+    // Pruning narrows the anchor set; it must never emit a candidate the
+    // unpruned generator would have rejected: every cpu free, no
+    // duplicates, and (when the pruned walk succeeded without the
+    // fallback) strict Table-3 compatibility on every touched node.
+    propcheck("pruned candidates valid", 25, |rng| {
+        let topo = Topology::paper();
+        let mut sim = Simulator::new(topo.clone(), SimConfig::pinned(rng.next_u64()));
+        for _ in 0..rng.below(10) {
+            let vm_type = *rng.choose(&[VmType::Small, VmType::Medium]);
+            let id = sim.create(vm_type, *rng.choose(&App::ALL));
+            let vcpus = sim.get(id).unwrap().vm.vcpus();
+            let base = rng.below(288 - vcpus);
+            let cpus: Vec<CpuId> = (base..base + vcpus).map(CpuId).collect();
+            sim.pin_all(id, &cpus).unwrap();
+            sim.place_memory(id, &[(NodeId(rng.below(36)), 1.0)]).unwrap();
+            sim.start(id).unwrap();
+        }
+        let slots = SlotMap::from_sim(&sim, None);
+        let class = *rng.choose(&AnimalClass::ALL);
+        let vcpus = *rng.choose(&[2usize, 4, 8]);
+        let near = Some(NodeId(rng.below(36)));
+        let (cands, fell_back) =
+            candidates::generate_pruned(&topo, &slots, vcpus, class, near, 8, usize::MAX, 12);
+        for cand in &cands {
+            prop_assert(cand.cpus.len() == vcpus, "wrong vcpu count")?;
+            let mut seen = std::collections::HashSet::new();
+            for cpu in &cand.cpus {
+                prop_assert(seen.insert(cpu.0), "duplicate cpu in candidate")?;
+                let node = topo.node_of_cpu(*cpu);
+                prop_assert(
+                    slots.free_in_node(node).any(|c| c == *cpu),
+                    format!("candidate uses occupied/blocked cpu {}", cpu.0),
+                )?;
+            }
+            if !fell_back {
+                for (n, f) in cand.fractions.iter().enumerate() {
+                    prop_assert(
+                        *f == 0.0 || slots.node_compatible(NodeId(n), class),
+                        format!("pruned candidate on incompatible node {n}"),
+                    )?;
+                }
+            }
         }
         Ok(())
     });

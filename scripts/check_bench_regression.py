@@ -43,7 +43,27 @@ def main():
         default=0.25,
         help="allowed fractional slowdown (default 0.25 = 25%%)",
     )
+    ap.add_argument(
+        "--require",
+        default="",
+        help="comma-separated benchmark names that must exist in the "
+        "current results — guards against a rename/removal silently "
+        "disarming the gate for a key metric",
+    )
     args = ap.parse_args()
+
+    required = [k for k in (s.strip() for s in args.require.split(",")) if k]
+    if required:
+        try:
+            cur_names = set(load(args.current))
+        except (OSError, ValueError, KeyError) as e:
+            print(f"[bench-gate] cannot parse current results: {e}")
+            return 2
+        missing = sorted(k for k in required if k not in cur_names)
+        if missing:
+            print(f"[bench-gate] required benchmarks missing from current "
+                  f"results: {', '.join(missing)}")
+            return 1
 
     if not os.path.exists(args.baseline):
         print(
