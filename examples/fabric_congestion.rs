@@ -1,0 +1,98 @@
+//! Fabric congestion demo: saturate one torus link with remote-memory
+//! traffic, watch the per-link utilization the ledger reports, fail the
+//! link to force a re-route, and let the congestion-aware mapper move the
+//! victim's vCPUs onto an uncongested route.
+//!
+//! ```bash
+//! cargo run --release --example fabric_congestion [seed]
+//! ```
+
+use dvrm::coordinator::{MapperConfig, Metric, SmMapper};
+use dvrm::metrics::FabricReport;
+use dvrm::runtime::Scorer;
+use dvrm::sim::{SimConfig, Simulator};
+use dvrm::topology::{CpuId, NodeId, ServerId, Topology};
+use dvrm::util::table::Table;
+use dvrm::vm::VmType;
+use dvrm::workload::App;
+
+fn print_links(sim: &Simulator, label: &str) {
+    let util = sim.link_utilization();
+    let mut table = Table::new(label).header(&["link", "capacity GB/s", "demand util", "state"]);
+    for (id, link) in sim.fabric().links() {
+        table.row(vec![
+            format!("s{} -> s{}", link.from.0, link.to.0),
+            format!("{:.2}", sim.fabric().capacity_gbs(id)),
+            format!("{:.2}", util[id.0]),
+            if sim.fabric().is_up(id) { "up".into() } else { "DOWN".to_string() },
+        ]);
+    }
+    println!("{}", table.render());
+}
+
+fn server_of_vm(sim: &Simulator, id: dvrm::vm::VmId) -> usize {
+    let mvm = sim.get(id).expect("vm exists");
+    let cpu = mvm.vcpu_pos[0].expect("vm running");
+    sim.topo.server_of_node(sim.topo.node_of_cpu(cpu)).0
+}
+
+fn main() -> anyhow::Result<()> {
+    let seed = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(7u64);
+    let mut cfg = SimConfig::pinned(seed);
+    cfg.fabric.feedback = true;
+    let mut sim = Simulator::new(Topology::paper(), cfg);
+
+    // Saturate the s0 -> s1 link: two Stream VMs on server 0 whose memory
+    // sits on server 1 (~2 x 24 GB/s of demand over a 2 GB/s link).
+    for k in 0..2 {
+        let id = sim.create(VmType::Small, App::Stream);
+        sim.pin_all(id, &(k * 4..k * 4 + 4).map(CpuId).collect::<Vec<_>>())?;
+        sim.place_memory(id, &[(NodeId(6 + k), 1.0)])?;
+        sim.start(id)?;
+    }
+    // The victim: a latency-sensitive VM, also on server 0 with its
+    // memory on server 1 — sharing the hot link.
+    let victim = sim.create(VmType::Small, App::Neo4j);
+    sim.pin_all(victim, &(8..12).map(CpuId).collect::<Vec<_>>())?;
+    sim.place_memory(victim, &[(NodeId(8), 1.0)])?;
+    sim.start(victim)?;
+
+    sim.run(5);
+    print_links(&sim, "per-link utilization: s0 -> s1 saturated");
+
+    // Fail the hot link: traffic between s0 and s1 re-routes (longer,
+    // shared detours).
+    sim.fail_fabric_link(ServerId(0), ServerId(1))?;
+    println!(
+        "failed s0 <-> s1; route s0 -> s1 is now {} hops\n",
+        sim.fabric().hops(ServerId(0), ServerId(1))
+    );
+    sim.run(5);
+    print_links(&sim, "per-link utilization: after the link failure (detoured)");
+
+    // The congestion-aware mapper notices the victim's deviation and
+    // re-pins it over an uncongested route.
+    let mut mcfg = MapperConfig::new(Metric::Ipc);
+    mcfg.congestion_weight = 1.0;
+    let mut mapper = SmMapper::new(mcfg, Scorer::Native);
+    let before = server_of_vm(&sim, victim);
+    sim.run(5);
+    mapper.interval(&mut sim)?;
+    sim.run(5);
+    let after = server_of_vm(&sim, victim);
+    println!(
+        "mapper decision: victim vCPUs server {before} -> server {after} \
+         ({} remap(s); congestion-aware scoring penalizes routes through hot links)",
+        mapper.stats.remaps
+    );
+
+    sim.restore_fabric_link(ServerId(0), ServerId(1))?;
+    let report = FabricReport::from_trace(&sim.trace);
+    println!(
+        "\nfabric events: {} link down, {} restored; route s0 -> s1 back to {} hop(s)",
+        report.link_downs,
+        report.link_restores,
+        sim.fabric().hops(ServerId(0), ServerId(1))
+    );
+    Ok(())
+}

@@ -16,8 +16,10 @@
 
 use dvrm::coordinator::{MapperConfig, Metric, SmMapper};
 use dvrm::experiments::figures::{
-    full_eval_ticks, run_scale_config, run_scale_mapper_config, scale_spec,
+    full_eval_ticks, run_scale_config, run_scale_config_fabric, run_scale_mapper_config,
+    scale_spec,
 };
+use dvrm::fabric::{FabricGraph, LinkLedger};
 use dvrm::runtime::{CandidateBatch, Engine, Meta, ScoreProblem, Scorer, VmEntry, Weights};
 use dvrm::sim::{SimConfig, Simulator};
 use dvrm::topology::Topology;
@@ -171,6 +173,41 @@ fn main() {
         ));
     }));
 
+    // Fabric hot path: precomputed route lookup over every server pair,
+    // and a full per-tick ledger settle (one flow per pair charged to its
+    // route links, then per-link congestion factors) at 6/36/100 servers.
+    let fabric_scales: &[(&str, usize, (usize, usize))] =
+        &[("6srv", 6, (3, 2)), ("36srv", 36, (6, 6)), ("100srv", 100, (10, 10))];
+    for &(name, servers, torus) in fabric_scales {
+        let graph = FabricGraph::build(&scale_spec(servers, torus));
+        results.push(bench.run(&format!("fabric/route_lookup/{name}"), || {
+            let mut hops = 0usize;
+            for a in 0..servers {
+                for b in 0..servers {
+                    hops += graph
+                        .route(dvrm::topology::ServerId(a), dvrm::topology::ServerId(b))
+                        .hops();
+                }
+            }
+            std::hint::black_box(hops);
+        }));
+        let mut ledger = LinkLedger::new(graph.num_links());
+        results.push(bench.run(&format!("fabric/ledger_settle/{name}"), || {
+            ledger.clear();
+            for a in 0..servers {
+                for b in 0..servers {
+                    if a != b {
+                        ledger.charge_route(
+                            graph.route(dvrm::topology::ServerId(a), dvrm::topology::ServerId(b)),
+                            0.5,
+                        );
+                    }
+                }
+            }
+            std::hint::black_box(ledger.phi_all(&graph));
+        }));
+    }
+
     // End-to-end churn scenario (sim + coordinator + scenario engine):
     // the decision loop under live arrivals/departures.  Recorded as
     // seconds-per-tick so the regression gate's lower-is-better rule
@@ -274,6 +311,33 @@ fn main() {
             println!("{}  (speedup {:.1}x)", full.report(), tps / tps_full.max(1e-12));
             results.push(full);
         }
+    }
+
+    // Congestion-ledger overhead: the incremental tick with fabric
+    // feedback on — the EXP-FABRIC acceptance point is that this stays
+    // within a few percent of the feedback-off `sim/tick/incremental`
+    // numbers above.
+    let fabric_ticks: &[(&str, usize, (usize, usize), usize, u64)] = if quick {
+        &[("small/6srv/60vms", 6, (3, 2), 60, 15)]
+    } else {
+        &[
+            ("small/6srv/60vms", 6, (3, 2), 60, 30),
+            ("large/100srv/1200vms", 100, (10, 10), 1200, 10),
+        ]
+    };
+    for &(name, servers, torus, vms, ticks) in fabric_ticks {
+        let samples: Vec<f64> = (0..scale_reps)
+            .map(|_| {
+                let tps =
+                    run_scale_config_fabric(scale_spec(servers, torus), vms, ticks, true, true, 7)
+                        .unwrap();
+                1.0 / tps.max(1e-12)
+            })
+            .collect();
+        let res =
+            BenchResult { name: format!("sim/tick/incremental-fabric/{name}"), samples };
+        println!("{}", res.report());
+        results.push(res);
     }
 
     // Machine-readable trajectory record at the repo root.

@@ -50,11 +50,14 @@ pub fn usage() -> &'static str {
                          plus fabric-bandwidth starvation\n\
        experiment scale  tick-throughput sweep to 100 servers / 5k VMs:\n\
                          incremental evaluator vs full recompute\n\
+       experiment fabric EXP-FABRIC: background remote load + degraded-link\n\
+                         scenario, congestion-blind vs congestion-aware mapping\n\
        experiment all    regenerate everything\n\
        run               end-to-end cluster demo under all three algorithms\n\
        scenarios         dynamic scenario suite (steady, churn, drain, diurnal,\n\
-                         degraded-fabric): LinuxSched vs coordinator, with\n\
-                         per-scenario p50/p99-tail perf, migrations, GB moved\n\
+                         degraded-fabric, degraded-link): LinuxSched vs\n\
+                         coordinator, with per-scenario p50/p99-tail perf,\n\
+                         migrations, GB moved\n\
        list              list experiment ids\n\
      \n\
      options:\n\

@@ -133,6 +133,13 @@ pub struct DeltaProblem {
     /// Memory-controller bandwidth per node, GB/s (the dense `bwcap`).
     node_bw: f64,
     tracked: BTreeMap<VmId, TrackedVm>,
+    servers: usize,
+    /// Node -> server lookup (congestion-penalty routing).
+    server_of: Vec<u32>,
+    /// Route-congestion snapshot (row-major `servers × servers` mean
+    /// per-hop φ from [`Simulator::route_congestion`]); empty while
+    /// congestion-aware scoring is off.
+    cong: Vec<f64>,
     dense: Option<DenseState>,
     /// Pristine empty dense problem (static d/cap/bwcap/w only), kept
     /// whenever the *topology* fits the artifacts so the dense path can
@@ -169,6 +176,11 @@ impl DeltaProblem {
             slots_per_node: (topo.spec.cores_per_node * topo.spec.threads_per_core) as f64,
             node_bw: topo.spec.mem_bw_per_node_gbs,
             tracked: BTreeMap::new(),
+            servers: topo.spec.servers,
+            server_of: (0..n_live)
+                .map(|i| topo.server_of_node(NodeId(i)).0 as u32)
+                .collect(),
+            cong: Vec::new(),
             dense,
             template,
             agg: AggState::new(n_live),
@@ -446,6 +458,49 @@ impl DeltaProblem {
             + self.weights.bandwidth as f64 * bwo
     }
 
+    /// Adopt a route-congestion snapshot (from
+    /// [`crate::sim::Simulator::route_congestion`]) for congestion-aware
+    /// candidate scoring; an empty vector turns the penalty off.
+    pub fn set_congestion(&mut self, cong: Vec<f64>) {
+        debug_assert!(cong.is_empty() || cong.len() == self.servers * self.servers);
+        self.cong = cong;
+    }
+
+    /// Congestion penalty of placing `id`'s row at `p`: the VM's memory
+    /// bandwidth demand weighted by how congested the (vCPU-server,
+    /// memory-server) routes are — `Σₖⱼ pₖ·mⱼ·(φ̄(route) − 1)` scaled by
+    /// demand, zero on an idle fabric or when no snapshot is loaded.
+    /// Depends only on the candidate row (the snapshot is fixed across a
+    /// decision), so adding it to [`Self::contribution`] preserves the
+    /// exactness of delta scoring: candidate-to-candidate differences
+    /// still equal full-system score differences plus the identical
+    /// penalty differences.
+    pub fn congestion_penalty(&self, id: VmId, p: &[f64]) -> f64 {
+        if self.cong.is_empty() {
+            return 0.0;
+        }
+        let tv = &self.tracked[&id];
+        let e = &tv.entry;
+        let demand = e.profile.bw_gbs_per_vcpu * e.vcpus as f64;
+        let mut pen = 0.0;
+        for (k, &pk) in p.iter().enumerate() {
+            if pk == 0.0 {
+                continue;
+            }
+            let sk = self.server_of[k] as usize;
+            for (j, &mj) in e.mem_fractions.iter().enumerate() {
+                if mj == 0.0 {
+                    continue;
+                }
+                let sj = self.server_of[j] as usize;
+                if sk != sj {
+                    pen += pk * mj * (self.cong[sk * self.servers + sj] - 1.0);
+                }
+            }
+        }
+        demand * pen
+    }
+
     /// How much worse than an ideal isolated all-local placement this
     /// VM's *current* row scores — the worst-first reshuffle priority
     /// (0 = nothing to gain).
@@ -643,6 +698,42 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn congestion_penalty_prefers_uncongested_routes() {
+        let mut sim = Simulator::new(Topology::paper(), SimConfig::pinned(6));
+        // Victim with memory on server 1 (nodes 6..12).
+        let id = sim.create(VmType::Small, App::Stream);
+        sim.pin_all(id, &(48..52).map(CpuId).collect::<Vec<_>>()).unwrap();
+        sim.place_memory(id, &[(NodeId(6), 1.0)]).unwrap();
+        sim.start(id).unwrap();
+        let mut dp = DeltaProblem::new(&sim.topo, Weights::default()).unwrap();
+        dp.sync(&mut sim);
+        // No snapshot: penalty off.
+        let local = {
+            let mut p = vec![0.0; 36];
+            p[6] = 1.0;
+            p
+        };
+        let remote = {
+            let mut p = vec![0.0; 36];
+            p[0] = 1.0; // server 0: vCPUs would pull memory over s0<->s1
+            p
+        };
+        assert_eq!(dp.congestion_penalty(id, &remote), 0.0);
+        // Synthetic snapshot: route s0 -> s1 congested 5x, rest idle.
+        let servers = sim.topo.spec.servers;
+        let mut cong = vec![1.0; servers * servers];
+        cong[servers] = 5.0; // (1, 0)
+        cong[1] = 5.0; // (0, 1)
+        dp.set_congestion(cong);
+        let pen_remote = dp.congestion_penalty(id, &remote);
+        let pen_local = dp.congestion_penalty(id, &local);
+        assert_eq!(pen_local, 0.0, "same-server flows pay nothing");
+        assert!(pen_remote > 0.0, "cross-server flow over hot route must pay");
+        dp.set_congestion(Vec::new());
+        assert_eq!(dp.congestion_penalty(id, &remote), 0.0);
     }
 
     #[test]

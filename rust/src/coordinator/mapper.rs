@@ -78,6 +78,13 @@ pub struct MapperConfig {
     /// top-k distance-ordered anchors.  Auto keeps artifact-sized systems
     /// on the exact pre-pruning candidate set.
     pub prune_k: Option<usize>,
+    /// Congestion-aware scoring weight: > 0 adds a per-candidate penalty
+    /// for memory routes through hot fabric links (snapshotted from
+    /// [`Simulator::route_congestion`] at each sync) and routes every
+    /// decision through the sparse delta scorer so the penalty composes
+    /// exactly.  0 (default) keeps scoring congestion-blind and
+    /// bit-identical to the pre-fabric mapper.
+    pub congestion_weight: f64,
     pub weights: Weights,
 }
 
@@ -97,6 +104,7 @@ impl MapperConfig {
             memory_follows: true,
             mig_budget_gb: 64.0,
             prune_k: None,
+            congestion_weight: 0.0,
             weights: Weights::default(),
         }
     }
@@ -207,6 +215,11 @@ impl SmMapper {
         }
         let delta = self.delta.as_mut().unwrap();
         delta.sync(sim);
+        // Congestion-aware mode: refresh the route-congestion snapshot so
+        // this decision scores against the fabric's current state.
+        if self.cfg.congestion_weight > 0.0 {
+            delta.set_congestion(sim.route_congestion());
+        }
         // Drop memoized expectations of departed VMs so churny runs do
         // not grow the map without bound.
         if self.expected.len() > 2 * delta.len() + 16 {
@@ -384,6 +397,9 @@ impl SmMapper {
     /// full batch through the [`Scorer`] (PJRT or native — bit-identical
     /// to the pre-delta rebuild path); larger systems score each
     /// candidate as an O(|p|·|m|) delta against the cached aggregates.
+    /// Congestion-aware mode (`congestion_weight > 0`) always scores
+    /// through the delta path so the route-congestion penalty composes
+    /// exactly with the contribution differences.
     fn pick_best(
         &mut self,
         sim: &Simulator,
@@ -392,59 +408,66 @@ impl SmMapper {
         keep_current: bool,
     ) -> Result<usize> {
         let delta = self.delta.as_ref().expect("pick_best after sync");
-        if let Some((problem, current)) = delta.dense() {
-            let row = delta
-                .row_of(id)
-                .ok_or_else(|| anyhow!("no scoring row for {id}"))?;
-            let meta = problem.meta;
-            let cap = if cands.len() + keep_current as usize <= meta.batch_small {
-                meta.batch_small
-            } else {
-                meta.batch
-            };
-            let mut batch = CandidateBatch::zeroed(meta, cap);
-            if keep_current {
-                batch.push(current);
-            }
-            for cand in cands.iter().take(cap - keep_current as usize) {
-                batch.push_with_row(current, row, &cand.fractions);
-            }
-            self.stats.scorer_batches += 1;
-            let (idx, _) = self
-                .scorer
-                .argmin(problem, &batch)?
-                .ok_or_else(|| anyhow!("empty candidate batch"))?;
-            Ok(idx)
-        } else {
-            // Sparse delta path.  Strict `<` mirrors the dense argmin's
-            // tie rule (`min_by` keeps the FIRST minimum): on a tie the
-            // current placement / earlier candidate wins, so a
-            // zero-benefit move is never executed (no ping-pong between
-            // symmetric placements).
-            let topo = &sim.topo;
-            let cur = delta
-                .current_row(id)
-                .ok_or_else(|| anyhow!("no scoring row for {id}"))?;
-            let mut best = 0usize;
-            let mut best_score = if keep_current {
-                delta.contribution(topo, id, cur)
-            } else {
-                f64::INFINITY
-            };
-            let base = keep_current as usize;
-            for (i, cand) in cands.iter().enumerate() {
-                let score = delta.contribution(topo, id, &cand.fractions);
-                if score < best_score {
-                    best = base + i;
-                    best_score = score;
+        let congestion_aware = self.cfg.congestion_weight > 0.0;
+        if !congestion_aware {
+            if let Some((problem, current)) = delta.dense() {
+                let row = delta
+                    .row_of(id)
+                    .ok_or_else(|| anyhow!("no scoring row for {id}"))?;
+                let meta = problem.meta;
+                let cap = if cands.len() + keep_current as usize <= meta.batch_small {
+                    meta.batch_small
+                } else {
+                    meta.batch
+                };
+                let mut batch = CandidateBatch::zeroed(meta, cap);
+                if keep_current {
+                    batch.push(current);
                 }
+                for cand in cands.iter().take(cap - keep_current as usize) {
+                    batch.push_with_row(current, row, &cand.fractions);
+                }
+                self.stats.scorer_batches += 1;
+                let (idx, _) = self
+                    .scorer
+                    .argmin(problem, &batch)?
+                    .ok_or_else(|| anyhow!("empty candidate batch"))?;
+                return Ok(idx);
             }
-            if !keep_current && cands.is_empty() {
-                bail!("empty candidate batch");
-            }
-            self.stats.delta_decisions += 1;
-            Ok(best)
         }
+        // Sparse delta path — also the congestion-aware path, where the
+        // route penalty composes with the contribution differences
+        // exactly.  Strict `<` mirrors the dense argmin's tie rule
+        // (`min_by` keeps the FIRST minimum): on a tie the current
+        // placement / earlier candidate wins, so a zero-benefit move is
+        // never executed (no ping-pong between symmetric placements).
+        let topo = &sim.topo;
+        let w = self.cfg.congestion_weight;
+        let score = |p: &[f64]| {
+            let mut s = delta.contribution(topo, id, p);
+            if congestion_aware {
+                s += w * delta.congestion_penalty(id, p);
+            }
+            s
+        };
+        let cur = delta
+            .current_row(id)
+            .ok_or_else(|| anyhow!("no scoring row for {id}"))?;
+        let mut best = 0usize;
+        let mut best_score = if keep_current { score(cur) } else { f64::INFINITY };
+        let base = keep_current as usize;
+        for (i, cand) in cands.iter().enumerate() {
+            let s = score(&cand.fractions);
+            if s < best_score {
+                best = base + i;
+                best_score = s;
+            }
+        }
+        if !keep_current && cands.is_empty() {
+            bail!("empty candidate batch");
+        }
+        self.stats.delta_decisions += 1;
+        Ok(best)
     }
 
     // ---- stage 2: monitoring + remap ---------------------------------------
@@ -1205,6 +1228,32 @@ mod tests {
             s.destroy(id).unwrap();
         }
         m.interval(&mut s).unwrap();
+    }
+
+    #[test]
+    fn congestion_aware_mapper_places_and_scores_through_delta_path() {
+        let mut sim_cfg = SimConfig::pinned(14);
+        sim_cfg.fabric.feedback = true;
+        let mut s = Simulator::new(Topology::paper(), sim_cfg);
+        let mut cfg = MapperConfig::new(Metric::Ipc);
+        cfg.congestion_weight = 1.0;
+        let mut m = SmMapper::new(cfg, Scorer::Native);
+        for k in 0..6 {
+            let id = s.create(crate::vm::VmType::Small, App::ALL[k % App::ALL.len()]);
+            m.place_arrival(&mut s, id).unwrap();
+            s.start(id).unwrap();
+        }
+        assert!(s.occupancy().iter().all(|&o| o <= 1), "aware mode overbooked");
+        assert!(
+            m.stats.delta_decisions > 0,
+            "congestion-aware scoring must run through the delta path"
+        );
+        for _ in 0..6 {
+            s.step();
+        }
+        m.interval(&mut s).unwrap();
+        m.reshuffle(&mut s).unwrap();
+        assert!(s.occupancy().iter().all(|&o| o <= 1));
     }
 
     #[test]

@@ -1,0 +1,193 @@
+//! EXP-FABRIC: what the routed, congestion-accounted fabric buys.
+//!
+//! Part one sweeps background remote-memory load over a shared set of
+//! fabric links and compares **congestion-blind** SM-IPC (the pre-fabric
+//! scorer: static SLIT distances only) against **congestion-aware**
+//! SM-IPC (`MapperConfig::congestion_weight > 0`: candidates whose memory
+//! routes cross hot links pay a penalty).  The managed VMs all start with
+//! their memory on a full server, vCPUs one hop away: the blind mapper
+//! leaves every flow piled onto one 2 GB/s link (ties keep the current
+//! placement), while the aware mapper spreads the flows across the
+//! torus's disjoint routes.
+//!
+//! Part two runs the `degraded-link` scenario (asymmetric link failure
+//! with the congestion ledger on) under both mapper variants — the
+//! acceptance comparison for tail performance.
+
+use anyhow::Result;
+
+use super::figures::{run_scale_config_fabric, scale_spec, Output};
+use super::{Algorithm, ExpOptions};
+use crate::coordinator::{MapperConfig, Metric, SmMapper};
+use crate::runtime::Scorer;
+use crate::scenario::{self, run_scenario, ScenarioConfig};
+use crate::sim::{SimConfig, Simulator};
+use crate::topology::{CpuId, NodeId, Topology};
+use crate::util::stats;
+use crate::util::table::Table;
+use crate::vm::{VmId, VmType};
+use crate::workload::App;
+
+/// Congestion weight of the "aware" variant: sized so a saturated route
+/// (φ − 1 of a few tens) outweighs a one-hop locality difference.
+pub const AWARE_WEIGHT: f64 = 1.0;
+
+/// One part-one run.  Returns `(p50, p99-tail, remaps, peak link ρ)` over
+/// the managed VMs.
+fn congestion_run(
+    bg_flows: usize,
+    congestion_weight: f64,
+    seed: u64,
+    ticks: u64,
+) -> Result<(f64, f64, u64, f64)> {
+    let mut cfg = SimConfig::pinned(seed);
+    cfg.fabric.feedback = true;
+    let mut sim = Simulator::new(Topology::paper(), cfg);
+
+    // Residents fill server 1's compute, so nobody can remap *into* the
+    // server holding the managed memory (the model does not enforce node
+    // memory capacity; the compute slots are what the mapper checks).
+    for k in 0..6 {
+        let id = sim.create(VmType::Medium, App::Sockshop);
+        let base = 48 + k * 8; // server 1 = cpus 48..96
+        sim.pin_all(id, &(base..base + 8).map(CpuId).collect::<Vec<_>>())?;
+        sim.place_memory(id, &[(NodeId(6 + k), 1.0)])?;
+        sim.start(id)?;
+    }
+    // Background flows: Stream VMs pinned on server 2 with memory on
+    // server 1 — each pushes its demand across the s2 -> s1 route.
+    for k in 0..bg_flows {
+        let id = sim.create(VmType::Small, App::Stream);
+        let base = 96 + k * 4; // server 2 = cpus 96..144
+        sim.pin_all(id, &(base..base + 4).map(CpuId).collect::<Vec<_>>())?;
+        sim.place_memory(id, &[(NodeId(6 + k % 6), 1.0)])?;
+        sim.start(id)?;
+    }
+    // Managed VMs: vCPUs on server 0, memory on server 1 — every flow
+    // initially shares the single s0 -> s1 link.  The monitor's remaps
+    // are where blind and aware mapping diverge.
+    let mut mcfg = MapperConfig::new(Metric::Ipc);
+    mcfg.congestion_weight = congestion_weight;
+    let mut mapper = SmMapper::new(mcfg, Scorer::Native);
+    let apps = [App::Neo4j, App::Derby, App::Stream, App::Fft, App::Derby, App::Neo4j];
+    let mut managed: Vec<VmId> = Vec::new();
+    for (k, app) in apps.iter().enumerate() {
+        let id = sim.create(VmType::Small, *app);
+        let base = k * 4; // server 0 = cpus 0..48
+        sim.pin_all(id, &(base..base + 4).map(CpuId).collect::<Vec<_>>())?;
+        sim.place_memory(id, &[(NodeId(6 + k % 6), 1.0)])?;
+        sim.start(id)?;
+        managed.push(id);
+    }
+
+    let warmup = ticks / 4;
+    let mut samples: Vec<f64> = Vec::new();
+    let mut peak = 0.0f64;
+    for t in 0..ticks {
+        let out = sim.step();
+        for rho in sim.link_utilization() {
+            peak = peak.max(rho);
+        }
+        if t >= warmup {
+            for (id, s) in &out {
+                if managed.contains(id) {
+                    samples.push(s.rel_perf);
+                }
+            }
+        }
+        if t % mapper.cfg.interval == 0 {
+            mapper.interval(&mut sim)?;
+        }
+    }
+    let p50 = if samples.is_empty() { 0.0 } else { stats::percentile(&samples, 50.0) };
+    let p99 = if samples.is_empty() { 0.0 } else { stats::percentile(&samples, 1.0) };
+    Ok((p50, p99, mapper.stats.remaps, peak))
+}
+
+/// The `fabric` experiment (`dvrm experiment fabric`).
+pub fn fabric(o: &ExpOptions) -> Result<Output> {
+    let mut text = String::new();
+    let mut tables = Vec::new();
+    let ticks = if o.fast { o.ticks.max(24) } else { 120 };
+
+    let mut t = Table::new(
+        "EXP-FABRIC: background remote load vs managed-VM rel perf \
+         (congestion feedback on; p99-tail = 99% of samples at least this good)",
+    )
+    .header(&["bg flows", "mapper", "p50 rel", "p99-tail rel", "remaps", "peak link util"]);
+    for bg in [0usize, 2, 4, 6] {
+        for (name, w) in [("blind", 0.0), ("aware", AWARE_WEIGHT)] {
+            let (p50, p99, remaps, peak) = congestion_run(bg, w, o.seed, ticks)?;
+            t.row(vec![
+                bg.to_string(),
+                name.into(),
+                format!("{p50:.3}"),
+                format!("{p99:.3}"),
+                remaps.to_string(),
+                format!("{peak:.2}"),
+            ]);
+        }
+    }
+    text.push_str(&t.render());
+    tables.push(("fabric_load".into(), t));
+
+    // Part two: the degraded-link scenario under blind vs aware SM-IPC.
+    let spec = scenario::suite::named("degraded-link", o.fast).expect("known scenario");
+    let mut t2 = Table::new(
+        "EXP-FABRIC: degraded-link scenario — congestion-blind vs congestion-aware SM-IPC",
+    )
+    .header(&["mapper", "p50 rel", "p99-tail rel", "remaps", "GB moved", "link events"]);
+    for (name, w) in [("SM-IPC blind", 0.0), ("SM-IPC aware", AWARE_WEIGHT)] {
+        let mut mcfg = MapperConfig::new(Metric::Ipc);
+        mcfg.congestion_weight = w;
+        let cfg = ScenarioConfig { seed: o.seed, scorer: o.scorer, mapper: Some(mcfg) };
+        let r = run_scenario(&spec, Algorithm::SmIpc, &cfg)?;
+        let m = &r.metrics;
+        t2.row(vec![
+            name.into(),
+            format!("{:.3}", m.p50_rel),
+            format!("{:.3}", m.p99_tail_rel),
+            m.remaps.to_string(),
+            format!("{:.1}", m.gb_moved),
+            m.link_events.to_string(),
+        ]);
+    }
+    text.push('\n');
+    text.push_str(&t2.render());
+    tables.push(("fabric_degraded_link".into(), t2));
+
+    // Part three: ledger overhead — incremental ticks/sec with the
+    // congestion ledger off vs on (the <10%-regression acceptance point;
+    // full mode measures the ROADMAP's 100-server scale).
+    let (servers, torus, vms, ticks3) =
+        if o.fast { (12, (4, 3), 200, 8) } else { (100, (10, 10), 1200, 8) };
+    let spec3 = scale_spec(servers, torus);
+    let off = run_scale_config_fabric(spec3.clone(), vms, ticks3, true, false, o.seed)?;
+    let on = run_scale_config_fabric(spec3, vms, ticks3, true, true, o.seed)?;
+    let mut t3 = Table::new("EXP-FABRIC: incremental ticks/sec, congestion ledger off vs on")
+        .header(&["servers", "vms", "t/s ledger off", "t/s ledger on", "overhead"]);
+    t3.row(vec![
+        servers.to_string(),
+        vms.to_string(),
+        format!("{off:.1}"),
+        format!("{on:.1}"),
+        format!("{:+.1}%", (off / on.max(1e-9) - 1.0) * 100.0),
+    ]);
+    text.push('\n');
+    text.push_str(&t3.render());
+    tables.push(("fabric_overhead".into(), t3));
+    Ok(Output { text, tables })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn congestion_run_collects_managed_samples() {
+        let (p50, p99, _remaps, peak) = congestion_run(2, AWARE_WEIGHT, 7, 12).unwrap();
+        assert!(p50 > 0.0, "managed VMs must produce samples");
+        assert!(p99 <= p50 + 1e-9, "tail cannot beat the median");
+        assert!(peak > 1.0, "2 background Streams must saturate a 2 GB/s link: {peak}");
+    }
+}

@@ -616,9 +616,26 @@ pub fn run_scale_config(
     incremental: bool,
     seed: u64,
 ) -> Result<f64> {
+    run_scale_config_fabric(spec, vms, ticks, incremental, false, seed)
+}
+
+/// [`run_scale_config`] with the fabric congestion ledger toggled — the
+/// EXP-FABRIC acceptance point: the feedback-on tick rate at scale must
+/// stay within a few percent of feedback-off.  The vanilla balancer keeps
+/// placements drifting, so first-touch memory is partly remote and the
+/// ledger sees real cross-server flows.
+pub fn run_scale_config_fabric(
+    spec: TopologySpec,
+    vms: usize,
+    ticks: u64,
+    incremental: bool,
+    fabric_feedback: bool,
+    seed: u64,
+) -> Result<f64> {
     let topo = Topology::build(spec);
     let mut cfg = SimConfig::vanilla(seed);
     cfg.incremental = incremental;
+    cfg.fabric.feedback = fabric_feedback;
     // Coarse chunks: page bookkeeping for thousands of VMs without
     // gigabytes of chunk tables (first-touch never migrates here anyway).
     cfg.mem.chunk_mb = 512;

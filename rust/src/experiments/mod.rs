@@ -4,6 +4,7 @@
 //! `dvrm experiment <id>` runs one; `dvrm experiment all` runs the lot and
 //! writes CSVs next to the textual report.
 
+pub mod fabric;
 pub mod figures;
 pub mod harness;
 pub mod studies;
@@ -51,7 +52,7 @@ impl ExpOptions {
 /// All experiment ids, in DESIGN.md order.
 pub const ALL_IDS: &[&str] = &[
     "t1", "t2", "t3", "t4", "t5", "f2", "f3", "f4_10", "f11", "f12", "f13", "f14_16",
-    "f17_19", "var", "abl", "mem", "scale", "scenarios",
+    "f17_19", "var", "abl", "mem", "scale", "fabric", "scenarios",
 ];
 
 /// Run one experiment by id.
@@ -74,6 +75,7 @@ pub fn run(id: &str, opts: &ExpOptions) -> Result<figures::Output> {
         "abl" => figures::abl(opts),
         "mem" => figures::mem(opts),
         "scale" => figures::scale(opts),
+        "fabric" => fabric::fabric(opts),
         "scenarios" => crate::scenario::suite::experiment(opts),
         other => bail!("unknown experiment {other:?}; known: {ALL_IDS:?}"),
     }

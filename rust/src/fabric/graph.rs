@@ -1,0 +1,446 @@
+//! The routed link graph of the inter-server interconnect.
+//!
+//! [`FabricGraph`] replaces the scalar fabric view (`fabric_link_bw_gbs /
+//! server_hops`) with an explicit set of **directed links** wired from the
+//! topology's torus: each server owns one link per direction to each torus
+//! neighbour, every link with its own capacity and up/down state.  Routes
+//! between every server pair are precomputed by BFS over the live links
+//! (deterministic: neighbours explored in ascending destination order) and
+//! recomputed automatically when a link goes down or comes back — the
+//! re-routing behind the `FabricLinkDown`/`FabricLinkRestored` scenario
+//! events.
+//!
+//! **Parity contract**: with every link up at nominal scale, routes have
+//! exactly `Torus::hops` links and [`FabricGraph::route_bw_gbs`] equals
+//! the scalar model's `fabric_link_bw_gbs / hops` (store-and-forward per
+//! hop) — property-tested in `tests/properties.rs`, which is what keeps
+//! every pre-fabric result reproducible.
+
+use std::collections::{BTreeMap, VecDeque};
+
+use anyhow::{bail, Result};
+
+use crate::topology::{torus::Torus, ServerId, TopologySpec};
+
+/// Index of one directed link.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct LinkId(pub usize);
+
+/// One directed inter-server link.
+#[derive(Debug, Clone)]
+pub struct Link {
+    pub from: ServerId,
+    pub to: ServerId,
+    /// Nominal per-direction capacity, GB/s.
+    pub base_cap_gbs: f64,
+}
+
+/// A precomputed shortest path between two servers: the links crossed, in
+/// order.  Empty for `a == a` (and for unreachable pairs, which the
+/// simulator's disconnect guard prevents).
+#[derive(Debug, Clone, Default)]
+pub struct Route {
+    pub links: Vec<LinkId>,
+}
+
+impl Route {
+    /// Hop count (= number of links crossed).
+    pub fn hops(&self) -> usize {
+        self.links.len()
+    }
+}
+
+/// The link-graph model of the disaggregation fabric.
+#[derive(Debug, Clone)]
+pub struct FabricGraph {
+    servers: usize,
+    links: Vec<Link>,
+    /// Per-link up/down state (scenario link failures).
+    up: Vec<bool>,
+    /// Uniform health multiplier in (0, 1] (`degrade_fabric` semantics:
+    /// one scale across all links).
+    uniform_scale: f64,
+    /// Outgoing links per server, ascending destination (BFS determinism).
+    adj: Vec<Vec<LinkId>>,
+    /// `(from, to)` server pair -> link.
+    index: BTreeMap<(usize, usize), LinkId>,
+    /// `routes[a * servers + b]` — shortest live path a -> b.
+    routes: Vec<Route>,
+    /// Times the routing table was recomputed after a link event.
+    pub reroutes: u64,
+}
+
+impl FabricGraph {
+    /// Wire the graph from the topology's torus: one directed link per
+    /// neighbour direction per server, at `fabric_link_bw_gbs` each.
+    pub fn build(spec: &TopologySpec) -> Self {
+        let torus = Torus::new(spec.torus.0, spec.torus.1);
+        let servers = spec.servers;
+        let mut links = Vec::new();
+        let mut adj: Vec<Vec<LinkId>> = vec![Vec::new(); servers];
+        let mut index = BTreeMap::new();
+        for s in 0..servers {
+            // `Torus::neighbors` is sorted and de-duplicated.
+            for n in torus.neighbors(s) {
+                let id = LinkId(links.len());
+                links.push(Link {
+                    from: ServerId(s),
+                    to: ServerId(n),
+                    base_cap_gbs: spec.fabric_link_bw_gbs,
+                });
+                adj[s].push(id);
+                index.insert((s, n), id);
+            }
+        }
+        let up = vec![true; links.len()];
+        let mut g = Self {
+            servers,
+            links,
+            up,
+            uniform_scale: 1.0,
+            adj,
+            index,
+            routes: Vec::new(),
+            reroutes: 0,
+        };
+        g.compute_routes();
+        g
+    }
+
+    pub fn num_servers(&self) -> usize {
+        self.servers
+    }
+
+    pub fn num_links(&self) -> usize {
+        self.links.len()
+    }
+
+    pub fn link(&self, id: LinkId) -> &Link {
+        &self.links[id.0]
+    }
+
+    pub fn links(&self) -> impl Iterator<Item = (LinkId, &Link)> {
+        self.links.iter().enumerate().map(|(i, l)| (LinkId(i), l))
+    }
+
+    pub fn is_up(&self, id: LinkId) -> bool {
+        self.up[id.0]
+    }
+
+    pub fn uniform_scale(&self) -> f64 {
+        self.uniform_scale
+    }
+
+    /// Effective capacity of a link, GB/s (0 when down).
+    pub fn capacity_gbs(&self, id: LinkId) -> f64 {
+        if self.up[id.0] {
+            self.links[id.0].base_cap_gbs * self.uniform_scale
+        } else {
+            0.0
+        }
+    }
+
+    /// The direct link `a -> b`, if the torus wires one.
+    pub fn link_between(&self, a: ServerId, b: ServerId) -> Option<LinkId> {
+        self.index.get(&(a.0, b.0)).copied()
+    }
+
+    /// Row-major index of the `(a, b)` route in the route table.
+    pub fn route_index(&self, a: ServerId, b: ServerId) -> usize {
+        a.0 * self.servers + b.0
+    }
+
+    /// Current shortest live path `a -> b`.
+    pub fn route(&self, a: ServerId, b: ServerId) -> &Route {
+        &self.routes[self.route_index(a, b)]
+    }
+
+    /// Route by precomputed index (the incremental evaluator's cached key).
+    pub fn route_at(&self, idx: usize) -> &Route {
+        &self.routes[idx]
+    }
+
+    /// Live hop count `a -> b` (0 for `a == a`; may exceed the torus
+    /// minimum while links are down).
+    pub fn hops(&self, a: ServerId, b: ServerId) -> usize {
+        self.route(a, b).hops()
+    }
+
+    /// Achievable bandwidth of the `a -> b` route, GB/s: the narrowest
+    /// link divided by the hop count (store-and-forward per hop — exactly
+    /// the scalar model's `fabric_link_bw_gbs / server_hops` on a healthy
+    /// uniform fabric).  `INFINITY` for `a == a` (intra-server transfers
+    /// never touch the fabric); 0 when no live route exists.
+    pub fn route_bw_gbs(&self, a: ServerId, b: ServerId) -> f64 {
+        if a == b {
+            return f64::INFINITY;
+        }
+        let route = self.route(a, b);
+        if route.links.is_empty() {
+            return 0.0;
+        }
+        let min_cap = route
+            .links
+            .iter()
+            .map(|l| self.capacity_gbs(*l))
+            .fold(f64::INFINITY, f64::min);
+        min_cap / route.links.len() as f64
+    }
+
+    /// Uniform fabric degradation (`Simulator::degrade_fabric`): one scale
+    /// across every link.  No re-routing — relative link order is
+    /// unchanged.
+    pub fn set_uniform_scale(&mut self, scale: f64) {
+        self.uniform_scale = scale;
+    }
+
+    /// Links currently down, as `(from, to)` server pairs (each failed
+    /// pair reported once, in the `from < to` direction).
+    pub fn down_links(&self) -> Vec<(ServerId, ServerId)> {
+        self.links
+            .iter()
+            .enumerate()
+            .filter(|(i, l)| !self.up[*i] && l.from.0 < l.to.0)
+            .map(|(_, l)| (l.from, l.to))
+            .collect()
+    }
+
+    /// Take the `a <-> b` link pair down (both directions) and re-route.
+    /// Refuses when no such link exists, when it is already down, or when
+    /// removing it would partition the fabric (a partitioned fabric has no
+    /// well-defined remote bandwidth; mirrors the "cannot drain the last
+    /// server" guard).
+    pub fn set_link_down(&mut self, a: ServerId, b: ServerId) -> Result<()> {
+        let fwd = self
+            .link_between(a, b)
+            .ok_or_else(|| anyhow::anyhow!("no fabric link s{} -> s{}", a.0, b.0))?;
+        let rev = self
+            .link_between(b, a)
+            .ok_or_else(|| anyhow::anyhow!("no fabric link s{} -> s{}", b.0, a.0))?;
+        if !self.up[fwd.0] {
+            bail!("fabric link s{} <-> s{} is already down", a.0, b.0);
+        }
+        self.up[fwd.0] = false;
+        self.up[rev.0] = false;
+        if !self.is_connected() {
+            self.up[fwd.0] = true;
+            self.up[rev.0] = true;
+            bail!("taking down s{} <-> s{} would partition the fabric", a.0, b.0);
+        }
+        self.compute_routes();
+        self.reroutes += 1;
+        Ok(())
+    }
+
+    /// Bring a failed `a <-> b` link pair back and re-route.
+    pub fn restore_link(&mut self, a: ServerId, b: ServerId) -> Result<()> {
+        let fwd = self
+            .link_between(a, b)
+            .ok_or_else(|| anyhow::anyhow!("no fabric link s{} -> s{}", a.0, b.0))?;
+        let rev = self
+            .link_between(b, a)
+            .ok_or_else(|| anyhow::anyhow!("no fabric link s{} -> s{}", b.0, a.0))?;
+        if self.up[fwd.0] {
+            bail!("fabric link s{} <-> s{} is not down", a.0, b.0);
+        }
+        self.up[fwd.0] = true;
+        self.up[rev.0] = true;
+        self.compute_routes();
+        self.reroutes += 1;
+        Ok(())
+    }
+
+    /// Is the live-link graph still one component?
+    fn is_connected(&self) -> bool {
+        if self.servers <= 1 {
+            return true;
+        }
+        let mut seen = vec![false; self.servers];
+        seen[0] = true;
+        let mut queue = VecDeque::from([0usize]);
+        let mut count = 1usize;
+        while let Some(u) = queue.pop_front() {
+            for lid in &self.adj[u] {
+                if !self.up[lid.0] {
+                    continue;
+                }
+                let v = self.links[lid.0].to.0;
+                if !seen[v] {
+                    seen[v] = true;
+                    count += 1;
+                    queue.push_back(v);
+                }
+            }
+        }
+        count == self.servers
+    }
+
+    /// BFS shortest paths over the live links from every server
+    /// (deterministic parent selection: first discovery in ascending
+    /// destination order).
+    fn compute_routes(&mut self) {
+        let s = self.servers;
+        let mut routes = vec![Route::default(); s * s];
+        for src in 0..s {
+            let mut prev: Vec<Option<LinkId>> = vec![None; s];
+            let mut seen = vec![false; s];
+            seen[src] = true;
+            let mut queue = VecDeque::from([src]);
+            while let Some(u) = queue.pop_front() {
+                for lid in &self.adj[u] {
+                    if !self.up[lid.0] {
+                        continue;
+                    }
+                    let v = self.links[lid.0].to.0;
+                    if !seen[v] {
+                        seen[v] = true;
+                        prev[v] = Some(*lid);
+                        queue.push_back(v);
+                    }
+                }
+            }
+            for dst in 0..s {
+                if dst == src || !seen[dst] {
+                    continue;
+                }
+                let mut path = Vec::new();
+                let mut cur = dst;
+                while cur != src {
+                    let lid = prev[cur].expect("seen node has a parent link");
+                    path.push(lid);
+                    cur = self.links[lid.0].from.0;
+                }
+                path.reverse();
+                routes[src * s + dst] = Route { links: path };
+            }
+        }
+        self.routes = routes;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn paper_graph() -> FabricGraph {
+        FabricGraph::build(&TopologySpec::paper())
+    }
+
+    #[test]
+    fn paper_wiring_matches_torus() {
+        let g = paper_graph();
+        let torus = Torus::new(3, 2);
+        assert_eq!(g.num_servers(), 6);
+        // One directed link per neighbour direction.
+        let expect: usize = (0..6).map(|s| torus.neighbors(s).len()).sum();
+        assert_eq!(g.num_links(), expect);
+        for s in 0..6 {
+            for n in torus.neighbors(s) {
+                assert!(g.link_between(ServerId(s), ServerId(n)).is_some());
+            }
+        }
+    }
+
+    #[test]
+    fn routes_match_torus_hops_when_healthy() {
+        let g = paper_graph();
+        let torus = Torus::new(3, 2);
+        for a in 0..6 {
+            for b in 0..6 {
+                assert_eq!(
+                    g.hops(ServerId(a), ServerId(b)),
+                    torus.hops(a, b),
+                    "route {a}->{b}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn route_links_are_contiguous() {
+        let g = paper_graph();
+        for a in 0..6 {
+            for b in 0..6 {
+                let route = g.route(ServerId(a), ServerId(b));
+                let mut at = a;
+                for lid in &route.links {
+                    let l = g.link(*lid);
+                    assert_eq!(l.from.0, at, "route {a}->{b} breaks at {at}");
+                    at = l.to.0;
+                }
+                if a != b {
+                    assert_eq!(at, b, "route {a}->{b} ends at {at}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn route_bw_reproduces_scalar_model() {
+        let g = paper_graph();
+        let spec = TopologySpec::paper();
+        let torus = Torus::new(3, 2);
+        for a in 0..6 {
+            for b in 0..6 {
+                if a == b {
+                    continue;
+                }
+                let want = spec.fabric_link_bw_gbs / torus.hops(a, b) as f64;
+                let got = g.route_bw_gbs(ServerId(a), ServerId(b));
+                assert!((got - want).abs() < 1e-12, "{a}->{b}: {got} vs {want}");
+            }
+        }
+    }
+
+    #[test]
+    fn uniform_scale_shrinks_capacity_without_rerouting() {
+        let mut g = paper_graph();
+        let before = g.hops(ServerId(0), ServerId(4));
+        g.set_uniform_scale(0.25);
+        assert_eq!(g.hops(ServerId(0), ServerId(4)), before);
+        let bw = g.route_bw_gbs(ServerId(0), ServerId(1));
+        assert!((bw - 2.0 * 0.25).abs() < 1e-12, "bw {bw}");
+        assert_eq!(g.reroutes, 0);
+    }
+
+    #[test]
+    fn link_down_reroutes_and_restore_recovers() {
+        let mut g = paper_graph();
+        assert_eq!(g.hops(ServerId(0), ServerId(1)), 1);
+        g.set_link_down(ServerId(0), ServerId(1)).unwrap();
+        assert!(!g.is_up(g.link_between(ServerId(0), ServerId(1)).unwrap()));
+        let detour = g.hops(ServerId(0), ServerId(1));
+        assert!(detour >= 2, "downed direct link must force a detour: {detour}");
+        // The detour never crosses the dead link.
+        for lid in &g.route(ServerId(0), ServerId(1)).links {
+            assert!(g.is_up(*lid));
+        }
+        assert_eq!(g.down_links(), vec![(ServerId(0), ServerId(1))]);
+        g.restore_link(ServerId(0), ServerId(1)).unwrap();
+        assert_eq!(g.hops(ServerId(0), ServerId(1)), 1);
+        assert_eq!(g.reroutes, 2);
+    }
+
+    #[test]
+    fn link_event_validation() {
+        let mut g = paper_graph();
+        // Servers 0 and 4 are not torus neighbours on the 3x2 grid.
+        assert_eq!(Torus::new(3, 2).hops(0, 4), 2);
+        assert!(g.set_link_down(ServerId(0), ServerId(4)).is_err());
+        assert!(g.restore_link(ServerId(0), ServerId(1)).is_err(), "not down");
+        g.set_link_down(ServerId(0), ServerId(1)).unwrap();
+        assert!(g.set_link_down(ServerId(0), ServerId(1)).is_err(), "double down");
+    }
+
+    #[test]
+    fn partitioning_link_down_is_refused() {
+        // A 2x1 torus has a single (de-duplicated) link pair; removing it
+        // would split the fabric.
+        let spec = TopologySpec { servers: 2, torus: (2, 1), ..TopologySpec::paper() };
+        let mut g = FabricGraph::build(&spec);
+        assert!(g.set_link_down(ServerId(0), ServerId(1)).is_err());
+        // State untouched by the refused operation.
+        assert_eq!(g.hops(ServerId(0), ServerId(1)), 1);
+        assert_eq!(g.reroutes, 0);
+    }
+}

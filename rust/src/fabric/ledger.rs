@@ -1,0 +1,169 @@
+//! Per-tick flow accounting over the link graph and the M/M/1-style
+//! congestion model.
+//!
+//! A [`LinkLedger`] charges every flow of one tick — remote-memory
+//! traffic from each VM's page placement plus in-flight migration
+//! transfers — to the links on its route.  The from-scratch evaluator
+//! (`perf_model::evaluate_with_fabric` / `workload_link_demand`) builds
+//! one per tick; the incremental evaluator maintains the same per-link
+//! sums by subtract-stale/add-fresh and is oracle-tested against this
+//! path.  Link utilization `ρ = demand / capacity` then yields a
+//! **congestion factor**
+//!
+//! ```text
+//! φ(ρ) = 1 + ρ / (1 − ρ)        for ρ < 0.95
+//!        (linear tail above, slope φ'(0.95), so φ stays finite)
+//! ```
+//!
+//! — the M/M/1 sojourn-time inflation (service + queueing over service).
+//! `φ(0) = 1` exactly, which is what makes the uncongested fabric
+//! reproduce the scalar model bit-for-bit, and `φ` is monotone in load
+//! (property-tested).  The perf model stretches cross-server SLIT
+//! distances by the mean per-hop `φ` of the flow's route and shrinks the
+//! remote bandwidth share by the same factor.
+
+use super::graph::{FabricGraph, LinkId, Route};
+
+/// Utilization beyond which the M/M/1 curve switches to its linear tail
+/// (offered load routinely exceeds link capacity in a saturated fabric;
+/// the raw hyperbola would explode).
+pub const RHO_CLAMP: f64 = 0.95;
+
+/// M/M/1-style congestion factor for one link at utilization `rho`:
+/// relative time-in-system inflation, exactly 1 at zero load, strictly
+/// increasing, finite for any load.
+pub fn congestion_factor(rho: f64) -> f64 {
+    if rho <= 0.0 {
+        return 1.0;
+    }
+    if rho < RHO_CLAMP {
+        return 1.0 + rho / (1.0 - rho);
+    }
+    // Continue with the tangent at RHO_CLAMP: continuous and monotone.
+    let base = 1.0 + RHO_CLAMP / (1.0 - RHO_CLAMP);
+    let slope = 1.0 / ((1.0 - RHO_CLAMP) * (1.0 - RHO_CLAMP));
+    base + (rho - RHO_CLAMP) * slope
+}
+
+/// Per-link demand accumulator for one tick.
+#[derive(Debug, Clone)]
+pub struct LinkLedger {
+    demand: Vec<f64>,
+}
+
+impl LinkLedger {
+    pub fn new(num_links: usize) -> Self {
+        Self { demand: vec![0.0; num_links] }
+    }
+
+    pub fn clear(&mut self) {
+        self.demand.iter_mut().for_each(|d| *d = 0.0);
+    }
+
+    /// Charge one flow of `gbs` to every link on its route.
+    pub fn charge_route(&mut self, route: &Route, gbs: f64) {
+        for l in &route.links {
+            self.demand[l.0] += gbs;
+        }
+    }
+
+    pub fn charge_link(&mut self, link: LinkId, gbs: f64) {
+        self.demand[link.0] += gbs;
+    }
+
+    pub fn demand(&self, link: LinkId) -> f64 {
+        self.demand[link.0]
+    }
+
+    pub fn demands(&self) -> &[f64] {
+        &self.demand
+    }
+
+    /// Consume the ledger, yielding the per-link demand vector.
+    pub fn into_demands(self) -> Vec<f64> {
+        self.demand
+    }
+
+    /// Total charge across all links (= Σ per-flow demand × route hops).
+    pub fn total_demand(&self) -> f64 {
+        self.demand.iter().sum()
+    }
+
+    /// `ρ` of one link under the graph's current capacities.  A downed
+    /// link (capacity 0) with pending demand reports saturated.
+    pub fn utilization(&self, graph: &FabricGraph, link: LinkId) -> f64 {
+        rho(self.demand[link.0], graph.capacity_gbs(link))
+    }
+
+    /// Congestion factor per link (allocates; the per-tick evaluators
+    /// keep their own scratch instead).
+    pub fn phi_all(&self, graph: &FabricGraph) -> Vec<f64> {
+        (0..self.demand.len())
+            .map(|l| congestion_factor(self.utilization(graph, LinkId(l))))
+            .collect()
+    }
+}
+
+/// Utilization with a defined answer for zero-capacity (downed) links.
+pub fn rho(demand: f64, capacity: f64) -> f64 {
+    if capacity > 0.0 {
+        demand / capacity
+    } else if demand > 0.0 {
+        1e6 // fully saturated; congestion_factor's linear tail stays finite
+    } else {
+        0.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::{ServerId, TopologySpec};
+
+    #[test]
+    fn congestion_factor_anchors() {
+        assert_eq!(congestion_factor(0.0), 1.0);
+        assert_eq!(congestion_factor(-1.0), 1.0);
+        assert!((congestion_factor(0.5) - 2.0).abs() < 1e-12, "1 + 0.5/0.5");
+        // Continuous at the clamp.
+        let below = congestion_factor(RHO_CLAMP - 1e-9);
+        let above = congestion_factor(RHO_CLAMP + 1e-9);
+        assert!((above - below).abs() < 1e-5);
+        assert!(congestion_factor(1e6).is_finite());
+    }
+
+    #[test]
+    fn charges_accumulate_along_routes() {
+        let g = FabricGraph::build(&TopologySpec::paper());
+        let mut ledger = LinkLedger::new(g.num_links());
+        let route = g.route(ServerId(0), ServerId(4)); // 2 hops
+        assert_eq!(route.hops(), 2);
+        ledger.charge_route(route, 1.5);
+        assert!((ledger.total_demand() - 3.0).abs() < 1e-12, "1.5 GB/s x 2 links");
+        for l in &route.links {
+            assert!((ledger.demand(*l) - 1.5).abs() < 1e-12);
+        }
+        ledger.clear();
+        assert_eq!(ledger.total_demand(), 0.0);
+    }
+
+    #[test]
+    fn utilization_tracks_capacity() {
+        let mut g = FabricGraph::build(&TopologySpec::paper());
+        let mut ledger = LinkLedger::new(g.num_links());
+        let l = g.link_between(ServerId(0), ServerId(1)).unwrap();
+        ledger.charge_link(l, 1.0);
+        assert!((ledger.utilization(&g, l) - 0.5).abs() < 1e-12, "1 of 2 GB/s");
+        g.set_uniform_scale(0.5);
+        assert!((ledger.utilization(&g, l) - 1.0).abs() < 1e-12);
+        let phis = ledger.phi_all(&g);
+        assert!(phis[l.0] > 1.0);
+        assert!(phis.iter().all(|p| *p >= 1.0 && p.is_finite()));
+    }
+
+    #[test]
+    fn downed_link_with_demand_is_saturated() {
+        assert_eq!(rho(0.0, 0.0), 0.0);
+        assert!(rho(1.0, 0.0) > 1e5);
+    }
+}

@@ -1,0 +1,74 @@
+//! First-class fabric subsystem: a routed link-graph model of the
+//! inter-server interconnect with congestion-aware accounting.
+//!
+//! The disaggregation literature (DaeMon, Maruf & Chowdhury's survey)
+//! argues the fabric must be modelled as a **shared, contended resource**,
+//! not a scalar: data movement over it dominates application performance
+//! and congestion management is a core open problem.  This module
+//! provides exactly that:
+//!
+//! * [`graph::FabricGraph`] — directed links wired from the topology's
+//!   torus, per-link capacity/health, precomputed shortest-path
+//!   [`graph::Route`]s with automatic re-routing around failed links;
+//! * [`ledger::LinkLedger`] — per-tick accounting that charges every flow
+//!   (remote-memory traffic, migration transfers) to the links on its
+//!   route;
+//! * [`ledger::congestion_factor`] — the M/M/1-style inflation the perf
+//!   model applies to effective inter-server latency and bandwidth.
+//!
+//! **Parity**: an uncongested fabric reproduces the pre-fabric scalar
+//! model exactly — routes have `Torus::hops` links, route bandwidth is
+//! `fabric_link_bw_gbs / hops`, and `φ(0) = 1` leaves distances and
+//! bandwidth shares untouched.  The congestion *feedback* into the perf
+//! model is therefore opt-in per simulation ([`FabricParams::feedback`],
+//! default off), keeping every existing scenario bit-identical while the
+//! `fabric` experiment and the `degraded-link` scenario turn it on.
+
+pub mod graph;
+pub mod ledger;
+
+pub use graph::{FabricGraph, Link, LinkId, Route};
+pub use ledger::{congestion_factor, rho, LinkLedger, RHO_CLAMP};
+
+/// Fabric-model knobs carried by `SimConfig`.
+#[derive(Debug, Clone, Default)]
+pub struct FabricParams {
+    /// Feed link congestion back into the performance model (latency
+    /// stretch + remote-bandwidth shrink) and draw migration budgets from
+    /// residual rather than nominal route capacity.  Off by default: the
+    /// uncongested fabric then reproduces the scalar model exactly.
+    pub feedback: bool,
+}
+
+/// Fraction of a link's capacity migrations may always use, however
+/// congested the workload traffic is (feedback mode): pages must keep
+/// moving or a congested system can never heal itself.
+pub const MIGRATION_RESIDUAL_FLOOR: f64 = 0.05;
+
+/// Residual capacity factor of one link for migration traffic: what the
+/// workload's demand leaves over, floored at
+/// [`MIGRATION_RESIDUAL_FLOOR`].
+pub fn migration_residual(workload_gbs: f64, capacity_gbs: f64) -> f64 {
+    if capacity_gbs <= 0.0 {
+        return 1.0; // down links carry no routes; factor is irrelevant
+    }
+    (1.0 - workload_gbs / capacity_gbs).max(MIGRATION_RESIDUAL_FLOOR)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn residual_shrinks_with_load_and_floors() {
+        assert_eq!(migration_residual(0.0, 2.0), 1.0);
+        assert!((migration_residual(1.0, 2.0) - 0.5).abs() < 1e-12);
+        assert_eq!(migration_residual(100.0, 2.0), MIGRATION_RESIDUAL_FLOOR);
+        assert_eq!(migration_residual(1.0, 0.0), 1.0);
+    }
+
+    #[test]
+    fn feedback_defaults_off() {
+        assert!(!FabricParams::default().feedback);
+    }
+}

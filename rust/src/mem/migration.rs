@@ -14,9 +14,23 @@
 //! The engine is policy-free: the coordinator's planner, the AutoNUMA
 //! baseline, and explicit `place_memory` calls all enqueue through the
 //! same queue and compete for the same links.
+//!
+//! Cross-server transfers drain over the **routed link graph**
+//! ([`crate::fabric::FabricGraph`]): each chunk's rate is the narrowest
+//! link of its route — per-link health, per-link fair share among the
+//! jobs crossing it, and (in congestion-feedback mode) the residual the
+//! workload's own traffic leaves — divided by the hop count
+//! (store-and-forward).  On a healthy uniform fabric a lone route
+//! reproduces the old scalar `fabric_link_bw_gbs / hops` exactly; with a
+//! link down the detour route is both longer and narrower, which the old
+//! model could not express.  Note one deliberate behavioral refinement:
+//! jobs on *different* server pairs whose routes overlap now share the
+//! common links (the old model only shared within a pair), as real
+//! fabrics do.
 
 use std::collections::HashMap;
 
+use crate::fabric::FabricGraph;
 use crate::topology::{NodeId, Topology};
 use crate::vm::VmId;
 
@@ -92,6 +106,10 @@ pub struct TickOutcome {
     pub finished_jobs: Vec<MigrationJob>,
     /// GB moved per VM this tick (drives guest-stall accounting).
     pub gb_moved: Vec<(VmId, f64)>,
+    /// GB actually carried per fabric link this tick (dense, one slot per
+    /// link) — charged into the congestion ledger alongside the
+    /// workload's remote-memory traffic.
+    pub link_gbs: Vec<f64>,
 }
 
 /// The shared migration queue of one host.
@@ -149,25 +167,49 @@ impl MigrationEngine {
 
     /// Advance every job by one tick (= one second of fabric time).
     ///
-    /// Jobs whose current chunks cross the same server-to-server link
-    /// share that link's bandwidth equally; `bw_scale` scales *fabric*
-    /// (cross-server) capacity only — intra-server copies stay at
-    /// memory-controller speed (bandwidth-starvation experiments model a
-    /// contended fabric, not slow local DRAM).
-    pub fn advance(&mut self, topo: &Topology, chunk_gb: f64, bw_scale: f64) -> TickOutcome {
-        let mut out = TickOutcome::default();
+    /// Cross-server chunks drain over their **route** through `fabric`:
+    /// the rate is the narrowest link of the route — per-link capacity
+    /// (health included), shared equally among the jobs currently crossing
+    /// that link, optionally shrunk by `residual` (the fraction each
+    /// link's capacity the workload's own traffic leaves for migrations) —
+    /// divided by the hop count (store-and-forward per hop).  `bw_scale`
+    /// scales *fabric* (cross-server) rates only; intra-server copies stay
+    /// at memory-controller speed, shared per server (bandwidth-starvation
+    /// experiments model a contended fabric, not slow local DRAM).
+    pub fn advance(
+        &mut self,
+        topo: &Topology,
+        chunk_gb: f64,
+        bw_scale: f64,
+        fabric: &FabricGraph,
+        residual: Option<&[f64]>,
+    ) -> TickOutcome {
+        let mut out = TickOutcome {
+            link_gbs: vec![0.0; fabric.num_links()],
+            ..TickOutcome::default()
+        };
         if self.jobs.is_empty() {
             return out;
         }
 
-        // Fair share: count jobs per (src server, dst server) link.
-        let link_of = |mv: &ChunkMove| {
-            (topo.server_of_node(mv.from).0, topo.server_of_node(mv.to).0)
+        let servers_of = |mv: &ChunkMove| {
+            (topo.server_of_node(mv.from), topo.server_of_node(mv.to))
         };
-        let mut users: HashMap<(usize, usize), usize> = HashMap::new();
+        // Fair share, per physical resource: jobs crossing each fabric
+        // link (from each job's first pending chunk) and intra-server jobs
+        // per memory controller.
+        let mut link_users: Vec<usize> = vec![0; fabric.num_links()];
+        let mut intra_users: HashMap<usize, usize> = HashMap::new();
         for job in &self.jobs {
             if let Some(mv) = job.current() {
-                *users.entry(link_of(&mv)).or_insert(0) += 1;
+                let (sa, sb) = servers_of(&mv);
+                if sa == sb {
+                    *intra_users.entry(sa.0).or_insert(0) += 1;
+                } else {
+                    for l in &fabric.route(sa, sb).links {
+                        link_users[l.0] += 1;
+                    }
+                }
             }
         }
 
@@ -177,24 +219,37 @@ impl MigrationEngine {
                 continue;
             }
             // Budget one tick of wall-clock time; each chunk consumes time
-            // at its *own* link's rate, so a job whose moves mix links
+            // at its *own* route's rate, so a job whose moves mix routes
             // never drains fabric chunks at memory-controller speed (or
-            // vice versa).  Contention is approximated per link from each
-            // job's first pending chunk.
+            // vice versa).
             let mut time = 1.0f64;
             let mut moved = 0.0;
             while time > 1e-9 {
                 let Some(mv) = job.current() else { break };
-                let (sa, sb) = link_of(&mv);
-                let sharers = users.get(&(sa, sb)).copied().unwrap_or(1).max(1);
-                let scale = if sa == sb { 1.0 } else { bw_scale };
-                let rate = topo.migration_bw_gbs(mv.from, mv.to) * scale / sharers as f64;
+                let (sa, sb) = servers_of(&mv);
+                let (rate, route) = if sa == sb {
+                    let sharers = intra_users.get(&sa.0).copied().unwrap_or(1).max(1);
+                    (topo.spec.mem_bw_per_node_gbs / sharers as f64, None)
+                } else {
+                    let route = fabric.route(sa, sb);
+                    let mut min_share = f64::INFINITY;
+                    for l in &route.links {
+                        let avail = fabric.capacity_gbs(*l)
+                            * residual.map_or(1.0, |r| r[l.0]);
+                        let sharers = link_users[l.0].max(1);
+                        min_share = min_share.min(avail / sharers as f64);
+                    }
+                    if route.links.is_empty() {
+                        min_share = 0.0; // no live route: the job stalls
+                    }
+                    (min_share / route.links.len().max(1) as f64 * bw_scale, Some(route))
+                };
                 if rate <= 0.0 {
                     break;
                 }
                 let need_gb = chunk_gb - job.carry_gb;
                 let need_time = need_gb / rate;
-                if time >= need_time - 1e-12 {
+                let amount = if time >= need_time - 1e-12 {
                     time -= need_time;
                     moved += need_gb;
                     job.carry_gb = 0.0;
@@ -205,11 +260,18 @@ impl MigrationEngine {
                         chunk: mv.chunk,
                         to: mv.to,
                     });
+                    need_gb
                 } else {
                     let partial = rate * time;
                     job.carry_gb += partial;
                     moved += partial;
                     time = 0.0;
+                    partial
+                };
+                if let Some(route) = route {
+                    for l in &route.links {
+                        out.link_gbs[l.0] += amount;
+                    }
                 }
             }
             if moved > 0.0 {
@@ -257,7 +319,7 @@ mod tests {
         let mut ticks = 0;
         let mut gb = 0.0;
         while eng.active_jobs() > 0 {
-            let out = eng.advance(&topo, chunk_gb, 1.0);
+            let out = eng.advance(&topo, chunk_gb, 1.0, topo.fabric(), None);
             gb += out.gb_moved.iter().map(|(_, g)| g).sum::<f64>();
             ticks += 1;
             assert!(ticks < 100, "job never finished");
@@ -276,7 +338,7 @@ mod tests {
             let mut gb = 0.0;
             for _ in 0..5 {
                 gb += eng
-                    .advance(&topo, chunk_gb, scale)
+                    .advance(&topo, chunk_gb, scale, topo.fabric(), None)
                     .gb_moved
                     .iter()
                     .map(|(_, g)| g)
@@ -296,7 +358,7 @@ mod tests {
         let mut eng = MigrationEngine::new();
         eng.enqueue(VmId(1), cross_server_moves(512), 0); // 1 GB
         eng.enqueue(VmId(2), cross_server_moves(512), 0); // 1 GB, same link
-        let out = eng.advance(&topo, chunk_gb, 1.0);
+        let out = eng.advance(&topo, chunk_gb, 1.0, topo.fabric(), None);
         // 1 GB/s split two ways -> 0.5 GB each.
         assert_eq!(out.gb_moved.len(), 2);
         for (_, gb) in &out.gb_moved {
@@ -314,7 +376,7 @@ mod tests {
             .map(|chunk| ChunkMove { chunk, from: NodeId(0), to: NodeId(1) })
             .collect();
         eng.enqueue(VmId(1), moves, 0);
-        let out = eng.advance(&topo, chunk_gb, 0.05);
+        let out = eng.advance(&topo, chunk_gb, 0.05, topo.fabric(), None);
         assert_eq!(out.finished_jobs.len(), 1, "intra-server copy must stay at DRAM speed");
     }
 
@@ -328,7 +390,7 @@ mod tests {
             .map(|chunk| ChunkMove { chunk, from: NodeId(0), to: NodeId(1) })
             .collect();
         eng.enqueue(VmId(1), moves, 0);
-        let out = eng.advance(&topo, chunk_gb, 1.0);
+        let out = eng.advance(&topo, chunk_gb, 1.0, topo.fabric(), None);
         assert_eq!(out.finished_jobs.len(), 1);
         assert_eq!(out.completed_chunks.len(), 4096);
     }
@@ -339,7 +401,7 @@ mod tests {
         let chunk_gb = 2.0 / 1024.0;
         let mut eng = MigrationEngine::new();
         eng.enqueue(VmId(3), cross_server_moves(600), 0);
-        let out = eng.advance(&topo, chunk_gb, 1.0);
+        let out = eng.advance(&topo, chunk_gb, 1.0, topo.fabric(), None);
         // 1 GB/s moves 512 chunks of the 600.
         assert_eq!(out.completed_chunks.len(), 512);
         assert_eq!(out.completed_chunks[0].chunk, 0);
@@ -361,14 +423,14 @@ mod tests {
             (1..2049).map(|chunk| ChunkMove { chunk, from: NodeId(24), to: NodeId(0) }),
         );
         eng.enqueue(VmId(1), moves, 0);
-        let first = eng.advance(&topo, chunk_gb, 1.0).completed_chunks.len();
+        let first = eng.advance(&topo, chunk_gb, 1.0, topo.fabric(), None).completed_chunks.len();
         assert!(
             first <= 520,
             "fabric chunks drained at intra-server speed: {first} in one tick"
         );
         let mut ticks = 1;
         while eng.active_jobs() > 0 {
-            eng.advance(&topo, chunk_gb, 1.0);
+            eng.advance(&topo, chunk_gb, 1.0, topo.fabric(), None);
             ticks += 1;
             assert!(ticks < 10, "mixed-link job never drained");
         }
@@ -385,7 +447,78 @@ mod tests {
         assert_eq!(eng.cancel_vm(VmId(1)), 1);
         assert_eq!(eng.active_jobs(), 1);
         assert_eq!(eng.inflight_chunks_for(VmId(1)), 0);
-        let out = eng.advance(&topo, 2.0 / 1024.0, 1.0);
+        let out = eng.advance(&topo, 2.0 / 1024.0, 1.0, topo.fabric(), None);
         assert!(out.completed_chunks.iter().all(|c| c.vm == VmId(2)));
+    }
+
+    #[test]
+    fn link_gbs_attributes_traffic_to_route_links() {
+        let topo = Topology::paper();
+        let chunk_gb = 2.0 / 1024.0;
+        let mut eng = MigrationEngine::new();
+        eng.enqueue(VmId(1), cross_server_moves(2048), 0); // > 1 tick of work
+        let out = eng.advance(&topo, chunk_gb, 1.0, topo.fabric(), None);
+        let moved: f64 = out.gb_moved.iter().map(|(_, g)| g).sum();
+        assert!(moved > 0.5);
+        // Every GB crossed both links of the server 4 -> server 0 route.
+        let route = topo.fabric().route(
+            crate::topology::ServerId(4),
+            crate::topology::ServerId(0),
+        );
+        assert_eq!(route.hops(), 2);
+        for l in &route.links {
+            assert!((out.link_gbs[l.0] - moved).abs() < 1e-6, "link {} charge", l.0);
+        }
+        let total: f64 = out.link_gbs.iter().sum();
+        assert!((total - moved * 2.0).abs() < 1e-6, "2 links x moved GB");
+    }
+
+    #[test]
+    fn downed_link_reroutes_migration_over_longer_path() {
+        let topo = Topology::paper();
+        let chunk_gb = 2.0 / 1024.0;
+        // 1-hop move server 1 -> server 0 at 2 GB/s nominally.
+        let moves: Vec<ChunkMove> =
+            (0..1024).map(|chunk| ChunkMove { chunk, from: NodeId(6), to: NodeId(0) }).collect();
+        let run = |graph: &FabricGraph| {
+            let mut eng = MigrationEngine::new();
+            eng.enqueue(VmId(1), moves.clone(), 0);
+            eng.advance(&topo, chunk_gb, 1.0, graph, None)
+                .gb_moved
+                .iter()
+                .map(|(_, g)| g)
+                .sum::<f64>()
+        };
+        let healthy = run(topo.fabric());
+        assert!((healthy - 2.0).abs() < 1e-6, "direct link: {healthy}");
+        let mut degraded = topo.fabric().clone();
+        degraded
+            .set_link_down(crate::topology::ServerId(1), crate::topology::ServerId(0))
+            .unwrap();
+        let detoured = run(&degraded);
+        // The detour is >= 2 hops: at most 1 GB/s.
+        assert!(detoured <= healthy / 2.0 + 1e-6, "detour {detoured} vs {healthy}");
+        assert!(detoured > 0.0, "job must still drain over the detour");
+    }
+
+    #[test]
+    fn residual_capacity_throttles_migration() {
+        let topo = Topology::paper();
+        let chunk_gb = 2.0 / 1024.0;
+        let graph = topo.fabric();
+        // Workload traffic leaves only 25% of each link for migrations.
+        let residual = vec![0.25; graph.num_links()];
+        let run = |res: Option<&[f64]>| {
+            let mut eng = MigrationEngine::new();
+            eng.enqueue(VmId(1), cross_server_moves(2048), 0);
+            eng.advance(&topo, chunk_gb, 1.0, graph, res)
+                .gb_moved
+                .iter()
+                .map(|(_, g)| g)
+                .sum::<f64>()
+        };
+        let free = run(None);
+        let squeezed = run(Some(&residual));
+        assert!((squeezed - free * 0.25).abs() < 1e-6, "{squeezed} vs {free}");
     }
 }

@@ -178,6 +178,34 @@ impl MigrationReport {
     }
 }
 
+/// Aggregate fabric-event activity of one run, derived from the event
+/// trace — the interconnect-side analogue of [`MigrationReport`].
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FabricReport {
+    /// Uniform degradations applied (`fabric_degraded` events; restores
+    /// are traced as scale-1.0 degradations and counted here too).
+    pub degradations: usize,
+    /// Individual link failures (`fabric_link_down` events).
+    pub link_downs: usize,
+    /// Link restorations (`fabric_link_restored` events).
+    pub link_restores: usize,
+}
+
+impl FabricReport {
+    pub fn from_trace(trace: &EventTrace) -> Self {
+        let mut r = FabricReport::default();
+        for (_, e) in trace.iter() {
+            match e {
+                Event::FabricDegraded { .. } => r.degradations += 1,
+                Event::FabricLinkDown { .. } => r.link_downs += 1,
+                Event::FabricLinkRestored { .. } => r.link_restores += 1,
+                _ => {}
+            }
+        }
+        r
+    }
+}
+
 /// Across-run variability: std/mean of each app's mean throughput over
 /// repeated runs (the paper's §5.3.2 ratio: > 0.4 vanilla, < 0.04 SM).
 pub fn across_run_cov(per_run_means: &[Vec<(App, f64)>]) -> Vec<(App, f64)> {
@@ -259,6 +287,19 @@ mod tests {
         let r = MigrationReport::from_trace(&EventTrace::new(4));
         assert_eq!(r.jobs_started, 0);
         assert_eq!(r.mean_job_ticks, 0.0);
+    }
+
+    #[test]
+    fn fabric_report_counts_link_events() {
+        let mut t = EventTrace::new(8);
+        t.push(1, Event::FabricDegraded { scale: 0.5 });
+        t.push(2, Event::FabricLinkDown { from: 0, to: 1 });
+        t.push(5, Event::FabricLinkRestored { from: 0, to: 1 });
+        t.push(6, Event::FabricDegraded { scale: 1.0 });
+        let r = FabricReport::from_trace(&t);
+        assert_eq!(r.degradations, 2);
+        assert_eq!(r.link_downs, 1);
+        assert_eq!(r.link_restores, 1);
     }
 
     #[test]

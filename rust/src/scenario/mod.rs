@@ -24,4 +24,4 @@ pub mod timeline;
 
 pub use runner::{run_scenario, ScenarioConfig, ScenarioMetrics, ScenarioResult};
 pub use suite::{full_suite, run_suite, run_suite_on, smoke_suite, to_json, SCENARIO_NAMES};
-pub use timeline::{DiurnalSpec, DrainWindow, FabricWindow, ScenarioEvent, ScenarioSpec};
+pub use timeline::{DiurnalSpec, DrainWindow, FabricWindow, LinkWindow, ScenarioEvent, ScenarioSpec};

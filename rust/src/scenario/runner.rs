@@ -74,6 +74,9 @@ pub struct ScenarioMetrics {
     pub rejected: u64,
     /// Queued arrivals admitted later (e.g. after recovery).
     pub readmitted: u64,
+    /// Fabric link failures + restorations applied (asymmetric-failure
+    /// scenarios).
+    pub link_events: usize,
     pub events_applied: usize,
 }
 
@@ -191,6 +194,14 @@ fn apply_event(
             sim.restore_fabric();
             "restore-fabric".to_string()
         }
+        ScenarioEvent::LinkDown { a, b } => {
+            sim.fail_fabric_link(ServerId(*a), ServerId(*b))?;
+            format!("link-down s{a}<->s{b}")
+        }
+        ScenarioEvent::LinkRestore { a, b } => {
+            sim.restore_fabric_link(ServerId(*a), ServerId(*b))?;
+            format!("link-restore s{a}<->s{b}")
+        }
     })
 }
 
@@ -201,11 +212,14 @@ pub fn run_scenario(
     cfg: &ScenarioConfig,
 ) -> Result<ScenarioResult> {
     let sim_seed = spec.salted_seed(cfg.seed);
-    let sim_cfg = match alg {
+    let mut sim_cfg = match alg {
         Algorithm::Vanilla => SimConfig::vanilla(sim_seed),
         Algorithm::AutoNuma => SimConfig::vanilla_autonuma(sim_seed),
         _ => SimConfig::pinned(sim_seed),
     };
+    // Legacy scenarios keep feedback off (bit-identical to pre-fabric
+    // runs); link-failure scenarios turn the congestion ledger on.
+    sim_cfg.fabric.feedback = spec.fabric_feedback;
     let mut sim = Simulator::new(Topology::paper(), sim_cfg);
     let mut mapper = alg.metric().map(|metric| {
         let mcfg = cfg.mapper.clone().unwrap_or_else(|| MapperConfig::new(metric));
@@ -305,6 +319,8 @@ pub fn run_scenario(
         gb_moved: sim.trace.total_gb_migrated(),
         rejected: ctx.rejected,
         readmitted: ctx.readmitted,
+        link_events: sim.trace.count_kind("fabric_link_down")
+            + sim.trace.count_kind("fabric_link_restored"),
         events_applied: event_log.len(),
     };
     Ok(ScenarioResult { metrics, event_log, ticks_per_sec: spec.horizon as f64 / wall })

@@ -14,14 +14,15 @@ use crate::workload::trace::Arrival;
 use crate::workload::App;
 
 use super::runner::{run_scenario, ScenarioConfig, ScenarioResult};
-use super::timeline::{DiurnalSpec, DrainWindow, FabricWindow, ScenarioSpec};
+use super::timeline::{DiurnalSpec, DrainWindow, FabricWindow, LinkWindow, ScenarioSpec};
 
 /// The compared policies: the kernel baseline ("LinuxSched") and the
 /// coordinator (SM-IPC).
 pub const SUITE_ALGS: [Algorithm; 2] = [Algorithm::Vanilla, Algorithm::SmIpc];
 
-/// The five named scenarios.
-pub const SCENARIO_NAMES: [&str; 5] = ["steady", "churn", "drain", "diurnal", "degraded-fabric"];
+/// The six named scenarios.
+pub const SCENARIO_NAMES: [&str; 6] =
+    ["steady", "churn", "drain", "diurnal", "degraded-fabric", "degraded-link"];
 
 /// Steady background population: ~48 vCPUs (1/6 of the paper machine) of
 /// mixed classes, leaving headroom for churn, drains and re-admission.
@@ -62,6 +63,8 @@ pub fn named(name: &str, fast: bool) -> Option<ScenarioSpec> {
         diurnal: None,
         drains: Vec::new(),
         fabric: Vec::new(),
+        link_downs: Vec::new(),
+        fabric_feedback: false,
     };
     match name {
         "steady" => {}
@@ -81,6 +84,19 @@ pub fn named(name: &str, fast: bool) -> Option<ScenarioSpec> {
             s.fabric = vec![FabricWindow { at: h / 4, scale: 0.1, restore_at: h * 3 / 4 }];
             s.arrive_rate = 6.0 / h as f64;
             s.depart_rate = 4.0 / h as f64;
+        }
+        "degraded-link" => {
+            // Asymmetric failure: one torus link dies mid-run; traffic
+            // between servers 0 and 1 detours and contends with what is
+            // already on the surviving links.  Congestion feedback is on —
+            // this is the scenario the fabric ledger exists for — plus
+            // churn and phase shifts so mapping decisions happen while
+            // the link is out.
+            s.link_downs = vec![LinkWindow { at: h / 4, a: 0, b: 1, restore_at: h * 3 / 4 }];
+            s.fabric_feedback = true;
+            s.arrive_rate = 8.0 / h as f64;
+            s.depart_rate = 6.0 / h as f64;
+            s.phase_every = h / 10;
         }
         _ => return None,
     }
@@ -138,7 +154,7 @@ pub fn to_json(results: &[ScenarioResult]) -> String {
              \"p99_tail_rel\": {:.6}, \"remaps\": {}, \"reshuffles\": {}, \
              \"evacuations\": {}, \
              \"sched_moves\": {}, \"migrations_started\": {}, \"gb_moved\": {:.3}, \
-             \"rejected\": {}, \"readmitted\": {}, \"events\": {}, \
+             \"rejected\": {}, \"readmitted\": {}, \"link_events\": {}, \"events\": {}, \
              \"ticks_per_sec\": {:.1}}}{}\n",
             esc(&m.scenario),
             esc(m.algorithm),
@@ -155,6 +171,7 @@ pub fn to_json(results: &[ScenarioResult]) -> String {
             m.gb_moved,
             m.rejected,
             m.readmitted,
+            m.link_events,
             m.events_applied,
             r.ticks_per_sec,
             if k + 1 == results.len() { "" } else { "," },
@@ -219,9 +236,9 @@ mod tests {
     use super::*;
 
     #[test]
-    fn suite_has_the_five_named_scenarios() {
+    fn suite_has_the_six_named_scenarios() {
         let s = smoke_suite();
-        assert_eq!(s.len(), 5);
+        assert_eq!(s.len(), 6);
         for (spec, name) in s.iter().zip(SCENARIO_NAMES.iter()) {
             assert_eq!(spec.name, *name);
             assert!(spec.warmup < spec.horizon);

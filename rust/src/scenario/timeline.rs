@@ -32,6 +32,10 @@ pub enum ScenarioEvent {
     /// Fabric-link degradation to `scale` of nominal bandwidth/capacity.
     DegradeFabric { scale: f64 },
     RestoreFabric,
+    /// One fabric link pair fails (asymmetric failure; traffic re-routes).
+    LinkDown { a: usize, b: usize },
+    /// The failed link pair comes back.
+    LinkRestore { a: usize, b: usize },
 }
 
 /// Diurnal load wave: `scale(t) = 1 + amplitude · sin(2πt / period)`,
@@ -59,6 +63,16 @@ pub struct FabricWindow {
     pub restore_at: u64,
 }
 
+/// A single-link failure window (`a <-> b` must be a torus-adjacent
+/// server pair).
+#[derive(Debug, Clone, Copy)]
+pub struct LinkWindow {
+    pub at: u64,
+    pub a: usize,
+    pub b: usize,
+    pub restore_at: u64,
+}
+
 /// Declarative description of one scenario.
 #[derive(Debug, Clone)]
 pub struct ScenarioSpec {
@@ -81,6 +95,13 @@ pub struct ScenarioSpec {
     pub diurnal: Option<DiurnalSpec>,
     pub drains: Vec<DrainWindow>,
     pub fabric: Vec<FabricWindow>,
+    /// Individual link failures (asymmetric fabric degradation).
+    pub link_downs: Vec<LinkWindow>,
+    /// Run the simulator with link-level congestion feedback on (the
+    /// fabric ledger shaping perf and migration budgets).  Off for the
+    /// legacy scenarios, which stay bit-identical to their pre-fabric
+    /// runs; on for `degraded-link`.
+    pub fabric_feedback: bool,
 }
 
 /// FNV-1a — stable name salt so each scenario in a suite draws an
@@ -178,6 +199,12 @@ impl ScenarioSpec {
                 events.push((f.restore_at, ScenarioEvent::RestoreFabric));
             }
         }
+        for l in &self.link_downs {
+            events.push((l.at, ScenarioEvent::LinkDown { a: l.a, b: l.b }));
+            if l.restore_at > l.at && l.restore_at < self.horizon {
+                events.push((l.restore_at, ScenarioEvent::LinkRestore { a: l.a, b: l.b }));
+            }
+        }
 
         events.sort_by_key(|(t, _)| *t);
         events
@@ -201,6 +228,8 @@ mod tests {
             diurnal: Some(DiurnalSpec { period: 100, amplitude: 0.5, every: 10 }),
             drains: vec![DrainWindow { at: 80, server: 3, recover_at: 160 }],
             fabric: vec![FabricWindow { at: 50, scale: 0.2, restore_at: 150 }],
+            link_downs: vec![LinkWindow { at: 60, a: 0, b: 1, restore_at: 140 }],
+            fabric_feedback: false,
         }
     }
 
@@ -245,6 +274,8 @@ mod tests {
         assert!(tl.contains(&(160, ScenarioEvent::Recover { server: 3 })));
         assert!(tl.contains(&(50, ScenarioEvent::DegradeFabric { scale: 0.2 })));
         assert!(tl.contains(&(150, ScenarioEvent::RestoreFabric)));
+        assert!(tl.contains(&(60, ScenarioEvent::LinkDown { a: 0, b: 1 })));
+        assert!(tl.contains(&(140, ScenarioEvent::LinkRestore { a: 0, b: 1 })));
     }
 
     #[test]

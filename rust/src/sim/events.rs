@@ -32,6 +32,11 @@ pub enum Event {
     /// Fabric health changed; `scale` multiplies cross-server bandwidth
     /// and fabric capacity (1.0 = restored to nominal).
     FabricDegraded { scale: f64 },
+    /// One fabric link pair failed (both directions); traffic between the
+    /// two servers re-routes around it.
+    FabricLinkDown { from: usize, to: usize },
+    /// A failed link pair came back; routes return to the torus minimum.
+    FabricLinkRestored { from: usize, to: usize },
     /// A VM's workload shifted execution phase.
     PhaseShifted { vm: VmId, phase: &'static str },
     /// Cluster-wide load multiplier changed (diurnal scenarios).
@@ -53,6 +58,8 @@ impl Event {
             Event::ServerDrained { .. } => "server_drained",
             Event::ServerRecovered { .. } => "server_recovered",
             Event::FabricDegraded { .. } => "fabric_degraded",
+            Event::FabricLinkDown { .. } => "fabric_link_down",
+            Event::FabricLinkRestored { .. } => "fabric_link_restored",
             Event::PhaseShifted { .. } => "phase_shifted",
             Event::LoadScaled { .. } => "load_scaled",
         }
@@ -75,6 +82,8 @@ impl Event {
             Event::ServerDrained { .. }
             | Event::ServerRecovered { .. }
             | Event::FabricDegraded { .. }
+            | Event::FabricLinkDown { .. }
+            | Event::FabricLinkRestored { .. }
             | Event::LoadScaled { .. } => None,
         }
     }
@@ -224,5 +233,16 @@ mod tests {
         t.push(3, Event::FabricDegraded { scale: 0.1 });
         assert!(t.to_csv().contains("3,fabric_degraded,-"));
         assert_eq!(t.count_kind("fabric_degraded"), 1);
+    }
+
+    #[test]
+    fn link_events_are_cluster_scoped() {
+        let mut t = EventTrace::new(10);
+        t.push(4, Event::FabricLinkDown { from: 0, to: 1 });
+        t.push(9, Event::FabricLinkRestored { from: 0, to: 1 });
+        assert_eq!(t.count_kind("fabric_link_down"), 1);
+        assert_eq!(t.count_kind("fabric_link_restored"), 1);
+        assert_eq!(Event::FabricLinkDown { from: 0, to: 1 }.vm(), None);
+        assert!(t.to_csv().contains("4,fabric_link_down,-"));
     }
 }

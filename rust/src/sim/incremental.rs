@@ -35,6 +35,7 @@
 
 use std::collections::BTreeMap;
 
+use crate::fabric::{congestion_factor, rho, FabricGraph};
 use crate::topology::{NodeId, Topology};
 use crate::vm::VmId;
 use crate::workload::{pair_penalty, AnimalClass, AppProfile};
@@ -77,6 +78,18 @@ struct VmCache {
     remote_frac: f64,
     /// Placement-weighted mean SLIT distance (10 = local).
     avg_dist: f64,
+    /// Total placement mass (the distance normalizer).
+    p_total: f64,
+    /// Intra-server share of the distance numerator Σ p·m·d (fabric mode).
+    local_dist_num: f64,
+    /// Cross-server flows grouped by route: `(route-table index, weight
+    /// Σ p·m, distance mass Σ p·m·d)` — lets the per-tick fabric pass
+    /// re-derive the congestion-stretched mean distance in O(routes)
+    /// instead of O(|p|·|m|).  Empty when fabric feedback is off.
+    flows: Vec<(u32, f64, f64)>,
+    /// Per-link demand coefficient (Σ of flow weights whose route crosses
+    /// the link), per unit of bandwidth demand.  Empty when off.
+    link_coeff: Vec<(u32, f64)>,
 }
 
 /// Persistent, dirty-tracked implementation of the joint performance model.
@@ -100,14 +113,36 @@ pub struct IncrementalEvaluator {
     mem_sat: Vec<f64>,
     /// Scratch: per-server memory aggregates (zeroed after each use).
     m_server: Vec<f64>,
+    /// Fabric-feedback mode: the live link graph (a clone kept in sync by
+    /// the simulator — re-cloned on link events, which also mark every VM
+    /// dirty so the cached flows re-route).  `None` = scalar fabric.
+    graph: Option<FabricGraph>,
+    /// Workload demand per fabric link (GB/s, util folded in), maintained
+    /// by the same subtract-stale/add-fresh discipline as `mem_demand`.
+    link_demand: Vec<f64>,
+    /// Scratch: per-link congestion factors, recomputed each tick.
+    phi: Vec<f64>,
     evals_since_rebuild: u32,
 }
 
 impl IncrementalEvaluator {
     pub fn new(topo: &Topology) -> Self {
+        Self::build(topo, false)
+    }
+
+    /// An evaluator with link-level congestion feedback: per-VM flow and
+    /// link-coefficient caches are maintained so the per-tick fabric pass
+    /// costs O(links + Σ routes-per-VM) on top of the scalar model.
+    pub fn with_fabric(topo: &Topology) -> Self {
+        Self::build(topo, true)
+    }
+
+    fn build(topo: &Topology, fabric: bool) -> Self {
         let n = topo.num_nodes();
         let server_of: Vec<u32> =
             (0..n).map(|i| topo.server_of_node(NodeId(i)).0 as u32).collect();
+        let graph = if fabric { Some(topo.fabric().clone()) } else { None };
+        let num_links = graph.as_ref().map_or(0, |g| g.num_links());
         Self {
             l3_mb: topo.spec.l3_per_node_mb,
             node_bw: topo.spec.mem_bw_per_node_gbs,
@@ -119,8 +154,50 @@ impl IncrementalEvaluator {
             vms: BTreeMap::new(),
             mem_sat: vec![1.0; n],
             m_server: vec![0.0; topo.spec.servers],
+            graph,
+            link_demand: vec![0.0; num_links],
+            phi: vec![1.0; num_links],
             evals_since_rebuild: 0,
         }
+    }
+
+    /// Adopt the simulator's live graph after a link event (down/restore
+    /// re-routes).  The caller must also mark every running VM dirty so
+    /// the cached flows are rebuilt against the new routes; the stale
+    /// link-demand sums are cleared here and re-accumulated by those
+    /// re-registrations.  No-op on a fabric-disabled evaluator.
+    pub fn set_graph(&mut self, graph: &FabricGraph) {
+        if self.graph.is_none() {
+            return;
+        }
+        self.graph = Some(graph.clone());
+        self.link_demand = vec![0.0; graph.num_links()];
+        self.phi = vec![1.0; graph.num_links()];
+        // Clear every VM's cached flow state; re-registration (the caller
+        // dirties all VMs) rebuilds it, and apply() re-adds link demand.
+        let mut vms = std::mem::take(&mut self.vms);
+        for c in vms.values_mut() {
+            c.flows.clear();
+            c.link_coeff.clear();
+        }
+        self.vms = vms;
+    }
+
+    /// Mirror a uniform fabric degradation (`degrade_fabric` semantics)
+    /// into the cloned graph.  Capacities change but routes do not, so
+    /// every cached flow and link coefficient stays valid — unlike
+    /// [`Self::set_graph`], no re-registration is needed.  No-op on a
+    /// fabric-disabled evaluator.
+    pub fn set_fabric_scale(&mut self, scale: f64) {
+        if let Some(g) = &mut self.graph {
+            g.set_uniform_scale(scale);
+        }
+    }
+
+    /// Current workload demand per fabric link (the migration engine's
+    /// residual-capacity input).  Empty when fabric feedback is off.
+    pub fn link_demand_snapshot(&self) -> Vec<f64> {
+        self.link_demand.clone()
     }
 
     /// Number of VMs currently registered.
@@ -138,6 +215,9 @@ impl IncrementalEvaluator {
             self.mem_demand[j as usize] += sign * demand * mj;
         }
         self.fabric_demand += sign * demand * c.remote_frac;
+        for &(l, w) in &c.link_coeff {
+            self.link_demand[l as usize] += sign * demand * w;
+        }
     }
 
     /// (Re)register a VM's placement and memory distribution: subtract the
@@ -186,6 +266,39 @@ impl IncrementalEvaluator {
         }
         let avg_dist = if p_total > 0.0 { avg / p_total } else { 10.0 };
 
+        // Fabric-feedback caches: cross-server flows grouped by route and
+        // their per-link demand coefficients (the tick pass then costs
+        // O(routes) per VM instead of O(|p|·|m|)).
+        let mut local_dist_num = 0.0;
+        let mut flows: Vec<(u32, f64, f64)> = Vec::new();
+        let mut link_coeff: Vec<(u32, f64)> = Vec::new();
+        if let Some(graph) = &self.graph {
+            let servers = graph.num_servers();
+            let mut flow_map: BTreeMap<u32, (f64, f64)> = BTreeMap::new();
+            for &(i, pi) in &sp {
+                let si = self.server_of[i as usize] as usize;
+                for &(j, mj) in &sm {
+                    let sj = self.server_of[j as usize] as usize;
+                    let d = topo.distance(NodeId(i as usize), NodeId(j as usize));
+                    if si == sj {
+                        local_dist_num += pi * mj * d;
+                    } else {
+                        let e = flow_map.entry((si * servers + sj) as u32).or_insert((0.0, 0.0));
+                        e.0 += pi * mj;
+                        e.1 += pi * mj * d;
+                    }
+                }
+            }
+            let mut coeff_map: BTreeMap<u32, f64> = BTreeMap::new();
+            for (&r, &(w, _)) in &flow_map {
+                for l in &graph.route_at(r as usize).links {
+                    *coeff_map.entry(l.0 as u32).or_insert(0.0) += w;
+                }
+            }
+            flows = flow_map.into_iter().map(|(r, (w, dsum))| (r, w, dsum)).collect();
+            link_coeff = coeff_map.into_iter().collect();
+        }
+
         // Remote fraction via per-server memory aggregates:
         // Σᵢ pᵢ (m_total − m_server[server(i)])  ==  Σᵢⱼ pᵢ mⱼ [srv(i)≠srv(j)].
         let mut m_total = 0.0;
@@ -219,6 +332,10 @@ impl IncrementalEvaluator {
             util,
             remote_frac,
             avg_dist,
+            p_total,
+            local_dist_num,
+            flows,
+            link_coeff,
         };
         self.apply(&cache, 1.0);
         self.vms.insert(id, cache);
@@ -238,6 +355,7 @@ impl IncrementalEvaluator {
         self.class_p.iter_mut().for_each(|x| *x = [0.0; 3]);
         self.mem_demand.iter_mut().for_each(|x| *x = 0.0);
         self.fabric_demand = 0.0;
+        self.link_demand.iter_mut().for_each(|x| *x = 0.0);
         // Move the map aside so the loop can borrow caches while apply()
         // mutates the accumulators — no per-VM clone.
         let vms = std::mem::take(&mut self.vms);
@@ -253,6 +371,20 @@ impl IncrementalEvaluator {
         &mut self,
         params: &ModelParams,
         inputs: &[(VmId, TickInput)],
+    ) -> Vec<ModelOut> {
+        self.evaluate_with_fabric(params, inputs, None)
+    }
+
+    /// [`Self::evaluate`] with link-level congestion feedback:
+    /// `mig_link_gbs` is the tick's migration traffic per link; the
+    /// maintained workload link demand is added on top and the per-link
+    /// M/M/1 factors stretch each VM's cached cross-server flows.
+    /// Requires a [`Self::with_fabric`] evaluator when `Some`.
+    pub fn evaluate_with_fabric(
+        &mut self,
+        params: &ModelParams,
+        inputs: &[(VmId, TickInput)],
+        mig_link_gbs: Option<&[f64]>,
     ) -> Vec<ModelOut> {
         self.evals_since_rebuild += 1;
         if self.evals_since_rebuild >= REBUILD_EVERY {
@@ -270,6 +402,9 @@ impl IncrementalEvaluator {
                     self.mem_demand[j as usize] += du * mj;
                 }
                 self.fabric_demand += du * c.remote_frac;
+                for &(l, w) in &c.link_coeff {
+                    self.link_demand[l as usize] += du * w;
+                }
                 c.util = inp.util;
             }
         }
@@ -285,10 +420,28 @@ impl IncrementalEvaluator {
             params.fabric_cap_gbs / self.fabric_demand
         };
 
-        // Pass 2: per-VM O(|p| + |m|) evaluation.
+        // Per-link congestion factors — O(links), only in fabric mode.
+        let fabric_on = match (mig_link_gbs, &self.graph) {
+            (Some(base), Some(graph)) => {
+                for l in 0..self.link_demand.len() {
+                    let d = self.link_demand[l] + base[l];
+                    self.phi[l] = congestion_factor(rho(
+                        d,
+                        graph.capacity_gbs(crate::fabric::LinkId(l)),
+                    ));
+                }
+                true
+            }
+            (Some(_), None) => {
+                panic!("evaluate_with_fabric on an evaluator built without with_fabric")
+            }
+            _ => false,
+        };
+
+        // Pass 2: per-VM O(|p| + |m| + routes) evaluation.
         inputs
             .iter()
-            .map(|(id, inp)| self.eval_one(&self.vms[id], inp, params, fabric_sat))
+            .map(|(id, inp)| self.eval_one(&self.vms[id], inp, params, fabric_sat, fabric_on))
             .collect()
     }
 
@@ -299,13 +452,42 @@ impl IncrementalEvaluator {
         inp: &TickInput,
         params: &ModelParams,
         fabric_sat: f64,
+        fabric_on: bool,
     ) -> ModelOut {
         let prof = &c.profile;
 
-        // 1. Latency factor from the cached mean distance.
+        // 1. Latency factor from the cached mean distance.  In fabric
+        // mode the cross-server flows are re-weighted by their routes'
+        // congestion factors — O(routes) from the cached flow groups,
+        // mirroring the from-scratch evaluator's per-pair stretch.
+        let (avg_dist, vm_phi) = if fabric_on {
+            let graph = self.graph.as_ref().expect("fabric_on implies graph");
+            let mut num = c.local_dist_num;
+            let mut phi_num = 0.0;
+            let mut phi_den = 0.0;
+            for &(r, w, dsum) in &c.flows {
+                let route = graph.route_at(r as usize);
+                let f = if route.links.is_empty() {
+                    1.0
+                } else {
+                    let mut sum = 0.0;
+                    for l in &route.links {
+                        sum += self.phi[l.0];
+                    }
+                    sum / route.links.len() as f64
+                };
+                num += dsum * f;
+                phi_num += w * f;
+                phi_den += w;
+            }
+            let avg = if c.p_total > 0.0 { num / c.p_total } else { 10.0 };
+            (avg, if phi_den > 0.0 { phi_num / phi_den } else { 1.0 })
+        } else {
+            (c.avg_dist, 1.0)
+        };
         let sigma =
             if prof.sensitivity.is_sensitive() { params.sens_mult } else { params.insens_mult };
-        let lat_mult = 1.0 + prof.mem_stall_frac * sigma * (c.avg_dist / 10.0 - 1.0);
+        let lat_mult = 1.0 + prof.mem_stall_frac * sigma * (avg_dist / 10.0 - 1.0);
         let lat = 1.0 / lat_mult;
 
         // 2. Contention: others' pressure + class-pair mass where my vCPUs
@@ -345,7 +527,8 @@ impl IncrementalEvaluator {
             let remote_sat = if remote_demand <= 1e-9 {
                 1.0
             } else {
-                fabric_sat.min(vm_link_cap / remote_demand).min(1.0)
+                // vm_phi == 1.0 exactly outside fabric mode.
+                fabric_sat.min(vm_link_cap / remote_demand).min(1.0) / vm_phi
             };
             ((1.0 - remote_frac) * local_sat + remote_frac * remote_sat).clamp(1e-4, 1.0)
         };
@@ -366,7 +549,7 @@ impl IncrementalEvaluator {
             * (1.0
                 + params.mpi_press_coeff * other_press
                 + params.mpi_pair_coeff * pair_pen
-                + 0.4 * (c.avg_dist / 10.0 - 1.0).min(4.0));
+                + 0.4 * (avg_dist / 10.0 - 1.0).min(4.0));
 
         ModelOut { ipc, mpi, perf, factors: Factors { lat, cont, bw, ob } }
     }
@@ -512,6 +695,81 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn fabric_feedback_matches_full_evaluator() {
+        // The incremental-vs-full oracle with congestion feedback on:
+        // random placements (cross-server flows included) plus random
+        // migration traffic on the links must evaluate identically
+        // through the cached-flow path and the from-scratch path.
+        let topo = Topology::paper();
+        let params = ModelParams::default();
+        propcheck("incremental fabric == full fabric", 20, |rng| {
+            let mut inc = IncrementalEvaluator::with_fabric(&topo);
+            let views: Vec<(VmId, VmView)> = (0..rng.range(1, 8))
+                .map(|k| (VmId(k as u64 + 1), random_view(rng, &topo)))
+                .collect();
+            for (id, v) in &views {
+                inc.set_placement(&topo, *id, &v.p, &v.m, v.vcpus, v.profile.clone());
+            }
+            let base: Vec<f64> =
+                (0..topo.fabric().num_links()).map(|_| rng.uniform(0.0, 3.0)).collect();
+            let inputs: Vec<(VmId, TickInput)> = views
+                .iter()
+                .map(|(id, v)| {
+                    let t = TickInput {
+                        util: v.util,
+                        mean_occupancy: v.mean_occupancy,
+                        churn: v.churn,
+                    };
+                    (*id, t)
+                })
+                .collect();
+            let got = inc.evaluate_with_fabric(&params, &inputs, Some(&base));
+            let dense: Vec<VmView> = views.iter().map(|(_, v)| v.clone()).collect();
+            let ft = perf_model::FabricTick { graph: topo.fabric(), base_gbs: &base };
+            let want = perf_model::evaluate_with_fabric(&topo, &dense, &params, Some(&ft));
+            assert_outputs_match(&got, &want)
+        });
+    }
+
+    #[test]
+    fn set_graph_rebuilds_flow_caches_after_reroute() {
+        // Down a link, hand the re-routed graph to the evaluator,
+        // re-register the VMs (the simulator's mark-all-dirty), and the
+        // fabric path must again match the full evaluator on the same
+        // degraded graph.
+        let topo = Topology::paper();
+        let params = ModelParams::default();
+        let mut rng = Rng::new(99);
+        let mut graph = topo.fabric().clone();
+        graph
+            .set_link_down(crate::topology::ServerId(0), crate::topology::ServerId(1))
+            .unwrap();
+        let mut inc = IncrementalEvaluator::with_fabric(&topo);
+        let views: Vec<(VmId, VmView)> =
+            (0..5).map(|k| (VmId(k + 1), random_view(&mut rng, &topo))).collect();
+        for (id, v) in &views {
+            inc.set_placement(&topo, *id, &v.p, &v.m, v.vcpus, v.profile.clone());
+        }
+        inc.set_graph(&graph);
+        for (id, v) in &views {
+            inc.set_placement(&topo, *id, &v.p, &v.m, v.vcpus, v.profile.clone());
+        }
+        let base = vec![0.5; graph.num_links()];
+        let inputs: Vec<(VmId, TickInput)> = views
+            .iter()
+            .map(|(id, v)| {
+                (*id, TickInput { util: v.util, mean_occupancy: v.mean_occupancy, churn: v.churn })
+            })
+            .collect();
+        let got = inc.evaluate_with_fabric(&params, &inputs, Some(&base));
+        let dense: Vec<VmView> = views.iter().map(|(_, v)| v.clone()).collect();
+        let ft = perf_model::FabricTick { graph: &graph, base_gbs: &base };
+        let want = perf_model::evaluate_with_fabric(&topo, &dense, &params, Some(&ft));
+        let check = assert_outputs_match(&got, &want);
+        assert!(check.is_ok(), "{check:?}");
     }
 
     #[test]

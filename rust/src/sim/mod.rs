@@ -25,6 +25,7 @@ use std::collections::{BTreeMap, BTreeSet};
 use anyhow::{anyhow, bail, Result};
 
 use crate::coordinator::candidates::SlotMap;
+use crate::fabric::{FabricGraph, FabricParams, LinkId};
 use crate::mem::{
     autonuma, MemConfig, MemPolicy, MigrationEngine, MigrationId, MigrationJob, PageMap,
 };
@@ -58,6 +59,9 @@ pub struct SimConfig {
     pub history_cap: usize,
     /// Memory subsystem: page granularity, kernel policy, fabric scale.
     pub mem: MemConfig,
+    /// Fabric subsystem: link-level congestion feedback (off by default —
+    /// the uncongested routed fabric reproduces the scalar model exactly).
+    pub fabric: FabricParams,
     /// Evaluate the perf model through the dirty-tracked
     /// [`IncrementalEvaluator`] (default).  `false` re-evaluates the world
     /// from scratch every tick — the original O(V²·N + V·N²) path, kept as
@@ -76,6 +80,7 @@ impl SimConfig {
             vanilla: VanillaParams::default(),
             history_cap: 512,
             mem: MemConfig::default(),
+            fabric: FabricParams::default(),
             incremental: true,
         }
     }
@@ -171,6 +176,15 @@ pub struct Simulator {
     /// Fabric health multiplier in (0, 1]: scales cross-server migration
     /// bandwidth and the model's fabric capacity (1 = nominal).
     fabric_health: f64,
+    /// Live routed link graph: per-link health + routes, re-routed on
+    /// link failures.  The uniform `fabric_health` scale is mirrored into
+    /// it so link-level and scalar views agree.
+    fabric: FabricGraph,
+    /// GB carried per fabric link by this tick's migration transfers.
+    mig_link_gbs: Vec<f64>,
+    /// Last tick's workload demand per link (GB/s) — the residual-capacity
+    /// input migrations draw their budget from in feedback mode.
+    workload_link_gbs: Vec<f64>,
     /// Cluster-wide demand multiplier on every VM's utilization draw
     /// (diurnal scenarios; 1 = nominal).
     global_load: f64,
@@ -181,7 +195,13 @@ impl Simulator {
         let sched = LinuxScheduler::new(&topo, cfg.vanilla.clone());
         let rng = Rng::new(cfg.seed);
         let slot_map = SlotMap::empty(&topo);
-        let inc = IncrementalEvaluator::new(&topo);
+        let inc = if cfg.fabric.feedback {
+            IncrementalEvaluator::with_fabric(&topo)
+        } else {
+            IncrementalEvaluator::new(&topo)
+        };
+        let fabric = topo.fabric().clone();
+        let num_links = fabric.num_links();
         Self {
             topo,
             cfg,
@@ -199,6 +219,9 @@ impl Simulator {
             inc,
             offline: BTreeSet::new(),
             fabric_health: 1.0,
+            fabric,
+            mig_link_gbs: vec![0.0; num_links],
+            workload_link_gbs: vec![0.0; num_links],
             global_load: 1.0,
         }
     }
@@ -533,15 +556,24 @@ impl Simulator {
         self.offline.contains(&server.0)
     }
 
-    /// Degrade the cache-coherent fabric: `scale` in (0, 1] multiplies
-    /// cross-server migration bandwidth *and* the perf model's fabric
-    /// capacity.  No dirty marking needed — both evaluators read the
-    /// shared capacity every tick.
+    /// Degrade the cache-coherent fabric **uniformly**: `scale` in (0, 1]
+    /// multiplies every link's capacity, cross-server migration bandwidth
+    /// and the perf model's fabric capacity.  Implemented on top of the
+    /// per-link state (one scale across all links), preserving the
+    /// pre-fabric scenario semantics; [`Self::fail_fabric_link`] is the
+    /// link-targeted variant.  No dirty marking needed — routes are
+    /// unchanged, the scalar capacity is read every tick, and the
+    /// incremental evaluator's graph clone is re-scaled in place.
     pub fn degrade_fabric(&mut self, scale: f64) -> Result<()> {
         if !(scale > 0.0 && scale <= 1.0) {
             bail!("fabric scale must be in (0, 1], got {scale}");
         }
         self.fabric_health = scale;
+        self.fabric.set_uniform_scale(scale);
+        // The incremental evaluator's graph clone must see the same
+        // capacities, or its congestion factors diverge from the full
+        // evaluator's.  Routes are unchanged, so cached flows stay valid.
+        self.inc.set_fabric_scale(scale);
         self.trace.push(self.tick, Event::FabricDegraded { scale });
         Ok(())
     }
@@ -549,11 +581,46 @@ impl Simulator {
     /// Restore the fabric to nominal health.
     pub fn restore_fabric(&mut self) {
         self.fabric_health = 1.0;
+        self.fabric.set_uniform_scale(1.0);
+        self.inc.set_fabric_scale(1.0);
         self.trace.push(self.tick, Event::FabricDegraded { scale: 1.0 });
     }
 
     pub fn fabric_health(&self) -> f64 {
         self.fabric_health
+    }
+
+    /// The live routed link graph (per-link health, current routes).
+    pub fn fabric(&self) -> &FabricGraph {
+        &self.fabric
+    }
+
+    /// Fail one fabric link pair (asymmetric failure): traffic between
+    /// the two servers re-routes over the surviving links — the detour is
+    /// longer *and* contends with the traffic already there, which the
+    /// uniform [`Self::degrade_fabric`] cannot express.  Refused when the
+    /// link doesn't exist, is already down, or would partition the
+    /// fabric.  Every running VM is re-cached so cached flow routes
+    /// follow the new routing table.
+    pub fn fail_fabric_link(&mut self, a: ServerId, b: ServerId) -> Result<()> {
+        if a.0 >= self.topo.spec.servers || b.0 >= self.topo.spec.servers {
+            bail!("server out of range: s{} <-> s{}", a.0, b.0);
+        }
+        self.fabric.set_link_down(a, b)?;
+        self.inc.set_graph(&self.fabric);
+        self.mark_all_running_dirty();
+        self.trace.push(self.tick, Event::FabricLinkDown { from: a.0, to: b.0 });
+        Ok(())
+    }
+
+    /// Bring a failed fabric link pair back; routes return to the torus
+    /// minimum.
+    pub fn restore_fabric_link(&mut self, a: ServerId, b: ServerId) -> Result<()> {
+        self.fabric.restore_link(a, b)?;
+        self.inc.set_graph(&self.fabric);
+        self.mark_all_running_dirty();
+        self.trace.push(self.tick, Event::FabricLinkRestored { from: a.0, to: b.0 });
+        Ok(())
     }
 
     /// Shift a running VM's workload phase: the live profile becomes
@@ -654,15 +721,34 @@ impl Simulator {
                 }
             }
         }
+        self.mig_link_gbs.iter_mut().for_each(|x| *x = 0.0);
         if self.migrations.active_jobs() == 0 {
             return;
         }
         let chunk_gb = self.cfg.mem.chunk_mb as f64 / 1024.0;
+        // Feedback mode: migrations draw their budget from what the
+        // workload's remote traffic (last tick) leaves of each link.
+        let residual: Option<Vec<f64>> = if self.cfg.fabric.feedback {
+            Some(
+                self.workload_link_gbs
+                    .iter()
+                    .enumerate()
+                    .map(|(l, &d)| {
+                        crate::fabric::migration_residual(d, self.fabric.capacity_gbs(LinkId(l)))
+                    })
+                    .collect(),
+            )
+        } else {
+            None
+        };
         let outcome = self.migrations.advance(
             &self.topo,
             chunk_gb,
-            self.cfg.mem.bw_scale * self.fabric_health,
+            self.cfg.mem.bw_scale,
+            &self.fabric,
+            residual.as_deref(),
         );
+        self.mig_link_gbs = outcome.link_gbs.clone();
         for c in &outcome.completed_chunks {
             if let Some(mvm) = self.vms.get_mut(&c.vm) {
                 mvm.pages.set_owner(c.chunk, c.to);
@@ -833,7 +919,17 @@ impl Simulator {
                     )
                 })
                 .collect();
-            self.inc.evaluate(&params, &inputs)
+            let outs = if self.cfg.fabric.feedback {
+                self.inc.evaluate_with_fabric(&params, &inputs, Some(&self.mig_link_gbs))
+            } else {
+                self.inc.evaluate(&params, &inputs)
+            };
+            if self.cfg.fabric.feedback {
+                // Next tick's migrations see what this tick's workload
+                // left of each link.
+                self.workload_link_gbs = self.inc.link_demand_snapshot();
+            }
+            outs
         } else {
             let views: Vec<VmView> = running
                 .iter()
@@ -850,7 +946,20 @@ impl Simulator {
                     }
                 })
                 .collect();
-            perf_model::evaluate(&self.topo, &views, &params)
+            let outs = if self.cfg.fabric.feedback {
+                let ft = perf_model::FabricTick {
+                    graph: &self.fabric,
+                    base_gbs: &self.mig_link_gbs,
+                };
+                perf_model::evaluate_with_fabric(&self.topo, &views, &params, Some(&ft))
+            } else {
+                perf_model::evaluate(&self.topo, &views, &params)
+            };
+            if self.cfg.fabric.feedback {
+                self.workload_link_gbs =
+                    perf_model::workload_link_demand(&self.topo, &views, &self.fabric);
+            }
+            outs
         };
 
         // 4. Synthesize noisy counters + reset churn.
@@ -977,6 +1086,80 @@ impl Simulator {
     /// GB of guest memory still queued or in transit for `id`.
     pub fn inflight_gb(&self, id: VmId) -> f64 {
         self.migrations.inflight_chunks_for(id) as f64 * self.cfg.mem.chunk_mb as f64 / 1024.0
+    }
+
+    /// Current demand per fabric link, GB/s: every running VM's remote
+    /// traffic charged to its routes, plus this tick's migration
+    /// transfers.  In feedback mode the evaluators already maintain this
+    /// sum incrementally, so the snapshot is O(links) — reusing the
+    /// last-evaluated tick's accumulators (stale by at most one tick,
+    /// fine for a scoring heuristic).  Otherwise it is recomputed from
+    /// scratch (a per-decision snapshot, not a per-tick path).
+    fn current_link_demand(&self) -> Vec<f64> {
+        if self.cfg.fabric.feedback {
+            let mut demand = self.workload_link_gbs.clone();
+            for (d, mig) in demand.iter_mut().zip(self.mig_link_gbs.iter()) {
+                *d += mig;
+            }
+            return demand;
+        }
+        let n = self.topo.num_nodes();
+        let views: Vec<VmView> = self
+            .vms
+            .values()
+            .filter(|m| m.vm.state == VmState::Running)
+            .map(|mvm| VmView {
+                p: mvm.placement_fractions(&self.topo),
+                m: mvm.pages.heat_fractions(n),
+                vcpus: mvm.vm.vcpus(),
+                util: mvm.util,
+                mean_occupancy: 1.0,
+                churn: 0.0,
+                profile: mvm.profile.clone(),
+            })
+            .collect();
+        let mut demand = perf_model::workload_link_demand(&self.topo, &views, &self.fabric);
+        for (d, mig) in demand.iter_mut().zip(self.mig_link_gbs.iter()) {
+            *d += mig;
+        }
+        demand
+    }
+
+    /// Utilization `ρ` per fabric link (demand / effective capacity).
+    pub fn link_utilization(&self) -> Vec<f64> {
+        self.current_link_demand()
+            .iter()
+            .enumerate()
+            .map(|(l, &d)| crate::fabric::rho(d, self.fabric.capacity_gbs(LinkId(l))))
+            .collect()
+    }
+
+    /// Mean per-hop congestion factor per server-pair route (row-major
+    /// `servers × servers`; 1.0 on the diagonal and at zero load) — the
+    /// coordinator's congestion-aware scoring snapshot.
+    pub fn route_congestion(&self) -> Vec<f64> {
+        let demand = self.current_link_demand();
+        let phi: Vec<f64> = demand
+            .iter()
+            .enumerate()
+            .map(|(l, &d)| {
+                crate::fabric::congestion_factor(crate::fabric::rho(
+                    d,
+                    self.fabric.capacity_gbs(LinkId(l)),
+                ))
+            })
+            .collect();
+        let s = self.topo.spec.servers;
+        let mut out = vec![1.0; s * s];
+        for a in 0..s {
+            for b in 0..s {
+                if a != b {
+                    out[a * s + b] =
+                        perf_model::route_phi(&self.fabric, &phi, ServerId(a), ServerId(b));
+                }
+            }
+        }
+        out
     }
 
     /// Memory allocated per node (GB), for capacity checks.
@@ -1451,6 +1634,120 @@ mod tests {
         s.restore_fabric();
         assert_eq!(s.fabric_health(), 1.0);
         assert_eq!(s.trace.count_kind("fabric_degraded"), 2);
+    }
+
+    #[test]
+    fn failed_link_reroutes_and_slows_migration() {
+        let run = |down: bool| {
+            let mut s = sim(SchedulerKind::Pinned, 51);
+            let id = s.create(VmType::Medium, App::Derby); // 32 GB
+            pin_local(&mut s, id, 0);
+            s.start(id).unwrap();
+            if down {
+                s.fail_fabric_link(ServerId(0), ServerId(1)).unwrap();
+            }
+            s.place_memory(id, &[(NodeId(6), 1.0)]).unwrap(); // server 1: 1 hop
+            for _ in 0..5 {
+                s.step();
+            }
+            s.get(id).unwrap().pages.gb_per_node(s.topo.num_nodes())[6]
+        };
+        let healthy = run(false);
+        let detoured = run(true);
+        assert!(healthy > 8.0, "direct 2 GB/s link should move ~10 GB: {healthy}");
+        assert!(
+            detoured < healthy * 0.7,
+            "detour must be slower: {detoured} vs {healthy}"
+        );
+        assert!(detoured > 0.0, "migration must still progress over the detour");
+    }
+
+    #[test]
+    fn link_events_validate_and_trace() {
+        let mut s = sim(SchedulerKind::Pinned, 52);
+        assert!(s.fail_fabric_link(ServerId(0), ServerId(9)).is_err(), "range");
+        assert!(s.fail_fabric_link(ServerId(0), ServerId(4)).is_err(), "not wired");
+        s.fail_fabric_link(ServerId(0), ServerId(1)).unwrap();
+        assert!(s.fail_fabric_link(ServerId(0), ServerId(1)).is_err(), "double down");
+        assert_eq!(s.fabric().down_links(), vec![(ServerId(0), ServerId(1))]);
+        assert!(s.fabric().hops(ServerId(0), ServerId(1)) >= 2);
+        s.restore_fabric_link(ServerId(0), ServerId(1)).unwrap();
+        assert_eq!(s.fabric().hops(ServerId(0), ServerId(1)), 1);
+        assert!(s.restore_fabric_link(ServerId(0), ServerId(1)).is_err(), "not down");
+        assert_eq!(s.trace.count_kind("fabric_link_down"), 1);
+        assert_eq!(s.trace.count_kind("fabric_link_restored"), 1);
+    }
+
+    #[test]
+    fn congestion_feedback_costs_remote_heavy_vm() {
+        let run = |feedback: bool| {
+            let mut cfg = SimConfig::pinned(53);
+            cfg.fabric.feedback = feedback;
+            let mut s = Simulator::new(Topology::paper(), cfg);
+            let id = s.create(VmType::Medium, App::Stream);
+            s.pin_all(id, &(0..8).map(CpuId).collect::<Vec<_>>()).unwrap();
+            s.place_memory(id, &[(NodeId(6), 1.0)]).unwrap(); // all remote
+            s.start(id).unwrap();
+            let mut p = 0.0;
+            for _ in 0..10 {
+                p += s.step()[0].1.perf;
+            }
+            p
+        };
+        let blind = run(false);
+        let aware = run(true);
+        assert!(
+            aware < blind * 0.9,
+            "48 GB/s across a 2 GB/s link must congest: {aware} vs {blind}"
+        );
+    }
+
+    #[test]
+    fn congestion_feedback_with_local_placements_is_bit_identical() {
+        // The uncongested-parity oracle at simulator level: VMs whose
+        // memory never crosses servers put no load on the fabric, so
+        // feedback on/off must produce the same samples bit-for-bit.
+        let run = |feedback: bool| {
+            let mut cfg = SimConfig::pinned(54);
+            cfg.fabric.feedback = feedback;
+            let mut s = Simulator::new(Topology::paper(), cfg);
+            let a = s.create(VmType::Small, App::Derby);
+            pin_local(&mut s, a, 0); // server 0, memory local
+            s.start(a).unwrap();
+            let b = s.create(VmType::Small, App::Stream);
+            pin_local(&mut s, b, 48); // server 1, memory local
+            s.start(b).unwrap();
+            let mut out = Vec::new();
+            for _ in 0..15 {
+                for (_, smp) in s.step() {
+                    out.push(smp.perf);
+                    out.push(smp.ipc);
+                    out.push(smp.mpi);
+                }
+            }
+            out
+        };
+        assert_eq!(run(true), run(false), "idle fabric must not change anything");
+    }
+
+    #[test]
+    fn link_utilization_tracks_remote_traffic() {
+        let mut s = sim(SchedulerKind::Pinned, 55);
+        let id = s.create(VmType::Medium, App::Stream);
+        s.pin_all(id, &(0..8).map(CpuId).collect::<Vec<_>>()).unwrap();
+        s.place_memory(id, &[(NodeId(6), 1.0)]).unwrap();
+        s.start(id).unwrap();
+        s.step();
+        let util = s.link_utilization();
+        let hot = s.fabric().link_between(ServerId(0), ServerId(1)).unwrap();
+        assert!(util[hot.0] > 1.0, "48 GB/s over 2 GB/s: {}", util[hot.0]);
+        let cong = s.route_congestion();
+        let servers = s.topo.spec.servers;
+        assert!(cong[servers] >= 1.0); // route s1 -> s0 (reverse direction: idle)
+        assert!(cong[1] > 1.0, "route s0 -> s1 must be congested: {}", cong[1]);
+        for a in 0..servers {
+            assert_eq!(cong[a * servers + a], 1.0, "diagonal is uncongested");
+        }
     }
 
     #[test]

@@ -22,6 +22,7 @@
 //! factor (timeslicing does not change per-cycle efficiency, only wall
 //! clock), which is why the paper can use IPC as a placement signal.
 
+use crate::fabric::{congestion_factor, rho, FabricGraph, LinkLedger};
 use crate::topology::Topology;
 use crate::workload::AppProfile;
 
@@ -102,8 +103,74 @@ pub struct ModelOut {
     pub factors: Factors,
 }
 
-/// Evaluate all VMs jointly (contention couples them).
+/// Per-tick fabric state for congestion-aware evaluation: the live link
+/// graph plus the non-workload traffic (migration transfers) already on
+/// each link this tick.  `None` everywhere = the pre-fabric scalar model,
+/// bit-for-bit.
+#[derive(Debug, Clone, Copy)]
+pub struct FabricTick<'a> {
+    pub graph: &'a FabricGraph,
+    /// GB/s of migration traffic per link (dense, one slot per link).
+    pub base_gbs: &'a [f64],
+}
+
+/// Workload demand per fabric link: every VM's remote-memory traffic
+/// charged through a [`LinkLedger`] to the links of its (vCPU-server,
+/// memory-server) routes.  Shared by the from-scratch evaluator and the
+/// simulator's congestion snapshots; the incremental evaluator maintains
+/// the same sums via add/subtract (oracle-tested against this path).
+pub fn workload_link_demand(topo: &Topology, views: &[VmView], graph: &FabricGraph) -> Vec<f64> {
+    let mut ledger = LinkLedger::new(graph.num_links());
+    for view in views {
+        let vm_demand = view.profile.bw_gbs_per_vcpu * view.vcpus as f64 * view.util;
+        charge_view_links(topo, graph, &view.p, &view.m, vm_demand, &mut ledger);
+    }
+    ledger.into_demands()
+}
+
+fn charge_view_links(
+    topo: &Topology,
+    graph: &FabricGraph,
+    p: &[f64],
+    m: &[f64],
+    vm_demand: f64,
+    ledger: &mut LinkLedger,
+) {
+    for (i, &pi) in p.iter().enumerate() {
+        if pi == 0.0 {
+            continue;
+        }
+        let si = topo.server_of_node(crate::topology::NodeId(i));
+        for (j, &mj) in m.iter().enumerate() {
+            if mj == 0.0 {
+                continue;
+            }
+            let sj = topo.server_of_node(crate::topology::NodeId(j));
+            if si == sj {
+                continue;
+            }
+            ledger.charge_route(graph.route(si, sj), vm_demand * pi * mj);
+        }
+    }
+}
+
+/// Evaluate all VMs jointly (contention couples them) — the pre-fabric
+/// scalar fabric model.
 pub fn evaluate(topo: &Topology, views: &[VmView], params: &ModelParams) -> Vec<ModelOut> {
+    evaluate_with_fabric(topo, views, params, None)
+}
+
+/// [`evaluate`] with optional link-level congestion feedback: per-link
+/// utilization (workload remote traffic + migration transfers) yields an
+/// M/M/1-style factor that stretches cross-server SLIT distances and
+/// shrinks remote bandwidth shares per flow.  With `fabric = None` — or a
+/// fabric whose links carry no load — this is exactly [`evaluate`].
+pub fn evaluate_with_fabric(
+    topo: &Topology,
+    views: &[VmView],
+    params: &ModelParams,
+    fabric: Option<&FabricTick>,
+) -> Vec<ModelOut> {
     let n = topo.num_nodes();
     let l3_mb = topo.spec.l3_per_node_mb;
     let node_bw = topo.spec.mem_bw_per_node_gbs;
@@ -141,13 +208,56 @@ pub fn evaluate(topo: &Topology, views: &[VmView], params: &ModelParams) -> Vec<
         params.fabric_cap_gbs / fabric_demand
     };
 
+    // Link-level congestion (feedback mode): charge every VM's remote
+    // flows plus the tick's migration traffic to the routed links, then
+    // derive the per-link M/M/1 factor.  All-zero load gives phi = 1
+    // everywhere, which reproduces the scalar model exactly.
+    let link_phi: Option<Vec<f64>> = fabric.map(|ft| {
+        let mut ledger = LinkLedger::new(ft.graph.num_links());
+        for (v, view) in views.iter().enumerate() {
+            charge_view_links(topo, ft.graph, &view.p, &view.m, per_vm_demand[v], &mut ledger);
+        }
+        ledger
+            .demands()
+            .iter()
+            .zip(ft.base_gbs.iter())
+            .enumerate()
+            .map(|(l, (&w, &b))| {
+                congestion_factor(rho(w + b, ft.graph.capacity_gbs(crate::fabric::LinkId(l))))
+            })
+            .collect()
+    });
+    let fab: Option<(&FabricGraph, &[f64])> = match (fabric, &link_phi) {
+        (Some(ft), Some(phi)) => Some((ft.graph, phi.as_slice())),
+        _ => None,
+    };
+
     // --- per-VM evaluation -------------------------------------------------
     views
         .iter()
         .enumerate()
         .map(|(v, view)| evaluate_one(topo, views, view, v, params, &press, &mem_sat, fabric_sat,
-                                      per_vm_demand[v]))
+                                      per_vm_demand[v], fab))
         .collect()
+}
+
+/// Mean per-hop congestion factor of the `a -> b` route (1 when the
+/// route is trivial or unroutable).
+pub fn route_phi(
+    graph: &FabricGraph,
+    phi: &[f64],
+    a: crate::topology::ServerId,
+    b: crate::topology::ServerId,
+) -> f64 {
+    let route = graph.route(a, b);
+    if route.links.is_empty() {
+        return 1.0;
+    }
+    let mut f = 0.0;
+    for l in &route.links {
+        f += phi[l.0];
+    }
+    f / route.links.len() as f64
 }
 
 fn remote_fraction(topo: &Topology, p: &[f64], m: &[f64]) -> f64 {
@@ -181,14 +291,22 @@ fn evaluate_one(
     mem_sat: &[f64],
     fabric_sat: f64,
     bw_demand: f64,
+    fab: Option<(&FabricGraph, &[f64])>,
 ) -> ModelOut {
     let prof = &view.profile;
     let n = topo.num_nodes();
     let vcpus = view.vcpus as f64;
 
-    // 1. Latency factor from placement-weighted mean distance.
+    // 1. Latency factor from placement-weighted mean distance.  With
+    // congestion feedback, every cross-server (vCPU, memory) flow's SLIT
+    // distance is stretched by the mean per-hop congestion factor of its
+    // route; the flow-weighted mean of those factors (`vm_phi`) also
+    // shrinks the remote bandwidth share below.  phi = 1 (unloaded links)
+    // leaves both untouched.
     let mut avg_dist = 0.0;
     let mut p_total = 0.0;
+    let mut phi_num = 0.0;
+    let mut phi_den = 0.0;
     for i in 0..n {
         if view.p[i] == 0.0 {
             continue;
@@ -198,13 +316,27 @@ fn evaluate_one(
             if view.m[j] == 0.0 {
                 continue;
             }
-            avg_dist += view.p[i]
-                * view.m[j]
-                * topo.distance(crate::topology::NodeId(i), crate::topology::NodeId(j));
+            let d = topo.distance(crate::topology::NodeId(i), crate::topology::NodeId(j));
+            match fab {
+                Some((graph, phi)) => {
+                    let si = topo.server_of_node(crate::topology::NodeId(i));
+                    let sj = topo.server_of_node(crate::topology::NodeId(j));
+                    if si == sj {
+                        avg_dist += view.p[i] * view.m[j] * d;
+                    } else {
+                        let f = route_phi(graph, phi, si, sj);
+                        avg_dist += view.p[i] * view.m[j] * d * f;
+                        phi_num += view.p[i] * view.m[j] * f;
+                        phi_den += view.p[i] * view.m[j];
+                    }
+                }
+                None => avg_dist += view.p[i] * view.m[j] * d,
+            }
         }
     }
     // Unplaced VM (no pins yet): treat as local.
     let avg_dist = if p_total > 0.0 { avg_dist / p_total } else { 10.0 };
+    let vm_phi = if phi_den > 0.0 { phi_num / phi_den } else { 1.0 };
     let sigma = if prof.sensitivity.is_sensitive() { params.sens_mult } else { params.insens_mult };
     let lat_mult = 1.0 + prof.mem_stall_frac * sigma * (avg_dist / 10.0 - 1.0);
     let lat = 1.0 / lat_mult;
@@ -247,7 +379,10 @@ fn evaluate_one(
         let remote_sat = if remote_demand <= 1e-9 {
             1.0
         } else {
-            fabric_sat.min(vm_link_cap / remote_demand).min(1.0)
+            // Congestion feedback: the effective remote share shrinks by
+            // the flow-weighted mean route congestion (exactly 1 when the
+            // links are unloaded or feedback is off).
+            fabric_sat.min(vm_link_cap / remote_demand).min(1.0) / vm_phi
         };
         ((1.0 - remote_frac) * local_sat + remote_frac * remote_sat).clamp(1e-4, 1.0)
     };
@@ -432,6 +567,89 @@ mod tests {
         let out = evaluate(&topo, &[view], &params)[0];
         let calm = evaluate(&topo, &[one_vm_view(&topo, App::Derby, 4, 0)], &params)[0];
         assert!(out.perf < calm.perf * 0.7);
+    }
+
+    #[test]
+    fn fabric_feedback_with_idle_links_matches_scalar_model() {
+        // A VM with all memory local never touches the fabric: feedback on
+        // must equal feedback off exactly (the uncongested-parity oracle
+        // at model level; the cross-topology version lives in
+        // tests/properties.rs).
+        let topo = Topology::paper();
+        let params = ModelParams::default();
+        let views = vec![one_vm_view(&topo, App::Neo4j, 4, 0), one_vm_view(&topo, App::Fft, 8, 3)];
+        let base_gbs = vec![0.0; topo.fabric().num_links()];
+        let ft = FabricTick { graph: topo.fabric(), base_gbs: &base_gbs };
+        let plain = evaluate(&topo, &views, &params);
+        let fabric = evaluate_with_fabric(&topo, &views, &params, Some(&ft));
+        for (a, b) in plain.iter().zip(fabric.iter()) {
+            assert_eq!(a.perf, b.perf);
+            assert_eq!(a.ipc, b.ipc);
+            assert_eq!(a.mpi, b.mpi);
+            assert_eq!(a.factors.lat, b.factors.lat);
+            assert_eq!(a.factors.bw, b.factors.bw);
+        }
+    }
+
+    #[test]
+    fn congested_route_slows_remote_vm_beyond_scalar_model() {
+        // Heavy remote traffic saturates the 2 GB/s route links: with
+        // feedback on, the M/M/1 factor must cost extra latency and
+        // bandwidth relative to the scalar model.
+        let topo = Topology::paper();
+        let params = ModelParams::default();
+        let mut view = one_vm_view(&topo, App::Stream, 8, 0);
+        view.m = vec![0.0; topo.num_nodes()];
+        view.m[6] = 1.0; // server 1: one torus hop
+        let base_gbs = vec![0.0; topo.fabric().num_links()];
+        let ft = FabricTick { graph: topo.fabric(), base_gbs: &base_gbs };
+        let plain = evaluate(&topo, &[view.clone()], &params)[0];
+        let congested = evaluate_with_fabric(&topo, &[view], &params, Some(&ft))[0];
+        assert!(
+            congested.perf < plain.perf * 0.95,
+            "congestion must cost perf: {} vs {}",
+            congested.perf,
+            plain.perf
+        );
+        assert!(congested.factors.lat < plain.factors.lat);
+        assert!(congested.factors.bw <= plain.factors.bw);
+    }
+
+    #[test]
+    fn migration_base_traffic_congests_workload_flows() {
+        // Same remote VM; an 1.9 GB/s migration already on its route (95%
+        // of the 2 GB/s link) must degrade it further.
+        let topo = Topology::paper();
+        let params = ModelParams::default();
+        let mk_view = || {
+            let mut v = one_vm_view(&topo, App::Neo4j, 4, 0);
+            v.m = vec![0.0; topo.num_nodes()];
+            v.m[6] = 1.0;
+            v
+        };
+        let idle = vec![0.0; topo.fabric().num_links()];
+        let mut busy = vec![0.0; topo.fabric().num_links()];
+        let route = topo.fabric().route(
+            crate::topology::ServerId(0),
+            crate::topology::ServerId(1),
+        );
+        for l in &route.links {
+            busy[l.0] = 1.9;
+        }
+        let quiet = {
+            let ft = FabricTick { graph: topo.fabric(), base_gbs: &idle };
+            evaluate_with_fabric(&topo, &[mk_view()], &params, Some(&ft))[0]
+        };
+        let loaded = {
+            let ft = FabricTick { graph: topo.fabric(), base_gbs: &busy };
+            evaluate_with_fabric(&topo, &[mk_view()], &params, Some(&ft))[0]
+        };
+        assert!(
+            loaded.perf < quiet.perf,
+            "migration traffic must congest the flow: {} vs {}",
+            loaded.perf,
+            quiet.perf
+        );
     }
 
     #[test]

@@ -159,6 +159,11 @@ pub struct Topology {
     distance: Vec<Vec<f64>>,
     torus: Torus,
     walks: cache::DistanceWalks,
+    /// Pristine routed link graph of the interconnect (nominal capacities,
+    /// all links up), precomputed alongside the distance walks.  Dynamic
+    /// link state (degradation, failures, re-routing) lives on the
+    /// simulator's own clone.
+    fabric: crate::fabric::FabricGraph,
 }
 
 impl Topology {
@@ -177,7 +182,8 @@ impl Topology {
             }
         }
         let walks = cache::DistanceWalks::build(&distance);
-        Self { spec, distance, torus, walks }
+        let fabric = crate::fabric::FabricGraph::build(&spec);
+        Self { spec, distance, torus, walks, fabric }
     }
 
     pub fn paper() -> Self {
@@ -261,6 +267,14 @@ impl Topology {
     /// Torus hop count between two servers.
     pub fn server_hops(&self, a: ServerId, b: ServerId) -> usize {
         self.torus.hops(a.0, b.0)
+    }
+
+    /// The pristine routed link graph of the interconnect (all links up at
+    /// nominal capacity) — precomputed at build time like
+    /// [`Self::nodes_by_distance`].  Reproduces [`Self::server_hops`] and
+    /// the `fabric_link_bw_gbs / hops` bandwidth model exactly.
+    pub fn fabric(&self) -> &crate::fabric::FabricGraph {
+        &self.fabric
     }
 
     /// Approximate memory access latency in ns for a cpu on `from`
@@ -379,6 +393,21 @@ mod tests {
         let neighbor = t.access_latency_ns(NodeId(0), NodeId(1));
         let remote = t.access_latency_ns(NodeId(0), NodeId(35));
         assert!(local < neighbor && neighbor < remote);
+    }
+
+    #[test]
+    fn fabric_graph_reproduces_server_hops_and_link_bw() {
+        let t = Topology::paper();
+        for a in 0..t.spec.servers {
+            for b in 0..t.spec.servers {
+                let (a, b) = (ServerId(a), ServerId(b));
+                assert_eq!(t.fabric().hops(a, b), t.server_hops(a, b));
+                if a != b {
+                    let want = t.spec.fabric_link_bw_gbs / t.server_hops(a, b) as f64;
+                    assert!((t.fabric().route_bw_gbs(a, b) - want).abs() < 1e-12);
+                }
+            }
+        }
     }
 
     #[test]

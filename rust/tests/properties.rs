@@ -3,10 +3,11 @@
 
 use dvrm::coordinator::candidates::{self, SlotMap};
 use dvrm::coordinator::{DeltaProblem, MapperConfig, Metric, SmMapper};
+use dvrm::fabric::{congestion_factor, FabricGraph, LinkLedger};
 use dvrm::mem::MemPolicy;
 use dvrm::runtime::{native, CandidateBatch, Meta, ScoreProblem, Scorer, VmEntry, Weights};
 use dvrm::sim::{perf_model, ModelParams, SimConfig, Simulator, VmView};
-use dvrm::topology::{CpuId, NodeId, ServerId, Topology};
+use dvrm::topology::{CpuId, NodeId, ServerId, Topology, TopologySpec};
 use dvrm::util::rng::Rng;
 use dvrm::util::testkit::{prop_assert, propcheck};
 use dvrm::vm::{VmId, VmState, VmType};
@@ -614,6 +615,238 @@ fn delta_problem_matches_rebuilt_problem_under_scenario_events() {
                     )?;
                 }
             }
+        }
+        Ok(())
+    });
+}
+
+/// A paper-like spec over a random torus (1..=5 x 1..=4 servers).
+fn random_fabric_spec(rng: &mut Rng) -> TopologySpec {
+    let x = rng.range(1, 6);
+    let y = rng.range(1, 5);
+    TopologySpec { servers: x * y, torus: (x, y), ..TopologySpec::paper() }
+}
+
+#[test]
+fn fabric_ledger_conserves_flow_charges() {
+    // Flow conservation: every flow is charged once per link on its
+    // route, so (a) each route link carries exactly the flows crossing
+    // it and (b) the ledger's total equals Σ per-flow demand × hops.
+    propcheck("ledger flow conservation", 40, |rng| {
+        let spec = random_fabric_spec(rng);
+        let graph = FabricGraph::build(&spec);
+        let mut ledger = LinkLedger::new(graph.num_links());
+        let s = spec.servers;
+        let mut expected_total = 0.0;
+        let mut per_link = vec![0.0; graph.num_links()];
+        for _ in 0..rng.range(1, 12) {
+            let a = ServerId(rng.below(s));
+            let b = ServerId(rng.below(s));
+            if a == b {
+                continue;
+            }
+            let gbs = rng.uniform(0.1, 10.0);
+            let route = graph.route(a, b);
+            ledger.charge_route(route, gbs);
+            expected_total += gbs * route.hops() as f64;
+            for l in &route.links {
+                per_link[l.0] += gbs;
+            }
+        }
+        prop_assert(
+            (ledger.total_demand() - expected_total).abs() <= 1e-9 * (1.0 + expected_total),
+            format!("total {} != {}", ledger.total_demand(), expected_total),
+        )?;
+        for l in 0..graph.num_links() {
+            prop_assert(
+                (ledger.demands()[l] - per_link[l]).abs() <= 1e-9,
+                format!("link {l}: {} != {}", ledger.demands()[l], per_link[l]),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn fabric_route_bw_never_exceeds_min_link_capacity() {
+    propcheck("route bw <= narrowest link", 40, |rng| {
+        let spec = random_fabric_spec(rng);
+        let mut graph = FabricGraph::build(&spec);
+        if rng.chance(0.5) {
+            graph.set_uniform_scale(rng.uniform(0.05, 1.0));
+        }
+        for a in 0..spec.servers {
+            for b in 0..spec.servers {
+                if a == b {
+                    continue;
+                }
+                let (a, b) = (ServerId(a), ServerId(b));
+                let route = graph.route(a, b);
+                let min_cap = route
+                    .links
+                    .iter()
+                    .map(|l| graph.capacity_gbs(*l))
+                    .fold(f64::INFINITY, f64::min);
+                prop_assert(
+                    graph.route_bw_gbs(a, b) <= min_cap + 1e-12,
+                    format!("route {}->{} beats its narrowest link", a.0, b.0),
+                )?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn fabric_congestion_factor_is_monotone_in_load() {
+    propcheck("phi monotone", 200, |rng| {
+        let lo = rng.uniform(0.0, 5.0);
+        let hi = lo + rng.uniform(0.0, 5.0);
+        prop_assert(
+            congestion_factor(lo) <= congestion_factor(hi) + 1e-12,
+            format!("phi({lo}) > phi({hi})"),
+        )?;
+        prop_assert(congestion_factor(0.0) == 1.0, "phi(0) must be exactly 1")?;
+        prop_assert(congestion_factor(hi).is_finite(), "phi must stay finite")
+    });
+}
+
+#[test]
+fn fabric_uncongested_parity_with_scalar_model() {
+    // The uncongested-parity oracle: across random topologies, (a) route
+    // hop counts and bandwidth equal the scalar `server_hops` /
+    // `fabric_link_bw_gbs / hops` model to 1e-9, and (b) over random
+    // event sequences of *local-only* placements (nothing ever crosses a
+    // server, so the fabric carries zero traffic), a feedback-on
+    // simulator produces the same samples as a feedback-off one.
+    propcheck("fabric parity vs scalar model", 12, |rng| {
+        let spec = random_fabric_spec(rng);
+        let topo = Topology::build(spec.clone());
+        for a in 0..spec.servers {
+            for b in 0..spec.servers {
+                let (sa, sb) = (ServerId(a), ServerId(b));
+                prop_assert(
+                    topo.fabric().hops(sa, sb) == topo.server_hops(sa, sb),
+                    format!("hops {a}->{b} diverged"),
+                )?;
+                if a != b {
+                    let want = spec.fabric_link_bw_gbs / topo.server_hops(sa, sb) as f64;
+                    let got = topo.fabric().route_bw_gbs(sa, sb);
+                    prop_assert(
+                        (got - want).abs() <= 1e-9 * (1.0 + want),
+                        format!("route bw {a}->{b}: {got} vs {want}"),
+                    )?;
+                }
+            }
+        }
+
+        let seed = rng.next_u64();
+        let events: Vec<u8> = (0..8).map(|_| rng.below(4) as u8).collect();
+        let run = |feedback: bool| -> Vec<f64> {
+            let mut cfg = SimConfig::pinned(seed);
+            cfg.fabric.feedback = feedback;
+            let mut sim = Simulator::new(Topology::build(spec.clone()), cfg);
+            // One VM per server, fully local (4 vCPUs + memory on the
+            // server's first node): zero fabric traffic by construction.
+            let slots_per_server = spec.nodes_per_server() * spec.cores_per_node
+                * spec.threads_per_core;
+            for srv in 0..spec.servers {
+                let id = sim.create(dvrm::vm::VmType::Small, App::ALL[srv % App::ALL.len()]);
+                let base = srv * slots_per_server;
+                sim.pin_all(id, &(base..base + 4).map(CpuId).collect::<Vec<_>>()).unwrap();
+                sim.place_memory(id, &[(NodeId(srv * spec.nodes_per_server()), 1.0)])
+                    .unwrap();
+                sim.start(id).unwrap();
+            }
+            let mut out = Vec::new();
+            for &ev in &events {
+                match ev {
+                    0 => sim.degrade_fabric(0.5).unwrap_or(()),
+                    1 => sim.restore_fabric(),
+                    2 => sim.set_global_load(1.3).unwrap(),
+                    _ => sim.set_global_load(1.0).unwrap(),
+                }
+                for _ in 0..3 {
+                    for (_, s) in sim.step() {
+                        out.push(s.perf);
+                        out.push(s.ipc);
+                        out.push(s.mpi);
+                    }
+                }
+            }
+            out
+        };
+        let on = run(true);
+        let off = run(false);
+        prop_assert(on.len() == off.len(), "sample count diverged")?;
+        for (k, (x, y)) in on.iter().zip(off.iter()).enumerate() {
+            prop_assert(
+                (x - y).abs() <= 1e-9 * (1.0 + x.abs().max(y.abs())),
+                format!("sample {k}: feedback-on {x} vs feedback-off {y}"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn fabric_feedback_incremental_matches_full_in_sim() {
+    // The incremental-vs-full oracle with the congestion ledger on:
+    // remote-heavy placements load real links; both evaluators must agree
+    // within 1e-9 at whole-simulator altitude.  (Memory is placed before
+    // start so no migration jobs run: migration residual draw is the one
+    // deliberately evaluator-coupled path, covered by its own unit tests.)
+    propcheck("fabric incremental == full (sim)", 6, |rng| {
+        let seed = rng.next_u64();
+        let n_vms = rng.range(2, 7);
+        let placements: Vec<(usize, usize)> =
+            (0..n_vms).map(|k| (k * 4, rng.below(36))).collect();
+        let run = |incremental: bool| -> Vec<f64> {
+            let mut cfg = SimConfig::pinned(seed);
+            cfg.fabric.feedback = true;
+            cfg.incremental = incremental;
+            let mut sim = Simulator::new(Topology::paper(), cfg);
+            for &(base, mem_node) in &placements {
+                let id = sim.create(dvrm::vm::VmType::Small, App::ALL[base % App::ALL.len()]);
+                sim.place_memory(id, &[(NodeId(mem_node), 1.0)]).unwrap();
+                sim.pin_all(id, &(base..base + 4).map(CpuId).collect::<Vec<_>>()).unwrap();
+                sim.start(id).unwrap();
+            }
+            let mut out = Vec::new();
+            for t in 0..15 {
+                if t == 3 {
+                    // Uniform degradation must reach the incremental
+                    // evaluator's graph clone too (capacities shrink ->
+                    // phi grows identically in both evaluators).
+                    sim.degrade_fabric(0.5).unwrap();
+                }
+                if t == 5 {
+                    sim.fail_fabric_link(ServerId(0), ServerId(1)).unwrap();
+                }
+                if t == 8 {
+                    sim.restore_fabric();
+                }
+                if t == 10 {
+                    sim.restore_fabric_link(ServerId(0), ServerId(1)).unwrap();
+                }
+                for (_, s) in sim.step() {
+                    out.push(s.perf);
+                    out.push(s.ipc);
+                    out.push(s.mpi);
+                    out.push(s.factors.lat);
+                    out.push(s.factors.bw);
+                }
+            }
+            out
+        };
+        let inc = run(true);
+        let full = run(false);
+        prop_assert(inc.len() == full.len(), "sample count diverged")?;
+        for (k, (x, y)) in inc.iter().zip(full.iter()).enumerate() {
+            prop_assert(
+                (x - y).abs() <= 1e-9 * (1.0 + x.abs().max(y.abs())),
+                format!("sample {k}: incremental {x} vs full {y}"),
+            )?;
         }
         Ok(())
     });

@@ -72,12 +72,12 @@ fn coordinator_beats_linux_sched_tail_in_churn_and_drain() {
 }
 
 #[test]
-fn all_five_scenarios_run_under_both_algorithms() {
+fn all_six_scenarios_run_under_both_algorithms() {
     let specs = suite::smoke_suite();
-    assert_eq!(specs.len(), 5);
+    assert_eq!(specs.len(), 6);
     let cfg = ScenarioConfig::new(5);
     let results = scenario::run_suite(&specs, &cfg).unwrap();
-    assert_eq!(results.len(), 10, "5 scenarios x 2 algorithms");
+    assert_eq!(results.len(), 12, "6 scenarios x 2 algorithms");
     for r in &results {
         assert!(r.metrics.samples > 0, "{}: no samples", r.metrics.scenario);
         assert!(r.metrics.mean_rel > 0.0, "{}: zero perf", r.metrics.scenario);
@@ -96,6 +96,24 @@ fn degraded_fabric_scenario_applies_and_restores() {
     let r = run_scenario(&spec, Algorithm::SmIpc, &ScenarioConfig::new(9)).unwrap();
     assert!(r.event_log.iter().any(|(_, d)| d.starts_with("degrade-fabric")));
     assert!(r.event_log.iter().any(|(_, d)| d == "restore-fabric"));
+}
+
+#[test]
+fn degraded_link_scenario_fails_and_restores_the_link() {
+    let spec = suite::named("degraded-link", true).unwrap();
+    assert!(spec.fabric_feedback, "the link scenario runs with the ledger on");
+    for alg in [Algorithm::Vanilla, Algorithm::SmIpc] {
+        let r = run_scenario(&spec, alg, &ScenarioConfig::new(13)).unwrap();
+        assert!(r.event_log.iter().any(|(_, d)| d.starts_with("link-down s0<->s1")));
+        assert!(r.event_log.iter().any(|(_, d)| d.starts_with("link-restore s0<->s1")));
+        assert_eq!(r.metrics.link_events, 2, "{alg:?}: one failure + one restore");
+        assert!(r.metrics.samples > 0);
+    }
+    // Determinism holds with the congestion ledger on.
+    let a = run_scenario(&spec, Algorithm::SmIpc, &ScenarioConfig::new(13)).unwrap();
+    let b = run_scenario(&spec, Algorithm::SmIpc, &ScenarioConfig::new(13)).unwrap();
+    assert_eq!(a.metrics, b.metrics);
+    assert_eq!(a.event_log, b.event_log);
 }
 
 #[test]
