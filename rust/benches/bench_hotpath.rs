@@ -16,8 +16,8 @@
 
 use dvrm::coordinator::{MapperConfig, Metric, SmMapper};
 use dvrm::experiments::figures::{
-    full_eval_ticks, run_scale_config, run_scale_config_fabric, run_scale_mapper_config,
-    scale_spec,
+    full_eval_ticks, run_scale_config, run_scale_config_fabric, run_scale_config_telemetry,
+    run_scale_mapper_config, scale_spec,
 };
 use dvrm::fabric::{FabricGraph, LinkLedger};
 use dvrm::runtime::{CandidateBatch, Engine, Meta, ScoreProblem, Scorer, VmEntry, Weights};
@@ -336,6 +336,43 @@ fn main() {
             .collect();
         let res =
             BenchResult { name: format!("sim/tick/incremental-fabric/{name}"), samples };
+        println!("{}", res.report());
+        results.push(res);
+    }
+
+    // Telemetry primitive: span open/close against an installed recorder
+    // — the enabled-path cost every instrumented site pays (two clock
+    // reads + one histogram observe per span).
+    {
+        let guard = dvrm::telemetry::install(dvrm::telemetry::Recorder::new(
+            dvrm::telemetry::TelemetryConfig::default(),
+        ));
+        results.push(bench.run("telemetry/record_span", || {
+            for _ in 0..1000 {
+                let t = dvrm::telemetry::span(dvrm::telemetry::Phase::Evaluate);
+                std::hint::black_box(&t);
+            }
+        }));
+        drop(guard);
+    }
+
+    // Flight-recorder enabled-mode overhead: the incremental+fabric tick
+    // with a recorder installed for the whole run.  The DESIGN.md budget
+    // is <5% over the matching `sim/tick/incremental-fabric` point.
+    {
+        let ticks = if quick { 15 } else { 30 };
+        let samples: Vec<f64> = (0..scale_reps)
+            .map(|_| {
+                let tps =
+                    run_scale_config_telemetry(scale_spec(6, (3, 2)), 60, ticks, true, true, 7)
+                        .unwrap();
+                1.0 / tps.max(1e-12)
+            })
+            .collect();
+        let res = BenchResult {
+            name: "sim/tick/incremental-telemetry/small/6srv/60vms".into(),
+            samples,
+        };
         println!("{}", res.report());
         results.push(res);
     }

@@ -6,9 +6,10 @@
 //! dvrm experiment <id>|all [opts]   # regenerate paper tables/figures
 //! dvrm run [opts]                   # end-to-end cluster demo (3 algorithms)
 //! dvrm scenarios [opts]             # dynamic scenario suite (churn, drain, ...)
+//! dvrm telemetry <file.jsonl>       # summarize a flight-recorder capture
 //! dvrm list                         # known experiment ids
 //! options: --seed N --ticks N --repeats N --fast --scorer auto|native
-//!          --csv DIR --suite smoke|full --json PATH
+//!          --csv DIR --suite smoke|full --json PATH --telemetry PATH
 //! ```
 
 pub mod args;
@@ -26,6 +27,7 @@ pub fn main_with(argv: &[String]) -> Result<i32> {
         Some("experiment") => cmd_experiment(&parsed),
         Some("run") => cmd_run(&parsed),
         Some("scenarios") => cmd_scenarios(&parsed),
+        Some("telemetry") => cmd_telemetry(&parsed),
         Some("list") => {
             println!("experiments: {}", experiments::ALL_IDS.join(" "));
             Ok(0)
@@ -58,6 +60,8 @@ pub fn usage() -> &'static str {
                          degraded-fabric, degraded-link): LinuxSched vs\n\
                          coordinator, with per-scenario p50/p99-tail perf,\n\
                          migrations, GB moved\n\
+       telemetry <file>  summarize a flight-recorder JSONL capture: per-phase\n\
+                         time table, tick-sample and decision-record counts\n\
        list              list experiment ids\n\
      \n\
      options:\n\
@@ -69,7 +73,10 @@ pub fn usage() -> &'static str {
        --csv DIR         also write result tables as CSV into DIR\n\
        --suite S         scenarios: smoke (short horizon) | full (default smoke)\n\
        --json PATH       scenarios: also write per-scenario JSON to PATH\n\
-       --events          scenarios: print the applied-event log per scenario"
+       --events          scenarios: print the applied-event log per scenario\n\
+       --telemetry PATH  scenarios: record tick-phase spans, metrics and mapper\n\
+                         decisions; write JSONL to PATH (+ PATH.prom snapshot)\n\
+       --sample-every N  scenarios: telemetry tick-sample stride (default 1)"
 }
 
 fn opts_from(parsed: &Parsed) -> ExpOptions {
@@ -130,11 +137,17 @@ fn cmd_experiment(parsed: &Parsed) -> Result<i32> {
 
 fn cmd_scenarios(parsed: &Parsed) -> Result<i32> {
     use crate::scenario::{self, suite, ScenarioConfig};
+    use crate::telemetry::TelemetryConfig;
 
     let suite_name = parsed.value("suite").unwrap_or("smoke");
     let specs = suite::suite_by_name(suite_name)?;
     let opts = opts_from(parsed);
-    let cfg = ScenarioConfig { seed: opts.seed, scorer: opts.scorer, mapper: None };
+    let telemetry_path = parsed.value("telemetry");
+    let telemetry = telemetry_path.map(|_| TelemetryConfig {
+        sample_every: parsed.value_u64("sample-every").unwrap_or(1).max(1),
+        ..TelemetryConfig::default()
+    });
+    let cfg = ScenarioConfig { seed: opts.seed, scorer: opts.scorer, mapper: None, telemetry };
     println!(
         "scenario suite {suite_name:?}: {} scenarios x {} algorithms (seed {})",
         specs.len(),
@@ -157,6 +170,104 @@ fn cmd_scenarios(parsed: &Parsed) -> Result<i32> {
         std::fs::write(path, scenario::to_json(&results))?;
         println!("wrote {path}");
     }
+    if let Some(path) = telemetry_path {
+        write_telemetry(path, &results)?;
+    }
+    Ok(0)
+}
+
+/// Write the suite's flight-recorder capture: one JSONL stream (a
+/// `{"type":"run",...}` header per (scenario, algorithm) followed by that
+/// run's tick/decision/spans lines), a merged Prometheus snapshot next to
+/// it, and the aggregated per-phase breakdown on stdout.
+fn write_telemetry(path: &str, results: &[crate::scenario::ScenarioResult]) -> Result<()> {
+    let mut out = String::new();
+    let mut merged: Option<crate::telemetry::Recorder> = None;
+    for r in results {
+        let Some(rec) = &r.telemetry else { continue };
+        out.push_str(&format!(
+            "{{\"type\":\"run\",\"scenario\":\"{}\",\"algorithm\":\"{}\"}}\n",
+            crate::telemetry::export::esc(&r.metrics.scenario),
+            crate::telemetry::export::esc(r.metrics.algorithm),
+        ));
+        for line in rec.jsonl() {
+            out.push_str(line);
+            out.push('\n');
+        }
+        match merged.as_mut() {
+            Some(m) => m.merge(rec),
+            None => merged = Some(rec.clone()),
+        }
+    }
+    std::fs::write(path, out)?;
+    println!("wrote {path}");
+    if let Some(m) = &merged {
+        let prom = format!("{path}.prom");
+        std::fs::write(&prom, m.prometheus())?;
+        println!("wrote {prom}");
+        println!("{}", m.breakdown_table().render());
+    }
+    Ok(())
+}
+
+/// `dvrm telemetry <file.jsonl>` — offline summary of a capture.
+fn cmd_telemetry(parsed: &Parsed) -> Result<i32> {
+    use crate::telemetry::json::{self, Json};
+    use crate::util::benchkit::fmt_dur;
+    use crate::util::table::Table;
+
+    let Some(path) = parsed.positional.first() else {
+        bail!("telemetry file required: dvrm telemetry <file.jsonl>");
+    };
+    let data = std::fs::read_to_string(path)?;
+    let (mut runs, mut ticks, mut decisions) = (0u64, 0u64, 0u64);
+    let mut dropped = 0.0f64;
+    // phase -> (count, total_ns, max_ns), aggregated over runs.
+    let mut phases: std::collections::BTreeMap<String, (f64, f64, f64)> = Default::default();
+    for (no, line) in data.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let v = json::parse(line)
+            .map_err(|e| anyhow::anyhow!("{path}:{}: bad JSONL line: {e}", no + 1))?;
+        match v.str("type") {
+            Some("run") => runs += 1,
+            Some("tick") => ticks += 1,
+            Some("decision") => decisions += 1,
+            Some("spans") => {
+                for p in v.get("phases").and_then(Json::as_arr).unwrap_or(&[]) {
+                    let name = p.str("phase").unwrap_or("?").to_string();
+                    let e = phases.entry(name).or_insert((0.0, 0.0, 0.0));
+                    e.0 += p.num("count").unwrap_or(0.0);
+                    e.1 += p.num("total_ns").unwrap_or(0.0);
+                    e.2 = e.2.max(p.num("max_ns").unwrap_or(0.0));
+                }
+                if let Some(d) = v.get("decisions") {
+                    dropped += d.num("dropped").unwrap_or(0.0);
+                }
+            }
+            _ => {}
+        }
+    }
+    println!(
+        "{path}: {runs} runs, {ticks} tick samples, {decisions} decision records \
+         ({} evicted from rings)",
+        dropped as u64,
+    );
+    let mut t = Table::new("telemetry: per-phase time, all runs")
+        .header(&["phase", "count", "total", "mean", "max"]);
+    for (name, (count, total_ns, max_ns)) in &phases {
+        let total = total_ns * 1e-9;
+        t.row(vec![
+            name.clone(),
+            format!("{}", *count as u64),
+            fmt_dur(total),
+            fmt_dur(if *count > 0.0 { total / count } else { 0.0 }),
+            fmt_dur(max_ns * 1e-9),
+        ]);
+    }
+    println!("{}", t.render());
     Ok(0)
 }
 

@@ -26,6 +26,7 @@ use super::candidates::{self, Assignment, SlotMap};
 use super::delta::DeltaProblem;
 use crate::runtime::{CandidateBatch, ScoreProblem, Scorer, VmEntry, Weights};
 use crate::sim::{perf_model, Simulator};
+use crate::telemetry::{self, DecisionRecord, Phase};
 use crate::topology::{NodeId, Topology};
 use crate::vm::{VmId, VmState};
 use crate::workload::classes::{AnimalClass, IsolationLevel};
@@ -330,6 +331,7 @@ impl SmMapper {
     /// Map a newly defined VM (Algorithm 1 lines 2–11).  Pins vCPUs and
     /// places memory; the caller boots the VM afterwards.
     pub fn place_arrival(&mut self, sim: &mut Simulator, id: VmId) -> Result<Assignment> {
+        let _t = telemetry::span(Phase::MapperArrival);
         self.stats.arrivals += 1;
         self.sync(sim)?;
         let (vcpus, class, bw_cap) = {
@@ -344,6 +346,7 @@ impl SmMapper {
 
         // The simulator maintains the slot map persistently; no rebuild.
         let prune_k = self.effective_prune_k(&sim.topo);
+        let mut fallback = "none";
         let (mut cands, fb) = gen_candidates(
             &sim.topo, sim.slots(), vcpus, class, None, self.cfg.batch_cap, bw_cap, prune_k,
         );
@@ -353,6 +356,7 @@ impl SmMapper {
             // the cheap worst-first pass first, the full repack sweep only
             // if that still leaves no slot.
             self.reshuffle(sim)?;
+            fallback = "reshuffle";
             let (c2, fb) = gen_candidates(
                 &sim.topo, sim.slots(), vcpus, class, None, self.cfg.batch_cap, bw_cap, prune_k,
             );
@@ -360,6 +364,7 @@ impl SmMapper {
             cands = c2;
             if cands.is_empty() {
                 self.repack(sim)?;
+                fallback = "repack";
                 let (c3, fb) = gen_candidates(
                     &sim.topo, sim.slots(), vcpus, class, None, self.cfg.batch_cap, bw_cap,
                     prune_k,
@@ -376,8 +381,9 @@ impl SmMapper {
         // arriving VM gets a (zeroed) row in the persistent problem.
         self.sync(sim)?;
         self.delta.as_mut().unwrap().ensure_row(sim, id)?;
-        let best = self.pick_best(sim, id, &cands, false)?;
+        let (best, score, cong) = self.pick_best(sim, id, &cands, false)?;
         let chosen = cands[best].clone();
+        self.record_decision(sim, id, "arrival", cands.len(), Some(&chosen), score, cong, fallback);
 
         sim.pin_all(id, &chosen.cpus)?;
         let mem: Vec<(NodeId, f64)> = chosen
@@ -388,7 +394,63 @@ impl SmMapper {
             .map(|(nidx, f)| (NodeId(nidx), *f))
             .collect();
         sim.place_memory(id, &mem)?;
+        self.publish_stats();
         Ok(chosen)
+    }
+
+    /// Record one decision into the telemetry provenance ring (no-op when
+    /// telemetry is off).  `chosen = None` means the VM stayed put.
+    #[allow(clippy::too_many_arguments)]
+    fn record_decision(
+        &self,
+        sim: &Simulator,
+        id: VmId,
+        kind: &'static str,
+        candidates: usize,
+        chosen: Option<&Assignment>,
+        score: f64,
+        congestion_penalty: f64,
+        fallback: &'static str,
+    ) {
+        if !telemetry::enabled() {
+            return;
+        }
+        let tick = sim.tick();
+        let chosen_node = chosen.map(|a| a.anchor.0);
+        telemetry::with(|r| {
+            r.record_decision(DecisionRecord {
+                tick,
+                vm: id.0,
+                kind,
+                candidates,
+                chosen_node,
+                score,
+                congestion_penalty,
+                fallback,
+            });
+        });
+    }
+
+    /// Sync the cumulative [`MapperStats`] into the telemetry registry
+    /// under `mapper.*` (high-water-mark semantics: repeated syncs of the
+    /// same monotonic totals never double-count).
+    fn publish_stats(&self) {
+        if !telemetry::enabled() {
+            return;
+        }
+        let s = &self.stats;
+        telemetry::with(|r| {
+            let reg = r.registry_mut();
+            reg.counter_hwm("mapper.arrivals", s.arrivals as f64);
+            reg.counter_hwm("mapper.remaps", s.remaps as f64);
+            reg.counter_hwm("mapper.reshuffles", s.reshuffles as f64);
+            reg.counter_hwm("mapper.repacks", s.repacks as f64);
+            reg.counter_hwm("mapper.scorer_batches", s.scorer_batches as f64);
+            reg.counter_hwm("mapper.delta_decisions", s.delta_decisions as f64);
+            reg.counter_hwm("mapper.prune_fallbacks", s.prune_fallbacks as f64);
+            reg.counter_hwm("mapper.affected_total", s.affected_total as f64);
+            reg.counter_hwm("mapper.evacuations", s.evacuations as f64);
+        });
     }
 
     /// Score `cands` as row replacements for `id` against the persistent
@@ -400,13 +462,16 @@ impl SmMapper {
     /// Congestion-aware mode (`congestion_weight > 0`) always scores
     /// through the delta path so the route-congestion penalty composes
     /// exactly with the contribution differences.
+    /// Returns `(index, winning score, congestion share of that score)`
+    /// — the score components feed the decision-provenance records; the
+    /// selection logic is unchanged.
     fn pick_best(
         &mut self,
         sim: &Simulator,
         id: VmId,
         cands: &[Assignment],
         keep_current: bool,
-    ) -> Result<usize> {
+    ) -> Result<(usize, f64, f64)> {
         let delta = self.delta.as_ref().expect("pick_best after sync");
         let congestion_aware = self.cfg.congestion_weight > 0.0;
         if !congestion_aware {
@@ -428,11 +493,11 @@ impl SmMapper {
                     batch.push_with_row(current, row, &cand.fractions);
                 }
                 self.stats.scorer_batches += 1;
-                let (idx, _) = self
+                let (idx, out) = self
                     .scorer
                     .argmin(problem, &batch)?
                     .ok_or_else(|| anyhow!("empty candidate batch"))?;
-                return Ok(idx);
+                return Ok((idx, out.total as f64, 0.0));
             }
         }
         // Sparse delta path — also the congestion-aware path, where the
@@ -443,37 +508,38 @@ impl SmMapper {
         // never executed (no ping-pong between symmetric placements).
         let topo = &sim.topo;
         let w = self.cfg.congestion_weight;
+        // (total score, weighted congestion share) per placement.
         let score = |p: &[f64]| {
-            let mut s = delta.contribution(topo, id, p);
-            if congestion_aware {
-                s += w * delta.congestion_penalty(id, p);
-            }
-            s
+            let pen = if congestion_aware { w * delta.congestion_penalty(id, p) } else { 0.0 };
+            (delta.contribution(topo, id, p) + pen, pen)
         };
         let cur = delta
             .current_row(id)
             .ok_or_else(|| anyhow!("no scoring row for {id}"))?;
         let mut best = 0usize;
-        let mut best_score = if keep_current { score(cur) } else { f64::INFINITY };
+        let (mut best_score, mut best_pen) =
+            if keep_current { score(cur) } else { (f64::INFINITY, 0.0) };
         let base = keep_current as usize;
         for (i, cand) in cands.iter().enumerate() {
-            let s = score(&cand.fractions);
+            let (s, pen) = score(&cand.fractions);
             if s < best_score {
                 best = base + i;
                 best_score = s;
+                best_pen = pen;
             }
         }
         if !keep_current && cands.is_empty() {
             bail!("empty candidate batch");
         }
         self.stats.delta_decisions += 1;
-        Ok(best)
+        Ok((best, best_score, best_pen))
     }
 
     // ---- stage 2: monitoring + remap ---------------------------------------
 
     /// One monitoring pass (Algorithm 1 lines 12–29).
     pub fn interval(&mut self, sim: &mut Simulator) -> Result<IntervalReport> {
+        let _t = telemetry::span(Phase::MapperInterval);
         self.settle_benefit(sim);
         self.sync(sim)?;
 
@@ -518,6 +584,7 @@ impl SmMapper {
         // Hand the scratch buffers back for the next pass.
         self.order_buf = order;
         self.affected_buf = affected;
+        self.publish_stats();
         Ok(report)
     }
 
@@ -578,13 +645,17 @@ impl SmMapper {
             return Ok(RemapOutcome::Skipped);
         }
 
-        let best = self.pick_best(sim, id, &cands, true)?;
+        let (best, score, cong) = self.pick_best(sim, id, &cands, true)?;
         if best == 0 {
-            return Ok(RemapOutcome::KeptCurrent); // current placement wins
+            // Current placement wins; still provenance-worthy ("why did
+            // the mapper NOT move it?").
+            self.record_decision(sim, id, "remap", cands.len(), None, score, cong, "kept_current");
+            return Ok(RemapOutcome::KeptCurrent);
         }
         // Margin check: rescore current vs chosen (native-cheap via the
         // same batch would need scores; re-derive from a 2-candidate call).
         let chosen = cands[best - 1].clone();
+        self.record_decision(sim, id, "remap", cands.len(), Some(&chosen), score, cong, "none");
 
         sim.pin_all(id, &chosen.cpus)?;
         if self.cfg.memory_follows {
@@ -683,6 +754,7 @@ impl SmMapper {
             }
             sim.migrate_memory_toward(id, &dist, f64::INFINITY)?;
         }
+        self.publish_stats();
         Ok(failed)
     }
 
@@ -709,8 +781,9 @@ impl SmMapper {
         if cands.is_empty() {
             return Ok(false);
         }
-        let best = self.pick_best(sim, id, &cands, false)?;
+        let (best, score, cong) = self.pick_best(sim, id, &cands, false)?;
         let chosen = cands[best].clone();
+        self.record_decision(sim, id, "evacuate", cands.len(), Some(&chosen), score, cong, "none");
         sim.pin_all(id, &chosen.cpus)?;
         let mem: Vec<(NodeId, f64)> = chosen
             .fractions
@@ -742,6 +815,7 @@ impl SmMapper {
     /// benefit), the pass stops — well-placed systems pay O(V) scoring
     /// and no moves.  The full sweep survives as [`Self::repack`].
     pub fn reshuffle(&mut self, sim: &mut Simulator) -> Result<()> {
+        let _t = telemetry::span(Phase::MapperReshuffle);
         self.stats.reshuffles += 1;
         self.sync(sim)?;
         let delta = self.delta.as_ref().unwrap();
@@ -781,6 +855,7 @@ impl SmMapper {
     /// output; otherwise it replays the greedy proximity placement from
     /// scratch (largest VMs first).
     pub fn repack(&mut self, sim: &mut Simulator) -> Result<()> {
+        let _t = telemetry::span(Phase::MapperRepack);
         self.stats.repacks += 1;
         let order = self.vm_order(sim, None);
         if order.is_empty() {

@@ -655,6 +655,25 @@ pub fn run_scale_config_fabric(
     Ok(ticks as f64 / t0.elapsed().as_secs_f64().max(1e-9))
 }
 
+/// [`run_scale_config_fabric`] with a default flight recorder installed
+/// for the duration — the `sim/tick/incremental-telemetry` bench point:
+/// its gap vs the recorder-off tick rate is the telemetry enabled-mode
+/// overhead (budgeted <5% in DESIGN.md §Telemetry).
+pub fn run_scale_config_telemetry(
+    spec: TopologySpec,
+    vms: usize,
+    ticks: u64,
+    incremental: bool,
+    fabric_feedback: bool,
+    seed: u64,
+) -> Result<f64> {
+    use crate::telemetry::{self, Recorder, TelemetryConfig};
+    let guard = telemetry::install(Recorder::new(TelemetryConfig::default()));
+    let out = run_scale_config_fabric(spec, vms, ticks, incremental, fabric_feedback, seed);
+    drop(guard);
+    out
+}
+
 /// One timed mapper-decision loop at `(spec, vms)`: admit `vms` through
 /// `place_arrival` (persistent delta problem; pruned candidates and
 /// sparse O(|p|) delta scoring once the system outgrows the compiled

@@ -184,6 +184,7 @@ impl MigrationEngine {
         fabric: &FabricGraph,
         residual: Option<&[f64]>,
     ) -> TickOutcome {
+        let _t = crate::telemetry::span(crate::telemetry::Phase::MigrationAdvance);
         let mut out = TickOutcome {
             link_gbs: vec![0.0; fabric.num_links()],
             ..TickOutcome::default()

@@ -27,6 +27,7 @@ use crate::coordinator::{MapperConfig, SmMapper};
 use crate::experiments::{Algorithm, ScorerChoice};
 use crate::runtime::Scorer;
 use crate::sim::{SimConfig, Simulator};
+use crate::telemetry::{self, Phase, Recorder, TelemetryConfig};
 use crate::topology::{ServerId, Topology};
 use crate::util::stats;
 use crate::vm::{VmId, VmState, VmType};
@@ -41,11 +42,15 @@ pub struct ScenarioConfig {
     pub scorer: ScorerChoice,
     /// Coordinator override (metric is set per algorithm).
     pub mapper: Option<MapperConfig>,
+    /// When set, a flight recorder is installed for the duration of the
+    /// run and returned in [`ScenarioResult::telemetry`].  Never affects
+    /// simulation outcomes (the recorder only observes).
+    pub telemetry: Option<TelemetryConfig>,
 }
 
 impl ScenarioConfig {
     pub fn new(seed: u64) -> Self {
-        Self { seed, scorer: ScorerChoice::Native, mapper: None }
+        Self { seed, scorer: ScorerChoice::Native, mapper: None, telemetry: None }
     }
 }
 
@@ -78,6 +83,9 @@ pub struct ScenarioMetrics {
     /// scenarios).
     pub link_events: usize,
     pub events_applied: usize,
+    /// Events evicted from the bounded simulator trace (0 unless the
+    /// scenario outruns the ring capacity).
+    pub trace_dropped: u64,
 }
 
 /// One scenario run: metrics + the applied-event log (both deterministic)
@@ -87,6 +95,9 @@ pub struct ScenarioResult {
     pub metrics: ScenarioMetrics,
     pub event_log: Vec<(u64, String)>,
     pub ticks_per_sec: f64,
+    /// Flight recorder captured during the run; `Some` iff
+    /// [`ScenarioConfig::telemetry`] was set.
+    pub telemetry: Option<Recorder>,
 }
 
 fn build_scorer(choice: ScorerChoice) -> Scorer {
@@ -212,6 +223,9 @@ pub fn run_scenario(
     cfg: &ScenarioConfig,
 ) -> Result<ScenarioResult> {
     let sim_seed = spec.salted_seed(cfg.seed);
+    // The recorder lives on this thread for the whole run; the guard
+    // uninstalls it on every exit path (including `?` early returns).
+    let guard = cfg.telemetry.clone().map(|t| telemetry::install(Recorder::new(t)));
     let mut sim_cfg = match alg {
         Algorithm::Vanilla => SimConfig::vanilla(sim_seed),
         Algorithm::AutoNuma => SimConfig::vanilla_autonuma(sim_seed),
@@ -260,7 +274,9 @@ pub fn run_scenario(
         while cursor < timeline.len() && timeline[cursor].0 <= t {
             let ev = timeline[cursor].1.clone();
             cursor += 1;
+            let span = telemetry::span(Phase::ScenarioEvent);
             let desc = apply_event(&mut sim, &mut mapper, &ev, &mut ctx)?;
+            drop(span);
             event_log.push((t, desc));
         }
         // Re-admission: drain the queue while capacity allows (recovered
@@ -296,6 +312,7 @@ pub fn run_scenario(
                 m.interval(&mut sim)?;
             }
         }
+        telemetry::with(|r| r.tick_sample(t));
     }
     let wall = t0.elapsed().as_secs_f64().max(1e-9);
 
@@ -322,8 +339,13 @@ pub fn run_scenario(
         link_events: sim.trace.count_kind("fabric_link_down")
             + sim.trace.count_kind("fabric_link_restored"),
         events_applied: event_log.len(),
+        trace_dropped: sim.trace.dropped(),
     };
-    Ok(ScenarioResult { metrics, event_log, ticks_per_sec: spec.horizon as f64 / wall })
+    let telemetry = guard.and_then(|g| g.finish()).map(|mut rec| {
+        rec.push_spans_summary();
+        rec
+    });
+    Ok(ScenarioResult { metrics, event_log, ticks_per_sec: spec.horizon as f64 / wall, telemetry })
 }
 
 #[cfg(test)]

@@ -155,7 +155,7 @@ pub fn to_json(results: &[ScenarioResult]) -> String {
              \"evacuations\": {}, \
              \"sched_moves\": {}, \"migrations_started\": {}, \"gb_moved\": {:.3}, \
              \"rejected\": {}, \"readmitted\": {}, \"link_events\": {}, \"events\": {}, \
-             \"ticks_per_sec\": {:.1}}}{}\n",
+             \"trace_dropped\": {}, \"ticks_per_sec\": {:.1}}}{}\n",
             esc(&m.scenario),
             esc(m.algorithm),
             m.vms_seen,
@@ -173,6 +173,7 @@ pub fn to_json(results: &[ScenarioResult]) -> String {
             m.readmitted,
             m.link_events,
             m.events_applied,
+            m.trace_dropped,
             r.ticks_per_sec,
             if k + 1 == results.len() { "" } else { "," },
         ));
@@ -216,7 +217,7 @@ pub fn render_table(results: &[ScenarioResult]) -> Table {
 /// The `scenarios` experiment (`dvrm experiment scenarios`).
 pub fn experiment(o: &ExpOptions) -> Result<Output> {
     let specs = if o.fast { smoke_suite() } else { full_suite() };
-    let cfg = ScenarioConfig { seed: o.seed, scorer: o.scorer, mapper: None };
+    let cfg = ScenarioConfig { seed: o.seed, scorer: o.scorer, mapper: None, telemetry: None };
     let results = run_suite(&specs, &cfg)?;
     let t = render_table(&results);
     Ok(Output { text: t.render(), tables: vec![("scenarios".into(), t)] })

@@ -4,6 +4,8 @@
 //! inner workings of the linux scheduler") is quantified from this trace;
 //! experiments export it as CSV for offline analysis.
 
+use std::collections::VecDeque;
+
 use crate::topology::CpuId;
 use crate::vm::VmId;
 
@@ -87,12 +89,43 @@ impl Event {
             | Event::LoadScaled { .. } => None,
         }
     }
+
+    /// Structured payload as `key=value[;key=value]` (empty for payload-
+    /// free events) — the CSV detail column, so magnitudes (GB moved,
+    /// degradation scale, server counts, workload phase) survive export.
+    pub fn detail(&self) -> String {
+        match self {
+            Event::Defined { .. }
+            | Event::Booted { .. }
+            | Event::Destroyed { .. }
+            | Event::Evicted { .. } => String::new(),
+            Event::Pinned { vcpu, cpu, .. } => format!("vcpu={vcpu};cpu={}", cpu.0),
+            Event::SchedMigration { moved, .. } => format!("moved={moved}"),
+            Event::Remapped { servers, .. } => format!("servers={servers}"),
+            Event::MemMigrationStarted { gb, .. } => format!("gb={gb:.3}"),
+            Event::MemoryMigrated { gb_moved, ticks, .. } => {
+                format!("gb_moved={gb_moved:.3};ticks={ticks}")
+            }
+            Event::ServerDrained { server, moved } => {
+                format!("server={server};moved={moved}")
+            }
+            Event::ServerRecovered { server } => format!("server={server}"),
+            Event::FabricDegraded { scale } => format!("scale={scale:.3}"),
+            Event::FabricLinkDown { from, to } | Event::FabricLinkRestored { from, to } => {
+                format!("from={from};to={to}")
+            }
+            Event::PhaseShifted { phase, .. } => format!("phase={phase}"),
+            Event::LoadScaled { scale } => format!("scale={scale:.3}"),
+        }
+    }
 }
 
-/// Bounded in-memory trace.
+/// Bounded in-memory trace — a ring: at capacity the *oldest* events
+/// are evicted so the tail of a long run (usually what an investigation
+/// needs) is always present.  `dropped` counts evictions.
 #[derive(Debug, Clone)]
 pub struct EventTrace {
-    events: Vec<(u64, Event)>,
+    events: VecDeque<(u64, Event)>,
     cap: usize,
     dropped: u64,
 }
@@ -105,15 +138,16 @@ impl Default for EventTrace {
 
 impl EventTrace {
     pub fn new(cap: usize) -> Self {
-        Self { events: Vec::new(), cap, dropped: 0 }
+        Self { events: VecDeque::new(), cap: cap.max(1), dropped: 0 }
     }
 
     pub fn push(&mut self, tick: u64, event: Event) {
+        crate::telemetry::with(|r| r.count_event(event.kind()));
         if self.events.len() >= self.cap {
+            self.events.pop_front();
             self.dropped += 1;
-            return;
         }
-        self.events.push((tick, event));
+        self.events.push_back((tick, event));
     }
 
     pub fn len(&self) -> usize {
@@ -160,12 +194,14 @@ impl EventTrace {
             .sum()
     }
 
-    /// Export as CSV (`tick,kind,vm`).
+    /// Export as CSV (`tick,kind,vm,detail`).  `detail` is the event's
+    /// structured payload (`key=value;…`, see [`Event::detail`]); the
+    /// `tick,kind,vm` prefix is unchanged from earlier exports.
     pub fn to_csv(&self) -> String {
-        let mut out = String::from("tick,kind,vm\n");
+        let mut out = String::from("tick,kind,vm,detail\n");
         for (tick, e) in &self.events {
             let vm = e.vm().map(|v| v.to_string()).unwrap_or_else(|| "-".into());
-            out.push_str(&format!("{tick},{},{vm}\n", e.kind()));
+            out.push_str(&format!("{tick},{},{vm},{}\n", e.kind(), e.detail()));
         }
         out
     }
@@ -199,13 +235,16 @@ mod tests {
     }
 
     #[test]
-    fn bounded_capacity_drops() {
+    fn bounded_capacity_evicts_oldest() {
         let mut t = EventTrace::new(2);
         for i in 0..5 {
             t.push(i, Event::Defined { vm: VmId(i) });
         }
         assert_eq!(t.len(), 2);
         assert_eq!(t.dropped(), 3);
+        // The ring keeps the newest events; the oldest are evicted.
+        let ticks: Vec<u64> = t.iter().map(|(tick, _)| *tick).collect();
+        assert_eq!(ticks, vec![3, 4]);
     }
 
     #[test]
@@ -213,8 +252,25 @@ mod tests {
         let mut t = EventTrace::new(10);
         t.push(7, Event::Remapped { vm: VmId(3), servers: 2 });
         let csv = t.to_csv();
-        assert!(csv.starts_with("tick,kind,vm\n"));
-        assert!(csv.contains("7,remapped,vm3"));
+        assert!(csv.starts_with("tick,kind,vm,detail\n"));
+        assert!(csv.contains("7,remapped,vm3,servers=2"));
+    }
+
+    #[test]
+    fn csv_detail_column_carries_payloads() {
+        let mut t = EventTrace::new(10);
+        t.push(5, Event::MemoryMigrated { vm: VmId(1), gb_moved: 8.0, ticks: 4 });
+        t.push(6, Event::FabricDegraded { scale: 0.1 });
+        t.push(7, Event::PhaseShifted { vm: VmId(2), phase: "mem" });
+        t.push(8, Event::ServerDrained { server: 3, moved: 12 });
+        t.push(9, Event::Booted { vm: VmId(4) });
+        let csv = t.to_csv();
+        assert!(csv.contains("5,memory_migrated,vm1,gb_moved=8.000;ticks=4"));
+        assert!(csv.contains("6,fabric_degraded,-,scale=0.100"));
+        assert!(csv.contains("7,phase_shifted,vm2,phase=mem"));
+        assert!(csv.contains("8,server_drained,-,server=3;moved=12"));
+        // Payload-free events still have the (empty) column.
+        assert!(csv.contains("9,booted,vm4,\n"));
     }
 
     #[test]

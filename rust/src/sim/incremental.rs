@@ -423,6 +423,7 @@ impl IncrementalEvaluator {
         // Per-link congestion factors — O(links), only in fabric mode.
         let fabric_on = match (mig_link_gbs, &self.graph) {
             (Some(base), Some(graph)) => {
+                let _t = crate::telemetry::span(crate::telemetry::Phase::FabricSettle);
                 for l in 0..self.link_demand.len() {
                     let d = self.link_demand[l] + base[l];
                     self.phi[l] = congestion_factor(rho(

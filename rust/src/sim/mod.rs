@@ -749,6 +749,15 @@ impl Simulator {
             residual.as_deref(),
         );
         self.mig_link_gbs = outcome.link_gbs.clone();
+        if crate::telemetry::enabled() {
+            let gb: f64 = outcome.gb_moved.iter().map(|(_, g)| *g).sum();
+            let chunks = outcome.completed_chunks.len() as f64;
+            crate::telemetry::with(|r| {
+                let reg = r.registry_mut();
+                reg.add_counter("mem.migration.gb", gb);
+                reg.add_counter("mem.migration.chunks_completed", chunks);
+            });
+        }
         for c in &outcome.completed_chunks {
             if let Some(mvm) = self.vms.get_mut(&c.vm) {
                 mvm.pages.set_owner(c.chunk, c.to);
@@ -781,6 +790,7 @@ impl Simulator {
 
     /// Advance one tick; returns this tick's sample per running VM.
     pub fn step(&mut self) -> Vec<(VmId, PerfSample)> {
+        let _step_t = crate::telemetry::span(crate::telemetry::Phase::SimStep);
         self.tick += 1;
         let tick = self.tick;
 
@@ -788,6 +798,7 @@ impl Simulator {
         self.advance_migrations();
 
         // 1. Vanilla balancing of floating vCPUs.
+        let balance_t = crate::telemetry::span(crate::telemetry::Phase::SchedBalance);
         self.sync_sched_load();
         let ids: Vec<VmId> = self.vms.keys().copied().collect();
         for id in &ids {
@@ -837,6 +848,7 @@ impl Simulator {
                 self.trace.push(tick, Event::SchedMigration { vm: *id, moved });
             }
         }
+        drop(balance_t);
 
         // 2. Draw utilization (scaled by the scenario's diurnal
         // multiplier; bit-identical to the unscaled draw at 1.0).
@@ -881,6 +893,10 @@ impl Simulator {
         } else {
             self.cfg.model.clone()
         };
+        // Captured before the incremental path takes the set (telemetry
+        // gauge; reading the len has no effect on either path).
+        let dirty_n = self.dirty.len();
+        let eval_t = crate::telemetry::span(crate::telemetry::Phase::Evaluate);
         let outs = if self.cfg.incremental {
             // Re-cache only what changed since the last tick.
             let dirty = std::mem::take(&mut self.dirty);
@@ -961,6 +977,44 @@ impl Simulator {
             }
             outs
         };
+        drop(eval_t);
+
+        // Per-tick registry sample: dirty-set sizes, migration backlog,
+        // link utilization.  Pure observation — values already computed
+        // (or O(links) reads) — so the disabled path is untouched.
+        if crate::telemetry::enabled() {
+            let active = self.migrations.active_jobs() as f64;
+            let running_n = running.len() as f64;
+            let coord_dirty_n = self.coord_dirty.len() as f64;
+            let mut rho_max = 0.0f64;
+            let mut rho_sum = 0.0f64;
+            let mut nlinks = 0usize;
+            if self.cfg.fabric.feedback {
+                for l in 0..self.workload_link_gbs.len() {
+                    let cap = self.fabric.capacity_gbs(LinkId(l));
+                    if cap <= 0.0 {
+                        continue;
+                    }
+                    let rho = (self.workload_link_gbs[l] + self.mig_link_gbs[l]) / cap;
+                    rho_max = rho_max.max(rho);
+                    rho_sum += rho;
+                    nlinks += 1;
+                }
+            }
+            crate::telemetry::with(|r| {
+                let reg = r.registry_mut();
+                reg.add_counter("sim.ticks", 1.0);
+                reg.set_gauge("sim.vms.running", running_n);
+                reg.set_gauge("sim.dirty.evaluator", dirty_n as f64);
+                reg.set_gauge("sim.dirty.coordinator", coord_dirty_n);
+                reg.set_gauge("sim.migrations.active", active);
+                if nlinks > 0 {
+                    reg.set_gauge("fabric.link.rho.max", rho_max);
+                    reg.set_gauge("fabric.link.rho.mean", rho_sum / nlinks as f64);
+                    reg.observe("fabric.link.rho", rho_max);
+                }
+            });
+        }
 
         // 4. Synthesize noisy counters + reset churn.
         let sigma = self.cfg.noise_sigma;

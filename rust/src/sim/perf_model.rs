@@ -213,6 +213,7 @@ pub fn evaluate_with_fabric(
     // derive the per-link M/M/1 factor.  All-zero load gives phi = 1
     // everywhere, which reproduces the scalar model exactly.
     let link_phi: Option<Vec<f64>> = fabric.map(|ft| {
+        let _t = crate::telemetry::span(crate::telemetry::Phase::FabricSettle);
         let mut ledger = LinkLedger::new(ft.graph.num_links());
         for (v, view) in views.iter().enumerate() {
             charge_view_links(topo, ft.graph, &view.p, &view.m, per_vm_demand[v], &mut ledger);

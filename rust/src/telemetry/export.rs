@@ -1,0 +1,161 @@
+//! Exporters: Prometheus text exposition, the per-phase time-breakdown
+//! table, and JSON-safe number formatting shared by the JSONL writers.
+//! All output is deterministic (sorted names) so snapshots diff cleanly.
+
+use crate::util::benchkit::fmt_dur;
+use crate::util::table::Table;
+
+use super::hist::{self, LogHistogram};
+use super::registry::{Metric, Registry};
+
+/// Format a float for JSON: finite shortest-repr, non-finite → 0 (JSON
+/// has no NaN/Inf literals and the consumers treat both as "no data").
+pub fn fmt_num(v: f64) -> String {
+    if v.is_finite() { format!("{v}") } else { "0".into() }
+}
+
+/// JSON string escape for the hand-rolled writers.
+pub fn esc(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+/// `sim.dirty.evaluator` → `dvrm_sim_dirty_evaluator`.
+pub fn prom_name(name: &str) -> String {
+    let mut out = String::from("dvrm_");
+    for c in name.chars() {
+        out.push(if c.is_ascii_alphanumeric() { c } else { '_' });
+    }
+    out
+}
+
+fn prom_hist(out: &mut String, family: &str, labels: &str, h: &LogHistogram) {
+    let sep = if labels.is_empty() { ("{", "") } else { ("{", ",") };
+    let mut cum = 0u64;
+    for (i, &c) in h.buckets().iter().enumerate() {
+        if c == 0 {
+            continue;
+        }
+        cum += c;
+        out.push_str(&format!(
+            "{family}_bucket{}{labels}{}le=\"{:e}\"}} {cum}\n",
+            sep.0,
+            sep.1,
+            hist::LogHistogram::bucket_upper(i),
+        ));
+    }
+    out.push_str(&format!(
+        "{family}_bucket{}{labels}{}le=\"+Inf\"}} {}\n",
+        sep.0,
+        sep.1,
+        h.count()
+    ));
+    let l = if labels.is_empty() { String::new() } else { format!("{{{labels}}}") };
+    out.push_str(&format!("{family}_sum{l} {}\n", fmt_num(h.sum())));
+    out.push_str(&format!("{family}_count{l} {}\n", h.count()));
+}
+
+/// Render the registry plus the per-phase span histograms (seconds) as
+/// Prometheus text exposition format.
+pub fn prometheus(registry: &Registry, spans: &[(&'static str, &LogHistogram)]) -> String {
+    let mut out = String::new();
+    for (name, metric) in registry.iter() {
+        let pname = prom_name(name);
+        match metric {
+            Metric::Counter(c) => {
+                out.push_str(&format!("# TYPE {pname} counter\n{pname} {}\n", fmt_num(*c)));
+            }
+            Metric::Gauge(g) => {
+                out.push_str(&format!("# TYPE {pname} gauge\n{pname} {}\n", fmt_num(*g)));
+            }
+            Metric::Histogram(h) => {
+                out.push_str(&format!("# TYPE {pname} histogram\n"));
+                prom_hist(&mut out, &pname, "", h);
+            }
+        }
+    }
+    let any = spans.iter().any(|(_, h)| !h.is_empty());
+    if any {
+        out.push_str("# TYPE dvrm_phase_seconds histogram\n");
+        for (phase, h) in spans {
+            if h.is_empty() {
+                continue;
+            }
+            prom_hist(&mut out, "dvrm_phase_seconds", &format!("phase=\"{phase}\""), h);
+        }
+    }
+    out
+}
+
+/// Per-phase wall-clock breakdown (count, total, mean, p50, p99, max).
+pub fn breakdown_table(spans: &[(&'static str, &LogHistogram)]) -> Table {
+    let mut t = Table::new("telemetry: per-phase time breakdown")
+        .header(&["phase", "count", "total", "mean", "p50", "p99", "max"]);
+    let grand: f64 = spans.iter().map(|(_, h)| h.sum()).sum();
+    for (phase, h) in spans {
+        if h.is_empty() {
+            continue;
+        }
+        t.row(vec![
+            phase.to_string(),
+            h.count().to_string(),
+            fmt_dur(h.sum()).trim().to_string(),
+            fmt_dur(h.mean()).trim().to_string(),
+            fmt_dur(h.percentile(50.0)).trim().to_string(),
+            fmt_dur(h.percentile(99.0)).trim().to_string(),
+            fmt_dur(h.max()).trim().to_string(),
+        ]);
+    }
+    if grand > 0.0 {
+        t.row(vec!["(all spans)".into(), String::new(), fmt_dur(grand).trim().to_string()]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prom_names_are_sanitized() {
+        assert_eq!(prom_name("sim.dirty.evaluator"), "dvrm_sim_dirty_evaluator");
+        assert_eq!(prom_name("a-b/c"), "dvrm_a_b_c");
+    }
+
+    #[test]
+    fn fmt_num_guards_non_finite() {
+        assert_eq!(fmt_num(1.5), "1.5");
+        assert_eq!(fmt_num(f64::NAN), "0");
+        assert_eq!(fmt_num(f64::INFINITY), "0");
+    }
+
+    #[test]
+    fn exposition_has_all_metric_types() {
+        let mut r = Registry::new();
+        r.add_counter("sim.ticks", 42.0);
+        r.set_gauge("sim.vms.running", 7.0);
+        r.observe("fabric.link.rho", 0.4);
+        let mut h = LogHistogram::new();
+        h.observe(1e-4);
+        h.observe(2e-4);
+        let text = prometheus(&r, &[("sim.evaluate", &h)]);
+        assert!(text.contains("# TYPE dvrm_sim_ticks counter"));
+        assert!(text.contains("dvrm_sim_ticks 42"));
+        assert!(text.contains("# TYPE dvrm_sim_vms_running gauge"));
+        assert!(text.contains("# TYPE dvrm_fabric_link_rho histogram"));
+        assert!(text.contains("dvrm_fabric_link_rho_count 1"));
+        assert!(text.contains("dvrm_phase_seconds_bucket{phase=\"sim.evaluate\""));
+        assert!(text.contains("dvrm_phase_seconds_count{phase=\"sim.evaluate\"} 2"));
+        assert!(text.contains("le=\"+Inf\"} 2"));
+    }
+
+    #[test]
+    fn breakdown_table_skips_empty_phases() {
+        let mut h = LogHistogram::new();
+        h.observe(0.002);
+        let empty = LogHistogram::new();
+        let t = breakdown_table(&[("sim.evaluate", &h), ("mapper.repack", &empty)]);
+        let text = t.render();
+        assert!(text.contains("sim.evaluate"));
+        assert!(!text.contains("mapper.repack"));
+    }
+}

@@ -1,0 +1,214 @@
+//! Log-bucketed histogram with bounded memory — the flight recorder's
+//! only aggregation primitive.  64 power-of-two buckets cover `[2^-30,
+//! 2^34)` (≈1 ns to ≈4.6 h when the unit is seconds), so a histogram is
+//! a fixed 600-odd bytes no matter how many observations it absorbs.
+//! Percentiles are approximate (bucket upper bound, clamped to the exact
+//! observed min/max); count/sum/min/max are exact.
+
+/// Number of buckets; bucket `i` covers `[2^(i-30), 2^(i-29))`.
+pub const BUCKETS: usize = 64;
+
+/// Exponent offset: bucket 0 starts at `2^-EXP_OFFSET`.
+const EXP_OFFSET: i32 = 30;
+
+/// Bounded-memory log2 histogram over positive `f64` values.
+#[derive(Debug, Clone)]
+pub struct LogHistogram {
+    buckets: [u64; BUCKETS],
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LogHistogram {
+    pub fn new() -> Self {
+        Self {
+            buckets: [0; BUCKETS],
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    /// Bucket index for a value; non-positive and subnormal-small values
+    /// land in bucket 0, huge values saturate into the last bucket.
+    pub fn bucket_of(v: f64) -> usize {
+        if !(v > 0.0) || !v.is_finite() {
+            return 0;
+        }
+        let e = v.log2().floor() as i32;
+        (e + EXP_OFFSET).clamp(0, BUCKETS as i32 - 1) as usize
+    }
+
+    /// Inclusive upper bound of bucket `i` (`2^(i-29)`).
+    pub fn bucket_upper(i: usize) -> f64 {
+        (2.0f64).powi(i as i32 - EXP_OFFSET + 1)
+    }
+
+    pub fn observe(&mut self, v: f64) {
+        self.buckets[Self::bucket_of(v)] += 1;
+        self.count += 1;
+        if v.is_finite() {
+            self.sum += v;
+            self.min = self.min.min(v);
+            self.max = self.max.max(v);
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.count == 0 { 0.0 } else { self.min }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.count == 0 { 0.0 } else { self.max }
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 { 0.0 } else { self.sum / self.count as f64 }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Per-bucket counts (for exposition and tests).
+    pub fn buckets(&self) -> &[u64; BUCKETS] {
+        &self.buckets
+    }
+
+    /// Approximate percentile (`q` in `[0, 100]`): upper bound of the
+    /// bucket holding the rank, clamped to the exact observed range.
+    /// Returns NaN on an empty histogram.
+    pub fn percentile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        let rank = ((q / 100.0) * self.count as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return Self::bucket_upper(i).clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    pub fn merge(&mut self, other: &LogHistogram) {
+        if other.count == 0 {
+            return;
+        }
+        for (a, b) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_sums_equal_count() {
+        let mut h = LogHistogram::new();
+        for i in 0..1000 {
+            h.observe((i as f64 + 1.0) * 1e-6);
+        }
+        assert_eq!(h.buckets().iter().sum::<u64>(), h.count());
+        assert_eq!(h.count(), 1000);
+    }
+
+    #[test]
+    fn exact_stats_track_observations() {
+        let mut h = LogHistogram::new();
+        for v in [0.5, 2.0, 8.0] {
+            h.observe(v);
+        }
+        assert_eq!(h.count(), 3);
+        assert!((h.sum() - 10.5).abs() < 1e-12);
+        assert_eq!(h.min(), 0.5);
+        assert_eq!(h.max(), 8.0);
+        assert!((h.mean() - 3.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_within_observed_range() {
+        let mut h = LogHistogram::new();
+        for i in 1..=100 {
+            h.observe(i as f64 * 1e-3);
+        }
+        for q in [0.0, 50.0, 99.0, 100.0] {
+            let p = h.percentile(q);
+            assert!(p >= h.min() && p <= h.max(), "p{q} = {p} out of range");
+        }
+        assert!(h.percentile(50.0) <= h.percentile(99.0));
+    }
+
+    #[test]
+    fn empty_percentile_is_nan() {
+        assert!(LogHistogram::new().percentile(50.0).is_nan());
+    }
+
+    #[test]
+    fn degenerate_values_land_in_bucket_zero() {
+        assert_eq!(LogHistogram::bucket_of(0.0), 0);
+        assert_eq!(LogHistogram::bucket_of(-3.0), 0);
+        assert_eq!(LogHistogram::bucket_of(f64::NAN), 0);
+        assert_eq!(LogHistogram::bucket_of(1e-30), 0);
+        assert_eq!(LogHistogram::bucket_of(f64::INFINITY), 0);
+        assert_eq!(LogHistogram::bucket_of(1e30), BUCKETS - 1);
+    }
+
+    #[test]
+    fn bucket_bounds_are_monotone() {
+        for i in 1..BUCKETS {
+            assert!(LogHistogram::bucket_upper(i) > LogHistogram::bucket_upper(i - 1));
+        }
+        // A value observed into bucket i is below that bucket's upper bound.
+        for v in [1e-9, 3.2e-4, 0.77, 12.0] {
+            let i = LogHistogram::bucket_of(v);
+            assert!(v < LogHistogram::bucket_upper(i), "{v} vs bucket {i}");
+        }
+    }
+
+    #[test]
+    fn merge_equals_concat() {
+        let mut a = LogHistogram::new();
+        let mut b = LogHistogram::new();
+        let mut all = LogHistogram::new();
+        for i in 0..50 {
+            let v = (i as f64 + 0.5) * 1e-5;
+            a.observe(v);
+            all.observe(v);
+        }
+        for i in 0..70 {
+            let v = (i as f64 + 0.5) * 1e-2;
+            b.observe(v);
+            all.observe(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), all.count());
+        assert_eq!(a.buckets(), all.buckets());
+        assert!((a.sum() - all.sum()).abs() < 1e-12);
+    }
+}

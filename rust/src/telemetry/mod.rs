@@ -1,0 +1,518 @@
+//! Flight-recorder telemetry: tick-phase spans, a counter/gauge/
+//! histogram registry, mapper decision provenance, and JSONL/Prometheus
+//! exporters.
+//!
+//! Design contract (mirrors every other opt-in mechanism in this repo):
+//!
+//! * **Zero overhead when off.**  Nothing is recorded unless a
+//!   [`Recorder`] is installed on the current thread; every
+//!   instrumentation site first checks a thread-local `Cell<bool>` and
+//!   bails.  With telemetry off, simulation output is bit-identical —
+//!   the recorder only *observes* (wall clock + already-computed values)
+//!   and never touches simulator RNG or control flow.
+//! * **Thread-local, not global.**  Each scenario-suite job runs its
+//!   whole simulation on one pool thread ([`crate::util::pool`]), so a
+//!   per-run recorder installed by `run_scenario` captures exactly that
+//!   run with no locks on the hot path and no cross-run bleed.
+//! * **Bounded memory.**  Spans aggregate into fixed-size
+//!   [`hist::LogHistogram`]s; decisions live in a fixed-capacity
+//!   [`provenance::DecisionRing`]; only the opt-in per-tick JSONL
+//!   samples grow with horizon length.
+//!
+//! Instrumented phases (dotted names; see DESIGN.md §Telemetry):
+//! `sim.step`, `sim.migration_advance`, `sim.sched_balance`,
+//! `sim.evaluate`, `fabric.settle`, `mapper.arrival`, `mapper.interval`,
+//! `mapper.reshuffle`, `mapper.repack`, `scenario.event`.
+
+pub mod export;
+pub mod hist;
+pub mod json;
+pub mod provenance;
+pub mod registry;
+
+use std::cell::{Cell, RefCell};
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+pub use hist::LogHistogram;
+pub use provenance::{DecisionRecord, DecisionRing};
+pub use registry::{Metric, Registry};
+
+/// Instrumented tick phases.  `ALL` order is the export order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// Whole `Simulator::step` (contains the `sim.*` sub-phases).
+    SimStep,
+    /// `MigrationEngine::advance` (page-migration drain).
+    MigrationAdvance,
+    /// Vanilla scheduler balancing pass.
+    SchedBalance,
+    /// Model evaluation (incremental or full; contains `fabric.settle`).
+    Evaluate,
+    /// Per-link demand → φ settle (`LinkLedger` / incremental mirror).
+    FabricSettle,
+    /// `SmMapper::place_arrival` (contains nested reshuffle/repack).
+    MapperArrival,
+    /// `SmMapper::interval` maintenance pass.
+    MapperInterval,
+    /// Worst-first reshuffle.
+    MapperReshuffle,
+    /// Full repack.
+    MapperRepack,
+    /// Scenario timeline event application.
+    ScenarioEvent,
+}
+
+impl Phase {
+    pub const ALL: [Phase; 10] = [
+        Phase::SimStep,
+        Phase::MigrationAdvance,
+        Phase::SchedBalance,
+        Phase::Evaluate,
+        Phase::FabricSettle,
+        Phase::MapperArrival,
+        Phase::MapperInterval,
+        Phase::MapperReshuffle,
+        Phase::MapperRepack,
+        Phase::ScenarioEvent,
+    ];
+
+    pub const COUNT: usize = Self::ALL.len();
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::SimStep => "sim.step",
+            Phase::MigrationAdvance => "sim.migration_advance",
+            Phase::SchedBalance => "sim.sched_balance",
+            Phase::Evaluate => "sim.evaluate",
+            Phase::FabricSettle => "fabric.settle",
+            Phase::MapperArrival => "mapper.arrival",
+            Phase::MapperInterval => "mapper.interval",
+            Phase::MapperReshuffle => "mapper.reshuffle",
+            Phase::MapperRepack => "mapper.repack",
+            Phase::ScenarioEvent => "scenario.event",
+        }
+    }
+
+    fn index(self) -> usize {
+        self as usize
+    }
+}
+
+/// Recorder options.
+#[derive(Debug, Clone)]
+pub struct TelemetryConfig {
+    /// Capacity of the decision-provenance ring (oldest evicted).
+    pub decision_ring: usize,
+    /// Emit a JSONL tick sample every N ticks (1 = every tick).
+    pub sample_every: u64,
+}
+
+impl Default for TelemetryConfig {
+    fn default() -> Self {
+        Self { decision_ring: 4096, sample_every: 1 }
+    }
+}
+
+/// Per-phase aggregation: lifetime histogram + current-tick accumulator.
+#[derive(Debug, Clone, Default)]
+struct SpanStats {
+    hist: LogHistogram,
+    tick_ns: u64,
+}
+
+/// The flight recorder: everything one run's telemetry lands in.
+#[derive(Debug, Clone)]
+pub struct Recorder {
+    cfg: TelemetryConfig,
+    spans: Vec<SpanStats>,
+    registry: Registry,
+    decisions: DecisionRing,
+    /// Event counts by kind (`&'static str` keys: no hot-path alloc).
+    event_counts: BTreeMap<&'static str, u64>,
+    jsonl: Vec<String>,
+}
+
+impl Recorder {
+    pub fn new(cfg: TelemetryConfig) -> Self {
+        let ring = cfg.decision_ring;
+        Self {
+            cfg,
+            spans: vec![SpanStats::default(); Phase::COUNT],
+            registry: Registry::new(),
+            decisions: DecisionRing::new(ring),
+            event_counts: BTreeMap::new(),
+            jsonl: Vec::new(),
+        }
+    }
+
+    pub fn record_span(&mut self, phase: Phase, secs: f64) {
+        let s = &mut self.spans[phase.index()];
+        s.hist.observe(secs);
+        s.tick_ns += (secs * 1e9) as u64;
+    }
+
+    /// Count an [`crate::sim::events::Event`] by kind (static name, no
+    /// allocation); exported as `sim.events.<kind>` counters.
+    pub fn count_event(&mut self, kind: &'static str) {
+        *self.event_counts.entry(kind).or_insert(0) += 1;
+    }
+
+    /// Count for one event kind (0 if never seen).
+    pub fn event_count(&self, kind: &str) -> u64 {
+        self.event_counts.get(kind).copied().unwrap_or(0)
+    }
+
+    pub fn record_decision(&mut self, rec: DecisionRecord) {
+        self.jsonl.push(decision_line(&rec));
+        self.decisions.push(rec);
+    }
+
+    /// Close out a tick: emit (subject to `sample_every`) a JSONL sample
+    /// with per-phase nanoseconds plus all counters/gauges, then reset
+    /// the per-tick span accumulators.
+    pub fn tick_sample(&mut self, tick: u64) {
+        let emit = self.cfg.sample_every <= 1 || tick % self.cfg.sample_every == 0;
+        if emit {
+            let mut line = format!("{{\"type\":\"tick\",\"tick\":{tick},\"phase_ns\":{{");
+            let mut first = true;
+            for (i, s) in self.spans.iter().enumerate() {
+                if s.tick_ns == 0 {
+                    continue;
+                }
+                if !first {
+                    line.push(',');
+                }
+                first = false;
+                line.push_str(&format!("\"{}\":{}", Phase::ALL[i].name(), s.tick_ns));
+            }
+            line.push_str("},\"metrics\":{");
+            let mut first = true;
+            for (name, m) in self.registry.iter() {
+                let v = match m {
+                    Metric::Counter(c) => *c,
+                    Metric::Gauge(g) => *g,
+                    Metric::Histogram(_) => continue,
+                };
+                if !first {
+                    line.push(',');
+                }
+                first = false;
+                line.push_str(&format!("\"{}\":{}", export::esc(name), export::fmt_num(v)));
+            }
+            for (kind, n) in &self.event_counts {
+                if !first {
+                    line.push(',');
+                }
+                first = false;
+                line.push_str(&format!("\"sim.events.{kind}\":{n}"));
+            }
+            line.push_str("}}");
+            self.jsonl.push(line);
+            for s in &mut self.spans {
+                s.tick_ns = 0;
+            }
+        }
+    }
+
+    /// Append the end-of-run `{"type":"spans",...}` summary line (per
+    /// phase: count, total/p50/p99/max in ns) — what `dvrm telemetry`
+    /// aggregates its table from.
+    pub fn push_spans_summary(&mut self) {
+        let mut line = String::from("{\"type\":\"spans\",\"phases\":[");
+        let mut first = true;
+        for (i, s) in self.spans.iter().enumerate() {
+            if s.hist.is_empty() {
+                continue;
+            }
+            if !first {
+                line.push(',');
+            }
+            first = false;
+            line.push_str(&format!(
+                "{{\"phase\":\"{}\",\"count\":{},\"total_ns\":{},\"p50_ns\":{},\
+                 \"p99_ns\":{},\"max_ns\":{}}}",
+                Phase::ALL[i].name(),
+                s.hist.count(),
+                export::fmt_num(s.hist.sum() * 1e9),
+                export::fmt_num(s.hist.percentile(50.0) * 1e9),
+                export::fmt_num(s.hist.percentile(99.0) * 1e9),
+                export::fmt_num(s.hist.max() * 1e9),
+            ));
+        }
+        line.push_str("],\"decisions\":");
+        line.push_str(&format!(
+            "{{\"recorded\":{},\"dropped\":{}}}}}",
+            self.decisions.len(),
+            self.decisions.dropped()
+        ));
+        self.jsonl.push(line);
+    }
+
+    pub fn registry(&self) -> &Registry {
+        &self.registry
+    }
+
+    pub fn registry_mut(&mut self) -> &mut Registry {
+        &mut self.registry
+    }
+
+    pub fn decisions(&self) -> &DecisionRing {
+        &self.decisions
+    }
+
+    /// Span histogram for one phase.
+    pub fn span_hist(&self, phase: Phase) -> &LogHistogram {
+        &self.spans[phase.index()].hist
+    }
+
+    /// Accumulated JSONL lines (tick samples, decisions, summaries).
+    pub fn jsonl(&self) -> &[String] {
+        &self.jsonl
+    }
+
+    fn span_pairs(&self) -> Vec<(&'static str, &LogHistogram)> {
+        Phase::ALL.iter().map(|p| (p.name(), &self.spans[p.index()].hist)).collect()
+    }
+
+    /// Prometheus text-exposition snapshot (registry + event counts +
+    /// phase seconds).
+    pub fn prometheus(&self) -> String {
+        let mut reg = self.registry.clone();
+        for (kind, n) in &self.event_counts {
+            reg.add_counter(&format!("sim.events.{kind}"), *n as f64);
+        }
+        export::prometheus(&reg, &self.span_pairs())
+    }
+
+    /// Human-readable per-phase time breakdown.
+    pub fn breakdown_table(&self) -> crate::util::table::Table {
+        export::breakdown_table(&self.span_pairs())
+    }
+
+    /// Fold another run's recorder into this one (suite aggregation):
+    /// span histograms and registry merge; decisions and JSONL stay
+    /// per-run and are not merged.
+    pub fn merge(&mut self, other: &Recorder) {
+        for (a, b) in self.spans.iter_mut().zip(other.spans.iter()) {
+            a.hist.merge(&b.hist);
+        }
+        self.registry.merge(&other.registry);
+        for (kind, n) in &other.event_counts {
+            *self.event_counts.entry(kind).or_insert(0) += n;
+        }
+    }
+}
+
+fn decision_line(r: &DecisionRecord) -> String {
+    let chosen = r.chosen_node.map(|n| n.to_string()).unwrap_or_else(|| "null".into());
+    format!(
+        "{{\"type\":\"decision\",\"tick\":{},\"vm\":{},\"kind\":\"{}\",\
+         \"candidates\":{},\"chosen_node\":{chosen},\"score\":{},\
+         \"congestion_penalty\":{},\"fallback\":\"{}\"}}",
+        r.tick,
+        r.vm,
+        r.kind,
+        r.candidates,
+        export::fmt_num(r.score),
+        export::fmt_num(r.congestion_penalty),
+        r.fallback,
+    )
+}
+
+thread_local! {
+    static ENABLED: Cell<bool> = const { Cell::new(false) };
+    static RECORDER: RefCell<Option<Recorder>> = const { RefCell::new(None) };
+}
+
+/// Is a recorder installed on this thread?  The single branch every
+/// instrumentation site pays when telemetry is off.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.with(|e| e.get())
+}
+
+/// Run `f` against the installed recorder; no-op when telemetry is off.
+/// Do not nest (`with` inside `with` would double-borrow).
+#[inline]
+pub fn with<F: FnOnce(&mut Recorder)>(f: F) {
+    if !enabled() {
+        return;
+    }
+    RECORDER.with(|slot| {
+        if let Some(rec) = slot.borrow_mut().as_mut() {
+            f(rec);
+        }
+    });
+}
+
+/// Install a recorder on the current thread.  The returned guard clears
+/// the slot on drop (error paths included); call [`RecorderGuard::finish`]
+/// to take the recorder back.
+pub fn install(rec: Recorder) -> RecorderGuard {
+    RECORDER.with(|slot| *slot.borrow_mut() = Some(rec));
+    ENABLED.with(|e| e.set(true));
+    RecorderGuard { done: false }
+}
+
+/// RAII handle for an installed recorder.
+#[derive(Debug)]
+pub struct RecorderGuard {
+    done: bool,
+}
+
+impl RecorderGuard {
+    /// Uninstall and return the recorder.
+    pub fn finish(mut self) -> Option<Recorder> {
+        self.done = true;
+        ENABLED.with(|e| e.set(false));
+        RECORDER.with(|slot| slot.borrow_mut().take())
+    }
+}
+
+impl Drop for RecorderGuard {
+    fn drop(&mut self) {
+        if !self.done {
+            ENABLED.with(|e| e.set(false));
+            RECORDER.with(|slot| *slot.borrow_mut() = None);
+        }
+    }
+}
+
+/// Start a span timer for `phase`; returns `None` (and takes no clock
+/// reading) when telemetry is off.  The timer records into the
+/// thread-local recorder on drop:
+///
+/// ```ignore
+/// let _t = telemetry::span(Phase::Evaluate);
+/// ```
+#[inline]
+pub fn span(phase: Phase) -> Option<SpanTimer> {
+    if !enabled() {
+        return None;
+    }
+    Some(SpanTimer { phase, start: Instant::now() })
+}
+
+/// Live span; records its elapsed wall time on drop.
+#[derive(Debug)]
+pub struct SpanTimer {
+    phase: Phase,
+    start: Instant,
+}
+
+impl Drop for SpanTimer {
+    fn drop(&mut self) {
+        let secs = self.start.elapsed().as_secs_f64();
+        with(|r| r.record_span(self.phase, secs));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_by_default_and_span_is_none() {
+        assert!(!enabled());
+        assert!(span(Phase::Evaluate).is_none());
+        // `with` must be a no-op, not a panic.
+        with(|_| panic!("recorder must not be installed"));
+    }
+
+    #[test]
+    fn install_record_finish_roundtrip() {
+        let guard = install(Recorder::new(TelemetryConfig::default()));
+        assert!(enabled());
+        {
+            let _t = span(Phase::Evaluate);
+            std::hint::black_box(());
+        }
+        with(|r| {
+            r.registry_mut().add_counter("sim.ticks", 1.0);
+            r.record_decision(DecisionRecord {
+                tick: 3,
+                vm: 1,
+                kind: "arrival",
+                candidates: 5,
+                chosen_node: Some(0),
+                score: -0.5,
+                congestion_penalty: 0.1,
+                fallback: "none",
+            });
+            r.tick_sample(3);
+        });
+        let rec = guard.finish().expect("recorder returned");
+        assert!(!enabled(), "finish clears the slot");
+        assert_eq!(rec.span_hist(Phase::Evaluate).count(), 1);
+        assert_eq!(rec.registry().counter("sim.ticks"), Some(1.0));
+        assert_eq!(rec.decisions().len(), 1);
+        // JSONL: one decision line + one tick line, all parseable.
+        assert_eq!(rec.jsonl().len(), 2);
+        for line in rec.jsonl() {
+            json::parse(line).expect("valid JSON line");
+        }
+    }
+
+    #[test]
+    fn guard_drop_clears_slot() {
+        {
+            let _guard = install(Recorder::new(TelemetryConfig::default()));
+            assert!(enabled());
+        }
+        assert!(!enabled());
+    }
+
+    #[test]
+    fn tick_sample_respects_sampling_interval() {
+        let guard = install(Recorder::new(TelemetryConfig { decision_ring: 16, sample_every: 5 }));
+        with(|r| {
+            for t in 1..=10u64 {
+                r.record_span(Phase::SimStep, 1e-6);
+                r.tick_sample(t);
+            }
+        });
+        let rec = guard.finish().unwrap();
+        // Ticks 5 and 10 sampled.
+        assert_eq!(rec.jsonl().len(), 2);
+        assert!(rec.jsonl()[0].contains("\"tick\":5"));
+    }
+
+    #[test]
+    fn spans_summary_parses_and_sums() {
+        let mut rec = Recorder::new(TelemetryConfig::default());
+        rec.record_span(Phase::Evaluate, 2e-3);
+        rec.record_span(Phase::Evaluate, 3e-3);
+        rec.push_spans_summary();
+        let v = json::parse(rec.jsonl().last().unwrap()).unwrap();
+        assert_eq!(v.str("type"), Some("spans"));
+        let phases = v.get("phases").unwrap().as_arr().unwrap();
+        assert_eq!(phases.len(), 1);
+        assert_eq!(phases[0].str("phase"), Some("sim.evaluate"));
+        assert_eq!(phases[0].num("count"), Some(2.0));
+        assert!((phases[0].num("total_ns").unwrap() - 5e6).abs() < 1e3);
+    }
+
+    #[test]
+    fn prometheus_snapshot_includes_phases() {
+        let mut rec = Recorder::new(TelemetryConfig::default());
+        rec.record_span(Phase::MapperInterval, 1e-4);
+        rec.registry_mut().add_counter("sim.ticks", 9.0);
+        let text = rec.prometheus();
+        assert!(text.contains("dvrm_sim_ticks 9"));
+        assert!(text.contains("phase=\"mapper.interval\""));
+    }
+
+    #[test]
+    fn merge_aggregates_spans_and_registry() {
+        let mut a = Recorder::new(TelemetryConfig::default());
+        a.record_span(Phase::SimStep, 1e-3);
+        a.registry_mut().add_counter("sim.ticks", 2.0);
+        let mut b = Recorder::new(TelemetryConfig::default());
+        b.record_span(Phase::SimStep, 2e-3);
+        b.registry_mut().add_counter("sim.ticks", 3.0);
+        a.merge(&b);
+        assert_eq!(a.span_hist(Phase::SimStep).count(), 2);
+        assert_eq!(a.registry().counter("sim.ticks"), Some(5.0));
+    }
+}

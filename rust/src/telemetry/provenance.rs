@@ -1,0 +1,112 @@
+//! Decision provenance: a bounded ring of mapper decisions, causally
+//! linkable to the [`crate::sim::events::Event`] trace through the
+//! shared `(tick, vm)` key — "why did the mapper do that?" is answerable
+//! from a trace file instead of a debugger.
+
+use std::collections::VecDeque;
+
+/// One mapper decision, recorded at the moment `pick_best` resolves.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DecisionRecord {
+    /// Simulator tick at decision time; `Remapped`/`Pinned` events caused
+    /// by this decision carry the same tick.
+    pub tick: u64,
+    /// Raw VM id (`VmId.0`).
+    pub vm: u64,
+    /// `arrival` | `remap` | `evacuate`.
+    pub kind: &'static str,
+    /// Candidate placements scored.
+    pub candidates: usize,
+    /// Anchor node of the chosen placement; `None` when the VM stayed put.
+    pub chosen_node: Option<usize>,
+    /// Winning score (delta contribution + weighted congestion penalty).
+    pub score: f64,
+    /// Congestion share of the winning score (0 when congestion-blind).
+    pub congestion_penalty: f64,
+    /// Which fallback produced the candidates / outcome:
+    /// `none` | `reshuffle` | `repack` | `kept_current`.
+    pub fallback: &'static str,
+}
+
+/// Fixed-capacity ring evicting oldest; `dropped` counts evictions.
+#[derive(Debug, Clone)]
+pub struct DecisionRing {
+    records: VecDeque<DecisionRecord>,
+    cap: usize,
+    dropped: u64,
+}
+
+impl DecisionRing {
+    pub fn new(cap: usize) -> Self {
+        Self { records: VecDeque::new(), cap: cap.max(1), dropped: 0 }
+    }
+
+    pub fn push(&mut self, rec: DecisionRecord) {
+        if self.records.len() >= self.cap {
+            self.records.pop_front();
+            self.dropped += 1;
+        }
+        self.records.push_back(rec);
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &DecisionRecord> {
+        self.records.iter()
+    }
+
+    /// Decisions concerning one VM, oldest first.
+    pub fn for_vm(&self, vm: u64) -> impl Iterator<Item = &DecisionRecord> {
+        self.records.iter().filter(move |r| r.vm == vm)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(tick: u64, vm: u64) -> DecisionRecord {
+        DecisionRecord {
+            tick,
+            vm,
+            kind: "remap",
+            candidates: 4,
+            chosen_node: Some(2),
+            score: -1.0,
+            congestion_penalty: 0.0,
+            fallback: "none",
+        }
+    }
+
+    #[test]
+    fn ring_evicts_oldest() {
+        let mut ring = DecisionRing::new(3);
+        for t in 0..5 {
+            ring.push(rec(t, t));
+        }
+        assert_eq!(ring.len(), 3);
+        assert_eq!(ring.dropped(), 2);
+        let ticks: Vec<u64> = ring.iter().map(|r| r.tick).collect();
+        assert_eq!(ticks, vec![2, 3, 4], "newest survive, oldest evicted");
+    }
+
+    #[test]
+    fn per_vm_filter() {
+        let mut ring = DecisionRing::new(10);
+        ring.push(rec(1, 7));
+        ring.push(rec(2, 8));
+        ring.push(rec(3, 7));
+        assert_eq!(ring.for_vm(7).count(), 2);
+        assert_eq!(ring.for_vm(9).count(), 0);
+    }
+}

@@ -1,0 +1,208 @@
+//! Typed counter/gauge/histogram registry under stable dotted names —
+//! absorbs the scattered per-subsystem stats (`MapperStats`, migration
+//! GBs, dirty-set sizes, link utilization) into one queryable namespace.
+//!
+//! Naming scheme: `<subsystem>.<noun>[.<qualifier>]`, e.g. `sim.ticks`,
+//! `sim.dirty.evaluator`, `mem.migration.gb`, `mapper.prune_fallbacks`,
+//! `fabric.link.rho.max`.  Names are inserted once and looked up by
+//! `&str` thereafter (no per-update allocation on the hot path).
+
+use std::collections::BTreeMap;
+
+use super::hist::LogHistogram;
+
+/// One registered metric.
+#[derive(Debug, Clone)]
+pub enum Metric {
+    /// Monotonically increasing sum.
+    Counter(f64),
+    /// Last-write-wins instantaneous value.
+    Gauge(f64),
+    /// Log-bucketed distribution.
+    Histogram(LogHistogram),
+}
+
+/// Dotted-name metric registry.
+#[derive(Debug, Clone, Default)]
+pub struct Registry {
+    metrics: BTreeMap<String, Metric>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add `v` to counter `name` (created at 0 on first use).
+    pub fn add_counter(&mut self, name: &str, v: f64) {
+        match self.metrics.get_mut(name) {
+            Some(Metric::Counter(c)) => *c += v,
+            Some(m) => *m = Metric::Counter(v),
+            None => {
+                self.metrics.insert(name.to_string(), Metric::Counter(v));
+            }
+        }
+    }
+
+    /// Set counter `name` to `max(current, v)` — for absorbing externally
+    /// accumulated monotonic totals (e.g. `MapperStats`) without
+    /// double-counting on repeated syncs.
+    pub fn counter_hwm(&mut self, name: &str, v: f64) {
+        match self.metrics.get_mut(name) {
+            Some(Metric::Counter(c)) => *c = c.max(v),
+            Some(m) => *m = Metric::Counter(v),
+            None => {
+                self.metrics.insert(name.to_string(), Metric::Counter(v));
+            }
+        }
+    }
+
+    /// Set gauge `name` to `v`.
+    pub fn set_gauge(&mut self, name: &str, v: f64) {
+        match self.metrics.get_mut(name) {
+            Some(Metric::Gauge(g)) => *g = v,
+            Some(m) => *m = Metric::Gauge(v),
+            None => {
+                self.metrics.insert(name.to_string(), Metric::Gauge(v));
+            }
+        }
+    }
+
+    /// Observe `v` into histogram `name`.
+    pub fn observe(&mut self, name: &str, v: f64) {
+        match self.metrics.get_mut(name) {
+            Some(Metric::Histogram(h)) => h.observe(v),
+            Some(m) => {
+                let mut h = LogHistogram::new();
+                h.observe(v);
+                *m = Metric::Histogram(h);
+            }
+            None => {
+                let mut h = LogHistogram::new();
+                h.observe(v);
+                self.metrics.insert(name.to_string(), Metric::Histogram(h));
+            }
+        }
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Metric> {
+        self.metrics.get(name)
+    }
+
+    /// Counter value, or `None` if absent / not a counter.
+    pub fn counter(&self, name: &str) -> Option<f64> {
+        match self.metrics.get(name) {
+            Some(Metric::Counter(c)) => Some(*c),
+            _ => None,
+        }
+    }
+
+    /// Gauge value, or `None` if absent / not a gauge.
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        match self.metrics.get(name) {
+            Some(Metric::Gauge(g)) => Some(*g),
+            _ => None,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.metrics.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.metrics.is_empty()
+    }
+
+    /// Sorted iteration (BTreeMap order) — exposition is deterministic.
+    pub fn iter(&self) -> impl Iterator<Item = (&str, &Metric)> {
+        self.metrics.iter().map(|(k, v)| (k.as_str(), v))
+    }
+
+    /// Merge another registry: counters add, gauges take the max (the
+    /// per-run last values have no cross-run ordering), histograms merge.
+    pub fn merge(&mut self, other: &Registry) {
+        for (name, m) in other.iter() {
+            match m {
+                Metric::Counter(c) => self.add_counter(name, *c),
+                Metric::Gauge(g) => {
+                    let cur = self.gauge(name).unwrap_or(f64::NEG_INFINITY);
+                    self.set_gauge(name, cur.max(*g));
+                }
+                Metric::Histogram(h) => match self.metrics.get_mut(name) {
+                    Some(Metric::Histogram(mine)) => mine.merge(h),
+                    _ => {
+                        self.metrics.insert(name.to_string(), Metric::Histogram(h.clone()));
+                    }
+                },
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate_and_gauges_overwrite() {
+        let mut r = Registry::new();
+        r.add_counter("sim.ticks", 1.0);
+        r.add_counter("sim.ticks", 1.0);
+        r.set_gauge("sim.vms.running", 5.0);
+        r.set_gauge("sim.vms.running", 3.0);
+        assert_eq!(r.counter("sim.ticks"), Some(2.0));
+        assert_eq!(r.gauge("sim.vms.running"), Some(3.0));
+    }
+
+    #[test]
+    fn hwm_counter_never_decreases() {
+        let mut r = Registry::new();
+        r.counter_hwm("mapper.remaps", 4.0);
+        r.counter_hwm("mapper.remaps", 2.0);
+        r.counter_hwm("mapper.remaps", 7.0);
+        assert_eq!(r.counter("mapper.remaps"), Some(7.0));
+    }
+
+    #[test]
+    fn histogram_observations_recorded() {
+        let mut r = Registry::new();
+        for v in [0.1, 0.2, 0.9] {
+            r.observe("fabric.link.rho", v);
+        }
+        match r.get("fabric.link.rho") {
+            Some(Metric::Histogram(h)) => {
+                assert_eq!(h.count(), 3);
+                assert_eq!(h.max(), 0.9);
+            }
+            other => panic!("expected histogram, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn iteration_is_sorted() {
+        let mut r = Registry::new();
+        r.add_counter("z.last", 1.0);
+        r.add_counter("a.first", 1.0);
+        let names: Vec<&str> = r.iter().map(|(n, _)| n).collect();
+        assert_eq!(names, vec!["a.first", "z.last"]);
+    }
+
+    #[test]
+    fn merge_adds_counters_and_merges_hists() {
+        let mut a = Registry::new();
+        a.add_counter("c", 2.0);
+        a.observe("h", 0.5);
+        a.set_gauge("g", 1.0);
+        let mut b = Registry::new();
+        b.add_counter("c", 3.0);
+        b.observe("h", 4.0);
+        b.set_gauge("g", 9.0);
+        a.merge(&b);
+        assert_eq!(a.counter("c"), Some(5.0));
+        assert_eq!(a.gauge("g"), Some(9.0));
+        match a.get("h") {
+            Some(Metric::Histogram(h)) => assert_eq!(h.count(), 2),
+            other => panic!("expected histogram, got {other:?}"),
+        }
+    }
+}

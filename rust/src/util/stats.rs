@@ -75,8 +75,13 @@ impl Welford {
 }
 
 /// Percentile of a sample (linear interpolation, `q` in `[0, 100]`).
+/// Returns NaN on an empty sample — callers that can legitimately see
+/// empty windows (tail metrics over short horizons) check first or
+/// propagate the NaN instead of panicking mid-run.
 pub fn percentile(xs: &[f64], q: f64) -> f64 {
-    assert!(!xs.is_empty(), "percentile of empty slice");
+    if xs.is_empty() {
+        return f64::NAN;
+    }
     let mut v = xs.to_vec();
     v.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let pos = (q / 100.0) * (v.len() - 1) as f64;
@@ -170,6 +175,13 @@ mod tests {
         assert_eq!(percentile(&xs, 0.0), 1.0);
         assert_eq!(percentile(&xs, 100.0), 5.0);
         assert_eq!(percentile(&xs, 50.0), 3.0);
+    }
+
+    #[test]
+    fn percentile_empty_is_nan_not_panic() {
+        assert!(percentile(&[], 50.0).is_nan());
+        assert!(percentile(&[], 0.0).is_nan());
+        assert!(percentile(&[], 100.0).is_nan());
     }
 
     #[test]

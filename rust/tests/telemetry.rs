@@ -1,0 +1,162 @@
+//! Flight-recorder integration tests: the opt-in parity contract
+//! (telemetry on vs off leaves simulation outcomes bit-identical), span
+//! and decision capture on real scenario runs, JSONL well-formedness,
+//! the decision→event causal link, and histogram properties.
+
+use dvrm::coordinator::{MapperConfig, Metric, SmMapper};
+use dvrm::experiments::Algorithm;
+use dvrm::runtime::Scorer;
+use dvrm::scenario::{run_scenario, suite, ScenarioConfig, ScenarioResult};
+use dvrm::sim::{SimConfig, Simulator};
+use dvrm::telemetry::{self, json, LogHistogram, Phase, Recorder, TelemetryConfig};
+use dvrm::topology::Topology;
+use dvrm::util::rng::Rng;
+use dvrm::util::testkit;
+use dvrm::vm::VmId;
+use dvrm::workload::trace;
+
+fn run_churn(telemetry: Option<TelemetryConfig>) -> ScenarioResult {
+    let spec = suite::named("churn", true).unwrap();
+    let cfg = ScenarioConfig { telemetry, ..ScenarioConfig::new(42) };
+    run_scenario(&spec, Algorithm::SmIpc, &cfg).unwrap()
+}
+
+#[test]
+fn telemetry_on_vs_off_is_bit_identical() {
+    for alg in [Algorithm::Vanilla, Algorithm::SmIpc] {
+        let spec = suite::named("churn", true).unwrap();
+        let off = run_scenario(&spec, alg, &ScenarioConfig::new(42)).unwrap();
+        let cfg = ScenarioConfig {
+            telemetry: Some(TelemetryConfig::default()),
+            ..ScenarioConfig::new(42)
+        };
+        let on = run_scenario(&spec, alg, &cfg).unwrap();
+        assert_eq!(off.metrics, on.metrics, "{alg:?}: recorder changed simulation outcomes");
+        assert_eq!(off.event_log, on.event_log, "{alg:?}: recorder changed the event log");
+        assert!(off.telemetry.is_none());
+        assert!(on.telemetry.is_some(), "{alg:?}: recorder not returned");
+    }
+}
+
+#[test]
+fn recorder_captures_phase_spans_and_registry() {
+    let spec = suite::named("churn", true).unwrap();
+    let rec = run_churn(Some(TelemetryConfig::default())).telemetry.unwrap();
+    assert_eq!(rec.span_hist(Phase::SimStep).count(), spec.horizon, "one sim.step span per tick");
+    let exercised =
+        [Phase::Evaluate, Phase::MapperArrival, Phase::MapperInterval, Phase::ScenarioEvent];
+    for phase in exercised {
+        assert!(rec.span_hist(phase).count() > 0, "{}: no spans recorded", phase.name());
+    }
+    // The whole-tick span contains the evaluation sub-phase.
+    assert!(rec.span_hist(Phase::SimStep).sum() >= rec.span_hist(Phase::Evaluate).sum());
+    assert_eq!(rec.registry().counter("sim.ticks"), Some(spec.horizon as f64));
+    assert!(rec.registry().counter("mapper.arrivals").unwrap_or(0.0) > 0.0);
+    assert!(rec.event_count("pinned") > 0, "placements must surface as pinned events");
+    // Exporters render without panicking and carry the phase names.
+    let prom = rec.prometheus();
+    assert!(prom.contains("dvrm_sim_ticks"));
+    assert!(prom.contains("phase=\"sim.step\""));
+    assert!(rec.breakdown_table().render().contains("sim.step"));
+}
+
+#[test]
+fn jsonl_capture_is_parseable_and_complete() {
+    let spec = suite::named("churn", true).unwrap();
+    let rec = run_churn(Some(TelemetryConfig::default())).telemetry.unwrap();
+    let (mut ticks, mut decisions, mut spans) = (0u64, 0u64, 0u64);
+    for line in rec.jsonl() {
+        let v = json::parse(line).expect("every JSONL line parses");
+        match v.str("type") {
+            Some("tick") => ticks += 1,
+            Some("decision") => decisions += 1,
+            Some("spans") => {
+                spans += 1;
+                let phases = v.get("phases").unwrap().as_arr().unwrap();
+                let step =
+                    phases.iter().find(|p| p.str("phase") == Some("sim.step")).expect("sim.step");
+                assert_eq!(step.num("count"), Some(spec.horizon as f64));
+                assert!(step.num("total_ns").unwrap() > 0.0);
+            }
+            other => panic!("unexpected JSONL line type {other:?}"),
+        }
+    }
+    assert_eq!(ticks, spec.horizon, "sample_every=1 emits one tick line per tick");
+    assert!(decisions > 0, "SM-IPC churn must record mapper decisions");
+    assert_eq!(spans, 1, "exactly one end-of-run spans summary");
+    assert_eq!(decisions as usize, rec.decisions().len(), "nothing evicted at this scale");
+}
+
+#[test]
+fn decisions_link_causally_to_pin_events() {
+    let guard = telemetry::install(Recorder::new(TelemetryConfig::default()));
+    let mut sim = Simulator::new(Topology::paper(), SimConfig::pinned(3));
+    let mut mapper = SmMapper::new(MapperConfig::new(Metric::Ipc), Scorer::Native);
+    let mut rng = Rng::new(3);
+    for a in &trace::paper_mix(&mut rng) {
+        let id = sim.create(a.vm_type, a.app);
+        mapper.place_arrival(&mut sim, id).unwrap();
+        sim.start(id).unwrap();
+    }
+    for _ in 0..10 {
+        sim.step();
+    }
+    mapper.interval(&mut sim).unwrap();
+    let rec = guard.finish().unwrap();
+    let placed: Vec<_> = rec.decisions().iter().filter(|d| d.chosen_node.is_some()).collect();
+    assert!(!placed.is_empty(), "arrivals must record placement decisions");
+    let nodes = sim.topo.num_nodes();
+    for d in placed {
+        assert!(d.candidates > 0, "{d:?}: chosen without candidates");
+        assert!(d.chosen_node.unwrap() < nodes, "{d:?}: anchor out of range");
+        // Causal link: the decision's (tick, vm) key matches the pinned
+        // events the applied placement produced in the simulator trace.
+        let pinned = sim
+            .trace
+            .iter()
+            .any(|(t, e)| *t == d.tick && e.kind() == "pinned" && e.vm() == Some(VmId(d.vm)));
+        assert!(pinned, "{d:?}: no pinned event at its (tick, vm)");
+    }
+}
+
+#[test]
+fn decision_ring_eviction_is_reported() {
+    let cfg = TelemetryConfig { decision_ring: 4, ..TelemetryConfig::default() };
+    let rec = run_churn(Some(cfg)).telemetry.unwrap();
+    assert_eq!(rec.decisions().len(), 4, "ring holds exactly its capacity");
+    assert!(rec.decisions().dropped() > 0, "churn overflows a 4-entry ring");
+    let last = rec.jsonl().last().unwrap();
+    let v = json::parse(last).unwrap();
+    let d = v.get("decisions").unwrap();
+    assert_eq!(d.num("recorded"), Some(4.0));
+    assert!(d.num("dropped").unwrap() > 0.0, "eviction count must be exported");
+}
+
+#[test]
+fn histogram_bucket_sums_and_percentiles_hold() {
+    testkit::propcheck("telemetry-hist", 64, |rng| {
+        let mut h = LogHistogram::new();
+        let n = 1 + rng.below(300);
+        for _ in 0..n {
+            // Wide magnitude range plus degenerate values (zero/negative
+            // land in bucket 0 by contract).
+            let v = match rng.below(10) {
+                0 => 0.0,
+                1 => -rng.f64(),
+                _ => rng.f64() * 10f64.powi(rng.below(13) as i32 - 6),
+            };
+            h.observe(v);
+        }
+        testkit::prop_assert(h.count() == n as u64, format!("count {} != {n}", h.count()))?;
+        testkit::prop_assert(
+            h.buckets().iter().sum::<u64>() == n as u64,
+            "bucket sums must equal observation count",
+        )?;
+        let (p50, p99) = (h.percentile(50.0), h.percentile(99.0));
+        testkit::prop_assert(p50 <= p99, format!("p50 {p50} > p99 {p99}"))?;
+        testkit::prop_assert(
+            p50 >= h.min() && p99 <= h.max(),
+            format!("percentiles [{p50}, {p99}] outside [{}, {}]", h.min(), h.max()),
+        )
+    });
+}
