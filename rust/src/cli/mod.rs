@@ -147,7 +147,7 @@ fn cmd_scenarios(parsed: &Parsed) -> Result<i32> {
         sample_every: parsed.value_u64("sample-every").unwrap_or(1).max(1),
         ..TelemetryConfig::default()
     });
-    let cfg = ScenarioConfig { seed: opts.seed, scorer: opts.scorer, mapper: None, telemetry };
+    let cfg = ScenarioConfig { scorer: opts.scorer, telemetry, ..ScenarioConfig::new(opts.seed) };
     println!(
         "scenario suite {suite_name:?}: {} scenarios x {} algorithms (seed {})",
         specs.len(),

@@ -58,6 +58,14 @@ struct TrackedVm {
     entry: VmEntry,
     /// Dense placement fractions (length = live topology nodes).
     p: Vec<f64>,
+    /// Memory-distance row: `dm[k]` = Σⱼ mⱼ·d(k,j) — the locality term a
+    /// vCPU on node `k` pays under this VM's memory layout.  Computed
+    /// once per row update (the memory layout changes far less often than
+    /// candidates are scored), turning the per-candidate locality sum
+    /// from O(|p|·|m|) into O(|p|) array reads.  Summed in ascending-`j`
+    /// skip-zero order, i.e. bit-identical to the inlined loop it
+    /// replaced.
+    dm: Vec<f64>,
 }
 
 /// Artifact-shaped dense state: the persistent padded problem and the
@@ -133,6 +141,10 @@ pub struct DeltaProblem {
     /// Memory-controller bandwidth per node, GB/s (the dense `bwcap`).
     node_bw: f64,
     tracked: BTreeMap<VmId, TrackedVm>,
+    /// Flat row-major node-distance table (`n_live × n_live`), so the
+    /// per-row `dm` precompute indexes arrays instead of calling back
+    /// into the topology per (k, j) pair.
+    dist: Vec<f64>,
     servers: usize,
     /// Node -> server lookup (congestion-penalty routing).
     server_of: Vec<u32>,
@@ -176,6 +188,15 @@ impl DeltaProblem {
             slots_per_node: (topo.spec.cores_per_node * topo.spec.threads_per_core) as f64,
             node_bw: topo.spec.mem_bw_per_node_gbs,
             tracked: BTreeMap::new(),
+            dist: {
+                let mut d = vec![0.0; n_live * n_live];
+                for k in 0..n_live {
+                    for j in 0..n_live {
+                        d[k * n_live + j] = topo.distance(NodeId(k), NodeId(j));
+                    }
+                }
+                d
+            },
             servers: topo.spec.servers,
             server_of: (0..n_live)
                 .map(|i| topo.server_of_node(NodeId(i)).0 as u32)
@@ -309,7 +330,23 @@ impl DeltaProblem {
             }
             None => true,
         };
-        let tv = TrackedVm { entry, p };
+        // Per-node memory-distance row, ascending-j skip-zero — the same
+        // sum [`Self::contribution`] used to run per candidate.
+        let n = self.n_live;
+        let nz: Vec<(usize, f64)> = entry
+            .mem_fractions
+            .iter()
+            .enumerate()
+            .filter(|(_, mj)| **mj != 0.0)
+            .map(|(j, mj)| (j, *mj))
+            .collect();
+        let dm: Vec<f64> = (0..n)
+            .map(|k| {
+                let row = &self.dist[k * n..(k + 1) * n];
+                nz.iter().map(|&(j, mj)| mj * row[j]).sum()
+            })
+            .collect();
+        let tv = TrackedVm { entry, p, dm };
         self.agg.apply(&tv, 1.0);
         self.tracked.insert(id, tv);
         self.bump_agg_ops();
@@ -405,10 +442,26 @@ impl DeltaProblem {
     /// Differences between two candidates' contributions equal the
     /// differences of the full scorer's totals for the corresponding
     /// whole-system placements (the rest of the system is a constant), so
-    /// the argmin over candidates is the same — at O(|p|·|m|) per
-    /// candidate instead of O(V²·N).
-    pub fn contribution(&self, topo: &Topology, id: VmId, p: &[f64]) -> f64 {
+    /// the argmin over candidates is the same — at O(|p|) per candidate
+    /// (the memory-distance row `dm` is precomputed per row update)
+    /// instead of O(V²·N).
+    pub fn contribution(&self, _topo: &Topology, id: VmId, p: &[f64]) -> f64 {
+        // `_topo` kept for signature stability: distances now come from
+        // the cached per-VM `dm` rows.
+        self.contribution_of(&self.tracked[&id], p)
+    }
+
+    /// [`Self::contribution`] over a batch of candidate rows: the per-VM
+    /// state (row lookup, entry constants, `dm` row) is resolved once and
+    /// streamed against every candidate — the shape the mapper's sparse
+    /// candidate loop scores decisions in.
+    pub fn contribution_batch(&self, id: VmId, cands: &[&[f64]]) -> Vec<f64> {
         let tv = &self.tracked[&id];
+        cands.iter().map(|p| self.contribution_of(tv, p)).collect()
+    }
+
+    /// The per-candidate scoring kernel over one VM's cached arrays.
+    fn contribution_of(&self, tv: &TrackedVm, p: &[f64]) -> f64 {
         let e = &tv.entry;
         let ci = e.profile.class.index();
         let cores = e.vcpus as f64;
@@ -423,14 +476,8 @@ impl DeltaProblem {
             if pk == 0.0 {
                 continue;
             }
-            // Locality: distance from node k to this VM's memory.
-            let mut dm = 0.0;
-            for (j, &mj) in e.mem_fractions.iter().enumerate() {
-                if mj != 0.0 {
-                    dm += mj * topo.distance(NodeId(k), NodeId(j));
-                }
-            }
-            loc += pk * dm;
+            // Locality: cached distance from node k to this VM's memory.
+            loc += pk * tv.dm[k];
 
             // Contention against the *other* VMs' class mass on node k.
             let own = tv.p[k];
@@ -698,6 +745,74 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn cached_dm_rows_and_batch_match_the_inlined_kernel() {
+        // The precomputed memory-distance rows (and the batch entry
+        // point) must reproduce the old per-candidate inlined sum
+        // bit-for-bit: same ascending-j skip-zero order, same values.
+        let mut rng = Rng::new(13);
+        let mut sim = Simulator::new(Topology::paper(), SimConfig::pinned(13));
+        let mut ids = Vec::new();
+        for k in 0..5 {
+            let id = sim.create(VmType::Small, *rng.choose(&App::ALL));
+            let cpus: Vec<CpuId> = (k * 8..k * 8 + 4).map(CpuId).collect();
+            sim.pin_all(id, &cpus).unwrap();
+            sim.place_memory(id, &[(NodeId(rng.below(36)), 1.0)]).unwrap();
+            sim.start(id).unwrap();
+            ids.push(id);
+        }
+        let mut dp = DeltaProblem::new(&sim.topo, Weights::default()).unwrap();
+        dp.sync(&mut sim);
+        let victim = ids[1];
+        let e = &dp.tracked[&victim].entry;
+        let mem = e.mem_fractions.clone();
+        let mut cands: Vec<Vec<f64>> = Vec::new();
+        for _ in 0..8 {
+            let mut p = vec![0.0; 36];
+            for f in rng.simplex(2) {
+                p[rng.below(36)] += f;
+            }
+            cands.push(p);
+        }
+        // Reference: the pre-cache kernel shape for the locality term.
+        let loc_ref = |p: &[f64]| -> f64 {
+            let mut loc = 0.0;
+            for (k, &pk) in p.iter().enumerate() {
+                if pk == 0.0 {
+                    continue;
+                }
+                let mut dm = 0.0;
+                for (j, &mj) in mem.iter().enumerate() {
+                    if mj != 0.0 {
+                        dm += mj * sim.topo.distance(NodeId(k), NodeId(j));
+                    }
+                }
+                loc += pk * dm;
+            }
+            loc
+        };
+        for (k, &d) in dp.tracked[&victim].dm.iter().enumerate() {
+            let mut want = 0.0;
+            for (j, &mj) in mem.iter().enumerate() {
+                if mj != 0.0 {
+                    want += mj * sim.topo.distance(NodeId(k), NodeId(j));
+                }
+            }
+            assert_eq!(d, want, "dm[{k}] diverged from the inlined sum");
+        }
+        let w_loc = Weights::default().locality as f64 * super::sens(&e.profile);
+        let single: Vec<f64> =
+            cands.iter().map(|p| dp.contribution(&sim.topo, victim, p)).collect();
+        let rows: Vec<&[f64]> = cands.iter().map(|p| p.as_slice()).collect();
+        let batch = dp.contribution_batch(victim, &rows);
+        assert_eq!(batch, single, "batch must equal per-candidate calls bitwise");
+        let d_loc_ref = w_loc * (loc_ref(&cands[0]) - loc_ref(&cands[1]));
+        assert!(
+            d_loc_ref.is_finite() && single.iter().all(|s| s.is_finite()),
+            "kernel produces finite scores"
+        );
     }
 
     #[test]

@@ -467,7 +467,7 @@ impl SmMapper {
     /// selection logic is unchanged.
     fn pick_best(
         &mut self,
-        sim: &Simulator,
+        _sim: &Simulator,
         id: VmId,
         cands: &[Assignment],
         keep_current: bool,
@@ -506,30 +506,32 @@ impl SmMapper {
         // (`min_by` keeps the FIRST minimum): on a tie the current
         // placement / earlier candidate wins, so a zero-benefit move is
         // never executed (no ping-pong between symmetric placements).
-        let topo = &sim.topo;
         let w = self.cfg.congestion_weight;
-        // (total score, weighted congestion share) per placement.
-        let score = |p: &[f64]| {
-            let pen = if congestion_aware { w * delta.congestion_penalty(id, p) } else { 0.0 };
-            (delta.contribution(topo, id, p) + pen, pen)
-        };
         let cur = delta
             .current_row(id)
             .ok_or_else(|| anyhow!("no scoring row for {id}"))?;
+        // One batched kernel pass over the whole candidate set (current
+        // row first when kept, so indices line up with the dense path's).
+        let mut rows: Vec<&[f64]> = Vec::with_capacity(cands.len() + keep_current as usize);
+        if keep_current {
+            rows.push(cur);
+        }
+        rows.extend(cands.iter().map(|cand| cand.fractions.as_slice()));
+        if rows.is_empty() {
+            bail!("empty candidate batch");
+        }
+        let contribs = delta.contribution_batch(id, &rows);
         let mut best = 0usize;
-        let (mut best_score, mut best_pen) =
-            if keep_current { score(cur) } else { (f64::INFINITY, 0.0) };
-        let base = keep_current as usize;
-        for (i, cand) in cands.iter().enumerate() {
-            let (s, pen) = score(&cand.fractions);
+        let mut best_score = f64::INFINITY;
+        let mut best_pen = 0.0;
+        for (i, (row, c)) in rows.iter().zip(&contribs).enumerate() {
+            let pen = if congestion_aware { w * delta.congestion_penalty(id, row) } else { 0.0 };
+            let s = c + pen;
             if s < best_score {
-                best = base + i;
+                best = i;
                 best_score = s;
                 best_pen = pen;
             }
-        }
-        if !keep_current && cands.is_empty() {
-            bail!("empty candidate batch");
         }
         self.stats.delta_decisions += 1;
         Ok((best, best_score, best_pen))

@@ -140,8 +140,11 @@ pub fn fabric(o: &ExpOptions) -> Result<Output> {
     for (name, w) in [("SM-IPC blind", 0.0), ("SM-IPC aware", AWARE_WEIGHT)] {
         let mut mcfg = MapperConfig::new(Metric::Ipc);
         mcfg.congestion_weight = w;
-        let cfg =
-            ScenarioConfig { seed: o.seed, scorer: o.scorer, mapper: Some(mcfg), telemetry: None };
+        let cfg = ScenarioConfig {
+            scorer: o.scorer,
+            mapper: Some(mcfg),
+            ..ScenarioConfig::new(o.seed)
+        };
         let r = run_scenario(&spec, Algorithm::SmIpc, &cfg)?;
         let m = &r.metrics;
         t2.row(vec![

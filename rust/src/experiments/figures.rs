@@ -619,23 +619,43 @@ pub fn run_scale_config(
     run_scale_config_fabric(spec, vms, ticks, incremental, false, seed)
 }
 
-/// [`run_scale_config`] with the fabric congestion ledger toggled — the
-/// EXP-FABRIC acceptance point: the feedback-on tick rate at scale must
-/// stay within a few percent of feedback-off.  The vanilla balancer keeps
-/// placements drifting, so first-touch memory is partly remote and the
-/// ledger sees real cross-server flows.
-pub fn run_scale_config_fabric(
+/// Evaluator/engine selection for one timed tick-loop run — the explicit
+/// (env-hook-independent) form, so benchmark baselines never depend on
+/// the caller's `DVRM_TICK_*` environment.
+#[derive(Debug, Clone, Copy)]
+pub struct ScaleTickOpts {
+    /// Dirty-tracked evaluator (`false` = from-scratch O(V²·N) oracle).
+    pub incremental: bool,
+    /// Link-level congestion feedback.
+    pub fabric_feedback: bool,
+    /// Structure-of-arrays hot state ([`crate::sim::SoaEvaluator`]).
+    pub soa: bool,
+    /// Worker threads for the zone-partitioned parallel tick (1 = serial).
+    pub threads: usize,
+}
+
+impl Default for ScaleTickOpts {
+    fn default() -> Self {
+        Self { incremental: true, fabric_feedback: false, soa: false, threads: 1 }
+    }
+}
+
+/// [`run_scale_config`] with every engine knob explicit — the SoA and
+/// parallel-tick measurement points of the `scale` experiment and
+/// `bench_hotpath`.
+pub fn run_scale_config_opts(
     spec: TopologySpec,
     vms: usize,
     ticks: u64,
-    incremental: bool,
-    fabric_feedback: bool,
+    opts: ScaleTickOpts,
     seed: u64,
 ) -> Result<f64> {
     let topo = Topology::build(spec);
     let mut cfg = SimConfig::vanilla(seed);
-    cfg.incremental = incremental;
-    cfg.fabric.feedback = fabric_feedback;
+    cfg.incremental = opts.incremental;
+    cfg.fabric.feedback = opts.fabric_feedback;
+    cfg.soa = opts.soa;
+    cfg.threads = opts.threads;
     // Coarse chunks: page bookkeeping for thousands of VMs without
     // gigabytes of chunk tables (first-touch never migrates here anyway).
     cfg.mem.chunk_mb = 512;
@@ -653,6 +673,23 @@ pub fn run_scale_config_fabric(
         sim.step();
     }
     Ok(ticks as f64 / t0.elapsed().as_secs_f64().max(1e-9))
+}
+
+/// [`run_scale_config`] with the fabric congestion ledger toggled — the
+/// EXP-FABRIC acceptance point: the feedback-on tick rate at scale must
+/// stay within a few percent of feedback-off.  The vanilla balancer keeps
+/// placements drifting, so first-touch memory is partly remote and the
+/// ledger sees real cross-server flows.
+pub fn run_scale_config_fabric(
+    spec: TopologySpec,
+    vms: usize,
+    ticks: u64,
+    incremental: bool,
+    fabric_feedback: bool,
+    seed: u64,
+) -> Result<f64> {
+    let opts = ScaleTickOpts { incremental, fabric_feedback, ..ScaleTickOpts::default() };
+    run_scale_config_opts(spec, vms, ticks, opts, seed)
 }
 
 /// [`run_scale_config_fabric`] with a default flight recorder installed
@@ -687,6 +724,26 @@ pub fn run_scale_mapper_config(
     passes: u64,
     seed: u64,
 ) -> Result<(f64, f64)> {
+    let (arr, ints) = run_scale_mapper_repeats(spec, vms, passes, 1, seed)?;
+    Ok((arr, ints[0]))
+}
+
+/// [`run_scale_mapper_config`] with the monitoring phase repeated
+/// `repeats` times **over one simulator** — the persistent state
+/// (incrementally maintained [`crate::coordinator::SlotMap`], delta
+/// problem, evaluator caches) carries across repeats instead of being
+/// torn down and rebuilt per sample.  On a 100-server topology a
+/// per-repeat rebuild used to pay the whole admit-and-register cost —
+/// O(V·vcpus) slot occupies plus every evaluator row — per sample, which
+/// both distorted the measurement and dominated bench wall-clock.
+/// Returns `(arrivals/sec, intervals/sec per repeat)`.
+pub fn run_scale_mapper_repeats(
+    spec: TopologySpec,
+    vms: usize,
+    passes: u64,
+    repeats: usize,
+    seed: u64,
+) -> Result<(f64, Vec<f64>)> {
     use crate::coordinator::SmMapper;
     use crate::runtime::Scorer;
 
@@ -711,13 +768,16 @@ pub fn run_scale_mapper_config(
     }
     let arrivals_per_sec = placed as f64 / t0.elapsed().as_secs_f64().max(1e-9);
     sim.step(); // warmup: registers every VM with the evaluator
-    let t1 = std::time::Instant::now();
-    for _ in 0..passes {
-        sim.step();
-        mapper.interval(&mut sim)?;
+    let mut intervals = Vec::with_capacity(repeats);
+    for _ in 0..repeats.max(1) {
+        let t1 = std::time::Instant::now();
+        for _ in 0..passes {
+            sim.step();
+            mapper.interval(&mut sim)?;
+        }
+        intervals.push(passes as f64 / t1.elapsed().as_secs_f64().max(1e-9));
     }
-    let intervals_per_sec = passes as f64 / t1.elapsed().as_secs_f64().max(1e-9);
-    Ok((arrivals_per_sec, intervals_per_sec))
+    Ok((arrivals_per_sec, intervals))
 }
 
 /// EXP-SCALE: simulator tick throughput as the system grows toward the
@@ -732,13 +792,32 @@ pub fn scale(o: &ExpOptions) -> Result<Output> {
         &[(6, (3, 2), 100), (24, (6, 4), 500), (48, (8, 6), 1500), (100, (10, 10), 5000)]
     };
     const FULL_EVAL_MAX_VMS: usize = 1500;
-    let mut t = Table::new("EXP-SCALE: simulator ticks/sec, incremental vs full recompute")
-        .header(&["servers", "nodes", "vms", "incremental t/s", "full t/s", "speedup"]);
+    // The parallel column's pool width: modest and fixed, so the table is
+    // comparable across machines (per-seed *results* are bit-identical at
+    // any width; only the tick rate moves).
+    const PAR_THREADS: usize = 4;
+    let par_hdr = format!("soa+par({PAR_THREADS}) t/s");
+    let mut t = Table::new("EXP-SCALE: simulator ticks/sec, map vs SoA vs parallel vs full")
+        .header(&[
+            "servers",
+            "nodes",
+            "vms",
+            "incremental t/s",
+            "soa t/s",
+            par_hdr.as_str(),
+            "par/inc",
+            "full t/s",
+            "inc/full",
+        ]);
     for &(servers, torus, vms) in sweep {
         let spec = scale_spec(servers, torus);
         let nodes = spec.num_nodes();
         let inc_ticks = (if vms >= 2000 { o.ticks.min(15) } else { o.ticks }).max(3);
         let inc = run_scale_config(spec.clone(), vms, inc_ticks, true, o.seed)?;
+        let soa_opts = ScaleTickOpts { soa: true, ..ScaleTickOpts::default() };
+        let soa = run_scale_config_opts(spec.clone(), vms, inc_ticks, soa_opts, o.seed)?;
+        let par_opts = ScaleTickOpts { soa: true, threads: PAR_THREADS, ..soa_opts };
+        let par = run_scale_config_opts(spec.clone(), vms, inc_ticks, par_opts, o.seed)?;
         let (full_col, speedup_col) = if vms <= FULL_EVAL_MAX_VMS {
             let full = run_scale_config(spec, vms, full_eval_ticks(vms), false, o.seed)?;
             (format!("{full:.2}"), format!("{:.1}x", inc / full.max(1e-12)))
@@ -750,6 +829,9 @@ pub fn scale(o: &ExpOptions) -> Result<Output> {
             nodes.to_string(),
             vms.to_string(),
             format!("{inc:.1}"),
+            format!("{soa:.1}"),
+            format!("{par:.1}"),
+            format!("{:.1}x", par / inc.max(1e-12)),
             full_col,
             speedup_col,
         ]);

@@ -98,9 +98,28 @@ impl LinkLedger {
     /// Congestion factor per link (allocates; the per-tick evaluators
     /// keep their own scratch instead).
     pub fn phi_all(&self, graph: &FabricGraph) -> Vec<f64> {
-        (0..self.demand.len())
-            .map(|l| congestion_factor(self.utilization(graph, LinkId(l))))
-            .collect()
+        let mut out = vec![1.0; self.demand.len()];
+        self.phi_into(graph, &mut out);
+        out
+    }
+
+    /// [`Self::phi_all`] into caller-owned scratch — the no-allocation
+    /// form the per-tick evaluators use.
+    pub fn phi_into(&self, graph: &FabricGraph, out: &mut [f64]) {
+        assert_eq!(out.len(), self.demand.len(), "phi scratch sized to the link count");
+        for (l, o) in out.iter_mut().enumerate() {
+            *o = congestion_factor(self.utilization(graph, LinkId(l)));
+        }
+    }
+
+    /// Fold another ledger's charges into this one — the deterministic
+    /// reduction step for per-zone partial ledgers (always merge in fixed
+    /// zone order: float addition is not associative).
+    pub fn merge_from(&mut self, other: &LinkLedger) {
+        assert_eq!(other.demand.len(), self.demand.len(), "merging ledgers over one graph");
+        for (d, o) in self.demand.iter_mut().zip(other.demand.iter()) {
+            *d += o;
+        }
     }
 }
 
@@ -159,6 +178,41 @@ mod tests {
         let phis = ledger.phi_all(&g);
         assert!(phis[l.0] > 1.0);
         assert!(phis.iter().all(|p| *p >= 1.0 && p.is_finite()));
+    }
+
+    #[test]
+    fn zone_partial_ledgers_merge_to_the_serial_charge() {
+        let g = FabricGraph::build(&TopologySpec::paper());
+        // Serial: every ordered pair charged once.
+        let mut serial = LinkLedger::new(g.num_links());
+        for a in 0..6 {
+            for b in 0..6 {
+                if a != b {
+                    serial.charge_route(g.route(ServerId(a), ServerId(b)), 0.25 * (a + 1) as f64);
+                }
+            }
+        }
+        // Zoned: source servers split into two bands, merged in zone order.
+        let mut merged = LinkLedger::new(g.num_links());
+        for band in [0..3, 3..6] {
+            let mut partial = LinkLedger::new(g.num_links());
+            for a in band {
+                for b in 0..6 {
+                    if a != b {
+                        partial
+                            .charge_route(g.route(ServerId(a), ServerId(b)), 0.25 * (a + 1) as f64);
+                    }
+                }
+            }
+            merged.merge_from(&partial);
+        }
+        for l in 0..g.num_links() {
+            assert_eq!(merged.demand(LinkId(l)), serial.demand(LinkId(l)));
+        }
+        // phi_into matches phi_all on the same graph.
+        let mut scratch = vec![0.0; g.num_links()];
+        merged.phi_into(&g, &mut scratch);
+        assert_eq!(scratch, merged.phi_all(&g));
     }
 
     #[test]

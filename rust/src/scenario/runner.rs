@@ -46,11 +46,28 @@ pub struct ScenarioConfig {
     /// run and returned in [`ScenarioResult::telemetry`].  Never affects
     /// simulation outcomes (the recorder only observes).
     pub telemetry: Option<TelemetryConfig>,
+    /// Explicit tick-engine override: force the structure-of-arrays
+    /// evaluator on/off regardless of the `DVRM_TICK_SOA` env hook.
+    /// `None` keeps the [`SimConfig`] default.  Outcomes are identical
+    /// either way (the engines are bit-identical); this exists so the
+    /// determinism tests can pin the engine without process-global env
+    /// writes (tests run concurrently).
+    pub tick_soa: Option<bool>,
+    /// Explicit worker-thread override for the zone-partitioned parallel
+    /// tick (see [`SimConfig::threads`]); `None` keeps the default.
+    pub tick_threads: Option<usize>,
 }
 
 impl ScenarioConfig {
     pub fn new(seed: u64) -> Self {
-        Self { seed, scorer: ScorerChoice::Native, mapper: None, telemetry: None }
+        Self {
+            seed,
+            scorer: ScorerChoice::Native,
+            mapper: None,
+            telemetry: None,
+            tick_soa: None,
+            tick_threads: None,
+        }
     }
 }
 
@@ -234,6 +251,12 @@ pub fn run_scenario(
     // Legacy scenarios keep feedback off (bit-identical to pre-fabric
     // runs); link-failure scenarios turn the congestion ledger on.
     sim_cfg.fabric.feedback = spec.fabric_feedback;
+    if let Some(soa) = cfg.tick_soa {
+        sim_cfg.soa = soa;
+    }
+    if let Some(threads) = cfg.tick_threads {
+        sim_cfg.threads = threads;
+    }
     let mut sim = Simulator::new(Topology::paper(), sim_cfg);
     let mut mapper = alg.metric().map(|metric| {
         let mcfg = cfg.mapper.clone().unwrap_or_else(|| MapperConfig::new(metric));

@@ -217,7 +217,7 @@ pub fn render_table(results: &[ScenarioResult]) -> Table {
 /// The `scenarios` experiment (`dvrm experiment scenarios`).
 pub fn experiment(o: &ExpOptions) -> Result<Output> {
     let specs = if o.fast { smoke_suite() } else { full_suite() };
-    let cfg = ScenarioConfig { seed: o.seed, scorer: o.scorer, mapper: None, telemetry: None };
+    let cfg = ScenarioConfig { scorer: o.scorer, ..ScenarioConfig::new(o.seed) };
     let results = run_suite(&specs, &cfg)?;
     let t = render_table(&results);
     Ok(Output { text: t.render(), tables: vec![("scenarios".into(), t)] })

@@ -14,11 +14,13 @@ pub mod events;
 pub mod incremental;
 pub mod linux_sched;
 pub mod perf_model;
+pub mod soa;
 
 pub use counters::{CounterHistory, Factors, PerfSample};
 pub use events::{Event, EventTrace};
 pub use incremental::{IncrementalEvaluator, TickInput};
 pub use perf_model::{ModelOut, ModelParams, VmView};
+pub use soa::SoaEvaluator;
 
 use std::collections::{BTreeMap, BTreeSet};
 
@@ -29,7 +31,8 @@ use crate::fabric::{FabricGraph, FabricParams, LinkId};
 use crate::mem::{
     autonuma, MemConfig, MemPolicy, MigrationEngine, MigrationId, MigrationJob, PageMap,
 };
-use crate::topology::{CpuId, NodeId, ServerId, Topology};
+use crate::topology::{CpuId, NodeId, ServerId, Topology, ZoneMap};
+use crate::util::pool::ThreadPool;
 use crate::util::rng::Rng;
 use crate::vm::{Vm, VmId, VmState, VmType};
 use crate::workload::loadgen::LoadGen;
@@ -68,6 +71,19 @@ pub struct SimConfig {
     /// the oracle for the equivalence property tests and as the baseline
     /// the `scale` experiment measures against.
     pub incremental: bool,
+    /// Store the dirty-tracked state in the structure-of-arrays evaluator
+    /// ([`SoaEvaluator`]) instead of the map-keyed one.  Same model, same
+    /// bits (oracle- and bitwise-tested); only the memory layout — and
+    /// therefore the tick rate at scale — changes.  Implied by
+    /// `threads > 1`.  Env hook: `DVRM_TICK_SOA=1` (read by the
+    /// [`Self::vanilla`]-family constructors).
+    pub soa: bool,
+    /// Worker threads for the zone-partitioned parallel tick (1 =
+    /// serial).  Forces `soa` on.  Per-seed output is bit-identical at
+    /// any thread count: parallel work is pure (row builds, pass-2
+    /// evaluation) and every accumulator mutation stays serial in a
+    /// fixed order.  Env hook: `DVRM_TICK_THREADS=N`.
+    pub threads: usize,
 }
 
 impl SimConfig {
@@ -82,6 +98,14 @@ impl SimConfig {
             mem: MemConfig::default(),
             fabric: FabricParams::default(),
             incremental: true,
+            // Env hooks so harnesses (CI's parallel-smoke leg, the
+            // scenario runner) can flip the tick engine without touching
+            // every construction site.  Both default off/serial.
+            soa: std::env::var("DVRM_TICK_SOA").map(|v| v == "1").unwrap_or(false),
+            threads: std::env::var("DVRM_TICK_THREADS")
+                .ok()
+                .and_then(|v| v.parse().ok())
+                .unwrap_or(1),
         }
     }
 
@@ -139,6 +163,45 @@ impl ManagedVm {
     }
 }
 
+/// The dirty-tracked evaluator behind the tick: the map-keyed
+/// incremental implementation (default) or its structure-of-arrays twin
+/// (`cfg.soa` / `cfg.threads`).  Both are bit-identical; the enum keeps
+/// the non-step call sites (destroy, fabric events) engine-agnostic.
+enum Eval {
+    Map(IncrementalEvaluator),
+    Soa(SoaEvaluator),
+}
+
+impl Eval {
+    fn remove(&mut self, id: VmId) {
+        match self {
+            Eval::Map(e) => e.remove(id),
+            Eval::Soa(e) => e.remove(id),
+        }
+    }
+
+    fn set_fabric_scale(&mut self, scale: f64) {
+        match self {
+            Eval::Map(e) => e.set_fabric_scale(scale),
+            Eval::Soa(e) => e.set_fabric_scale(scale),
+        }
+    }
+
+    fn set_graph(&mut self, graph: &FabricGraph) {
+        match self {
+            Eval::Map(e) => e.set_graph(graph),
+            Eval::Soa(e) => e.set_graph(graph),
+        }
+    }
+
+    fn link_demand_snapshot(&self) -> Vec<f64> {
+        match self {
+            Eval::Map(e) => e.link_demand_snapshot(),
+            Eval::Soa(e) => e.link_demand_snapshot(),
+        }
+    }
+}
+
 /// The host simulator.
 pub struct Simulator {
     pub topo: Topology,
@@ -169,7 +232,13 @@ pub struct Simulator {
     /// the removal.
     coord_dirty: BTreeSet<VmId>,
     /// Dirty-tracked joint performance model.
-    inc: IncrementalEvaluator,
+    inc: Eval,
+    /// Worker pool for the SoA parallel tick (`cfg.threads > 1`);
+    /// `None` = serial.  Dedicated — never [`crate::util::pool::global`]
+    /// (its workers may themselves be running this simulator).
+    pool: Option<ThreadPool>,
+    /// Zone partition of the server torus for batched pass-2 evaluation.
+    zones: ZoneMap,
     /// Drained servers (scenario engine): unschedulable and blocked for
     /// candidate generation until recovered.
     offline: BTreeSet<usize>,
@@ -191,15 +260,30 @@ pub struct Simulator {
 }
 
 impl Simulator {
-    pub fn new(topo: Topology, cfg: SimConfig) -> Self {
+    pub fn new(topo: Topology, mut cfg: SimConfig) -> Self {
+        if cfg.threads > 1 {
+            cfg.soa = true; // the parallel tick runs on the SoA engine
+        }
         let sched = LinuxScheduler::new(&topo, cfg.vanilla.clone());
         let rng = Rng::new(cfg.seed);
         let slot_map = SlotMap::empty(&topo);
-        let inc = if cfg.fabric.feedback {
-            IncrementalEvaluator::with_fabric(&topo)
+        let inc = if cfg.soa {
+            Eval::Soa(if cfg.fabric.feedback {
+                SoaEvaluator::with_fabric(&topo)
+            } else {
+                SoaEvaluator::new(&topo)
+            })
         } else {
-            IncrementalEvaluator::new(&topo)
+            Eval::Map(if cfg.fabric.feedback {
+                IncrementalEvaluator::with_fabric(&topo)
+            } else {
+                IncrementalEvaluator::new(&topo)
+            })
         };
+        let pool = (cfg.threads > 1).then(|| ThreadPool::new(cfg.threads));
+        // A couple of zones per worker keeps the job granularity fine
+        // enough to absorb imbalance without drowning in dispatch.
+        let zones = ZoneMap::new(topo.spec.servers, cfg.threads.max(1) * 2);
         let fabric = topo.fabric().clone();
         let num_links = fabric.num_links();
         Self {
@@ -217,6 +301,8 @@ impl Simulator {
             dirty: BTreeSet::new(),
             coord_dirty: BTreeSet::new(),
             inc,
+            pool,
+            zones,
             offline: BTreeSet::new(),
             fabric_health: 1.0,
             fabric,
@@ -900,27 +986,6 @@ impl Simulator {
         let outs = if self.cfg.incremental {
             // Re-cache only what changed since the last tick.
             let dirty = std::mem::take(&mut self.dirty);
-            for id in dirty {
-                match self.vms.get(&id) {
-                    Some(mvm) if mvm.vm.state == VmState::Running => {
-                        let p = mvm.placement_fractions(&self.topo);
-                        // Access-weighted page distribution: a partially
-                        // migrated VM whose hot set already arrived
-                        // performs accordingly.
-                        let m = mvm.pages.heat_fractions(self.topo.num_nodes());
-                        self.inc.set_placement(
-                            &self.topo,
-                            id,
-                            &p,
-                            &m,
-                            mvm.vm.vcpus(),
-                            mvm.profile.clone(),
-                        );
-                    }
-                    Some(_) => {}
-                    None => self.inc.remove(id),
-                }
-            }
             let inputs: Vec<(VmId, TickInput)> = running
                 .iter()
                 .map(|id| {
@@ -935,12 +1000,75 @@ impl Simulator {
                     )
                 })
                 .collect();
-            let outs = if self.cfg.fabric.feedback {
-                self.inc.evaluate_with_fabric(&params, &inputs, Some(&self.mig_link_gbs))
-            } else {
-                self.inc.evaluate(&params, &inputs)
+            let feedback = self.cfg.fabric.feedback;
+            let outs = match &mut self.inc {
+                Eval::Map(inc) => {
+                    for id in dirty {
+                        match self.vms.get(&id) {
+                            Some(mvm) if mvm.vm.state == VmState::Running => {
+                                let p = mvm.placement_fractions(&self.topo);
+                                // Access-weighted page distribution: a
+                                // partially migrated VM whose hot set
+                                // already arrived performs accordingly.
+                                let m = mvm.pages.heat_fractions(self.topo.num_nodes());
+                                inc.set_placement(
+                                    &self.topo,
+                                    id,
+                                    &p,
+                                    &m,
+                                    mvm.vm.vcpus(),
+                                    mvm.profile.clone(),
+                                );
+                            }
+                            Some(_) => {}
+                            None => inc.remove(id),
+                        }
+                    }
+                    if feedback {
+                        inc.evaluate_with_fabric(&params, &inputs, Some(&self.mig_link_gbs))
+                    } else {
+                        inc.evaluate(&params, &inputs)
+                    }
+                }
+                Eval::Soa(soa) => {
+                    // Same re-cache, split pure/serial: row derivation is
+                    // per-VM independent and fans out over the pool; the
+                    // accumulator applies stay serial in dirty (BTreeSet =
+                    // VmId) order, matching the map path bit-for-bit.
+                    let dirty: Vec<VmId> = dirty.into_iter().collect();
+                    let vms = &self.vms;
+                    let topo = &self.topo;
+                    let rows =
+                        soa::build_rows_batch(soa, topo, &dirty, self.pool.as_ref(), |id| {
+                            vms.get(&id).and_then(|mvm| {
+                                (mvm.vm.state == VmState::Running).then(|| {
+                                    (
+                                        mvm.placement_fractions(topo),
+                                        mvm.pages.heat_fractions(topo.num_nodes()),
+                                        mvm.vm.vcpus(),
+                                        mvm.profile.clone(),
+                                    )
+                                })
+                            })
+                        });
+                    for (id, row) in dirty.iter().zip(rows) {
+                        match row {
+                            Some(row) => soa.apply_row(*id, row),
+                            None if vms.get(id).is_none() => soa.remove(*id),
+                            None => {} // defined/stopped: keep cached state
+                        }
+                    }
+                    let mig = feedback.then_some(self.mig_link_gbs.as_slice());
+                    soa.evaluate_parallel(
+                        &params,
+                        &inputs,
+                        mig,
+                        self.pool.as_ref(),
+                        Some(&self.zones),
+                    )
+                }
             };
-            if self.cfg.fabric.feedback {
+            if feedback {
                 // Next tick's migrations see what this tick's workload
                 // left of each link.
                 self.workload_link_gbs = self.inc.link_demand_snapshot();

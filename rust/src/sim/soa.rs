@@ -1,0 +1,1004 @@
+//! Structure-of-arrays twin of [`super::incremental::IncrementalEvaluator`],
+//! plus the zone-partitioned parallel tick built on it.
+//!
+//! The incremental evaluator keys its per-VM caches by
+//! `BTreeMap<VmId, VmCache>`: every dirty re-registration and every
+//! per-VM evaluation chases tree nodes, and the array-of-structs cache
+//! line-mixes hot scalars (distances, demand coefficients) with cold
+//! sparse vectors.  [`SoaEvaluator`] stores the identical state in flat
+//! parallel arrays indexed by a dense slot from
+//! [`crate::util::ids::DenseIdMap`] (free-list reuse on destroy keeps the
+//! arrays compact under churn, and a recycled slot inherits its sparse
+//! vectors' heap capacity).
+//!
+//! **Bit-compatibility contract.**  Float addition is commutative but not
+//! associative, so every accumulator mutation happens in exactly the
+//! order the map-keyed evaluator performs it: dirty updates subtract the
+//! stale row and add the fresh one per VM in the caller's order, drift
+//! rebuilds walk live slots *sorted by VmId* (= `BTreeMap` order), and
+//! per-tick utilization deltas fold in input order.  The parallel paths
+//! never touch accumulators concurrently:
+//!
+//! * **row build** (the O(|p|·|m| + routes) derivation of a dirty VM's
+//!   cached scalars) is pure — it fans out over the pool and the results
+//!   are applied serially in the caller's order;
+//! * **per-VM evaluation** (pass 2) only *reads* the frozen accumulators
+//!   and writes each VM's [`ModelOut`] to its input index — inputs are
+//!   batched by torus zone ([`ZoneMap`], contiguous server-id bands) for
+//!   accumulator locality, and the scatter order is fixed by index.
+//!
+//! Hence per-seed output is bit-identical at any pool size, and matches
+//! the serial incremental path to the last bit (oracle-tested below and
+//! at the simulator level in `tests/parallel.rs`).
+
+use std::collections::BTreeMap;
+
+use crate::fabric::{congestion_factor, rho, FabricGraph};
+use crate::topology::{NodeId, Topology, ZoneMap};
+use crate::util::ids::DenseIdMap;
+use crate::util::pool::ThreadPool;
+use crate::vm::VmId;
+use crate::workload::{pair_penalty, AnimalClass, AppProfile};
+
+use super::counters::Factors;
+use super::incremental::TickInput;
+use super::perf_model::{ModelOut, ModelParams};
+
+/// Rebuild cadence — matches the incremental evaluator's drift bound.
+const REBUILD_EVERY: u32 = 1024;
+
+/// Fan the dirty row build out over the pool only past this count: below
+/// it the submit/latency overhead beats the O(|p|·|m|) work saved.
+/// Purely a scheduling choice — results are bit-identical either way.
+const PAR_BUILD_MIN: usize = 64;
+
+/// Same threshold for pass-2 per-VM evaluation.
+const PAR_EVAL_MIN: usize = 256;
+
+/// Everything [`SoaEvaluator`] caches for one VM, in row form — built
+/// off-thread ([`SoaEvaluator::build_row`] is pure), applied in order.
+#[derive(Debug, Clone)]
+pub struct VmRow {
+    p: Vec<(u32, f64)>,
+    m: Vec<(u32, f64)>,
+    vcpus: f64,
+    class_idx: u8,
+    pen: [f64; 3],
+    press_per_p: f64,
+    demand_static: f64,
+    remote_frac: f64,
+    avg_dist: f64,
+    p_total: f64,
+    local_dist_num: f64,
+    flows: Vec<(u32, f64, f64)>,
+    link_coeff: Vec<(u32, f64)>,
+    sensitive: bool,
+    mem_stall_frac: f64,
+    cache_sens: f64,
+    bw_bound_frac: f64,
+    base_rate: f64,
+    base_ipc: f64,
+    base_mpi: f64,
+}
+
+/// Per-VM state as parallel arrays indexed by dense slot.
+#[derive(Debug, Clone, Default)]
+struct Rows {
+    ids: DenseIdMap,
+    live: Vec<bool>,
+    p: Vec<Vec<(u32, f64)>>,
+    m: Vec<Vec<(u32, f64)>>,
+    vcpus: Vec<f64>,
+    class_idx: Vec<u8>,
+    pen: Vec<[f64; 3]>,
+    press_per_p: Vec<f64>,
+    demand_static: Vec<f64>,
+    util: Vec<f64>,
+    remote_frac: Vec<f64>,
+    avg_dist: Vec<f64>,
+    p_total: Vec<f64>,
+    local_dist_num: Vec<f64>,
+    flows: Vec<Vec<(u32, f64, f64)>>,
+    link_coeff: Vec<Vec<(u32, f64)>>,
+    sensitive: Vec<bool>,
+    mem_stall_frac: Vec<f64>,
+    cache_sens: Vec<f64>,
+    bw_bound_frac: Vec<f64>,
+    base_rate: Vec<f64>,
+    base_ipc: Vec<f64>,
+    base_mpi: Vec<f64>,
+}
+
+impl Rows {
+    /// Grow every array to cover `slot`.
+    fn ensure(&mut self, slot: usize) {
+        let n = slot + 1;
+        if self.live.len() >= n {
+            return;
+        }
+        self.live.resize(n, false);
+        self.p.resize_with(n, Vec::new);
+        self.m.resize_with(n, Vec::new);
+        self.vcpus.resize(n, 0.0);
+        self.class_idx.resize(n, 0);
+        self.pen.resize(n, [0.0; 3]);
+        self.press_per_p.resize(n, 0.0);
+        self.demand_static.resize(n, 0.0);
+        self.util.resize(n, 0.0);
+        self.remote_frac.resize(n, 0.0);
+        self.avg_dist.resize(n, 10.0);
+        self.p_total.resize(n, 0.0);
+        self.local_dist_num.resize(n, 0.0);
+        self.flows.resize_with(n, Vec::new);
+        self.link_coeff.resize_with(n, Vec::new);
+        self.sensitive.resize(n, false);
+        self.mem_stall_frac.resize(n, 0.0);
+        self.cache_sens.resize(n, 0.0);
+        self.bw_bound_frac.resize(n, 0.0);
+        self.base_rate.resize(n, 0.0);
+        self.base_ipc.resize(n, 0.0);
+        self.base_mpi.resize(n, 0.0);
+    }
+
+    /// Store `row` into `slot` (reusing the slot's heap capacity where
+    /// the new sparse vectors fit).
+    fn store(&mut self, slot: usize, row: VmRow) {
+        self.p[slot] = row.p;
+        self.m[slot] = row.m;
+        self.vcpus[slot] = row.vcpus;
+        self.class_idx[slot] = row.class_idx;
+        self.pen[slot] = row.pen;
+        self.press_per_p[slot] = row.press_per_p;
+        self.demand_static[slot] = row.demand_static;
+        self.remote_frac[slot] = row.remote_frac;
+        self.avg_dist[slot] = row.avg_dist;
+        self.p_total[slot] = row.p_total;
+        self.local_dist_num[slot] = row.local_dist_num;
+        self.flows[slot] = row.flows;
+        self.link_coeff[slot] = row.link_coeff;
+        self.sensitive[slot] = row.sensitive;
+        self.mem_stall_frac[slot] = row.mem_stall_frac;
+        self.cache_sens[slot] = row.cache_sens;
+        self.bw_bound_frac[slot] = row.bw_bound_frac;
+        self.base_rate[slot] = row.base_rate;
+        self.base_ipc[slot] = row.base_ipc;
+        self.base_mpi[slot] = row.base_mpi;
+        self.live[slot] = true;
+    }
+}
+
+/// The shared model accumulators (identical semantics to the incremental
+/// evaluator's), split out so `apply` can borrow rows and accumulators
+/// disjointly.
+#[derive(Debug, Clone)]
+struct Accum {
+    press: Vec<f64>,
+    class_p: Vec<[f64; 3]>,
+    mem_demand: Vec<f64>,
+    fabric_demand: f64,
+    link_demand: Vec<f64>,
+}
+
+impl Accum {
+    /// Add (`sign = 1`) or subtract (`-1`) slot `s`'s contribution, in
+    /// the exact per-field order of the incremental evaluator's `apply`.
+    fn apply(&mut self, rows: &Rows, s: usize, sign: f64) {
+        let press_per_p = rows.press_per_p[s];
+        let ci = rows.class_idx[s] as usize;
+        for &(i, pi) in &rows.p[s] {
+            self.press[i as usize] += sign * pi * press_per_p;
+            self.class_p[i as usize][ci] += sign * pi;
+        }
+        let demand = rows.demand_static[s] * rows.util[s];
+        for &(j, mj) in &rows.m[s] {
+            self.mem_demand[j as usize] += sign * demand * mj;
+        }
+        self.fabric_demand += sign * demand * rows.remote_frac[s];
+        for &(l, w) in &rows.link_coeff[s] {
+            self.link_demand[l as usize] += sign * demand * w;
+        }
+    }
+}
+
+/// SoA implementation of the dirty-tracked performance model, with
+/// optional zone-parallel evaluation.  Drop-in for
+/// [`super::incremental::IncrementalEvaluator`] — same API, same bits.
+#[derive(Debug, Clone)]
+pub struct SoaEvaluator {
+    l3_mb: f64,
+    node_bw: f64,
+    num_servers: usize,
+    server_of: Vec<u32>,
+    rows: Rows,
+    accum: Accum,
+    mem_sat: Vec<f64>,
+    graph: Option<FabricGraph>,
+    phi: Vec<f64>,
+    evals_since_rebuild: u32,
+}
+
+impl SoaEvaluator {
+    pub fn new(topo: &Topology) -> Self {
+        Self::build(topo, false)
+    }
+
+    /// Evaluator with link-level congestion feedback (see
+    /// `IncrementalEvaluator::with_fabric`).
+    pub fn with_fabric(topo: &Topology) -> Self {
+        Self::build(topo, true)
+    }
+
+    fn build(topo: &Topology, fabric: bool) -> Self {
+        let n = topo.num_nodes();
+        let server_of: Vec<u32> =
+            (0..n).map(|i| topo.server_of_node(NodeId(i)).0 as u32).collect();
+        let graph = if fabric { Some(topo.fabric().clone()) } else { None };
+        let num_links = graph.as_ref().map_or(0, |g| g.num_links());
+        Self {
+            l3_mb: topo.spec.l3_per_node_mb,
+            node_bw: topo.spec.mem_bw_per_node_gbs,
+            num_servers: topo.spec.servers,
+            server_of,
+            rows: Rows::default(),
+            accum: Accum {
+                press: vec![0.0; n],
+                class_p: vec![[0.0; 3]; n],
+                mem_demand: vec![0.0; n],
+                fabric_demand: 0.0,
+                link_demand: vec![0.0; num_links],
+            },
+            mem_sat: vec![1.0; n],
+            graph,
+            phi: vec![1.0; num_links],
+            evals_since_rebuild: 0,
+        }
+    }
+
+    /// Adopt a re-routed graph after a link event; the caller must mark
+    /// every running VM dirty (see `IncrementalEvaluator::set_graph`).
+    pub fn set_graph(&mut self, graph: &FabricGraph) {
+        if self.graph.is_none() {
+            return;
+        }
+        self.graph = Some(graph.clone());
+        self.accum.link_demand = vec![0.0; graph.num_links()];
+        self.phi = vec![1.0; graph.num_links()];
+        for s in 0..self.rows.live.len() {
+            self.rows.flows[s].clear();
+            self.rows.link_coeff[s].clear();
+        }
+    }
+
+    /// Mirror a uniform fabric degradation into the cloned graph.
+    pub fn set_fabric_scale(&mut self, scale: f64) {
+        if let Some(g) = &mut self.graph {
+            g.set_uniform_scale(scale);
+        }
+    }
+
+    /// Current workload demand per fabric link.
+    pub fn link_demand_snapshot(&self) -> Vec<f64> {
+        self.accum.link_demand.clone()
+    }
+
+    /// Number of VMs currently registered.
+    pub fn num_tracked(&self) -> usize {
+        self.rows.ids.len()
+    }
+
+    /// Derive one VM's cached row from its dense placement and memory
+    /// fractions.  Pure (reads only the topology tables and the route
+    /// graph), so the simulator fans it out over the pool for the dirty
+    /// set; apply with [`Self::apply_row`] in the caller's order.
+    pub fn build_row(
+        &self,
+        topo: &Topology,
+        p: &[f64],
+        m: &[f64],
+        vcpus: usize,
+        profile: &AppProfile,
+    ) -> VmRow {
+        let sp: Vec<(u32, f64)> = p
+            .iter()
+            .enumerate()
+            .filter(|(_, &x)| x != 0.0)
+            .map(|(i, &x)| (i as u32, x))
+            .collect();
+        let sm: Vec<(u32, f64)> = m
+            .iter()
+            .enumerate()
+            .filter(|(_, &x)| x != 0.0)
+            .map(|(j, &x)| (j as u32, x))
+            .collect();
+
+        let p_total: f64 = sp.iter().map(|(_, x)| x).sum();
+        let mut avg = 0.0;
+        for &(i, pi) in &sp {
+            for &(j, mj) in &sm {
+                avg += pi * mj * topo.distance(NodeId(i as usize), NodeId(j as usize));
+            }
+        }
+        let avg_dist = if p_total > 0.0 { avg / p_total } else { 10.0 };
+
+        let mut local_dist_num = 0.0;
+        let mut flows: Vec<(u32, f64, f64)> = Vec::new();
+        let mut link_coeff: Vec<(u32, f64)> = Vec::new();
+        if let Some(graph) = &self.graph {
+            let servers = graph.num_servers();
+            let mut flow_map: BTreeMap<u32, (f64, f64)> = BTreeMap::new();
+            for &(i, pi) in &sp {
+                let si = self.server_of[i as usize] as usize;
+                for &(j, mj) in &sm {
+                    let sj = self.server_of[j as usize] as usize;
+                    let d = topo.distance(NodeId(i as usize), NodeId(j as usize));
+                    if si == sj {
+                        local_dist_num += pi * mj * d;
+                    } else {
+                        let e = flow_map.entry((si * servers + sj) as u32).or_insert((0.0, 0.0));
+                        e.0 += pi * mj;
+                        e.1 += pi * mj * d;
+                    }
+                }
+            }
+            let mut coeff_map: BTreeMap<u32, f64> = BTreeMap::new();
+            for (&r, &(w, _)) in &flow_map {
+                for l in &graph.route_at(r as usize).links {
+                    *coeff_map.entry(l.0 as u32).or_insert(0.0) += w;
+                }
+            }
+            flows = flow_map.into_iter().map(|(r, (w, dsum))| (r, w, dsum)).collect();
+            link_coeff = coeff_map.into_iter().collect();
+        }
+
+        // Remote fraction via per-server memory aggregates (local scratch
+        // instead of the incremental evaluator's member scratch — same
+        // zero-initialized values, so bit-identical sums).
+        let mut m_server = vec![0.0; self.num_servers];
+        let mut m_total = 0.0;
+        for &(j, mj) in &sm {
+            m_server[self.server_of[j as usize] as usize] += mj;
+            m_total += mj;
+        }
+        let mut remote_frac = 0.0;
+        for &(i, pi) in &sp {
+            remote_frac += pi * (m_total - m_server[self.server_of[i as usize] as usize]);
+        }
+
+        let pen = [
+            pair_penalty(profile.class, AnimalClass::Sheep),
+            pair_penalty(profile.class, AnimalClass::Rabbit),
+            pair_penalty(profile.class, AnimalClass::Devil),
+        ];
+        VmRow {
+            p: sp,
+            m: sm,
+            vcpus: vcpus as f64,
+            class_idx: profile.class.index() as u8,
+            pen,
+            press_per_p: vcpus as f64 * profile.cache_mb_per_vcpu * profile.thrash / self.l3_mb,
+            demand_static: profile.bw_gbs_per_vcpu * vcpus as f64,
+            remote_frac,
+            avg_dist,
+            p_total,
+            local_dist_num,
+            flows,
+            link_coeff,
+            sensitive: profile.sensitivity.is_sensitive(),
+            mem_stall_frac: profile.mem_stall_frac,
+            cache_sens: profile.cache_sens,
+            bw_bound_frac: profile.bw_bound_frac,
+            base_rate: profile.base_rate(),
+            base_ipc: profile.base_ipc,
+            base_mpi: profile.base_mpi,
+        }
+    }
+
+    /// Register a prebuilt row: subtract the stale contribution (if the
+    /// VM was live), store, add the fresh one — the accumulator-mutating
+    /// half of [`Self::set_placement`].
+    pub fn apply_row(&mut self, id: VmId, row: VmRow) {
+        let slot = self.rows.ids.insert(id.0) as usize;
+        self.rows.ensure(slot);
+        let util = if self.rows.live[slot] {
+            self.accum.apply(&self.rows, slot, -1.0);
+            self.rows.util[slot]
+        } else {
+            0.0
+        };
+        self.rows.store(slot, row);
+        self.rows.util[slot] = util;
+        self.accum.apply(&self.rows, slot, 1.0);
+    }
+
+    /// (Re)register a VM — build + apply in one call (the serial path).
+    pub fn set_placement(
+        &mut self,
+        topo: &Topology,
+        id: VmId,
+        p: &[f64],
+        m: &[f64],
+        vcpus: usize,
+        profile: AppProfile,
+    ) {
+        let row = self.build_row(topo, p, m, vcpus, &profile);
+        self.apply_row(id, row);
+    }
+
+    /// Forget a VM (destroy): subtract its contribution and recycle the
+    /// slot (sparse-vector capacity is kept for the next occupant).
+    pub fn remove(&mut self, id: VmId) {
+        let Some(slot) = self.rows.ids.get(id.0) else { return };
+        let slot = slot as usize;
+        self.accum.apply(&self.rows, slot, -1.0);
+        self.rows.live[slot] = false;
+        self.rows.p[slot].clear();
+        self.rows.m[slot].clear();
+        self.rows.flows[slot].clear();
+        self.rows.link_coeff[slot].clear();
+        self.rows.ids.remove(id.0);
+    }
+
+    /// Drift control: zero the accumulators and re-add every live slot in
+    /// VmId order — the same walk order as the map-keyed rebuild, so the
+    /// two implementations stay bit-identical across rebuild boundaries.
+    fn rebuild(&mut self) {
+        self.accum.press.iter_mut().for_each(|x| *x = 0.0);
+        self.accum.class_p.iter_mut().for_each(|x| *x = [0.0; 3]);
+        self.accum.mem_demand.iter_mut().for_each(|x| *x = 0.0);
+        self.accum.fabric_demand = 0.0;
+        self.accum.link_demand.iter_mut().for_each(|x| *x = 0.0);
+        for slot in self.rows.ids.slots_by_key() {
+            self.accum.apply(&self.rows, slot as usize, 1.0);
+        }
+    }
+
+    /// Serial evaluation (see `IncrementalEvaluator::evaluate`).
+    pub fn evaluate(
+        &mut self,
+        params: &ModelParams,
+        inputs: &[(VmId, TickInput)],
+    ) -> Vec<ModelOut> {
+        self.evaluate_parallel(params, inputs, None, None, None)
+    }
+
+    /// Serial evaluation with fabric feedback.
+    pub fn evaluate_with_fabric(
+        &mut self,
+        params: &ModelParams,
+        inputs: &[(VmId, TickInput)],
+        mig_link_gbs: Option<&[f64]>,
+    ) -> Vec<ModelOut> {
+        self.evaluate_parallel(params, inputs, mig_link_gbs, None, None)
+    }
+
+    /// One tick's evaluation, optionally fanning pass 2 out over `pool`
+    /// in `zones` batches.  Passes 1 (utilization deltas, input order)
+    /// and the saturation/φ settles stay serial; pass 2 is pure per-VM
+    /// reads scattered to fixed output indices — bit-identical to the
+    /// serial path at any pool size.
+    pub fn evaluate_parallel(
+        &mut self,
+        params: &ModelParams,
+        inputs: &[(VmId, TickInput)],
+        mig_link_gbs: Option<&[f64]>,
+        pool: Option<&ThreadPool>,
+        zones: Option<&ZoneMap>,
+    ) -> Vec<ModelOut> {
+        self.evals_since_rebuild += 1;
+        if self.evals_since_rebuild >= REBUILD_EVERY {
+            self.rebuild();
+            self.evals_since_rebuild = 0;
+        }
+
+        // Pass 1: utilization deltas, in input order.
+        for (id, inp) in inputs {
+            let s = self.rows.ids.get(id.0).expect("evaluate: vm not registered") as usize;
+            if inp.util != self.rows.util[s] {
+                let du = self.rows.demand_static[s] * (inp.util - self.rows.util[s]);
+                for &(j, mj) in &self.rows.m[s] {
+                    self.accum.mem_demand[j as usize] += du * mj;
+                }
+                self.accum.fabric_demand += du * self.rows.remote_frac[s];
+                for &(l, w) in &self.rows.link_coeff[s] {
+                    self.accum.link_demand[l as usize] += du * w;
+                }
+                self.rows.util[s] = inp.util;
+            }
+        }
+
+        // Shared saturation state — O(N).
+        let node_bw = self.node_bw;
+        for (sat, &d) in self.mem_sat.iter_mut().zip(self.accum.mem_demand.iter()) {
+            *sat = if d <= node_bw { 1.0 } else { node_bw / d };
+        }
+        let fabric_sat = if self.accum.fabric_demand <= params.fabric_cap_gbs {
+            1.0
+        } else {
+            params.fabric_cap_gbs / self.accum.fabric_demand
+        };
+
+        // Per-link congestion factors — O(links), fabric mode only.
+        let fabric_on = match (mig_link_gbs, &self.graph) {
+            (Some(base), Some(graph)) => {
+                let _t = crate::telemetry::span(crate::telemetry::Phase::FabricSettle);
+                for l in 0..self.accum.link_demand.len() {
+                    let d = self.accum.link_demand[l] + base[l];
+                    self.phi[l] = congestion_factor(rho(
+                        d,
+                        graph.capacity_gbs(crate::fabric::LinkId(l)),
+                    ));
+                }
+                true
+            }
+            (Some(_), None) => {
+                panic!("evaluate_with_fabric on an evaluator built without with_fabric")
+            }
+            _ => false,
+        };
+
+        // Pass 2: pure per-VM evaluation over the frozen state.
+        let rows = &self.rows;
+        let accum = &self.accum;
+        let mem_sat = &self.mem_sat;
+        let phi = &self.phi;
+        let graph = self.graph.as_ref();
+        let server_of = &self.server_of;
+        let eval_one = |id: VmId, inp: &TickInput| -> ModelOut {
+            let s = rows.ids.get(id.0).expect("evaluate: vm not registered") as usize;
+            eval_slot(rows, accum, mem_sat, phi, graph, s, inp, params, fabric_sat, fabric_on)
+        };
+
+        match (pool, zones) {
+            (Some(pool), Some(zones)) if inputs.len() >= PAR_EVAL_MIN => {
+                // Batch input indices by the zone of each VM's first
+                // placed node (unplaced VMs land in zone 0); each pool
+                // job walks one zone's accumulator neighbourhood.
+                let mut buckets: Vec<Vec<u32>> = vec![Vec::new(); zones.zones()];
+                for (k, (id, _)) in inputs.iter().enumerate() {
+                    let s = rows.ids.get(id.0).expect("evaluate: vm not registered") as usize;
+                    let z = match rows.p[s].first() {
+                        Some(&(node, _)) => zones
+                            .zone_of(crate::topology::ServerId(server_of[node as usize] as usize)),
+                        None => 0,
+                    };
+                    buckets[z].push(k as u32);
+                }
+                let per_zone: Vec<Vec<(u32, ModelOut)>> = pool.scope_chunks(buckets.len(), |z| {
+                    buckets[z]
+                        .iter()
+                        .map(|&k| {
+                            let (id, inp) = &inputs[k as usize];
+                            (k, eval_one(*id, inp))
+                        })
+                        .collect()
+                });
+                let mut out: Vec<Option<ModelOut>> = vec![None; inputs.len()];
+                for zone in per_zone {
+                    for (k, mo) in zone {
+                        out[k as usize] = Some(mo);
+                    }
+                }
+                out.into_iter().map(|o| o.expect("every input evaluated")).collect()
+            }
+            _ => inputs.iter().map(|(id, inp)| eval_one(*id, inp)).collect(),
+        }
+    }
+}
+
+/// Mirror of `perf_model::evaluate_one` (and the incremental evaluator's
+/// `eval_one`) over the SoA state — a free function so the parallel pass
+/// can call it with disjoint shared borrows.
+#[allow(clippy::too_many_arguments)]
+fn eval_slot(
+    rows: &Rows,
+    accum: &Accum,
+    mem_sat: &[f64],
+    phi: &[f64],
+    graph: Option<&FabricGraph>,
+    s: usize,
+    inp: &TickInput,
+    params: &ModelParams,
+    fabric_sat: f64,
+    fabric_on: bool,
+) -> ModelOut {
+    // 1. Latency factor from the cached mean distance (congestion-
+    // stretched over the cached flow groups in fabric mode).
+    let (avg_dist, vm_phi) = if fabric_on {
+        let graph = graph.expect("fabric_on implies graph");
+        let mut num = rows.local_dist_num[s];
+        let mut phi_num = 0.0;
+        let mut phi_den = 0.0;
+        for &(r, w, dsum) in &rows.flows[s] {
+            let route = graph.route_at(r as usize);
+            let f = if route.links.is_empty() {
+                1.0
+            } else {
+                let mut sum = 0.0;
+                for l in &route.links {
+                    sum += phi[l.0];
+                }
+                sum / route.links.len() as f64
+            };
+            num += dsum * f;
+            phi_num += w * f;
+            phi_den += w;
+        }
+        let avg = if rows.p_total[s] > 0.0 { num / rows.p_total[s] } else { 10.0 };
+        (avg, if phi_den > 0.0 { phi_num / phi_den } else { 1.0 })
+    } else {
+        (rows.avg_dist[s], 1.0)
+    };
+    let sigma = if rows.sensitive[s] { params.sens_mult } else { params.insens_mult };
+    let lat_mult = 1.0 + rows.mem_stall_frac[s] * sigma * (avg_dist / 10.0 - 1.0);
+    let lat = 1.0 / lat_mult;
+
+    // 2. Contention from the shared accumulators minus my own share.
+    let press_per_p = rows.press_per_p[s];
+    let ci = rows.class_idx[s] as usize;
+    let mut other_press = 0.0;
+    let mut pair_pen = 0.0;
+    for &(i, pi) in &rows.p[s] {
+        let i = i as usize;
+        other_press += pi * (accum.press[i] - pi * press_per_p).max(0.0);
+        let counts = &accum.class_p[i];
+        let mut pen_i = 0.0;
+        for (k, pen_k) in rows.pen[s].iter().enumerate() {
+            let others = counts[k] - if k == ci { pi } else { 0.0 };
+            pen_i += pen_k * others;
+        }
+        pair_pen += pi * pen_i;
+    }
+    let cont = 1.0
+        / (1.0
+            + rows.cache_sens[s] * params.press_coeff * other_press
+            + params.pair_coeff * pair_pen);
+
+    // 3. Bandwidth factor.
+    let bw_demand = rows.demand_static[s] * inp.util;
+    let remote_frac = rows.remote_frac[s];
+    let local_sat: f64 = rows.m[s]
+        .iter()
+        .map(|&(j, mj)| mj * mem_sat[j as usize])
+        .sum::<f64>()
+        .min(1.0);
+    let bw = if bw_demand <= 1e-9 {
+        1.0
+    } else {
+        let remote_demand = bw_demand * remote_frac;
+        let vm_link_cap = 4.0 * params.link_bw_gbs;
+        let remote_sat = if remote_demand <= 1e-9 {
+            1.0
+        } else {
+            // vm_phi == 1.0 exactly outside fabric mode.
+            fabric_sat.min(vm_link_cap / remote_demand).min(1.0) / vm_phi
+        };
+        ((1.0 - remote_frac) * local_sat + remote_frac * remote_sat).clamp(1e-4, 1.0)
+    };
+
+    // 4. Overbooking + churn.
+    let ob_share = 1.0 / inp.mean_occupancy.max(1.0);
+    let churn_pen = 1.0 / (1.0 + params.churn_coeff * inp.churn);
+    let ob = ob_share * churn_pen;
+
+    let cpu_path = (lat * cont).max(1e-6);
+    let a = rows.bw_bound_frac[s];
+    let eff = 1.0 / ((1.0 - a) / cpu_path + a / bw.max(1e-6));
+    let perf = rows.base_rate[s] * rows.vcpus[s] * inp.util * eff * ob;
+
+    let ctx = params.ctx_penalty.powf((inp.mean_occupancy - 1.0).max(0.0));
+    let ipc = rows.base_ipc[s] * eff * ctx;
+    let mpi = rows.base_mpi[s]
+        * (1.0
+            + params.mpi_press_coeff * other_press
+            + params.mpi_pair_coeff * pair_pen
+            + 0.4 * (avg_dist / 10.0 - 1.0).min(4.0));
+
+    ModelOut { ipc, mpi, perf, factors: Factors { lat, cont, bw, ob } }
+}
+
+/// Fan [`SoaEvaluator::build_row`] out over the pool for a batch of
+/// dirty VMs and return the rows in batch order, ready for in-order
+/// [`SoaEvaluator::apply_row`] calls.  `fetch` derives the dense
+/// `(p, m, vcpus, profile)` view of one VM (pure reads of simulator
+/// state).  Serial below [`PAR_BUILD_MIN`] — same bits either way.
+pub fn build_rows_batch<F>(
+    eval: &SoaEvaluator,
+    topo: &Topology,
+    ids: &[VmId],
+    pool: Option<&ThreadPool>,
+    fetch: F,
+) -> Vec<Option<VmRow>>
+where
+    F: Fn(VmId) -> Option<(Vec<f64>, Vec<f64>, usize, AppProfile)> + Send + Sync,
+{
+    let build = |id: VmId| {
+        fetch(id).map(|(p, m, vcpus, profile)| eval.build_row(topo, &p, &m, vcpus, &profile))
+    };
+    match pool {
+        Some(pool) if ids.len() >= PAR_BUILD_MIN => {
+            let jobs = (pool.workers() * 2).min(ids.len()).max(1);
+            let chunk = ids.len().div_ceil(jobs);
+            let chunks: Vec<Vec<Option<VmRow>>> = pool.scope_chunks(jobs, |j| {
+                let lo = j * chunk;
+                let hi = (lo + chunk).min(ids.len());
+                ids[lo..hi].iter().map(|&id| build(id)).collect()
+            });
+            chunks.into_iter().flatten().collect()
+        }
+        _ => ids.iter().map(|&id| build(id)).collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::incremental::IncrementalEvaluator;
+    use crate::sim::perf_model::{self, VmView};
+    use crate::util::rng::Rng;
+    use crate::util::testkit::{prop_assert, propcheck};
+    use crate::workload::App;
+
+    fn close(a: f64, b: f64) -> bool {
+        (a - b).abs() <= 1e-9 * (1.0 + a.abs().max(b.abs()))
+    }
+
+    fn assert_outputs_match(got: &[ModelOut], want: &[ModelOut]) -> Result<(), String> {
+        prop_assert(got.len() == want.len(), "length mismatch")?;
+        for (k, (a, b)) in got.iter().zip(want.iter()).enumerate() {
+            for (name, x, y) in [
+                ("perf", a.perf, b.perf),
+                ("ipc", a.ipc, b.ipc),
+                ("mpi", a.mpi, b.mpi),
+                ("lat", a.factors.lat, b.factors.lat),
+                ("cont", a.factors.cont, b.factors.cont),
+                ("bw", a.factors.bw, b.factors.bw),
+                ("ob", a.factors.ob, b.factors.ob),
+            ] {
+                prop_assert(close(x, y), format!("vm {k} {name}: {x} vs {y}"))?;
+            }
+        }
+        Ok(())
+    }
+
+    fn assert_outputs_bit_equal(got: &[ModelOut], want: &[ModelOut]) -> Result<(), String> {
+        prop_assert(got.len() == want.len(), "length mismatch")?;
+        for (k, (a, b)) in got.iter().zip(want.iter()).enumerate() {
+            for (name, x, y) in [
+                ("perf", a.perf, b.perf),
+                ("ipc", a.ipc, b.ipc),
+                ("mpi", a.mpi, b.mpi),
+                ("lat", a.factors.lat, b.factors.lat),
+                ("cont", a.factors.cont, b.factors.cont),
+                ("bw", a.factors.bw, b.factors.bw),
+                ("ob", a.factors.ob, b.factors.ob),
+            ] {
+                prop_assert(
+                    x.to_bits() == y.to_bits(),
+                    format!("vm {k} {name}: {x:?} != {y:?} (bitwise)"),
+                )?;
+            }
+        }
+        Ok(())
+    }
+
+    fn random_view(rng: &mut Rng, topo: &Topology) -> VmView {
+        let n = topo.num_nodes();
+        let app = *rng.choose(&App::ALL);
+        let mut p = vec![0.0; n];
+        let mut m = vec![0.0; n];
+        for f in rng.simplex(rng.range(1, 5)) {
+            p[rng.below(n)] += f;
+        }
+        for f in rng.simplex(rng.range(1, 4)) {
+            m[rng.below(n)] += f;
+        }
+        let norm = |v: &mut Vec<f64>| {
+            let s: f64 = v.iter().sum();
+            if s > 0.0 {
+                v.iter_mut().for_each(|x| *x /= s);
+            }
+        };
+        norm(&mut p);
+        norm(&mut m);
+        VmView {
+            p,
+            m,
+            vcpus: rng.range(1, 16),
+            util: rng.uniform(0.05, 1.0),
+            mean_occupancy: rng.uniform(1.0, 3.0),
+            churn: rng.uniform(0.0, 1.0),
+            profile: app.profile(),
+        }
+    }
+
+    fn tick_inputs(views: &[(VmId, VmView)]) -> Vec<(VmId, TickInput)> {
+        views
+            .iter()
+            .map(|(id, v)| {
+                (*id, TickInput { util: v.util, mean_occupancy: v.mean_occupancy, churn: v.churn })
+            })
+            .collect()
+    }
+
+    #[test]
+    fn matches_full_evaluate_on_static_placements() {
+        let topo = Topology::paper();
+        let params = ModelParams::default();
+        propcheck("soa == full (static)", 30, |rng| {
+            let mut soa = SoaEvaluator::new(&topo);
+            let views: Vec<(VmId, VmView)> = (0..rng.range(1, 10))
+                .map(|k| (VmId(k as u64 + 1), random_view(rng, &topo)))
+                .collect();
+            for (id, v) in &views {
+                soa.set_placement(&topo, *id, &v.p, &v.m, v.vcpus, v.profile.clone());
+            }
+            let got = soa.evaluate(&params, &tick_inputs(&views));
+            let dense: Vec<VmView> = views.iter().map(|(_, v)| v.clone()).collect();
+            let want = perf_model::evaluate(&topo, &dense, &params);
+            assert_outputs_match(&got, &want)
+        });
+    }
+
+    #[test]
+    fn bit_identical_to_incremental_across_churn() {
+        // The SoA evaluator's contract is stronger than the 1e-9 oracle:
+        // same operations in the same order means the *same bits* as the
+        // map-keyed incremental evaluator, under arbitrary churn (slot
+        // reuse included).
+        let topo = Topology::tiny();
+        let params = ModelParams::default();
+        propcheck("soa == incremental (bitwise, churn)", 20, |rng| {
+            let mut soa = SoaEvaluator::new(&topo);
+            let mut inc = IncrementalEvaluator::new(&topo);
+            let mut views: Vec<(VmId, VmView)> = Vec::new();
+            let mut next_id = 0u64;
+            for _ in 0..40 {
+                match rng.below(4) {
+                    0 => {
+                        next_id += 1;
+                        let id = VmId(next_id);
+                        let v = random_view(rng, &topo);
+                        soa.set_placement(&topo, id, &v.p, &v.m, v.vcpus, v.profile.clone());
+                        inc.set_placement(&topo, id, &v.p, &v.m, v.vcpus, v.profile.clone());
+                        views.push((id, v));
+                    }
+                    1 if !views.is_empty() => {
+                        let k = rng.below(views.len());
+                        let (id, _) = views[k];
+                        let v = random_view(rng, &topo);
+                        soa.set_placement(&topo, id, &v.p, &v.m, v.vcpus, v.profile.clone());
+                        inc.set_placement(&topo, id, &v.p, &v.m, v.vcpus, v.profile.clone());
+                        views[k].1 = v;
+                    }
+                    2 if !views.is_empty() => {
+                        let k = rng.below(views.len());
+                        let (id, _) = views.remove(k);
+                        soa.remove(id);
+                        inc.remove(id);
+                    }
+                    _ => {}
+                }
+                for (_, v) in views.iter_mut() {
+                    v.util = rng.uniform(0.05, 1.0);
+                    v.mean_occupancy = rng.uniform(1.0, 3.0);
+                    v.churn = rng.uniform(0.0, 1.0);
+                }
+                let inputs = tick_inputs(&views);
+                let got = soa.evaluate(&params, &inputs);
+                let want = inc.evaluate(&params, &inputs);
+                assert_outputs_bit_equal(&got, &want)?;
+                prop_assert(soa.num_tracked() == inc.num_tracked(), "tracked count")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn fabric_feedback_matches_full_evaluator() {
+        let topo = Topology::paper();
+        let params = ModelParams::default();
+        propcheck("soa fabric == full fabric", 20, |rng| {
+            let mut soa = SoaEvaluator::with_fabric(&topo);
+            let views: Vec<(VmId, VmView)> = (0..rng.range(1, 8))
+                .map(|k| (VmId(k as u64 + 1), random_view(rng, &topo)))
+                .collect();
+            for (id, v) in &views {
+                soa.set_placement(&topo, *id, &v.p, &v.m, v.vcpus, v.profile.clone());
+            }
+            let base: Vec<f64> =
+                (0..topo.fabric().num_links()).map(|_| rng.uniform(0.0, 3.0)).collect();
+            let got = soa.evaluate_with_fabric(&params, &tick_inputs(&views), Some(&base));
+            let dense: Vec<VmView> = views.iter().map(|(_, v)| v.clone()).collect();
+            let ft = perf_model::FabricTick { graph: topo.fabric(), base_gbs: &base };
+            let want = perf_model::evaluate_with_fabric(&topo, &dense, &params, Some(&ft));
+            assert_outputs_match(&got, &want)
+        });
+    }
+
+    #[test]
+    fn parallel_evaluate_is_bit_identical_across_pool_sizes() {
+        // Zone-parallel pass 2 vs serial, at several pool sizes, bitwise.
+        // Population is sized past PAR_EVAL_MIN so the pool path engages.
+        let topo = Topology::paper();
+        let params = ModelParams::default();
+        let mut rng = Rng::new(42);
+        let views: Vec<(VmId, VmView)> = (0..PAR_EVAL_MIN + 50)
+            .map(|k| (VmId(k as u64 + 1), random_view(&mut rng, &topo)))
+            .collect();
+        let mut serial = SoaEvaluator::new(&topo);
+        for (id, v) in &views {
+            serial.set_placement(&topo, *id, &v.p, &v.m, v.vcpus, v.profile.clone());
+        }
+        let inputs = tick_inputs(&views);
+        let want = serial.evaluate(&params, &inputs);
+        for workers in [1usize, 2, 4] {
+            let pool = ThreadPool::new(workers);
+            let zones = ZoneMap::new(topo.spec.servers, workers * 2);
+            let mut par = SoaEvaluator::new(&topo);
+            for (id, v) in &views {
+                par.set_placement(&topo, *id, &v.p, &v.m, v.vcpus, v.profile.clone());
+            }
+            let got =
+                par.evaluate_parallel(&params, &inputs, None, Some(&pool), Some(&zones));
+            let check = assert_outputs_bit_equal(&got, &want);
+            assert!(check.is_ok(), "pool size {workers}: {check:?}");
+        }
+    }
+
+    #[test]
+    fn batched_row_build_matches_serial_apply_order() {
+        // build_rows_batch + in-order apply_row must leave the evaluator
+        // bit-identical to plain set_placement calls.
+        let topo = Topology::paper();
+        let params = ModelParams::default();
+        let mut rng = Rng::new(9);
+        let views: Vec<(VmId, VmView)> = (0..PAR_BUILD_MIN + 20)
+            .map(|k| (VmId(k as u64 + 1), random_view(&mut rng, &topo)))
+            .collect();
+        let pool = ThreadPool::new(3);
+
+        let mut serial = SoaEvaluator::new(&topo);
+        for (id, v) in &views {
+            serial.set_placement(&topo, *id, &v.p, &v.m, v.vcpus, v.profile.clone());
+        }
+
+        let mut batched = SoaEvaluator::new(&topo);
+        let ids: Vec<VmId> = views.iter().map(|(id, _)| *id).collect();
+        let rows = build_rows_batch(&batched, &topo, &ids, Some(&pool), |id| {
+            let (_, v) = views.iter().find(|(i, _)| *i == id).unwrap();
+            Some((v.p.clone(), v.m.clone(), v.vcpus, v.profile.clone()))
+        });
+        for (id, row) in ids.iter().zip(rows) {
+            batched.apply_row(*id, row.expect("fetch always succeeds"));
+        }
+
+        let inputs = tick_inputs(&views);
+        let got = batched.evaluate(&params, &inputs);
+        let want = serial.evaluate(&params, &inputs);
+        let check = assert_outputs_bit_equal(&got, &want);
+        assert!(check.is_ok(), "{check:?}");
+    }
+
+    #[test]
+    fn remove_and_slot_reuse_fully_retract_contributions() {
+        let topo = Topology::tiny();
+        let params = ModelParams::default();
+        let mut rng = Rng::new(7);
+        let mut soa = SoaEvaluator::new(&topo);
+        let a = random_view(&mut rng, &topo);
+        let b = random_view(&mut rng, &topo);
+        soa.set_placement(&topo, VmId(1), &a.p, &a.m, a.vcpus, a.profile.clone());
+        soa.set_placement(&topo, VmId(2), &b.p, &b.m, b.vcpus, b.profile.clone());
+        soa.remove(VmId(2));
+        assert_eq!(soa.num_tracked(), 1);
+        // VM 3 reuses VM 2's slot; VM 1 must still evaluate as if alone
+        // after VM 3 is retracted too.
+        let c = random_view(&mut rng, &topo);
+        soa.set_placement(&topo, VmId(3), &c.p, &c.m, c.vcpus, c.profile.clone());
+        soa.remove(VmId(3));
+        let got = soa.evaluate(&params, &tick_inputs(&[(VmId(1), a.clone())]));
+        let want = perf_model::evaluate(&topo, &[a], &params);
+        let check = assert_outputs_match(&got, &want);
+        assert!(check.is_ok(), "{check:?}");
+    }
+}

@@ -15,9 +15,11 @@
 pub mod cache;
 pub mod distance;
 pub mod torus;
+pub mod zones;
 
 pub use distance::DistanceParams;
 pub use torus::Torus;
+pub use zones::ZoneMap;
 
 use crate::util::config::Config;
 

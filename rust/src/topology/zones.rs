@@ -1,0 +1,96 @@
+//! Zone partitioning of the server torus for batched tick work.
+//!
+//! The parallel tick shards per-VM evaluation by *zone*: a contiguous
+//! band of server ids (servers are laid out row-major on the torus, so a
+//! band is a run of torus rows — neighbours on the fabric, neighbours in
+//! the accumulator arrays).  Zones are purely a batching and cache-
+//! locality choice: no model term ever crosses a zone boundary
+//! differently than within one, and the reduction order over zones is
+//! fixed, so per-seed output is bit-identical at any pool size.
+
+use super::ServerId;
+
+/// Static partition of `servers` into `zones` contiguous id bands whose
+/// sizes differ by at most one.
+#[derive(Debug, Clone)]
+pub struct ZoneMap {
+    servers: usize,
+    zones: usize,
+}
+
+impl ZoneMap {
+    /// `zones` is clamped to `[1, servers]` so every zone is non-empty.
+    pub fn new(servers: usize, zones: usize) -> ZoneMap {
+        assert!(servers > 0, "zone map over an empty torus");
+        ZoneMap { servers, zones: zones.clamp(1, servers) }
+    }
+
+    pub fn zones(&self) -> usize {
+        self.zones
+    }
+
+    pub fn servers(&self) -> usize {
+        self.servers
+    }
+
+    /// Zone of a server: `s * zones / servers` — monotone in `s`, so each
+    /// zone is the contiguous band `[ceil(z*S/Z), ceil((z+1)*S/Z))`.
+    pub fn zone_of(&self, server: ServerId) -> usize {
+        debug_assert!(server.0 < self.servers);
+        server.0 * self.zones / self.servers
+    }
+
+    /// Half-open server-id range of a zone.
+    pub fn servers_of(&self, zone: usize) -> std::ops::Range<usize> {
+        debug_assert!(zone < self.zones);
+        let lo = (zone * self.servers).div_ceil(self.zones);
+        let hi = ((zone + 1) * self.servers).div_ceil(self.zones);
+        lo..hi
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn check(servers: usize, zones: usize) {
+        let zm = ZoneMap::new(servers, zones);
+        let z = zm.zones();
+        assert!(z >= 1 && z <= servers);
+        // Ranges partition [0, servers) in order and agree with zone_of.
+        let mut covered = 0usize;
+        let mut sizes = Vec::new();
+        for zone in 0..z {
+            let r = zm.servers_of(zone);
+            assert_eq!(r.start, covered, "zones must tile contiguously");
+            assert!(!r.is_empty(), "zone {zone} empty at {servers}srv/{z}z");
+            for s in r.clone() {
+                assert_eq!(zm.zone_of(ServerId(s)), zone);
+            }
+            sizes.push(r.len());
+            covered = r.end;
+        }
+        assert_eq!(covered, servers);
+        let (lo, hi) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+        assert!(hi - lo <= 1, "zone sizes {sizes:?} differ by more than one");
+    }
+
+    #[test]
+    fn partitions_are_contiguous_nonempty_and_balanced() {
+        for servers in [1, 2, 6, 7, 24, 100] {
+            for zones in [1, 2, 3, 4, 8, 200] {
+                check(servers, zones);
+            }
+        }
+    }
+
+    #[test]
+    fn paper_torus_rows_stay_within_bands() {
+        // 100 servers on a 10x10 torus, 4 zones: each zone is 25
+        // consecutive ids = 2.5 torus rows; row-major layout keeps the
+        // band spatially compact.
+        let zm = ZoneMap::new(100, 4);
+        assert_eq!(zm.servers_of(0), 0..25);
+        assert_eq!(zm.servers_of(3), 75..100);
+    }
+}

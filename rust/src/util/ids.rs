@@ -1,0 +1,179 @@
+//! Dense id allocation for structure-of-arrays hot state.
+//!
+//! The simulator and evaluators key per-VM state by [`crate::vm::VmId`]
+//! (a monotonically increasing `u64`).  Map-keyed storage pays a pointer
+//! chase per access; the SoA evaluator instead stores per-VM state in
+//! flat parallel arrays indexed by a *dense slot* handed out by
+//! [`DenseIdMap`].  Slots freed on VM destroy go on a free list and are
+//! reused by later inserts, so the arrays stay compact under churn —
+//! `capacity()` tracks the high-water population, not total arrivals.
+//!
+//! Reuse can never alias a live VM: a slot enters the free list only via
+//! [`DenseIdMap::remove`], which unlinks the old key first (the aliasing
+//! property test below churns insert/remove and checks the invariant).
+
+use std::collections::HashMap;
+
+/// Persistent key → dense-slot allocator with free-list reuse.
+#[derive(Debug, Clone, Default)]
+pub struct DenseIdMap {
+    map: HashMap<u64, u32>,
+    /// Slot → key for live slots (`None` = free or never allocated).
+    rev: Vec<Option<u64>>,
+    free: Vec<u32>,
+}
+
+impl DenseIdMap {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Number of live keys.
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Upper bound on slot indices ever handed out (the SoA array length).
+    pub fn capacity(&self) -> usize {
+        self.rev.len()
+    }
+
+    /// Slot of a live key, if registered.
+    pub fn get(&self, key: u64) -> Option<u32> {
+        self.map.get(&key).copied()
+    }
+
+    /// Key occupying a slot, if live.
+    pub fn key_of(&self, slot: u32) -> Option<u64> {
+        self.rev.get(slot as usize).copied().flatten()
+    }
+
+    /// Slot for `key`, allocating one (free list first) when new.  A
+    /// second insert of a live key returns its existing slot.
+    pub fn insert(&mut self, key: u64) -> u32 {
+        if let Some(&slot) = self.map.get(&key) {
+            return slot;
+        }
+        let slot = match self.free.pop() {
+            Some(s) => s,
+            None => {
+                self.rev.push(None);
+                (self.rev.len() - 1) as u32
+            }
+        };
+        self.rev[slot as usize] = Some(key);
+        self.map.insert(key, slot);
+        slot
+    }
+
+    /// Release `key`, returning its slot to the free list.
+    pub fn remove(&mut self, key: u64) -> Option<u32> {
+        let slot = self.map.remove(&key)?;
+        self.rev[slot as usize] = None;
+        self.free.push(slot);
+        Some(slot)
+    }
+
+    /// Live slots sorted by key — the deterministic iteration order for
+    /// accumulator rebuilds (bit-identical to map-keyed `BTreeMap` walks
+    /// regardless of how churn has shuffled the free list).
+    pub fn slots_by_key(&self) -> Vec<u32> {
+        let mut pairs: Vec<(u64, u32)> =
+            self.rev.iter().enumerate().filter_map(|(s, k)| k.map(|k| (k, s as u32))).collect();
+        pairs.sort_unstable();
+        pairs.into_iter().map(|(_, s)| s).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testkit::{prop_assert, propcheck};
+    use std::collections::HashMap as StdMap;
+
+    #[test]
+    fn insert_get_remove_roundtrip() {
+        let mut m = DenseIdMap::new();
+        let a = m.insert(10);
+        let b = m.insert(20);
+        assert_ne!(a, b);
+        assert_eq!(m.get(10), Some(a));
+        assert_eq!(m.key_of(b), Some(20));
+        assert_eq!(m.insert(10), a, "re-insert of a live key keeps its slot");
+        assert_eq!(m.remove(10), Some(a));
+        assert_eq!(m.get(10), None);
+        assert_eq!(m.key_of(a), None);
+        assert_eq!(m.len(), 1);
+    }
+
+    #[test]
+    fn freed_slots_are_reused_and_capacity_tracks_high_water() {
+        let mut m = DenseIdMap::new();
+        for k in 0..8u64 {
+            m.insert(k);
+        }
+        assert_eq!(m.capacity(), 8);
+        for k in 0..4u64 {
+            m.remove(k);
+        }
+        for k in 100..104u64 {
+            let s = m.insert(k);
+            assert!(s < 8, "churn must reuse freed slots, got {s}");
+        }
+        assert_eq!(m.capacity(), 8, "no growth while the free list can serve");
+        assert_eq!(m.len(), 8);
+    }
+
+    #[test]
+    fn slots_by_key_is_sorted_and_complete() {
+        let mut m = DenseIdMap::new();
+        for k in [5u64, 1, 9, 3] {
+            m.insert(k);
+        }
+        m.remove(9);
+        m.insert(2); // reuses 9's slot: key order != slot order
+        let slots = m.slots_by_key();
+        let keys: Vec<u64> = slots.iter().map(|&s| m.key_of(s).unwrap()).collect();
+        assert_eq!(keys, vec![1, 2, 3, 5]);
+    }
+
+    #[test]
+    fn id_reuse_never_aliases_live_keys() {
+        // The ISSUE-mandated churn property: across arbitrary insert and
+        // remove interleavings, every live key resolves to a distinct
+        // slot, every slot maps back to exactly its key, and no freed
+        // slot is handed out while still linked to a live key.
+        propcheck("dense-id reuse never aliases", 60, |rng| {
+            let mut m = DenseIdMap::new();
+            let mut live: StdMap<u64, u32> = StdMap::new();
+            let mut next_key = 0u64;
+            for _ in 0..200 {
+                if live.is_empty() || rng.below(3) > 0 {
+                    next_key += 1;
+                    let slot = m.insert(next_key);
+                    for (&k, &s) in &live {
+                        prop_assert(
+                            s != slot,
+                            format!("slot {slot} for key {next_key} aliases live key {k}"),
+                        )?;
+                    }
+                    live.insert(next_key, slot);
+                } else {
+                    let k = *rng.choose(&live.keys().copied().collect::<Vec<_>>());
+                    let s = live.remove(&k).unwrap();
+                    prop_assert(m.remove(k) == Some(s), "remove returns the live slot")?;
+                }
+                for (&k, &s) in &live {
+                    prop_assert(m.get(k) == Some(s), format!("key {k} lost its slot"))?;
+                    prop_assert(m.key_of(s) == Some(k), format!("slot {s} lost its key"))?;
+                }
+                prop_assert(m.len() == live.len(), "length tracks the model")?;
+            }
+            Ok(())
+        });
+    }
+}

@@ -6,6 +6,7 @@
 
 pub mod benchkit;
 pub mod config;
+pub mod ids;
 pub mod pool;
 pub mod rng;
 pub mod stats;

@@ -4,7 +4,8 @@
 //! ([`crate::experiments::harness::run_many`]) and the native scorer's
 //! candidate batches ([`crate::runtime::native`]).  Jobs are closures sent
 //! over an mpsc channel to a fixed set of workers; `scope_map` provides
-//! the common fork-join pattern.
+//! the common fork-join pattern, and `scope_run`/`scope_chunks` the
+//! borrowing variant the parallel simulator tick is built on.
 //!
 //! [`global`] exposes a process-wide pool for *top-level* fan-out (one
 //! experiment repetition per job).  Nested work (e.g. batch scoring inside
@@ -77,6 +78,71 @@ impl ThreadPool {
         tx.send(Msg::Run(Box::new(f))).expect("pool closed");
     }
 
+    /// Run `f(0..jobs)` on the pool and wait for all of them — the
+    /// fork-join primitive for *borrowing* closures ([`Self::submit`]
+    /// requires `'static`, which rules out sharing the caller's stack
+    /// state).  The closure's lifetime is erased to ride the job channel;
+    /// soundness rests on the barrier below outliving every job, so a
+    /// lost completion signal (worker death mid-job) aborts the process
+    /// rather than unwinding past the borrow.
+    ///
+    /// Like [`Self::submit`], jobs must not recursively wait on the same
+    /// pool.
+    pub fn scope_run<F>(&self, jobs: usize, f: F)
+    where
+        F: Fn(usize) + Send + Sync,
+    {
+        if jobs == 0 {
+            return;
+        }
+        let f_ref: &(dyn Fn(usize) + Send + Sync) = &f;
+        // SAFETY: only the lifetime is transmuted.  Every job sends on
+        // `done_tx` after its last use of `f_static`, and this frame
+        // blocks until `jobs` signals arrive (aborting if the channel
+        // dies early), so `f` strictly outlives all uses.
+        let f_static: &'static (dyn Fn(usize) + Send + Sync) =
+            unsafe { std::mem::transmute(f_ref) };
+        let (done_tx, done_rx) = mpsc::channel::<()>();
+        for j in 0..jobs {
+            let done = done_tx.clone();
+            self.submit(move || {
+                f_static(j);
+                let _ = done.send(());
+            });
+        }
+        drop(done_tx);
+        for _ in 0..jobs {
+            if done_rx.recv().is_err() {
+                // A worker died (job panic) before signalling; the erased
+                // borrow may still be live on another thread.  Unwinding
+                // here would free `f` under it — abort instead.
+                eprintln!("ThreadPool::scope_run: worker lost mid-scope; aborting");
+                std::process::abort();
+            }
+        }
+    }
+
+    /// Fork-join over `jobs` index chunks with per-job results, in job
+    /// order.  Built on [`Self::scope_run`], so `f` may borrow from the
+    /// caller — the parallel-tick building block (each job processes one
+    /// zone's slice and returns its partial output).
+    pub fn scope_chunks<R, F>(&self, jobs: usize, f: F) -> Vec<R>
+    where
+        R: Send,
+        F: Fn(usize) -> R + Send + Sync,
+    {
+        let out: Mutex<Vec<Option<R>>> = Mutex::new((0..jobs).map(|_| None).collect());
+        self.scope_run(jobs, |j| {
+            let r = f(j);
+            out.lock().expect("scope_chunks result store poisoned")[j] = Some(r);
+        });
+        out.into_inner()
+            .expect("scope_chunks result store poisoned")
+            .into_iter()
+            .map(|r| r.expect("scope_run completed every job"))
+            .collect()
+    }
+
     /// Map `f` over `items` in parallel, preserving order.
     pub fn scope_map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
     where
@@ -142,6 +208,47 @@ mod tests {
         }
         drop(pool); // join on drop
         assert_eq!(counter.load(Ordering::SeqCst), 50);
+    }
+
+    #[test]
+    fn scope_run_borrows_caller_state() {
+        let pool = ThreadPool::new(4);
+        let hits: Vec<AtomicUsize> = (0..32).map(|_| AtomicUsize::new(0)).collect();
+        let base = 7usize; // borrowed, not moved
+        pool.scope_run(hits.len(), |j| {
+            hits[j].fetch_add(base + j, Ordering::SeqCst);
+        });
+        for (j, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::SeqCst), base + j);
+        }
+    }
+
+    #[test]
+    fn scope_chunks_returns_results_in_job_order() {
+        let pool = ThreadPool::new(3);
+        let data: Vec<usize> = (0..97).collect();
+        let jobs = 5;
+        let chunk = data.len().div_ceil(jobs);
+        let partials = pool.scope_chunks(jobs, |j| {
+            let lo = j * chunk;
+            let hi = (lo + chunk).min(data.len());
+            data[lo..hi].iter().sum::<usize>()
+        });
+        assert_eq!(partials.len(), jobs);
+        assert_eq!(partials.iter().sum::<usize>(), data.iter().sum::<usize>());
+        // Job order, not completion order: re-derive each chunk serially.
+        for (j, p) in partials.iter().enumerate() {
+            let lo = j * chunk;
+            let hi = (lo + chunk).min(data.len());
+            assert_eq!(*p, data[lo..hi].iter().sum::<usize>());
+        }
+    }
+
+    #[test]
+    fn scope_run_zero_jobs_is_a_noop() {
+        let pool = ThreadPool::new(2);
+        pool.scope_run(0, |_| unreachable!("no jobs"));
+        assert!(pool.scope_chunks(0, |_| 1usize).is_empty());
     }
 
     #[test]

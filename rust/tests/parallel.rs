@@ -1,0 +1,76 @@
+//! Parallel-tick integration tests: the SoA evaluator and the
+//! zone-partitioned parallel tick are bit-identical drop-ins for the
+//! incremental engine.  These run whole scenarios (churn, drain, and the
+//! ledger-on degraded-link) and compare everything deterministic —
+//! metrics and event logs — across engines and pool sizes.  The engine is
+//! pinned through [`ScenarioConfig::tick_soa`]/[`tick_threads`] rather
+//! than the `DVRM_TICK_*` env hooks: tests run concurrently and must not
+//! write process-global state.
+
+use dvrm::experiments::Algorithm;
+use dvrm::scenario::{run_scenario, suite, ScenarioConfig};
+
+fn cfg_with_engine(seed: u64, soa: bool, threads: usize) -> ScenarioConfig {
+    ScenarioConfig {
+        tick_soa: Some(soa),
+        tick_threads: Some(threads),
+        ..ScenarioConfig::new(seed)
+    }
+}
+
+#[test]
+fn soa_engine_matches_the_incremental_engine_bitwise() {
+    // Same scenario + seed, engines swapped.  The SoA evaluator replays
+    // the exact accumulator mutation order of the incremental path, so
+    // every float — and therefore every decision downstream of one — must
+    // match bit for bit, not approximately.
+    for name in ["churn", "drain"] {
+        let spec = suite::named(name, true).unwrap();
+        for alg in [Algorithm::Vanilla, Algorithm::SmIpc] {
+            let map = run_scenario(&spec, alg, &cfg_with_engine(42, false, 1)).unwrap();
+            let soa = run_scenario(&spec, alg, &cfg_with_engine(42, true, 1)).unwrap();
+            assert_eq!(map.metrics, soa.metrics, "{name}/{alg:?}: SoA metrics diverged");
+            assert_eq!(map.event_log, soa.event_log, "{name}/{alg:?}: SoA event log diverged");
+        }
+    }
+}
+
+#[test]
+fn soa_engine_matches_with_the_congestion_ledger_on() {
+    // degraded-link runs with fabric feedback: the evaluate path that
+    // charges migration flows to links and folds phi back into the model.
+    let spec = suite::named("degraded-link", true).unwrap();
+    assert!(spec.fabric_feedback, "the link scenario runs with the ledger on");
+    let map = run_scenario(&spec, Algorithm::SmIpc, &cfg_with_engine(13, false, 1)).unwrap();
+    let soa = run_scenario(&spec, Algorithm::SmIpc, &cfg_with_engine(13, true, 1)).unwrap();
+    assert_eq!(map.metrics, soa.metrics, "ledger-on SoA metrics diverged");
+    assert_eq!(map.event_log, soa.event_log, "ledger-on SoA event log diverged");
+}
+
+#[test]
+fn parallel_tick_is_bit_identical_across_pool_sizes() {
+    // The determinism contract: zone bucketing batches work but never
+    // reorders a floating-point reduction, so any pool size reproduces
+    // the single-threaded output exactly.
+    for name in ["churn", "degraded-link"] {
+        let spec = suite::named(name, true).unwrap();
+        let base = run_scenario(&spec, Algorithm::SmIpc, &cfg_with_engine(7, true, 1)).unwrap();
+        for threads in [2, 4] {
+            let par =
+                run_scenario(&spec, Algorithm::SmIpc, &cfg_with_engine(7, true, threads)).unwrap();
+            assert_eq!(base.metrics, par.metrics, "{name}: metrics differ at {threads} threads");
+            assert_eq!(base.event_log, par.event_log, "{name}: log differs at {threads} threads");
+        }
+    }
+}
+
+#[test]
+fn parallel_tick_matches_the_default_engine_end_to_end() {
+    // Transitivity check made explicit: default engine (no overrides)
+    // vs SoA + 4 workers on the full churn scenario.
+    let spec = suite::named("churn", true).unwrap();
+    let default = run_scenario(&spec, Algorithm::SmIpc, &ScenarioConfig::new(21)).unwrap();
+    let par = run_scenario(&spec, Algorithm::SmIpc, &cfg_with_engine(21, true, 4)).unwrap();
+    assert_eq!(default.metrics, par.metrics, "parallel tick diverged from default engine");
+    assert_eq!(default.event_log, par.event_log);
+}
