@@ -19,6 +19,7 @@ use dvrm::experiments::figures::{
     full_eval_ticks, run_scale_config, run_scale_config_fabric, run_scale_config_opts,
     run_scale_config_telemetry, run_scale_mapper_repeats, scale_spec, ScaleTickOpts,
 };
+use dvrm::experiments::shard::run_sharded_mapper;
 use dvrm::fabric::{FabricGraph, LinkLedger};
 use dvrm::runtime::{CandidateBatch, Engine, Meta, ScoreProblem, Scorer, VmEntry, Weights};
 use dvrm::sim::{SimConfig, Simulator};
@@ -259,6 +260,30 @@ fn main() {
         let int_samples: Vec<f64> = ints.iter().map(|i| 1.0 / i.max(1e-12)).collect();
         for (kind, samples) in [("arrival", arr_samples), ("interval", int_samples)] {
             let res = BenchResult { name: format!("mapper/{kind}/{name}"), samples };
+            println!("{}", res.report());
+            results.push(res);
+        }
+    }
+
+    // Sharded coordination at the same sparse point: zone-routed arrival
+    // placement and the per-zone monitoring pass under the Z=4 partition
+    // (Z=1 bit-parity with the rows above is *tested* in tests/sharded.rs,
+    // not timed here).  Recorded as seconds-per-arrival and
+    // seconds-per-pass so the regression gate's lower-is-better rule
+    // applies unchanged.
+    {
+        let reps = if quick { 2 } else { 1 };
+        let passes = if quick { 5u64 } else { 10 };
+        let mut arr_samples = Vec::new();
+        let mut int_samples = Vec::new();
+        for _ in 0..reps {
+            let p = run_sharded_mapper(scale_spec(12, (4, 3)), 100, passes, 4, 7).unwrap();
+            arr_samples.push(1.0 / p.arrivals_per_sec.max(1e-12));
+            int_samples.push(1.0 / p.passes_per_sec.max(1e-12));
+        }
+        for (kind, samples) in [("arrival", arr_samples), ("interval", int_samples)] {
+            let res =
+                BenchResult { name: format!("mapper/sharded/{kind}/12srv/100vms/z4"), samples };
             println!("{}", res.report());
             results.push(res);
         }

@@ -10,7 +10,13 @@
 //! dvrm list                         # known experiment ids
 //! options: --seed N --ticks N --repeats N --fast --scorer auto|native
 //!          --csv DIR --suite smoke|full --json PATH --telemetry PATH
+//!          --shard-zones N
 //! ```
+
+// Not yet swept for full rustdoc coverage -- the crate-level
+// `#![warn(missing_docs)]` allow-list (see ARCHITECTURE.md
+// §Documentation).
+#![allow(missing_docs)]
 
 pub mod args;
 
@@ -76,7 +82,10 @@ pub fn usage() -> &'static str {
        --events          scenarios: print the applied-event log per scenario\n\
        --telemetry PATH  scenarios: record tick-phase spans, metrics and mapper\n\
                          decisions; write JSONL to PATH (+ PATH.prom snapshot)\n\
-       --sample-every N  scenarios: telemetry tick-sample stride (default 1)"
+       --sample-every N  scenarios: telemetry tick-sample stride (default 1)\n\
+       --shard-zones N   scenarios: run the coordinator sharded into N zones\n\
+                         (per-zone mappers + global rebalancer; 1 = bit-\n\
+                         identical to the global mapper; default: global)"
 }
 
 fn opts_from(parsed: &Parsed) -> ExpOptions {
@@ -147,7 +156,13 @@ fn cmd_scenarios(parsed: &Parsed) -> Result<i32> {
         sample_every: parsed.value_u64("sample-every").unwrap_or(1).max(1),
         ..TelemetryConfig::default()
     });
-    let cfg = ScenarioConfig { scorer: opts.scorer, telemetry, ..ScenarioConfig::new(opts.seed) };
+    let shard_zones = parsed.value_u64("shard-zones").map(|z| z as usize).filter(|z| *z > 0);
+    let cfg = ScenarioConfig {
+        scorer: opts.scorer,
+        telemetry,
+        shard_zones,
+        ..ScenarioConfig::new(opts.seed)
+    };
     println!(
         "scenario suite {suite_name:?}: {} scenarios x {} algorithms (seed {})",
         specs.len(),

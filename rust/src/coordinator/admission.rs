@@ -13,6 +13,7 @@ use crate::vm::{VmId, VmState, VmType};
 /// Admission decision for an arriving VM.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum Decision {
+    /// Admit: the VM fits within the headroom bound as-is.
     Admit,
     /// Reject: admitting would exceed the slot headroom.
     Reject { need: usize, free: usize },
@@ -49,14 +50,18 @@ impl Default for AdmissionConfig {
 /// Stateless controller over the simulator's current commitments.
 #[derive(Debug, Clone, Default)]
 pub struct AdmissionController {
+    /// Headroom bound and eviction policy.
     pub cfg: AdmissionConfig,
-    /// Telemetry.
+    /// Arrivals admitted (telemetry).
     pub admitted: u64,
+    /// Arrivals rejected for lack of headroom (telemetry).
     pub rejected: u64,
+    /// VMs evicted to make room for higher-priority arrivals (telemetry).
     pub evictions: u64,
 }
 
 impl AdmissionController {
+    /// Controller with `cfg` and zeroed counters.
     pub fn new(cfg: AdmissionConfig) -> Self {
         Self { cfg, ..Default::default() }
     }

@@ -27,6 +27,7 @@ impl Default for BenefitMatrix {
 }
 
 impl BenefitMatrix {
+    /// Table 4's initial values with EMA smoothing factor `alpha`.
     pub fn new(alpha: f64) -> Self {
         let mut values = [[0.0; 3]; 3];
         for (li, level) in IsolationLevel::ALL.iter().enumerate() {
@@ -37,6 +38,7 @@ impl BenefitMatrix {
         Self { values, alpha, observations: 0 }
     }
 
+    /// Current 1–10 benefit estimate of giving `class` its own `level`.
     pub fn get(&self, level: IsolationLevel, class: AnimalClass) -> f64 {
         self.values[level_index(level)][class.index()]
     }
@@ -63,6 +65,7 @@ impl BenefitMatrix {
         self.observations += 1;
     }
 
+    /// Observations folded in so far (telemetry / tests).
     pub fn observations(&self) -> u64 {
         self.observations
     }

@@ -95,6 +95,7 @@ impl SlotMap {
         }
     }
 
+    /// Is `node` schedulable (its server not drained)?
     pub fn node_available(&self, node: NodeId) -> bool {
         self.avail[node.0]
     }
@@ -177,6 +178,7 @@ impl SlotMap {
         (lo..lo + self.cpus_per_node).filter(move |&c| avail && self.occ[c] == 0).map(CpuId)
     }
 
+    /// Free CPUs on `node`; 0 while its server is drained.
     pub fn free_count(&self, node: NodeId) -> usize {
         if self.avail[node.0] {
             self.free_per_node[node.0]
@@ -227,6 +229,7 @@ impl SlotMap {
 /// fractions for the scorer.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Assignment {
+    /// Hardware threads to pin, one per vCPU.
     pub cpus: Vec<CpuId>,
     /// Fraction of vCPUs per node (sums to 1).
     pub fractions: Vec<f64>,
@@ -234,6 +237,19 @@ pub struct Assignment {
     pub servers: usize,
     /// Anchor node the fill started from.
     pub anchor: NodeId,
+}
+
+/// A candidate-generation scope: when `Some`, only nodes whose server id
+/// falls in the half-open range are anchored or filled from — how the
+/// sharded coordinator keeps each zone's decisions inside its own server
+/// band.  `None` (and the full range) is the unrestricted global search;
+/// every unscoped entry point below delegates with `None`, so the global
+/// path is untouched byte-for-byte.
+pub type ServerScope<'a> = Option<&'a std::ops::Range<usize>>;
+
+#[inline]
+fn in_scope(topo: &Topology, scope: ServerScope<'_>, node: NodeId) -> bool {
+    scope.is_none_or(|r| r.contains(&topo.server_of_node(node).0))
 }
 
 /// Greedy proximity fill from `anchor`: take free CPUs in SLIT-distance
@@ -263,10 +279,31 @@ pub fn proximity_fill_capped(
     strict: bool,
     max_per_node: usize,
 ) -> Option<Assignment> {
+    proximity_fill_in(topo, slots, anchor, vcpus, class, strict, max_per_node, None)
+}
+
+/// [`proximity_fill_capped`] restricted to a [`ServerScope`]: the distance
+/// walk skips any node outside the scope's server band (the anchor itself
+/// may sit outside it — cross-zone evacuations fill *toward* the target
+/// zone from the stranded VM's memory anchor).
+#[allow(clippy::too_many_arguments)]
+pub fn proximity_fill_in(
+    topo: &Topology,
+    slots: &SlotMap,
+    anchor: NodeId,
+    vcpus: usize,
+    class: AnimalClass,
+    strict: bool,
+    max_per_node: usize,
+    scope: ServerScope<'_>,
+) -> Option<Assignment> {
     let max_per_node = max_per_node.max(1);
     let mut cpus = Vec::with_capacity(vcpus);
     let mut per_node = vec![0usize; topo.num_nodes()];
     for &node in topo.nodes_by_distance(anchor) {
+        if !in_scope(topo, scope, node) {
+            continue;
+        }
         if strict && !slots.node_compatible(node, class) {
             continue;
         }
@@ -343,12 +380,31 @@ pub fn generate_with_bw(
     max: usize,
     bw_cap: usize,
 ) -> Vec<Assignment> {
+    generate_with_bw_in(topo, slots, vcpus, class, near, max, bw_cap, None)
+}
+
+/// [`generate_with_bw`] restricted to a [`ServerScope`]: anchors are drawn
+/// only from the scope's servers and every fill stays inside it.  With
+/// `None` (or the full server range) the anchor set, its order and every
+/// fill are identical to the unscoped path.
+#[allow(clippy::too_many_arguments)]
+pub fn generate_with_bw_in(
+    topo: &Topology,
+    slots: &SlotMap,
+    vcpus: usize,
+    class: AnimalClass,
+    near: Option<NodeId>,
+    max: usize,
+    bw_cap: usize,
+    scope: ServerScope<'_>,
+) -> Vec<Assignment> {
     let mut anchors: Vec<NodeId> = Vec::new();
     if let Some(n) = near {
         anchors.push(n);
     }
-    // Emptiest node of each server.
-    for server in 0..topo.spec.servers {
+    // Emptiest node of each (in-scope) server.
+    let server_band = scope.cloned().unwrap_or(0..topo.spec.servers);
+    for server in server_band {
         if let Some(best) = topo
             .nodes_of_server(crate::topology::ServerId(server))
             .max_by_key(|n| slots.free_count(*n))
@@ -356,8 +412,9 @@ pub fn generate_with_bw(
             anchors.push(best);
         }
     }
-    // Globally emptiest nodes.
-    let mut by_free: Vec<NodeId> = (0..topo.num_nodes()).map(NodeId).collect();
+    // Globally emptiest (in-scope) nodes.
+    let mut by_free: Vec<NodeId> =
+        (0..topo.num_nodes()).map(NodeId).filter(|n| in_scope(topo, scope, *n)).collect();
     by_free.sort_by_key(|n| std::cmp::Reverse(slots.free_count(*n)));
     anchors.extend(by_free.into_iter().take(max));
 
@@ -371,7 +428,9 @@ pub fn generate_with_bw(
             continue;
         }
         // Strict (Table 3) first; relax only if strict found nothing.
-        if let Some(a) = proximity_fill(topo, slots, anchor, vcpus, class, true) {
+        if let Some(a) =
+            proximity_fill_in(topo, slots, anchor, vcpus, class, true, usize::MAX, scope)
+        {
             if !out.contains(&a) {
                 out.push(a);
             }
@@ -379,7 +438,7 @@ pub fn generate_with_bw(
         // Bandwidth-spread variant for bw-heavy apps.
         if bw_cap != usize::MAX && out.len() < max {
             if let Some(a) =
-                proximity_fill_capped(topo, slots, anchor, vcpus, class, true, bw_cap)
+                proximity_fill_in(topo, slots, anchor, vcpus, class, true, bw_cap, scope)
             {
                 if !out.contains(&a) {
                     out.push(a);
@@ -390,12 +449,22 @@ pub fn generate_with_bw(
     if out.is_empty() {
         // Scarcity fallback: ignore class compatibility.
         for anchor in (0..topo.num_nodes()).map(NodeId) {
-            if let Some(a) = proximity_fill_capped(
-                topo, slots, anchor, vcpus, class, false,
+            if !in_scope(topo, scope, anchor) {
+                continue;
+            }
+            if let Some(a) = proximity_fill_in(
+                topo,
+                slots,
+                anchor,
+                vcpus,
+                class,
+                false,
                 if bw_cap == usize::MAX { usize::MAX } else { bw_cap },
+                scope,
             )
-            .or_else(|| proximity_fill(topo, slots, anchor, vcpus, class, false))
-            {
+            .or_else(|| {
+                proximity_fill_in(topo, slots, anchor, vcpus, class, false, usize::MAX, scope)
+            }) {
                 out.push(a);
                 if out.len() >= max.max(1) {
                     break;
@@ -436,10 +505,28 @@ pub fn generate_pruned(
     bw_cap: usize,
     k: usize,
 ) -> (Vec<Assignment>, bool) {
+    generate_pruned_in(topo, slots, vcpus, class, near, max, bw_cap, k, None)
+}
+
+/// [`generate_pruned`] restricted to a [`ServerScope`]: the anchor walk
+/// and every fill skip nodes outside the scope's server band, and the
+/// scarcity fallback merges [`generate_with_bw_in`] under the same scope.
+#[allow(clippy::too_many_arguments)]
+pub fn generate_pruned_in(
+    topo: &Topology,
+    slots: &SlotMap,
+    vcpus: usize,
+    class: AnimalClass,
+    near: Option<NodeId>,
+    max: usize,
+    bw_cap: usize,
+    k: usize,
+    scope: ServerScope<'_>,
+) -> (Vec<Assignment>, bool) {
     let anchor0 = near.unwrap_or_else(|| {
         (0..topo.num_nodes())
             .map(NodeId)
-            .filter(|n| slots.node_available(*n))
+            .filter(|n| slots.node_available(*n) && in_scope(topo, scope, *n))
             .max_by_key(|n| slots.free_count(*n))
             .unwrap_or(NodeId(0))
     });
@@ -449,6 +536,9 @@ pub fn generate_pruned(
         if picked >= k || out.len() >= max {
             break;
         }
+        if !in_scope(topo, scope, node) {
+            continue;
+        }
         if !slots.node_available(node)
             || slots.free_count(node) == 0
             || !slots.node_compatible(node, class)
@@ -456,14 +546,15 @@ pub fn generate_pruned(
             continue;
         }
         picked += 1;
-        if let Some(a) = proximity_fill(topo, slots, node, vcpus, class, true) {
+        if let Some(a) = proximity_fill_in(topo, slots, node, vcpus, class, true, usize::MAX, scope)
+        {
             if !out.contains(&a) {
                 out.push(a);
             }
         }
         if bw_cap != usize::MAX && out.len() < max {
             if let Some(a) =
-                proximity_fill_capped(topo, slots, node, vcpus, class, true, bw_cap)
+                proximity_fill_in(topo, slots, node, vcpus, class, true, bw_cap, scope)
             {
                 if !out.contains(&a) {
                     out.push(a);
@@ -479,7 +570,7 @@ pub fn generate_pruned(
         // systems the unpruned path would find little more, and running
         // both generators on every decision would make pruning a pure
         // overhead exactly where it should help.
-        for a in generate_with_bw(topo, slots, vcpus, class, near, max, bw_cap) {
+        for a in generate_with_bw_in(topo, slots, vcpus, class, near, max, bw_cap, scope) {
             if out.len() >= max {
                 break;
             }
@@ -731,6 +822,93 @@ mod tests {
             generate_pruned(&topo, &slots, 4, AnimalClass::Sheep, None, 8, usize::MAX, 4);
         assert!(fell_back, "scarce system must fall back to the unpruned path");
         assert!(!cands.is_empty());
+    }
+
+    #[test]
+    fn scoped_generation_stays_inside_the_server_band() {
+        let topo = Topology::paper();
+        let slots = SlotMap::empty(&topo);
+        let scope = 2usize..4usize; // servers 2 and 3 only
+        let check = |cands: &[Assignment]| {
+            assert!(!cands.is_empty());
+            for c in cands {
+                for (n, f) in c.fractions.iter().enumerate() {
+                    if *f > 0.0 {
+                        let s = topo.server_of_node(NodeId(n)).0;
+                        assert!(scope.contains(&s), "candidate leaked to server {s}");
+                    }
+                }
+            }
+        };
+        check(&generate_with_bw_in(
+            &topo,
+            &slots,
+            8,
+            AnimalClass::Sheep,
+            None,
+            8,
+            usize::MAX,
+            Some(&scope),
+        ));
+        let (pruned, _) = generate_pruned_in(
+            &topo,
+            &slots,
+            8,
+            AnimalClass::Sheep,
+            None,
+            8,
+            usize::MAX,
+            16,
+            Some(&scope),
+        );
+        check(&pruned);
+        // An out-of-scope `near` anchor still fills inside the band.
+        check(&generate_with_bw_in(
+            &topo,
+            &slots,
+            8,
+            AnimalClass::Sheep,
+            Some(NodeId(0)),
+            8,
+            usize::MAX,
+            Some(&scope),
+        ));
+    }
+
+    #[test]
+    fn full_range_scope_matches_unscoped_generation() {
+        let topo = Topology::paper();
+        let slots = SlotMap::empty(&topo);
+        let full = 0usize..topo.spec.servers;
+        for near in [None, Some(NodeId(7))] {
+            let a = generate_with_bw(&topo, &slots, 8, AnimalClass::Sheep, near, 8, 4);
+            let b = generate_with_bw_in(
+                &topo,
+                &slots,
+                8,
+                AnimalClass::Sheep,
+                near,
+                8,
+                4,
+                Some(&full),
+            );
+            assert_eq!(a, b, "full-range scope must be bit-identical (near {near:?})");
+            let (p, fp) =
+                generate_pruned(&topo, &slots, 8, AnimalClass::Sheep, near, 8, 4, 16);
+            let (q, fq) = generate_pruned_in(
+                &topo,
+                &slots,
+                8,
+                AnimalClass::Sheep,
+                near,
+                8,
+                4,
+                16,
+                Some(&full),
+            );
+            assert_eq!(p, q);
+            assert_eq!(fp, fq);
+        }
     }
 
     #[test]

@@ -143,8 +143,10 @@ pub struct DeltaProblem {
     tracked: BTreeMap<VmId, TrackedVm>,
     /// Flat row-major node-distance table (`n_live × n_live`), so the
     /// per-row `dm` precompute indexes arrays instead of calling back
-    /// into the topology per (k, j) pair.
-    dist: Vec<f64>,
+    /// into the topology per (k, j) pair.  Shared (`Arc`) because the
+    /// table is immutable and O(N²): the sharded coordinator builds it
+    /// once and hands every zone's problem the same allocation.
+    dist: std::sync::Arc<Vec<f64>>,
     servers: usize,
     /// Node -> server lookup (congestion-penalty routing).
     server_of: Vec<u32>,
@@ -169,7 +171,33 @@ pub struct DeltaProblem {
 }
 
 impl DeltaProblem {
+    /// Empty problem for `topo`, building the node-distance table.
     pub fn new(topo: &Topology, weights: Weights) -> Result<Self> {
+        Self::with_dist(topo, weights, std::sync::Arc::new(Self::build_dist(topo)))
+    }
+
+    /// The flat row-major node-distance table `new` builds.  Exposed so
+    /// the sharded coordinator can build it once and share it across Z
+    /// per-zone problems via [`Self::with_dist`] (the table is O(N²) —
+    /// the dominant allocation at cluster scale).
+    pub(crate) fn build_dist(topo: &Topology) -> Vec<f64> {
+        let n_live = topo.num_nodes();
+        let mut d = vec![0.0; n_live * n_live];
+        for k in 0..n_live {
+            for j in 0..n_live {
+                d[k * n_live + j] = topo.distance(NodeId(k), NodeId(j));
+            }
+        }
+        d
+    }
+
+    /// [`Self::new`] with a caller-provided (shared) distance table.
+    /// `dist` must be `build_dist(topo)` for the same topology.
+    pub(crate) fn with_dist(
+        topo: &Topology,
+        weights: Weights,
+        dist: std::sync::Arc<Vec<f64>>,
+    ) -> Result<Self> {
         let meta = Meta::expected();
         let n_live = topo.num_nodes();
         let template = if n_live <= meta.num_nodes {
@@ -188,15 +216,7 @@ impl DeltaProblem {
             slots_per_node: (topo.spec.cores_per_node * topo.spec.threads_per_core) as f64,
             node_bw: topo.spec.mem_bw_per_node_gbs,
             tracked: BTreeMap::new(),
-            dist: {
-                let mut d = vec![0.0; n_live * n_live];
-                for k in 0..n_live {
-                    for j in 0..n_live {
-                        d[k * n_live + j] = topo.distance(NodeId(k), NodeId(j));
-                    }
-                }
-                d
-            },
+            dist,
             servers: topo.spec.servers,
             server_of: (0..n_live)
                 .map(|i| topo.server_of_node(NodeId(i)).0 as u32)
@@ -217,10 +237,12 @@ impl DeltaProblem {
         self.tracked.len()
     }
 
+    /// `true` when no VM has a live row.
     pub fn is_empty(&self) -> bool {
         self.tracked.is_empty()
     }
 
+    /// Does `id` have a live row?
     pub fn contains(&self, id: VmId) -> bool {
         self.tracked.contains_key(&id)
     }
@@ -259,13 +281,22 @@ impl DeltaProblem {
     /// common clean-path decision).
     pub fn sync(&mut self, sim: &mut Simulator) -> usize {
         let dirty = sim.drain_coord_dirty();
+        self.sync_from(sim, &dirty)
+    }
+
+    /// [`Self::sync`] against a caller-provided dirty set — the sharded
+    /// coordinator drains the simulator once, routes each id to its
+    /// owning zone's queue, and feeds every zone's problem its own slice.
+    /// With the full drained set this is bit-identical to `sync` (same
+    /// ids in the same ascending order).
+    pub fn sync_from(&mut self, sim: &Simulator, dirty: &std::collections::BTreeSet<VmId>) -> usize {
         if dirty.is_empty() {
             return 0;
         }
         let mut membership = false;
         let mut updated: Vec<VmId> = Vec::new();
         let mut touched = 0usize;
-        for id in dirty {
+        for &id in dirty {
             match sim.get(id) {
                 Some(mvm) if mvm.vm.state == VmState::Running => {
                     let entry = VmEntry {
@@ -351,6 +382,17 @@ impl DeltaProblem {
         self.tracked.insert(id, tv);
         self.bump_agg_ops();
         fresh
+    }
+
+    /// [`Self::forget`] plus the dense-state repair `sync` would have
+    /// done — for ownership transfers, where a zone must drop a row for a
+    /// VM that is still running (it now belongs to another zone's
+    /// problem) and no dirty event will ever arrive here to trigger it.
+    /// No-op for untracked ids.
+    pub(crate) fn forget_external(&mut self, id: VmId) {
+        if self.forget(id) {
+            self.apply_dense(true, &[]);
+        }
     }
 
     /// Drop a VM's row + aggregate contributions; true if it was tracked.

@@ -35,11 +35,14 @@ use crate::workload::classes::{AnimalClass, IsolationLevel};
 /// SM-IPC and SM-MPI variants).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Metric {
+    /// Instructions per cycle — deviation means compute starvation.
     Ipc,
+    /// Misses per instruction — deviation means memory-locality loss.
     Mpi,
 }
 
 impl Metric {
+    /// The paper's variant name for this metric ("SM-IPC" / "SM-MPI").
     pub fn name(self) -> &'static str {
         match self {
             Metric::Ipc => "SM-IPC",
@@ -51,6 +54,7 @@ impl Metric {
 /// Coordinator configuration.
 #[derive(Debug, Clone)]
 pub struct MapperConfig {
+    /// Counter driving deviation detection (SM-IPC vs SM-MPI).
     pub metric: Metric,
     /// `T`: tolerated relative deviation before a VM counts as affected.
     pub threshold: f64,
@@ -86,10 +90,12 @@ pub struct MapperConfig {
     /// exactly.  0 (default) keeps scoring congestion-blind and
     /// bit-identical to the pre-fabric mapper.
     pub congestion_weight: f64,
+    /// Scoring-objective weights passed through to the scorer.
     pub weights: Weights,
 }
 
 impl MapperConfig {
+    /// Paper-default configuration (Table/§5 constants) for `metric`.
     pub fn new(metric: Metric) -> Self {
         Self {
             metric,
@@ -122,19 +128,23 @@ struct Pending {
 /// Telemetry counters.
 #[derive(Debug, Clone, Default)]
 pub struct MapperStats {
+    /// Arrival placements attempted.
     pub arrivals: u64,
+    /// VMs re-pinned by monitoring passes.
     pub remaps: u64,
     /// Worst-first reshuffle passes.
     pub reshuffles: u64,
     /// Full re-placement sweeps ([`SmMapper::repack`] — the
     /// capacity-carving / optimizer-artifact path).
     pub repacks: u64,
+    /// Candidate batches sent to the scorer.
     pub scorer_batches: u64,
     /// Decisions scored through the sparse delta path (system beyond the
     /// artifact shapes).
     pub delta_decisions: u64,
     /// Pruned candidate generation fell back to the unpruned anchor set.
     pub prune_fallbacks: u64,
+    /// Cumulative affected-set size across monitoring passes.
     pub affected_total: u64,
     /// VMs moved off draining servers (scenario engine).
     pub evacuations: u64,
@@ -143,7 +153,9 @@ pub struct MapperStats {
 /// Result of one monitoring pass.
 #[derive(Debug, Clone, Default)]
 pub struct IntervalReport {
+    /// VMs whose measured counter deviated beyond `T`, worst first.
     pub affected: Vec<VmId>,
+    /// The subset actually re-pinned this pass.
     pub remapped: Vec<VmId>,
 }
 
@@ -151,7 +163,7 @@ pub struct IntervalReport {
 /// logic needs to tell "the current placement won" (negative expected
 /// benefit) apart from "there was nothing to decide".
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
-enum RemapOutcome {
+pub(crate) enum RemapOutcome {
     /// Re-pinned to a better-scoring candidate.
     Moved,
     /// Candidates existed but the current placement scored best.
@@ -162,8 +174,10 @@ enum RemapOutcome {
 
 /// The shared-memory-aware mapper (SM-IPC / SM-MPI).
 pub struct SmMapper {
+    /// Thresholds, cadence, and scoring weights.
     pub cfg: MapperConfig,
     scorer: Scorer,
+    /// Learned Table 4 estimates driving the remap search order.
     pub benefit: BenefitMatrix,
     /// Expected (ipc, mpi) per VM — `p̄` in Algorithm 1, from the
     /// solo-ideal model.
@@ -176,10 +190,24 @@ pub struct SmMapper {
     order_buf: Vec<VmId>,
     affected_buf: Vec<(VmId, f64, f64)>,
     logged_prune_fallback: bool,
+    /// Sharded mode ([`SmMapper::set_shard`]): every candidate search is
+    /// restricted to this half-open server-id band.  `None` = global.
+    scope: Option<std::ops::Range<usize>>,
+    /// Sharded mode: the zone-partitioned dirty router shared by all
+    /// zone mappers, plus this mapper's own zone index.  `None` = drain
+    /// the simulator's coordinator dirty set directly.
+    router: Option<(std::sync::Arc<std::sync::Mutex<super::zone_mapper::DirtyRouter>>, usize)>,
+    /// Sharded mode: pre-built node-distance table shared across all
+    /// zones' delta problems (the table is O(nodes²) — one copy per
+    /// cluster instead of one per zone).
+    shared_dist: Option<std::sync::Arc<Vec<f64>>>,
+    /// Decision counters (telemetry).
     pub stats: MapperStats,
 }
 
 impl SmMapper {
+    /// Mapper with `cfg`, scoring through `scorer`, starting from the
+    /// Table 4 priors and an empty tracking set.
     pub fn new(cfg: MapperConfig, scorer: Scorer) -> Self {
         Self {
             cfg,
@@ -191,12 +219,34 @@ impl SmMapper {
             order_buf: Vec::new(),
             affected_buf: Vec::new(),
             logged_prune_fallback: false,
+            scope: None,
+            router: None,
+            shared_dist: None,
             stats: MapperStats::default(),
         }
     }
 
+    /// Backend name of the scorer driving this mapper's decisions.
     pub fn scorer_name(&self) -> &'static str {
         self.scorer.name()
+    }
+
+    /// Put this mapper into sharded mode: candidate searches stay inside
+    /// `scope` (a half-open server-id band), dirty ids arrive through
+    /// `router` queue `zone` instead of a direct simulator drain, and the
+    /// lazily created scoring problem reuses the cluster-wide shared
+    /// distance table.  Must be called before the first decision.
+    pub(crate) fn set_shard(
+        &mut self,
+        zone: usize,
+        scope: std::ops::Range<usize>,
+        router: std::sync::Arc<std::sync::Mutex<super::zone_mapper::DirtyRouter>>,
+        dist: std::sync::Arc<Vec<f64>>,
+    ) {
+        debug_assert!(self.delta.is_none(), "set_shard after the first decision");
+        self.scope = Some(scope);
+        self.router = Some((router, zone));
+        self.shared_dist = Some(dist);
     }
 
     // ---- problem assembly -------------------------------------------------
@@ -210,12 +260,31 @@ impl SmMapper {
     /// Patch the persistent scoring problem from the simulator's dirty
     /// set (creating it on first use).  Every decision entry point calls
     /// this first; on a clean system it is a no-op.
-    fn sync(&mut self, sim: &mut Simulator) -> Result<()> {
+    pub(crate) fn sync(&mut self, sim: &mut Simulator) -> Result<()> {
         if self.delta.is_none() {
-            self.delta = Some(DeltaProblem::new(&sim.topo, self.cfg.weights)?);
+            self.delta = Some(match &self.shared_dist {
+                Some(dist) => DeltaProblem::with_dist(&sim.topo, self.cfg.weights, dist.clone())?,
+                None => DeltaProblem::new(&sim.topo, self.cfg.weights)?,
+            });
         }
         let delta = self.delta.as_mut().unwrap();
-        delta.sync(sim);
+        match &self.router {
+            // Sharded mode: the router drains the simulator once and fans
+            // ids out per owning zone; this mapper folds in only its own
+            // queue.  At Z=1 that queue IS the whole dirty set, so the
+            // patch sequence is identical to the direct drain below.
+            Some((router, zone)) => {
+                let mine = {
+                    let mut r = router.lock().expect("dirty router poisoned");
+                    r.pump(sim);
+                    r.take(*zone)
+                };
+                delta.sync_from(sim, &mine);
+            }
+            None => {
+                delta.sync(sim);
+            }
+        }
         // Congestion-aware mode: refresh the route-congestion snapshot so
         // this decision scores against the fabric's current state.
         if self.cfg.congestion_weight > 0.0 {
@@ -347,8 +416,10 @@ impl SmMapper {
         // The simulator maintains the slot map persistently; no rebuild.
         let prune_k = self.effective_prune_k(&sim.topo);
         let mut fallback = "none";
+        let scope = self.scope.clone();
         let (mut cands, fb) = gen_candidates(
             &sim.topo, sim.slots(), vcpus, class, None, self.cfg.batch_cap, bw_cap, prune_k,
+            scope.as_ref(),
         );
         self.note_prune(fb);
         if cands.is_empty() {
@@ -359,6 +430,7 @@ impl SmMapper {
             fallback = "reshuffle";
             let (c2, fb) = gen_candidates(
                 &sim.topo, sim.slots(), vcpus, class, None, self.cfg.batch_cap, bw_cap, prune_k,
+                scope.as_ref(),
             );
             self.note_prune(fb);
             cands = c2;
@@ -367,7 +439,7 @@ impl SmMapper {
                 fallback = "repack";
                 let (c3, fb) = gen_candidates(
                     &sim.topo, sim.slots(), vcpus, class, None, self.cfg.batch_cap, bw_cap,
-                    prune_k,
+                    prune_k, scope.as_ref(),
                 );
                 self.note_prune(fb);
                 cands = c3;
@@ -432,25 +504,13 @@ impl SmMapper {
     }
 
     /// Sync the cumulative [`MapperStats`] into the telemetry registry
-    /// under `mapper.*` (high-water-mark semantics: repeated syncs of the
-    /// same monotonic totals never double-count).
+    /// under `mapper.*`.  Zone mappers publish nothing themselves: the
+    /// sharded coordinator aggregates every zone's counters and publishes
+    /// the cluster-wide totals under the same names.
     fn publish_stats(&self) {
-        if !telemetry::enabled() {
-            return;
+        if self.router.is_none() {
+            publish_mapper_stats(&self.stats);
         }
-        let s = &self.stats;
-        telemetry::with(|r| {
-            let reg = r.registry_mut();
-            reg.counter_hwm("mapper.arrivals", s.arrivals as f64);
-            reg.counter_hwm("mapper.remaps", s.remaps as f64);
-            reg.counter_hwm("mapper.reshuffles", s.reshuffles as f64);
-            reg.counter_hwm("mapper.repacks", s.repacks as f64);
-            reg.counter_hwm("mapper.scorer_batches", s.scorer_batches as f64);
-            reg.counter_hwm("mapper.delta_decisions", s.delta_decisions as f64);
-            reg.counter_hwm("mapper.prune_fallbacks", s.prune_fallbacks as f64);
-            reg.counter_hwm("mapper.affected_total", s.affected_total as f64);
-            reg.counter_hwm("mapper.evacuations", s.evacuations as f64);
-        });
     }
 
     /// Score `cands` as row replacements for `id` against the persistent
@@ -558,12 +618,7 @@ impl SmMapper {
         for id in &order {
             let Some((ipc, mpi, rel)) = self.window_counters(sim, *id) else { continue };
             let (exp_ipc, exp_mpi) = self.expectation(sim, *id);
-            let dev = match self.cfg.metric {
-                Metric::Ipc => (exp_ipc - ipc) / exp_ipc.max(1e-9),
-                // Floor the MPI denominator: cache-friendly apps (mpegaudio,
-                // base MPI ~1e-3) would otherwise trip T on counter noise.
-                Metric::Mpi => (mpi - exp_mpi) / exp_mpi.max(5e-3),
-            };
+            let dev = deviation(self.cfg.metric, ipc, mpi, exp_ipc, exp_mpi);
             if dev >= self.cfg.threshold {
                 affected.push((*id, dev, rel));
             }
@@ -590,7 +645,9 @@ impl SmMapper {
         Ok(report)
     }
 
-    fn window_counters(&self, sim: &Simulator, id: VmId) -> Option<(f64, f64, f64)> {
+    /// Windowed `(mean ipc, mean mpi, mean rel-perf)` for one VM, or
+    /// `None` before the first counter sample lands.
+    pub(crate) fn window_counters(&self, sim: &Simulator, id: VmId) -> Option<(f64, f64, f64)> {
         let h = &sim.get(id)?.history;
         if h.is_empty() {
             return None;
@@ -605,7 +662,7 @@ impl SmMapper {
     /// Try to move one affected VM (lines 22–27).  `rel_hint` carries the
     /// monitoring pass's already-computed windowed relative performance
     /// (recomputed only when absent, e.g. from the worst-first reshuffle).
-    fn remap_vm(
+    pub(crate) fn remap_vm(
         &mut self,
         sim: &mut Simulator,
         id: VmId,
@@ -639,8 +696,11 @@ impl SmMapper {
         // released, then revert — no from_sim rebuild, no copy.
         let batch_cap = self.cfg.batch_cap - 1;
         let prune_k = self.effective_prune_k(&sim.topo);
+        let scope = self.scope.clone();
         let (cands, fb) = sim.with_vm_released(id, |topo, slots| {
-            gen_candidates(topo, slots, vcpus, class, near, batch_cap, bw_cap, prune_k)
+            gen_candidates(
+                topo, slots, vcpus, class, near, batch_cap, bw_cap, prune_k, scope.as_ref(),
+            )
         });
         self.note_prune(fb);
         if cands.is_empty() {
@@ -717,52 +777,30 @@ impl SmMapper {
     ) -> Result<Vec<VmId>> {
         let mut failed = Vec::new();
         for &id in stranded {
-            if self.evacuate_vm(sim, id)? {
+            if self.evacuate_vm(sim, id, f64::INFINITY, "evacuate")? {
                 self.stats.evacuations += 1;
             } else {
                 failed.push(id);
             }
         }
-
-        // Memory-only residents: pull pages off the drained nodes toward
-        // each VM's vCPU nodes (hottest first, bandwidth-limited).
-        let num_nodes = sim.topo.num_nodes();
-        let drained: Vec<bool> = (0..num_nodes)
-            .map(|n| sim.topo.server_of_node(NodeId(n)) == server)
-            .collect();
-        let ids: Vec<VmId> = sim
-            .vms()
-            .filter(|(_, m)| m.vm.state == VmState::Running)
-            .map(|(id, _)| *id)
-            .collect();
-        for id in ids {
-            let dist: Vec<(NodeId, f64)> = {
-                let mvm = sim.get(id).expect("running vm");
-                let mem = mvm.vm.memory_fractions(num_nodes);
-                let on_drained: f64 =
-                    mem.iter().enumerate().filter(|(n, _)| drained[*n]).map(|(_, f)| f).sum();
-                if on_drained <= 1e-9 {
-                    continue;
-                }
-                mvm.placement_fractions(&sim.topo)
-                    .iter()
-                    .enumerate()
-                    .filter(|(n, f)| **f > 0.0 && !drained[*n])
-                    .map(|(n, f)| (NodeId(n), *f))
-                    .collect()
-            };
-            if dist.is_empty() {
-                continue; // evacuation failed above; nowhere to put pages
-            }
-            sim.migrate_memory_toward(id, &dist, f64::INFINITY)?;
-        }
+        pull_memory_off_drained(sim, server)?;
         self.publish_stats();
         Ok(failed)
     }
 
-    /// Forced remap of one VM off a draining server: like [`Self::remap_vm`]
-    /// but without the keep-current option (staying is not on the menu).
-    fn evacuate_vm(&mut self, sim: &mut Simulator, id: VmId) -> Result<bool> {
+    /// Forced remap of one VM off its current placement: like
+    /// [`Self::remap_vm`] but without the keep-current option (staying is
+    /// not on the menu).  Used by the drain reaction (`budget_gb` =
+    /// infinity — the server is going away) and by the sharded
+    /// rebalancer's cross-zone exchange (bounded budget; the receiving
+    /// mapper's scope confines every candidate to its own zone).
+    pub(crate) fn evacuate_vm(
+        &mut self,
+        sim: &mut Simulator,
+        id: VmId,
+        budget_gb: f64,
+        kind: &'static str,
+    ) -> Result<bool> {
         self.sync(sim)?;
         let (vcpus, class, bw_cap) = {
             let Some(mvm) = sim.get(id) else { return Ok(false) };
@@ -772,12 +810,21 @@ impl SmMapper {
             let profile = mvm.profile.clone();
             (mvm.vm.vcpus(), profile.class, candidates::bw_node_cap(&sim.topo, &profile))
         };
+        // Cross-zone adoption: the receiving zone's problem has never
+        // seen this VM — give it a row before scoring.  A no-op on the
+        // drain path, where the VM is already tracked.
+        if !self.delta.as_ref().unwrap().contains(id) {
+            self.delta.as_mut().unwrap().ensure_row(sim, id)?;
+        }
         // The slot map already blocks the drained server's nodes, so every
         // candidate is online by construction.
         let batch_cap = self.cfg.batch_cap;
         let prune_k = self.effective_prune_k(&sim.topo);
+        let scope = self.scope.clone();
         let (cands, fb) = sim.with_vm_released(id, |topo, slots| {
-            gen_candidates(topo, slots, vcpus, class, None, batch_cap, bw_cap, prune_k)
+            gen_candidates(
+                topo, slots, vcpus, class, None, batch_cap, bw_cap, prune_k, scope.as_ref(),
+            )
         });
         self.note_prune(fb);
         if cands.is_empty() {
@@ -785,7 +832,7 @@ impl SmMapper {
         }
         let (best, score, cong) = self.pick_best(sim, id, &cands, false)?;
         let chosen = cands[best].clone();
-        self.record_decision(sim, id, "evacuate", cands.len(), Some(&chosen), score, cong, "none");
+        self.record_decision(sim, id, kind, cands.len(), Some(&chosen), score, cong, "none");
         sim.pin_all(id, &chosen.cpus)?;
         let mem: Vec<(NodeId, f64)> = chosen
             .fractions
@@ -794,7 +841,7 @@ impl SmMapper {
             .filter(|(_, f)| **f > 0.0)
             .map(|(nidx, f)| (NodeId(nidx), *f))
             .collect();
-        sim.migrate_memory_toward(id, &mem, f64::INFINITY)?;
+        sim.migrate_memory_toward(id, &mem, budget_gb)?;
         self.stats.remaps += 1;
         Ok(true)
     }
@@ -859,7 +906,15 @@ impl SmMapper {
     pub fn repack(&mut self, sim: &mut Simulator) -> Result<()> {
         let _t = telemetry::span(Phase::MapperRepack);
         self.stats.repacks += 1;
-        let order = self.vm_order(sim, None);
+        // Sharded mode replans only this zone's tracked VMs (the scoring
+        // rows are exactly the VMs this mapper owns); globally the order
+        // covers every running VM.  At Z=1 the two sets coincide.
+        let order: Vec<VmId> = if self.scope.is_some() {
+            self.sync(sim)?;
+            self.delta.as_ref().unwrap().ids().collect()
+        } else {
+            self.vm_order(sim, None)
+        };
         if order.is_empty() {
             return Ok(());
         }
@@ -902,6 +957,14 @@ impl SmMapper {
         // Drained servers stay out of the replan.
         for server in sim.offline_servers().collect::<Vec<_>>() {
             slots.set_server_available(&topo, server, false);
+        }
+        // Out-of-zone servers are off the menu for a zone-scoped repack.
+        if let Some(scope) = &self.scope {
+            for server in 0..topo.spec.servers {
+                if !scope.contains(&server) {
+                    slots.set_server_available(&topo, crate::topology::ServerId(server), false);
+                }
+            }
         }
         let mut plan: Vec<(VmId, Assignment)> = Vec::new();
         for (vcpus, id) in sized {
@@ -949,6 +1012,133 @@ impl SmMapper {
         }
         Ok(())
     }
+
+    // ---- sharded-coordination hooks ----------------------------------------
+
+    /// First, serial half of a monitoring pass (sharded coordination):
+    /// settle the benefit matrix, patch the scoring problem, and memoize
+    /// expectations for every tracked VM, so that [`Self::scan_rows`] and
+    /// the zone fan-out that follows never need `&mut self`.  Memoizing
+    /// ids that have no counter history yet is value-neutral: the
+    /// expectation is a pure function of the app's base profile, so the
+    /// global pass would compute the identical pair later.
+    pub(crate) fn begin_pass(&mut self, sim: &mut Simulator) -> Result<()> {
+        self.settle_benefit(sim);
+        self.sync(sim)?;
+        let ids: Vec<VmId> = self.delta.as_ref().unwrap().ids().collect();
+        for id in ids {
+            if sim.get(id).is_some() {
+                self.expectation(sim, id);
+            }
+        }
+        Ok(())
+    }
+
+    /// The monitoring pass's per-VM scan rows: `(id, deviation, windowed
+    /// rel-perf)` for every tracked VM with counter history, in
+    /// scoring-row order.  Read-only — the sharded coordinator extracts
+    /// these serially per zone (the simulator is not `Sync`) and fans
+    /// only the threshold filter + worst-first sort out to the pool.
+    /// Call after [`Self::begin_pass`] so every expectation is memoized.
+    pub(crate) fn scan_rows(&self, sim: &Simulator) -> Vec<(VmId, f64, f64)> {
+        let Some(delta) = self.delta.as_ref() else { return Vec::new() };
+        let mut rows = Vec::with_capacity(delta.len());
+        for id in delta.ids() {
+            let Some((ipc, mpi, rel)) = self.window_counters(sim, id) else { continue };
+            let Some(&(exp_ipc, exp_mpi)) = self.expected.get(&id) else { continue };
+            rows.push((id, deviation(self.cfg.metric, ipc, mpi, exp_ipc, exp_mpi), rel));
+        }
+        rows
+    }
+
+    /// Drop every trace of a VM handed to another zone (sharded
+    /// rebalancing): its scoring row, memoized expectation, and any
+    /// pending benefit measurement.
+    pub(crate) fn forget_vm(&mut self, id: VmId) {
+        if let Some(delta) = self.delta.as_mut() {
+            delta.forget_external(id);
+        }
+        self.expected.remove(&id);
+        self.pending.remove(&id);
+    }
+
+    /// Ids currently tracked by the scoring problem, ascending.  Empty
+    /// before the first decision.
+    pub(crate) fn tracked_ids(&self) -> Vec<VmId> {
+        self.delta.as_ref().map(|d| d.ids().collect()).unwrap_or_default()
+    }
+}
+
+/// Relative deviation of measured counters from their expectation
+/// (Algorithm 1 line 14), shared by [`SmMapper::interval`] and the
+/// sharded per-zone scan so the two detectors can never drift apart.
+pub(crate) fn deviation(metric: Metric, ipc: f64, mpi: f64, exp_ipc: f64, exp_mpi: f64) -> f64 {
+    match metric {
+        Metric::Ipc => (exp_ipc - ipc) / exp_ipc.max(1e-9),
+        // Floor the MPI denominator: cache-friendly apps (mpegaudio,
+        // base MPI ~1e-3) would otherwise trip T on counter noise.
+        Metric::Mpi => (mpi - exp_mpi) / exp_mpi.max(5e-3),
+    }
+}
+
+/// Pull memory-only residents' pages off a drained server toward each
+/// VM's own vCPU nodes (hottest first, no bandwidth cap — the server is
+/// going away).  Shared by the global and sharded drain reactions.
+pub(crate) fn pull_memory_off_drained(
+    sim: &mut Simulator,
+    server: crate::topology::ServerId,
+) -> Result<()> {
+    let num_nodes = sim.topo.num_nodes();
+    let drained: Vec<bool> =
+        (0..num_nodes).map(|n| sim.topo.server_of_node(NodeId(n)) == server).collect();
+    let ids: Vec<VmId> = sim
+        .vms()
+        .filter(|(_, m)| m.vm.state == VmState::Running)
+        .map(|(id, _)| *id)
+        .collect();
+    for id in ids {
+        let dist: Vec<(NodeId, f64)> = {
+            let mvm = sim.get(id).expect("running vm");
+            let mem = mvm.vm.memory_fractions(num_nodes);
+            let on_drained: f64 =
+                mem.iter().enumerate().filter(|(n, _)| drained[*n]).map(|(_, f)| f).sum();
+            if on_drained <= 1e-9 {
+                continue;
+            }
+            mvm.placement_fractions(&sim.topo)
+                .iter()
+                .enumerate()
+                .filter(|(n, f)| **f > 0.0 && !drained[*n])
+                .map(|(n, f)| (NodeId(n), *f))
+                .collect()
+        };
+        if dist.is_empty() {
+            continue; // evacuation failed; nowhere to put the pages
+        }
+        sim.migrate_memory_toward(id, &dist, f64::INFINITY)?;
+    }
+    Ok(())
+}
+
+/// Sync cumulative [`MapperStats`] into the telemetry registry under
+/// `mapper.*` (high-water-mark semantics: repeated syncs of the same
+/// monotonic totals never double-count).
+pub(crate) fn publish_mapper_stats(s: &MapperStats) {
+    if !telemetry::enabled() {
+        return;
+    }
+    telemetry::with(|r| {
+        let reg = r.registry_mut();
+        reg.counter_hwm("mapper.arrivals", s.arrivals as f64);
+        reg.counter_hwm("mapper.remaps", s.remaps as f64);
+        reg.counter_hwm("mapper.reshuffles", s.reshuffles as f64);
+        reg.counter_hwm("mapper.repacks", s.repacks as f64);
+        reg.counter_hwm("mapper.scorer_batches", s.scorer_batches as f64);
+        reg.counter_hwm("mapper.delta_decisions", s.delta_decisions as f64);
+        reg.counter_hwm("mapper.prune_fallbacks", s.prune_fallbacks as f64);
+        reg.counter_hwm("mapper.affected_total", s.affected_total as f64);
+        reg.counter_hwm("mapper.evacuations", s.evacuations as f64);
+    });
 }
 
 /// Candidate generation, dispatched on the pruning width (see
@@ -965,12 +1155,16 @@ fn gen_candidates(
     max: usize,
     bw_cap: usize,
     prune_k: Option<usize>,
+    scope: candidates::ServerScope,
 ) -> (Vec<Assignment>, bool) {
     match prune_k {
-        Some(k) => candidates::generate_pruned(topo, slots, vcpus, class, near, max, bw_cap, k),
-        None => {
-            (candidates::generate_with_bw(topo, slots, vcpus, class, near, max, bw_cap), false)
+        Some(k) => {
+            candidates::generate_pruned_in(topo, slots, vcpus, class, near, max, bw_cap, k, scope)
         }
+        None => (
+            candidates::generate_with_bw_in(topo, slots, vcpus, class, near, max, bw_cap, scope),
+            false,
+        ),
     }
 }
 

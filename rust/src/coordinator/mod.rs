@@ -12,6 +12,11 @@
 //!   matrices while the system fits the compiled shapes; sparse O(|p|)
 //!   delta scoring beyond them).
 //! * [`benefit`] — the dynamically learned benefit matrix (Table 4).
+//! * [`sharded`] (+ the internal `zone_mapper`) — opt-in hierarchical
+//!   coordination:
+//!   per-zone mappers over [`crate::topology::ZoneMap`] server bands
+//!   plus a slow-cadence global rebalancer (bit-identical to the global
+//!   mapper at Z=1).
 //!
 //! Candidate scoring runs on the AOT-compiled JAX/Pallas artifacts through
 //! PJRT ([`crate::runtime::Scorer`]); a native Rust scorer is the
@@ -22,9 +27,12 @@ pub mod benefit;
 pub mod candidates;
 pub mod delta;
 pub mod mapper;
+pub mod sharded;
+pub(crate) mod zone_mapper;
 
 pub use admission::{AdmissionConfig, AdmissionController, Decision};
 pub use benefit::BenefitMatrix;
 pub use candidates::{Assignment, SlotMap};
 pub use delta::DeltaProblem;
 pub use mapper::{classify_isolation, IntervalReport, MapperConfig, MapperStats, Metric, SmMapper};
+pub use sharded::{Coordinator, ShardConfig, ShardStats, ShardedMapper};

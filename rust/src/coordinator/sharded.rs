@@ -1,0 +1,462 @@
+//! Hierarchical sharded coordination: per-zone mappers plus a global
+//! rebalancer (ROADMAP open item 1 — no single decision-maker sees the
+//! whole cluster).
+//!
+//! The cluster is partitioned by [`ZoneMap`] into Z contiguous server
+//! bands.  Each band gets its own [`SmMapper`] whose scoring problem,
+//! dirty set, and candidate searches never leave the band, so per-pass
+//! decision cost drops from O(cluster) to O(cluster / Z) per zone.  The
+//! monitoring pass extracts per-zone scan rows serially (the simulator
+//! is deliberately not `Sync`) and fans the threshold filter +
+//! worst-first sort out over the per-simulator
+//! [`ThreadPool`](crate::util::pool::ThreadPool); every
+//! simulator mutation happens serially in ascending zone order, which
+//! keeps runs bit-identical per seed at any pool size — the same
+//! contract as the SoA tick engine.
+//!
+//! On a slower cadence a global rebalancer compares aggregate per-zone
+//! pressure (slot utilization, mean windowed rel-perf, fabric link ρ)
+//! and, when the utilization spread exceeds a hysteresis band, exchanges
+//! VMs from the most-loaded zone's boundary band into the least-loaded
+//! zone.  Only boundary candidates and summaries cross zones — never raw
+//! per-VM state.
+//!
+//! At Z=1 every step degenerates to the global [`SmMapper`] call
+//! sequence: one zone owns every server, the router's single queue is
+//! the whole dirty set, and the rebalancer never runs — the oracle
+//! parity test pins this bit-for-bit.
+
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Result};
+
+use super::candidates::Assignment;
+use super::delta::DeltaProblem;
+use super::mapper::{
+    publish_mapper_stats, pull_memory_off_drained, IntervalReport, MapperConfig, MapperStats,
+    RemapOutcome, SmMapper,
+};
+use super::zone_mapper::{exchange_vm, DirtyRouter, ExchangeOutcome, ZoneShard};
+use crate::runtime::Scorer;
+use crate::sim::Simulator;
+use crate::telemetry::{self, Phase};
+use crate::topology::{Topology, ZoneMap};
+use crate::vm::{VmId, VmState};
+
+/// Sharded-coordination knobs.
+#[derive(Debug, Clone)]
+pub struct ShardConfig {
+    /// Zone count Z (clamped to `[1, servers]` by [`ZoneMap`]).
+    pub zones: usize,
+    /// Monitoring passes between rebalancer runs (0 = never rebalance).
+    pub rebalance_every: u64,
+    /// Minimum inter-zone slot-utilization spread (max − min) before the
+    /// rebalancer moves anything — the hysteresis band that keeps nearly
+    /// balanced systems from ping-ponging VMs across zones.
+    pub hysteresis: f64,
+    /// Max cross-zone VM exchanges per rebalancer run.
+    pub max_exchanges: usize,
+}
+
+impl ShardConfig {
+    /// Defaults: rebalance every 4 monitoring passes, move at most 2 VMs
+    /// when the utilization spread exceeds 0.15.
+    pub fn new(zones: usize) -> Self {
+        Self { zones, rebalance_every: 4, hysteresis: 0.15, max_exchanges: 2 }
+    }
+}
+
+/// Cross-zone coordination counters (the per-zone mapper counters live
+/// in each zone's [`MapperStats`]; [`ShardedMapper::stats`] aggregates
+/// them).
+#[derive(Debug, Clone, Default)]
+pub struct ShardStats {
+    /// Rebalancer runs that got past the cadence gate.
+    pub rebalance_passes: u64,
+    /// VMs moved across a zone boundary by the rebalancer.
+    pub exchanges: u64,
+    /// Exchange attempts abandoned because the receiver had no capacity.
+    pub exchange_failures: u64,
+    /// Last rebalancer pressure summary, one `(slot utilization, mean
+    /// rel-perf, mean fabric ρ)` triple per zone.
+    pub last_pressure: Vec<(f64, f64, f64)>,
+}
+
+/// Z per-zone [`SmMapper`]s behind one coordinator facade.
+pub struct ShardedMapper {
+    shards: Vec<ZoneShard>,
+    router: Arc<Mutex<DirtyRouter>>,
+    zone_map: ZoneMap,
+    cfg: ShardConfig,
+    /// Monitoring passes so far (drives the rebalance cadence).
+    passes: u64,
+    /// Cross-zone stats; per-zone counters live in the shards.
+    pub shard_stats: ShardStats,
+}
+
+impl ShardedMapper {
+    /// Build Z zone mappers over `topo`, all sharing one dirty router
+    /// and one node-distance table.  Every zone runs the same mapper
+    /// config and scorer backend.
+    pub fn new(cfg: MapperConfig, scorer: Scorer, shard: ShardConfig, topo: &Topology) -> Self {
+        let zone_map = ZoneMap::new(topo.spec.servers, shard.zones);
+        let router = Arc::new(Mutex::new(DirtyRouter::new(zone_map.clone())));
+        let dist = Arc::new(DeltaProblem::build_dist(topo));
+        let shards = (0..zone_map.zones())
+            .map(|z| {
+                ZoneShard::new(
+                    cfg.clone(),
+                    scorer.clone(),
+                    z,
+                    &zone_map,
+                    router.clone(),
+                    dist.clone(),
+                )
+            })
+            .collect();
+        Self { shards, router, zone_map, cfg: shard, passes: 0, shard_stats: ShardStats::default() }
+    }
+
+    /// Actual zone count (after [`ZoneMap`] clamping).
+    pub fn zones(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Ticks between monitoring passes (same for every zone).
+    pub fn interval_every(&self) -> u64 {
+        self.shards[0].mapper.cfg.interval
+    }
+
+    /// Scorer backend name (same for every zone).
+    pub fn scorer_name(&self) -> &'static str {
+        self.shards[0].mapper.scorer_name()
+    }
+
+    /// Zone that currently owns `id`, if any zone placed it.
+    pub fn owner_zone(&self, id: VmId) -> Option<usize> {
+        self.router.lock().expect("dirty router poisoned").owner_of(id)
+    }
+
+    /// VM ids tracked by zone `zone`'s scoring problem, ascending.
+    pub fn tracked_of(&self, zone: usize) -> Vec<VmId> {
+        self.shards[zone].mapper.tracked_ids()
+    }
+
+    /// Cluster-wide mapper counters: the sum over all zones.
+    pub fn stats(&self) -> MapperStats {
+        let mut agg = MapperStats::default();
+        for s in &self.shards {
+            let z = &s.mapper.stats;
+            agg.arrivals += z.arrivals;
+            agg.remaps += z.remaps;
+            agg.reshuffles += z.reshuffles;
+            agg.repacks += z.repacks;
+            agg.scorer_batches += z.scorer_batches;
+            agg.delta_decisions += z.delta_decisions;
+            agg.prune_fallbacks += z.prune_fallbacks;
+            agg.affected_total += z.affected_total;
+            agg.evacuations += z.evacuations;
+        }
+        agg
+    }
+
+    /// Map a newly defined VM: zones are tried most-free-CPUs first
+    /// (ties to the lower zone id — deterministic), and the first zone
+    /// whose band has a candidate slot takes ownership.
+    pub fn place_arrival(&mut self, sim: &mut Simulator, id: VmId) -> Result<Assignment> {
+        let mut order: Vec<usize> = (0..self.shards.len()).collect();
+        if self.shards.len() > 1 {
+            let free: Vec<usize> = self.shards.iter().map(|s| s.free_cpus(sim)).collect();
+            order.sort_by(|a, b| free[*b].cmp(&free[*a]).then(a.cmp(b)));
+        }
+        let mut last_err = None;
+        for z in order {
+            match self.shards[z].mapper.place_arrival(sim, id) {
+                Ok(a) => {
+                    self.router.lock().expect("dirty router poisoned").set_owner(id, z);
+                    self.publish_stats();
+                    return Ok(a);
+                }
+                Err(e) => last_err = Some(e),
+            }
+        }
+        match last_err {
+            Some(e) => Err(e),
+            None => bail!("sharded mapper has no zones"),
+        }
+    }
+
+    /// One monitoring pass over every zone (Algorithm 1 lines 12–29, per
+    /// zone): serial per-zone sync + scan-row extraction, pool-parallel
+    /// threshold filter + worst-first sort, then serial remaps in
+    /// ascending zone order.  Runs the rebalancer afterwards when its
+    /// cadence comes up.
+    pub fn interval(&mut self, sim: &mut Simulator) -> Result<IntervalReport> {
+        let _t = telemetry::span(Phase::MapperInterval);
+        self.passes += 1;
+        for shard in &mut self.shards {
+            shard.mapper.begin_pass(sim)?;
+        }
+        let scans: Vec<Vec<(VmId, f64, f64)>> =
+            self.shards.iter().map(|s| s.mapper.scan_rows(sim)).collect();
+        let threshold = self.shards[0].mapper.cfg.threshold;
+        // Pure per-zone computation over plain extracted rows: safe to
+        // fan out, and job-ordered results keep the output independent
+        // of worker count.
+        let affected: Vec<Vec<(VmId, f64, f64)>> = match sim.worker_pool() {
+            Some(pool) if self.shards.len() > 1 => {
+                pool.scope_chunks(scans.len(), |z| filter_sort(&scans[z], threshold))
+            }
+            _ => scans.iter().map(|rows| filter_sort(rows, threshold)).collect(),
+        };
+        let mut report = IntervalReport::default();
+        for (z, aff) in affected.iter().enumerate() {
+            let shard = &mut self.shards[z];
+            shard.mapper.stats.affected_total += aff.len() as u64;
+            report.affected.extend(aff.iter().map(|(id, _, _)| *id));
+            for &(id, _, rel) in aff.iter().take(shard.mapper.cfg.max_moves) {
+                if shard.mapper.remap_vm(sim, id, Some(rel))? == RemapOutcome::Moved {
+                    report.remapped.push(id);
+                }
+            }
+        }
+        if self.shards.len() > 1
+            && self.cfg.rebalance_every > 0
+            && self.passes % self.cfg.rebalance_every == 0
+        {
+            self.rebalance(sim)?;
+        }
+        self.publish_stats();
+        Ok(report)
+    }
+
+    /// React to a server drain: the owner zone evacuates each stranded
+    /// VM inside its own band first; VMs that do not fit are offered to
+    /// the other zones (most free CPUs first) as cross-zone exchanges.
+    /// Returns the VMs no zone could take.
+    pub fn handle_drain(
+        &mut self,
+        sim: &mut Simulator,
+        server: crate::topology::ServerId,
+        stranded: &[VmId],
+    ) -> Result<Vec<VmId>> {
+        let drain_zone = self.zone_map.zone_of(server);
+        let mut failed = Vec::new();
+        for &id in stranded {
+            let owner = self
+                .owner_zone(id)
+                .or_else(|| sim.vm_zone(&self.zone_map, id))
+                .unwrap_or(drain_zone);
+            if self.shards[owner].mapper.evacuate_vm(sim, id, f64::INFINITY, "evacuate")? {
+                self.shards[owner].mapper.stats.evacuations += 1;
+                continue;
+            }
+            let mut moved = false;
+            if self.shards.len() > 1 {
+                let free: Vec<usize> = self.shards.iter().map(|s| s.free_cpus(sim)).collect();
+                let mut others: Vec<usize> =
+                    (0..self.shards.len()).filter(|z| *z != owner).collect();
+                others.sort_by(|a, b| free[*b].cmp(&free[*a]).then(a.cmp(b)));
+                for z in others {
+                    let (donor, receiver) = two_mut(&mut self.shards, owner, z);
+                    if exchange_vm(sim, donor, receiver, &self.router, id, f64::INFINITY)?
+                        == ExchangeOutcome::Moved
+                    {
+                        receiver.mapper.stats.evacuations += 1;
+                        moved = true;
+                        break;
+                    }
+                }
+            }
+            if !moved {
+                failed.push(id);
+            }
+        }
+        pull_memory_off_drained(sim, server)?;
+        self.publish_stats();
+        Ok(failed)
+    }
+
+    /// One rebalancer run: summarize per-zone pressure, and when the
+    /// slot-utilization spread exceeds the hysteresis band, exchange up
+    /// to `max_exchanges` boundary-band VMs (smallest first) from the
+    /// most- to the least-utilized zone.  Stops at the first exchange
+    /// the receiver cannot absorb.
+    fn rebalance(&mut self, sim: &mut Simulator) -> Result<()> {
+        self.shard_stats.rebalance_passes += 1;
+        let rho = sim.link_utilization();
+        let pressure: Vec<(f64, f64, f64)> = self
+            .shards
+            .iter()
+            .map(|s| {
+                let (util, rel) = s.pressure(sim);
+                (util, rel, zone_fabric_rho(sim, &s.servers, &rho))
+            })
+            .collect();
+        self.shard_stats.last_pressure = pressure.clone();
+        let mut donor = 0usize;
+        let mut receiver = 0usize;
+        for (z, p) in pressure.iter().enumerate().skip(1) {
+            if p.0 > pressure[donor].0 {
+                donor = z;
+            }
+            if p.0 < pressure[receiver].0 {
+                receiver = z;
+            }
+        }
+        if donor == receiver || pressure[donor].0 - pressure[receiver].0 <= self.cfg.hysteresis {
+            return Ok(());
+        }
+        // Boundary-band candidates: the donor-edge servers facing the
+        // receiver's side of the cluster, smallest VMs first (cheapest
+        // exchange), ids ascending for determinism.
+        let band = self.zone_map.boundary_servers(donor, receiver);
+        let mut cands: Vec<(usize, VmId)> = Vec::new();
+        for id in self.shards[donor].mapper.tracked_ids() {
+            let Some(mvm) = sim.get(id) else { continue };
+            if mvm.vm.state != VmState::Running {
+                continue;
+            }
+            let Some(cpu) = mvm.vcpu_pos.iter().flatten().next() else { continue };
+            let server = sim.topo.server_of_node(sim.topo.node_of_cpu(*cpu)).0;
+            if band.contains(&server) {
+                cands.push((mvm.vm.vcpus(), id));
+            }
+        }
+        cands.sort_unstable();
+        let budget = self.shards[donor].mapper.cfg.mig_budget_gb;
+        for (_, id) in cands.into_iter().take(self.cfg.max_exchanges) {
+            let (d, r) = two_mut(&mut self.shards, donor, receiver);
+            match exchange_vm(sim, d, r, &self.router, id, budget)? {
+                ExchangeOutcome::Moved => self.shard_stats.exchanges += 1,
+                ExchangeOutcome::NoCapacity => {
+                    self.shard_stats.exchange_failures += 1;
+                    break;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Publish the cluster-wide aggregate under the global mapper's
+    /// telemetry names (each zone mapper's own publisher is suppressed).
+    fn publish_stats(&self) {
+        publish_mapper_stats(&self.stats());
+    }
+}
+
+/// The parallel half of the monitoring scan: threshold filter +
+/// worst-first sort (stable, ties keep row order — exactly
+/// [`SmMapper::interval`]'s comparator).
+fn filter_sort(rows: &[(VmId, f64, f64)], threshold: f64) -> Vec<(VmId, f64, f64)> {
+    let mut affected: Vec<(VmId, f64, f64)> =
+        rows.iter().filter(|(_, dev, _)| *dev >= threshold).copied().collect();
+    affected.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    affected
+}
+
+/// Mean utilization of fabric links touching the server band (0.0 when
+/// no link does — a single-zone or linkless system).
+fn zone_fabric_rho(sim: &Simulator, servers: &std::ops::Range<usize>, rho: &[f64]) -> f64 {
+    let mut sum = 0.0;
+    let mut n = 0usize;
+    for (lid, link) in sim.fabric_graph().links() {
+        if servers.contains(&link.from.0) || servers.contains(&link.to.0) {
+            sum += rho[lid.0];
+            n += 1;
+        }
+    }
+    if n == 0 {
+        0.0
+    } else {
+        sum / n as f64
+    }
+}
+
+/// Two distinct mutable shard borrows (donor, receiver).
+fn two_mut(shards: &mut [ZoneShard], a: usize, b: usize) -> (&mut ZoneShard, &mut ZoneShard) {
+    debug_assert!(a != b);
+    if a < b {
+        let (lo, hi) = shards.split_at_mut(b);
+        (&mut lo[a], &mut hi[0])
+    } else {
+        let (lo, hi) = shards.split_at_mut(a);
+        (&mut hi[0], &mut lo[b])
+    }
+}
+
+/// The scenario runner's single coordination handle: one global
+/// [`SmMapper`] (the default) or Z zone mappers behind a
+/// [`ShardedMapper`] (opt-in).  Every entry point delegates; the enum
+/// exists so the runner, harness, and CLI switch implementations with
+/// one `match`.
+pub enum Coordinator {
+    /// The paper's single global mapper.
+    Global(SmMapper),
+    /// Per-zone mappers with the global rebalancer.
+    Sharded(ShardedMapper),
+}
+
+impl Coordinator {
+    /// Map a newly defined VM (the caller boots it afterwards).
+    pub fn place_arrival(&mut self, sim: &mut Simulator, id: VmId) -> Result<Assignment> {
+        match self {
+            Coordinator::Global(m) => m.place_arrival(sim, id),
+            Coordinator::Sharded(m) => m.place_arrival(sim, id),
+        }
+    }
+
+    /// One monitoring pass (every [`Self::interval_every`] ticks).
+    pub fn interval(&mut self, sim: &mut Simulator) -> Result<IntervalReport> {
+        match self {
+            Coordinator::Global(m) => m.interval(sim),
+            Coordinator::Sharded(m) => m.interval(sim),
+        }
+    }
+
+    /// React to a server drain; returns the VMs that could not be moved.
+    pub fn handle_drain(
+        &mut self,
+        sim: &mut Simulator,
+        server: crate::topology::ServerId,
+        stranded: &[VmId],
+    ) -> Result<Vec<VmId>> {
+        match self {
+            Coordinator::Global(m) => m.handle_drain(sim, server, stranded),
+            Coordinator::Sharded(m) => m.handle_drain(sim, server, stranded),
+        }
+    }
+
+    /// Ticks between monitoring passes.
+    pub fn interval_every(&self) -> u64 {
+        match self {
+            Coordinator::Global(m) => m.cfg.interval,
+            Coordinator::Sharded(m) => m.interval_every(),
+        }
+    }
+
+    /// Cluster-wide mapper counters (aggregated over zones when sharded).
+    pub fn stats(&self) -> MapperStats {
+        match self {
+            Coordinator::Global(m) => m.stats.clone(),
+            Coordinator::Sharded(m) => m.stats(),
+        }
+    }
+
+    /// Scorer backend name.
+    pub fn scorer_name(&self) -> &'static str {
+        match self {
+            Coordinator::Global(m) => m.scorer_name(),
+            Coordinator::Sharded(m) => m.scorer_name(),
+        }
+    }
+
+    /// Learned benefit matrix — `None` when sharded (each zone learns
+    /// its own from the moves it made; there is no single global one).
+    pub fn benefit(&self) -> Option<super::benefit::BenefitMatrix> {
+        match self {
+            Coordinator::Global(m) => Some(m.benefit.clone()),
+            Coordinator::Sharded(_) => None,
+        }
+    }
+}

@@ -1,0 +1,209 @@
+//! Per-zone mapper shard and the zone-partitioned dirty router.
+//!
+//! The sharded coordinator ([`super::sharded`]) partitions the cluster by
+//! [`ZoneMap`] into contiguous server bands and gives each band its own
+//! [`SmMapper`] whose candidate searches never leave the band.  Two
+//! pieces of shared state make that work:
+//!
+//! * the [`DirtyRouter`] — drains the simulator's coordinator dirty set
+//!   once per sync and splits the ids across per-zone queues by VM
+//!   ownership, and
+//! * a cluster-wide `Arc<Vec<f64>>` node-distance table, built once and
+//!   shared by every zone's delta problem (the table is O(nodes²)).
+//!
+//! Both are touched once per mapper sync — never per candidate, never
+//! per score — so the decision hot path stays lock-free.
+
+use std::collections::{BTreeSet, HashMap};
+use std::ops::Range;
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use super::mapper::{MapperConfig, SmMapper};
+use crate::runtime::Scorer;
+use crate::sim::Simulator;
+use crate::topology::ZoneMap;
+use crate::vm::VmId;
+
+/// Routes the simulator's coordinator dirty set to per-zone queues.
+///
+/// Ownership rule: a VM belongs to the zone that placed it (recorded at
+/// arrival, updated on a cross-zone exchange).  A dirty id with no
+/// ownership record falls back to the zone of its first pinned vCPU, so
+/// membership changes still reach the mapper that tracks the row; ids
+/// with neither (a VM destroyed before placement) drain to zone 0, where
+/// forgetting an untracked row is a no-op.
+pub(crate) struct DirtyRouter {
+    zones: ZoneMap,
+    owner: HashMap<VmId, usize>,
+    queues: Vec<BTreeSet<VmId>>,
+}
+
+impl DirtyRouter {
+    pub(crate) fn new(zones: ZoneMap) -> Self {
+        let n = zones.zones();
+        DirtyRouter { zones, owner: HashMap::new(), queues: vec![BTreeSet::new(); n] }
+    }
+
+    /// Drain the simulator once and fan the dirty ids out to the owning
+    /// zones' queues.  Ownership records of departed VMs are dropped on
+    /// the way through (their final dirty bit still reaches the owner so
+    /// the scoring row is forgotten).
+    pub(crate) fn pump(&mut self, sim: &mut Simulator) {
+        let split = sim.drain_coord_dirty_zoned(&self.zones, |id| self.owner.get(&id).copied());
+        for (zone, ids) in split.into_iter().enumerate() {
+            for id in ids {
+                if sim.get(id).is_none() {
+                    self.owner.remove(&id);
+                }
+                self.queues[zone].insert(id);
+            }
+        }
+    }
+
+    /// Take zone `zone`'s pending dirty ids, leaving an empty queue.
+    pub(crate) fn take(&mut self, zone: usize) -> BTreeSet<VmId> {
+        std::mem::take(&mut self.queues[zone])
+    }
+
+    /// Record `id` as owned by `zone` (called at arrival and on every
+    /// cross-zone exchange).  Any queue entry from before the ownership
+    /// record existed (the create-time dirty bit routes to the fallback
+    /// queue) is dropped, so no other zone can adopt the row at its next
+    /// sync — the owner's own pending bit is re-established by the
+    /// caller where one is needed ([`Self::reroute`] on an exchange; the
+    /// post-pin dirty bit on an arrival).
+    pub(crate) fn set_owner(&mut self, id: VmId, zone: usize) {
+        for q in &mut self.queues {
+            q.remove(&id);
+        }
+        self.owner.insert(id, zone);
+    }
+
+    /// Current owner zone of a VM, if it was placed by a zone mapper.
+    pub(crate) fn owner_of(&self, id: VmId) -> Option<usize> {
+        self.owner.get(&id).copied()
+    }
+
+    /// Re-route an already-queued id after an ownership transfer: drop
+    /// it from `from`'s queue and mark it pending for `to`, so the donor
+    /// can never re-adopt a row it just forgot and the receiver re-syncs
+    /// the row it just pinned.
+    pub(crate) fn reroute(&mut self, id: VmId, from: usize, to: usize) {
+        self.queues[from].remove(&id);
+        self.queues[to].insert(id);
+    }
+}
+
+/// One zone's mapper plus its static server band.
+pub(crate) struct ZoneShard {
+    pub(crate) mapper: SmMapper,
+    pub(crate) zone: usize,
+    /// Half-open server-id band this shard owns (from [`ZoneMap`]).
+    pub(crate) servers: Range<usize>,
+}
+
+impl ZoneShard {
+    /// Build one shard: a fresh [`SmMapper`] put into sharded mode over
+    /// this zone's server band, wired to the shared router and distance
+    /// table.
+    pub(crate) fn new(
+        cfg: MapperConfig,
+        scorer: Scorer,
+        zone: usize,
+        zones: &ZoneMap,
+        router: Arc<Mutex<DirtyRouter>>,
+        dist: Arc<Vec<f64>>,
+    ) -> ZoneShard {
+        let servers = zones.servers_of(zone);
+        let mut mapper = SmMapper::new(cfg, scorer);
+        mapper.set_shard(zone, servers.clone(), router, dist);
+        ZoneShard { mapper, zone, servers }
+    }
+
+    /// Schedulable free CPUs in this zone's band (available nodes only).
+    /// Drives the deterministic arrival routing: most-free zone first.
+    pub(crate) fn free_cpus(&self, sim: &Simulator) -> usize {
+        zone_free_cpus(sim, &self.servers)
+    }
+
+    /// Aggregate pressure summary for the rebalancer: `(slot
+    /// utilization, mean windowed rel-perf of tracked VMs)`.  Utilization
+    /// counts only available (non-drained) nodes; a fully drained band
+    /// reports utilization 1.0 so it can never be picked as a receiver.
+    pub(crate) fn pressure(&self, sim: &Simulator) -> (f64, f64) {
+        let topo = &sim.topo;
+        let per_node = topo.spec.cores_per_node * topo.spec.threads_per_core;
+        let slots = sim.slots();
+        let mut cap = 0usize;
+        let mut free = 0usize;
+        for server in self.servers.clone() {
+            for node in topo.nodes_of_server(crate::topology::ServerId(server)) {
+                if slots.node_available(node) {
+                    cap += per_node;
+                    free += slots.free_count(node);
+                }
+            }
+        }
+        let util = if cap == 0 { 1.0 } else { 1.0 - free as f64 / cap as f64 };
+        let mut rel_sum = 0.0;
+        let mut rel_n = 0usize;
+        for id in self.mapper.tracked_ids() {
+            if let Some((_, _, rel)) = self.mapper.window_counters(sim, id) {
+                rel_sum += rel;
+                rel_n += 1;
+            }
+        }
+        let rel = if rel_n == 0 { 1.0 } else { rel_sum / rel_n as f64 };
+        (util, rel)
+    }
+}
+
+/// Schedulable free CPUs over a server band (available nodes only).
+pub(crate) fn zone_free_cpus(sim: &Simulator, servers: &Range<usize>) -> usize {
+    let slots = sim.slots();
+    servers
+        .clone()
+        .flat_map(|s| sim.topo.nodes_of_server(crate::topology::ServerId(s)))
+        .filter(|n| slots.node_available(*n))
+        .map(|n| slots.free_count(n))
+        .sum()
+}
+
+/// Result of one exchange attempt, for [`super::sharded::ShardStats`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum ExchangeOutcome {
+    /// The VM was re-pinned into the receiving zone.
+    Moved,
+    /// The receiving zone had no candidate slot; ownership unchanged.
+    NoCapacity,
+}
+
+/// Move one VM from `donor` to `receiver`: the receiving shard scores
+/// and pins a candidate inside its own band (bounded migration budget),
+/// then ownership transfers and the donor forgets every trace of the
+/// row.  On failure the receiver's trial row is scrubbed and the donor
+/// keeps the VM — the exchange either fully happens or leaves no trace.
+pub(crate) fn exchange_vm(
+    sim: &mut Simulator,
+    donor: &mut ZoneShard,
+    receiver: &mut ZoneShard,
+    router: &Mutex<DirtyRouter>,
+    id: VmId,
+    budget_gb: f64,
+) -> Result<ExchangeOutcome> {
+    if receiver.mapper.evacuate_vm(sim, id, budget_gb, "exchange")? {
+        donor.mapper.forget_vm(id);
+        let mut r = router.lock().expect("dirty router poisoned");
+        r.set_owner(id, receiver.zone);
+        r.reroute(id, donor.zone, receiver.zone);
+        Ok(ExchangeOutcome::Moved)
+    } else {
+        // evacuate_vm may have ensured a trial row before discovering
+        // there was no in-band candidate; drop it so the receiver's
+        // problem only ever tracks VMs it owns.
+        receiver.mapper.forget_vm(id);
+        Ok(ExchangeOutcome::NoCapacity)
+    }
+}

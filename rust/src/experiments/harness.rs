@@ -9,7 +9,7 @@
 
 use anyhow::Result;
 
-use crate::coordinator::{MapperConfig, Metric, SmMapper};
+use crate::coordinator::{Coordinator, MapperConfig, Metric, ShardConfig, ShardedMapper, SmMapper};
 use crate::metrics::{Collector, MigrationReport, VmSummary};
 use crate::runtime::Scorer;
 use crate::sim::{SimConfig, Simulator};
@@ -20,30 +20,40 @@ use crate::workload::trace::Arrival;
 /// memory study (vanilla scheduling + sampled-fault page promotion).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Algorithm {
+    /// The floating-threads kernel-scheduler baseline.
     Vanilla,
     /// Vanilla scheduling with AutoNUMA memory promotion (EXP-MEM).
     AutoNuma,
+    /// The paper's mapper driven by the IPC deviation metric.
     SmIpc,
+    /// The paper's mapper driven by the MPI deviation metric.
     SmMpi,
+    /// SM-IPC behind the sharded coordinator (per-zone mappers + global
+    /// rebalancer; scenario runner defaults it to 4 zones).  Opt-in —
+    /// not part of [`Algorithm::ALL`].
+    SmSharded,
 }
 
 impl Algorithm {
     /// The paper's evaluated trio (the memory study adds [`Algorithm::AutoNuma`]).
     pub const ALL: [Algorithm; 3] = [Algorithm::Vanilla, Algorithm::SmIpc, Algorithm::SmMpi];
 
+    /// Display name (column header in tables and JSON).
     pub fn name(self) -> &'static str {
         match self {
             Algorithm::Vanilla => "vanilla",
             Algorithm::AutoNuma => "AutoNUMA",
             Algorithm::SmIpc => "SM-IPC",
             Algorithm::SmMpi => "SM-MPI",
+            Algorithm::SmSharded => "SM-SHARD",
         }
     }
 
+    /// Deviation metric driving the mapper; `None` = no coordinator.
     pub fn metric(self) -> Option<Metric> {
         match self {
             Algorithm::Vanilla | Algorithm::AutoNuma => None,
-            Algorithm::SmIpc => Some(Metric::Ipc),
+            Algorithm::SmIpc | Algorithm::SmSharded => Some(Metric::Ipc),
             Algorithm::SmMpi => Some(Metric::Mpi),
         }
     }
@@ -135,7 +145,13 @@ pub fn run_cluster(
     let mut mapper = alg.metric().map(|metric| {
         let mcfg = cfg.mapper.clone().unwrap_or_else(|| MapperConfig::new(metric));
         let mcfg = MapperConfig { metric, ..mcfg };
-        SmMapper::new(mcfg, cfg.scorer.build())
+        let scorer = cfg.scorer.build();
+        if alg == Algorithm::SmSharded {
+            let shard = ShardConfig::new(4);
+            Coordinator::Sharded(ShardedMapper::new(mcfg, scorer, shard, &sim.topo))
+        } else {
+            Coordinator::Global(SmMapper::new(mcfg, scorer))
+        }
     });
 
     let mut collector = Collector::new();
@@ -167,7 +183,7 @@ pub fn run_cluster(
             }
         }
         if let Some(m) = mapper.as_mut() {
-            if t % m.cfg.interval == 0 {
+            if t % m.interval_every() == 0 {
                 m.interval(&mut sim)?;
             }
         }
@@ -177,7 +193,7 @@ pub fn run_cluster(
     let core_map = sim.core_map();
     let migration = MigrationReport::from_trace(&sim.trace);
     let (mapper_stats, benefit) = match mapper {
-        Some(m) => (Some(m.stats.clone()), Some(m.benefit.clone())),
+        Some(m) => (Some(m.stats()), m.benefit()),
         None => (None, None),
     };
     Ok(ClusterResult {

@@ -29,7 +29,9 @@ pub struct LinkId(pub usize);
 /// One directed inter-server link.
 #[derive(Debug, Clone)]
 pub struct Link {
+    /// Source server.
     pub from: ServerId,
+    /// Destination server.
     pub to: ServerId,
     /// Nominal per-direction capacity, GB/s.
     pub base_cap_gbs: f64,
@@ -40,6 +42,7 @@ pub struct Link {
 /// simulator's disconnect guard prevents).
 #[derive(Debug, Clone, Default)]
 pub struct Route {
+    /// Links crossed, source-side first.
     pub links: Vec<LinkId>,
 }
 
@@ -107,26 +110,32 @@ impl FabricGraph {
         g
     }
 
+    /// Servers in the graph.
     pub fn num_servers(&self) -> usize {
         self.servers
     }
 
+    /// Directed links in the graph.
     pub fn num_links(&self) -> usize {
         self.links.len()
     }
 
+    /// The link with index `id`.
     pub fn link(&self, id: LinkId) -> &Link {
         &self.links[id.0]
     }
 
+    /// All links with their indices, ascending.
     pub fn links(&self) -> impl Iterator<Item = (LinkId, &Link)> {
         self.links.iter().enumerate().map(|(i, l)| (LinkId(i), l))
     }
 
+    /// Is the link up (not failed by a scenario event)?
     pub fn is_up(&self, id: LinkId) -> bool {
         self.up[id.0]
     }
 
+    /// Current uniform health multiplier in (0, 1].
     pub fn uniform_scale(&self) -> f64 {
         self.uniform_scale
     }

@@ -52,10 +52,12 @@ pub struct LinkLedger {
 }
 
 impl LinkLedger {
+    /// Zeroed ledger over `num_links` links.
     pub fn new(num_links: usize) -> Self {
         Self { demand: vec![0.0; num_links] }
     }
 
+    /// Reset every link's accumulated demand to zero.
     pub fn clear(&mut self) {
         self.demand.iter_mut().for_each(|d| *d = 0.0);
     }
@@ -67,14 +69,17 @@ impl LinkLedger {
         }
     }
 
+    /// Charge `gbs` to one specific link.
     pub fn charge_link(&mut self, link: LinkId, gbs: f64) {
         self.demand[link.0] += gbs;
     }
 
+    /// Accumulated demand on `link`, GB/s.
     pub fn demand(&self, link: LinkId) -> f64 {
         self.demand[link.0]
     }
 
+    /// Per-link demand vector, indexed by `LinkId`.
     pub fn demands(&self) -> &[f64] {
         &self.demand
     }

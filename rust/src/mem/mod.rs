@@ -19,6 +19,11 @@
 //! migrations within a bandwidth budget
 //! ([`crate::sim::Simulator::migrate_memory_toward`]).
 
+// Not yet swept for full rustdoc coverage -- the crate-level
+// `#![warn(missing_docs)]` allow-list (see ARCHITECTURE.md
+// §Documentation).
+#![allow(missing_docs)]
+
 pub mod autonuma;
 pub mod migration;
 pub mod pagemap;

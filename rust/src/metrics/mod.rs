@@ -2,6 +2,11 @@
 //! time series of the synthesized counters plus the summary statistics the
 //! paper reports (mean relative performance, run-to-run variability).
 
+// Not yet swept for full rustdoc coverage -- the crate-level
+// `#![warn(missing_docs)]` allow-list (see ARCHITECTURE.md
+// §Documentation).
+#![allow(missing_docs)]
+
 use std::collections::BTreeMap;
 
 use crate::sim::{Event, EventTrace, PerfSample};

@@ -18,6 +18,11 @@
 //! thread-pool sizes (`run_suite_on`); only `ticks_per_sec` (wall clock)
 //! is excluded.  Property-tested in `tests/scenarios.rs`.
 
+// Not yet swept for full rustdoc coverage -- the crate-level
+// `#![warn(missing_docs)]` allow-list (see ARCHITECTURE.md
+// §Documentation).
+#![allow(missing_docs)]
+
 pub mod runner;
 pub mod suite;
 pub mod timeline;

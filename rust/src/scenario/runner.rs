@@ -23,7 +23,7 @@ use std::collections::VecDeque;
 
 use anyhow::Result;
 
-use crate::coordinator::{MapperConfig, SmMapper};
+use crate::coordinator::{Coordinator, MapperConfig, ShardConfig, ShardedMapper, SmMapper};
 use crate::experiments::{Algorithm, ScorerChoice};
 use crate::runtime::Scorer;
 use crate::sim::{SimConfig, Simulator};
@@ -56,9 +56,16 @@ pub struct ScenarioConfig {
     /// Explicit worker-thread override for the zone-partitioned parallel
     /// tick (see [`SimConfig::threads`]); `None` keeps the default.
     pub tick_threads: Option<usize>,
+    /// Opt-in sharded coordination: `Some(z)` runs every SM algorithm
+    /// behind a [`ShardedMapper`] with `z` zones (Z=1 is bit-identical
+    /// to the global mapper).  `None` keeps the global [`SmMapper`],
+    /// except for [`Algorithm::SmSharded`], which defaults to 4 zones.
+    pub shard_zones: Option<usize>,
 }
 
 impl ScenarioConfig {
+    /// Defaults: native scorer, global mapper, no telemetry, engine and
+    /// pool-size hooks untouched.
     pub fn new(seed: u64) -> Self {
         Self {
             seed,
@@ -67,6 +74,7 @@ impl ScenarioConfig {
             telemetry: None,
             tick_soa: None,
             tick_threads: None,
+            shard_zones: None,
         }
     }
 }
@@ -128,7 +136,7 @@ fn build_scorer(choice: ScorerChoice) -> Scorer {
 /// with the defined VM rolled back — when placement finds no capacity.
 fn admit(
     sim: &mut Simulator,
-    mapper: Option<&mut SmMapper>,
+    mapper: Option<&mut Coordinator>,
     vm_type: VmType,
     app: App,
 ) -> Result<Option<VmId>> {
@@ -154,7 +162,7 @@ struct EventCtx {
 
 fn apply_event(
     sim: &mut Simulator,
-    mapper: &mut Option<SmMapper>,
+    mapper: &mut Option<Coordinator>,
     ev: &ScenarioEvent,
     ctx: &mut EventCtx,
 ) -> Result<String> {
@@ -261,7 +269,20 @@ pub fn run_scenario(
     let mut mapper = alg.metric().map(|metric| {
         let mcfg = cfg.mapper.clone().unwrap_or_else(|| MapperConfig::new(metric));
         let mcfg = MapperConfig { metric, ..mcfg };
-        SmMapper::new(mcfg, build_scorer(cfg.scorer))
+        let scorer = build_scorer(cfg.scorer);
+        let zones = cfg
+            .shard_zones
+            .or((alg == Algorithm::SmSharded).then_some(4))
+            .filter(|z| *z > 0);
+        match zones {
+            Some(z) => Coordinator::Sharded(ShardedMapper::new(
+                mcfg,
+                scorer,
+                ShardConfig::new(z),
+                &sim.topo,
+            )),
+            None => Coordinator::Global(SmMapper::new(mcfg, scorer)),
+        }
     });
 
     let timeline = spec.timeline(cfg.seed);
@@ -331,7 +352,7 @@ pub fn run_scenario(
         // patches only the rows the simulator dirtied since the last
         // decision instead of rebuilding the scoring problem.
         if let Some(m) = mapper.as_mut() {
-            if t % m.cfg.interval == 0 {
+            if t % m.interval_every() == 0 {
                 m.interval(&mut sim)?;
             }
         }
@@ -340,7 +361,10 @@ pub fn run_scenario(
     let wall = t0.elapsed().as_secs_f64().max(1e-9);
 
     let (remaps, reshuffles, evacuations) = match &mapper {
-        Some(m) => (m.stats.remaps, m.stats.reshuffles, m.stats.evacuations),
+        Some(m) => {
+            let s = m.stats();
+            (s.remaps, s.reshuffles, s.evacuations)
+        }
         None => (0, 0, 0),
     };
     let metrics = ScenarioMetrics {

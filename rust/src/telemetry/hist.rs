@@ -28,6 +28,7 @@ impl Default for LogHistogram {
 }
 
 impl LogHistogram {
+    /// Empty histogram.
     pub fn new() -> Self {
         Self {
             buckets: [0; BUCKETS],
@@ -53,6 +54,7 @@ impl LogHistogram {
         (2.0f64).powi(i as i32 - EXP_OFFSET + 1)
     }
 
+    /// Record one observation.
     pub fn observe(&mut self, v: f64) {
         self.buckets[Self::bucket_of(v)] += 1;
         self.count += 1;
@@ -63,26 +65,32 @@ impl LogHistogram {
         }
     }
 
+    /// Observations recorded (exact).
     pub fn count(&self) -> u64 {
         self.count
     }
 
+    /// Sum of finite observations (exact).
     pub fn sum(&self) -> f64 {
         self.sum
     }
 
+    /// Smallest finite observation (exact; 0 when empty).
     pub fn min(&self) -> f64 {
         if self.count == 0 { 0.0 } else { self.min }
     }
 
+    /// Largest finite observation (exact; 0 when empty).
     pub fn max(&self) -> f64 {
         if self.count == 0 { 0.0 } else { self.max }
     }
 
+    /// Mean of finite observations (0 when empty).
     pub fn mean(&self) -> f64 {
         if self.count == 0 { 0.0 } else { self.sum / self.count as f64 }
     }
 
+    /// `true` before the first observation.
     pub fn is_empty(&self) -> bool {
         self.count == 0
     }
@@ -110,6 +118,7 @@ impl LogHistogram {
         self.max
     }
 
+    /// Fold `other`'s buckets and exact stats into this histogram.
     pub fn merge(&mut self, other: &LogHistogram) {
         if other.count == 0 {
             return;

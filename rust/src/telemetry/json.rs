@@ -10,11 +10,17 @@ use std::collections::BTreeMap;
 /// A parsed JSON value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any JSON number (always parsed as `f64`).
     Num(f64),
+    /// String (escapes decoded).
     Str(String),
+    /// Array.
     Arr(Vec<Json>),
+    /// Object, keys sorted.
     Obj(BTreeMap<String, Json>),
 }
 
@@ -27,6 +33,7 @@ impl Json {
         }
     }
 
+    /// The number value, if this is a `Num`.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
@@ -34,6 +41,7 @@ impl Json {
         }
     }
 
+    /// The string value, if this is a `Str`.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -41,6 +49,7 @@ impl Json {
         }
     }
 
+    /// The element slice, if this is an `Arr`.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(v) => Some(v),

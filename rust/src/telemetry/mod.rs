@@ -64,6 +64,7 @@ pub enum Phase {
 }
 
 impl Phase {
+    /// Every phase, in export order.
     pub const ALL: [Phase; 10] = [
         Phase::SimStep,
         Phase::MigrationAdvance,
@@ -77,8 +78,10 @@ impl Phase {
         Phase::ScenarioEvent,
     ];
 
+    /// Number of instrumented phases.
     pub const COUNT: usize = Self::ALL.len();
 
+    /// Dotted export name (`sim.step`, `mapper.interval`, ...).
     pub fn name(self) -> &'static str {
         match self {
             Phase::SimStep => "sim.step",
@@ -134,6 +137,7 @@ pub struct Recorder {
 }
 
 impl Recorder {
+    /// Empty recorder with `cfg`'s ring capacity and sampling cadence.
     pub fn new(cfg: TelemetryConfig) -> Self {
         let ring = cfg.decision_ring;
         Self {
@@ -146,6 +150,8 @@ impl Recorder {
         }
     }
 
+    /// Fold one timed span of `phase` into its lifetime histogram and
+    /// the current tick's accumulator.
     pub fn record_span(&mut self, phase: Phase, secs: f64) {
         let s = &mut self.spans[phase.index()];
         s.hist.observe(secs);
@@ -163,6 +169,7 @@ impl Recorder {
         self.event_counts.get(kind).copied().unwrap_or(0)
     }
 
+    /// Push a mapper decision into the provenance ring and JSONL stream.
     pub fn record_decision(&mut self, rec: DecisionRecord) {
         self.jsonl.push(decision_line(&rec));
         self.decisions.push(rec);
@@ -249,14 +256,17 @@ impl Recorder {
         self.jsonl.push(line);
     }
 
+    /// The counter/gauge/histogram registry.
     pub fn registry(&self) -> &Registry {
         &self.registry
     }
 
+    /// Mutable registry access (instrumentation sites).
     pub fn registry_mut(&mut self) -> &mut Registry {
         &mut self.registry
     }
 
+    /// The decision-provenance ring.
     pub fn decisions(&self) -> &DecisionRing {
         &self.decisions
     }

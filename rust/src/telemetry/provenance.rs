@@ -37,10 +37,12 @@ pub struct DecisionRing {
 }
 
 impl DecisionRing {
+    /// Empty ring holding at most `cap` records (min 1).
     pub fn new(cap: usize) -> Self {
         Self { records: VecDeque::new(), cap: cap.max(1), dropped: 0 }
     }
 
+    /// Append a record, evicting the oldest when full.
     pub fn push(&mut self, rec: DecisionRecord) {
         if self.records.len() >= self.cap {
             self.records.pop_front();
@@ -49,18 +51,22 @@ impl DecisionRing {
         self.records.push_back(rec);
     }
 
+    /// Records currently held.
     pub fn len(&self) -> usize {
         self.records.len()
     }
 
+    /// `true` when no record has survived (or been pushed).
     pub fn is_empty(&self) -> bool {
         self.records.is_empty()
     }
 
+    /// Records evicted since creation.
     pub fn dropped(&self) -> u64 {
         self.dropped
     }
 
+    /// All held records, oldest first.
     pub fn iter(&self) -> impl Iterator<Item = &DecisionRecord> {
         self.records.iter()
     }

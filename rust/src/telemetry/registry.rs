@@ -29,6 +29,7 @@ pub struct Registry {
 }
 
 impl Registry {
+    /// Empty registry.
     pub fn new() -> Self {
         Self::default()
     }
@@ -85,6 +86,7 @@ impl Registry {
         }
     }
 
+    /// The metric registered under `name`, whatever its type.
     pub fn get(&self, name: &str) -> Option<&Metric> {
         self.metrics.get(name)
     }
@@ -105,10 +107,12 @@ impl Registry {
         }
     }
 
+    /// Registered metrics.
     pub fn len(&self) -> usize {
         self.metrics.len()
     }
 
+    /// `true` before the first metric registers.
     pub fn is_empty(&self) -> bool {
         self.metrics.is_empty()
     }

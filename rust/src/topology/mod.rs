@@ -12,6 +12,11 @@
 //! parameterized through [`TopologySpec`] so experiments can scale the
 //! system up or down.
 
+// Not yet swept for full rustdoc coverage -- the crate-level
+// `#![warn(missing_docs)]` allow-list (see ARCHITECTURE.md
+// §Documentation).
+#![allow(missing_docs)]
+
 pub mod cache;
 pub mod distance;
 pub mod torus;

@@ -47,6 +47,32 @@ impl ZoneMap {
         let hi = ((zone + 1) * self.servers).div_ceil(self.zones);
         lo..hi
     }
+
+    /// Zones sharing a band edge with `zone` (ascending id order).  Zones
+    /// are contiguous id bands, so each has at most two neighbours.
+    pub fn adjacent(&self, zone: usize) -> impl Iterator<Item = usize> {
+        debug_assert!(zone < self.zones);
+        let lo = zone.checked_sub(1);
+        let hi = if zone + 1 < self.zones { Some(zone + 1) } else { None };
+        lo.into_iter().chain(hi)
+    }
+
+    /// The boundary band of `zone` facing `toward`: the quarter of the
+    /// zone's servers (at least one) nearest the shared band edge.  These
+    /// are the cross-zone migration candidates — moving an edge server's
+    /// VM to the neighbouring band is the cheapest exchange the torus
+    /// offers (row-major layout keeps band edges fabric-adjacent).
+    /// Empty when `toward == zone`.
+    pub fn boundary_servers(&self, zone: usize, toward: usize) -> std::ops::Range<usize> {
+        debug_assert!(zone < self.zones && toward < self.zones);
+        let band = self.servers_of(zone);
+        let width = (band.len() / 4).max(1);
+        match toward.cmp(&zone) {
+            std::cmp::Ordering::Less => band.start..band.start + width,
+            std::cmp::Ordering::Greater => band.end - width..band.end,
+            std::cmp::Ordering::Equal => band.start..band.start,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -82,6 +108,22 @@ mod tests {
                 check(servers, zones);
             }
         }
+    }
+
+    #[test]
+    fn boundary_bands_face_the_neighbour() {
+        let zm = ZoneMap::new(100, 4);
+        // zone 1 is 25..50: quarter-width band toward each neighbour.
+        assert_eq!(zm.boundary_servers(1, 0), 25..31);
+        assert_eq!(zm.boundary_servers(1, 2), 44..50);
+        assert!(zm.boundary_servers(1, 1).is_empty());
+        assert_eq!(zm.adjacent(0).collect::<Vec<_>>(), vec![1]);
+        assert_eq!(zm.adjacent(1).collect::<Vec<_>>(), vec![0, 2]);
+        assert_eq!(zm.adjacent(3).collect::<Vec<_>>(), vec![2]);
+        // Tiny zones still expose at least one boundary server.
+        let small = ZoneMap::new(6, 3);
+        assert_eq!(small.boundary_servers(0, 1).len(), 1);
+        assert!(ZoneMap::new(6, 1).adjacent(0).next().is_none());
     }
 
     #[test]

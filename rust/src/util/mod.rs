@@ -4,6 +4,11 @@
 //! harness (`criterion`), and a property-testing mini-framework
 //! (`proptest`).
 
+// Not yet swept for full rustdoc coverage -- the crate-level
+// `#![warn(missing_docs)]` allow-list (see ARCHITECTURE.md
+// §Documentation).
+#![allow(missing_docs)]
+
 pub mod benchkit;
 pub mod config;
 pub mod ids;

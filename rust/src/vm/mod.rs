@@ -1,6 +1,11 @@
 //! Virtual machines (paper §5.1, Table 5) and the libvirt-like control API
 //! the coordinator drives ([`libvirt`]).
 
+// Not yet swept for full rustdoc coverage -- the crate-level
+// `#![warn(missing_docs)]` allow-list (see ARCHITECTURE.md
+// §Documentation).
+#![allow(missing_docs)]
+
 pub mod libvirt;
 pub mod types;
 

@@ -2,6 +2,11 @@
 //! as synthetic performance profiles, the animal classification scheme,
 //! and load/trace generation for the cluster experiments.
 
+// Not yet swept for full rustdoc coverage -- the crate-level
+// `#![warn(missing_docs)]` allow-list (see ARCHITECTURE.md
+// §Documentation).
+#![allow(missing_docs)]
+
 pub mod app;
 pub mod classes;
 pub mod loadgen;

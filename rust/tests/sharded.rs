@@ -1,0 +1,178 @@
+//! Sharded-coordination integration tests: the Z=1 oracle-parity
+//! contract (sharding with one zone is bit-identical to the global
+//! mapper on the whole scenario suite), cross-zone VM conservation under
+//! churn and drain (no VM is ever lost or double-tracked), pool-size
+//! determinism with sharding on, and the rebalancer's boundary exchange.
+
+use dvrm::coordinator::{MapperConfig, Metric, ShardConfig, ShardedMapper};
+use dvrm::experiments::figures::scale_spec;
+use dvrm::experiments::Algorithm;
+use dvrm::runtime::Scorer;
+use dvrm::scenario::{run_scenario, suite, ScenarioConfig};
+use dvrm::sim::{SimConfig, Simulator};
+use dvrm::topology::{ServerId, Topology};
+use dvrm::vm::{VmId, VmState, VmType};
+use dvrm::workload::App;
+
+#[test]
+fn z1_bit_identical_to_global_mapper_on_every_scenario() {
+    // The oracle-parity acceptance gate: one zone owns every server, the
+    // router's single queue is the whole dirty set, the rebalancer never
+    // runs — every decision must come out bit-for-bit the same as the
+    // global mapper's.
+    let global = ScenarioConfig::new(42);
+    let sharded = ScenarioConfig { shard_zones: Some(1), ..ScenarioConfig::new(42) };
+    for spec in suite::smoke_suite() {
+        let a = run_scenario(&spec, Algorithm::SmIpc, &global).unwrap();
+        let b = run_scenario(&spec, Algorithm::SmIpc, &sharded).unwrap();
+        assert_eq!(a.metrics, b.metrics, "{}: Z=1 metrics diverge from global", spec.name);
+        assert_eq!(a.event_log, b.event_log, "{}: Z=1 event log diverges", spec.name);
+    }
+}
+
+#[test]
+fn sharded_suite_bit_identical_across_pool_sizes() {
+    // The parallel scan phase fans out over the simulator's worker pool;
+    // results must not depend on its width (1 = no pool at all).
+    let run = |threads: usize| {
+        let cfg = ScenarioConfig {
+            shard_zones: Some(4),
+            tick_threads: Some(threads),
+            ..ScenarioConfig::new(7)
+        };
+        ["churn", "drain"]
+            .iter()
+            .map(|name| {
+                let spec = suite::named(name, true).unwrap();
+                let r = run_scenario(&spec, Algorithm::SmIpc, &cfg).unwrap();
+                (r.metrics, r.event_log)
+            })
+            .collect::<Vec<_>>()
+    };
+    let serial = run(1);
+    for threads in [2usize, 4] {
+        assert_eq!(serial, run(threads), "pool size {threads} changed sharded results");
+    }
+}
+
+/// Build a 12-server sim plus a sharded mapper and admit `vms` VMs;
+/// returns the successfully placed ids.
+fn admit(sim: &mut Simulator, mapper: &mut ShardedMapper, vms: usize) -> Vec<VmId> {
+    let mut placed = Vec::new();
+    for k in 0..vms {
+        let app = App::ALL[k % App::ALL.len()];
+        let vm_type = if k % 8 == 0 { VmType::Medium } else { VmType::Small };
+        let id = sim.create(vm_type, app);
+        if mapper.place_arrival(sim, id).is_ok() {
+            sim.start(id).unwrap();
+            placed.push(id);
+        } else {
+            sim.destroy(id).unwrap();
+        }
+    }
+    placed
+}
+
+/// Every live placed VM is tracked by exactly one zone and has an owner
+/// record; no zone tracks a VM another zone also tracks.
+fn assert_conserved(mapper: &ShardedMapper, sim: &Simulator, placed: &[VmId]) {
+    let mut tracked_by: std::collections::HashMap<VmId, Vec<usize>> = Default::default();
+    for z in 0..mapper.zones() {
+        for id in mapper.tracked_of(z) {
+            tracked_by.entry(id).or_default().push(z);
+        }
+    }
+    for (id, zones) in &tracked_by {
+        assert_eq!(zones.len(), 1, "vm {id:?} tracked by multiple zones: {zones:?}");
+    }
+    for &id in placed {
+        let Some(mvm) = sim.get(id) else { continue };
+        if mvm.vm.state != VmState::Running {
+            continue;
+        }
+        let zones = tracked_by.get(&id);
+        assert_eq!(
+            zones.map(Vec::len),
+            Some(1),
+            "running vm {id:?} tracked by {zones:?} zones (lost or duplicated)"
+        );
+        assert_eq!(
+            mapper.owner_zone(id),
+            Some(zones.unwrap()[0]),
+            "vm {id:?}: owner record disagrees with the tracking zone"
+        );
+    }
+}
+
+#[test]
+fn cross_zone_conservation_under_churn_and_drain() {
+    let topo = Topology::build(scale_spec(12, (4, 3)));
+    let mut cfg = SimConfig::pinned(11);
+    cfg.mem.chunk_mb = 512;
+    let mut sim = Simulator::new(topo, cfg);
+    let mut mapper = ShardedMapper::new(
+        MapperConfig::new(Metric::Ipc),
+        Scorer::Native,
+        ShardConfig::new(4),
+        &sim.topo,
+    );
+    assert_eq!(mapper.zones(), 4);
+    let placed = admit(&mut sim, &mut mapper, 80);
+    assert!(placed.len() >= 60, "only {} of 80 placed", placed.len());
+    sim.step();
+    mapper.interval(&mut sim).unwrap();
+    assert_conserved(&mapper, &sim, &placed);
+
+    // Churn: destroy every third VM, then let the routed dirty set
+    // propagate through the next sync.
+    for id in placed.iter().step_by(3) {
+        sim.destroy(*id).unwrap();
+    }
+    sim.step();
+    mapper.interval(&mut sim).unwrap();
+    assert_conserved(&mapper, &sim, &placed);
+
+    // Drain a server: its owner zone evacuates in-band, spillover goes
+    // cross-zone — either way every survivor stays tracked exactly once.
+    let stranded = sim.drain_server(ServerId(2)).unwrap();
+    let failed = mapper.handle_drain(&mut sim, ServerId(2), &stranded).unwrap();
+    assert!(failed.is_empty(), "drain left {} unplaceable VMs", failed.len());
+    sim.step();
+    mapper.interval(&mut sim).unwrap();
+    assert_conserved(&mapper, &sim, &placed);
+}
+
+#[test]
+fn rebalancer_exchanges_boundary_vms_on_imbalance() {
+    let topo = Topology::build(scale_spec(12, (4, 3)));
+    let mut cfg = SimConfig::pinned(3);
+    cfg.mem.chunk_mb = 512;
+    let mut sim = Simulator::new(topo, cfg);
+    // Aggressive rebalancing: every pass, no hysteresis band.
+    let shard = ShardConfig { rebalance_every: 1, hysteresis: 0.0, ..ShardConfig::new(2) };
+    let mut mapper =
+        ShardedMapper::new(MapperConfig::new(Metric::Ipc), Scorer::Native, shard, &sim.topo);
+    let placed = admit(&mut sim, &mut mapper, 100);
+    assert!(placed.len() >= 80, "only {} of 100 placed", placed.len());
+
+    // Manufacture a utilization cliff: empty out zone 1 entirely.
+    for &id in &placed {
+        if mapper.owner_zone(id) == Some(1) && sim.get(id).is_some() {
+            sim.destroy(id).unwrap();
+        }
+    }
+    for _ in 0..4 {
+        sim.step();
+        mapper.interval(&mut sim).unwrap();
+    }
+    assert!(mapper.shard_stats.rebalance_passes > 0, "rebalancer never ran");
+    assert_eq!(mapper.shard_stats.last_pressure.len(), 2, "pressure summary missing zones");
+    assert!(
+        mapper.shard_stats.exchanges >= 1,
+        "no boundary exchange despite a maximal utilization spread: {:?}",
+        mapper.shard_stats.last_pressure
+    );
+    // Moved VMs are owned (and tracked) by their new zone — conservation
+    // holds through the exchange.
+    assert_conserved(&mapper, &sim, &placed);
+}
