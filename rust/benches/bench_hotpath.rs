@@ -389,6 +389,57 @@ fn main() {
         }));
     }
 
+    // Crash machinery: abrupt server loss + repair on the paper testbed
+    // with a resident population (fabric re-route x2, victim scan,
+    // re-fault sweep, slot-map flip, evaluator graph swap).  Nothing is
+    // pinned on the target server, so every iteration times the same
+    // steady-state crash+recover cycle.
+    {
+        let mut csim = Simulator::new(Topology::paper(), SimConfig::pinned(11));
+        for k in 0..12usize {
+            let id = csim.create(dvrm::vm::VmType::Small, App::ALL[k % App::ALL.len()]);
+            let server = [0usize, 1, 2, 3, 5][k % 5];
+            let base = server * 48 + (k / 5) * 4;
+            csim.pin_all(id, &(base..base + 4).map(dvrm::topology::CpuId).collect::<Vec<_>>())
+                .unwrap();
+            csim.start(id).unwrap();
+        }
+        results.push(bench.run("sim/crash_server", || {
+            std::hint::black_box(csim.crash_server(dvrm::topology::ServerId(4)).unwrap());
+            csim.recover_server(dvrm::topology::ServerId(4)).unwrap();
+        }));
+    }
+
+    // Restart orchestration: enqueue a rack's worth of kills, then drain
+    // the SLO-ordered queue through one failed attempt each (backoff +
+    // jitter requeue) to successful restart — the coordinator-side cost
+    // of a recovery pass.
+    {
+        use dvrm::coordinator::{RecoveryConfig, RecoveryOrchestrator};
+        results.push(bench.run("coordinator/restart_pass", || {
+            let mut orch = RecoveryOrchestrator::new(RecoveryConfig::default(), 7);
+            for k in 0..64u64 {
+                orch.on_kill(
+                    dvrm::vm::VmType::Small,
+                    App::ALL[k as usize % App::ALL.len()],
+                    k % 8,
+                );
+            }
+            let mut t = 9u64;
+            while orch.outstanding() > 0 {
+                while let Some(e) = orch.pop_due(t) {
+                    if e.attempts == 0 {
+                        orch.on_retry_failed(e, t);
+                    } else {
+                        orch.on_restarted(&e, t);
+                    }
+                }
+                t += 4;
+            }
+            std::hint::black_box(orch.stats.restarts);
+        }));
+    }
+
     // Congestion-ledger overhead: the incremental tick with fabric
     // feedback on — the EXP-FABRIC acceptance point is that this stays
     // within a few percent of the feedback-off `sim/tick/incremental`

@@ -60,6 +60,8 @@ pub fn usage() -> &'static str {
                          incremental evaluator vs full recompute\n\
        experiment fabric EXP-FABRIC: background remote load + degraded-link\n\
                          scenario, congestion-blind vs congestion-aware mapping\n\
+       experiment fault  EXP-FAULT: crash injection (single / rack / storm):\n\
+                         MTTR, availability, permanent losses, p99 restart\n\
        experiment all    regenerate everything\n\
        run               end-to-end cluster demo under all three algorithms\n\
        scenarios         dynamic scenario suite (steady, churn, drain, diurnal,\n\
@@ -77,7 +79,8 @@ pub fn usage() -> &'static str {
        --fast            small windows + native scorer\n\
        --scorer S        auto|native (default auto: PJRT artifacts if built)\n\
        --csv DIR         also write result tables as CSV into DIR\n\
-       --suite S         scenarios: smoke (short horizon) | full (default smoke)\n\
+       --suite S         scenarios: smoke (short horizon) | full | chaos\n\
+                         (crash injection) | chaos-full (default smoke)\n\
        --json PATH       scenarios: also write per-scenario JSON to PATH\n\
        --events          scenarios: print the applied-event log per scenario\n\
        --telemetry PATH  scenarios: record tick-phase spans, metrics and mapper\n\

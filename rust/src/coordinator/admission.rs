@@ -74,9 +74,12 @@ impl AdmissionController {
             .sum()
     }
 
-    /// Decide on an arrival of `vm_type`.
+    /// Decide on an arrival of `vm_type`.  The budget counts only online
+    /// capacity: a crashed or drained server's slots cannot back new
+    /// admissions.
     pub fn decide(&mut self, sim: &Simulator, vm_type: VmType) -> Decision {
-        let total = sim.topo.num_cpus();
+        let per_server = sim.topo.num_cpus() / sim.topo.spec.servers.max(1);
+        let total = sim.topo.num_cpus() - sim.offline_servers().count() * per_server;
         let budget = (total as f64 * self.cfg.max_utilization).floor() as usize;
         let committed = self.committed(sim);
         let need = vm_type.spec().vcpus;

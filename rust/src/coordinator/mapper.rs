@@ -148,6 +148,9 @@ pub struct MapperStats {
     pub affected_total: u64,
     /// VMs moved off draining servers (scenario engine).
     pub evacuations: u64,
+    /// VMs lost to abrupt server crashes (chaos engine) — deaths this
+    /// mapper was told about, not decisions it made.
+    pub crash_losses: u64,
 }
 
 /// Result of one monitoring pass.
@@ -786,6 +789,20 @@ impl SmMapper {
         pull_memory_off_drained(sim, server)?;
         self.publish_stats();
         Ok(failed)
+    }
+
+    /// React to a server crash: unlike [`Self::handle_drain`] there is
+    /// nothing to evacuate — the killed VMs are *gone*.  Sync
+    /// immediately so their rows drop out of the scoring problem before
+    /// the next decision (the simulator left their ids in the
+    /// coordinator dirty set), and record the losses.  Re-placement
+    /// happens later through the restart queue
+    /// ([`crate::coordinator::RecoveryOrchestrator`]), not here.
+    pub fn handle_crash(&mut self, sim: &mut Simulator, killed: &[VmId]) -> Result<()> {
+        self.sync(sim)?;
+        self.stats.crash_losses += killed.len() as u64;
+        self.publish_stats();
+        Ok(())
     }
 
     /// Forced remap of one VM off its current placement: like

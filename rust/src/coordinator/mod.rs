@@ -27,10 +27,12 @@ pub mod benefit;
 pub mod candidates;
 pub mod delta;
 pub mod mapper;
+pub mod recovery;
 pub mod sharded;
 pub(crate) mod zone_mapper;
 
 pub use admission::{AdmissionConfig, AdmissionController, Decision};
+pub use recovery::{PendingRestart, RecoveryConfig, RecoveryOrchestrator, RecoveryStats};
 pub use benefit::BenefitMatrix;
 pub use candidates::{Assignment, SlotMap};
 pub use delta::DeltaProblem;

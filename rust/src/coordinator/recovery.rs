@@ -1,0 +1,307 @@
+//! Restart orchestration after crash failures (chaos engine).
+//!
+//! When [`crate::sim::Simulator::crash_server`] kills VMs, the scenario
+//! runner enqueues them here.  The orchestrator hands back restart
+//! candidates in SLO order (tighter restart targets first, then oldest
+//! kill), the runner attempts re-placement through the normal admission
+//! path, and failed attempts come back with exponential backoff plus a
+//! small deterministic jitter.  After `max_attempts` failures a VM is
+//! declared permanently lost — the bounded-retry semantics the fault
+//! experiment's loss-rate metric measures.
+//!
+//! Everything is deterministic per seed: the jitter draws from the
+//! orchestrator's own forked RNG stream, never the simulator's, so the
+//! crash path leaves non-chaos runs bit-identical.
+
+use crate::util::rng::Rng;
+use crate::util::stats;
+use crate::vm::VmType;
+use crate::workload::App;
+
+/// Recovery policy: bounded retries, backoff schedule, per-class SLOs.
+#[derive(Debug, Clone)]
+pub struct RecoveryConfig {
+    /// Re-placement attempts before a VM is declared permanently lost.
+    pub max_attempts: u32,
+    /// Base of the exponential backoff between attempts, in ticks
+    /// (attempt `k` waits `base · 2^k`, capped, plus jitter in `0..=k`).
+    pub backoff_base: u64,
+    /// Cap on the exponential term (ticks).
+    pub backoff_cap: u64,
+    /// Restart SLO for Huge VMs: ticks from kill to running again.
+    /// Tighter targets restart first — bigger VMs are costlier to lose.
+    pub slo_huge: u64,
+    /// Restart SLO for Large VMs (ticks).
+    pub slo_large: u64,
+    /// Restart SLO for Medium VMs (ticks).
+    pub slo_medium: u64,
+    /// Restart SLO for Small VMs (ticks).
+    pub slo_small: u64,
+}
+
+impl Default for RecoveryConfig {
+    fn default() -> Self {
+        Self {
+            max_attempts: 6,
+            backoff_base: 1,
+            backoff_cap: 16,
+            slo_huge: 8,
+            slo_large: 12,
+            slo_medium: 20,
+            slo_small: 30,
+        }
+    }
+}
+
+impl RecoveryConfig {
+    /// Restart SLO target for a class, in ticks.
+    pub fn slo_of(&self, vm_type: VmType) -> u64 {
+        match vm_type {
+            VmType::Huge => self.slo_huge,
+            VmType::Large => self.slo_large,
+            VmType::Medium => self.slo_medium,
+            VmType::Small => self.slo_small,
+        }
+    }
+}
+
+/// One killed VM awaiting re-placement.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PendingRestart {
+    /// Class of the killed VM (drives the SLO and re-placement size).
+    pub vm_type: VmType,
+    /// Application profile the replacement runs.
+    pub app: App,
+    /// Tick the crash killed the VM.
+    pub killed_at: u64,
+    /// Failed re-placement attempts so far.
+    pub attempts: u32,
+    /// Earliest tick the next attempt may run (backoff gate).
+    pub next_try: u64,
+}
+
+/// Deterministic aggregate over the orchestrator's lifetime.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct RecoveryStats {
+    /// Kills enqueued.
+    pub enqueued: u64,
+    /// Successful restarts.
+    pub restarts: u64,
+    /// VMs lost for good after `max_attempts` failures.
+    pub permanent_losses: u64,
+    /// Restarts that landed past their class SLO.
+    pub slo_misses: u64,
+    /// Kill→running latency of each successful restart, ticks.
+    pub restart_latencies: Vec<u64>,
+}
+
+impl RecoveryStats {
+    /// Mean time to restore: mean restart latency in ticks (0 when
+    /// nothing restarted).  Permanent losses are excluded here and
+    /// counted separately — averaging an infinite repair time away
+    /// would flatter exactly the runs that lost the most.
+    pub fn mttr(&self) -> f64 {
+        if self.restart_latencies.is_empty() {
+            return 0.0;
+        }
+        let xs: Vec<f64> = self.restart_latencies.iter().map(|&t| t as f64).collect();
+        stats::mean(&xs)
+    }
+
+    /// p99 restart latency in ticks (0 when nothing restarted).
+    pub fn p99_restart(&self) -> f64 {
+        if self.restart_latencies.is_empty() {
+            return 0.0;
+        }
+        let xs: Vec<f64> = self.restart_latencies.iter().map(|&t| t as f64).collect();
+        stats::percentile(&xs, 99.0)
+    }
+}
+
+/// The coordinator-side restart queue.
+#[derive(Debug)]
+pub struct RecoveryOrchestrator {
+    /// Active recovery policy.
+    pub cfg: RecoveryConfig,
+    queue: Vec<PendingRestart>,
+    rng: Rng,
+    /// Lifetime aggregates (restarts, losses, latencies).
+    pub stats: RecoveryStats,
+}
+
+impl RecoveryOrchestrator {
+    /// Orchestrator with its own jitter stream derived from `seed`
+    /// (independent of every simulator stream).
+    pub fn new(cfg: RecoveryConfig, seed: u64) -> Self {
+        Self {
+            cfg,
+            queue: Vec::new(),
+            rng: Rng::new(seed ^ 0x7EC0_3E72_D00D_5EED),
+            stats: RecoveryStats::default(),
+        }
+    }
+
+    /// VMs still waiting for a restart slot.
+    pub fn outstanding(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// The queue, unordered (attempt order is decided by [`Self::pop_due`]).
+    pub fn queue(&self) -> &[PendingRestart] {
+        &self.queue
+    }
+
+    /// Record a kill; the first attempt is eligible next tick.
+    pub fn on_kill(&mut self, vm_type: VmType, app: App, tick: u64) {
+        self.stats.enqueued += 1;
+        self.queue.push(PendingRestart {
+            vm_type,
+            app,
+            killed_at: tick,
+            attempts: 0,
+            next_try: tick + 1,
+        });
+    }
+
+    /// Take the highest-priority entry whose backoff gate has passed:
+    /// tightest SLO first, then oldest kill, then insertion order.
+    /// Returns `None` when nothing is due at `tick`.
+    pub fn pop_due(&mut self, tick: u64) -> Option<PendingRestart> {
+        let mut best: Option<usize> = None;
+        for (i, e) in self.queue.iter().enumerate() {
+            if e.next_try > tick {
+                continue;
+            }
+            let key = (self.cfg.slo_of(e.vm_type), e.killed_at);
+            let better = match best {
+                None => true,
+                Some(b) => {
+                    key < (self.cfg.slo_of(self.queue[b].vm_type), self.queue[b].killed_at)
+                }
+            };
+            if better {
+                best = Some(i);
+            }
+        }
+        best.map(|i| self.queue.remove(i))
+    }
+
+    /// A popped entry restarted successfully at `tick`.
+    pub fn on_restarted(&mut self, e: &PendingRestart, tick: u64) {
+        let latency = tick.saturating_sub(e.killed_at);
+        self.stats.restarts += 1;
+        if latency > self.cfg.slo_of(e.vm_type) {
+            self.stats.slo_misses += 1;
+        }
+        self.stats.restart_latencies.push(latency);
+    }
+
+    /// A popped entry failed to place: requeue with exponential backoff
+    /// plus jitter, or count it permanently lost after `max_attempts`.
+    pub fn on_retry_failed(&mut self, mut e: PendingRestart, tick: u64) {
+        e.attempts += 1;
+        if e.attempts >= self.cfg.max_attempts {
+            self.stats.permanent_losses += 1;
+            return;
+        }
+        let exp = self
+            .cfg
+            .backoff_base
+            .saturating_mul(1u64 << e.attempts.min(10))
+            .min(self.cfg.backoff_cap.max(1));
+        let jitter = self.rng.below(e.attempts as usize + 1) as u64;
+        e.next_try = tick + exp + jitter;
+        self.queue.push(e);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn orch() -> RecoveryOrchestrator {
+        RecoveryOrchestrator::new(RecoveryConfig::default(), 42)
+    }
+
+    #[test]
+    fn pops_in_slo_priority_then_kill_order() {
+        let mut o = orch();
+        o.on_kill(VmType::Small, App::Fft, 10);
+        o.on_kill(VmType::Small, App::Derby, 5);
+        o.on_kill(VmType::Huge, App::Neo4j, 12);
+        let a = o.pop_due(20).unwrap();
+        assert_eq!((a.vm_type, a.app), (VmType::Huge, App::Neo4j), "tightest SLO first");
+        let b = o.pop_due(20).unwrap();
+        assert_eq!(b.killed_at, 5, "then oldest kill");
+        assert!(o.pop_due(20).is_some() && o.pop_due(20).is_none());
+    }
+
+    #[test]
+    fn backoff_gates_retries_and_grows() {
+        let mut o = orch();
+        o.on_kill(VmType::Medium, App::Stream, 0);
+        let e = o.pop_due(1).unwrap();
+        o.on_retry_failed(e, 1);
+        let e = o.queue()[0].clone();
+        // attempt 1: 1·2^1 = 2 ticks + jitter in 0..=1.
+        assert!(e.next_try >= 3 && e.next_try <= 4, "next_try {}", e.next_try);
+        assert!(o.pop_due(e.next_try - 1).is_none(), "gate must hold");
+        let e = o.pop_due(e.next_try).unwrap();
+        let prev_gap = e.next_try - 1;
+        o.on_retry_failed(e, 10);
+        let gap = o.queue()[0].next_try - 10;
+        assert!(gap >= prev_gap, "backoff must not shrink: {gap} vs {prev_gap}");
+        assert!(gap <= RecoveryConfig::default().backoff_cap + 2, "capped + jitter");
+    }
+
+    #[test]
+    fn bounded_attempts_become_permanent_loss() {
+        let mut o = orch();
+        o.on_kill(VmType::Small, App::Sor, 0);
+        let mut t = 1;
+        for _ in 0..RecoveryConfig::default().max_attempts {
+            t += 100; // past any backoff gate
+            let Some(e) = o.pop_due(t) else { break };
+            o.on_retry_failed(e, t);
+        }
+        assert_eq!(o.outstanding(), 0);
+        assert_eq!(o.stats.permanent_losses, 1);
+        assert_eq!(o.stats.restarts, 0);
+    }
+
+    #[test]
+    fn restart_accounting_feeds_mttr_and_slo_misses() {
+        let mut o = orch();
+        o.on_kill(VmType::Huge, App::Neo4j, 0);
+        let e = o.pop_due(4).unwrap();
+        o.on_restarted(&e, 4); // within the SLO of 8
+        o.on_kill(VmType::Huge, App::Neo4j, 10);
+        let e = o.pop_due(30).unwrap();
+        o.on_restarted(&e, 30); // latency 20 > SLO 8
+        assert_eq!(o.stats.restarts, 2);
+        assert_eq!(o.stats.slo_misses, 1);
+        assert!((o.stats.mttr() - 12.0).abs() < 1e-9);
+        assert!(o.stats.p99_restart() >= o.stats.mttr());
+    }
+
+    #[test]
+    fn jitter_is_deterministic_per_seed() {
+        let run = |seed| {
+            let mut o = RecoveryOrchestrator::new(RecoveryConfig::default(), seed);
+            o.on_kill(VmType::Small, App::Fft, 0);
+            let mut gates = Vec::new();
+            let mut t = 1;
+            while let Some(e) = o.pop_due(t) {
+                o.on_retry_failed(e, t);
+                if let Some(next) = o.queue().first() {
+                    gates.push(next.next_try);
+                    t = next.next_try;
+                } else {
+                    break;
+                }
+            }
+            gates
+        };
+        assert_eq!(run(7), run(7), "same seed, same schedule");
+    }
+}

@@ -156,6 +156,7 @@ impl ShardedMapper {
             agg.prune_fallbacks += z.prune_fallbacks;
             agg.affected_total += z.affected_total;
             agg.evacuations += z.evacuations;
+            agg.crash_losses += z.crash_losses;
         }
         agg
     }
@@ -275,6 +276,26 @@ impl ShardedMapper {
         pull_memory_off_drained(sim, server)?;
         self.publish_stats();
         Ok(failed)
+    }
+
+    /// React to a server crash.  The losses are attributed to the owner
+    /// zones *before* syncing (the router drops ownership records of
+    /// departed VMs on its next pump), then every zone syncs so the dead
+    /// rows fall out of their scoring problems.  The crashed band's
+    /// capacity shrinks implicitly — the slot map already blocks the
+    /// dead server, so candidate generation and the most-free-first
+    /// arrival order see the loss at once; restart re-placements spill
+    /// cross-zone through [`Self::place_arrival`]'s zone ordering.
+    pub fn handle_crash(&mut self, sim: &mut Simulator, killed: &[VmId]) -> Result<()> {
+        for &id in killed {
+            let z = self.owner_zone(id).unwrap_or(0);
+            self.shards[z].mapper.stats.crash_losses += 1;
+        }
+        for shard in &mut self.shards {
+            shard.mapper.sync(sim)?;
+        }
+        self.publish_stats();
+        Ok(())
     }
 
     /// One rebalancer run: summarize per-zone pressure, and when the
@@ -424,6 +445,15 @@ impl Coordinator {
         match self {
             Coordinator::Global(m) => m.handle_drain(sim, server, stranded),
             Coordinator::Sharded(m) => m.handle_drain(sim, server, stranded),
+        }
+    }
+
+    /// React to a server crash: drop the killed VMs' scoring rows now
+    /// (re-placement goes through the restart queue, not here).
+    pub fn handle_crash(&mut self, sim: &mut Simulator, killed: &[VmId]) -> Result<()> {
+        match self {
+            Coordinator::Global(m) => m.handle_crash(sim, killed),
+            Coordinator::Sharded(m) => m.handle_crash(sim, killed),
         }
     }
 

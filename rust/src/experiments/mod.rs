@@ -10,6 +10,7 @@
 #![allow(missing_docs)]
 
 pub mod fabric;
+pub mod fault;
 pub mod figures;
 pub mod harness;
 pub mod shard;
@@ -58,7 +59,7 @@ impl ExpOptions {
 /// All experiment ids, in DESIGN.md order.
 pub const ALL_IDS: &[&str] = &[
     "t1", "t2", "t3", "t4", "t5", "f2", "f3", "f4_10", "f11", "f12", "f13", "f14_16",
-    "f17_19", "var", "abl", "mem", "scale", "shard", "fabric", "scenarios",
+    "f17_19", "var", "abl", "mem", "scale", "shard", "fabric", "scenarios", "fault",
 ];
 
 /// Run one experiment by id.
@@ -84,6 +85,7 @@ pub fn run(id: &str, opts: &ExpOptions) -> Result<figures::Output> {
         "shard" => shard::shard(opts),
         "fabric" => fabric::fabric(opts),
         "scenarios" => crate::scenario::suite::experiment(opts),
+        "fault" => fault::fault(opts),
         other => bail!("unknown experiment {other:?}; known: {ALL_IDS:?}"),
     }
 }

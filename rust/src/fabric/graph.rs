@@ -60,6 +60,10 @@ pub struct FabricGraph {
     links: Vec<Link>,
     /// Per-link up/down state (scenario link failures).
     up: Vec<bool>,
+    /// Per-server crash state: a down server takes every attached link out
+    /// of service atomically (orthogonal to individual link failures, so a
+    /// recovering server re-exposes exactly the per-link state it had).
+    server_down: Vec<bool>,
     /// Uniform health multiplier in (0, 1] (`degrade_fabric` semantics:
     /// one scale across all links).
     uniform_scale: f64,
@@ -100,6 +104,7 @@ impl FabricGraph {
             servers,
             links,
             up,
+            server_down: vec![false; servers],
             uniform_scale: 1.0,
             adj,
             index,
@@ -135,14 +140,27 @@ impl FabricGraph {
         self.up[id.0]
     }
 
+    /// Is the server crashed (all its links out of service)?
+    pub fn is_server_down(&self, s: ServerId) -> bool {
+        self.server_down[s.0]
+    }
+
+    /// Is the link in service: individually up *and* neither endpoint
+    /// server crashed.
+    fn link_live(&self, id: LinkId) -> bool {
+        let l = &self.links[id.0];
+        self.up[id.0] && !self.server_down[l.from.0] && !self.server_down[l.to.0]
+    }
+
     /// Current uniform health multiplier in (0, 1].
     pub fn uniform_scale(&self) -> f64 {
         self.uniform_scale
     }
 
-    /// Effective capacity of a link, GB/s (0 when down).
+    /// Effective capacity of a link, GB/s (0 when down or when either
+    /// endpoint server crashed).
     pub fn capacity_gbs(&self, id: LinkId) -> f64 {
-        if self.up[id.0] {
+        if self.link_live(id) {
             self.links[id.0].base_cap_gbs * self.uniform_scale
         } else {
             0.0
@@ -259,18 +277,62 @@ impl FabricGraph {
         Ok(())
     }
 
-    /// Is the live-link graph still one component?
+    /// Take a server down: every attached link leaves service atomically
+    /// (one re-route, not one per link).  Refuses when the server is
+    /// already down, when it is the last live server, or when its loss
+    /// would partition the *surviving* live servers (mirrors the
+    /// `set_link_down` partition guard).
+    pub fn set_server_down(&mut self, s: ServerId) -> Result<()> {
+        if s.0 >= self.servers {
+            bail!("no such server s{}", s.0);
+        }
+        if self.server_down[s.0] {
+            bail!("server s{} is already down", s.0);
+        }
+        if self.server_down.iter().filter(|d| !**d).count() <= 1 {
+            bail!("cannot take down the last live server s{}", s.0);
+        }
+        self.server_down[s.0] = true;
+        if !self.is_connected() {
+            self.server_down[s.0] = false;
+            bail!("taking down s{} would partition the surviving fabric", s.0);
+        }
+        self.compute_routes();
+        self.reroutes += 1;
+        Ok(())
+    }
+
+    /// Bring a crashed server back: its links return to their individual
+    /// `up` states and routes are recomputed.
+    pub fn set_server_up(&mut self, s: ServerId) -> Result<()> {
+        if s.0 >= self.servers {
+            bail!("no such server s{}", s.0);
+        }
+        if !self.server_down[s.0] {
+            bail!("server s{} is not down", s.0);
+        }
+        self.server_down[s.0] = false;
+        self.compute_routes();
+        self.reroutes += 1;
+        Ok(())
+    }
+
+    /// Is the live-link graph still one component over the live servers?
+    /// (Crashed servers are excluded: the guard protects the *survivors*'
+    /// mutual reachability.)
     fn is_connected(&self) -> bool {
-        if self.servers <= 1 {
+        let live: Vec<usize> =
+            (0..self.servers).filter(|s| !self.server_down[*s]).collect();
+        if live.len() <= 1 {
             return true;
         }
         let mut seen = vec![false; self.servers];
-        seen[0] = true;
-        let mut queue = VecDeque::from([0usize]);
+        seen[live[0]] = true;
+        let mut queue = VecDeque::from([live[0]]);
         let mut count = 1usize;
         while let Some(u) = queue.pop_front() {
             for lid in &self.adj[u] {
-                if !self.up[lid.0] {
+                if !self.link_live(*lid) {
                     continue;
                 }
                 let v = self.links[lid.0].to.0;
@@ -281,7 +343,7 @@ impl FabricGraph {
                 }
             }
         }
-        count == self.servers
+        count == live.len()
     }
 
     /// BFS shortest paths over the live links from every server
@@ -297,7 +359,7 @@ impl FabricGraph {
             let mut queue = VecDeque::from([src]);
             while let Some(u) = queue.pop_front() {
                 for lid in &self.adj[u] {
-                    if !self.up[lid.0] {
+                    if !self.link_live(*lid) {
                         continue;
                     }
                     let v = self.links[lid.0].to.0;
@@ -439,6 +501,70 @@ mod tests {
         assert!(g.restore_link(ServerId(0), ServerId(1)).is_err(), "not down");
         g.set_link_down(ServerId(0), ServerId(1)).unwrap();
         assert!(g.set_link_down(ServerId(0), ServerId(1)).is_err(), "double down");
+    }
+
+    #[test]
+    fn server_down_kills_all_attached_links_atomically() {
+        let mut g = paper_graph();
+        g.set_server_down(ServerId(1)).unwrap();
+        assert!(g.is_server_down(ServerId(1)));
+        assert_eq!(g.reroutes, 1, "one atomic re-route, not one per link");
+        for (lid, l) in g.links() {
+            if l.from.0 == 1 || l.to.0 == 1 {
+                assert_eq!(g.capacity_gbs(lid), 0.0, "link touching s1 still live");
+                // The per-link state is untouched: the outage is the server.
+                assert!(g.is_up(lid));
+            }
+        }
+        // No surviving route crosses the crashed server.
+        for a in 0..6 {
+            for b in 0..6 {
+                if a == 1 || b == 1 || a == b {
+                    continue;
+                }
+                let route = g.route(ServerId(a), ServerId(b));
+                assert!(!route.links.is_empty(), "survivors {a}->{b} unreachable");
+                for lid in &route.links {
+                    let l = g.link(*lid);
+                    assert!(l.from.0 != 1 && l.to.0 != 1, "route {a}->{b} crosses s1");
+                }
+            }
+        }
+        // Routes to/from the crashed server are gone.
+        assert_eq!(g.route_bw_gbs(ServerId(0), ServerId(1)), 0.0);
+        assert_eq!(g.route_bw_gbs(ServerId(1), ServerId(0)), 0.0);
+    }
+
+    #[test]
+    fn server_up_restores_routes_and_preserves_link_state() {
+        let mut g = paper_graph();
+        g.set_link_down(ServerId(0), ServerId(1)).unwrap();
+        g.set_server_down(ServerId(1)).unwrap();
+        g.set_server_up(ServerId(1)).unwrap();
+        assert!(!g.is_server_down(ServerId(1)));
+        // The individually failed link stays failed across the crash.
+        assert!(!g.is_up(g.link_between(ServerId(0), ServerId(1)).unwrap()));
+        assert!(g.hops(ServerId(0), ServerId(1)) >= 2);
+        g.restore_link(ServerId(0), ServerId(1)).unwrap();
+        assert_eq!(g.hops(ServerId(0), ServerId(1)), 1);
+    }
+
+    #[test]
+    fn server_down_validation_and_partition_guard() {
+        // Ring of 4: 0-1-2-3-0.  Losing s1 keeps survivors connected via
+        // 0-3-2; then losing s3 would strand s0 from s2.
+        let spec = TopologySpec { servers: 4, torus: (4, 1), ..TopologySpec::paper() };
+        let mut g = FabricGraph::build(&spec);
+        assert!(g.set_server_down(ServerId(9)).is_err(), "out of range");
+        assert!(g.set_server_up(ServerId(0)).is_err(), "not down");
+        g.set_server_down(ServerId(1)).unwrap();
+        assert!(g.set_server_down(ServerId(1)).is_err(), "double down");
+        let reroutes = g.reroutes;
+        assert!(g.set_server_down(ServerId(3)).is_err(), "partitions survivors");
+        assert!(!g.is_server_down(ServerId(3)), "refused op must not stick");
+        assert_eq!(g.reroutes, reroutes, "refused op must not re-route");
+        g.set_server_up(ServerId(1)).unwrap();
+        assert_eq!(g.hops(ServerId(0), ServerId(1)), 1);
     }
 
     #[test]

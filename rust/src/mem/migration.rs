@@ -65,6 +65,13 @@ pub struct MigrationJob {
     carry_gb: f64,
     /// GB fully transferred so far.
     pub gb_done: f64,
+    /// Consecutive route-partition stalls (reset on progress).
+    route_stalls: u32,
+    /// Engine tick before which the job sits out (exponential backoff
+    /// after a route partition; 0 = runnable).
+    retry_at: u64,
+    /// Retries exhausted: the engine tears the job down this tick.
+    aborted: bool,
 }
 
 impl MigrationJob {
@@ -88,6 +95,45 @@ impl MigrationJob {
     pub fn current(&self) -> Option<ChunkMove> {
         self.moves.get(self.next).copied()
     }
+
+    /// Moves not yet completed (the in-transit one first) — what a
+    /// teardown must un-mark as in-flight.
+    pub fn pending_moves(&self) -> &[ChunkMove] {
+        &self.moves[self.next..]
+    }
+
+    /// Consecutive route-partition stalls so far.
+    pub fn route_stalls(&self) -> u32 {
+        self.route_stalls
+    }
+
+    /// Engine tick the job backs off until (0 = runnable now).
+    pub fn retry_at(&self) -> u64 {
+        self.retry_at
+    }
+}
+
+/// Retries after a route partition before the engine gives up on a job.
+pub const ROUTE_RETRY_MAX: u32 = 6;
+/// Exponential-backoff cap, engine ticks.
+pub const ROUTE_BACKOFF_CAP: u64 = 32;
+
+/// Deterministic jitter source (splitmix64 finalizer): no RNG state, so
+/// backoff never perturbs any seeded stream.
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+/// Backoff delay for the `stalls`-th consecutive route partition of job
+/// `id`: `min(2^stalls, cap)` ticks plus a deterministic jitter of up to
+/// `stalls` ticks (decorrelates retry storms after a rack crash).
+fn backoff_ticks(id: MigrationId, stalls: u32) -> u64 {
+    let base = (1u64 << stalls.min(10)).min(ROUTE_BACKOFF_CAP);
+    let jitter = splitmix64(id.0 ^ ((stalls as u64) << 32)) % (stalls as u64 + 1);
+    base + jitter
 }
 
 /// A chunk whose transfer completed this tick.
@@ -104,6 +150,10 @@ pub struct TickOutcome {
     pub completed_chunks: Vec<Completed>,
     /// Jobs that fully drained this tick.
     pub finished_jobs: Vec<MigrationJob>,
+    /// Jobs torn down this tick after exhausting their route-partition
+    /// retry budget (the caller un-marks their pending chunks and may
+    /// re-plan).
+    pub aborted_jobs: Vec<MigrationJob>,
     /// GB moved per VM this tick (drives guest-stall accounting).
     pub gb_moved: Vec<(VmId, f64)>,
     /// GB actually carried per fabric link this tick (dense, one slot per
@@ -117,6 +167,8 @@ pub struct TickOutcome {
 pub struct MigrationEngine {
     jobs: Vec<MigrationJob>,
     next_id: u64,
+    /// Engine ticks elapsed (one per `advance` call) — the backoff clock.
+    ticks: u64,
 }
 
 impl MigrationEngine {
@@ -137,6 +189,9 @@ impl MigrationEngine {
             next: 0,
             carry_gb: 0.0,
             gb_done: 0.0,
+            route_stalls: 0,
+            retry_at: 0,
+            aborted: false,
         });
         id
     }
@@ -165,6 +220,26 @@ impl MigrationEngine {
         before - self.jobs.len()
     }
 
+    /// Tear down every job matching `pred`, returning the removed jobs so
+    /// the caller can un-mark their pending chunks and emit abort events
+    /// (crash teardown: any job touching the dead server).
+    pub fn abort_where<F>(&mut self, mut pred: F) -> Vec<MigrationJob>
+    where
+        F: FnMut(&MigrationJob) -> bool,
+    {
+        let mut aborted = Vec::new();
+        let mut kept = Vec::with_capacity(self.jobs.len());
+        for job in self.jobs.drain(..) {
+            if pred(&job) {
+                aborted.push(job);
+            } else {
+                kept.push(job);
+            }
+        }
+        self.jobs = kept;
+        aborted
+    }
+
     /// Advance every job by one tick (= one second of fabric time).
     ///
     /// Cross-server chunks drain over their **route** through `fabric`:
@@ -185,6 +260,8 @@ impl MigrationEngine {
         residual: Option<&[f64]>,
     ) -> TickOutcome {
         let _t = crate::telemetry::span(crate::telemetry::Phase::MigrationAdvance);
+        self.ticks += 1;
+        let now = self.ticks;
         let mut out = TickOutcome {
             link_gbs: vec![0.0; fabric.num_links()],
             ..TickOutcome::default()
@@ -198,10 +275,14 @@ impl MigrationEngine {
         };
         // Fair share, per physical resource: jobs crossing each fabric
         // link (from each job's first pending chunk) and intra-server jobs
-        // per memory controller.
+        // per memory controller.  Jobs sitting out a backoff window hold
+        // no link share.
         let mut link_users: Vec<usize> = vec![0; fabric.num_links()];
         let mut intra_users: HashMap<usize, usize> = HashMap::new();
         for job in &self.jobs {
+            if job.retry_at > now {
+                continue;
+            }
             if let Some(mv) = job.current() {
                 let (sa, sb) = servers_of(&mv);
                 if sa == sb {
@@ -216,7 +297,7 @@ impl MigrationEngine {
 
         let mut gb_by_vm: HashMap<VmId, f64> = HashMap::new();
         for job in &mut self.jobs {
-            if job.current().is_none() {
+            if job.current().is_none() || job.retry_at > now {
                 continue;
             }
             // Budget one tick of wall-clock time; each chunk consumes time
@@ -233,6 +314,18 @@ impl MigrationEngine {
                     (topo.spec.mem_bw_per_node_gbs / sharers as f64, None)
                 } else {
                     let route = fabric.route(sa, sb);
+                    if route.links.is_empty() {
+                        // Route partitioned mid-transfer: back off with
+                        // jittered exponential delay, give up after
+                        // `ROUTE_RETRY_MAX` consecutive dead retries.
+                        job.route_stalls += 1;
+                        if job.route_stalls > ROUTE_RETRY_MAX {
+                            job.aborted = true;
+                        } else {
+                            job.retry_at = now + backoff_ticks(job.id, job.route_stalls);
+                        }
+                        break;
+                    }
                     let mut min_share = f64::INFINITY;
                     for l in &route.links {
                         let avail = fabric.capacity_gbs(*l)
@@ -240,14 +333,12 @@ impl MigrationEngine {
                         let sharers = link_users[l.0].max(1);
                         min_share = min_share.min(avail / sharers as f64);
                     }
-                    if route.links.is_empty() {
-                        min_share = 0.0; // no live route: the job stalls
-                    }
                     (min_share / route.links.len().max(1) as f64 * bw_scale, Some(route))
                 };
                 if rate <= 0.0 {
                     break;
                 }
+                job.route_stalls = 0;
                 let need_gb = chunk_gb - job.carry_gb;
                 let need_time = need_gb / rate;
                 let amount = if time >= need_time - 1e-12 {
@@ -288,6 +379,8 @@ impl MigrationEngine {
         for job in self.jobs.drain(..) {
             if job.is_done() {
                 out.finished_jobs.push(job);
+            } else if job.aborted {
+                out.aborted_jobs.push(job);
             } else {
                 remaining.push(job);
             }
@@ -500,6 +593,85 @@ mod tests {
         // The detour is >= 2 hops: at most 1 GB/s.
         assert!(detoured <= healthy / 2.0 + 1e-6, "detour {detoured} vs {healthy}");
         assert!(detoured > 0.0, "job must still drain over the detour");
+    }
+
+    #[test]
+    fn abort_where_tears_down_matching_jobs_and_reports_pending_moves() {
+        let topo = Topology::paper();
+        let chunk_gb = 2.0 / 1024.0;
+        let mut eng = MigrationEngine::new();
+        eng.enqueue(VmId(1), cross_server_moves(600), 0);
+        eng.enqueue(VmId(2), cross_server_moves(10), 0);
+        // One tick completes 512 of vm1's chunks.
+        eng.advance(&topo, chunk_gb, 1.0, topo.fabric(), None);
+        let aborted = eng.abort_where(|j| j.vm == VmId(1));
+        assert_eq!(aborted.len(), 1);
+        assert_eq!(aborted[0].pending_moves().len(), 600 - 512);
+        assert_eq!(aborted[0].pending_moves()[0].chunk, 512);
+        assert!(aborted[0].gb_done > 0.0);
+        assert_eq!(eng.active_jobs(), 1, "non-matching job survives");
+    }
+
+    #[test]
+    fn partitioned_route_backs_off_then_aborts() {
+        let topo = Topology::paper();
+        let chunk_gb = 2.0 / 1024.0;
+        // Destination server 0 crashes: the s4 -> s0 route disappears.
+        let mut dead = topo.fabric().clone();
+        dead.set_server_down(crate::topology::ServerId(0)).unwrap();
+        let mut eng = MigrationEngine::new();
+        eng.enqueue(VmId(1), cross_server_moves(100), 0);
+        let mut aborted = Vec::new();
+        for _ in 0..400 {
+            let out = eng.advance(&topo, chunk_gb, 1.0, &dead, None);
+            assert!(out.gb_moved.is_empty(), "no route, nothing may move");
+            aborted.extend(out.aborted_jobs);
+            if !aborted.is_empty() {
+                break;
+            }
+        }
+        assert_eq!(aborted.len(), 1, "retry budget must exhaust");
+        assert_eq!(aborted[0].route_stalls(), ROUTE_RETRY_MAX + 1);
+        assert_eq!(aborted[0].pending_moves().len(), 100);
+        assert_eq!(eng.active_jobs(), 0);
+    }
+
+    #[test]
+    fn healed_partition_resumes_the_backed_off_job() {
+        let topo = Topology::paper();
+        let chunk_gb = 2.0 / 1024.0;
+        let mut graph = topo.fabric().clone();
+        graph.set_server_down(crate::topology::ServerId(0)).unwrap();
+        let mut eng = MigrationEngine::new();
+        eng.enqueue(VmId(1), cross_server_moves(100), 0);
+        // A couple of dead retries, then the server returns.
+        for _ in 0..4 {
+            let out = eng.advance(&topo, chunk_gb, 1.0, &graph, None);
+            assert!(out.aborted_jobs.is_empty(), "budget must not exhaust yet");
+        }
+        graph.set_server_up(crate::topology::ServerId(0)).unwrap();
+        let mut drained = false;
+        for _ in 0..200 {
+            let out = eng.advance(&topo, chunk_gb, 1.0, &graph, None);
+            if !out.finished_jobs.is_empty() {
+                drained = true;
+                break;
+            }
+        }
+        assert!(drained, "job must resume and finish after the partition heals");
+    }
+
+    #[test]
+    fn backoff_schedule_is_deterministic_and_bounded() {
+        for stalls in 1..=ROUTE_RETRY_MAX {
+            let a = backoff_ticks(MigrationId(3), stalls);
+            let b = backoff_ticks(MigrationId(3), stalls);
+            assert_eq!(a, b, "jitter must be deterministic");
+            assert!((1..=ROUTE_BACKOFF_CAP + stalls as u64).contains(&a), "delay {a}");
+        }
+        // Exponential growth until the cap.
+        assert!(backoff_ticks(MigrationId(1), 1) < ROUTE_BACKOFF_CAP);
+        assert!(backoff_ticks(MigrationId(1), 6) >= ROUTE_BACKOFF_CAP);
     }
 
     #[test]

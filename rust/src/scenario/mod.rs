@@ -28,5 +28,11 @@ pub mod suite;
 pub mod timeline;
 
 pub use runner::{run_scenario, ScenarioConfig, ScenarioMetrics, ScenarioResult};
-pub use suite::{full_suite, run_suite, run_suite_on, smoke_suite, to_json, SCENARIO_NAMES};
-pub use timeline::{DiurnalSpec, DrainWindow, FabricWindow, LinkWindow, ScenarioEvent, ScenarioSpec};
+pub use suite::{
+    chaos_suite, full_suite, run_suite, run_suite_on, smoke_suite, to_json, CHAOS_SCENARIO_NAMES,
+    SCENARIO_NAMES,
+};
+pub use timeline::{
+    CrashStormSpec, CrashWindow, DiurnalSpec, DrainWindow, FabricWindow, LinkWindow, ScenarioEvent,
+    ScenarioSpec,
+};

@@ -12,6 +12,13 @@
 //!   pulls guest memory off the drained nodes through the migration
 //!   engine ([`SmMapper::handle_drain`]).
 //! * **PhaseShift** — round-robin over running VMs in id order.
+//! * **Crash / CrashRecover** — abrupt (possibly rack-correlated) server
+//!   loss via [`crate::sim::Simulator::crash_server`]: resident VMs die,
+//!   the coordinator attributes the loss, and victims go through the
+//!   [`RecoveryOrchestrator`] restart queue (SLO-ordered, exponential
+//!   backoff, bounded attempts).  Refused crashes (already down, would
+//!   partition the fabric) are logged and skipped — a storm may draw the
+//!   same server twice.
 //!
 //! The reported tail metric follows SLO convention: `p99_tail_rel` is the
 //! relative performance of the 99th-percentile *worst* sample — 99% of
@@ -23,7 +30,10 @@ use std::collections::VecDeque;
 
 use anyhow::Result;
 
-use crate::coordinator::{Coordinator, MapperConfig, ShardConfig, ShardedMapper, SmMapper};
+use crate::coordinator::{
+    AdmissionConfig, AdmissionController, Coordinator, Decision, MapperConfig, RecoveryConfig,
+    RecoveryOrchestrator, ShardConfig, ShardedMapper, SmMapper,
+};
 use crate::experiments::{Algorithm, ScorerChoice};
 use crate::runtime::Scorer;
 use crate::sim::{SimConfig, Simulator};
@@ -111,6 +121,31 @@ pub struct ScenarioMetrics {
     /// Events evicted from the bounded simulator trace (0 unless the
     /// scenario outruns the ring capacity).
     pub trace_dropped: u64,
+    // ---- chaos & admission (all zero/1.0 for the legacy scenarios) ----
+    /// Servers crashed (each rack member counts once).
+    pub crashes: usize,
+    /// Crash events refused by the simulator guards (already offline,
+    /// would disconnect the fabric, last online server).
+    pub crash_refused: usize,
+    /// VMs killed by crashes.
+    pub vms_killed: usize,
+    /// Crash victims successfully restarted.
+    pub restarts: u64,
+    /// Crash victims lost for good after bounded retries.
+    pub permanent_losses: u64,
+    /// Restarts that landed past their class SLO.
+    pub slo_misses: u64,
+    /// Mean kill→running latency over successful restarts, ticks.
+    pub mttr_ticks: f64,
+    /// p99 kill→running latency, ticks.
+    pub p99_restart_ticks: f64,
+    /// `1 − lost VM-ticks / offered VM-ticks` (killed-and-waiting or
+    /// permanently lost VMs count as lost each tick); 1.0 crash-free.
+    pub availability: f64,
+    /// Admission-gate decisions (0 unless [`ScenarioSpec::admission`]).
+    pub adm_admitted: u64,
+    pub adm_rejected: u64,
+    pub adm_evicted: u64,
 }
 
 /// One scenario run: metrics + the applied-event log (both deterministic)
@@ -132,14 +167,27 @@ fn build_scorer(choice: ScorerChoice) -> Scorer {
     }
 }
 
-/// Admit one VM: create, (coordinator) place, start.  Returns `None` —
-/// with the defined VM rolled back — when placement finds no capacity.
+/// Admit one VM: (optional) admission gate, create, (coordinator) place,
+/// start.  Returns `None` — with the defined VM rolled back — when the
+/// gate rejects or placement finds no capacity.
 fn admit(
     sim: &mut Simulator,
     mapper: Option<&mut Coordinator>,
+    gate: Option<&mut AdmissionController>,
     vm_type: VmType,
     app: App,
 ) -> Result<Option<VmId>> {
+    if let Some(ac) = gate {
+        match ac.decide(sim, vm_type) {
+            Decision::Admit => {}
+            Decision::Reject { .. } => return Ok(None),
+            Decision::AdmitAfterEvicting(victims) => {
+                for v in victims {
+                    sim.destroy(v)?;
+                }
+            }
+        }
+    }
     let id = sim.create(vm_type, app);
     if let Some(m) = mapper {
         if m.place_arrival(sim, id).is_err() {
@@ -151,6 +199,17 @@ fn admit(
     Ok(Some(id))
 }
 
+/// Servers hit by a crash event: the named server, or — for a rack
+/// crash — every server in the same torus row (the paper topology racks
+/// servers along the x dimension).
+fn blast_radius(sim: &Simulator, server: usize, rack: bool) -> Vec<usize> {
+    if !rack {
+        return vec![server];
+    }
+    let x = sim.topo.spec.torus.0.max(1);
+    (0..sim.topo.spec.servers).filter(|s| s / x == server / x).collect()
+}
+
 struct EventCtx {
     churn_pool: VecDeque<VmId>,
     pending: VecDeque<(VmType, App)>,
@@ -158,6 +217,15 @@ struct EventCtx {
     rejected: u64,
     readmitted: u64,
     phase_rr: usize,
+    /// Current tick (events need it for restart-latency bookkeeping).
+    now: u64,
+    /// Headroom gate, installed iff [`ScenarioSpec::admission`].
+    admission: Option<AdmissionController>,
+    /// Restart queue for crash victims (inert without crashes).
+    recovery: RecoveryOrchestrator,
+    crashes: usize,
+    crash_refused: usize,
+    vms_killed: usize,
 }
 
 fn apply_event(
@@ -168,7 +236,7 @@ fn apply_event(
 ) -> Result<String> {
     Ok(match ev {
         ScenarioEvent::Arrive { vm_type, app } => {
-            match admit(sim, mapper.as_mut(), *vm_type, *app)? {
+            match admit(sim, mapper.as_mut(), ctx.admission.as_mut(), *vm_type, *app)? {
                 Some(id) => {
                     ctx.churn_pool.push_back(id);
                     ctx.vms_seen += 1;
@@ -238,6 +306,51 @@ fn apply_event(
             sim.restore_fabric_link(ServerId(*a), ServerId(*b))?;
             format!("link-restore s{a}<->s{b}")
         }
+        ScenarioEvent::Crash { server, rack } => {
+            let members = blast_radius(sim, *server, *rack);
+            let (mut down, mut refused, mut killed_total) = (0usize, 0usize, 0usize);
+            for s in members {
+                // Snapshot classes first: the crash removes its victims,
+                // and the restart queue needs their (type, app).
+                let classes: std::collections::BTreeMap<VmId, (VmType, App)> =
+                    sim.vms().map(|(id, m)| (*id, (m.vm.vm_type, m.vm.app))).collect();
+                // Refusals (already offline, would disconnect the fabric,
+                // last online server) are survivable by design: a storm
+                // may draw the same server twice.
+                match sim.crash_server(ServerId(s)) {
+                    Ok(killed) => {
+                        down += 1;
+                        killed_total += killed.len();
+                        for id in &killed {
+                            if let Some((vm_type, app)) = classes.get(id) {
+                                ctx.recovery.on_kill(*vm_type, *app, ctx.now);
+                            }
+                        }
+                        if let Some(m) = mapper.as_mut() {
+                            m.handle_crash(sim, &killed)?;
+                        }
+                    }
+                    Err(_) => refused += 1,
+                }
+            }
+            ctx.crashes += down;
+            ctx.crash_refused += refused;
+            ctx.vms_killed += killed_total;
+            format!(
+                "crash s{server}{} (down {down}, refused {refused}, killed {killed_total})",
+                if *rack { " rack" } else { "" }
+            )
+        }
+        ScenarioEvent::CrashRecover { server, rack } => {
+            let members = blast_radius(sim, *server, *rack);
+            let mut back = 0usize;
+            for s in members {
+                if sim.is_server_crashed(ServerId(s)) && sim.recover_server(ServerId(s)).is_ok() {
+                    back += 1;
+                }
+            }
+            format!("crash-recover s{server}{} ({back} back)", if *rack { " rack" } else { "" })
+        }
     })
 }
 
@@ -298,16 +411,24 @@ pub fn run_scenario(
         rejected: 0,
         readmitted: 0,
         phase_rr: 0,
+        now: 0,
+        admission: spec.admission.then(|| AdmissionController::new(AdmissionConfig::default())),
+        recovery: RecoveryOrchestrator::new(RecoveryConfig::default(), sim_seed),
+        crashes: 0,
+        crash_refused: 0,
+        vms_killed: 0,
     };
     let mut samples: Vec<f64> = Vec::new();
     let mut event_log: Vec<(u64, String)> = Vec::new();
+    let (mut offered_ticks, mut lost_ticks) = (0u64, 0u64);
 
     let t0 = std::time::Instant::now();
     for t in 0..spec.horizon {
+        ctx.now = t;
         while init_cursor < initial.len() && initial[init_cursor].at_tick <= t {
             let a = initial[init_cursor];
             init_cursor += 1;
-            match admit(&mut sim, mapper.as_mut(), a.vm_type, a.app)? {
+            match admit(&mut sim, mapper.as_mut(), ctx.admission.as_mut(), a.vm_type, a.app)? {
                 Some(_) => ctx.vms_seen += 1,
                 None => {
                     ctx.rejected += 1;
@@ -323,13 +444,40 @@ pub fn run_scenario(
             drop(span);
             event_log.push((t, desc));
         }
+        // Restart drive: re-place crash victims in SLO order.  The
+        // orchestrator is a coordinator service, so coordinated runs pump
+        // it every tick (restart latency IS the SLO; the backoff gates
+        // keep a shortage from hammering place_arrival).  The kernel
+        // baseline has no such service — its victims wait for the same
+        // slow poll the re-admission queue uses, which is exactly the
+        // MTTR gap EXP-FAULT measures.  Failures requeue with backoff
+        // until the attempt bound declares them permanently lost.
+        while mapper.is_some() || t % 5 == 0 {
+            let Some(e) = ctx.recovery.pop_due(t) else { break };
+            match admit(&mut sim, mapper.as_mut(), ctx.admission.as_mut(), e.vm_type, e.app)? {
+                Some(id) => {
+                    ctx.recovery.on_restarted(&e, t);
+                    ctx.vms_seen += 1;
+                    event_log.push((
+                        t,
+                        format!(
+                            "restart {} {} -> {id} (latency {})",
+                            e.vm_type.name(),
+                            e.app,
+                            t.saturating_sub(e.killed_at)
+                        ),
+                    ));
+                }
+                None => ctx.recovery.on_retry_failed(e, t),
+            }
+        }
         // Re-admission: drain the queue while capacity allows (recovered
         // servers or departures free slots up).  Throttled to every 5th
         // tick: a failed place_arrival can fall back to a whole-cluster
         // reshuffle, which must not run on every tick of a long shortage.
         while t % 5 == 0 {
             let Some((vm_type, app)) = ctx.pending.front().copied() else { break };
-            match admit(&mut sim, mapper.as_mut(), vm_type, app)? {
+            match admit(&mut sim, mapper.as_mut(), ctx.admission.as_mut(), vm_type, app)? {
                 Some(id) => {
                     ctx.pending.pop_front();
                     ctx.churn_pool.push_back(id);
@@ -342,6 +490,12 @@ pub fn run_scenario(
         }
 
         let out = sim.step();
+        // Availability ledger: every killed-and-not-yet-restarted VM (and
+        // every permanent loss) is a lost VM-tick that the cluster was
+        // asked to serve.  Crash-free runs never increment `lost_ticks`.
+        let waiting = ctx.recovery.outstanding() as u64 + ctx.recovery.stats.permanent_losses;
+        offered_ticks += out.len() as u64 + waiting;
+        lost_ticks += waiting;
         if t >= spec.warmup {
             for (_, s) in &out {
                 samples.push(s.rel_perf);
@@ -367,6 +521,22 @@ pub fn run_scenario(
         }
         None => (0, 0, 0),
     };
+    let (adm_admitted, adm_rejected, adm_evicted) = match &ctx.admission {
+        Some(ac) => (ac.admitted, ac.rejected, ac.evictions),
+        None => (0, 0, 0),
+    };
+    let rec = ctx.recovery.stats.clone();
+    telemetry::with(|r| {
+        let reg = r.registry_mut();
+        reg.add_counter("chaos.crashes", ctx.crashes as f64);
+        reg.add_counter("chaos.vms_killed", ctx.vms_killed as f64);
+        reg.add_counter("chaos.restarts", rec.restarts as f64);
+        reg.add_counter("chaos.permanent_losses", rec.permanent_losses as f64);
+        reg.add_counter("chaos.slo_misses", rec.slo_misses as f64);
+        reg.add_counter("admission.admitted", adm_admitted as f64);
+        reg.add_counter("admission.rejected", adm_rejected as f64);
+        reg.add_counter("admission.evicted", adm_evicted as f64);
+    });
     let metrics = ScenarioMetrics {
         scenario: spec.name.clone(),
         algorithm: alg.name(),
@@ -387,6 +557,22 @@ pub fn run_scenario(
             + sim.trace.count_kind("fabric_link_restored"),
         events_applied: event_log.len(),
         trace_dropped: sim.trace.dropped(),
+        crashes: ctx.crashes,
+        crash_refused: ctx.crash_refused,
+        vms_killed: ctx.vms_killed,
+        restarts: rec.restarts,
+        permanent_losses: rec.permanent_losses,
+        slo_misses: rec.slo_misses,
+        mttr_ticks: rec.mttr(),
+        p99_restart_ticks: rec.p99_restart(),
+        availability: if offered_ticks == 0 {
+            1.0
+        } else {
+            1.0 - lost_ticks as f64 / offered_ticks as f64
+        },
+        adm_admitted,
+        adm_rejected,
+        adm_evicted,
     };
     let telemetry = guard.and_then(|g| g.finish()).map(|mut rec| {
         rec.push_spans_summary();
@@ -425,6 +611,53 @@ mod tests {
         );
         assert!(r.event_log.iter().any(|(_, d)| d.starts_with("arrive")));
         assert!(r.event_log.iter().any(|(_, d)| d.starts_with("depart")));
+    }
+
+    #[test]
+    fn crash_single_kills_restarts_and_degrades_availability() {
+        let spec = suite::named("crash-single", true).unwrap();
+        let r = run_scenario(&spec, Algorithm::SmIpc, &ScenarioConfig::new(7)).unwrap();
+        let m = &r.metrics;
+        assert_eq!(m.crashes, 1, "one crash window: {:?}", r.event_log);
+        assert!(r.event_log.iter().any(|(_, d)| d.starts_with("crash s4")));
+        assert!(r.event_log.iter().any(|(_, d)| d.starts_with("crash-recover s4 (1 back)")));
+        if m.vms_killed > 0 {
+            // Victims wait at least one tick, so availability must dip.
+            assert!(m.availability < 1.0, "availability {}", m.availability);
+            assert!(
+                m.restarts + m.permanent_losses <= m.vms_killed as u64,
+                "{} restarts + {} losses vs {} killed",
+                m.restarts,
+                m.permanent_losses,
+                m.vms_killed
+            );
+            if m.restarts > 0 {
+                assert!(m.mttr_ticks > 0.0 && m.p99_restart_ticks >= m.mttr_ticks);
+                assert!(r.event_log.iter().any(|(_, d)| d.starts_with("restart")));
+            }
+        }
+        assert!(m.availability <= 1.0 && m.availability > 0.0);
+        assert!(m.adm_admitted > 0, "the gate must have admitted the base population");
+    }
+
+    #[test]
+    fn rack_crash_downs_the_row_and_storm_is_deterministic() {
+        let spec = suite::named("crash-rack", true).unwrap();
+        let r = run_scenario(&spec, Algorithm::SmIpc, &ScenarioConfig::new(11)).unwrap();
+        // Rack of server 3 on the (3,2) torus = the whole row {3,4,5}.
+        assert!(
+            r.event_log.iter().any(|(_, d)| d.starts_with("crash s3 rack (down 3")),
+            "rack crash must down all three row members: {:?}",
+            r.event_log
+        );
+        assert_eq!(r.metrics.crashes, 3);
+
+        let spec = suite::named("crash-storm", true).unwrap();
+        let a = run_scenario(&spec, Algorithm::SmIpc, &ScenarioConfig::new(11)).unwrap();
+        let b = run_scenario(&spec, Algorithm::SmIpc, &ScenarioConfig::new(11)).unwrap();
+        assert_eq!(a.metrics, b.metrics, "chaos must be deterministic per seed");
+        assert_eq!(a.event_log, b.event_log);
+        assert!(a.metrics.crashes + a.metrics.crash_refused >= 1, "storm must attempt crashes");
     }
 
     #[test]

@@ -14,7 +14,9 @@ use crate::workload::trace::Arrival;
 use crate::workload::App;
 
 use super::runner::{run_scenario, ScenarioConfig, ScenarioResult};
-use super::timeline::{DiurnalSpec, DrainWindow, FabricWindow, LinkWindow, ScenarioSpec};
+use super::timeline::{
+    CrashStormSpec, CrashWindow, DiurnalSpec, DrainWindow, FabricWindow, LinkWindow, ScenarioSpec,
+};
 
 /// The compared policies: the kernel baseline ("LinuxSched") and the
 /// coordinator (SM-IPC).
@@ -23,6 +25,11 @@ pub const SUITE_ALGS: [Algorithm; 2] = [Algorithm::Vanilla, Algorithm::SmIpc];
 /// The six named scenarios.
 pub const SCENARIO_NAMES: [&str; 6] =
     ["steady", "churn", "drain", "diurnal", "degraded-fabric", "degraded-link"];
+
+/// The chaos scenarios (crash-failure injection; `dvrm scenarios --suite
+/// chaos` and EXP-FAULT).  Kept out of [`SCENARIO_NAMES`] so the legacy
+/// suite stays bit-identical.
+pub const CHAOS_SCENARIO_NAMES: [&str; 3] = ["crash-single", "crash-rack", "crash-storm"];
 
 /// Steady background population: ~48 vCPUs (1/6 of the paper machine) of
 /// mixed classes, leaving headroom for churn, drains and re-admission.
@@ -64,6 +71,9 @@ pub fn named(name: &str, fast: bool) -> Option<ScenarioSpec> {
         drains: Vec::new(),
         fabric: Vec::new(),
         link_downs: Vec::new(),
+        crashes: Vec::new(),
+        crash_storm: None,
+        admission: false,
         fabric_feedback: false,
     };
     match name {
@@ -82,6 +92,39 @@ pub fn named(name: &str, fast: bool) -> Option<ScenarioSpec> {
         }
         "degraded-fabric" => {
             s.fabric = vec![FabricWindow { at: h / 4, scale: 0.1, restore_at: h * 3 / 4 }];
+            s.arrive_rate = 6.0 / h as f64;
+            s.depart_rate = 4.0 / h as f64;
+        }
+        "crash-single" => {
+            // One abrupt server loss mid-run, repaired later — the
+            // minimal MTTR / availability measurement.  Light churn keeps
+            // arrivals flowing through the admission gate during the
+            // outage.
+            s.crashes =
+                vec![CrashWindow { at: h * 2 / 5, server: 4, rack: false, recover_at: h * 4 / 5 }];
+            s.admission = true;
+            s.arrive_rate = 6.0 / h as f64;
+            s.depart_rate = 4.0 / h as f64;
+        }
+        "crash-rack" => {
+            // Correlated failure: the whole torus row of server 3 dies at
+            // once (half the machine), then comes back.  The survivors
+            // must absorb every restart.
+            s.crashes =
+                vec![CrashWindow { at: h * 2 / 5, server: 3, rack: true, recover_at: h * 7 / 10 }];
+            s.admission = true;
+        }
+        "crash-storm" => {
+            // Seed-randomized storm: repeated crashes with short outages,
+            // some drawn on already-dead servers (refused, by design).
+            s.crash_storm = Some(CrashStormSpec {
+                from: h / 5,
+                to: h * 4 / 5,
+                count: 5,
+                servers: 6,
+                outage: h / 10,
+            });
+            s.admission = true;
             s.arrive_rate = 6.0 / h as f64;
             s.depart_rate = 4.0 / h as f64;
         }
@@ -115,6 +158,11 @@ pub fn smoke_suite() -> Vec<ScenarioSpec> {
 /// Full-length suite.
 pub fn full_suite() -> Vec<ScenarioSpec> {
     suite(false)
+}
+
+/// The crash-failure suite (short horizon — CI `chaos-smoke` and tests).
+pub fn chaos_suite(fast: bool) -> Vec<ScenarioSpec> {
+    CHAOS_SCENARIO_NAMES.iter().map(|n| named(n, fast).expect("known scenario")).collect()
 }
 
 /// Run `specs × {LinuxSched, SM-IPC}` on the shared pool, in order:
@@ -155,7 +203,12 @@ pub fn to_json(results: &[ScenarioResult]) -> String {
              \"evacuations\": {}, \
              \"sched_moves\": {}, \"migrations_started\": {}, \"gb_moved\": {:.3}, \
              \"rejected\": {}, \"readmitted\": {}, \"link_events\": {}, \"events\": {}, \
-             \"trace_dropped\": {}, \"ticks_per_sec\": {:.1}}}{}\n",
+             \"trace_dropped\": {}, \
+             \"crashes\": {}, \"vms_killed\": {}, \"restarts\": {}, \
+             \"permanent_losses\": {}, \"slo_misses\": {}, \"mttr_ticks\": {:.3}, \
+             \"p99_restart_ticks\": {:.3}, \"availability\": {:.6}, \
+             \"adm_admitted\": {}, \"adm_rejected\": {}, \"adm_evicted\": {}, \
+             \"ticks_per_sec\": {:.1}}}{}\n",
             esc(&m.scenario),
             esc(m.algorithm),
             m.vms_seen,
@@ -174,6 +227,17 @@ pub fn to_json(results: &[ScenarioResult]) -> String {
             m.link_events,
             m.events_applied,
             m.trace_dropped,
+            m.crashes,
+            m.vms_killed,
+            m.restarts,
+            m.permanent_losses,
+            m.slo_misses,
+            m.mttr_ticks,
+            m.p99_restart_ticks,
+            m.availability,
+            m.adm_admitted,
+            m.adm_rejected,
+            m.adm_evicted,
             r.ticks_per_sec,
             if k + 1 == results.len() { "" } else { "," },
         ));
@@ -228,7 +292,9 @@ pub fn suite_by_name(name: &str) -> Result<Vec<ScenarioSpec>> {
     match name {
         "smoke" => Ok(smoke_suite()),
         "full" => Ok(full_suite()),
-        other => bail!("unknown suite {other:?}; known: smoke, full"),
+        "chaos" => Ok(chaos_suite(true)),
+        "chaos-full" => Ok(chaos_suite(false)),
+        other => bail!("unknown suite {other:?}; known: smoke, full, chaos, chaos-full"),
     }
 }
 
@@ -246,6 +312,28 @@ mod tests {
         }
         assert!(named("nosuch", true).is_none());
         assert!(suite_by_name("nosuch").is_err());
+    }
+
+    #[test]
+    fn chaos_is_opt_in_and_legacy_specs_stay_clean() {
+        for name in SCENARIO_NAMES {
+            let s = named(name, true).unwrap();
+            assert!(s.crashes.is_empty(), "{name} must not crash");
+            assert!(s.crash_storm.is_none(), "{name} must not storm");
+            assert!(!s.admission, "{name} must bypass the gate");
+        }
+        let c = chaos_suite(true);
+        assert_eq!(c.len(), CHAOS_SCENARIO_NAMES.len());
+        for s in &c {
+            assert!(s.admission, "{}: chaos runs gate arrivals", s.name);
+            assert!(
+                !s.crashes.is_empty() || s.crash_storm.is_some(),
+                "{}: chaos runs must crash something",
+                s.name
+            );
+        }
+        assert!(suite_by_name("chaos").is_ok());
+        assert!(suite_by_name("chaos-full").is_ok());
     }
 
     #[test]

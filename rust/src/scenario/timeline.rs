@@ -36,6 +36,13 @@ pub enum ScenarioEvent {
     LinkDown { a: usize, b: usize },
     /// The failed link pair comes back.
     LinkRestore { a: usize, b: usize },
+    /// Abrupt fail-stop crash (chaos): resident VMs die, links drop.
+    /// With `rack`, the whole torus row of `server` crashes in the same
+    /// tick (correlated failure) — membership is resolved by the runner
+    /// from the live topology.
+    Crash { server: usize, rack: bool },
+    /// A crashed server (or rack) returns, empty.
+    CrashRecover { server: usize, rack: bool },
 }
 
 /// Diurnal load wave: `scale(t) = 1 + amplitude · sin(2πt / period)`,
@@ -73,6 +80,33 @@ pub struct LinkWindow {
     pub restore_at: u64,
 }
 
+/// A crash window: `server` (or, with `rack`, its whole torus row) dies
+/// abruptly at `at` and returns *empty* at `recover_at` (`0` or past the
+/// horizon = never within the run).
+#[derive(Debug, Clone, Copy)]
+pub struct CrashWindow {
+    pub at: u64,
+    pub server: usize,
+    /// Correlated failure: take down the whole torus row of `server`.
+    pub rack: bool,
+    pub recover_at: u64,
+}
+
+/// Seed-deterministic crash storm: `count` independent single-server
+/// crashes drawn uniformly on `[from, to)` over `servers` hosts, each
+/// returning empty after `outage` ticks (`0` = never).  Draws come from
+/// a dedicated RNG stream forked only when a storm is present, so
+/// storm-free scenarios expand bit-identically to before.
+#[derive(Debug, Clone, Copy)]
+pub struct CrashStormSpec {
+    pub from: u64,
+    pub to: u64,
+    pub count: usize,
+    /// Hosts to draw crash targets from (the runner's topology size).
+    pub servers: usize,
+    pub outage: u64,
+}
+
 /// Declarative description of one scenario.
 #[derive(Debug, Clone)]
 pub struct ScenarioSpec {
@@ -97,6 +131,15 @@ pub struct ScenarioSpec {
     pub fabric: Vec<FabricWindow>,
     /// Individual link failures (asymmetric fabric degradation).
     pub link_downs: Vec<LinkWindow>,
+    /// Abrupt crash windows (chaos; empty for the legacy scenarios).
+    pub crashes: Vec<CrashWindow>,
+    /// Randomized crash storm (chaos; `None` for the legacy scenarios).
+    pub crash_storm: Option<CrashStormSpec>,
+    /// Gate arrivals (and restarts) through the
+    /// [`crate::coordinator::AdmissionController`] headroom policy
+    /// instead of admitting unconditionally.  Off for the legacy
+    /// scenarios (bit-parity); on for the chaos suite.
+    pub admission: bool,
     /// Run the simulator with link-level congestion feedback on (the
     /// fabric ledger shaping perf and migration budgets).  Off for the
     /// legacy scenarios, which stay bit-identical to their pre-fabric
@@ -206,6 +249,30 @@ impl ScenarioSpec {
             }
         }
 
+        for c in &self.crashes {
+            events.push((c.at, ScenarioEvent::Crash { server: c.server, rack: c.rack }));
+            if c.recover_at > c.at && c.recover_at < self.horizon {
+                let ev = ScenarioEvent::CrashRecover { server: c.server, rack: c.rack };
+                events.push((c.recover_at, ev));
+            }
+        }
+        // The storm stream (4) forks only when a storm exists: legacy
+        // specs draw exactly the streams they always drew, keeping their
+        // timelines bit-identical.
+        if let Some(s) = self.crash_storm {
+            let mut crash_rng = rng.fork(4);
+            let span = s.to.saturating_sub(s.from).max(1) as usize;
+            for _ in 0..s.count {
+                let t = s.from + crash_rng.below(span) as u64;
+                let server = crash_rng.below(s.servers.max(1));
+                events.push((t, ScenarioEvent::Crash { server, rack: false }));
+                let r = t + s.outage;
+                if s.outage > 0 && r < self.horizon {
+                    events.push((r, ScenarioEvent::CrashRecover { server, rack: false }));
+                }
+            }
+        }
+
         events.sort_by_key(|(t, _)| *t);
         events
     }
@@ -229,6 +296,9 @@ mod tests {
             drains: vec![DrainWindow { at: 80, server: 3, recover_at: 160 }],
             fabric: vec![FabricWindow { at: 50, scale: 0.2, restore_at: 150 }],
             link_downs: vec![LinkWindow { at: 60, a: 0, b: 1, restore_at: 140 }],
+            crashes: Vec::new(),
+            crash_storm: None,
+            admission: false,
             fabric_feedback: false,
         }
     }
@@ -293,6 +363,53 @@ mod tests {
         let spread = scales.iter().cloned().fold(f64::MIN, f64::max)
             - scales.iter().cloned().fold(f64::MAX, f64::min);
         assert!(spread > 0.5, "diurnal wave too flat: {spread}");
+    }
+
+    #[test]
+    fn crash_windows_expand_to_paired_events() {
+        let mut spec = churny();
+        spec.crashes = vec![
+            CrashWindow { at: 70, server: 2, rack: false, recover_at: 120 },
+            CrashWindow { at: 90, server: 0, rack: true, recover_at: 0 },
+        ];
+        let tl = spec.timeline(13);
+        assert!(tl.contains(&(70, ScenarioEvent::Crash { server: 2, rack: false })));
+        assert!(tl.contains(&(120, ScenarioEvent::CrashRecover { server: 2, rack: false })));
+        assert!(tl.contains(&(90, ScenarioEvent::Crash { server: 0, rack: true })));
+        let rack_recovers = tl
+            .iter()
+            .filter(|(_, e)| matches!(e, ScenarioEvent::CrashRecover { rack: true, .. }))
+            .count();
+        assert_eq!(rack_recovers, 0, "recover_at 0 means no recovery");
+    }
+
+    #[test]
+    fn crash_storm_is_seeded_bounded_and_leaves_legacy_streams_alone() {
+        let mut spec = churny();
+        spec.crash_storm =
+            Some(CrashStormSpec { from: 50, to: 150, count: 4, servers: 6, outage: 20 });
+        let a = spec.timeline(42);
+        assert_eq!(a, spec.timeline(42), "storm must be deterministic per seed");
+        let crashes: Vec<_> = a
+            .iter()
+            .filter_map(|(t, e)| match e {
+                ScenarioEvent::Crash { server, .. } => Some((*t, *server)),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(crashes.len(), 4);
+        assert!(crashes.iter().all(|(t, s)| (50..150).contains(t) && *s < 6));
+        // The storm draws from its own forked stream: every non-crash
+        // event of the legacy expansion is unchanged.
+        let legacy = churny().timeline(42);
+        let without_crashes: Vec<_> = a
+            .iter()
+            .filter(|(_, e)| {
+                !matches!(e, ScenarioEvent::Crash { .. } | ScenarioEvent::CrashRecover { .. })
+            })
+            .cloned()
+            .collect();
+        assert_eq!(without_crashes, legacy, "legacy streams perturbed by the storm fork");
     }
 
     #[test]

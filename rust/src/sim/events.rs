@@ -43,6 +43,14 @@ pub enum Event {
     PhaseShifted { vm: VmId, phase: &'static str },
     /// Cluster-wide load multiplier changed (diurnal scenarios).
     LoadScaled { scale: f64 },
+    /// A server crashed abruptly (chaos injection): `vms_killed` running
+    /// VMs died with it and its fabric links went down atomically.
+    ServerCrashed { server: usize, vms_killed: usize },
+    /// A running VM died with its crashed server (no graceful evacuation).
+    VmKilled { vm: VmId, server: usize },
+    /// An in-flight memory migration was torn down before completion
+    /// (`gb_done` GB had landed; the rest never moved).
+    MigrationAborted { vm: VmId, gb_done: f64, reason: &'static str },
 }
 
 impl Event {
@@ -64,6 +72,9 @@ impl Event {
             Event::FabricLinkRestored { .. } => "fabric_link_restored",
             Event::PhaseShifted { .. } => "phase_shifted",
             Event::LoadScaled { .. } => "load_scaled",
+            Event::ServerCrashed { .. } => "server_crashed",
+            Event::VmKilled { .. } => "vm_killed",
+            Event::MigrationAborted { .. } => "migration_aborted",
         }
     }
 
@@ -80,12 +91,15 @@ impl Event {
             | Event::MemoryMigrated { vm, .. }
             | Event::Destroyed { vm }
             | Event::Evicted { vm }
-            | Event::PhaseShifted { vm, .. } => Some(*vm),
+            | Event::PhaseShifted { vm, .. }
+            | Event::VmKilled { vm, .. }
+            | Event::MigrationAborted { vm, .. } => Some(*vm),
             Event::ServerDrained { .. }
             | Event::ServerRecovered { .. }
             | Event::FabricDegraded { .. }
             | Event::FabricLinkDown { .. }
             | Event::FabricLinkRestored { .. }
+            | Event::ServerCrashed { .. }
             | Event::LoadScaled { .. } => None,
         }
     }
@@ -116,6 +130,13 @@ impl Event {
             }
             Event::PhaseShifted { phase, .. } => format!("phase={phase}"),
             Event::LoadScaled { scale } => format!("scale={scale:.3}"),
+            Event::ServerCrashed { server, vms_killed } => {
+                format!("server={server};vms_killed={vms_killed}")
+            }
+            Event::VmKilled { server, .. } => format!("server={server}"),
+            Event::MigrationAborted { gb_done, reason, .. } => {
+                format!("gb_done={gb_done:.3};reason={reason}")
+            }
         }
     }
 }
@@ -289,6 +310,21 @@ mod tests {
         t.push(3, Event::FabricDegraded { scale: 0.1 });
         assert!(t.to_csv().contains("3,fabric_degraded,-"));
         assert_eq!(t.count_kind("fabric_degraded"), 1);
+    }
+
+    #[test]
+    fn crash_events_carry_payloads() {
+        let mut t = EventTrace::new(10);
+        t.push(3, Event::ServerCrashed { server: 2, vms_killed: 4 });
+        t.push(3, Event::VmKilled { vm: VmId(7), server: 2 });
+        t.push(3, Event::MigrationAborted { vm: VmId(8), gb_done: 1.5, reason: "crash" });
+        assert_eq!(t.count_kind("server_crashed"), 1);
+        assert_eq!(Event::ServerCrashed { server: 2, vms_killed: 4 }.vm(), None);
+        assert_eq!(Event::VmKilled { vm: VmId(7), server: 2 }.vm(), Some(VmId(7)));
+        let csv = t.to_csv();
+        assert!(csv.contains("3,server_crashed,-,server=2;vms_killed=4"));
+        assert!(csv.contains("3,vm_killed,vm7,server=2"));
+        assert!(csv.contains("3,migration_aborted,vm8,gb_done=1.500;reason=crash"));
     }
 
     #[test]

@@ -89,6 +89,12 @@ pub struct SimConfig {
     /// evaluation) and every accumulator mutation stays serial in a
     /// fixed order.  Env hook: `DVRM_TICK_THREADS=N`.
     pub threads: usize,
+    /// Abort in-flight page migrations whose *destination* chunk lands on
+    /// a server being drained (fail-stop semantics, chaos scenarios).
+    /// Off by default: the legacy drain model keeps the host's memory
+    /// addressable until the evacuation finishes, so transfers complete —
+    /// flipping this changes drain behaviour and therefore the event log.
+    pub drain_aborts_migrations: bool,
 }
 
 impl SimConfig {
@@ -111,6 +117,7 @@ impl SimConfig {
                 .ok()
                 .and_then(|v| v.parse().ok())
                 .unwrap_or(1),
+            drain_aborts_migrations: false,
         }
     }
 
@@ -247,6 +254,10 @@ pub struct Simulator {
     /// Drained servers (scenario engine): unschedulable and blocked for
     /// candidate generation until recovered.
     offline: BTreeSet<usize>,
+    /// Crashed servers (chaos engine): a subset of `offline` whose fabric
+    /// ports are down and whose memory contents are gone.  Recovery
+    /// brings the host back *empty* (crash-then-return-empty semantics).
+    crashed: BTreeSet<usize>,
     /// Fabric health multiplier in (0, 1]: scales cross-server migration
     /// bandwidth and the model's fabric capacity (1 = nominal).
     fabric_health: f64,
@@ -309,6 +320,7 @@ impl Simulator {
             pool,
             zones,
             offline: BTreeSet::new(),
+            crashed: BTreeSet::new(),
             fabric_health: 1.0,
             fabric,
             mig_link_gbs: vec![0.0; num_links],
@@ -583,6 +595,32 @@ impl Simulator {
         self.sync_offline_mask();
         self.sync_sched_load();
 
+        // Fail-stop drains (opt-in): transfers still headed *into* the
+        // departing server abort instead of completing against a host
+        // that is about to go away.  The source side keeps draining —
+        // drained memory stays addressable until recovery.
+        if self.cfg.drain_aborts_migrations {
+            let topo = &self.topo;
+            let aborted = self.migrations.abort_where(|job| {
+                job.pending_moves().iter().any(|mv| topo.server_of_node(mv.to).0 == server.0)
+            });
+            let tick = self.tick;
+            for job in &aborted {
+                if let Some(mvm) = self.vms.get_mut(&job.vm) {
+                    for mv in job.pending_moves() {
+                        mvm.pages.clear_in_flight(mv.chunk);
+                    }
+                    mvm.vm.mem_gb_per_node = mvm.pages.to_dist();
+                    self.dirty.insert(job.vm);
+                    self.coord_dirty.insert(job.vm);
+                }
+                self.trace.push(
+                    tick,
+                    Event::MigrationAborted { vm: job.vm, gb_done: job.gb_done, reason: "drain" },
+                );
+            }
+        }
+
         // Floating vCPUs on the drained server, plus VMs pinned there.
         let mut moves: Vec<(VmId, usize, CpuId, AnimalClass)> = Vec::new();
         let mut stranded: Vec<VmId> = Vec::new();
@@ -628,14 +666,173 @@ impl Simulator {
     /// placeable again (nothing moves until the balancer drifts or the
     /// coordinator re-admits / remaps).
     pub fn recover_server(&mut self, server: ServerId) -> Result<()> {
-        if !self.offline.remove(&server.0) {
+        if !self.offline.contains(&server.0) {
             bail!("server {} is not drained", server.0);
         }
+        if self.crashed.contains(&server.0) {
+            // A crashed host returns *empty* with its fabric ports up.
+            // `crash_server`'s partition guard kept the survivors
+            // connected, so re-adding links cannot fail.
+            self.fabric.set_server_up(server)?;
+            self.inc.set_graph(&self.fabric);
+            self.crashed.remove(&server.0);
+        }
+        self.offline.remove(&server.0);
         self.slot_map.set_server_available(&self.topo, server, true);
         self.sync_offline_mask();
         self.mark_all_running_dirty();
         self.trace.push(self.tick, Event::ServerRecovered { server: server.0 });
         Ok(())
+    }
+
+    /// Abrupt fail-stop crash (chaos engine): the unplanned analogue of
+    /// [`Self::drain_server`].  Everything dies at once, atomically
+    /// within the tick:
+    ///
+    /// * every running VM with a vCPU resident on the server is killed
+    ///   ([`Event::VmKilled`]) — its slots free, its evaluator row drops,
+    ///   and the id lands in `coord_dirty` so the coordinator learns of
+    ///   the loss and can queue a restart;
+    /// * every in-flight page migration owned by a victim **or** moving a
+    ///   chunk into/out of the server aborts ([`Event::MigrationAborted`],
+    ///   reason `crash`); jobs elsewhere keep draining;
+    /// * the server's fabric links go down atomically (one reroute pass);
+    ///   per-link up/down state is preserved underneath and re-emerges on
+    ///   recovery;
+    /// * surviving VMs with pages on the dead host's nodes re-fault those
+    ///   chunks against their first live vCPU's node (deterministic, no
+    ///   RNG) and take a stall charge proportional to the lost footprint
+    ///   — memory on a crashed host is gone, not migrated.
+    ///
+    /// Refused if the server is already offline, is the last one online,
+    /// or taking its links down would partition the survivors (the
+    /// fabric's guard reverts cleanly and nothing else has mutated).
+    /// Returns the killed VMs so the caller can feed a restart queue.
+    /// [`Self::recover_server`] brings the host back empty.
+    pub fn crash_server(&mut self, server: ServerId) -> Result<Vec<VmId>> {
+        if server.0 >= self.topo.spec.servers {
+            bail!("server {} out of range", server.0);
+        }
+        if self.offline.contains(&server.0) {
+            bail!("server {} already offline", server.0);
+        }
+        if self.offline.len() + 1 >= self.topo.spec.servers {
+            bail!("cannot crash the last online server");
+        }
+        // Fabric first: its guard refuses a partition-inducing crash and
+        // reverts cleanly while nothing else has mutated.
+        self.fabric.set_server_down(server)?;
+        self.inc.set_graph(&self.fabric);
+
+        self.offline.insert(server.0);
+        self.crashed.insert(server.0);
+        self.slot_map.set_server_available(&self.topo, server, false);
+        self.sync_offline_mask();
+
+        let tick = self.tick;
+
+        // Victims: every running VM with any vCPU (pinned or floating)
+        // resident on the crashed host.
+        let victims: Vec<VmId> = self
+            .vms
+            .iter()
+            .filter(|(_, m)| m.vm.state == VmState::Running)
+            .filter(|(_, m)| {
+                m.vcpu_pos
+                    .iter()
+                    .flatten()
+                    .any(|c| self.topo.server_of_node(self.topo.node_of_cpu(*c)).0 == server.0)
+            })
+            .map(|(id, _)| *id)
+            .collect();
+        let victim_set: BTreeSet<VmId> = victims.iter().copied().collect();
+
+        // Abort migrations touching the host.  Survivors get their
+        // in-flight marks released so the planner can re-plan; victims
+        // are torn down wholesale below.
+        let topo = &self.topo;
+        let aborted = self.migrations.abort_where(|job| {
+            victim_set.contains(&job.vm)
+                || job.pending_moves().iter().any(|mv| {
+                    topo.server_of_node(mv.from).0 == server.0
+                        || topo.server_of_node(mv.to).0 == server.0
+                })
+        });
+        for job in &aborted {
+            if victim_set.contains(&job.vm) {
+                continue;
+            }
+            if let Some(mvm) = self.vms.get_mut(&job.vm) {
+                for mv in job.pending_moves() {
+                    mvm.pages.clear_in_flight(mv.chunk);
+                }
+                mvm.vm.mem_gb_per_node = mvm.pages.to_dist();
+                self.dirty.insert(job.vm);
+                self.coord_dirty.insert(job.vm);
+            }
+            self.trace.push(
+                tick,
+                Event::MigrationAborted { vm: job.vm, gb_done: job.gb_done, reason: "crash" },
+            );
+        }
+
+        // Kill the victims (fail-stop: no evacuation, no events besides
+        // the kill itself).
+        for id in &victims {
+            let mvm = self.vms.remove(id).expect("victim exists");
+            let class = mvm.profile.class;
+            for pos in mvm.vcpu_pos.iter().flatten() {
+                self.slot_map.release(*pos, class);
+            }
+            self.dirty.remove(id);
+            self.coord_dirty.insert(*id);
+            self.inc.remove(*id);
+            self.trace.push(tick, Event::VmKilled { vm: *id, server: server.0 });
+        }
+
+        // Survivors lose every chunk homed on the dead host's nodes: the
+        // guest re-faults them against its first live vCPU's node.  (Any
+        // in-flight chunk owned by a crashed node belonged to an aborted
+        // job — its pending mark was cleared above — so ownership
+        // reassignment here never races a live transfer.)
+        let crashed_node: Vec<bool> = (0..self.topo.num_nodes())
+            .map(|n| self.topo.server_of_node(NodeId(n)).0 == server.0)
+            .collect();
+        let stall_coeff = self.cfg.mem.stall_coeff;
+        let ids: Vec<VmId> = self.vms.keys().copied().collect();
+        for id in ids {
+            let fallback = {
+                let mvm = &self.vms[&id];
+                if mvm.vm.state != VmState::Running {
+                    continue;
+                }
+                mvm.vcpu_pos.iter().flatten().next().map(|c| self.topo.node_of_cpu(*c))
+            };
+            let Some(fallback) = fallback else { continue };
+            let mvm = self.vms.get_mut(&id).expect("vm exists");
+            let mut refaulted = 0usize;
+            for chunk in 0..mvm.pages.num_chunks() {
+                if let Some(owner) = mvm.pages.owner_of(chunk) {
+                    if crashed_node[owner.0] {
+                        mvm.pages.set_owner(chunk, fallback);
+                        refaulted += 1;
+                    }
+                }
+            }
+            if refaulted > 0 {
+                let gb = refaulted as f64 * mvm.pages.chunk_gb();
+                mvm.churn += (stall_coeff * gb / mvm.vm.mem_gb()).min(0.5);
+                mvm.vm.mem_gb_per_node = mvm.pages.to_dist();
+                self.dirty.insert(id);
+                self.coord_dirty.insert(id);
+            }
+        }
+
+        self.sync_sched_load();
+        self.mark_all_running_dirty();
+        self.trace
+            .push(tick, Event::ServerCrashed { server: server.0, vms_killed: victims.len() });
+        Ok(victims)
     }
 
     /// Servers currently drained.
@@ -645,6 +842,15 @@ impl Simulator {
 
     pub fn is_server_offline(&self, server: ServerId) -> bool {
         self.offline.contains(&server.0)
+    }
+
+    /// Servers currently crashed — a subset of [`Self::offline_servers`].
+    pub fn crashed_servers(&self) -> impl Iterator<Item = ServerId> + '_ {
+        self.crashed.iter().map(|s| ServerId(*s))
+    }
+
+    pub fn is_server_crashed(&self, server: ServerId) -> bool {
+        self.crashed.contains(&server.0)
     }
 
     /// Degrade the cache-coherent fabric **uniformly**: `scale` in (0, 1]
@@ -874,6 +1080,27 @@ impl Simulator {
                     vm: job.vm,
                     gb_moved: job.gb_done,
                     ticks: tick.saturating_sub(job.started_at).max(1),
+                },
+            );
+        }
+        // Jobs the engine gave up on (route partitioned past the backoff
+        // schedule — only reachable with servers crashed): release their
+        // in-flight marks so the coordinator can re-plan the remainder.
+        for job in outcome.aborted_jobs {
+            if let Some(mvm) = self.vms.get_mut(&job.vm) {
+                for mv in job.pending_moves() {
+                    mvm.pages.clear_in_flight(mv.chunk);
+                }
+                mvm.vm.mem_gb_per_node = mvm.pages.to_dist();
+                self.dirty.insert(job.vm);
+                self.coord_dirty.insert(job.vm);
+            }
+            self.trace.push(
+                tick,
+                Event::MigrationAborted {
+                    vm: job.vm,
+                    gb_done: job.gb_done,
+                    reason: "route-partition",
                 },
             );
         }
@@ -2020,5 +2247,140 @@ mod tests {
         assert!(u_low < u_full, "load multiplier must shrink util: {u_low} vs {u_full}");
         assert!(s.set_global_load(0.0).is_err());
         assert_eq!(s.trace.count_kind("load_scaled"), 1);
+    }
+
+    // ---- crash-failure path (chaos engine) -------------------------------
+
+    fn pin_on_server(s: &mut Simulator, id: VmId, server: usize) {
+        let cps = s.topo.num_cpus() / s.topo.spec.servers;
+        pin_local(s, id, server * cps);
+    }
+
+    #[test]
+    fn crash_kills_resident_vms_and_spares_the_rest() {
+        let mut s = sim(SchedulerKind::Pinned, 60);
+        let victim = s.create(VmType::Small, App::Derby);
+        pin_on_server(&mut s, victim, 0);
+        s.start(victim).unwrap();
+        let survivor = s.create(VmType::Small, App::Fft);
+        pin_on_server(&mut s, survivor, 1);
+        s.start(survivor).unwrap();
+
+        let killed = s.crash_server(ServerId(0)).unwrap();
+        assert_eq!(killed, vec![victim]);
+        assert!(s.get(victim).is_none(), "victim must be gone");
+        assert!(s.get(survivor).is_some());
+        assert!(s.is_server_offline(ServerId(0)) && s.is_server_crashed(ServerId(0)));
+        assert!(s.fabric().is_server_down(ServerId(0)));
+        // The victim's slots freed with it.
+        let cps = s.topo.num_cpus() / s.topo.spec.servers;
+        assert!(s.occupancy()[..cps].iter().all(|&o| o == 0));
+        assert_eq!(s.trace.count_kind("server_crashed"), 1);
+        assert_eq!(s.trace.count_kind("vm_killed"), 1);
+        // Placement on the dead host is refused until recovery.
+        assert!(s.pin_vcpu(survivor, 0, CpuId(0)).is_err());
+        s.step(); // the cluster keeps ticking
+
+        s.recover_server(ServerId(0)).unwrap();
+        assert!(!s.is_server_crashed(ServerId(0)) && !s.is_server_offline(ServerId(0)));
+        assert!(!s.fabric().is_server_down(ServerId(0)));
+        assert!(s.pin_vcpu(survivor, 0, CpuId(0)).is_ok());
+    }
+
+    #[test]
+    fn crash_aborts_migrations_and_refaults_survivor_pages() {
+        let mut s = sim(SchedulerKind::Pinned, 61);
+        let id = s.create(VmType::Small, App::Fft); // 16 GB
+        pin_on_server(&mut s, id, 1); // local memory on node 6
+        s.start(id).unwrap();
+        // Pull memory toward the server that is about to die.
+        s.migrate_memory_toward(id, &[(NodeId(0), 1.0)], f64::INFINITY)
+            .unwrap()
+            .expect("cross-server move is asynchronous");
+        s.step(); // a few GB land on node 0, the rest stays queued
+        assert!(s.active_migrations() > 0, "16 GB over a 2 GB/s link is multi-tick");
+
+        s.crash_server(ServerId(0)).unwrap();
+        assert_eq!(s.active_migrations(), 0, "job touching the dead host must abort");
+        assert_eq!(s.trace.count_kind("migration_aborted"), 1);
+        assert_eq!(s.trace.count_kind("vm_killed"), 0, "survivor lives");
+        // Conservation + total loss of the crashed nodes: everything the
+        // guest owned there re-faulted back onto its local node.
+        let gb = s.get(id).unwrap().pages.gb_per_node(s.topo.num_nodes());
+        assert!((gb.iter().sum::<f64>() - 16.0).abs() < 1e-6, "conservation broke: {gb:?}");
+        assert!(gb[..6].iter().all(|&g| g == 0.0), "no pages may remain on server 0: {gb:?}");
+        // In-flight marks were released: re-planning works immediately.
+        assert!(s.migrate_memory_toward(id, &[(NodeId(7), 1.0)], f64::INFINITY).is_ok());
+        s.run(5);
+        assert_eq!(s.active_migrations(), 0);
+    }
+
+    #[test]
+    fn crash_validation_mirrors_drain_guards() {
+        let mut s = sim(SchedulerKind::Vanilla, 62);
+        assert!(s.crash_server(ServerId(99)).is_err());
+        s.crash_server(ServerId(2)).unwrap();
+        assert!(s.crash_server(ServerId(2)).is_err(), "already offline");
+        s.drain_server(ServerId(1)).unwrap();
+        assert!(s.crash_server(ServerId(1)).is_err(), "drained servers cannot crash");
+        // A plain drained server recovers without touching the fabric.
+        s.recover_server(ServerId(1)).unwrap();
+        assert!(!s.fabric().is_server_down(ServerId(1)));
+        assert!(s.is_server_crashed(ServerId(2)));
+    }
+
+    #[test]
+    fn drain_destination_aborts_transfer_only_when_opted_in() {
+        // Legacy default: the transfer completes against the drained host
+        // (its memory stays addressable until recovery).
+        let mut legacy = sim(SchedulerKind::Pinned, 63);
+        let id = legacy.create(VmType::Small, App::Fft);
+        pin_local(&mut legacy, id, 0);
+        legacy.start(id).unwrap();
+        legacy.migrate_memory_toward(id, &[(NodeId(6), 1.0)], f64::INFINITY).unwrap().unwrap();
+        legacy.step();
+        legacy.drain_server(ServerId(1)).unwrap();
+        assert!(legacy.active_migrations() > 0, "legacy drains keep transfers alive");
+        assert_eq!(legacy.trace.count_kind("migration_aborted"), 0);
+
+        // Fail-stop mode: the same sequence aborts the inbound transfer.
+        let mut cfg = SimConfig::pinned(64);
+        cfg.drain_aborts_migrations = true;
+        let mut s = Simulator::new(Topology::paper(), cfg);
+        let id = s.create(VmType::Small, App::Fft);
+        pin_local(&mut s, id, 0);
+        s.start(id).unwrap();
+        s.migrate_memory_toward(id, &[(NodeId(6), 1.0)], f64::INFINITY).unwrap().unwrap();
+        s.step();
+        s.drain_server(ServerId(1)).unwrap();
+        assert_eq!(s.active_migrations(), 0, "inbound transfer must abort with the drain");
+        assert_eq!(s.trace.count_kind("migration_aborted"), 1);
+        let gb = s.get(id).unwrap().pages.gb_per_node(s.topo.num_nodes());
+        assert!((gb.iter().sum::<f64>() - 16.0).abs() < 1e-6, "conservation broke: {gb:?}");
+        // Partial progress stays (those chunks really moved); the pending
+        // remainder is re-plannable immediately.
+        assert!(s.migrate_memory_toward(id, &[(NodeId(0), 1.0)], f64::INFINITY).is_ok());
+    }
+
+    #[test]
+    fn crash_path_is_deterministic() {
+        let run = || {
+            let mut s = sim(SchedulerKind::Pinned, 65);
+            let a = s.create(VmType::Small, App::Derby);
+            pin_on_server(&mut s, a, 0);
+            s.start(a).unwrap();
+            let b = s.create(VmType::Small, App::Fft);
+            pin_on_server(&mut s, b, 1);
+            s.start(b).unwrap();
+            s.migrate_memory_toward(b, &[(NodeId(0), 1.0)], f64::INFINITY).unwrap();
+            s.run(2);
+            s.crash_server(ServerId(0)).unwrap();
+            s.run(5);
+            s.recover_server(ServerId(0)).unwrap();
+            s.run(5);
+            let gb = s.get(b).unwrap().pages.gb_per_node(s.topo.num_nodes());
+            (s.trace.count_kind("migration_aborted"), s.trace.count_kind("vm_killed"), gb)
+        };
+        assert_eq!(run(), run());
     }
 }

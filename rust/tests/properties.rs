@@ -853,6 +853,124 @@ fn fabric_feedback_incremental_matches_full_in_sim() {
 }
 
 #[test]
+fn crash_rerouting_never_crosses_a_down_server() {
+    // Random crash/restore sequences on random tori: every surviving
+    // route must run entirely over live links between live servers, every
+    // live pair must stay reachable (the partition guard refuses crashes
+    // that would disconnect them), and a refused crash must leave the
+    // graph untouched.
+    propcheck("fabric crash/restore invariants", 25, |rng| {
+        let spec = random_fabric_spec(rng);
+        let mut graph = FabricGraph::build(&spec);
+        let s = spec.servers;
+        let mut down: Vec<usize> = Vec::new();
+        for _ in 0..12 {
+            if down.is_empty() || rng.chance(0.6) {
+                let target = ServerId(rng.below(s));
+                match graph.set_server_down(target) {
+                    Ok(()) => down.push(target.0),
+                    Err(_) => prop_assert(
+                        !graph.is_server_down(target) || down.contains(&target.0),
+                        "refused crash mutated server state",
+                    )?,
+                }
+            } else {
+                let target = ServerId(down.remove(rng.below(down.len())));
+                graph.set_server_up(target).unwrap();
+                prop_assert(!graph.is_server_down(target), "restore did not bring server up")?;
+            }
+            for a in 0..s {
+                for b in 0..s {
+                    if a == b
+                        || graph.is_server_down(ServerId(a))
+                        || graph.is_server_down(ServerId(b))
+                    {
+                        continue;
+                    }
+                    let route = graph.route(ServerId(a), ServerId(b));
+                    prop_assert(
+                        !route.links.is_empty(),
+                        format!("live pair {a}->{b} unreachable ({} down)", down.len()),
+                    )?;
+                    for l in &route.links {
+                        let link = graph.link(*l);
+                        prop_assert(
+                            !graph.is_server_down(link.from) && !graph.is_server_down(link.to),
+                            format!("route {a}->{b} crosses a down server"),
+                        )?;
+                        prop_assert(
+                            graph.capacity_gbs(*l) > 0.0,
+                            format!("route {a}->{b} uses a dead link"),
+                        )?;
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn sim_crash_recover_sequences_keep_survivors_off_dead_servers() {
+    // Whole-simulator altitude: across random crash/recover sequences
+    // with the coordinator attached, no surviving VM ever has a vCPU or
+    // a memory chunk resident on a crashed server (kills are fail-stop,
+    // re-faults land on live nodes, and the mapper never places onto
+    // offline capacity).
+    propcheck("crash/recover placement invariant", 8, |rng| {
+        let mut sim = Simulator::new(Topology::paper(), SimConfig::pinned(rng.next_u64()));
+        let mut mapper = SmMapper::new(MapperConfig::new(Metric::Ipc), Scorer::Native);
+        for _ in 0..6 {
+            let id =
+                sim.create(*rng.choose(&[VmType::Small, VmType::Medium]), *rng.choose(&App::ALL));
+            if mapper.place_arrival(&mut sim, id).is_ok() {
+                sim.start(id).unwrap();
+            } else {
+                sim.destroy(id).unwrap();
+            }
+        }
+        for step in 0..10 {
+            if rng.chance(0.5) {
+                let server = ServerId(rng.below(6));
+                // Refusals (guards) are part of the contract; only applied
+                // crashes feed the mapper.
+                if let Ok(killed) = sim.crash_server(server) {
+                    mapper.handle_crash(&mut sim, &killed).unwrap();
+                }
+            } else {
+                let first = sim.crashed_servers().next();
+                if let Some(server) = first {
+                    sim.recover_server(server).unwrap();
+                }
+            }
+            sim.step();
+            mapper.interval(&mut sim).unwrap();
+            for (id, mvm) in sim.vms() {
+                if mvm.vm.state != VmState::Running {
+                    continue;
+                }
+                for c in mvm.vcpu_pos.iter().flatten() {
+                    let srv = sim.topo.server_of_node(sim.topo.node_of_cpu(*c));
+                    prop_assert(
+                        !sim.is_server_crashed(srv),
+                        format!("step {step}: {id} vcpu on crashed s{}", srv.0),
+                    )?;
+                }
+                for chunk in 0..mvm.pages.num_chunks() {
+                    if let Some(owner) = mvm.pages.owner_of(chunk) {
+                        prop_assert(
+                            !sim.is_server_crashed(sim.topo.server_of_node(owner)),
+                            format!("step {step}: {id} memory on crashed server"),
+                        )?;
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn pruned_candidates_never_violate_unpruned_constraints() {
     // Pruning narrows the anchor set; it must never emit a candidate the
     // unpruned generator would have rejected: every cpu free, no

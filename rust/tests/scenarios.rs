@@ -91,6 +91,50 @@ fn all_six_scenarios_run_under_both_algorithms() {
 }
 
 #[test]
+fn chaos_machinery_is_inert_for_the_legacy_suite() {
+    // Parity oracle: with chaos off (all six legacy specs), the fault
+    // subsystem must contribute exactly nothing — no crash events, no
+    // restart bookkeeping, availability exactly 1.0, admission gate
+    // bypassed.  Together with the bit-identity tests above, this pins
+    // the guarantee that the chaos engine leaves non-chaos runs
+    // untouched.
+    let specs = suite::smoke_suite();
+    let results = scenario::run_suite(&specs, &ScenarioConfig::new(42)).unwrap();
+    for r in &results {
+        let m = &r.metrics;
+        let who = format!("{}/{}", m.scenario, m.algorithm);
+        assert_eq!((m.crashes, m.crash_refused, m.vms_killed), (0, 0, 0), "{who}");
+        assert_eq!((m.restarts, m.permanent_losses, m.slo_misses), (0, 0, 0), "{who}");
+        assert_eq!(m.availability, 1.0, "{who}: lost VM-ticks in a crash-free run");
+        assert_eq!((m.mttr_ticks, m.p99_restart_ticks), (0.0, 0.0), "{who}");
+        assert_eq!((m.adm_admitted, m.adm_rejected, m.adm_evicted), (0, 0, 0), "{who}");
+        assert!(
+            !r.event_log
+                .iter()
+                .any(|(_, d)| d.starts_with("crash") || d.starts_with("restart")),
+            "{who}: chaos events in a legacy run"
+        );
+    }
+}
+
+#[test]
+fn chaos_suite_runs_both_algorithms_and_is_pool_invariant() {
+    let specs = suite::chaos_suite(true);
+    let cfg = ScenarioConfig::new(21);
+    let p1 = ThreadPool::new(1);
+    let p4 = ThreadPool::new(4);
+    let a = scenario::run_suite_on(&p1, &specs, &cfg).unwrap();
+    let b = scenario::run_suite_on(&p4, &specs, &cfg).unwrap();
+    assert_eq!(a.len(), 6, "3 chaos scenarios x 2 algorithms");
+    assert_eq!(strip_wall(&a), strip_wall(&b), "pool size changed chaos results");
+    assert!(a.iter().any(|r| r.metrics.vms_killed > 0), "chaos suite must kill something");
+    let json = scenario::to_json(&a);
+    assert!(json.contains("\"availability\""));
+    assert!(json.contains("\"mttr_ticks\""));
+    assert!(json.contains("\"adm_admitted\""));
+}
+
+#[test]
 fn degraded_fabric_scenario_applies_and_restores() {
     let spec = suite::named("degraded-fabric", true).unwrap();
     let r = run_scenario(&spec, Algorithm::SmIpc, &ScenarioConfig::new(9)).unwrap();
