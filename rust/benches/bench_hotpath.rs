@@ -420,6 +420,7 @@ fn main() {
             let mut orch = RecoveryOrchestrator::new(RecoveryConfig::default(), 7);
             for k in 0..64u64 {
                 orch.on_kill(
+                    dvrm::vm::VmId(k + 1),
                     dvrm::vm::VmType::Small,
                     App::ALL[k as usize % App::ALL.len()],
                     k % 8,
@@ -481,6 +482,44 @@ fn main() {
             }
         }));
         drop(guard);
+    }
+
+    // Causal-tracing hot path: one lifecycle-edge append (ring push plus
+    // lazy root-span bookkeeping), batched x1000.
+    {
+        let mut log = dvrm::telemetry::TraceLog::default();
+        results.push(bench.run("telemetry/trace_event", || {
+            for k in 0..1000u64 {
+                std::hint::black_box(log.push(
+                    k,
+                    k % 64 + 1,
+                    "booted",
+                    Some(k as usize % 8),
+                    String::new(),
+                ));
+            }
+        }));
+    }
+
+    // Watchdog hot path: one quiet observe_tick (all six rules evaluated,
+    // rolling windows advanced, no transitions), batched x1000.
+    {
+        use dvrm::telemetry::{HealthConfig, HealthEngine, HealthSample, TraceTopo};
+        let topo = TraceTopo { servers: 8, torus_x: 4, zones: 1 };
+        let mut eng = HealthEngine::new(HealthConfig::default(), topo);
+        let sample = HealthSample {
+            offered_ticks: 60,
+            mean_rel: 0.9,
+            rho_max: 0.4,
+            ..HealthSample::default()
+        };
+        let mut t = 0u64;
+        results.push(bench.run("telemetry/health_tick", || {
+            for _ in 0..1000 {
+                t += 1;
+                std::hint::black_box(eng.observe_tick(t, &sample, &[]));
+            }
+        }));
     }
 
     // Flight-recorder enabled-mode overhead: the incremental+fabric tick

@@ -7,10 +7,12 @@
 //! dvrm run [opts]                   # end-to-end cluster demo (3 algorithms)
 //! dvrm scenarios [opts]             # dynamic scenario suite (churn, drain, ...)
 //! dvrm telemetry <file.jsonl>       # summarize a flight-recorder capture
+//! dvrm trace <file.jsonl> --vm N    # render a VM's causal span tree
+//! dvrm health <file.jsonl>          # watchdog alert report from a capture
 //! dvrm list                         # known experiment ids
 //! options: --seed N --ticks N --repeats N --fast --scorer auto|native
 //!          --csv DIR --suite smoke|full --json PATH --telemetry PATH
-//!          --shard-zones N
+//!          --shard-zones N --vm N
 //! ```
 
 // Not yet swept for full rustdoc coverage -- the crate-level
@@ -34,6 +36,8 @@ pub fn main_with(argv: &[String]) -> Result<i32> {
         Some("run") => cmd_run(&parsed),
         Some("scenarios") => cmd_scenarios(&parsed),
         Some("telemetry") => cmd_telemetry(&parsed),
+        Some("trace") => cmd_trace(&parsed),
+        Some("health") => cmd_health(&parsed),
         Some("list") => {
             println!("experiments: {}", experiments::ALL_IDS.join(" "));
             Ok(0)
@@ -62,6 +66,8 @@ pub fn usage() -> &'static str {
                          scenario, congestion-blind vs congestion-aware mapping\n\
        experiment fault  EXP-FAULT: crash injection (single / rack / storm):\n\
                          MTTR, availability, permanent losses, p99 restart\n\
+       experiment health EXP-HEALTH: watchdog detection latency, localization\n\
+                         accuracy, false alerts on the crash-free suite\n\
        experiment all    regenerate everything\n\
        run               end-to-end cluster demo under all three algorithms\n\
        scenarios         dynamic scenario suite (steady, churn, drain, diurnal,\n\
@@ -69,7 +75,13 @@ pub fn usage() -> &'static str {
                          coordinator, with per-scenario p50/p99-tail perf,\n\
                          migrations, GB moved\n\
        telemetry <file>  summarize a flight-recorder JSONL capture: per-phase\n\
-                         time table, tick-sample and decision-record counts\n\
+                         time table, tick/decision/trace/alert line counts\n\
+       trace <file>      render causal VM-lifecycle span trees from a capture\n\
+                         (--vm N: one VM's timeline; without it, a per-run\n\
+                         trace inventory)\n\
+       health <file>     summarize watchdog alerts from a capture: per-rule\n\
+                         pending/firing/resolved counts + firing transitions\n\
+                         with fault-localization scopes\n\
        list              list experiment ids\n\
      \n\
      options:\n\
@@ -88,7 +100,8 @@ pub fn usage() -> &'static str {
        --sample-every N  scenarios: telemetry tick-sample stride (default 1)\n\
        --shard-zones N   scenarios: run the coordinator sharded into N zones\n\
                          (per-zone mappers + global rebalancer; 1 = bit-\n\
-                         identical to the global mapper; default: global)"
+                         identical to the global mapper; default: global)\n\
+       --vm N            trace: restrict the rendering to VM N's trace"
 }
 
 fn opts_from(parsed: &Parsed) -> ExpOptions {
@@ -239,6 +252,7 @@ fn cmd_telemetry(parsed: &Parsed) -> Result<i32> {
     };
     let data = std::fs::read_to_string(path)?;
     let (mut runs, mut ticks, mut decisions) = (0u64, 0u64, 0u64);
+    let (mut traces, mut alerts) = (0u64, 0u64);
     let mut dropped = 0.0f64;
     // phase -> (count, total_ns, max_ns), aggregated over runs.
     let mut phases: std::collections::BTreeMap<String, (f64, f64, f64)> = Default::default();
@@ -253,6 +267,8 @@ fn cmd_telemetry(parsed: &Parsed) -> Result<i32> {
             Some("run") => runs += 1,
             Some("tick") => ticks += 1,
             Some("decision") => decisions += 1,
+            Some("trace") => traces += 1,
+            Some("alert") => alerts += 1,
             Some("spans") => {
                 for p in v.get("phases").and_then(Json::as_arr).unwrap_or(&[]) {
                     let name = p.str("phase").unwrap_or("?").to_string();
@@ -269,8 +285,8 @@ fn cmd_telemetry(parsed: &Parsed) -> Result<i32> {
         }
     }
     println!(
-        "{path}: {runs} runs, {ticks} tick samples, {decisions} decision records \
-         ({} evicted from rings)",
+        "{path}: {runs} runs, {ticks} tick samples, {decisions} decision records, \
+         {traces} trace events, {alerts} alert records ({} evicted from rings)",
         dropped as u64,
     );
     let mut t = Table::new("telemetry: per-phase time, all runs")
@@ -286,6 +302,201 @@ fn cmd_telemetry(parsed: &Parsed) -> Result<i32> {
         ]);
     }
     println!("{}", t.render());
+    Ok(0)
+}
+
+/// `dvrm trace <file.jsonl> [--vm N]` — offline span-tree renderer.
+///
+/// Depth is re-derived from each event's `(span, parent)` pair in stream
+/// order (group/root spans are mirrored into the capture before their
+/// children, so a parent's depth is always known by the time a child
+/// arrives).  The in-process [`crate::telemetry::trace::span_tree`] is
+/// not reusable here: it borrows events with `&'static str` kinds, which
+/// a parsed capture cannot produce.
+fn cmd_trace(parsed: &Parsed) -> Result<i32> {
+    use crate::telemetry::json;
+
+    struct Ev {
+        tick: u64,
+        trace: u64,
+        span: u64,
+        parent: Option<u64>,
+        kind: String,
+        zone: Option<u64>,
+        server: Option<u64>,
+        detail: String,
+    }
+
+    let Some(path) = parsed.positional.first() else {
+        bail!("trace file required: dvrm trace <file.jsonl> [--vm N]");
+    };
+    let vm = parsed.value_u64("vm");
+    let data = std::fs::read_to_string(path)?;
+    let mut runs: Vec<(String, Vec<Ev>)> = Vec::new();
+    for (no, line) in data.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let v = json::parse(line)
+            .map_err(|e| anyhow::anyhow!("{path}:{}: bad JSONL line: {e}", no + 1))?;
+        match v.str("type") {
+            Some("run") => runs.push((
+                format!(
+                    "{} / {}",
+                    v.str("scenario").unwrap_or("?"),
+                    v.str("algorithm").unwrap_or("?")
+                ),
+                Vec::new(),
+            )),
+            Some("trace") => {
+                if runs.is_empty() {
+                    runs.push(("(no run header)".to_string(), Vec::new()));
+                }
+                runs.last_mut().unwrap().1.push(Ev {
+                    tick: v.num("tick").unwrap_or(0.0) as u64,
+                    trace: v.num("trace").unwrap_or(0.0) as u64,
+                    span: v.num("span").unwrap_or(0.0) as u64,
+                    parent: v.num("parent").map(|p| p as u64),
+                    kind: v.str("kind").unwrap_or("?").to_string(),
+                    zone: v.num("zone").map(|z| z as u64),
+                    server: v.num("server").map(|s| s as u64),
+                    detail: v.str("detail").unwrap_or("").to_string(),
+                });
+            }
+            _ => {}
+        }
+    }
+    let mut shown = 0usize;
+    for (label, evs) in &runs {
+        if let Some(id) = vm {
+            let sel: Vec<&Ev> = evs.iter().filter(|e| e.trace == id).collect();
+            if sel.is_empty() {
+                continue;
+            }
+            println!("=== {label}: vm {id} ({} events) ===", sel.len());
+            let mut depth: std::collections::BTreeMap<u64, usize> = Default::default();
+            for e in sel {
+                let d = e
+                    .parent
+                    .and_then(|p| depth.get(&p).copied())
+                    .map_or(0, |d| d + 1);
+                depth.insert(e.span, d);
+                let mut loc = String::new();
+                if let Some(s) = e.server {
+                    loc.push_str(&format!("  s{s}"));
+                }
+                if let Some(z) = e.zone {
+                    loc.push_str(&format!(" z{z}"));
+                }
+                let detail = if e.detail.is_empty() {
+                    String::new()
+                } else {
+                    format!("  [{}]", e.detail)
+                };
+                println!("  t{:<6} {:indent$}{}{loc}{detail}", e.tick, "", e.kind, indent = d * 2);
+                shown += 1;
+            }
+        } else {
+            if evs.is_empty() {
+                continue;
+            }
+            // trace id -> (events, first tick, last tick)
+            let mut inv: std::collections::BTreeMap<u64, (u64, u64, u64)> = Default::default();
+            for e in evs {
+                let slot = inv.entry(e.trace).or_insert((0, e.tick, e.tick));
+                slot.0 += 1;
+                slot.1 = slot.1.min(e.tick);
+                slot.2 = slot.2.max(e.tick);
+            }
+            println!("=== {label}: {} trace events, {} traces ===", evs.len(), inv.len());
+            for (tid, (n, first, last)) in &inv {
+                let who = if *tid == 0 { "cluster".to_string() } else { format!("vm {tid}") };
+                println!("  {who:<12} {n:>5} events  t{first}..t{last}");
+                shown += 1;
+            }
+        }
+    }
+    if shown == 0 {
+        match vm {
+            Some(id) => println!("{path}: no trace events for vm {id}"),
+            None => println!("{path}: no trace events (was the capture taken with tracing on?)"),
+        }
+    }
+    Ok(0)
+}
+
+/// `dvrm health <file.jsonl>` — offline watchdog-alert report: per-rule
+/// pending/firing/resolved counts plus every firing transition with its
+/// fault-localization scope and coverage score.
+fn cmd_health(parsed: &Parsed) -> Result<i32> {
+    use crate::telemetry::json;
+    use crate::util::table::Table;
+
+    let Some(path) = parsed.positional.first() else {
+        bail!("health file required: dvrm health <file.jsonl>");
+    };
+    let data = std::fs::read_to_string(path)?;
+    let mut run = String::from("(no run header)");
+    // rule -> [pending, firing, resolved]
+    let mut counts: std::collections::BTreeMap<String, [u64; 3]> = Default::default();
+    let mut firings: Vec<String> = Vec::new();
+    let mut total = 0u64;
+    for (no, line) in data.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let v = json::parse(line)
+            .map_err(|e| anyhow::anyhow!("{path}:{}: bad JSONL line: {e}", no + 1))?;
+        match v.str("type") {
+            Some("run") => {
+                run = format!(
+                    "{} / {}",
+                    v.str("scenario").unwrap_or("?"),
+                    v.str("algorithm").unwrap_or("?")
+                );
+            }
+            Some("alert") => {
+                total += 1;
+                let rule = v.str("rule").unwrap_or("?").to_string();
+                let state = v.str("state").unwrap_or("?");
+                let slot = counts.entry(rule.clone()).or_insert([0; 3]);
+                match state {
+                    "pending" => slot[0] += 1,
+                    "firing" => slot[1] += 1,
+                    "resolved" => slot[2] += 1,
+                    _ => {}
+                }
+                if state == "firing" {
+                    firings.push(format!(
+                        "  {run}  t{:<6} {rule:<18} -> {:<12} (score {:.2}, {:.4} vs {:.4})",
+                        v.num("tick").unwrap_or(0.0) as u64,
+                        v.str("scope").unwrap_or("?"),
+                        v.num("score").unwrap_or(0.0),
+                        v.num("value").unwrap_or(0.0),
+                        v.num("threshold").unwrap_or(0.0),
+                    ));
+                }
+            }
+            _ => {}
+        }
+    }
+    println!("{path}: {total} alert records, {} firing transitions", firings.len());
+    let mut t = Table::new("health: per-rule alert transitions")
+        .header(&["rule", "pending", "firing", "resolved"]);
+    for (rule, c) in &counts {
+        t.row(vec![rule.clone(), c[0].to_string(), c[1].to_string(), c[2].to_string()]);
+    }
+    println!("{}", t.render());
+    if firings.is_empty() {
+        println!("no firing alerts — healthy capture");
+    } else {
+        println!("firing transitions:");
+        for f in &firings {
+            println!("{f}");
+        }
+    }
     Ok(0)
 }
 

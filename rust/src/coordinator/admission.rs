@@ -89,7 +89,9 @@ impl AdmissionController {
         }
         if !self.cfg.allow_eviction {
             self.rejected += 1;
-            return Decision::Reject { need, free: budget.saturating_sub(committed) };
+            let free = budget.saturating_sub(committed);
+            self.trace_reject(sim, need, free);
+            return Decision::Reject { need, free };
         }
         // Evict lowest-priority, then youngest, strictly-lower-priority VMs.
         let mut victims: Vec<(u32, u64, VmId, usize)> = sim
@@ -114,8 +116,25 @@ impl AdmissionController {
             Decision::AdmitAfterEvicting(chosen)
         } else {
             self.rejected += 1;
-            Decision::Reject { need, free: budget.saturating_sub(committed) }
+            let free = budget.saturating_sub(committed);
+            self.trace_reject(sim, need, free);
+            Decision::Reject { need, free }
         }
+    }
+
+    /// Rejections are cluster-scoped lifecycle edges: the arrival never
+    /// got a VM id, so the trace lands on [`crate::telemetry::CLUSTER_TRACE`]
+    /// with the capacity shortfall in the detail.
+    fn trace_reject(&self, sim: &Simulator, need: usize, free: usize) {
+        crate::telemetry::with(|r| {
+            r.trace_event(
+                sim.tick(),
+                crate::telemetry::CLUSTER_TRACE,
+                "admission.reject",
+                None,
+                format!("need={need};free={free}"),
+            );
+        });
     }
 }
 

@@ -13,9 +13,10 @@
 //! orchestrator's own forked RNG stream, never the simulator's, so the
 //! crash path leaves non-chaos runs bit-identical.
 
+use crate::telemetry::{self, DecisionRecord};
 use crate::util::rng::Rng;
 use crate::util::stats;
-use crate::vm::VmType;
+use crate::vm::{VmId, VmType};
 use crate::workload::App;
 
 /// Recovery policy: bounded retries, backoff schedule, per-class SLOs.
@@ -68,6 +69,10 @@ impl RecoveryConfig {
 /// One killed VM awaiting re-placement.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct PendingRestart {
+    /// Id of the killed VM (the replacement gets a fresh id; this one
+    /// keys the crash's trace so the recovery span closes on the right
+    /// tree).
+    pub vm: VmId,
     /// Class of the killed VM (drives the SLO and re-placement size).
     pub vm_type: VmType,
     /// Application profile the replacement runs.
@@ -152,9 +157,10 @@ impl RecoveryOrchestrator {
     }
 
     /// Record a kill; the first attempt is eligible next tick.
-    pub fn on_kill(&mut self, vm_type: VmType, app: App, tick: u64) {
+    pub fn on_kill(&mut self, vm: VmId, vm_type: VmType, app: App, tick: u64) {
         self.stats.enqueued += 1;
         self.queue.push(PendingRestart {
+            vm,
             vm_type,
             app,
             killed_at: tick,
@@ -165,13 +171,17 @@ impl RecoveryOrchestrator {
 
     /// Take the highest-priority entry whose backoff gate has passed:
     /// tightest SLO first, then oldest kill, then insertion order.
-    /// Returns `None` when nothing is due at `tick`.
+    /// Returns `None` when nothing is due at `tick`.  With telemetry on,
+    /// the choice lands in the provenance ring (`kind = "restart"`):
+    /// which victim was picked, how many were due, how long it waited.
     pub fn pop_due(&mut self, tick: u64) -> Option<PendingRestart> {
         let mut best: Option<usize> = None;
+        let mut due = 0usize;
         for (i, e) in self.queue.iter().enumerate() {
             if e.next_try > tick {
                 continue;
             }
+            due += 1;
             let key = (self.cfg.slo_of(e.vm_type), e.killed_at);
             let better = match best {
                 None => true,
@@ -183,7 +193,22 @@ impl RecoveryOrchestrator {
                 best = Some(i);
             }
         }
-        best.map(|i| self.queue.remove(i))
+        let picked = best.map(|i| self.queue.remove(i));
+        if let Some(e) = &picked {
+            telemetry::with(|r| {
+                r.record_decision(DecisionRecord {
+                    tick,
+                    vm: e.vm.0,
+                    kind: "restart",
+                    candidates: due,
+                    chosen_node: None,
+                    score: tick.saturating_sub(e.killed_at) as f64,
+                    congestion_penalty: 0.0,
+                    fallback: "none",
+                });
+            });
+        }
+        picked
     }
 
     /// A popped entry restarted successfully at `tick`.
@@ -226,9 +251,9 @@ mod tests {
     #[test]
     fn pops_in_slo_priority_then_kill_order() {
         let mut o = orch();
-        o.on_kill(VmType::Small, App::Fft, 10);
-        o.on_kill(VmType::Small, App::Derby, 5);
-        o.on_kill(VmType::Huge, App::Neo4j, 12);
+        o.on_kill(VmId(1), VmType::Small, App::Fft, 10);
+        o.on_kill(VmId(2), VmType::Small, App::Derby, 5);
+        o.on_kill(VmId(3), VmType::Huge, App::Neo4j, 12);
         let a = o.pop_due(20).unwrap();
         assert_eq!((a.vm_type, a.app), (VmType::Huge, App::Neo4j), "tightest SLO first");
         let b = o.pop_due(20).unwrap();
@@ -239,7 +264,7 @@ mod tests {
     #[test]
     fn backoff_gates_retries_and_grows() {
         let mut o = orch();
-        o.on_kill(VmType::Medium, App::Stream, 0);
+        o.on_kill(VmId(4), VmType::Medium, App::Stream, 0);
         let e = o.pop_due(1).unwrap();
         o.on_retry_failed(e, 1);
         let e = o.queue()[0].clone();
@@ -257,7 +282,7 @@ mod tests {
     #[test]
     fn bounded_attempts_become_permanent_loss() {
         let mut o = orch();
-        o.on_kill(VmType::Small, App::Sor, 0);
+        o.on_kill(VmId(5), VmType::Small, App::Sor, 0);
         let mut t = 1;
         for _ in 0..RecoveryConfig::default().max_attempts {
             t += 100; // past any backoff gate
@@ -272,10 +297,10 @@ mod tests {
     #[test]
     fn restart_accounting_feeds_mttr_and_slo_misses() {
         let mut o = orch();
-        o.on_kill(VmType::Huge, App::Neo4j, 0);
+        o.on_kill(VmId(6), VmType::Huge, App::Neo4j, 0);
         let e = o.pop_due(4).unwrap();
         o.on_restarted(&e, 4); // within the SLO of 8
-        o.on_kill(VmType::Huge, App::Neo4j, 10);
+        o.on_kill(VmId(7), VmType::Huge, App::Neo4j, 10);
         let e = o.pop_due(30).unwrap();
         o.on_restarted(&e, 30); // latency 20 > SLO 8
         assert_eq!(o.stats.restarts, 2);
@@ -288,7 +313,7 @@ mod tests {
     fn jitter_is_deterministic_per_seed() {
         let run = |seed| {
             let mut o = RecoveryOrchestrator::new(RecoveryConfig::default(), seed);
-            o.on_kill(VmType::Small, App::Fft, 0);
+            o.on_kill(VmId(8), VmType::Small, App::Fft, 0);
             let mut gates = Vec::new();
             let mut t = 1;
             while let Some(e) = o.pop_due(t) {

@@ -346,10 +346,30 @@ impl ShardedMapper {
         }
         cands.sort_unstable();
         let budget = self.shards[donor].mapper.cfg.mig_budget_gb;
+        let spread = pressure[donor].0 - pressure[receiver].0;
+        let n_cands = cands.len();
         for (_, id) in cands.into_iter().take(self.cfg.max_exchanges) {
             let (d, r) = two_mut(&mut self.shards, donor, receiver);
             match exchange_vm(sim, d, r, &self.router, id, budget)? {
-                ExchangeOutcome::Moved => self.shard_stats.exchanges += 1,
+                ExchangeOutcome::Moved => {
+                    self.shard_stats.exchanges += 1;
+                    // Rebalancer provenance: which VM crossed which zone
+                    // boundary and why (utilization spread at decision
+                    // time), causally linked to this exchange's
+                    // `Remapped` event through the shared `(tick, vm)`.
+                    crate::telemetry::with(|rec| {
+                        rec.record_decision(crate::telemetry::DecisionRecord {
+                            tick: sim.tick(),
+                            vm: id.0,
+                            kind: "rebalance",
+                            candidates: n_cands,
+                            chosen_node: Some(receiver),
+                            score: spread,
+                            congestion_penalty: 0.0,
+                            fallback: "none",
+                        });
+                    });
+                }
                 ExchangeOutcome::NoCapacity => {
                     self.shard_stats.exchange_failures += 1;
                     break;

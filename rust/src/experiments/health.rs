@@ -1,0 +1,194 @@
+//! EXP-HEALTH: the streaming watchdog under fire — detection latency,
+//! fault-localization accuracy, and the false-alert audit.
+//!
+//! Two legs.  The chaos suite (single crash, correlated rack crash,
+//! seeded crash storm) runs under the coordinator with tracing + health
+//! on; every injected `server_crashed` trace event is matched against
+//! the first firing alert whose scope covers the crashed server within
+//! [`DETECT_WINDOW`] ticks.  Then the six crash-free legacy scenarios
+//! run the same watchdog under both policies: the corroboration gate
+//! (soft rules need hard-fault evidence to fire) means the firing count
+//! must be exactly zero there.  Everything is deterministic per seed.
+
+use anyhow::Result;
+
+use crate::scenario::runner::{run_scenario, ScenarioConfig, ScenarioResult};
+use crate::scenario::suite::{self, chaos_suite, full_suite, smoke_suite};
+use crate::telemetry::health::scope_covers;
+use crate::telemetry::{TelemetryConfig, TraceTopo};
+use crate::util::pool;
+use crate::util::table::Table;
+
+use super::figures::Output;
+use super::{Algorithm, ExpOptions};
+
+/// Detection bound: a crash must produce a covering firing alert within
+/// this many ticks (the acceptance criterion the tests pin).
+pub const DETECT_WINDOW: u64 = 20;
+
+/// One injected crash and how the watchdog saw it.
+#[derive(Debug, Clone)]
+pub struct Detection {
+    /// Scenario the crash was injected into.
+    pub scenario: String,
+    /// Tick of the `server_crashed` trace event.
+    pub tick: u64,
+    /// The crashed server.
+    pub server: usize,
+    /// Ticks from crash to the first firing alert whose scope covers the
+    /// server; `None` when nothing covering fired within the window.
+    pub latency: Option<u64>,
+    /// Scope of the detecting alert (`server:4`, `rack:1`, ...).
+    pub scope: String,
+    /// Evidence-coverage score of the detecting alert.
+    pub score: f64,
+}
+
+/// Run the chaos suite under the coordinator with tracing + health on.
+pub fn run_health_suite(o: &ExpOptions) -> Result<Vec<ScenarioResult>> {
+    let specs = chaos_suite(o.fast);
+    let cfg = ScenarioConfig {
+        scorer: o.scorer,
+        telemetry: Some(TelemetryConfig::default()),
+        ..ScenarioConfig::new(o.seed)
+    };
+    let jobs: Vec<_> = specs.into_iter().map(|s| (s, Algorithm::SmIpc, cfg.clone())).collect();
+    pool::global().scope_map(jobs, |(s, a, c)| run_scenario(&s, a, &c)).into_iter().collect()
+}
+
+/// Match every `server_crashed` trace event in one run against its first
+/// covering firing alert.
+pub fn detections(r: &ScenarioResult) -> Vec<Detection> {
+    let Some(rec) = &r.telemetry else { return Vec::new() };
+    let Some(topo) = rec.trace_log().topo() else { return Vec::new() };
+    let firing: Vec<_> = rec.alerts().iter().filter(|a| a.state == "firing").collect();
+    let mut out = Vec::new();
+    for e in rec.trace_log().events() {
+        if e.kind != "server_crashed" {
+            continue;
+        }
+        let Some(server) = e.server else { continue };
+        let hit = firing
+            .iter()
+            .filter(|a| a.tick >= e.tick && a.tick <= e.tick + DETECT_WINDOW)
+            .find(|a| scope_covers(&a.scope, server, &topo));
+        out.push(Detection {
+            scenario: r.metrics.scenario.clone(),
+            tick: e.tick,
+            server,
+            latency: hit.map(|a| a.tick - e.tick),
+            scope: hit.map(|a| a.scope.clone()).unwrap_or_default(),
+            score: hit.map(|a| a.score).unwrap_or(0.0),
+        });
+    }
+    out
+}
+
+/// `(total, firing)` alert-record counts of one run.
+pub fn alert_counts(r: &ScenarioResult) -> (u64, u64) {
+    let Some(rec) = &r.telemetry else { return (0, 0) };
+    let firing = rec.alerts().iter().filter(|a| a.state == "firing").count() as u64;
+    (rec.alerts().len() as u64, firing)
+}
+
+/// Run the crash-free legacy suite (both policies) with the watchdog on.
+pub fn run_crash_free_suite(o: &ExpOptions) -> Result<Vec<ScenarioResult>> {
+    let specs = if o.fast { smoke_suite() } else { full_suite() };
+    let cfg = ScenarioConfig {
+        scorer: o.scorer,
+        telemetry: Some(TelemetryConfig::default()),
+        ..ScenarioConfig::new(o.seed)
+    };
+    suite::run_suite(&specs, &cfg)
+}
+
+/// The `health` experiment (`dvrm experiment health`).
+pub fn health(o: &ExpOptions) -> Result<Output> {
+    let chaos = run_health_suite(o)?;
+    let mut t1 = Table::new("EXP-HEALTH: crash detection — latency + fault localization")
+        .header(&["scenario", "crash tick", "server", "detected", "latency", "scope", "score"]);
+    for r in &chaos {
+        for d in detections(r) {
+            t1.row(vec![
+                d.scenario.clone(),
+                d.tick.to_string(),
+                format!("s{}", d.server),
+                if d.latency.is_some() { "yes".into() } else { "NO".into() },
+                d.latency.map_or_else(|| "-".into(), |l| l.to_string()),
+                if d.scope.is_empty() { "-".into() } else { d.scope.clone() },
+                format!("{:.2}", d.score),
+            ]);
+        }
+    }
+    let legacy = run_crash_free_suite(o)?;
+    let mut t2 = Table::new("EXP-HEALTH: crash-free suite — false-alert audit")
+        .header(&["scenario", "algorithm", "alerts", "firing"]);
+    for r in &legacy {
+        let (total, firing) = alert_counts(r);
+        t2.row(vec![
+            r.metrics.scenario.clone(),
+            r.metrics.algorithm.to_string(),
+            total.to_string(),
+            firing.to_string(),
+        ]);
+    }
+    let text = format!("{}\n{}", t1.render(), t2.render());
+    Ok(Output {
+        text,
+        tables: vec![("health-detect".into(), t1), ("health-false-alerts".into(), t2)],
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fast() -> ExpOptions {
+        ExpOptions { seed: 9, ..ExpOptions::fast() }
+    }
+
+    #[test]
+    fn every_injected_crash_is_detected_and_localized() {
+        let results = run_health_suite(&fast()).unwrap();
+        let mut crashes = 0usize;
+        for r in &results {
+            for d in detections(r) {
+                crashes += 1;
+                assert!(
+                    d.latency.is_some(),
+                    "{}: crash at t{} on s{} undetected within {DETECT_WINDOW} ticks",
+                    d.scenario,
+                    d.tick,
+                    d.server
+                );
+                assert!(!d.scope.is_empty(), "{}: detecting alert has no scope", d.scenario);
+                assert!(d.score > 0.0, "{}: zero evidence coverage", d.scenario);
+            }
+        }
+        assert!(crashes > 0, "chaos suite must inject crashes");
+    }
+
+    #[test]
+    fn crash_free_suite_never_fires() {
+        let results = run_crash_free_suite(&fast()).unwrap();
+        assert_eq!(results.len(), 12, "six scenarios x two policies");
+        for r in &results {
+            let (_, firing) = alert_counts(r);
+            assert_eq!(
+                firing, 0,
+                "{} / {}: the corroboration gate must hold without crashes",
+                r.metrics.scenario, r.metrics.algorithm
+            );
+        }
+    }
+
+    #[test]
+    fn health_experiment_is_deterministic() {
+        let a = health(&fast()).unwrap();
+        let b = health(&fast()).unwrap();
+        assert_eq!(a.text, b.text, "EXP-HEALTH must be deterministic per seed");
+        for name in ["crash-single", "crash-rack", "crash-storm"] {
+            assert!(a.text.contains(name), "missing {name}: {}", a.text);
+        }
+    }
+}

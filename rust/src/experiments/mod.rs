@@ -12,6 +12,7 @@
 pub mod fabric;
 pub mod fault;
 pub mod figures;
+pub mod health;
 pub mod harness;
 pub mod shard;
 pub mod studies;
@@ -59,7 +60,7 @@ impl ExpOptions {
 /// All experiment ids, in DESIGN.md order.
 pub const ALL_IDS: &[&str] = &[
     "t1", "t2", "t3", "t4", "t5", "f2", "f3", "f4_10", "f11", "f12", "f13", "f14_16",
-    "f17_19", "var", "abl", "mem", "scale", "shard", "fabric", "scenarios", "fault",
+    "f17_19", "var", "abl", "mem", "scale", "shard", "fabric", "scenarios", "fault", "health",
 ];
 
 /// Run one experiment by id.
@@ -86,6 +87,7 @@ pub fn run(id: &str, opts: &ExpOptions) -> Result<figures::Output> {
         "fabric" => fabric::fabric(opts),
         "scenarios" => crate::scenario::suite::experiment(opts),
         "fault" => fault::fault(opts),
+        "health" => health::health(opts),
         other => bail!("unknown experiment {other:?}; known: {ALL_IDS:?}"),
     }
 }

@@ -37,7 +37,9 @@ use crate::coordinator::{
 use crate::experiments::{Algorithm, ScorerChoice};
 use crate::runtime::Scorer;
 use crate::sim::{SimConfig, Simulator};
-use crate::telemetry::{self, Phase, Recorder, TelemetryConfig};
+use crate::telemetry::{
+    self, HealthConfig, HealthEngine, HealthSample, Phase, Recorder, TelemetryConfig, TraceTopo,
+};
 use crate::topology::{ServerId, Topology};
 use crate::util::stats;
 use crate::vm::{VmId, VmState, VmType};
@@ -196,6 +198,15 @@ fn admit(
         }
     }
     sim.start(id)?;
+    telemetry::with(|r| {
+        r.trace_event(
+            sim.tick(),
+            id.0,
+            "admission.grant",
+            None,
+            format!("type={};app={app}", vm_type.name()),
+        );
+    });
     Ok(Some(id))
 }
 
@@ -245,6 +256,15 @@ fn apply_event(
                 None => {
                     ctx.rejected += 1;
                     ctx.pending.push_back((*vm_type, *app));
+                    telemetry::with(|r| {
+                        r.trace_event(
+                            ctx.now,
+                            telemetry::CLUSTER_TRACE,
+                            "admission.enqueue",
+                            None,
+                            format!("type={};app={app}", vm_type.name()),
+                        );
+                    });
                     format!("arrive {} {app} -> queued (no capacity)", vm_type.name())
                 }
             }
@@ -323,7 +343,7 @@ fn apply_event(
                         killed_total += killed.len();
                         for id in &killed {
                             if let Some((vm_type, app)) = classes.get(id) {
-                                ctx.recovery.on_kill(*vm_type, *app, ctx.now);
+                                ctx.recovery.on_kill(*id, *vm_type, *app, ctx.now);
                             }
                         }
                         if let Some(m) = mapper.as_mut() {
@@ -379,14 +399,14 @@ pub fn run_scenario(
         sim_cfg.threads = threads;
     }
     let mut sim = Simulator::new(Topology::paper(), sim_cfg);
+    let zones = cfg
+        .shard_zones
+        .or((alg == Algorithm::SmSharded).then_some(4))
+        .filter(|z| *z > 0);
     let mut mapper = alg.metric().map(|metric| {
         let mcfg = cfg.mapper.clone().unwrap_or_else(|| MapperConfig::new(metric));
         let mcfg = MapperConfig { metric, ..mcfg };
         let scorer = build_scorer(cfg.scorer);
-        let zones = cfg
-            .shard_zones
-            .or((alg == Algorithm::SmSharded).then_some(4))
-            .filter(|z| *z > 0);
         match zones {
             Some(z) => Coordinator::Sharded(ShardedMapper::new(
                 mcfg,
@@ -397,6 +417,20 @@ pub fn run_scenario(
             None => Coordinator::Global(SmMapper::new(mcfg, scorer)),
         }
     });
+    // Topology context for zone/rack attribution (trace + localization),
+    // and the streaming watchdog when the recorder asks for it.  Both
+    // only *observe* deterministic values on this (serial) thread, so
+    // the bit-identical-output contract holds with them on or off.
+    let topo_ctx = TraceTopo {
+        servers: sim.topo.spec.servers,
+        torus_x: sim.topo.spec.torus.0.max(1),
+        zones: zones.unwrap_or(1),
+    };
+    telemetry::with(|r| r.set_topology(topo_ctx));
+    let mut health = telemetry::with_ret(|r| r.health_enabled())
+        .unwrap_or(false)
+        .then(|| HealthEngine::new(HealthConfig::default(), topo_ctx));
+    let mut trace_cursor: u64 = 0;
 
     let timeline = spec.timeline(cfg.seed);
     let mut initial = spec.initial.clone();
@@ -433,6 +467,15 @@ pub fn run_scenario(
                 None => {
                     ctx.rejected += 1;
                     ctx.pending.push_back((a.vm_type, a.app));
+                    telemetry::with(|r| {
+                        r.trace_event(
+                            t,
+                            telemetry::CLUSTER_TRACE,
+                            "admission.enqueue",
+                            None,
+                            format!("type={};app={}", a.vm_type.name(), a.app),
+                        );
+                    });
                 }
             }
         }
@@ -458,6 +501,17 @@ pub fn run_scenario(
                 Some(id) => {
                     ctx.recovery.on_restarted(&e, t);
                     ctx.vms_seen += 1;
+                    // The restart closes the *old* VM's recovery span;
+                    // `new=` links it to the replacement's trace.
+                    telemetry::with(|r| {
+                        r.trace_event(
+                            t,
+                            e.vm.0,
+                            "restart.ok",
+                            None,
+                            format!("new={};latency={}", id.0, t.saturating_sub(e.killed_at)),
+                        );
+                    });
                     event_log.push((
                         t,
                         format!(
@@ -468,7 +522,19 @@ pub fn run_scenario(
                         ),
                     ));
                 }
-                None => ctx.recovery.on_retry_failed(e, t),
+                None => {
+                    let attempt = e.attempts + 1;
+                    let lost = attempt >= ctx.recovery.cfg.max_attempts;
+                    let vm = e.vm.0;
+                    ctx.recovery.on_retry_failed(e, t);
+                    telemetry::with(|r| {
+                        if lost {
+                            r.trace_event(t, vm, "restart.lost", None, format!("attempts={attempt}"));
+                        } else {
+                            r.trace_event(t, vm, "restart.retry", None, format!("attempt={attempt}"));
+                        }
+                    });
+                }
             }
         }
         // Re-admission: drain the queue while capacity allows (recovered
@@ -483,6 +549,15 @@ pub fn run_scenario(
                     ctx.churn_pool.push_back(id);
                     ctx.vms_seen += 1;
                     ctx.readmitted += 1;
+                    telemetry::with(|r| {
+                        r.trace_event(
+                            t,
+                            id.0,
+                            "admission.readmit",
+                            None,
+                            format!("type={};app={app}", vm_type.name()),
+                        );
+                    });
                     event_log.push((t, format!("re-admit {} {app} -> {id}", vm_type.name())));
                 }
                 None => break,
@@ -510,6 +585,41 @@ pub fn run_scenario(
                 m.interval(&mut sim)?;
             }
         }
+        // Streaming watchdog: one deterministic step over this tick's
+        // burn-rate signals plus the trace events emitted since the last
+        // step.  Alerts land in the recorder (store + JSONL).
+        if let Some(h) = health.as_mut() {
+            let (new_events, cur) = telemetry::with_ret(|r| {
+                let log = r.trace_log();
+                (log.events_since(trace_cursor), log.cursor())
+            })
+            .unwrap_or((Vec::new(), trace_cursor));
+            trace_cursor = cur;
+            let mean_rel = if out.is_empty() {
+                f64::NAN
+            } else {
+                out.iter().map(|(_, s)| s.rel_perf).sum::<f64>() / out.len() as f64
+            };
+            let rho_max = sim.link_utilization().into_iter().fold(0.0f64, f64::max);
+            let sample = HealthSample {
+                lost_ticks: waiting,
+                offered_ticks: out.len() as u64 + waiting,
+                mean_rel,
+                rho_max,
+                slo_misses: ctx.recovery.stats.slo_misses,
+                permanent_losses: ctx.recovery.stats.permanent_losses,
+                queue_depth: ctx.pending.len(),
+                outstanding_restarts: ctx.recovery.outstanding(),
+            };
+            let alerts = h.observe_tick(t, &sample, &new_events);
+            if !alerts.is_empty() {
+                telemetry::with(|r| {
+                    for a in alerts {
+                        r.push_alert(a);
+                    }
+                });
+            }
+        }
         telemetry::with(|r| r.tick_sample(t));
     }
     let wall = t0.elapsed().as_secs_f64().max(1e-9);
@@ -526,8 +636,14 @@ pub fn run_scenario(
         None => (0, 0, 0),
     };
     let rec = ctx.recovery.stats.clone();
+    let (alerts_total, alerts_firing) = health
+        .as_ref()
+        .map(|h| (h.records().len() as u64, h.firing_count()))
+        .unwrap_or((0, 0));
     telemetry::with(|r| {
         let reg = r.registry_mut();
+        reg.add_counter("health.alerts.total", alerts_total as f64);
+        reg.add_counter("health.alerts.firing", alerts_firing as f64);
         reg.add_counter("chaos.crashes", ctx.crashes as f64);
         reg.add_counter("chaos.vms_killed", ctx.vms_killed as f64);
         reg.add_counter("chaos.restarts", rec.restarts as f64);

@@ -104,6 +104,18 @@ impl Event {
         }
     }
 
+    /// The server this event concerns, if it names exactly one (link
+    /// events name two — those stay in [`Self::detail`] as `from`/`to`).
+    pub fn server(&self) -> Option<usize> {
+        match self {
+            Event::ServerDrained { server, .. }
+            | Event::ServerRecovered { server }
+            | Event::ServerCrashed { server, .. }
+            | Event::VmKilled { server, .. } => Some(*server),
+            _ => None,
+        }
+    }
+
     /// Structured payload as `key=value[;key=value]` (empty for payload-
     /// free events) — the CSV detail column, so magnitudes (GB moved,
     /// degradation scale, server counts, workload phase) survive export.
@@ -163,7 +175,7 @@ impl EventTrace {
     }
 
     pub fn push(&mut self, tick: u64, event: Event) {
-        crate::telemetry::with(|r| r.count_event(event.kind()));
+        crate::telemetry::with(|r| r.on_sim_event(tick, &event));
         if self.events.len() >= self.cap {
             self.events.pop_front();
             self.dropped += 1;
@@ -302,6 +314,10 @@ mod tests {
         let d = Event::ServerDrained { server: 3, moved: 5 };
         assert_eq!(d.kind(), "server_drained");
         assert_eq!(d.vm(), None);
+        assert_eq!(d.server(), Some(3));
+        assert_eq!(Event::VmKilled { vm: VmId(7), server: 2 }.server(), Some(2));
+        assert_eq!(Event::FabricLinkDown { from: 0, to: 1 }.server(), None);
+        assert_eq!(e.server(), None);
     }
 
     #[test]

@@ -14,9 +14,25 @@ pub fn fmt_num(v: f64) -> String {
     if v.is_finite() { format!("{v}") } else { "0".into() }
 }
 
-/// JSON string escape for the hand-rolled writers.
+/// JSON string escape for the hand-rolled writers: backslash, quote,
+/// and every control character below 0x20 (a newline in an event detail
+/// would otherwise split one JSONL record into two broken lines).
 pub fn esc(s: &str) -> String {
-    s.replace('\\', "\\\\").replace('"', "\\\"")
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            '\u{08}' => out.push_str("\\b"),
+            '\u{0c}' => out.push_str("\\f"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
 }
 
 /// `sim.dirty.evaluator` → `dvrm_sim_dirty_evaluator`.
@@ -31,17 +47,28 @@ pub fn prom_name(name: &str) -> String {
 fn prom_hist(out: &mut String, family: &str, labels: &str, h: &LogHistogram) {
     let sep = if labels.is_empty() { ("{", "") } else { ("{", ",") };
     let mut cum = 0u64;
-    for (i, &c) in h.buckets().iter().enumerate() {
-        if c == 0 {
-            continue;
-        }
-        cum += c;
+    let mut emit = |i: usize, cum: u64| {
         out.push_str(&format!(
             "{family}_bucket{}{labels}{}le=\"{:e}\"}} {cum}\n",
             sep.0,
             sep.1,
             hist::LogHistogram::bucket_upper(i),
         ));
+    };
+    // Skipping long zero runs keeps the exposition compact, but the last
+    // all-zero bucket before each non-zero run must be emitted: it pins
+    // the lower edge `histogram_quantile` interpolates from.
+    let mut prev_zero: Option<usize> = None;
+    for (i, &c) in h.buckets().iter().enumerate() {
+        if c == 0 {
+            prev_zero = Some(i);
+            continue;
+        }
+        if let Some(z) = prev_zero.take() {
+            emit(z, cum);
+        }
+        cum += c;
+        emit(i, cum);
     }
     out.push_str(&format!(
         "{family}_bucket{}{labels}{}le=\"+Inf\"}} {}\n",
@@ -119,6 +146,45 @@ mod tests {
     fn prom_names_are_sanitized() {
         assert_eq!(prom_name("sim.dirty.evaluator"), "dvrm_sim_dirty_evaluator");
         assert_eq!(prom_name("a-b/c"), "dvrm_a_b_c");
+    }
+
+    #[test]
+    fn esc_round_trips_control_characters_through_json_parse() {
+        let nasty = "line1\nline2\tcol\r\"quoted\"\\slash\u{08}\u{0c}\u{01}end";
+        let line = format!("{{\"type\":\"t\",\"detail\":\"{}\"}}", esc(nasty));
+        assert_eq!(line.lines().count(), 1, "escaped detail must stay one JSONL line");
+        let v = super::super::json::parse(&line).expect("escaped line parses");
+        assert_eq!(v.str("detail"), Some(nasty), "parse(esc(s)) == s");
+    }
+
+    #[test]
+    fn prom_hist_le_series_is_cumulative_and_anchored() {
+        let mut h = LogHistogram::new();
+        // Two populated buckets far apart => long interior zero run.
+        h.observe(1e-6);
+        h.observe(1e-6);
+        h.observe(1.0);
+        let mut out = String::new();
+        prom_hist(&mut out, "t", "", &h);
+        let mut pairs: Vec<(f64, u64)> = Vec::new();
+        for line in out.lines().filter(|l| l.starts_with("t_bucket")) {
+            let le = line.split("le=\"").nth(1).unwrap().split('"').next().unwrap();
+            let count: u64 = line.rsplit(' ').next().unwrap().parse().unwrap();
+            let le = if le == "+Inf" { f64::INFINITY } else { le.parse().unwrap() };
+            pairs.push((le, count));
+        }
+        assert!(pairs.len() >= 5, "zero-run anchors must be emitted: {out}");
+        for w in pairs.windows(2) {
+            assert!(w[1].0 > w[0].0, "le series must be increasing");
+            assert!(w[1].1 >= w[0].1, "cumulative counts must be monotone");
+        }
+        // Each non-zero run is preceded by an anchor carrying the prior
+        // cumulative count (pins histogram_quantile's lower edge).
+        assert!(
+            pairs.iter().any(|&(le, c)| c == 2 && le <= 1.0 && le > 1e-5),
+            "anchor bucket before the second run must hold cum=2: {pairs:?}"
+        );
+        assert_eq!(pairs.last().unwrap().1, h.count());
     }
 
     #[test]

@@ -1,0 +1,707 @@
+//! Streaming SLO health watchdog: a deterministic per-tick engine that
+//! turns the flight recorder's signals into alerts with fault
+//! localization.
+//!
+//! Six rules evaluate rolling multi-window burn rates every tick:
+//!
+//! | rule                | signal                              | fires on its own? |
+//! |---------------------|-------------------------------------|-------------------|
+//! | `server-down`       | crash evidence in the short window  | yes               |
+//! | `availability-burn` | lost / offered VM-ticks, short win  | yes               |
+//! | `restart-slo`       | SLO misses + permanent losses Δ     | yes               |
+//! | `rel-perf`          | short-window mean rel-perf vs long  | corroborated      |
+//! | `fabric-rho`        | short-window mean of max link ρ     | corroborated      |
+//! | `admission-queue`   | sustained admission queue depth     | corroborated      |
+//!
+//! Each rule runs a pending → firing → resolved state machine with
+//! hysteresis (consecutive breached ticks before firing) and a cool-down
+//! (consecutive clear ticks before resolving).  *Corroborated* rules
+//! additionally require hard-fault evidence (a server crash, VM kill, or
+//! permanent loss) inside the localization window before they may fire —
+//! degraded-but-announced conditions (fabric degradation windows, link
+//! maintenance) keep them at `pending`.  That makes "zero firing alerts
+//! on crash-free runs" a property of the design, not of threshold tuning.
+//!
+//! When a rule fires, a localization pass attributes it to the smallest
+//! implicated scope — VM, server, rack (torus row), zone, fabric link, or
+//! cluster — from the recent burst of trace evidence (evidence within
+//! [`HealthConfig::burst_window`] ticks of the newest item, so an old
+//! crash does not smear the attribution of a new one).  A firing alert
+//! re-emits its record whenever newer evidence arrives, so detection
+//! latency stays measurable during overlapping failures (crash storms).
+//!
+//! Everything here is a pure function of deterministic simulation values
+//! and the (deterministic) trace stream: the alert stream is bit-identical
+//! per seed at any pool size, and with telemetry off the engine never
+//! runs — the zero-overhead-off contract of the whole telemetry layer.
+
+use std::collections::VecDeque;
+
+use super::export;
+use super::trace::{TraceEvent, TraceTopo};
+
+/// Watchdog thresholds and windows (ticks).
+#[derive(Debug, Clone)]
+pub struct HealthConfig {
+    /// Short burn-rate window.
+    pub short_window: usize,
+    /// Long baseline window (rel-perf comparisons).
+    pub long_window: usize,
+    /// `availability-burn` breaches when short-window
+    /// `lost / offered > avail_burn`.
+    pub avail_burn: f64,
+    /// `rel-perf` breaches when the short-window mean drops below
+    /// `rel_drop ×` the long-window mean.
+    pub rel_drop: f64,
+    /// `fabric-rho` breaches when the short-window mean of the max link
+    /// utilization exceeds this.
+    pub rho_crit: f64,
+    /// `admission-queue` breaches after the queue has held at least one
+    /// entry for this many consecutive ticks.
+    pub queue_sustain: usize,
+    /// Consecutive breached ticks before a pending alert fires.
+    pub hysteresis: u32,
+    /// Consecutive clear ticks before a firing alert resolves.
+    pub cooldown: u32,
+    /// Localization evidence window (ticks).
+    pub lookback: u64,
+    /// Burst filter: localization only uses evidence within this many
+    /// ticks of the newest evidence item.
+    pub burst_window: u64,
+}
+
+impl Default for HealthConfig {
+    fn default() -> Self {
+        Self {
+            short_window: 8,
+            long_window: 32,
+            avail_burn: 1e-3,
+            rel_drop: 0.5,
+            rho_crit: 0.97,
+            queue_sustain: 12,
+            hysteresis: 2,
+            cooldown: 8,
+            lookback: 32,
+            burst_window: 8,
+        }
+    }
+}
+
+/// One per-tick observation handed to [`HealthEngine::observe_tick`].
+/// Everything is a deterministic simulation value — no wall clock.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct HealthSample {
+    /// Lost VM-ticks this tick (killed-and-waiting + permanent losses).
+    pub lost_ticks: u64,
+    /// Offered VM-ticks this tick (running + waiting).
+    pub offered_ticks: u64,
+    /// Mean relative performance over this tick's samples (NaN if none).
+    pub mean_rel: f64,
+    /// Max fabric link utilization ρ this tick.
+    pub rho_max: f64,
+    /// Cumulative restart-SLO misses.
+    pub slo_misses: u64,
+    /// Cumulative permanent losses.
+    pub permanent_losses: u64,
+    /// Admission queue depth (pending arrivals).
+    pub queue_depth: usize,
+    /// Crash victims still waiting for a restart slot.
+    pub outstanding_restarts: usize,
+}
+
+/// Alert lifecycle states (exported in the JSONL stream).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AlertState {
+    /// No breach.
+    Idle,
+    /// Breached, inside the hysteresis window.
+    Pending,
+    /// Breached past hysteresis (the only state that counts as an alert).
+    Firing,
+}
+
+/// One emitted alert transition (also a JSONL `{"type":"alert"}` line).
+#[derive(Debug, Clone, PartialEq)]
+pub struct AlertRecord {
+    /// Tick of the transition.
+    pub tick: u64,
+    /// Rule name.
+    pub rule: &'static str,
+    /// `"pending"`, `"firing"` or `"resolved"`.
+    pub state: &'static str,
+    /// Observed value that (cleared) the threshold.
+    pub value: f64,
+    /// The rule's threshold.
+    pub threshold: f64,
+    /// Implicated scope: `server:4`, `rack:1`, `zone:0`, `link:3-4`,
+    /// `vm:17`, or `cluster`.
+    pub scope: String,
+    /// Fraction of burst evidence the scope covers (0 when no evidence).
+    pub score: f64,
+}
+
+impl AlertRecord {
+    /// JSONL line for the capture stream.
+    pub fn to_jsonl(&self) -> String {
+        format!(
+            "{{\"type\":\"alert\",\"tick\":{},\"rule\":\"{}\",\"state\":\"{}\",\
+             \"value\":{},\"threshold\":{},\"scope\":\"{}\",\"score\":{}}}",
+            self.tick,
+            self.rule,
+            self.state,
+            export::fmt_num(self.value),
+            export::fmt_num(self.threshold),
+            export::esc(&self.scope),
+            export::fmt_num(self.score),
+        )
+    }
+}
+
+/// Does `scope` cover `server` under `topo`?  (`vm:` scopes cover no
+/// server; `cluster` covers every server.)
+pub fn scope_covers(scope: &str, server: usize, topo: &TraceTopo) -> bool {
+    if scope == "cluster" {
+        return true;
+    }
+    match scope.split_once(':') {
+        Some(("server", s)) => s.parse() == Ok(server),
+        Some(("rack", r)) => r.parse() == Ok(topo.rack_of(server)),
+        Some(("zone", z)) => z.parse() == Ok(topo.zone_of(server)),
+        Some(("link", ab)) => ab
+            .split_once('-')
+            .is_some_and(|(a, b)| a.parse() == Ok(server) || b.parse() == Ok(server)),
+        _ => false,
+    }
+}
+
+/// Hard-fault evidence distilled from the trace stream.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Evidence {
+    /// A server crashed.
+    Crash { server: usize },
+    /// A VM died with its server.
+    Kill { vm: u64, server: usize },
+    /// A fabric link pair failed.
+    Link { from: usize, to: usize },
+    /// A crash victim was permanently lost.
+    Loss { vm: u64 },
+}
+
+impl Evidence {
+    fn server(&self) -> Option<usize> {
+        match self {
+            Evidence::Crash { server } | Evidence::Kill { server, .. } => Some(*server),
+            Evidence::Link { .. } | Evidence::Loss { .. } => None,
+        }
+    }
+
+    /// Crashes and kills and losses are *hard* faults; link failures
+    /// alone are routed around and only localize, never corroborate.
+    fn is_hard(&self) -> bool {
+        !matches!(self, Evidence::Link { .. })
+    }
+}
+
+fn parse_kv(detail: &str, key: &str) -> Option<usize> {
+    detail.split(';').find_map(|kv| {
+        let (k, v) = kv.split_once('=')?;
+        (k == key).then(|| v.parse().ok()).flatten()
+    })
+}
+
+fn evidence_of(ev: &TraceEvent) -> Option<Evidence> {
+    match ev.kind {
+        "server_crashed" => {
+            Some(Evidence::Crash { server: ev.server.or_else(|| parse_kv(&ev.detail, "server"))? })
+        }
+        "vm_killed" => Some(Evidence::Kill {
+            vm: ev.trace_id,
+            server: ev.server.or_else(|| parse_kv(&ev.detail, "server"))?,
+        }),
+        "fabric_link_down" => Some(Evidence::Link {
+            from: parse_kv(&ev.detail, "from")?,
+            to: parse_kv(&ev.detail, "to")?,
+        }),
+        "restart.lost" => Some(Evidence::Loss { vm: ev.trace_id }),
+        _ => None,
+    }
+}
+
+/// Localize a burst of evidence to its smallest covering scope.
+fn localize(burst: &[(u64, Evidence)], topo: &TraceTopo) -> (String, f64) {
+    if burst.is_empty() {
+        return ("cluster".into(), 0.0);
+    }
+    let total = burst.len() as f64;
+    let servers: Vec<usize> = burst.iter().filter_map(|(_, e)| e.server()).collect();
+    if !servers.is_empty() {
+        let covered = servers.len() as f64 / total;
+        let first = servers[0];
+        if servers.iter().all(|&s| s == first) {
+            return (format!("server:{first}"), covered);
+        }
+        let rack = topo.rack_of(first);
+        if servers.iter().all(|&s| topo.rack_of(s) == rack) {
+            return (format!("rack:{rack}"), covered);
+        }
+        let zone = topo.zone_of(first);
+        if topo.zones > 1 && servers.iter().all(|&s| topo.zone_of(s) == zone) {
+            return (format!("zone:{zone}"), covered);
+        }
+        return ("cluster".into(), 1.0);
+    }
+    // No server-scoped evidence: a lone link failure or a lone loss.
+    for (_, e) in burst.iter().rev() {
+        match e {
+            Evidence::Link { from, to } => return (format!("link:{from}-{to}"), 1.0 / total),
+            Evidence::Loss { vm } => return (format!("vm:{vm}"), 1.0 / total),
+            _ => {}
+        }
+    }
+    ("cluster".into(), 0.0)
+}
+
+const RULES: [&str; 6] = [
+    "server-down",
+    "availability-burn",
+    "restart-slo",
+    "rel-perf",
+    "fabric-rho",
+    "admission-queue",
+];
+/// Rules that may fire without hard-fault corroboration.
+const SELF_FIRING: [bool; 6] = [true, true, true, false, false, false];
+
+#[derive(Debug, Clone, Default)]
+struct RuleState {
+    state: AlertState,
+    pending_ticks: u32,
+    clear_ticks: u32,
+    /// Scope of the last emitted firing record.
+    scope: String,
+    /// Newest evidence tick folded into the last firing record.
+    evidence_tick: u64,
+    firings: u64,
+}
+
+impl Default for AlertState {
+    fn default() -> Self {
+        AlertState::Idle
+    }
+}
+
+/// The streaming watchdog.  Feed it one [`HealthSample`] plus the new
+/// trace events every tick; it returns the alert records emitted at that
+/// tick (also retained in [`Self::records`]).
+#[derive(Debug, Clone)]
+pub struct HealthEngine {
+    cfg: HealthConfig,
+    topo: TraceTopo,
+    rules: Vec<RuleState>,
+    // Rolling windows.
+    lost: VecDeque<u64>,
+    offered: VecDeque<u64>,
+    rel: VecDeque<f64>,
+    rho: VecDeque<f64>,
+    queue_run: usize,
+    prev_slo_misses: u64,
+    prev_losses: u64,
+    /// Hard + soft evidence inside the lookback window.
+    evidence: VecDeque<(u64, Evidence)>,
+    records: Vec<AlertRecord>,
+}
+
+impl HealthEngine {
+    /// Engine over `topo` with `cfg` thresholds.
+    pub fn new(cfg: HealthConfig, topo: TraceTopo) -> Self {
+        Self {
+            cfg,
+            topo,
+            rules: vec![RuleState::default(); RULES.len()],
+            lost: VecDeque::new(),
+            offered: VecDeque::new(),
+            rel: VecDeque::new(),
+            rho: VecDeque::new(),
+            queue_run: 0,
+            prev_slo_misses: 0,
+            prev_losses: 0,
+            evidence: VecDeque::new(),
+            records: Vec::new(),
+        }
+    }
+
+    /// Every alert record emitted so far, in emission order.
+    pub fn records(&self) -> &[AlertRecord] {
+        &self.records
+    }
+
+    /// Total `firing` transitions (including localization re-emissions).
+    pub fn firing_count(&self) -> u64 {
+        self.rules.iter().map(|r| r.firings).sum()
+    }
+
+    /// The active topology context.
+    pub fn topo(&self) -> &TraceTopo {
+        &self.topo
+    }
+
+    fn push_window<T>(win: &mut VecDeque<T>, v: T, cap: usize) {
+        if win.len() >= cap {
+            win.pop_front();
+        }
+        win.push_back(v);
+    }
+
+    /// The localization burst: evidence within `burst_window` ticks of
+    /// the newest evidence item.
+    fn burst(&self) -> Vec<(u64, Evidence)> {
+        let Some(&(newest, _)) = self.evidence.back() else { return Vec::new() };
+        let cut = newest.saturating_sub(self.cfg.burst_window);
+        self.evidence.iter().filter(|(t, _)| *t >= cut).copied().collect()
+    }
+
+    /// One deterministic watchdog step.  `tick` must be monotone;
+    /// `new_trace` is the slice of trace events emitted since the last
+    /// call (see [`super::trace::TraceLog::events_since`]).
+    pub fn observe_tick(
+        &mut self,
+        tick: u64,
+        sample: &HealthSample,
+        new_trace: &[TraceEvent],
+    ) -> Vec<AlertRecord> {
+        // Fold new evidence; expire anything past the lookback window.
+        for ev in new_trace {
+            if let Some(e) = evidence_of(ev) {
+                self.evidence.push_back((ev.tick, e));
+            }
+        }
+        let cut = tick.saturating_sub(self.cfg.lookback);
+        while self.evidence.front().is_some_and(|(t, _)| *t < cut) {
+            self.evidence.pop_front();
+        }
+
+        // Rolling windows.
+        Self::push_window(&mut self.lost, sample.lost_ticks, self.cfg.short_window);
+        Self::push_window(&mut self.offered, sample.offered_ticks, self.cfg.short_window);
+        if sample.mean_rel.is_finite() {
+            Self::push_window(&mut self.rel, sample.mean_rel, self.cfg.long_window);
+        }
+        Self::push_window(&mut self.rho, sample.rho_max, self.cfg.short_window);
+        self.queue_run = if sample.queue_depth > 0 { self.queue_run + 1 } else { 0 };
+
+        // Per-rule (breach?, value, threshold).
+        let lost: u64 = self.lost.iter().sum();
+        let offered: u64 = self.offered.iter().sum();
+        let burn = if offered == 0 { 0.0 } else { lost as f64 / offered as f64 };
+        let crash_seen = self
+            .evidence
+            .iter()
+            .any(|(t, e)| matches!(e, Evidence::Crash { .. }) && tick.saturating_sub(*t) < self.cfg.short_window as u64);
+        let slo_delta = (sample.slo_misses - self.prev_slo_misses)
+            + (sample.permanent_losses - self.prev_losses);
+        self.prev_slo_misses = sample.slo_misses;
+        self.prev_losses = sample.permanent_losses;
+        let short = self.cfg.short_window.min(self.rel.len());
+        let rel_short = if short == 0 {
+            f64::NAN
+        } else {
+            self.rel.iter().rev().take(short).sum::<f64>() / short as f64
+        };
+        let rel_long = if self.rel.is_empty() {
+            f64::NAN
+        } else {
+            self.rel.iter().sum::<f64>() / self.rel.len() as f64
+        };
+        let rel_breach = self.rel.len() >= self.cfg.long_window
+            && rel_short.is_finite()
+            && rel_long.is_finite()
+            && rel_short < self.cfg.rel_drop * rel_long;
+        let rho_mean = if self.rho.is_empty() {
+            0.0
+        } else {
+            self.rho.iter().sum::<f64>() / self.rho.len() as f64
+        };
+        let rho_breach = self.rho.len() >= self.cfg.short_window && rho_mean > self.cfg.rho_crit;
+
+        let evals: [(bool, f64, f64); 6] = [
+            (crash_seen, if crash_seen { 1.0 } else { 0.0 }, 0.5),
+            (burn > self.cfg.avail_burn, burn, self.cfg.avail_burn),
+            (slo_delta > 0, slo_delta as f64, 0.5),
+            (rel_breach, rel_short / rel_long.max(1e-12), self.cfg.rel_drop),
+            (rho_breach, rho_mean, self.cfg.rho_crit),
+            (self.queue_run >= self.cfg.queue_sustain, self.queue_run as f64, self.cfg.queue_sustain as f64),
+        ];
+
+        let hard_evidence = self.evidence.iter().any(|(_, e)| e.is_hard());
+        let burst = self.burst();
+        let newest_evidence = burst.last().map(|(t, _)| *t).unwrap_or(0);
+        let mut out = Vec::new();
+        for (i, &(breach, value, threshold)) in evals.iter().enumerate() {
+            let may_fire = SELF_FIRING[i] || hard_evidence;
+            let rule = &mut self.rules[i];
+            match rule.state {
+                AlertState::Idle if breach => {
+                    rule.state = AlertState::Pending;
+                    rule.pending_ticks = 1;
+                    out.push(AlertRecord {
+                        tick,
+                        rule: RULES[i],
+                        state: "pending",
+                        value,
+                        threshold,
+                        scope: String::new(),
+                        score: 0.0,
+                    });
+                }
+                AlertState::Pending if breach => {
+                    rule.pending_ticks += 1;
+                    if rule.pending_ticks >= self.cfg.hysteresis && may_fire {
+                        rule.state = AlertState::Firing;
+                        rule.clear_ticks = 0;
+                        rule.firings += 1;
+                        let (scope, score) = localize(&burst, &self.topo);
+                        rule.scope = scope.clone();
+                        rule.evidence_tick = newest_evidence;
+                        out.push(AlertRecord {
+                            tick,
+                            rule: RULES[i],
+                            state: "firing",
+                            value,
+                            threshold,
+                            scope,
+                            score,
+                        });
+                    }
+                }
+                AlertState::Pending => {
+                    rule.state = AlertState::Idle;
+                    rule.pending_ticks = 0;
+                }
+                AlertState::Firing if breach => {
+                    rule.clear_ticks = 0;
+                    // Newer evidence while firing: re-localize + re-emit,
+                    // so overlapping faults stay individually detectable.
+                    if newest_evidence > rule.evidence_tick {
+                        rule.firings += 1;
+                        let (scope, score) = localize(&burst, &self.topo);
+                        rule.scope = scope.clone();
+                        rule.evidence_tick = newest_evidence;
+                        out.push(AlertRecord {
+                            tick,
+                            rule: RULES[i],
+                            state: "firing",
+                            value,
+                            threshold,
+                            scope,
+                            score,
+                        });
+                    }
+                }
+                AlertState::Firing => {
+                    rule.clear_ticks += 1;
+                    if rule.clear_ticks >= self.cfg.cooldown {
+                        rule.state = AlertState::Idle;
+                        rule.pending_ticks = 0;
+                        out.push(AlertRecord {
+                            tick,
+                            rule: RULES[i],
+                            state: "resolved",
+                            value,
+                            threshold,
+                            scope: rule.scope.clone(),
+                            score: 0.0,
+                        });
+                    }
+                }
+                AlertState::Idle => {}
+            }
+        }
+        self.records.extend(out.iter().cloned());
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn topo() -> TraceTopo {
+        TraceTopo { servers: 6, torus_x: 3, zones: 2 }
+    }
+
+    fn crash_event(tick: u64, server: usize) -> TraceEvent {
+        TraceEvent {
+            trace_id: 0,
+            span_id: 1,
+            parent_span_id: None,
+            tick,
+            kind: "server_crashed",
+            zone: None,
+            server: Some(server),
+            detail: format!("server={server};vms_killed=2"),
+        }
+    }
+
+    fn quiet() -> HealthSample {
+        HealthSample { offered_ticks: 20, mean_rel: 0.9, ..HealthSample::default() }
+    }
+
+    #[test]
+    fn quiet_stream_never_alerts() {
+        let mut h = HealthEngine::new(HealthConfig::default(), topo());
+        for t in 0..200 {
+            let out = h.observe_tick(t, &quiet(), &[]);
+            assert!(out.is_empty(), "t{t}: {out:?}");
+        }
+        assert_eq!(h.firing_count(), 0);
+    }
+
+    #[test]
+    fn crash_fires_within_hysteresis_and_localizes_to_the_server() {
+        let mut h = HealthEngine::new(HealthConfig::default(), topo());
+        for t in 0..50 {
+            h.observe_tick(t, &quiet(), &[]);
+        }
+        let ev = [crash_event(50, 4)];
+        let mut s = quiet();
+        s.lost_ticks = 2;
+        h.observe_tick(50, &s, &ev);
+        let out = h.observe_tick(51, &s, &[]);
+        let fired: Vec<_> = out.iter().filter(|r| r.state == "firing").collect();
+        assert!(!fired.is_empty(), "hysteresis 2 must fire one tick after the breach");
+        for r in &fired {
+            assert_eq!(r.scope, "server:4");
+            assert!(r.score > 0.0);
+            assert!(scope_covers(&r.scope, 4, &topo()));
+        }
+    }
+
+    #[test]
+    fn rack_burst_localizes_to_the_rack() {
+        let mut h = HealthEngine::new(HealthConfig::default(), topo());
+        let evs = [crash_event(10, 3), crash_event(10, 4), crash_event(10, 5)];
+        let mut s = quiet();
+        s.lost_ticks = 6;
+        h.observe_tick(10, &s, &evs);
+        let out = h.observe_tick(11, &s, &[]);
+        let fired = out.iter().find(|r| r.state == "firing").expect("must fire");
+        assert_eq!(fired.scope, "rack:1", "servers 3,4,5 share torus row 1");
+        assert!(scope_covers(&fired.scope, 4, &topo()));
+        assert!(!scope_covers(&fired.scope, 0, &topo()));
+    }
+
+    #[test]
+    fn new_evidence_while_firing_relocalizes() {
+        let mut h = HealthEngine::new(HealthConfig::default(), topo());
+        let mut s = quiet();
+        s.lost_ticks = 2;
+        h.observe_tick(10, &s, &[crash_event(10, 1)]);
+        h.observe_tick(11, &s, &[]);
+        // Second crash 15 ticks later: outside the burst window, so the
+        // re-emitted record localizes to the *new* server only.
+        for t in 12..25 {
+            h.observe_tick(t, &s, &[]);
+        }
+        let out = h.observe_tick(25, &s, &[crash_event(25, 5)]);
+        let re = out.iter().find(|r| r.state == "firing").expect("re-emission");
+        assert_eq!(re.scope, "server:5");
+    }
+
+    #[test]
+    fn corroborated_rules_stay_pending_without_hard_faults() {
+        let cfg = HealthConfig::default();
+        let mut h = HealthEngine::new(cfg.clone(), topo());
+        // Saturated fabric + sustained queue + collapsed rel-perf, but no
+        // crash: nothing may fire.
+        for t in 0..100 {
+            let s = HealthSample {
+                offered_ticks: 20,
+                mean_rel: if t < 50 { 0.9 } else { 0.2 },
+                rho_max: 1.5,
+                queue_depth: 3,
+                ..HealthSample::default()
+            };
+            let out = h.observe_tick(t, &s, &[]);
+            assert!(out.iter().all(|r| r.state != "firing"), "t{t}: {out:?}");
+        }
+        assert_eq!(h.firing_count(), 0);
+        assert!(
+            h.records().iter().any(|r| r.state == "pending"),
+            "degraded conditions must still surface as pending"
+        );
+    }
+
+    #[test]
+    fn firing_alert_resolves_after_cooldown() {
+        let cfg = HealthConfig::default();
+        let mut h = HealthEngine::new(cfg.clone(), topo());
+        let mut s = quiet();
+        s.lost_ticks = 4;
+        h.observe_tick(5, &s, &[crash_event(5, 2)]);
+        h.observe_tick(6, &s, &[]);
+        assert!(h.records().iter().any(|r| r.state == "firing"));
+        // Breach clears: lost ticks leave the short window, then the
+        // cool-down runs out.
+        let mut resolved = false;
+        for t in 7..80 {
+            let out = h.observe_tick(t, &quiet(), &[]);
+            if out.iter().any(|r| r.state == "resolved") {
+                resolved = true;
+                break;
+            }
+        }
+        assert!(resolved, "firing alert must resolve after the cooldown");
+    }
+
+    #[test]
+    fn alert_stream_is_deterministic() {
+        let run = || {
+            let mut h = HealthEngine::new(HealthConfig::default(), topo());
+            let mut s = quiet();
+            for t in 0..60 {
+                if t == 20 {
+                    s.lost_ticks = 3;
+                    h.observe_tick(t, &s, &[crash_event(20, 4)]);
+                } else {
+                    if t == 30 {
+                        s.lost_ticks = 0;
+                    }
+                    h.observe_tick(t, &s, &[]);
+                }
+            }
+            h.records().to_vec()
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn records_render_as_parseable_jsonl() {
+        let r = AlertRecord {
+            tick: 9,
+            rule: "availability-burn",
+            state: "firing",
+            value: 0.2,
+            threshold: 1e-3,
+            scope: "rack:1".into(),
+            score: 1.0,
+        };
+        let v = super::super::json::parse(&r.to_jsonl()).unwrap();
+        assert_eq!(v.str("type"), Some("alert"));
+        assert_eq!(v.str("rule"), Some("availability-burn"));
+        assert_eq!(v.str("scope"), Some("rack:1"));
+        assert_eq!(v.num("tick"), Some(9.0));
+    }
+
+    #[test]
+    fn scope_covers_handles_every_scope_kind() {
+        let t = topo();
+        assert!(scope_covers("server:4", 4, &t));
+        assert!(!scope_covers("server:4", 3, &t));
+        assert!(scope_covers("rack:0", 2, &t));
+        assert!(scope_covers("zone:1", 5, &t));
+        assert!(scope_covers("link:3-4", 4, &t));
+        assert!(scope_covers("cluster", 0, &t));
+        assert!(!scope_covers("vm:7", 7, &t));
+        assert!(!scope_covers("garbage", 0, &t));
+    }
+}

@@ -1,6 +1,7 @@
 //! Flight-recorder telemetry: tick-phase spans, a counter/gauge/
-//! histogram registry, mapper decision provenance, and JSONL/Prometheus
-//! exporters.
+//! histogram registry, mapper decision provenance, causal lifecycle
+//! tracing ([`trace`]), a streaming SLO health watchdog ([`health`]),
+//! and JSONL/Prometheus exporters.
 //!
 //! Design contract (mirrors every other opt-in mechanism in this repo):
 //!
@@ -25,18 +26,22 @@
 //! `mapper.reshuffle`, `mapper.repack`, `scenario.event`.
 
 pub mod export;
+pub mod health;
 pub mod hist;
 pub mod json;
 pub mod provenance;
 pub mod registry;
+pub mod trace;
 
 use std::cell::{Cell, RefCell};
 use std::collections::BTreeMap;
 use std::time::Instant;
 
+pub use health::{AlertRecord, HealthConfig, HealthEngine, HealthSample};
 pub use hist::LogHistogram;
 pub use provenance::{DecisionRecord, DecisionRing};
 pub use registry::{Metric, Registry};
+pub use trace::{TraceEvent, TraceLog, TraceTopo, CLUSTER_TRACE};
 
 /// Instrumented tick phases.  `ALL` order is the export order.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -109,11 +114,15 @@ pub struct TelemetryConfig {
     pub decision_ring: usize,
     /// Emit a JSONL tick sample every N ticks (1 = every tick).
     pub sample_every: u64,
+    /// Emit causal lifecycle [`TraceEvent`]s (`{"type":"trace"}` lines).
+    pub trace: bool,
+    /// Run the streaming health watchdog (`{"type":"alert"}` lines).
+    pub health: bool,
 }
 
 impl Default for TelemetryConfig {
     fn default() -> Self {
-        Self { decision_ring: 4096, sample_every: 1 }
+        Self { decision_ring: 4096, sample_every: 1, trace: true, health: true }
     }
 }
 
@@ -134,6 +143,8 @@ pub struct Recorder {
     /// Event counts by kind (`&'static str` keys: no hot-path alloc).
     event_counts: BTreeMap<&'static str, u64>,
     jsonl: Vec<String>,
+    trace: TraceLog,
+    alerts: Vec<AlertRecord>,
 }
 
 impl Recorder {
@@ -147,7 +158,83 @@ impl Recorder {
             decisions: DecisionRing::new(ring),
             event_counts: BTreeMap::new(),
             jsonl: Vec::new(),
+            trace: TraceLog::default(),
+            alerts: Vec::new(),
         }
+    }
+
+    /// Is causal tracing enabled for this recorder?
+    pub fn trace_enabled(&self) -> bool {
+        self.cfg.trace
+    }
+
+    /// Is the health watchdog enabled for this recorder?
+    pub fn health_enabled(&self) -> bool {
+        self.cfg.health
+    }
+
+    /// Attach topology context (servers / torus row width / zone count)
+    /// so trace events get zone attribution and alerts localize to
+    /// racks and zones.
+    pub fn set_topology(&mut self, topo: TraceTopo) {
+        self.trace.set_topo(topo);
+    }
+
+    /// The causal trace log.
+    pub fn trace_log(&self) -> &TraceLog {
+        &self.trace
+    }
+
+    /// Alert records emitted by the health watchdog, in emission order.
+    pub fn alerts(&self) -> &[AlertRecord] {
+        &self.alerts
+    }
+
+    /// Append an alert to the store and the JSONL stream.
+    pub fn push_alert(&mut self, rec: AlertRecord) {
+        self.jsonl.push(rec.to_jsonl());
+        self.alerts.push(rec);
+    }
+
+    /// Mirror ring events appended since `cursor` into the JSONL stream
+    /// (the ring may evict under memory pressure; the stream keeps all).
+    fn mirror_trace_from(&mut self, cursor: u64) {
+        for ev in self.trace.events_since(cursor) {
+            self.jsonl.push(ev.to_jsonl());
+        }
+    }
+
+    /// Record one lifecycle edge (no-op unless tracing is on).  Lazy
+    /// root/group spans created alongside are mirrored to JSONL too.
+    /// Returns the new span id.
+    pub fn trace_event(
+        &mut self,
+        tick: u64,
+        trace_id: u64,
+        kind: &'static str,
+        server: Option<usize>,
+        detail: String,
+    ) -> Option<u64> {
+        if !self.cfg.trace {
+            return None;
+        }
+        let cur = self.trace.cursor();
+        let span = self.trace.push(tick, trace_id, kind, server, detail);
+        self.mirror_trace_from(cur);
+        Some(span)
+    }
+
+    /// Observe one simulator event: always counted; traced as a
+    /// lifecycle edge when tracing is on.  Per-vCPU pins and scheduler
+    /// churn are counted but not traced — they would drown the tree.
+    pub fn on_sim_event(&mut self, tick: u64, event: &crate::sim::events::Event) {
+        let kind = event.kind();
+        self.count_event(kind);
+        if !self.cfg.trace || matches!(kind, "pinned" | "sched_migration") {
+            return;
+        }
+        let trace_id = event.vm().map(|v| v.0).unwrap_or(CLUSTER_TRACE);
+        self.trace_event(tick, trace_id, kind, event.server(), event.detail());
     }
 
     /// Fold one timed span of `phase` into its lifetime histogram and
@@ -170,8 +257,19 @@ impl Recorder {
     }
 
     /// Push a mapper decision into the provenance ring and JSONL stream.
+    /// With tracing on, the decision also lands on the VM's span tree
+    /// (kind `"decision"`), linking provenance into the causal history.
     pub fn record_decision(&mut self, rec: DecisionRecord) {
         self.jsonl.push(decision_line(&rec));
+        if self.cfg.trace {
+            self.trace_event(
+                rec.tick,
+                rec.vm,
+                "decision",
+                rec.chosen_node,
+                format!("kind={};candidates={};fallback={}", rec.kind, rec.candidates, rec.fallback),
+            );
+        }
         self.decisions.push(rec);
     }
 
@@ -301,8 +399,8 @@ impl Recorder {
     }
 
     /// Fold another run's recorder into this one (suite aggregation):
-    /// span histograms and registry merge; decisions and JSONL stay
-    /// per-run and are not merged.
+    /// span histograms and registry merge; decisions, JSONL, traces and
+    /// alerts stay per-run and are not merged.
     pub fn merge(&mut self, other: &Recorder) {
         for (a, b) in self.spans.iter_mut().zip(other.spans.iter()) {
             a.hist.merge(&b.hist);
@@ -354,6 +452,16 @@ pub fn with<F: FnOnce(&mut Recorder)>(f: F) {
             f(rec);
         }
     });
+}
+
+/// Like [`with`], but returns `f`'s value (`None` when telemetry is
+/// off).  Same rule: do not nest recorder accessors.
+#[inline]
+pub fn with_ret<T, F: FnOnce(&mut Recorder) -> T>(f: F) -> Option<T> {
+    if !enabled() {
+        return None;
+    }
+    RECORDER.with(|slot| slot.borrow_mut().as_mut().map(f))
 }
 
 /// Install a recorder on the current thread.  The returned guard clears
@@ -457,11 +565,32 @@ mod tests {
         assert_eq!(rec.span_hist(Phase::Evaluate).count(), 1);
         assert_eq!(rec.registry().counter("sim.ticks"), Some(1.0));
         assert_eq!(rec.decisions().len(), 1);
-        // JSONL: one decision line + one tick line, all parseable.
-        assert_eq!(rec.jsonl().len(), 2);
+        // JSONL: decision line, its two trace mirrors (lazy VM root +
+        // the decision edge), and the tick line — all parseable.
+        assert_eq!(rec.jsonl().len(), 4);
+        assert_eq!(rec.trace_log().len(), 2);
         for line in rec.jsonl() {
             json::parse(line).expect("valid JSON line");
         }
+    }
+
+    #[test]
+    fn decisions_skip_the_trace_when_tracing_is_off() {
+        let mut rec =
+            Recorder::new(TelemetryConfig { trace: false, ..TelemetryConfig::default() });
+        rec.record_decision(DecisionRecord {
+            tick: 3,
+            vm: 1,
+            kind: "arrival",
+            candidates: 5,
+            chosen_node: Some(0),
+            score: -0.5,
+            congestion_penalty: 0.1,
+            fallback: "none",
+        });
+        assert_eq!(rec.decisions().len(), 1);
+        assert!(rec.trace_log().is_empty());
+        assert_eq!(rec.jsonl().len(), 1, "only the decision line");
     }
 
     #[test]

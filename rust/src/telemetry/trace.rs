@@ -1,0 +1,406 @@
+//! Causal VM-lifecycle tracing: every lifecycle edge (admission,
+//! placement decision, migration, crash kill, restart) becomes a
+//! [`TraceEvent`] keyed by `trace_id = VmId`, so one VM's whole history —
+//! across zones, rebalancer exchanges, and crashes — reconstructs as a
+//! single span tree.
+//!
+//! Span semantics:
+//!
+//! * Every trace lazily gets a **root span** (`kind = "vm"`) on its
+//!   first event; all other spans parent to it unless a *group* is open.
+//! * **Groups** model multi-event phases: `mem_migration_started` opens
+//!   a `migration` group closed by `memory_migrated` /
+//!   `migration_aborted`; `vm_killed` opens a `recovery` group that
+//!   `restart.ok` / `restart.lost` closes, with `restart.retry` attempts
+//!   as children in between.  A group is itself a span (so the tree
+//!   renders), parented to the root.
+//! * Cluster-scoped edges (server crashes, drains, fabric health) land
+//!   on the reserved trace id [`CLUSTER_TRACE`] — VM ids start at 1, so
+//!   0 never collides.
+//!
+//! Span ids are allocated from a per-recorder monotone counter in
+//! emission order.  Emission only ever happens on the (serial) simulation
+//! thread, so the id sequence — like everything else in the stream — is
+//! bit-identical per seed at any pool size.  The log is bounded: at
+//! capacity the *oldest* events are evicted (`dropped` counts them) and
+//! absolute indices keep streaming readers ([`TraceLog::events_since`])
+//! stable across evictions.
+
+use std::collections::{BTreeMap, VecDeque};
+
+use super::export;
+
+/// Reserved trace id for cluster-scoped events (VM ids start at 1).
+pub const CLUSTER_TRACE: u64 = 0;
+
+/// One lifecycle edge on a trace.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEvent {
+    /// The VM this edge belongs to ([`CLUSTER_TRACE`] for cluster scope).
+    pub trace_id: u64,
+    /// Span id, unique within one run, allocated in emission order.
+    pub span_id: u64,
+    /// Parent span (`None` only for root spans).
+    pub parent_span_id: Option<u64>,
+    /// Simulation tick of the edge.
+    pub tick: u64,
+    /// Edge kind (`"admission.grant"`, `"vm_killed"`, `"decision"`, ...).
+    pub kind: &'static str,
+    /// Zone of `server` under the active zone partition, if any.
+    pub zone: Option<usize>,
+    /// Server the edge concerns, if known.
+    pub server: Option<usize>,
+    /// Structured payload (`key=value;...`), possibly empty.
+    pub detail: String,
+}
+
+impl TraceEvent {
+    /// JSONL line (`{"type":"trace",...}`) for the capture stream.
+    pub fn to_jsonl(&self) -> String {
+        let parent =
+            self.parent_span_id.map(|p| p.to_string()).unwrap_or_else(|| "null".into());
+        let zone = self.zone.map(|z| z.to_string()).unwrap_or_else(|| "null".into());
+        let server = self.server.map(|s| s.to_string()).unwrap_or_else(|| "null".into());
+        format!(
+            "{{\"type\":\"trace\",\"trace\":{},\"span\":{},\"parent\":{parent},\
+             \"tick\":{},\"kind\":\"{}\",\"zone\":{zone},\"server\":{server},\
+             \"detail\":\"{}\"}}",
+            self.trace_id,
+            self.span_id,
+            self.tick,
+            self.kind,
+            export::esc(&self.detail),
+        )
+    }
+}
+
+/// Topology context for zone attribution (set by the scenario runner;
+/// without it trace events carry `zone: None`).
+#[derive(Debug, Clone, Copy)]
+pub struct TraceTopo {
+    /// Server count of the cluster.
+    pub servers: usize,
+    /// Torus x dimension (a rack is one torus row: `rack = server / x`).
+    pub torus_x: usize,
+    /// Zone count of the active coordinator partition (1 when global).
+    pub zones: usize,
+}
+
+impl TraceTopo {
+    /// Zone of a server under the contiguous-band partition (the same
+    /// arithmetic as [`crate::topology::ZoneMap::zone_of`]).
+    pub fn zone_of(&self, server: usize) -> usize {
+        server * self.zones / self.servers.max(1)
+    }
+
+    /// Rack (torus row) of a server.
+    pub fn rack_of(&self, server: usize) -> usize {
+        server / self.torus_x.max(1)
+    }
+}
+
+/// Bounded, order-preserving log of [`TraceEvent`]s with span-tree
+/// bookkeeping (roots and open groups per trace).
+#[derive(Debug, Clone)]
+pub struct TraceLog {
+    events: VecDeque<TraceEvent>,
+    cap: usize,
+    /// Events evicted from the front of the ring.
+    dropped: u64,
+    /// Absolute index of `events[0]` (stable cursors across eviction).
+    start: u64,
+    next_span: u64,
+    topo: Option<TraceTopo>,
+    /// trace_id -> root span id.
+    roots: BTreeMap<u64, u64>,
+    /// (trace_id, group kind) -> open group span id.
+    open_groups: BTreeMap<(u64, &'static str), u64>,
+}
+
+impl TraceLog {
+    /// Empty log holding at most `cap` events (oldest evicted).
+    pub fn new(cap: usize) -> Self {
+        Self {
+            events: VecDeque::new(),
+            cap: cap.max(1),
+            dropped: 0,
+            start: 0,
+            next_span: 1,
+            topo: None,
+            roots: BTreeMap::new(),
+            open_groups: BTreeMap::new(),
+        }
+    }
+
+    /// Attach topology context; subsequent events get zone attribution.
+    pub fn set_topo(&mut self, topo: TraceTopo) {
+        self.topo = Some(topo);
+    }
+
+    /// The active topology context, if set.
+    pub fn topo(&self) -> Option<TraceTopo> {
+        self.topo
+    }
+
+    /// Events currently held (oldest evicted first).
+    pub fn events(&self) -> impl Iterator<Item = &TraceEvent> {
+        self.events.iter()
+    }
+
+    /// Events held right now.
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    /// True when nothing has been recorded (or everything was evicted).
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Events evicted at capacity.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Absolute index one past the newest event — feed it back to
+    /// [`Self::events_since`] to stream increments.
+    pub fn cursor(&self) -> u64 {
+        self.start + self.events.len() as u64
+    }
+
+    /// Events with absolute index `>= cursor` (clamped to what the ring
+    /// still holds), cloned for use outside the recorder borrow.
+    pub fn events_since(&self, cursor: u64) -> Vec<TraceEvent> {
+        let skip = cursor.saturating_sub(self.start) as usize;
+        self.events.iter().skip(skip).cloned().collect()
+    }
+
+    fn append(&mut self, ev: TraceEvent) {
+        if self.events.len() >= self.cap {
+            self.events.pop_front();
+            self.dropped += 1;
+            self.start += 1;
+        }
+        self.events.push_back(ev);
+    }
+
+    fn alloc_span(&mut self) -> u64 {
+        let id = self.next_span;
+        self.next_span += 1;
+        id
+    }
+
+    /// Root span of `trace_id`, created (and emitted, `kind = "vm"`)
+    /// on first use.
+    fn root_of(&mut self, trace_id: u64, tick: u64) -> u64 {
+        if let Some(&r) = self.roots.get(&trace_id) {
+            return r;
+        }
+        let span = self.alloc_span();
+        self.roots.insert(trace_id, span);
+        let kind = if trace_id == CLUSTER_TRACE { "cluster" } else { "vm" };
+        self.append(TraceEvent {
+            trace_id,
+            span_id: span,
+            parent_span_id: None,
+            tick,
+            kind,
+            zone: None,
+            server: None,
+            detail: String::new(),
+        });
+        span
+    }
+
+    fn open_group(&mut self, trace_id: u64, group: &'static str, tick: u64) -> u64 {
+        if let Some(&g) = self.open_groups.get(&(trace_id, group)) {
+            return g;
+        }
+        let root = self.root_of(trace_id, tick);
+        let span = self.alloc_span();
+        self.open_groups.insert((trace_id, group), span);
+        self.append(TraceEvent {
+            trace_id,
+            span_id: span,
+            parent_span_id: Some(root),
+            tick,
+            kind: group,
+            zone: None,
+            server: None,
+            detail: String::new(),
+        });
+        span
+    }
+
+    /// Record one lifecycle edge.  Grouping (migration / recovery spans)
+    /// is derived from `kind`; everything else parents to the root.
+    /// Returns the new span id.
+    pub fn push(
+        &mut self,
+        tick: u64,
+        trace_id: u64,
+        kind: &'static str,
+        server: Option<usize>,
+        detail: String,
+    ) -> u64 {
+        let (parent, close_group) = match kind {
+            "mem_migration_started" => (self.open_group(trace_id, "migration", tick), None),
+            "memory_migrated" | "migration_aborted" => {
+                (self.open_group(trace_id, "migration", tick), Some("migration"))
+            }
+            "vm_killed" => (self.open_group(trace_id, "recovery", tick), None),
+            "restart.retry" => (self.open_group(trace_id, "recovery", tick), None),
+            "restart.ok" | "restart.lost" => {
+                (self.open_group(trace_id, "recovery", tick), Some("recovery"))
+            }
+            _ => (self.root_of(trace_id, tick), None),
+        };
+        let span = self.alloc_span();
+        let zone = match (server, self.topo) {
+            (Some(s), Some(t)) => Some(t.zone_of(s)),
+            _ => None,
+        };
+        self.append(TraceEvent {
+            trace_id,
+            span_id: span,
+            parent_span_id: Some(parent),
+            tick,
+            kind,
+            zone,
+            server,
+            detail,
+        });
+        if let Some(g) = close_group {
+            self.open_groups.remove(&(trace_id, g));
+        }
+        span
+    }
+}
+
+impl Default for TraceLog {
+    /// Default capacity matches the simulator event ring (100k).
+    fn default() -> Self {
+        Self::new(100_000)
+    }
+}
+
+/// Reconstruct the span tree of one trace: `(depth, event)` pairs in
+/// emission order, depth derived from parent links (events whose parent
+/// was evicted render at depth 0).  Shared by the CLI renderer and the
+/// experiment checks.
+pub fn span_tree<'a>(
+    events: impl Iterator<Item = &'a TraceEvent>,
+    trace_id: u64,
+) -> Vec<(usize, &'a TraceEvent)> {
+    let mut depth: BTreeMap<u64, usize> = BTreeMap::new();
+    let mut out = Vec::new();
+    for ev in events.filter(|e| e.trace_id == trace_id) {
+        let d = match ev.parent_span_id {
+            Some(p) => depth.get(&p).map(|d| d + 1).unwrap_or(0),
+            None => 0,
+        };
+        depth.insert(ev.span_id, d);
+        out.push((d, ev));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn topo() -> TraceTopo {
+        TraceTopo { servers: 6, torus_x: 3, zones: 2 }
+    }
+
+    #[test]
+    fn root_span_is_created_lazily_and_once() {
+        let mut log = TraceLog::new(64);
+        log.push(3, 7, "booted", Some(1), String::new());
+        log.push(5, 7, "remapped", Some(2), String::new());
+        let roots: Vec<_> = log.events().filter(|e| e.kind == "vm").collect();
+        assert_eq!(roots.len(), 1);
+        assert_eq!(roots[0].parent_span_id, None);
+        let root = roots[0].span_id;
+        for e in log.events().filter(|e| e.kind != "vm") {
+            assert_eq!(e.parent_span_id, Some(root));
+        }
+    }
+
+    #[test]
+    fn migration_and_recovery_groups_nest_and_close() {
+        let mut log = TraceLog::new(64);
+        log.push(1, 4, "mem_migration_started", Some(0), "gb=8".into());
+        log.push(3, 4, "memory_migrated", Some(0), "gb_moved=8".into());
+        // Closed: a second migration opens a fresh group span.
+        log.push(9, 4, "mem_migration_started", Some(0), "gb=2".into());
+        log.push(20, 4, "vm_killed", Some(1), String::new());
+        log.push(21, 4, "restart.retry", None, "attempt=1".into());
+        log.push(24, 4, "restart.ok", Some(2), "new=9".into());
+        let groups: Vec<_> =
+            log.events().filter(|e| e.kind == "migration" || e.kind == "recovery").collect();
+        assert_eq!(groups.len(), 3, "two migration groups + one recovery group");
+        let recovery = log.events().find(|e| e.kind == "recovery").unwrap().span_id;
+        for kind in ["vm_killed", "restart.retry", "restart.ok"] {
+            let e = log.events().find(|e| e.kind == kind).unwrap();
+            assert_eq!(e.parent_span_id, Some(recovery), "{kind} must nest in recovery");
+        }
+        let tree = span_tree(log.events(), 4);
+        assert!(tree.iter().any(|(d, e)| *d == 2 && e.kind == "restart.ok"));
+        assert!(tree.iter().all(|(d, _)| *d <= 2));
+    }
+
+    #[test]
+    fn zone_attribution_follows_the_topology() {
+        let mut log = TraceLog::new(16);
+        log.set_topo(topo());
+        log.push(1, 2, "booted", Some(4), String::new());
+        let e = log.events().find(|e| e.kind == "booted").unwrap();
+        assert_eq!(e.zone, Some(1), "server 4 of 6 in Z=2 is the upper band");
+        assert_eq!(topo().rack_of(4), 1);
+    }
+
+    #[test]
+    fn eviction_keeps_cursors_stable() {
+        let mut log = TraceLog::new(4);
+        for t in 0..10u64 {
+            log.push(t, 1, "booted", None, String::new());
+        }
+        assert_eq!(log.len(), 4);
+        assert!(log.dropped() > 0);
+        let cur = log.cursor();
+        assert!(log.events_since(cur).is_empty());
+        log.push(11, 1, "destroyed", None, String::new());
+        let new = log.events_since(cur);
+        assert_eq!(new.len(), 1);
+        assert_eq!(new[0].kind, "destroyed");
+        // A cursor older than the ring start clamps to what's held.
+        assert_eq!(log.events_since(0).len(), log.len());
+    }
+
+    #[test]
+    fn jsonl_lines_parse_and_round_trip_fields() {
+        let mut log = TraceLog::new(16);
+        log.set_topo(topo());
+        log.push(7, 3, "admission.grant", Some(5), "type=Small;app=fft".into());
+        for e in log.events() {
+            let v = super::super::json::parse(&e.to_jsonl()).expect("trace line parses");
+            assert_eq!(v.str("type"), Some("trace"));
+            assert_eq!(v.num("trace"), Some(e.trace_id as f64));
+            assert_eq!(v.num("span"), Some(e.span_id as f64));
+            assert_eq!(v.num("tick"), Some(e.tick as f64));
+        }
+    }
+
+    #[test]
+    fn span_ids_are_deterministic_per_emission_order() {
+        let run = || {
+            let mut log = TraceLog::new(64);
+            log.push(1, 2, "booted", Some(0), String::new());
+            log.push(2, 3, "booted", Some(1), String::new());
+            log.push(4, 2, "vm_killed", Some(0), String::new());
+            log.events().map(|e| (e.trace_id, e.span_id, e.kind)).collect::<Vec<_>>()
+        };
+        assert_eq!(run(), run());
+    }
+}

@@ -1,7 +1,9 @@
 //! Flight-recorder integration tests: the opt-in parity contract
-//! (telemetry on vs off leaves simulation outcomes bit-identical), span
-//! and decision capture on real scenario runs, JSONL well-formedness,
-//! the decision→event causal link, and histogram properties.
+//! (telemetry on vs off leaves simulation outcomes bit-identical, with
+//! tracing and the health watchdog included), span and decision capture
+//! on real scenario runs, JSONL well-formedness, the decision→event and
+//! restart→kill causal links, rebalancer provenance, pool-size-invariant
+//! alert streams, and histogram properties.
 
 use dvrm::coordinator::{MapperConfig, Metric, SmMapper};
 use dvrm::experiments::Algorithm;
@@ -64,12 +66,14 @@ fn recorder_captures_phase_spans_and_registry() {
 fn jsonl_capture_is_parseable_and_complete() {
     let spec = suite::named("churn", true).unwrap();
     let rec = run_churn(Some(TelemetryConfig::default())).telemetry.unwrap();
-    let (mut ticks, mut decisions, mut spans) = (0u64, 0u64, 0u64);
+    let (mut ticks, mut decisions, mut spans, mut traces) = (0u64, 0u64, 0u64, 0u64);
     for line in rec.jsonl() {
         let v = json::parse(line).expect("every JSONL line parses");
         match v.str("type") {
             Some("tick") => ticks += 1,
             Some("decision") => decisions += 1,
+            Some("trace") => traces += 1,
+            Some("alert") => {}
             Some("spans") => {
                 spans += 1;
                 let phases = v.get("phases").unwrap().as_arr().unwrap();
@@ -85,6 +89,8 @@ fn jsonl_capture_is_parseable_and_complete() {
     assert!(decisions > 0, "SM-IPC churn must record mapper decisions");
     assert_eq!(spans, 1, "exactly one end-of-run spans summary");
     assert_eq!(decisions as usize, rec.decisions().len(), "nothing evicted at this scale");
+    assert!(traces > 0, "lifecycle tracing must mirror into the JSONL stream");
+    assert_eq!(traces as usize, rec.trace_log().len(), "nothing evicted at this scale");
 }
 
 #[test]
@@ -130,6 +136,153 @@ fn decision_ring_eviction_is_reported() {
     let d = v.get("decisions").unwrap();
     assert_eq!(d.num("recorded"), Some(4.0));
     assert!(d.num("dropped").unwrap() > 0.0, "eviction count must be exported");
+}
+
+#[test]
+fn restart_decisions_link_causally_to_kill_traces() {
+    let spec = suite::named("crash-rack", true).unwrap();
+    let cfg = ScenarioConfig {
+        telemetry: Some(TelemetryConfig::default()),
+        ..ScenarioConfig::new(42)
+    };
+    let r = run_scenario(&spec, Algorithm::SmIpc, &cfg).unwrap();
+    assert!(r.metrics.vms_killed > 0, "the rack crash must kill VMs");
+    let rec = r.telemetry.unwrap();
+    let restarts: Vec<_> = rec.decisions().iter().filter(|d| d.kind == "restart").collect();
+    assert!(!restarts.is_empty(), "restart choices must land in the provenance ring");
+    for d in &restarts {
+        assert!(d.candidates > 0, "{d:?}: popped with zero due entries");
+        // Causal link: the decision's (tick, vm) pair points back to a
+        // vm_killed trace event at or before the pop.
+        let killed = rec
+            .trace_log()
+            .events()
+            .any(|e| e.trace_id == d.vm && e.kind == "vm_killed" && e.tick <= d.tick);
+        assert!(killed, "restart decision {d:?} has no vm_killed trace at or before its tick");
+    }
+    // Every restart outcome closes on a trace that a kill opened.
+    let mut outcomes = 0usize;
+    for e in rec.trace_log().events().filter(|e| e.kind.starts_with("restart.")) {
+        outcomes += 1;
+        let killed = rec
+            .trace_log()
+            .events()
+            .any(|k| k.kind == "vm_killed" && k.trace_id == e.trace_id && k.tick <= e.tick);
+        assert!(killed, "{}: restart outcome on a trace no kill opened", e.trace_id);
+    }
+    assert!(outcomes > 0, "restart outcomes must be traced");
+}
+
+#[test]
+fn rebalance_decisions_carry_exchange_provenance() {
+    use dvrm::coordinator::{ShardConfig, ShardedMapper};
+    use dvrm::experiments::figures::scale_spec;
+    use dvrm::vm::VmType;
+    use dvrm::workload::App;
+
+    let guard = telemetry::install(Recorder::new(TelemetryConfig::default()));
+    let topo = Topology::build(scale_spec(12, (4, 3)));
+    let mut cfg = SimConfig::pinned(3);
+    cfg.mem.chunk_mb = 512;
+    let mut sim = Simulator::new(topo, cfg);
+    // Aggressive rebalancing: every pass, no hysteresis band.
+    let shard = ShardConfig { rebalance_every: 1, hysteresis: 0.0, ..ShardConfig::new(2) };
+    let mut mapper =
+        ShardedMapper::new(MapperConfig::new(Metric::Ipc), Scorer::Native, shard, &sim.topo);
+    let mut placed = Vec::new();
+    for k in 0..100 {
+        let app = App::ALL[k % App::ALL.len()];
+        let vm_type = if k % 8 == 0 { VmType::Medium } else { VmType::Small };
+        let id = sim.create(vm_type, app);
+        if mapper.place_arrival(&mut sim, id).is_ok() {
+            sim.start(id).unwrap();
+            placed.push(id);
+        } else {
+            sim.destroy(id).unwrap();
+        }
+    }
+    // Manufacture a utilization cliff: empty out zone 1 entirely.
+    for &id in &placed {
+        if mapper.owner_zone(id) == Some(1) && sim.get(id).is_some() {
+            sim.destroy(id).unwrap();
+        }
+    }
+    for _ in 0..4 {
+        sim.step();
+        mapper.interval(&mut sim).unwrap();
+    }
+    let rec = guard.finish().unwrap();
+    assert!(mapper.shard_stats.exchanges >= 1, "no boundary exchange to record");
+    let rebalances: Vec<_> =
+        rec.decisions().iter().filter(|d| d.kind == "rebalance").collect();
+    assert_eq!(
+        rebalances.len() as u64,
+        mapper.shard_stats.exchanges,
+        "one provenance record per cross-zone exchange"
+    );
+    for d in &rebalances {
+        assert!(d.candidates > 0, "{d:?}: exchange without boundary candidates");
+        assert!(d.score > 0.0, "{d:?}: exchange without a utilization spread");
+        let receiver = d.chosen_node.expect("rebalance records carry the receiver zone");
+        assert!(receiver < 2, "{d:?}: receiver out of range");
+        // Causal link: the moved VM is owned by the receiver zone now.
+        assert_eq!(
+            mapper.owner_zone(VmId(d.vm)),
+            Some(receiver),
+            "{d:?}: moved VM not tracked by its recorded receiver"
+        );
+    }
+}
+
+#[test]
+fn chaos_tracing_and_health_preserve_bit_identical_outcomes() {
+    // Satellite parity gate: the chaos suite with tracing + watchdog on
+    // must leave metrics and event logs bit-identical to telemetry-off,
+    // at any pool size.
+    for threads in [1usize, 4] {
+        for spec in suite::chaos_suite(true) {
+            let mk = |telemetry: Option<TelemetryConfig>| ScenarioConfig {
+                telemetry,
+                tick_threads: Some(threads),
+                ..ScenarioConfig::new(42)
+            };
+            let off = run_scenario(&spec, Algorithm::SmIpc, &mk(None)).unwrap();
+            let on =
+                run_scenario(&spec, Algorithm::SmIpc, &mk(Some(TelemetryConfig::default())))
+                    .unwrap();
+            assert_eq!(
+                off.metrics, on.metrics,
+                "{} (pool {threads}): watchdog changed simulation outcomes",
+                spec.name
+            );
+            assert_eq!(
+                off.event_log, on.event_log,
+                "{} (pool {threads}): watchdog changed the event log",
+                spec.name
+            );
+        }
+    }
+}
+
+#[test]
+fn alert_stream_is_seed_deterministic_across_pool_sizes() {
+    let run = |threads: usize| {
+        suite::chaos_suite(true)
+            .iter()
+            .map(|spec| {
+                let cfg = ScenarioConfig {
+                    telemetry: Some(TelemetryConfig::default()),
+                    tick_threads: Some(threads),
+                    ..ScenarioConfig::new(42)
+                };
+                let r = run_scenario(spec, Algorithm::SmIpc, &cfg).unwrap();
+                r.telemetry.unwrap().alerts().to_vec()
+            })
+            .collect::<Vec<_>>()
+    };
+    let serial = run(1);
+    assert!(serial.iter().any(|a| !a.is_empty()), "chaos must raise alerts");
+    assert_eq!(serial, run(4), "alert stream must not depend on pool size");
 }
 
 #[test]
